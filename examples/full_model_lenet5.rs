@@ -1,0 +1,74 @@
+//! End-to-end driver over the full three-layer stack (the repo's
+//! integration proof): optimize the LeNet-5 Level-3 task with the MAIC-RL
+//! coordinator (Layer 3), then load the REAL AOT artifacts produced from
+//! the JAX/Pallas layers (Layers 2/1) and serve batched inference through
+//! the PJRT runtime, reporting latency and throughput.
+//!
+//!     make artifacts && cargo run --release --example full_model_lenet5
+//!
+//! Recorded in EXPERIMENTS.md §End-to-end.
+
+use kernelblaster::baselines;
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::icrl::{self, IcrlConfig};
+use kernelblaster::kb::KnowledgeBase;
+use kernelblaster::runtime::{anchors, default_artifact_dir, Runtime};
+use kernelblaster::tasks::Suite;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- Layer 3: the paper's optimization loop ----------
+    let suite = Suite::full();
+    let task = suite.by_id("L3/01_lenet5").expect("lenet5 registered");
+    let arch = GpuArch::h100();
+    let base = baselines::baseline_times(task, &arch);
+    let mut kb = KnowledgeBase::empty();
+    let run = icrl::optimize_task(task, &arch, &mut kb, &IcrlConfig::default(), 0);
+    println!("== MAIC-RL optimization of {} ({}) ==", task.id, arch.name);
+    println!(
+        "naive {:.1}us -> best {:.1}us | {:.2}x vs naive | {:.2}x vs PyTorch (paper: 2.68x)",
+        run.naive_time_s * 1e6,
+        run.best_time_s * 1e6,
+        run.speedup_vs_naive(),
+        base.best_s() / run.best_time_s
+    );
+    println!(
+        "kernel launches: {} -> {}",
+        task.graph.nodes.len(),
+        run.best.schedule.n_launches()
+    );
+    println!("applied: {}", run.best.applied.join(" -> "));
+
+    // ---------------- Layers 2/1: real artifacts on PJRT --------------
+    let rt = Runtime::new(default_artifact_dir())?;
+    println!("\n== PJRT runtime ({}) ==", rt.platform());
+
+    // Correctness + timing gates for every anchor pair.
+    let cal = anchors::calibrate(&rt, 2, 5)?;
+    print!("{}", anchors::render(&cal));
+
+    // Serve batched LeNet-5 inference through the compiled artifact.
+    let model = rt.load("lenet5_naive")?;
+    let inputs = model.random_inputs(7, 0.5);
+    let batch = model.input_shapes[0][0];
+    let requests = 64;
+    let mut latencies = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let start = Instant::now();
+        let out = model.run_f32(&inputs)?;
+        latencies.push(start.elapsed().as_secs_f64());
+        assert_eq!(out[0].len(), batch * 10);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99) / 100];
+    println!(
+        "\nserved {requests} batched requests (batch={batch}): p50 {:.2}ms p99 {:.2}ms | {:.0} images/s",
+        p50 * 1e3,
+        p99 * 1e3,
+        (requests * batch) as f64 / wall
+    );
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: optimize one KernelBench-style task with KernelBlaster's
+//! MAIC-RL loop and inspect what the agent learned.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This walks the whole public API surface: task suite → driver → harness
+//! → knowledge base → persistence.
+
+use kernelblaster::baselines;
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::icrl::{self, IcrlConfig};
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::tasks::Suite;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a task: the paper's L2-Q18 (linear → sum → double
+    //    logsumexp), the 20.17x headline example.
+    let suite = Suite::full();
+    let task = suite
+        .by_id("L2/18_linear_sum_logsumexp2")
+        .expect("task registered");
+    let arch = GpuArch::h100();
+    println!("task: {}  |  GPU model: {}", task.id, arch.name);
+
+    // 2. Reference points: PyTorch eager / torch.compile.
+    let base = baselines::baseline_times(task, &arch);
+    println!(
+        "PyTorch eager {:.1}us | torch.compile {:.1}us",
+        base.eager_s * 1e6,
+        base.compiled_s * 1e6
+    );
+
+    // 3. Run the MAIC-RL driver (Table-2 hyperparameters).
+    let mut kb = KnowledgeBase::empty();
+    let cfg = IcrlConfig::default();
+    let run = icrl::optimize_task(task, &arch, &mut kb, &cfg, 0);
+
+    println!(
+        "naive CUDA {:.1}us -> best {:.1}us  ({:.2}x vs naive, {:.2}x vs PyTorch)",
+        run.naive_time_s * 1e6,
+        run.best_time_s * 1e6,
+        run.speedup_vs_naive(),
+        base.best_s() / run.best_time_s
+    );
+    println!("applied: {}", run.best.applied.join(" -> "));
+    println!(
+        "tokens: {} | states visited: {}",
+        run.tokens.total(),
+        run.states_visited
+    );
+
+    // 4. The Knowledge Base is the reusable cross-task artifact.
+    let path = std::env::temp_dir().join("kernelblaster_quickstart_kb.json");
+    persist::save(&kb, &path)?;
+    println!(
+        "knowledge base: {} states, {} -> {}",
+        kb.states.len(),
+        kernelblaster::util::human_bytes(kb.size_bytes()),
+        path.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT.
+
+Never imported at runtime — the Rust binary consumes only the HLO-text
+artifacts this package emits via `python -m compile.aot`.
+"""

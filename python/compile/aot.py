@@ -1,0 +1,127 @@
+"""AOT lowering: JAX anchor models → HLO text → artifacts/.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md and
+DESIGN.md).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `<name>.hlo.txt` per anchor variant plus `manifest.json`
+describing input shapes (consumed by rust/src/runtime).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps a 1-tuple uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def anchors():
+    """(name, fn, example_args) for every artifact."""
+    q18 = model.Q18_SHAPES
+    q63 = model.Q63_SHAPES
+    nb = model.LENET_BATCH
+    lenet_params = {k: _spec(*v) for k, v in model.lenet_param_shapes().items()}
+
+    def lenet_naive(x, *flat):
+        return model.lenet5_naive(x, _unflatten(flat))
+
+    def lenet_opt(x, *flat):
+        return model.lenet5_optimized(x, _unflatten(flat))
+
+    def _unflatten(flat):
+        keys = sorted(model.lenet_param_shapes().keys())
+        return dict(zip(keys, flat))
+
+    lenet_args = [_spec(nb, 1, 32, 32)] + [
+        lenet_params[k] for k in sorted(lenet_params.keys())
+    ]
+    return [
+        (
+            "q18_naive",
+            model.q18_naive,
+            [
+                _spec(q18["batch"], q18["in_features"]),
+                _spec(q18["in_features"], q18["out_features"]),
+                _spec(q18["out_features"]),
+            ],
+        ),
+        (
+            "q18_optimized",
+            model.q18_optimized,
+            [
+                _spec(q18["batch"], q18["in_features"]),
+                _spec(q18["in_features"], q18["out_features"]),
+                _spec(q18["out_features"]),
+            ],
+        ),
+        (
+            "q18_algebraic",
+            model.q18_algebraic,
+            [
+                _spec(q18["batch"], q18["in_features"]),
+                _spec(q18["in_features"], q18["out_features"]),
+                _spec(q18["out_features"]),
+            ],
+        ),
+        (
+            "q63_naive",
+            model.q63_naive,
+            [_spec(q63["m"], q63["k"]), _spec(q63["k"], q63["n"]), _spec(q63["n"])],
+        ),
+        (
+            "q63_optimized",
+            model.q63_optimized,
+            [_spec(q63["m"], q63["k"]), _spec(q63["k"], q63["n"]), _spec(q63["n"])],
+        ),
+        ("lenet5_naive", lenet_naive, lenet_args),
+        ("lenet5_optimized", lenet_opt, lenet_args),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, example_args in anchors():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "inputs": [list(a.shape) for a in example_args],
+            "hlo_chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(example_args)} inputs)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

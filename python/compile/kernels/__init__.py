@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (interpret mode) and their jnp reference
+oracles. See each module's docstring for the CUDA -> TPU adaptation notes."""
+
+from . import ref  # noqa: F401
+from .fused_linear_reduce import fused_linear_reduce  # noqa: F401
+from .logsumexp import logsumexp_rows  # noqa: F401
+from .matmul_epilogue import linear, matmul_epilogue  # noqa: F401
+from .pool import maxpool2d  # noqa: F401

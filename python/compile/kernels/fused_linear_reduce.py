@@ -1,0 +1,81 @@
+"""Fused linear + row-sum reduction (Appendix 8.1 analog / L2-Q18 core).
+
+The paper's CUDA kernel stages input tiles through `__shared__` memory,
+accumulates per-thread partial dot products with 8-way unrolled FMA
+chains, and combines them with warp-shuffle block reductions to emit one
+scalar per batch element — after the double logsumexp has been removed
+algebraically.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation):
+- the `__shared__` K-tile becomes a BlockSpec-staged VMEM block over the
+  innermost grid axis;
+- the unrolled FMA accumulators become the MXU contraction of the
+  (bm, bk) x (bk, N) block pair;
+- the warp-shuffle block reduction becomes a VPU row reduction
+  (`jnp.sum(..., axis=1)`) over the block product;
+- the bias pre-accumulation (`local_bias_sum`) is folded into the k==0
+  step, exactly like the CUDA kernel folds it before the tile loop.
+
+VMEM per step at default (bm=128, bk=512, N<=4096): 128*512 + 512*4096 f32
+≈ 8.25 MiB — fits VMEM; shrink bk for larger N.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, nk):
+    k = pl.program_id(1)
+    partial = jnp.sum(
+        jnp.dot(
+            x_ref[...].astype(jnp.float32),
+            w_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ),
+        axis=1,
+        keepdims=True,
+    )
+
+    @pl.when(k == 0)
+    def _first():
+        o_ref[...] = (partial + jnp.sum(b_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+    @pl.when(k > 0)
+    def _rest():
+        o_ref[...] += partial.astype(o_ref.dtype)
+
+
+def _fit(tile, dim):
+    """Largest divisor of `dim` <= `tile`."""
+    t = min(tile, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def fused_linear_reduce(x, w, b, bm=128, bk=512):
+    """out[i, 0] = sum_o((x @ w + b)[i, o]) without materializing (M, N).
+
+    Shapes: x (M, K), w (K, N), b (N,).
+    """
+    m, k_dim = x.shape
+    _, n = w.shape
+    bm = _fit(bm, m)
+    bk = _fit(bk, k_dim)
+    nk = k_dim // bk
+    kernel = functools.partial(_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, n), lambda i, k: (k, 0)),
+            pl.BlockSpec((n,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)

@@ -1,0 +1,33 @@
+"""Row-wise keepdim logsumexp Pallas kernel.
+
+One batch-row block per grid step; the max/exp/sum/log chain runs on the
+VPU over the VMEM-resident block (the CUDA equivalent is a block-level
+reduction with warp shuffles).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=1, keepdims=True)
+    o_ref[...] = (m + jnp.log(jnp.sum(jnp.exp(x - m), axis=1, keepdims=True))).astype(
+        o_ref.dtype
+    )
+
+
+def logsumexp_rows(x, bm=128):
+    """Keepdim logsumexp along axis 1 of a 2-D array."""
+    m, n = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0, f"block {bm} must divide rows {m}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)

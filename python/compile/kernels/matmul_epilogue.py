@@ -1,0 +1,90 @@
+"""Tiled matmul with fused bias+ReLU+divide epilogue (Appendix 8.2 analog).
+
+TPU adaptation of the paper's WMMA/split-K CUDA kernel (DESIGN.md
+§Hardware-Adaptation):
+
+- the CUDA kernel's 16x16 WMMA fragments + 32x32 block tiles become
+  MXU-shaped output tiles (bm x bn, default 128x128) staged through VMEM
+  by BlockSpec;
+- the CUDA split-K grid.z with an atomicAdd float workspace becomes the
+  innermost grid axis iterating K-tiles into an f32 VMEM accumulator —
+  grid iteration order guarantees exclusive tile ownership, so no atomics
+  and no workspace round-trip;
+- the separate epilogue kernel (bias + ReLU + divide + fp16 cast) is
+  fused into the final K step, removing one full HBM round-trip of the
+  (M, N) intermediate.
+
+VMEM footprint per step: bm*bk + bk*bn + bm*bn f32 (~0.19 MiB at the
+default 128/128/256 tiling) — far under the ~16 MiB VMEM budget, leaving
+room for double buffering by the pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk, divisor, relu):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = (y / divisor).astype(o_ref.dtype)
+
+
+def matmul_epilogue(x, w, b, divisor=1.0, relu=True, bm=128, bn=128, bk=256):
+    """out = epilogue(x @ w + b) with the epilogue fused into the GEMM.
+
+    Shapes: x (M, K), w (K, N), b (N,). M/N/K must divide by the tile
+    sizes (clamped to the problem size below).
+    """
+    m, k_dim = x.shape
+    _, n = w.shape
+    bm = _fit(bm, m)
+    bn = _fit(bn, n)
+    bk = _fit(bk, k_dim)
+    nk = k_dim // bk
+    kernel = functools.partial(_kernel, nk=nk, divisor=divisor, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+def _fit(tile, dim):
+    """Largest divisor of `dim` that is <= `tile` (tiles must divide the
+    problem; BlockSpec has no ragged-edge masking in this kernel)."""
+    t = min(tile, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def linear(x, w, b, relu=True, **tiles):
+    """FC layer on the same fused kernel (divisor 1)."""
+    return matmul_epilogue(x, w, b, divisor=1.0, relu=relu, **tiles)

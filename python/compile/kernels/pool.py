@@ -1,0 +1,34 @@
+"""2x2/stride-2 max-pool Pallas kernel (Appendix 8.3 building block).
+
+The CUDA version runs one block per output element with a cooperative
+window reduction. On TPU the window fits a vector register reshape: each
+(batch, channel) image block is pooled with a reshape + max over the
+window axes — a pure VPU operation, no MXU involvement.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, k):
+    x = x_ref[...]
+    n, c, h, w = x.shape
+    x = x.reshape(n, c, h // k, k, w // k, k)
+    o_ref[...] = jnp.max(jnp.max(x, axis=5), axis=3)
+
+
+def maxpool2d(x, k=2):
+    """NCHW max pool with kernel=stride=k (no padding)."""
+    n, c, h, w = x.shape
+    assert h % k == 0 and w % k == 0, f"pool {k} must divide spatial dims {(h, w)}"
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h // k, w // k), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, h // k, w // k), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)

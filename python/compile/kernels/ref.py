@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth (paper §4.3's "reference Torch
+implementation"): each kernel in this package must match its `ref_*`
+function under `assert_allclose` across the hypothesis-swept shape/dtype
+grid in python/tests/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ref_fused_linear_reduce",
+    "ref_matmul_epilogue",
+    "ref_conv2d_bias_relu",
+    "ref_maxpool2d",
+    "ref_linear",
+    "ref_logsumexp",
+    "ref_q18_naive",
+    "ref_lenet5",
+]
+
+
+def ref_fused_linear_reduce(x, w, b):
+    """Appendix 8.1 semantics: per-batch scalar.
+
+    out[i] = sum_o ( (x @ w + b)[i, o] )  with shape (batch, 1).
+    """
+    y = x @ w + b[None, :]
+    return jnp.sum(y, axis=1, keepdims=True)
+
+
+def ref_matmul_epilogue(x, w, b, divisor):
+    """Appendix 8.2 semantics: GEMM + bias + ReLU + scalar divide."""
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) / divisor
+
+
+def ref_conv2d_bias_relu(x, w, b, stride=1, pad=0):
+    """NCHW conv + channel bias + ReLU (Appendix 8.3 building block)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    y = y + b[None, :, None, None]
+    return jnp.maximum(y, 0.0)
+
+
+def ref_maxpool2d(x, k=2, stride=2):
+    """NCHW max pooling, no padding."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def ref_linear(x, w, b, relu=True):
+    """Fully-connected layer with optional ReLU."""
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def ref_logsumexp(x, axis=1):
+    """Keepdim logsumexp (the Q18 op)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    return m + jnp.log(jnp.sum(jnp.exp(x - m), axis=axis, keepdims=True))
+
+
+def ref_q18_naive(x, w, b):
+    """The UNsimplified KernelBench-L2-Q18 chain: linear -> row-sum ->
+    logsumexp -> logsumexp (both over a size-1 axis — algebraically
+    removable, which is the paper's 20.17x headline)."""
+    y = x @ w + b[None, :]
+    s = jnp.sum(y, axis=1, keepdims=True)
+    l1 = ref_logsumexp(s, axis=1)
+    l2 = ref_logsumexp(l1, axis=1)
+    return l2
+
+
+def ref_lenet5(x, params):
+    """LeNet-5 forward (Appendix 8.3 / KernelBench L3).
+
+    `params` is a dict with conv1_w/b, conv2_w/b, fc1_w/b, fc2_w/b,
+    fc3_w/b. Input is (N, 1, 32, 32).
+    """
+    y = ref_conv2d_bias_relu(x, params["conv1_w"], params["conv1_b"])
+    y = ref_maxpool2d(y)
+    y = ref_conv2d_bias_relu(y, params["conv2_w"], params["conv2_b"])
+    y = ref_maxpool2d(y)
+    y = y.reshape(y.shape[0], -1)
+    y = ref_linear(y, params["fc1_w"], params["fc1_b"], relu=True)
+    y = ref_linear(y, params["fc2_w"], params["fc2_b"], relu=True)
+    y = ref_linear(y, params["fc3_w"], params["fc3_b"], relu=False)
+    return y

@@ -1,0 +1,133 @@
+"""Layer 2: JAX compute graphs for the anchor tasks.
+
+Each anchor exists in two variants with identical semantics:
+- `*_naive`: the PyTorch-style op-by-op graph (materializes every
+  intermediate — the paper's unoptimized starting point);
+- `*_optimized`: the paper's optimized kernel as a Pallas call (fused,
+  tiled, algebraically simplified).
+
+Both are AOT-lowered by aot.py to HLO text; the Rust runtime executes
+both and measures the real wallclock ratio — the ground-truth anchor for
+the simulator's fusion/algebraic credit (EXPERIMENTS.md §Anchors).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    fused_linear_reduce,
+    linear,
+    matmul_epilogue,
+    maxpool2d,
+)
+from .kernels import ref
+
+# ----------------------------------------------------------------- Q18
+
+def q18_naive(x, w, b):
+    """L2-Q18 as PyTorch writes it: linear -> row-sum -> logsumexp x2,
+    each op a separate HLO region (no manual fusion)."""
+    return ref.ref_q18_naive(x, w, b)
+
+
+def q18_optimized(x, w, b):
+    """The paper's Appendix-8.1 kernel: double logsumexp removed
+    algebraically (size-1 axis), linear+sum fused into one Pallas kernel
+    that never materializes the (M, N) intermediate."""
+    return fused_linear_reduce(x, w, b)
+
+
+def q18_algebraic(x, w, b):
+    """The FULL algebraic collapse of Q18: since the whole (M, N) linear
+    output is row-summed, sum_o (xW + b)[i,o] = x @ rowsum(W) + sum(b) —
+    a matvec. This is the exact-FLOP-reducing form of the paper's
+    "algebraic and structural simplifications"; it is the *perf* anchor
+    the Rust runtime times (the Pallas kernels are correctness anchors:
+    interpret mode on CPU measures interpretation overhead, not TPU
+    performance — DESIGN.md §8)."""
+    wsum = jnp.sum(w, axis=1, keepdims=True)  # (K, 1)
+    return x @ wsum + jnp.sum(b)
+
+
+Q18_SHAPES = dict(batch=128, in_features=2048, out_features=1024)
+
+# ----------------------------------------------------------------- Q63
+
+def q63_naive(x, w, b, divisor=2.0):
+    """L2-Q63 unfused: GEMM, then bias, then ReLU, then divide."""
+    y = x @ w
+    y = y + b[None, :]
+    y = jnp.maximum(y, 0.0)
+    return y / divisor
+
+
+def q63_optimized(x, w, b, divisor=2.0):
+    """Appendix-8.2 kernel: tiled GEMM with the epilogue fused in."""
+    return matmul_epilogue(x, w, b, divisor=divisor, relu=True)
+
+
+Q63_SHAPES = dict(m=256, k=2048, n=1024)
+
+# --------------------------------------------------------------- LeNet5
+
+def lenet5_naive(x, params):
+    """LeNet-5, op-by-op (the L3 baseline graph)."""
+    return ref.ref_lenet5(x, params)
+
+
+def lenet5_optimized(x, params):
+    """Appendix-8.3 style: conv via im2col feeding the fused Pallas GEMM
+    (bias+ReLU folded in), Pallas max-pool, fused FC layers."""
+    y = _conv_bias_relu_im2col(x, params["conv1_w"], params["conv1_b"])
+    y = maxpool2d(y)
+    y = _conv_bias_relu_im2col(y, params["conv2_w"], params["conv2_b"])
+    y = maxpool2d(y)
+    y = y.reshape(y.shape[0], -1)
+    y = linear(y, params["fc1_w"], params["fc1_b"], relu=True, bm=y.shape[0])
+    y = linear(y, params["fc2_w"], params["fc2_b"], relu=True, bm=y.shape[0])
+    y = linear(y, params["fc3_w"], params["fc3_b"], relu=False, bm=y.shape[0], bn=10)
+    return y
+
+
+def _conv_bias_relu_im2col(x, w, b):
+    """Convolution as im2col + the fused Pallas GEMM.
+
+    The CUDA kernel's implicit-GEMM formulation maps to: extract patches
+    (data movement the TPU pipeline overlaps with compute), then one
+    MXU-tiled matmul with the bias+ReLU epilogue fused.
+    """
+    n, c, h, wd = x.shape
+    c_out, _, kh, kw = w.shape
+    oh, ow = h - kh + 1, wd - kw + 1
+    # Patches: (N*OH*OW, C*KH*KW), row-major over output pixels.
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(x[:, :, ky : ky + oh, kx : kx + ow])
+    patches = jnp.stack(cols, axis=2)  # (N, C, KH*KW, OH, OW)
+    patches = patches.transpose(0, 3, 4, 1, 2).reshape(n * oh * ow, c * kh * kw)
+    wmat = w.reshape(c_out, c * kh * kw).T  # (C*KH*KW, C_out)
+    rows = patches.shape[0]
+    bm = rows if rows < 128 else 128
+    while rows % bm:
+        bm //= 2
+    y = linear(patches, wmat, b, relu=True, bm=bm, bn=min(128, c_out), bk=wmat.shape[0])
+    return y.reshape(n, oh, ow, c_out).transpose(0, 3, 1, 2)
+
+
+LENET_BATCH = 16
+
+
+def lenet_param_shapes():
+    """Shape dict for LeNet parameters (f32)."""
+    return {
+        "conv1_w": (6, 1, 5, 5),
+        "conv1_b": (6,),
+        "conv2_w": (16, 6, 5, 5),
+        "conv2_b": (16,),
+        "fc1_w": (400, 120),
+        "fc1_b": (120,),
+        "fc2_w": (120, 84),
+        "fc2_b": (84,),
+        "fc3_w": (84, 10),
+        "fc3_b": (10,),
+    }

@@ -1,0 +1,35 @@
+"""AOT pipeline: lowering emits parseable HLO text the Rust loader can
+consume (format gate — see DESIGN.md: HLO text, never .serialize())."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+
+
+def test_to_hlo_text_structure():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: the root is a tuple.
+    assert "tuple" in text.lower()
+
+
+def test_pallas_anchor_lowers_to_plain_hlo():
+    """Interpret-mode Pallas must not leave custom-calls the CPU PJRT
+    client cannot execute."""
+    name, fn, args = [a for a in aot.anchors() if a[0] == "q63_optimized"][0]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "HloModule" in text
+    assert "mosaic" not in text.lower(), "Mosaic custom-call leaked into AOT artifact"
+
+
+def test_all_anchors_lower():
+    for name, fn, args in aot.anchors():
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert text.startswith("HloModule"), name
+        assert len(text) > 500, f"{name}: implausibly small HLO"

@@ -1,0 +1,164 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the repro guidance's L1 test contract);
+assert_allclose against ref.py is the core correctness signal.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    fused_linear_reduce,
+    linear,
+    logsumexp_rows,
+    matmul_epilogue,
+    maxpool2d,
+    ref,
+)
+
+# Keep hypothesis deadlines off: interpret-mode pallas is slow per-call.
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def rand(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------ matmul
+
+@settings(**COMMON)
+@given(
+    m=st.sampled_from([8, 16, 64, 128]),
+    k=st.sampled_from([32, 64, 256]),
+    n=st.sampled_from([16, 32, 128]),
+    relu=st.booleans(),
+    divisor=st.sampled_from([1.0, 2.0, 3.5]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_epilogue_matches_ref(m, k, n, relu, divisor, seed):
+    x, w, b = rand((m, k), seed), rand((k, n), seed + 1), rand((n,), seed + 2)
+    got = matmul_epilogue(x, w, b, divisor=divisor, relu=relu)
+    want = ref.ref_matmul_epilogue(x, w, b, divisor)
+    if not relu:
+        want = (x @ w + b[None, :]) / divisor
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-5), (jnp.bfloat16, 5e-2)])
+def test_matmul_epilogue_dtypes(dtype, tol):
+    x = rand((64, 128), 0).astype(dtype)
+    w = rand((128, 64), 1).astype(dtype)
+    b = rand((64,), 2).astype(dtype)
+    got = np.asarray(matmul_epilogue(x, w, b, divisor=2.0), dtype=np.float32)
+    want = np.asarray(
+        ref.ref_matmul_epilogue(
+            x.astype(np.float32), w.astype(np.float32), b.astype(np.float32), 2.0
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_matmul_epilogue_tiling_invariance():
+    """Different tile choices must not change the numerics."""
+    x, w, b = rand((128, 256), 3), rand((256, 128), 4), rand((128,), 5)
+    base = matmul_epilogue(x, w, b, divisor=2.0, bm=128, bn=128, bk=256)
+    for bm, bn, bk in [(32, 32, 64), (64, 128, 128), (128, 64, 32)]:
+        other = matmul_epilogue(x, w, b, divisor=2.0, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(base, other, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_epilogue_autofits_nondivisible_tiles():
+    # 100 % 64 != 0: the kernel auto-fits the tile to a divisor (50).
+    x, w, b = rand((100, 64), 0), rand((64, 64), 1), rand((64,), 2)
+    got = matmul_epilogue(x, w, b, bm=64, divisor=1.0, relu=False)
+    want = x @ w + b[None, :]
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------- fused linear reduce (Q18)
+
+@settings(**COMMON)
+@given(
+    m=st.sampled_from([8, 32, 128]),
+    k=st.sampled_from([64, 256, 512]),
+    n=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_linear_reduce_matches_ref(m, k, n, seed):
+    x, w, b = rand((m, k), seed, 0.3), rand((k, n), seed + 1, 0.3), rand((n,), seed + 2)
+    got = fused_linear_reduce(x, w, b)
+    want = ref.ref_fused_linear_reduce(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_fused_linear_reduce_equals_q18_chain():
+    """The fused kernel must equal the FULL unsimplified Q18 chain —
+    the algebraic-removal proof at the anchor scale."""
+    x, w, b = rand((128, 512), 7, 0.1), rand((512, 256), 8, 0.1), rand((256,), 9)
+    got = fused_linear_reduce(x, w, b)
+    want = ref.ref_q18_naive(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ pooling
+
+@settings(**COMMON)
+@given(
+    n=st.sampled_from([1, 2, 8]),
+    c=st.sampled_from([1, 3, 16]),
+    hw=st.sampled_from([4, 8, 28]),
+    seed=st.integers(0, 2**16),
+)
+def test_maxpool_matches_ref(n, c, hw, seed):
+    x = rand((n, c, hw, hw), seed)
+    got = maxpool2d(x)
+    want = ref.ref_maxpool2d(x)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_maxpool_rejects_odd_dims():
+    with pytest.raises(AssertionError):
+        maxpool2d(rand((1, 1, 5, 4), 0))
+
+
+# ---------------------------------------------------------- logsumexp
+
+@settings(**COMMON)
+@given(
+    m=st.sampled_from([8, 128]),
+    n=st.sampled_from([1, 16, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_logsumexp_matches_ref(m, n, seed):
+    x = rand((m, n), seed, 3.0)
+    got = logsumexp_rows(x)
+    want = ref.ref_logsumexp(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_logsumexp_on_singleton_axis_is_identity():
+    x = rand((64, 1), 11, 5.0)
+    np.testing.assert_allclose(logsumexp_rows(x), x, rtol=1e-6, atol=1e-6)
+
+
+def test_logsumexp_numerically_stable_for_large_inputs():
+    x = rand((8, 32), 13) + 500.0  # exp(500) overflows naive formulations
+    got = np.asarray(logsumexp_rows(x))
+    assert np.isfinite(got).all()
+
+
+# -------------------------------------------------------------- linear
+
+def test_linear_relu_flag():
+    x, w, b = rand((16, 32), 1), rand((32, 16), 2), rand((16,), 3)
+    with_relu = np.asarray(linear(x, w, b, relu=True, bm=16, bn=16, bk=32))
+    without = np.asarray(linear(x, w, b, relu=False, bm=16, bn=16, bk=32))
+    assert (with_relu >= 0).all()
+    assert (without < 0).any()
+    np.testing.assert_allclose(
+        with_relu, np.maximum(without, 0), rtol=1e-6, atol=1e-6
+    )

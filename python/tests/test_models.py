@@ -1,0 +1,80 @@
+"""L2 correctness: naive and optimized anchor variants are semantically
+identical, and shapes match the manifest the Rust runtime relies on."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def lenet_params(seed=0, scale=0.2):
+    return {
+        k: rand(v, seed + i, scale)
+        for i, (k, v) in enumerate(sorted(model.lenet_param_shapes().items()))
+    }
+
+
+def test_q18_variants_agree():
+    s = model.Q18_SHAPES
+    x = rand((s["batch"], s["in_features"]), 1, 0.05)
+    w = rand((s["in_features"], s["out_features"]), 2, 0.05)
+    b = rand((s["out_features"],), 3)
+    naive = np.asarray(model.q18_naive(x, w, b))
+    opt = np.asarray(model.q18_optimized(x, w, b))
+    alg = np.asarray(model.q18_algebraic(x, w, b))
+    assert naive.shape == (s["batch"], 1)
+    np.testing.assert_allclose(opt, naive, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(alg, naive, rtol=2e-3, atol=2e-3)
+
+
+def test_q63_variants_agree():
+    s = model.Q63_SHAPES
+    x = rand((s["m"], s["k"]), 4, 0.1)
+    w = rand((s["k"], s["n"]), 5, 0.1)
+    b = rand((s["n"],), 6)
+    naive = np.asarray(model.q63_naive(x, w, b))
+    opt = np.asarray(model.q63_optimized(x, w, b))
+    np.testing.assert_allclose(opt, naive, rtol=1e-4, atol=1e-4)
+    assert (opt >= 0).all()  # ReLU then positive divisor
+
+
+def test_lenet_variants_agree():
+    params = lenet_params()
+    x = rand((model.LENET_BATCH, 1, 32, 32), 99, 0.5)
+    naive = np.asarray(model.lenet5_naive(x, params))
+    opt = np.asarray(model.lenet5_optimized(x, params))
+    assert naive.shape == (model.LENET_BATCH, 10)
+    np.testing.assert_allclose(opt, naive, rtol=5e-4, atol=5e-4)
+
+
+def test_lenet_conv_im2col_building_block():
+    """The im2col+GEMM conv equals lax.conv on a standalone layer."""
+    x = rand((2, 3, 12, 12), 7, 0.5)
+    w = rand((8, 3, 5, 5), 8, 0.5)
+    b = rand((8,), 9)
+    got = np.asarray(model._conv_bias_relu_im2col(x, w, b))
+    want = np.asarray(ref.ref_conv2d_bias_relu(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_anchor_registry_consistent():
+    """aot.anchors() must lower-able shapes consistent with the models."""
+    from compile import aot
+
+    names = [a[0] for a in aot.anchors()]
+    assert names == [
+        "q18_naive",
+        "q18_optimized",
+        "q18_algebraic",
+        "q63_naive",
+        "q63_optimized",
+        "lenet5_naive",
+        "lenet5_optimized",
+    ]
+    for _name, _fn, args in aot.anchors():
+        assert all(hasattr(a, "shape") for a in args)

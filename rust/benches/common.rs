@@ -1,0 +1,41 @@
+//! Shared bench plumbing (criterion is not in the offline registry; the
+//! benches are `harness = false` binaries around the experiment
+//! registry).
+//!
+//! Scale control via `KB_BENCH_SCALE`:
+//! - `full`   — the paper's Table-2 protocol everywhere (slow);
+//! - `quick`  — smoke scale everywhere;
+//! - default  — headline experiments (those passed `default_full=true`)
+//!   at full scale, trend figures at reduced scale.
+
+use kernelblaster::experiments::{Ctx, Report};
+use std::time::Instant;
+
+pub fn ctx(default_full: bool) -> Ctx {
+    let scale = std::env::var("KB_BENCH_SCALE").unwrap_or_default();
+    let quick = match scale.as_str() {
+        "full" => false,
+        "quick" => true,
+        _ => !default_full,
+    };
+    Ctx::new(quick, 42)
+}
+
+pub fn run_experiment(name: &str, default_full: bool, f: fn(&Ctx) -> Report) {
+    let ctx = ctx(default_full);
+    eprintln!(
+        "[bench] {name} (scale: {}) ...",
+        if ctx.quick { "reduced" } else { "full" }
+    );
+    let start = Instant::now();
+    let report = f(&ctx);
+    let elapsed = start.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    println!("[bench] {name}: {elapsed:.1}s");
+    let out = std::path::Path::new("results");
+    if let Ok(files) = report.write_csvs(out) {
+        for p in files {
+            eprintln!("[bench] wrote {}", p.display());
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerates the paper's `fig12` artifact (see DESIGN.md §6).
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment(
+        "fig12",
+        true,
+        experiments::by_name("fig12").expect("registered"),
+    );
+}

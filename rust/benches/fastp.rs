@@ -1,0 +1,13 @@
+//! Bench: regenerates the fast_p figures — Fig. 7 (H100 vs PyTorch),
+//! Fig. 8 (L40S, Ours+cuDNN vs AI CUDA Engineer), Fig. 9 (four GPUs vs
+//! naive CUDA). Fig. 9 sweeps all four architectures and runs at reduced
+//! scale unless KB_BENCH_SCALE=full.
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment("fig7", true, experiments::by_name("fig7").expect("registered"));
+    common::run_experiment("fig8", true, experiments::by_name("fig8").expect("registered"));
+    common::run_experiment("fig9", true, experiments::by_name("fig9").expect("registered"));
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerates the paper's `fig11` artifact (see DESIGN.md §6).
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment(
+        "fig11",
+        true,
+        experiments::by_name("fig11").expect("registered"),
+    );
+}

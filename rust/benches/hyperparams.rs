@@ -1,0 +1,11 @@
+//! Bench: regenerates Fig. 17 (trajectory-count sweep) and Fig. 18
+//! (trajectory-length sweep). The value grids are always the paper's
+//! full grids; task subset is reduced unless KB_BENCH_SCALE=full.
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment("fig17", true, experiments::by_name("fig17").expect("registered"));
+    common::run_experiment("fig18", true, experiments::by_name("fig18").expect("registered"));
+}

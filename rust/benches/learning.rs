@@ -1,0 +1,19 @@
+//! Bench: regenerates Figs. 15/16 (Knowledge-Base learning-rate and
+//! cross-GPU transfer) and the §6.1 no_mem ablation. Multi-run sweeps:
+//! reduced scale unless KB_BENCH_SCALE=full.
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment(
+        "fig15_16",
+        true,
+        experiments::by_name("fig15_16").expect("registered"),
+    );
+    common::run_experiment(
+        "ablation_mem",
+        true,
+        experiments::by_name("ablation_mem").expect("registered"),
+    );
+}

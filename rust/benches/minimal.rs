@@ -1,0 +1,12 @@
+//! Bench: regenerates the paper's `minimal_agent` artifact (see DESIGN.md §6).
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment(
+        "minimal_agent",
+        true,
+        experiments::by_name("minimal_agent").expect("registered"),
+    );
+}

@@ -1,0 +1,88 @@
+//! Bench: the §Perf hot paths across all three layers.
+//!
+//! - L3 coordinator: the per-step inner loop (profile → state-extract →
+//!   KB match/select → transform → verify) and its components;
+//! - runtime: real PJRT artifact execution (anchors) — requires
+//!   `make artifacts`;
+//! - substrates: interpreter, performance model, KB retrieval.
+//!
+//! Results recorded in EXPERIMENTS.md §Perf.
+
+use kernelblaster::gpu::{estimate_schedule, profiler, GpuArch};
+use kernelblaster::harness::{self, HarnessConfig};
+use kernelblaster::icrl::{self, IcrlConfig};
+use kernelblaster::kb::KnowledgeBase;
+use kernelblaster::kir::interp;
+use kernelblaster::opts::{apply, Candidate, Technique};
+use kernelblaster::runtime::{anchors, default_artifact_dir, Runtime};
+use kernelblaster::tasks::Suite;
+use kernelblaster::util::rng::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:55} {:>12}  ({iters} iters)", kernelblaster::util::human_duration(per));
+    per
+}
+
+fn main() {
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let task = suite.by_id("L2/09_mlp_block").unwrap();
+    let cand = Candidate::naive(task);
+    let mut rng = Rng::new(1);
+
+    println!("== L3 substrate hot paths ==");
+    bench("gpu model: estimate_schedule (5-node graph)", 20_000, || {
+        let _ = estimate_schedule(&arch, &cand.full, &cand.schedule);
+    });
+    bench("profiler: full NCU-like report", 10_000, || {
+        let _ = profiler::profile(&arch, &cand.full, &cand.schedule, 0.02, &mut rng);
+    });
+    let inputs = interp::random_inputs(&task.small, 42);
+    bench("interpreter: verify-scale mlp_block", 2_000, || {
+        let _ = interp::execute(&task.small, &inputs).unwrap();
+    });
+    let hcfg = HarnessConfig::default();
+    bench("harness: full run (3-seed verify + profile)", 500, || {
+        let _ = harness::run(task, &cand, &arch, &hcfg, &mut rng);
+    });
+    bench("opts: apply shared_memory_tiling", 10_000, || {
+        let _ = apply::apply(Technique::SharedMemoryTiling, &cand, 0);
+    });
+    let mut kb = KnowledgeBase::seed_priors();
+    let m = kb.match_state(kb.states[0].sig);
+    let state = m.index();
+    bench("kb: select_top_k over 25 techniques", 100_000, || {
+        let _ = kb.select_top_k(state, 3, |_| true, &mut rng);
+    });
+
+    println!("\n== L3 end-to-end: one full task optimization ==");
+    let cfg = IcrlConfig::default();
+    let start = Instant::now();
+    let mut kb2 = KnowledgeBase::empty();
+    let run = icrl::optimize_task(task, &arch, &mut kb2, &cfg, 0);
+    println!(
+        "optimize_task (10 traj x 10 steps): {:.2}s -> {:.2}x vs naive, {} harness samples",
+        start.elapsed().as_secs_f64(),
+        run.speedup_vs_naive(),
+        run.steps.len()
+    );
+
+    println!("\n== Runtime (PJRT) anchors ==");
+    if default_artifact_dir().join("manifest.json").exists() {
+        let rt = Runtime::new(default_artifact_dir()).expect("PJRT client");
+        match anchors::calibrate(&rt, 2, 10) {
+            Ok(results) => print!("{}", anchors::render(&results)),
+            Err(e) => println!("calibration failed: {e}"),
+        }
+    } else {
+        println!("artifacts missing — run `make artifacts` first");
+    }
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerates the paper's `table3` artifact (see DESIGN.md §6).
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment(
+        "table3",
+        true,
+        experiments::by_name("table3").expect("registered"),
+    );
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerates Figs. 13/14 (per-technique attempts/successes) and
+//! the §5 transition analysis.
+#[path = "common.rs"]
+mod common;
+use kernelblaster::experiments;
+
+fn main() {
+    common::run_experiment(
+        "fig13_14",
+        true,
+        experiments::by_name("fig13_14").expect("registered"),
+    );
+}

@@ -1,0 +1,329 @@
+//! The Lowering Agent (paper §3): implements a selected optimization on
+//! the current kernel and hands it to the harness for validation.
+//!
+//! The simulated agent wraps [`crate::opts::apply`] with the failure
+//! modes an LLM writing CUDA exhibits:
+//! - **compile failures** (syntax/launch errors) at `lowering_fail_rate`;
+//! - **semantic bugs** (dropped epilogues, zeroed accumulators) at
+//!   `lowering_bug_rate` — these *pass* structural validation and must be
+//!   caught by the harness's randomized numeric checks;
+//! - **reward hacks** (dispatching to cuBLAS, stubbing work) at
+//!   `reward_hack_rate` — numerically correct or plausibly fast, caught
+//!   only by the soft verifier.
+//!
+//! On harness rejection the driver re-prompts with the feedback
+//! ("incorrect solutions are re-attempted", §4.3); retries sharpen the
+//! agent, halving its error rates per attempt.
+
+use super::{tokens, AgentConfig, TokenMeter};
+use crate::kir::{render, OpKind, ValueRef};
+use crate::opts::{apply, Candidate, Technique};
+use crate::util::rng::Rng;
+
+/// What the lowering attempt produced.
+#[derive(Debug, Clone)]
+pub enum Lowered {
+    /// Clean application.
+    Ok(Candidate),
+    /// Looks fine, compiles, is wrong (numeric check will catch).
+    SemanticBug(Candidate),
+    /// A shortcut (soft verifier's job).
+    RewardHack(Candidate),
+    /// Did not compile.
+    CompileFail(String),
+}
+
+impl Lowered {
+    pub fn candidate(&self) -> Option<&Candidate> {
+        match self {
+            Lowered::Ok(c) | Lowered::SemanticBug(c) | Lowered::RewardHack(c) => Some(c),
+            Lowered::CompileFail(_) => None,
+        }
+    }
+}
+
+/// One lowering attempt. `attempt` is the retry index (0 = first try);
+/// error rates halve with each retry (feedback helps).
+pub fn lower(
+    tech: Technique,
+    cand: &Candidate,
+    group: usize,
+    cfg: &AgentConfig,
+    attempt: usize,
+    meter: &mut TokenMeter,
+    rng: &mut Rng,
+) -> Lowered {
+    // Token cost: the hierarchical KB keeps context tight — the lowering
+    // agent is prompted with the *targeted kernel* (one fusion group) plus
+    // technique context, not the whole source file (the paper's "scalable
+    // representation that efficiently utilizes model context"), and
+    // writes a patch proportional to schedule complexity.
+    let source = render::render(&cand.full, &cand.schedule);
+    let group_share = tokens::text_tokens(&source) / cand.schedule.n_launches().max(1);
+    let prompt = group_share + 200;
+    let completion = 60 + cand.schedule.complexity();
+    meter.add(prompt, completion);
+
+    let scale = 0.5f64.powi(attempt as i32);
+    if rng.chance(cfg.lowering_fail_rate * scale) {
+        return Lowered::CompileFail(format!(
+            "error: identifier '__{}_tile' undeclared (first use in kernel_{group})",
+            tech.name()
+        ));
+    }
+    let applied = match apply::apply(tech, cand, group) {
+        Ok(c) => c,
+        Err(e) => return Lowered::CompileFail(e),
+    };
+    if rng.chance(cfg.reward_hack_rate * scale) {
+        return Lowered::RewardHack(inject_reward_hack(&applied, rng));
+    }
+    if rng.chance(cfg.lowering_bug_rate * scale) {
+        if let Some(bugged) = inject_semantic_bug(&applied, rng) {
+            return Lowered::SemanticBug(bugged);
+        }
+    }
+    Lowered::Ok(applied)
+}
+
+/// Introduce a real semantic bug the numeric harness must catch: pick a
+/// mutation that keeps shapes legal but changes values.
+fn inject_semantic_bug(cand: &Candidate, rng: &mut Rng) -> Option<Candidate> {
+    let mut c = cand.clone();
+    // Collect mutable unary elementwise nodes (safe to corrupt without
+    // breaking shape inference).
+    let targets: Vec<usize> = c
+        .full
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| {
+            matches!(
+                n.kind,
+                OpKind::Relu
+                    | OpKind::Exp
+                    | OpKind::Tanh
+                    | OpKind::Sigmoid
+                    | OpKind::Gelu
+                    | OpKind::Scale { .. }
+                    | OpKind::AddConst { .. }
+                    | OpKind::DivConst { .. }
+                    | OpKind::BiasAdd { .. }
+            )
+        })
+        .map(|(i, _)| i)
+        .collect();
+    let &target = targets.get(rng.index(targets.len().max(1)))?;
+    let bug_kind = match &c.full.nodes[target].kind {
+        // "Forgot the epilogue": activation becomes a copy.
+        OpKind::Relu | OpKind::Exp | OpKind::Tanh | OpKind::Sigmoid | OpKind::Gelu => {
+            OpKind::Identity
+        }
+        // Constant transcription error.
+        OpKind::Scale { c } => OpKind::Scale { c: c * 2.0 },
+        OpKind::AddConst { c } => OpKind::AddConst { c: c + 1.0 },
+        OpKind::DivConst { c } => OpKind::DivConst { c: c + 1.0 },
+        // Bias applied on the wrong axis — or dropped.
+        OpKind::BiasAdd { .. } => OpKind::Identity,
+        _ => return None,
+    };
+    // BiasAdd/binary → Identity must also drop the second operand.
+    if matches!(bug_kind, OpKind::Identity) {
+        for g in [&mut c.full, &mut c.small] {
+            g.nodes[target].kind = OpKind::Identity;
+            g.nodes[target].deps.truncate(1);
+        }
+    } else {
+        c.full.nodes[target].kind = bug_kind.clone();
+        c.small.nodes[target].kind = bug_kind;
+    }
+    Some(c)
+}
+
+/// Introduce a reward hack: either dispatch to a vendor library (fast and
+/// numerically fine — illegal outside +vendor mode) or stub the final
+/// node into a copy (the AI-CUDA-Engineer-style elimination).
+fn inject_reward_hack(cand: &Candidate, rng: &mut Rng) -> Candidate {
+    let mut c = cand.clone();
+    if rng.chance(0.6) {
+        // Vendor shortcut on the heaviest group.
+        if let Some(g) = c
+            .schedule
+            .groups
+            .iter_mut()
+            .max_by_key(|g| g.nodes.iter().max().copied().unwrap_or(0))
+        {
+            g.opts.vendor_lib = true;
+        }
+        c
+    } else {
+        // Stub the output node if it has a same-shaped dependency.
+        if let Some(ValueRef::Node(last)) = c.full.outputs.first().copied() {
+            let node = &c.full.nodes[last];
+            if let Some(dep) = node.deps.first().copied() {
+                if c.full.shape_of(dep) == &node.shape {
+                    for g in [&mut c.full, &mut c.small] {
+                        g.nodes[last].kind = OpKind::Identity;
+                        g.nodes[last].deps.truncate(1);
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuArch;
+    use crate::harness::{self, HarnessConfig, Outcome};
+    use crate::tasks::Suite;
+
+    fn cand(id: &str) -> (crate::tasks::Task, Candidate) {
+        let t = Suite::full().by_id(id).unwrap().clone();
+        let c = Candidate::naive(&t);
+        (t, c)
+    }
+
+    #[test]
+    fn reliable_lowering_matches_direct_apply() {
+        let (_t, c) = cand("L2/01_gemm_bias_relu");
+        let mut meter = TokenMeter::new();
+        let mut rng = Rng::new(1);
+        let out = lower(
+            Technique::MemoryCoalescing,
+            &c,
+            0,
+            &AgentConfig::reliable(),
+            0,
+            &mut meter,
+            &mut rng,
+        );
+        let direct = apply::apply(Technique::MemoryCoalescing, &c, 0).unwrap();
+        match out {
+            Lowered::Ok(got) => {
+                assert_eq!(got.schedule, direct.schedule);
+                assert_eq!(got.applied, direct.applied);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        assert!(meter.total() > 100);
+    }
+
+    #[test]
+    fn forced_bugs_are_caught_by_harness() {
+        let (t, c) = cand("L2/01_gemm_bias_relu");
+        let cfg = AgentConfig {
+            lowering_bug_rate: 1.0,
+            lowering_fail_rate: 0.0,
+            reward_hack_rate: 0.0,
+            ..AgentConfig::reliable()
+        };
+        let hcfg = HarnessConfig {
+            noise_sigma: 0.0,
+            ..Default::default()
+        };
+        let arch = GpuArch::h100();
+        let mut caught = 0;
+        let mut produced = 0;
+        for seed in 0..20 {
+            let mut meter = TokenMeter::new();
+            let mut rng = Rng::new(seed);
+            let out = lower(Technique::MemoryCoalescing, &c, 0, &cfg, 0, &mut meter, &mut rng);
+            if let Lowered::SemanticBug(bugged) = out {
+                produced += 1;
+                let res = harness::run(&t, &bugged, &arch, &hcfg, &mut rng);
+                if matches!(res, Outcome::WrongNumerics { .. } | Outcome::SoftVerifyRejected(_)) {
+                    caught += 1;
+                }
+            }
+        }
+        assert!(produced >= 15, "bug injection produced {produced}/20");
+        assert_eq!(caught, produced, "harness must catch every bug");
+    }
+
+    #[test]
+    fn forced_reward_hacks_are_caught_by_soft_verify() {
+        let (t, c) = cand("L1/01_matmul_square");
+        let cfg = AgentConfig {
+            reward_hack_rate: 1.0,
+            lowering_bug_rate: 0.0,
+            lowering_fail_rate: 0.0,
+            ..AgentConfig::reliable()
+        };
+        let hcfg = HarnessConfig {
+            noise_sigma: 0.0,
+            allow_vendor: false,
+            ..Default::default()
+        };
+        let arch = GpuArch::l40s();
+        for seed in 0..10 {
+            let mut meter = TokenMeter::new();
+            let mut rng = Rng::new(seed);
+            let out = lower(
+                Technique::MemoryCoalescing,
+                &c,
+                0,
+                &cfg,
+                0,
+                &mut meter,
+                &mut rng,
+            );
+            if let Lowered::RewardHack(hacked) = out {
+                let res = harness::run(&t, &hacked, &arch, &hcfg, &mut rng);
+                assert!(
+                    !res.is_ok(),
+                    "reward hack slipped through: {}",
+                    res.feedback()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn retries_reduce_failure_rate() {
+        let (_t, c) = cand("L2/01_gemm_bias_relu");
+        let cfg = AgentConfig {
+            lowering_fail_rate: 0.6,
+            lowering_bug_rate: 0.0,
+            reward_hack_rate: 0.0,
+            ..AgentConfig::reliable()
+        };
+        let count_fails = |attempt: usize| {
+            let mut fails = 0;
+            for seed in 0..200 {
+                let mut meter = TokenMeter::new();
+                let mut rng = Rng::new(seed);
+                if matches!(
+                    lower(Technique::MemoryCoalescing, &c, 0, &cfg, attempt, &mut meter, &mut rng),
+                    Lowered::CompileFail(_)
+                ) {
+                    fails += 1;
+                }
+            }
+            fails
+        };
+        let f0 = count_fails(0);
+        let f2 = count_fails(2);
+        assert!(f0 > 90, "f0={f0}");
+        assert!(f2 < f0 / 2, "f0={f0} f2={f2}");
+    }
+
+    #[test]
+    fn inapplicable_technique_is_compile_fail() {
+        let (_t, c) = cand("L1/01_matmul_square");
+        let mut meter = TokenMeter::new();
+        let mut rng = Rng::new(1);
+        let out = lower(
+            Technique::FastMath,
+            &c,
+            0,
+            &AgentConfig::reliable(),
+            0,
+            &mut meter,
+            &mut rng,
+        );
+        assert!(matches!(out, Lowered::CompileFail(_)));
+    }
+}

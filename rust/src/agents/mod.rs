@@ -1,0 +1,63 @@
+//! The agent roles of the KERNELBLASTER workflow (paper Fig. 6):
+//! state extractor, optimization selector, lowering agent, soft verifier
+//! (lives in [`crate::harness`]), and the textual-gradient trio
+//! (PolicyEvaluation → PerfGapAnalysis → ParameterUpdate).
+//!
+//! The paper drives these roles with GPT-4.1/GPT-5.0; this reproduction
+//! drives them with a *simulated LLM*: seeded-stochastic, boundedly
+//! rational (it misreads profiles at a configurable rate, introduces
+//! lowering bugs, occasionally attempts the reward hacks §4.4 guards
+//! against), and fully token-metered. The ICRL learning dynamics the
+//! evaluation measures are independent of who fills the roles; the trait
+//! boundary here is where a real LLM backend would plug in.
+
+pub mod lowering;
+pub mod state_extractor;
+pub mod textgrad;
+pub mod tokens;
+
+pub use tokens::TokenMeter;
+
+/// Behavioural parameters of the simulated LLM agents.
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    /// Probability the state extractor misreads the profile (picks a
+    /// wrong secondary bottleneck).
+    pub state_misclassify_rate: f64,
+    /// Probability a lowering attempt introduces a semantic bug.
+    pub lowering_bug_rate: f64,
+    /// Probability a lowering attempt fails to compile outright.
+    pub lowering_fail_rate: f64,
+    /// Probability the lowering agent attempts a shortcut the soft
+    /// verifier must catch (vendor dispatch / stubbed work).
+    pub reward_hack_rate: f64,
+    /// Re-attempts after harness feedback ("incorrect solutions are
+    /// re-attempted", §4.3).
+    pub retry_limit: usize,
+}
+
+impl Default for AgentConfig {
+    fn default() -> Self {
+        Self {
+            state_misclassify_rate: 0.05,
+            lowering_bug_rate: 0.08,
+            lowering_fail_rate: 0.05,
+            reward_hack_rate: 0.02,
+            retry_limit: 2,
+        }
+    }
+}
+
+impl AgentConfig {
+    /// A perfectly reliable agent (used by unit tests and ablations that
+    /// need determinism of outcomes, not of the policy).
+    pub fn reliable() -> Self {
+        Self {
+            state_misclassify_rate: 0.0,
+            lowering_bug_rate: 0.0,
+            lowering_fail_rate: 0.0,
+            reward_hack_rate: 0.0,
+            retry_limit: 2,
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! The LLM-powered State Extractor (paper §3): derives a performance
+//! signature from runtime profiling information.
+//!
+//! Consumes the NCU-like report's per-kernel details and the kernel
+//! graph, and produces the [`StateSig`] used to key the Knowledge Base.
+//! The simulated agent is boundedly rational: with probability
+//! `state_misclassify_rate` it misreads the secondary bottleneck, which
+//! is exactly the kind of error the textual-gradient loop later detects
+//! as an expectation/measurement discrepancy.
+
+use super::{tokens, AgentConfig, TokenMeter};
+use crate::gpu::{Bottleneck, NcuReport};
+use crate::kb::{StateSig, WorkloadClass};
+use crate::kir::KernelGraph;
+use crate::util::rng::Rng;
+
+/// Extract the performance state from a profile.
+pub fn extract(
+    report: &NcuReport,
+    graph: &KernelGraph,
+    cfg: &AgentConfig,
+    meter: &mut TokenMeter,
+    rng: &mut Rng,
+) -> StateSig {
+    // Token cost: the agent reads a condensed profile digest (the state
+    // matcher consumes the per-kernel bottleneck lines, not the raw dump);
+    // writes a short classification.
+    let details = report.render_details();
+    meter.add(tokens::text_tokens(&details) / 2 + 120, 40);
+
+    // Time-weighted dominant kernel decides primary; its secondary is the
+    // report's secondary.
+    let dominant = report
+        .kernels
+        .iter()
+        .max_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap());
+    let (mut primary, mut secondary) = match dominant {
+        Some(k) => (k.primary, k.secondary),
+        None => (Bottleneck::LaunchOverhead, Bottleneck::LaunchOverhead),
+    };
+    // Bounded rationality: occasionally misread.
+    if rng.chance(cfg.state_misclassify_rate) {
+        let all = Bottleneck::all();
+        secondary = all[rng.index(all.len())];
+        if rng.chance(0.3) {
+            std::mem::swap(&mut primary, &mut secondary);
+        }
+    }
+    StateSig {
+        primary,
+        secondary,
+        workload: WorkloadClass::of_graph(graph),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{profiler, GpuArch};
+    use crate::kir::schedule::Schedule;
+    use crate::opts::Candidate;
+    use crate::tasks::Suite;
+
+    fn report_for(id: &str) -> (NcuReport, KernelGraph) {
+        let task = Suite::full().by_id(id).unwrap().clone();
+        let cand = Candidate::naive(&task);
+        let mut rng = Rng::new(3);
+        let rep = profiler::profile(
+            &GpuArch::a100(),
+            &cand.full,
+            &Schedule::naive(&cand.full),
+            0.0,
+            &mut rng,
+        );
+        (rep, task.graph.clone())
+    }
+
+    #[test]
+    fn reliable_agent_reads_dominant_kernel() {
+        let (rep, graph) = report_for("L2/01_gemm_bias_relu");
+        let mut meter = TokenMeter::new();
+        let mut rng = Rng::new(1);
+        let sig = extract(&rep, &graph, &AgentConfig::reliable(), &mut meter, &mut rng);
+        // GEMM dominates; naive layout → memory_latency primary.
+        assert_eq!(sig.primary, Bottleneck::MemoryLatency);
+        assert_eq!(sig.workload, WorkloadClass::ContractionHeavy);
+        assert!(meter.total() > 100, "profile reading must cost tokens");
+    }
+
+    #[test]
+    fn extraction_deterministic_given_seed() {
+        let (rep, graph) = report_for("L1/12_softmax");
+        let cfg = AgentConfig::default();
+        let mut m1 = TokenMeter::new();
+        let mut m2 = TokenMeter::new();
+        let s1 = extract(&rep, &graph, &cfg, &mut m1, &mut Rng::new(9));
+        let s2 = extract(&rep, &graph, &cfg, &mut m2, &mut Rng::new(9));
+        assert_eq!(s1, s2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn misclassification_rate_manifests() {
+        let (rep, graph) = report_for("L2/01_gemm_bias_relu");
+        let cfg = AgentConfig {
+            state_misclassify_rate: 1.0,
+            ..AgentConfig::reliable()
+        };
+        let reliable_sig = {
+            let mut m = TokenMeter::new();
+            extract(&rep, &graph, &AgentConfig::reliable(), &mut m, &mut Rng::new(5))
+        };
+        // With forced misclassification, many draws must differ.
+        let mut differs = 0;
+        for seed in 0..40 {
+            let mut m = TokenMeter::new();
+            let s = extract(&rep, &graph, &cfg, &mut m, &mut Rng::new(seed));
+            if s != reliable_sig {
+                differs += 1;
+            }
+        }
+        assert!(differs > 25, "only {differs}/40 differed");
+    }
+
+    #[test]
+    fn empty_report_degrades_gracefully() {
+        let (mut rep, graph) = report_for("L1/15_relu");
+        rep.kernels.clear();
+        let mut m = TokenMeter::new();
+        let sig = extract(&rep, &graph, &AgentConfig::reliable(), &mut m, &mut Rng::new(1));
+        assert_eq!(sig.primary, Bottleneck::LaunchOverhead);
+    }
+}

@@ -1,0 +1,307 @@
+//! The textual-gradient trio (paper Algorithm 2, lines 15–17 and Table 1):
+//!
+//! - **PolicyEvaluation** (g_k): summarizes, per (state, optimization),
+//!   the discrepancy between the Knowledge Base's expected gain and the
+//!   measured gain over the replay buffer.
+//! - **PerfGapAnalysis** (p_k): reasons about *why* measurements diverged
+//!   from expectations — attributing gaps to occupancy collapse, launch
+//!   overhead, verification failures, architecture mismatch — and emits
+//!   a natural-language note plus a trust-adjusted gain.
+//! - **ParameterUpdate** (θ_{k+1}): writes the adjusted scores and notes
+//!   back into the Knowledge Base.
+//!
+//! The trio is the in-context analog of a policy-gradient step: dense
+//! semantic feedback in place of numeric gradients.
+
+use super::{tokens, TokenMeter};
+use crate::gpu::Bottleneck;
+use crate::kb::{KnowledgeBase, StateSig};
+use crate::opts::Technique;
+
+/// One replay-buffer sample: what happened when `technique` was applied
+/// in `state`.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub state: StateSig,
+    pub technique: Technique,
+    /// KB expectation at selection time.
+    pub expected_gain: f64,
+    /// Measured speedup of this step (1.0 = no change; <1 = regression).
+    /// Failed validation is recorded as 0 gain with `valid = false`.
+    pub measured_gain: f64,
+    pub valid: bool,
+    /// Occupancy/parallelism observed after the step (for attribution).
+    pub occupancy: f64,
+    pub utilization: f64,
+    /// Bottleneck after the step.
+    pub new_primary: Bottleneck,
+}
+
+/// PolicyEvaluation output: the aggregated discrepancy record g_k.
+#[derive(Debug, Clone)]
+pub struct Discrepancy {
+    pub state: StateSig,
+    pub technique: Technique,
+    pub expected: f64,
+    pub measured_mean: f64,
+    pub n: usize,
+    pub n_invalid: usize,
+    pub mean_occupancy: f64,
+    pub mean_utilization: f64,
+    pub summary: String,
+}
+
+/// PolicyEvaluation: group samples by (state, technique) and summarize
+/// expectation-vs-measurement in natural language.
+pub fn policy_evaluation(samples: &[Sample], meter: &mut TokenMeter) -> Vec<Discrepancy> {
+    let mut groups: Vec<((StateSig, Technique), Vec<&Sample>)> = Vec::new();
+    for s in samples {
+        let key = (s.state, s.technique);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(s),
+            None => groups.push((key, vec![s])),
+        }
+    }
+    let mut out = Vec::new();
+    for ((state, technique), group) in groups {
+        let n = group.len();
+        let n_invalid = group.iter().filter(|s| !s.valid).count();
+        let valid: Vec<&&Sample> = group.iter().filter(|s| s.valid).collect();
+        let measured_mean = if valid.is_empty() {
+            0.0
+        } else {
+            valid.iter().map(|s| s.measured_gain).sum::<f64>() / valid.len() as f64
+        };
+        let expected = group[0].expected_gain;
+        let mean_occupancy =
+            group.iter().map(|s| s.occupancy).sum::<f64>() / n as f64;
+        let mean_utilization =
+            group.iter().map(|s| s.utilization).sum::<f64>() / n as f64;
+        let summary = format!(
+            "{} in state {}: expected {:.2}x, measured {:.2}x over {} attempts ({} invalid)",
+            technique.name(),
+            state.id(),
+            expected,
+            measured_mean,
+            n,
+            n_invalid
+        );
+        meter.add(40 * n, tokens::text_tokens(&summary) + 20);
+        out.push(Discrepancy {
+            state,
+            technique,
+            expected,
+            measured_mean,
+            n,
+            n_invalid,
+            mean_occupancy,
+            mean_utilization,
+            summary,
+        });
+    }
+    out
+}
+
+/// PerfGapAnalysis output: the per-entry update instruction p_k.
+#[derive(Debug, Clone)]
+pub struct GapInsight {
+    pub state: StateSig,
+    pub technique: Technique,
+    /// The gain value ParameterUpdate should integrate.
+    pub adjusted_gain: f64,
+    /// The natural-language gradient note.
+    pub note: String,
+}
+
+/// PerfGapAnalysis: attribute each discrepancy and produce the adjusted
+/// gain + note. The attribution rules are the reasoning an LLM performs
+/// over the profile deltas.
+pub fn perf_gap_analysis(discrepancies: &[Discrepancy], meter: &mut TokenMeter) -> Vec<GapInsight> {
+    let mut out = Vec::new();
+    for d in discrepancies {
+        let reliability = 1.0 - d.n_invalid as f64 / d.n.max(1) as f64;
+        let mut note;
+        let adjusted_gain;
+        if d.n_invalid == d.n {
+            // Nothing valid came out of this technique here.
+            adjusted_gain = 0.5; // strong negative signal, but not zero —
+                                 // lowering may succeed next time.
+            note = format!(
+                "{}: every attempt failed validation in {} — lowering is error-prone here",
+                d.technique.name(),
+                d.state.id()
+            );
+        } else if d.measured_mean < d.expected * 0.6 {
+            adjusted_gain = d.measured_mean;
+            note = format!(
+                "overestimated ({:.2}x expected vs {:.2}x measured)",
+                d.expected, d.measured_mean
+            );
+            if d.mean_occupancy < 0.25 {
+                note.push_str("; occupancy collapsed — pair with register/occupancy tuning");
+            } else if d.mean_utilization < 0.25 {
+                note.push_str("; device underfilled — grid too small after transform");
+            } else if d.measured_mean < 1.0 {
+                note.push_str("; regression: bottleneck did not match this technique");
+            }
+        } else if d.measured_mean > d.expected * 1.4 {
+            adjusted_gain = d.measured_mean;
+            note = format!(
+                "underestimated: {:.2}x measured vs {:.2}x expected — prioritize in this state",
+                d.measured_mean, d.expected
+            );
+        } else {
+            adjusted_gain = d.measured_mean;
+            note = String::new(); // expectation held; no note needed
+        }
+        // Blend in validation reliability: frequent invalid attempts
+        // discount the integrated gain.
+        let adjusted_gain = adjusted_gain * reliability + 0.5 * (1.0 - reliability);
+        meter.add(tokens::text_tokens(&d.summary) + 60, tokens::text_tokens(&note) + 30);
+        out.push(GapInsight {
+            state: d.state,
+            technique: d.technique,
+            adjusted_gain,
+            note,
+        });
+    }
+    out
+}
+
+/// ParameterUpdate: integrate the insights into the Knowledge Base
+/// (θ_{k+1} ← ParameterUpdate(θ_k, p_k)).
+pub fn parameter_update(kb: &mut KnowledgeBase, insights: &[GapInsight], meter: &mut TokenMeter) {
+    for ins in insights {
+        let state_idx = match kb.find_state(ins.state) {
+            Some(i) => i,
+            None => kb.match_state(ins.state).index(),
+        };
+        let note = if ins.note.is_empty() {
+            None
+        } else {
+            Some(ins.note.clone())
+        };
+        meter.add(60, 30);
+        kb.update_score(state_idx, ins.technique, ins.adjusted_gain, note);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kb::WorkloadClass;
+
+    fn sig() -> StateSig {
+        StateSig {
+            primary: Bottleneck::MemoryLatency,
+            secondary: Bottleneck::ComputeThroughput,
+            workload: WorkloadClass::ContractionHeavy,
+        }
+    }
+
+    fn sample(gain: f64, valid: bool) -> Sample {
+        Sample {
+            state: sig(),
+            technique: Technique::SharedMemoryTiling,
+            expected_gain: 2.2,
+            measured_gain: gain,
+            valid,
+            occupancy: 0.5,
+            utilization: 0.9,
+            new_primary: Bottleneck::ComputeThroughput,
+        }
+    }
+
+    #[test]
+    fn policy_evaluation_groups_and_averages() {
+        let samples = vec![sample(2.0, true), sample(3.0, true), sample(0.0, false)];
+        let mut meter = TokenMeter::new();
+        let g = policy_evaluation(&samples, &mut meter);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].n, 3);
+        assert_eq!(g[0].n_invalid, 1);
+        assert!((g[0].measured_mean - 2.5).abs() < 1e-12);
+        assert!(g[0].summary.contains("shared_memory_tiling"));
+        assert!(meter.total() > 0);
+    }
+
+    #[test]
+    fn gap_analysis_flags_overestimates_with_occupancy_cause() {
+        let mut meter = TokenMeter::new();
+        let d = Discrepancy {
+            state: sig(),
+            technique: Technique::SharedMemoryTiling,
+            expected: 2.2,
+            measured_mean: 0.8,
+            n: 3,
+            n_invalid: 0,
+            mean_occupancy: 0.1,
+            mean_utilization: 0.9,
+            summary: "s".into(),
+        };
+        let p = perf_gap_analysis(&[d], &mut meter);
+        assert!((p[0].adjusted_gain - 0.8).abs() < 1e-9);
+        assert!(p[0].note.contains("occupancy collapsed"), "{}", p[0].note);
+    }
+
+    #[test]
+    fn gap_analysis_flags_underestimates() {
+        let mut meter = TokenMeter::new();
+        let d = Discrepancy {
+            state: sig(),
+            technique: Technique::AlgebraicSimplification,
+            expected: 1.6,
+            measured_mean: 12.0,
+            n: 1,
+            n_invalid: 0,
+            mean_occupancy: 0.6,
+            mean_utilization: 0.9,
+            summary: "s".into(),
+        };
+        let p = perf_gap_analysis(&[d], &mut meter);
+        assert!(p[0].note.contains("underestimated"));
+        assert!((p[0].adjusted_gain - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_invalid_yields_strong_negative() {
+        let mut meter = TokenMeter::new();
+        let samples = vec![sample(0.0, false), sample(0.0, false)];
+        let g = policy_evaluation(&samples, &mut meter);
+        let p = perf_gap_analysis(&g, &mut meter);
+        assert!(p[0].adjusted_gain <= 0.5 + 1e-9);
+        assert!(p[0].note.contains("error-prone"));
+    }
+
+    #[test]
+    fn full_gradient_step_moves_kb() {
+        let mut kb = KnowledgeBase::empty();
+        let m = kb.match_state(sig());
+        kb.ensure_candidates(m.index(), &[Technique::SharedMemoryTiling]);
+        let before = kb.states[0].opts[0].expected_gain;
+        let samples = vec![sample(0.7, true), sample(0.9, true)];
+        let mut meter = TokenMeter::new();
+        let g = policy_evaluation(&samples, &mut meter);
+        let p = perf_gap_analysis(&g, &mut meter);
+        parameter_update(&mut kb, &p, &mut meter);
+        let after = kb.states[0].opts[0].expected_gain;
+        assert!(after < before, "KB must move toward measurement");
+        assert_eq!(kb.updates, 1);
+        assert!(!kb.states[0].opts[0].notes.is_empty());
+    }
+
+    #[test]
+    fn parameter_update_discovers_missing_state() {
+        let mut kb = KnowledgeBase::empty();
+        let insight = GapInsight {
+            state: sig(),
+            technique: Technique::FastMath,
+            adjusted_gain: 1.4,
+            note: "works".into(),
+        };
+        let mut meter = TokenMeter::new();
+        parameter_update(&mut kb, &[insight], &mut meter);
+        assert_eq!(kb.states.len(), 1);
+        assert_eq!(kb.states[0].opts[0].technique, Technique::FastMath);
+    }
+}

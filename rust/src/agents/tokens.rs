@@ -1,0 +1,79 @@
+//! Token accounting.
+//!
+//! System cost in the paper (§4.2, §4.10, §6.4) is "the total number of
+//! tokens consumed to optimize the kernel". Every agent call books its
+//! prompt and completion tokens here; Fig. 10 (speedup vs tokens) and the
+//! §6.4 minimal-agent comparison (2.4× tokens, 0.379× perf/token) are
+//! computed from these meters.
+
+/// Cumulative token meter for one optimization run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TokenMeter {
+    pub prompt: usize,
+    pub completion: usize,
+    /// Number of agent invocations.
+    pub calls: usize,
+}
+
+impl TokenMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Book one agent call.
+    pub fn add(&mut self, prompt: usize, completion: usize) {
+        self.prompt += prompt;
+        self.completion += completion;
+        self.calls += 1;
+    }
+
+    pub fn total(&self) -> usize {
+        self.prompt + self.completion
+    }
+
+    pub fn merge(&mut self, other: &TokenMeter) {
+        self.prompt += other.prompt;
+        self.completion += other.completion;
+        self.calls += other.calls;
+    }
+}
+
+/// Token cost of a text blob (≈1 token / 4 chars — same model as
+/// [`crate::kir::render::token_count`]).
+pub fn text_tokens(text: &str) -> usize {
+    text.len().div_ceil(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates() {
+        let mut m = TokenMeter::new();
+        m.add(100, 20);
+        m.add(50, 10);
+        assert_eq!(m.prompt, 150);
+        assert_eq!(m.completion, 30);
+        assert_eq!(m.total(), 180);
+        assert_eq!(m.calls, 2);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = TokenMeter::new();
+        a.add(10, 5);
+        let mut b = TokenMeter::new();
+        b.add(7, 3);
+        a.merge(&b);
+        assert_eq!(a.total(), 25);
+        assert_eq!(a.calls, 2);
+    }
+
+    #[test]
+    fn text_token_rule() {
+        assert_eq!(text_tokens(""), 0);
+        assert_eq!(text_tokens("abcd"), 1);
+        assert_eq!(text_tokens("abcdefgh!"), 3);
+    }
+}

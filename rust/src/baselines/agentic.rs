@@ -1,0 +1,350 @@
+//! Agentic comparison systems: the AI CUDA Engineer analog, the
+//! Kernelsseum-style zero-shot baseline, and the §6.4 minimal agent.
+//!
+//! All three share KernelBlaster's harness and lowering substrate but
+//! differ in policy:
+//! - **AI CUDA Engineer**: evolutionary archive search — generations of
+//!   prior-weighted proposals, elitist selection, embedding-style
+//!   retrieval of past kernels, *no* profile-conditioned states and no
+//!   textual-gradient updates (Table 2: 10 generations; 8 proposals
+//!   sampled per generation; top 4 evaluated).
+//! - **Zero-shot**: a single unguided generation pass.
+//! - **Minimal agent**: reads code + full NCU report, rewrites the whole
+//!   kernel each turn (full-source completions — the 2.4× token cost of
+//!   §6.4), no knowledge base, no state abstraction.
+
+use crate::agents::lowering;
+use crate::agents::{tokens, AgentConfig, TokenMeter};
+use crate::gpu::GpuArch;
+use crate::harness::{self, HarnessConfig, Outcome};
+use crate::kir::render;
+use crate::opts::{Candidate, Technique};
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+
+/// Outcome of an agentic baseline on one task.
+#[derive(Debug, Clone)]
+pub struct AgenticRun {
+    pub task_id: String,
+    pub valid: bool,
+    pub naive_time_s: f64,
+    pub best_time_s: f64,
+    pub tokens: TokenMeter,
+}
+
+impl AgenticRun {
+    pub fn speedup_vs_naive(&self) -> f64 {
+        self.naive_time_s / self.best_time_s
+    }
+}
+
+/// Sample a technique from prior weights over the applicable set (no
+/// state conditioning — the key difference from KernelBlaster).
+fn sample_prior_weighted(cand: &Candidate, rng: &mut Rng, allow_vendor: bool) -> Option<(Technique, usize)> {
+    let apps: Vec<(Technique, usize)> = Technique::all()
+        .iter()
+        .filter(|t| allow_vendor || **t != Technique::VendorLibraryDispatch)
+        .filter_map(|t| t.applicable_anywhere(cand).map(|gi| (*t, gi)))
+        .collect();
+    if apps.is_empty() {
+        return None;
+    }
+    let weights: Vec<f64> = apps.iter().map(|(t, _)| t.prior_gain() - 0.9).collect();
+    Some(apps[rng.weighted_index(&weights)])
+}
+
+/// AI CUDA Engineer analog: `generations` rounds; each samples
+/// `proposals` mutations of the current elite, evaluates the top
+/// `evaluated` by prior score, keeps the best. The paper's published
+/// system shows ~82% valid rate; invalidity here emerges from the same
+/// lowering failure model KernelBlaster faces, plus a stricter one-shot
+/// initial translation (no retry on the first lowering).
+pub fn cuda_engineer(
+    task: &Task,
+    arch: &GpuArch,
+    hcfg: &HarnessConfig,
+    seed: u64,
+) -> AgenticRun {
+    let mut rng = Rng::new(seed).derive(&format!("cuda-eng/{}", task.id));
+    let mut meter = TokenMeter::new();
+    let agent = AgentConfig {
+        // No profile feedback loop → lowering errors are likelier and are
+        // not retried with feedback.
+        lowering_bug_rate: 0.12,
+        lowering_fail_rate: 0.08,
+        reward_hack_rate: 0.03,
+        retry_limit: 0,
+        ..AgentConfig::default()
+    };
+    let naive = Candidate::naive(task);
+    let naive_rep = harness::profile_naive(task, arch, hcfg, &mut rng);
+    let naive_time = naive_rep.total_time_s;
+
+    // One-shot initial translation: ~15% of tasks never produce a valid
+    // starting kernel (drives the 82% ValidRate).
+    if rng.chance(0.15) {
+        return AgenticRun {
+            task_id: task.id.clone(),
+            valid: false,
+            naive_time_s: naive_time,
+            best_time_s: naive_time,
+            tokens: meter,
+        };
+    }
+
+    let generations = 10;
+    let proposals = 8;
+    let evaluated = 4;
+    let mut elite = naive.clone();
+    let mut elite_time = naive_time;
+    let mut any_valid = true;
+
+    for _gen in 0..generations {
+        // Propose mutations (embedding retrieval = prior-weighted sampling
+        // over the archive's technique distribution).
+        let mut cands: Vec<(Technique, usize)> = Vec::new();
+        for _ in 0..proposals {
+            if let Some(pick) = sample_prior_weighted(&elite, &mut rng, hcfg.allow_vendor) {
+                cands.push(pick);
+            }
+            // Proposal cost: archive exemplars + code context.
+            meter.add(600, 120);
+        }
+        cands.truncate(evaluated);
+        for (tech, gi) in cands {
+            let lowered = lowering::lower(tech, &elite, gi, &agent, 0, &mut meter, &mut rng);
+            if let Some(c) = lowered.candidate() {
+                let out = harness::run(task, c, arch, hcfg, &mut rng);
+                if let Outcome::Ok(rep) = out {
+                    if rep.total_time_s < elite_time {
+                        elite_time = rep.total_time_s;
+                        elite = c.clone();
+                    }
+                }
+                // Harness-rejected candidates (semantic bugs, reward
+                // hacks) are simply discarded — no feedback/retry loop.
+            }
+        }
+        let _ = &mut any_valid;
+    }
+    AgenticRun {
+        task_id: task.id.clone(),
+        valid: any_valid,
+        naive_time_s: naive_time,
+        best_time_s: elite_time,
+        tokens: meter,
+    }
+}
+
+/// Kernelsseum-style zero-shot: one generation, no iteration, no
+/// profiling feedback. Often the naive kernel with one cheap tweak.
+pub fn zero_shot(task: &Task, arch: &GpuArch, hcfg: &HarnessConfig, seed: u64) -> AgenticRun {
+    let mut rng = Rng::new(seed).derive(&format!("zero-shot/{}", task.id));
+    let mut meter = TokenMeter::new();
+    let naive = Candidate::naive(task);
+    let naive_rep = harness::profile_naive(task, arch, hcfg, &mut rng);
+    let naive_time = naive_rep.total_time_s;
+    meter.add(tokens::text_tokens(&render::render(&naive.full, &naive.schedule)) + 300, 500);
+    // ~30% of zero-shot generations are invalid (no feedback loop at all).
+    if rng.chance(0.30) {
+        return AgenticRun {
+            task_id: task.id.clone(),
+            valid: false,
+            naive_time_s: naive_time,
+            best_time_s: naive_time,
+            tokens: meter,
+        };
+    }
+    // The model "knows" common good practice: coalescing, maybe fusion.
+    let mut cand = naive;
+    let mut time = naive_time;
+    for tech in [Technique::MemoryCoalescing, Technique::KernelFusion] {
+        if let Some(gi) = tech.applicable_anywhere(&cand) {
+            if let Ok(c) = crate::opts::apply::apply(tech, &cand, gi) {
+                let out = harness::run(task, &c, arch, hcfg, &mut rng);
+                if let Outcome::Ok(rep) = out {
+                    cand = c;
+                    time = rep.total_time_s;
+                }
+            }
+        }
+    }
+    AgenticRun {
+        task_id: task.id.clone(),
+        valid: true,
+        naive_time_s: naive_time,
+        best_time_s: time,
+        tokens: meter,
+    }
+}
+
+/// §6.4 minimal agent: at each iteration it "directly takes in CUDA code
+/// and NCU profiling data and outputs optimized code" — whole-source
+/// completions, uniform technique choice, no knowledge base. Run shape
+/// matches the paper's comparison (10 trajectories × length 10).
+pub fn minimal_agent(
+    task: &Task,
+    arch: &GpuArch,
+    hcfg: &HarnessConfig,
+    trajectories: usize,
+    steps: usize,
+    seed: u64,
+) -> AgenticRun {
+    let mut rng = Rng::new(seed).derive(&format!("minimal/{}", task.id));
+    let mut meter = TokenMeter::new();
+    let agent = AgentConfig {
+        // No guided reasoning → more correction retries needed (§6.4
+        // cause 2: "requires more retrievals for correctness").
+        lowering_bug_rate: 0.16,
+        lowering_fail_rate: 0.10,
+        reward_hack_rate: 0.02,
+        retry_limit: 2,
+        state_misclassify_rate: 0.0, // no state abstraction at all
+    };
+    let naive = Candidate::naive(task);
+    let naive_rep = harness::profile_naive(task, arch, hcfg, &mut rng);
+    let naive_time = naive_rep.total_time_s;
+    let mut best = naive.clone();
+    let mut best_time = naive_time;
+    let mut any_valid = false;
+
+    for _traj in 0..trajectories {
+        let mut cand = naive.clone();
+        let mut cur_time = naive_time;
+        let mut cur_rep = naive_rep.clone();
+        for step in 0..steps {
+            // Prompt: full source + full NCU details (no KB to focus it),
+            // PLUS the growing chat history — a minimal loop is one long
+            // conversation, so every turn re-reads all prior attempts.
+            let src = render::render(&cand.full, &cand.schedule);
+            let details = cur_rep.render_details();
+            let history = step * 450;
+            // Completion: the agent rewrites the WHOLE kernel source, plus
+            // up-front unguided reasoning (§6.4 cause 1).
+            let reasoning = 1600;
+            meter.add(
+                tokens::text_tokens(&src) + tokens::text_tokens(&details) + 200 + history,
+                tokens::text_tokens(&src) + reasoning,
+            );
+            // Uniform choice over applicable techniques.
+            let apps: Vec<(Technique, usize)> = Technique::all()
+                .iter()
+                .filter(|t| hcfg.allow_vendor || **t != Technique::VendorLibraryDispatch)
+                .filter_map(|t| t.applicable_anywhere(&cand).map(|gi| (*t, gi)))
+                .collect();
+            let Some(&(tech, gi)) = (if apps.is_empty() {
+                None
+            } else {
+                Some(&apps[rng.index(apps.len())])
+            }) else {
+                break;
+            };
+            let mut stepped = false;
+            for attempt in 0..=agent.retry_limit {
+                let lowered = lowering::lower(tech, &cand, gi, &agent, attempt, &mut meter, &mut rng);
+                if let Some(c) = lowered.candidate() {
+                    let out = harness::run(task, c, arch, hcfg, &mut rng);
+                    if let Outcome::Ok(rep) = out {
+                        any_valid = true;
+                        if rep.total_time_s < best_time {
+                            best_time = rep.total_time_s;
+                            best = c.clone();
+                        }
+                        cur_time = rep.total_time_s;
+                        cur_rep = rep;
+                        cand = c.clone();
+                        stepped = true;
+                        break;
+                    }
+                }
+            }
+            if !stepped {
+                // Keep state; burned tokens.
+                let _ = cur_time;
+            }
+        }
+    }
+    let _ = best;
+    AgenticRun {
+        task_id: task.id.clone(),
+        valid: any_valid,
+        naive_time_s: naive_time,
+        best_time_s: best_time,
+        tokens: meter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Suite;
+
+    fn hcfg() -> HarnessConfig {
+        HarnessConfig {
+            noise_sigma: 0.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cuda_engineer_improves_but_stochastically() {
+        let suite = Suite::full();
+        let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+        let arch = GpuArch::l40s();
+        let run = cuda_engineer(task, &arch, &hcfg(), 3);
+        if run.valid {
+            assert!(run.speedup_vs_naive() >= 1.0);
+        }
+        assert!(run.tokens.total() > 1000);
+    }
+
+    #[test]
+    fn cuda_engineer_valid_rate_near_82pct() {
+        let suite = Suite::full();
+        let arch = GpuArch::l40s();
+        let mut valid = 0;
+        let mut total = 0;
+        for task in suite.of_level(crate::tasks::Level::L1) {
+            for seed in 0..3 {
+                total += 1;
+                if cuda_engineer(task, &arch, &hcfg(), seed).valid {
+                    valid += 1;
+                }
+            }
+        }
+        let rate = valid as f64 / total as f64;
+        assert!((0.70..=0.95).contains(&rate), "valid rate {rate:.2}");
+    }
+
+    #[test]
+    fn zero_shot_is_cheap_and_weak() {
+        let suite = Suite::full();
+        let task = suite.by_id("L2/09_mlp_block").unwrap();
+        let arch = GpuArch::h100();
+        let zs = zero_shot(task, &arch, &hcfg(), 1);
+        let ce = cuda_engineer(task, &arch, &hcfg(), 1);
+        assert!(zs.tokens.total() < ce.tokens.total() / 2);
+    }
+
+    #[test]
+    fn minimal_agent_token_heavy() {
+        let suite = Suite::full();
+        let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+        let arch = GpuArch::h100();
+        let run = minimal_agent(task, &arch, &hcfg(), 2, 3, 5);
+        // Whole-source completions: completion tokens rival prompt tokens.
+        assert!(run.tokens.completion * 3 > run.tokens.prompt);
+        assert!(run.tokens.total() > 5_000);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let suite = Suite::full();
+        let task = suite.by_id("L1/12_softmax").unwrap();
+        let arch = GpuArch::a100();
+        let a = cuda_engineer(task, &arch, &hcfg(), 9);
+        let b = cuda_engineer(task, &arch, &hcfg(), 9);
+        assert_eq!(a.best_time_s, b.best_time_s);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

@@ -1,0 +1,282 @@
+//! Comparator systems (paper §4.1): PyTorch eager, torch.compile, the
+//! IREE ML compiler, the AI CUDA Engineer, the Kernelsseum zero-shot
+//! baseline, and the §6.4 minimal agent.
+//!
+//! Every baseline is evaluated "under equivalent execution and profiling
+//! conditions": the same task graphs, the same GPU performance model, the
+//! same harness. They differ only in optimization policy — exactly the
+//! axis the paper varies.
+
+pub mod agentic;
+
+use crate::gpu::{estimate_schedule, GpuArch};
+use crate::kir::schedule::{MemLayout, Schedule, Tiling};
+use crate::opts::{apply, Candidate, Technique};
+use crate::tasks::Task;
+
+/// Reference execution times for one task on one architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineTimes {
+    /// PyTorch eager: one vendor-library kernel per op.
+    pub eager_s: f64,
+    /// torch.compile: eager + elementwise fusion + dead-code elimination.
+    pub compiled_s: f64,
+}
+
+impl BaselineTimes {
+    /// The paper's 1.0× reference: "the best performance among PyTorch
+    /// Eager and torch.compile" (§4.2).
+    pub fn best_s(&self) -> f64 {
+        self.eager_s.min(self.compiled_s)
+    }
+}
+
+/// PyTorch eager analog: each op runs as a separate, well-engineered
+/// vendor kernel (cuBLAS/cuDNN for contractions, tuned elementwise
+/// kernels) — strong per-kernel performance, no cross-op fusion.
+pub fn pytorch_eager(task: &Task, arch: &GpuArch) -> f64 {
+    let mut schedule = Schedule::naive(&task.graph);
+    for g in &mut schedule.groups {
+        let has_contraction = g
+            .nodes
+            .iter()
+            .any(|n| task.graph.nodes[*n].kind.is_contraction());
+        if has_contraction {
+            g.opts.vendor_lib = true;
+        } else {
+            // PyTorch's handwritten elementwise/reduction kernels are
+            // memory-tuned: coalesced, vectorized, occupancy-friendly.
+            g.opts.layout = MemLayout::Coalesced;
+            g.opts.vector_width = 4;
+            g.opts.warp_shuffle_reduction = true;
+            g.opts.regs_per_thread = 32;
+        }
+    }
+    estimate_schedule(arch, &task.graph, &schedule).total_time_s
+}
+
+/// torch.compile analog: eager's per-kernel quality plus elementwise
+/// fusion and dead-code elimination (no algebraic rewrites — the Q18
+/// double-logsumexp survives, which is why the paper's agent beats it
+/// there by 20×).
+pub fn torch_compile(task: &Task, arch: &GpuArch) -> f64 {
+    let mut cand = Candidate::naive(task);
+    // DCE only (no algebraic simplification).
+    while let Some(gi) = Technique::DeadCodeElimination.applicable_anywhere(&cand) {
+        match apply::apply(Technique::DeadCodeElimination, &cand, gi) {
+            Ok(c) => cand = c,
+            Err(_) => break,
+        }
+    }
+    // Fuse maximal elementwise chains (not across contractions — inductor
+    // epilogue fusion is modeled conservatively).
+    loop {
+        let mut fused_any = false;
+        let mut a = 0;
+        while a + 1 < cand.schedule.groups.len() {
+            let all_ew = |gi: usize| {
+                cand.schedule.groups[gi]
+                    .nodes
+                    .iter()
+                    .all(|n| cand.full.nodes[*n].kind.is_elementwise())
+            };
+            if all_ew(a) && all_ew(a + 1) && cand.schedule.can_fuse(&cand.full, a, a + 1) {
+                cand.schedule.fuse(a, a + 1);
+                fused_any = true;
+            } else {
+                a += 1;
+            }
+        }
+        if !fused_any {
+            break;
+        }
+    }
+    for g in &mut cand.schedule.groups {
+        let has_contraction = g
+            .nodes
+            .iter()
+            .any(|n| cand.full.nodes[*n].kind.is_contraction());
+        if has_contraction {
+            g.opts.vendor_lib = true;
+        } else {
+            g.opts.layout = MemLayout::Coalesced;
+            g.opts.vector_width = 4;
+            g.opts.warp_shuffle_reduction = true;
+            g.opts.regs_per_thread = 32;
+        }
+    }
+    estimate_schedule(arch, &cand.full, &cand.schedule).total_time_s
+}
+
+/// Both references at once.
+pub fn baseline_times(task: &Task, arch: &GpuArch) -> BaselineTimes {
+    BaselineTimes {
+        eager_s: pytorch_eager(task, arch),
+        compiled_s: torch_compile(task, arch),
+    }
+}
+
+/// IREE analog (§4.8): a static ML compiler with (a) frontend op-coverage
+/// failures (the paper hit 42/400 torch-mlir lowering failures ≈10.5%)
+/// and (b) no access to NVIDIA vendor libraries — decent generic tiling,
+/// but well behind cuBLAS/cuDNN on this hardware.
+///
+/// Returns `None` on a (deterministic, task-keyed) compilation failure.
+pub fn iree(task: &Task, arch: &GpuArch) -> Option<f64> {
+    // Deterministic ~10% failure, keyed by task id (stable across runs,
+    // like a fixed unimplemented-op list).
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in task.id.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    if h % 10 == 0 {
+        return None; // torch.aten.<something> lowering unimplemented
+    }
+    let mut cand = Candidate::naive(task);
+    // Generic LLVMGPU pipeline: fuse elementwise consumers, tile
+    // contractions modestly, coalesce. No vendor libs, no tensor cores
+    // (the paper notes IREE's NVIDIA path is not its optimization focus).
+    while let Some(gi) = Technique::DeadCodeElimination.applicable_anywhere(&cand) {
+        match apply::apply(Technique::DeadCodeElimination, &cand, gi) {
+            Ok(c) => cand = c,
+            Err(_) => break,
+        }
+    }
+    let mut a = 0;
+    while a + 1 < cand.schedule.groups.len() {
+        if cand.schedule.can_fuse(&cand.full, a, a + 1) {
+            let next_is_ew = cand.schedule.groups[a + 1]
+                .nodes
+                .iter()
+                .all(|n| cand.full.nodes[*n].kind.is_elementwise());
+            if next_is_ew {
+                cand.schedule.fuse(a, a + 1);
+                continue;
+            }
+        }
+        a += 1;
+    }
+    for g in &mut cand.schedule.groups {
+        let has_contraction = g
+            .nodes
+            .iter()
+            .any(|n| cand.full.nodes[*n].kind.is_contraction());
+        g.opts.layout = MemLayout::Coalesced;
+        if has_contraction {
+            g.opts.tiling = Tiling::Shared { tile: 32 };
+            g.opts.unroll = 4;
+        }
+        g.launch.block = 128; // generic pick, not NVIDIA-tuned
+        let total: usize = g
+            .nodes
+            .iter()
+            .map(|n| cand.full.nodes[*n].shape.numel())
+            .max()
+            .unwrap_or(1);
+        g.launch.grid = total.div_ceil(g.launch.block).max(1);
+    }
+    Some(estimate_schedule(arch, &cand.full, &cand.schedule).total_time_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn eager_beats_naive_cuda_heavily_on_gemm() {
+        let suite = Suite::full();
+        let task = suite.by_id("L1/02_matmul_large").unwrap();
+        let arch = GpuArch::h100();
+        let naive = estimate_schedule(
+            &arch,
+            &task.graph,
+            &Schedule::naive(&task.graph),
+        )
+        .total_time_s;
+        let eager = pytorch_eager(task, &arch);
+        assert!(
+            naive / eager > 10.0,
+            "naive/eager = {:.1} (paper: naive CUDA up to 100x slower)",
+            naive / eager
+        );
+    }
+
+    #[test]
+    fn compile_at_least_as_good_as_eager_on_chains() {
+        let suite = Suite::full();
+        let arch = GpuArch::a100();
+        for id in ["L2/12_scale_tanh_clip_chain", "L2/01_gemm_bias_relu", "L3/01_lenet5"] {
+            let task = suite.by_id(id).unwrap();
+            let t = baseline_times(task, &arch);
+            assert!(
+                t.compiled_s <= t.eager_s * 1.001,
+                "{id}: compile {:.2e} vs eager {:.2e}",
+                t.compiled_s,
+                t.eager_s
+            );
+        }
+        // And strictly better where fusion matters.
+        let chain = suite.by_id("L2/12_scale_tanh_clip_chain").unwrap();
+        let t = baseline_times(chain, &arch);
+        assert!(t.compiled_s < t.eager_s * 0.7);
+    }
+
+    #[test]
+    fn iree_much_slower_than_pytorch_on_average() {
+        // Paper Table 3: IREE geomean ≈ 0.27x of the PyTorch baseline.
+        let suite = Suite::full();
+        let arch = GpuArch::a100();
+        let mut ratios = Vec::new();
+        for task in suite.of_level(crate::tasks::Level::L1) {
+            if let Some(t_iree) = iree(task, &arch) {
+                let base = baseline_times(task, &arch).best_s();
+                ratios.push(base / t_iree);
+            }
+        }
+        let gm = crate::util::stats::geomean(&ratios);
+        assert!(gm < 0.8, "IREE relative perf {gm:.2} should be well below 1");
+        assert!(gm > 0.02, "IREE relative perf {gm:.2} implausibly low");
+    }
+
+    #[test]
+    fn iree_fails_deterministically_on_some_tasks() {
+        let suite = Suite::full();
+        let arch = GpuArch::a6000();
+        let fails: Vec<&str> = suite
+            .tasks
+            .iter()
+            .filter(|t| iree(t, &arch).is_none())
+            .map(|t| t.id.as_str())
+            .collect();
+        assert!(!fails.is_empty(), "some tasks must fail to compile");
+        assert!(fails.len() < suite.tasks.len() / 4, "too many failures");
+        // Determinism.
+        let fails2: Vec<&str> = suite
+            .tasks
+            .iter()
+            .filter(|t| iree(t, &arch).is_none())
+            .map(|t| t.id.as_str())
+            .collect();
+        assert_eq!(fails, fails2);
+    }
+
+    #[test]
+    fn q18_survives_torch_compile_unsimplified() {
+        // torch.compile must NOT remove the double logsumexp — that gap is
+        // the paper's 20x headline on Q18.
+        let suite = Suite::full();
+        let task = suite.by_id("L2/18_linear_sum_logsumexp2").unwrap();
+        let arch = GpuArch::h100();
+        let t = baseline_times(task, &arch);
+        // Simplified+optimized agent kernel: strictly faster than both.
+        let mut cand = Candidate::naive(task);
+        cand = apply::simplify_fixpoint(&cand);
+        for g in &mut cand.schedule.groups {
+            g.opts.vendor_lib = true;
+        }
+        let agent = estimate_schedule(&arch, &cand.full, &cand.schedule).total_time_s;
+        assert!(agent < t.best_s(), "agent {:.2e} vs best {:.2e}", agent, t.best_s());
+    }
+}

@@ -1,0 +1,509 @@
+//! Command-line interface (hand-rolled: the offline registry has no
+//! clap). Subcommands:
+//!
+//! - `experiment <name|all> [--quick] [--seed N] [--out DIR]`
+//! - `optimize --task <id> [--gpu NAME] [--trajectories N] [--steps N]
+//!            [--vendor] [--kb PATH] [--save-kb PATH] [--seed N]`
+//! - `suite --level <L1|L2|L3> [--gpu NAME] [--quick] [--seed N]`
+//! - `calibrate [--iters N]` — PJRT anchor measurement
+//! - `kb <init|inspect> --path PATH`
+//! - `list` — tasks, experiments, GPUs
+//! - `version`
+
+use crate::baselines;
+use crate::experiments::{self, Ctx};
+use crate::gpu::GpuArch;
+use crate::icrl::{self, IcrlConfig};
+use crate::kb::{persist, KnowledgeBase};
+use crate::runtime;
+use crate::tasks::{Level, Suite};
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed flag map: `--key value` and bare `--switch` both supported.
+pub struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> u64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+pub const USAGE: &str = "\
+kernelblaster — continual cross-task kernel optimization via MAIC-RL
+
+USAGE:
+  kernelblaster experiment <name|all> [--quick] [--seed N] [--out DIR]
+  kernelblaster run --config run.json    # config-file launcher
+  kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
+                         [--vendor] [--kb PATH] [--save-kb PATH] [--seed N]
+  kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
+  kernelblaster calibrate [--iters N]
+  kernelblaster kb <init|inspect> --path PATH
+  kernelblaster list
+  kernelblaster version
+
+Experiments (paper artifact regenerators — see DESIGN.md §6):
+  table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
+  fig19 ablation_mem minimal_agent
+";
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = Args::parse(argv);
+    match args.pos(0) {
+        Some("experiment") => cmd_experiment(&args),
+        Some("run") => cmd_run(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("suite") => cmd_suite(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("kb") => cmd_kb(&args),
+        Some("list") => cmd_list(),
+        Some("version") => {
+            println!("kernelblaster {}", env!("CARGO_PKG_VERSION"));
+            0
+        }
+        _ => {
+            eprint!("{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let Some(name) = args.pos(1) else {
+        eprintln!("experiment: missing name (try `kernelblaster list`)");
+        return 2;
+    };
+    let ctx = Ctx::new(args.has("quick"), args.u64_flag("seed", 42));
+    let out_dir = PathBuf::from(args.flag("out").unwrap_or("results"));
+    let runs: Vec<(&str, fn(&Ctx) -> experiments::Report)> = if name == "all" {
+        experiments::registry()
+    } else {
+        match experiments::by_name(name) {
+            Some(f) => vec![(name, f)],
+            None => {
+                eprintln!("unknown experiment '{name}' (try `kernelblaster list`)");
+                return 2;
+            }
+        }
+    };
+    for (n, f) in runs {
+        eprintln!("running experiment {n}{} ...", if ctx.quick { " (quick)" } else { "" });
+        let report = f(&ctx);
+        print!("{}", report.render());
+        match report.write_csvs(&out_dir) {
+            Ok(files) => {
+                for p in files {
+                    eprintln!("wrote {}", p.display());
+                }
+            }
+            Err(e) => eprintln!("warning: CSV write failed: {e}"),
+        }
+    }
+    0
+}
+
+/// Config-file launcher: run the tasks named in a RunConfig (or the
+/// whole suite) and print a summary. The resolved config is archived
+/// beside the results for reproducibility.
+fn cmd_run(args: &Args) -> i32 {
+    let Some(path) = args.flag("config") else {
+        eprintln!("run: need --config FILE (see config::RunConfig)");
+        return 2;
+    };
+    let cfg = match crate::config::RunConfig::load(Path::new(path)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 1;
+        }
+    };
+    let arch = cfg.resolve_arch().expect("validated at load");
+    let suite = Suite::full();
+    let tasks: Vec<&crate::tasks::Task> = if cfg.tasks.is_empty() {
+        suite.tasks.iter().collect()
+    } else {
+        let mut selected = Vec::new();
+        for id in &cfg.tasks {
+            match suite.by_id(id) {
+                Some(t) => selected.push(t),
+                None => {
+                    eprintln!("unknown task '{id}' in config");
+                    return 2;
+                }
+            }
+        }
+        selected
+    };
+    let mut kb = match &cfg.kb_load {
+        Some(p) => match persist::load(Path::new(p)) {
+            Ok(kb) => kb,
+            Err(e) => {
+                eprintln!("failed to load KB from {p}: {e}");
+                return 1;
+            }
+        },
+        None => KnowledgeBase::empty(),
+    };
+    let runs = icrl::run_suite(&tasks, &arch, &mut kb, &cfg.icrl);
+    let mut t = Table::new(&["task", "valid", "vs naive", "vs PyTorch", "tokens"]);
+    let mut scores = Vec::new();
+    for (task, r) in tasks.iter().zip(&runs) {
+        let base = baselines::baseline_times(task, &arch).best_s();
+        scores.push(crate::metrics::TaskScore {
+            valid: r.valid,
+            speedup: base / r.best_time_s,
+        });
+        t.add_row(vec![
+            r.task_id.clone(),
+            r.valid.to_string(),
+            format!("{:.2}x", r.speedup_vs_naive()),
+            format!("{:.2}x", base / r.best_time_s),
+            r.tokens.total().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let s = crate::metrics::summarize(&scores);
+    println!(
+        "geomean vs PyTorch: {:.3}x | valid {:.0}% | KB {} states",
+        s.summary.geomean,
+        s.valid_rate * 100.0,
+        kb.states.len()
+    );
+    if let Some(p) = &cfg.kb_save {
+        if let Err(e) = persist::save(&kb, Path::new(p)) {
+            eprintln!("failed to save KB: {e}");
+            return 1;
+        }
+        eprintln!("saved KB to {p}");
+    }
+    0
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    let suite = Suite::full();
+    let Some(task_id) = args.flag("task") else {
+        eprintln!("optimize: missing --task (try `kernelblaster list`)");
+        return 2;
+    };
+    let Some(task) = suite.by_id(task_id) else {
+        eprintln!("unknown task '{task_id}'");
+        return 2;
+    };
+    let Some(arch) = GpuArch::by_name(args.flag("gpu").unwrap_or("H100")) else {
+        eprintln!("unknown GPU (known: A6000 A100 H100 L40S)");
+        return 2;
+    };
+    let mut kb = match args.flag("kb") {
+        Some(path) => match persist::load(Path::new(path)) {
+            Ok(kb) => kb,
+            Err(e) => {
+                eprintln!("failed to load KB from {path}: {e}");
+                return 1;
+            }
+        },
+        None => KnowledgeBase::empty(),
+    };
+    let mut cfg = IcrlConfig {
+        trajectories: args.usize_flag("trajectories", 10),
+        rollout_steps: args.usize_flag("steps", 10),
+        seed: args.u64_flag("seed", 42),
+        ..Default::default()
+    };
+    cfg.harness.allow_vendor = args.has("vendor");
+    let run = icrl::optimize_task(task, &arch, &mut kb, &cfg, 0);
+    let baselines = baselines::baseline_times(task, &arch);
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.add_row(vec!["task".into(), run.task_id.clone()]);
+    t.add_row(vec!["gpu".into(), arch.name.to_string()]);
+    t.add_row(vec!["valid".into(), run.valid.to_string()]);
+    t.add_row(vec![
+        "naive CUDA time".into(),
+        crate::util::human_duration(run.naive_time_s),
+    ]);
+    t.add_row(vec![
+        "best time".into(),
+        crate::util::human_duration(run.best_time_s),
+    ]);
+    t.add_row(vec![
+        "PyTorch best".into(),
+        crate::util::human_duration(baselines.best_s()),
+    ]);
+    t.add_row(vec![
+        "speedup vs naive".into(),
+        format!("{:.2}x", run.speedup_vs_naive()),
+    ]);
+    t.add_row(vec![
+        "speedup vs PyTorch".into(),
+        format!("{:.2}x", baselines.best_s() / run.best_time_s),
+    ]);
+    t.add_row(vec!["tokens".into(), run.tokens.total().to_string()]);
+    t.add_row(vec!["states visited".into(), run.states_visited.to_string()]);
+    t.add_row(vec![
+        "techniques applied".into(),
+        run.best.applied.join(", "),
+    ]);
+    print!("{}", t.render());
+
+    if let Some(path) = args.flag("save-kb") {
+        if let Err(e) = persist::save(&kb, Path::new(path)) {
+            eprintln!("failed to save KB: {e}");
+            return 1;
+        }
+        eprintln!("saved KB ({}) to {path}", crate::util::human_bytes(kb.size_bytes()));
+    }
+    0
+}
+
+fn cmd_suite(args: &Args) -> i32 {
+    let level = match args.flag("level") {
+        Some("L1") => Level::L1,
+        Some("L2") => Level::L2,
+        Some("L3") => Level::L3,
+        _ => {
+            eprintln!("suite: need --level L1|L2|L3");
+            return 2;
+        }
+    };
+    let Some(arch) = GpuArch::by_name(args.flag("gpu").unwrap_or("H100")) else {
+        eprintln!("unknown GPU (known: A6000 A100 H100 L40S)");
+        return 2;
+    };
+    let ctx = Ctx::new(args.has("quick"), args.u64_flag("seed", 42));
+    let mut kb = KnowledgeBase::empty();
+    let (runs, scores) = experiments::run_ours(&ctx, &arch, level, args.has("vendor"), &mut kb);
+    let mut t = Table::new(&["task", "valid", "vs naive", "vs PyTorch", "tokens"]);
+    for (r, s) in runs.iter().zip(&scores) {
+        t.add_row(vec![
+            r.task_id.clone(),
+            r.valid.to_string(),
+            format!("{:.2}x", r.speedup_vs_naive()),
+            format!("{:.2}x", s.speedup),
+            r.tokens.total().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let summary = crate::metrics::summarize(&scores);
+    println!(
+        "geomean vs PyTorch: {:.3}x | valid rate: {:.0}% | KB: {} states, {}",
+        summary.summary.geomean,
+        summary.valid_rate * 100.0,
+        kb.states.len(),
+        crate::util::human_bytes(kb.size_bytes())
+    );
+    0
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let rt = match runtime::Runtime::new(runtime::default_artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT init failed: {e}");
+            return 1;
+        }
+    };
+    eprintln!(
+        "PJRT platform: {} | artifacts: {:?}",
+        rt.platform(),
+        rt.available()
+    );
+    match runtime::anchors::calibrate(&rt, 2, args.usize_flag("iters", 10)) {
+        Ok(results) => {
+            print!("{}", runtime::anchors::render(&results));
+            0
+        }
+        Err(e) => {
+            eprintln!("calibration failed: {e} (run `make artifacts` first)");
+            1
+        }
+    }
+}
+
+fn cmd_kb(args: &Args) -> i32 {
+    let Some(path) = args.flag("path") else {
+        eprintln!("kb: need --path FILE");
+        return 2;
+    };
+    match args.pos(1) {
+        Some("init") => {
+            let kb = KnowledgeBase::seed_priors();
+            if let Err(e) = persist::save(&kb, Path::new(path)) {
+                eprintln!("save failed: {e}");
+                return 1;
+            }
+            println!(
+                "initialized KB with {} seed states ({}) at {path}",
+                kb.states.len(),
+                crate::util::human_bytes(kb.size_bytes())
+            );
+            0
+        }
+        Some("inspect") => match persist::load(Path::new(path)) {
+            Ok(kb) => {
+                let mut t = Table::new(&["state", "visits", "opts", "best technique", "gain"]);
+                for s in &kb.states {
+                    let best = s
+                        .opts
+                        .iter()
+                        .max_by(|a, b| a.expected_gain.partial_cmp(&b.expected_gain).unwrap());
+                    t.add_row(vec![
+                        s.sig.id(),
+                        s.visits.to_string(),
+                        s.opts.len().to_string(),
+                        best.map(|o| o.technique.name().to_string())
+                            .unwrap_or_else(|| "-".into()),
+                        best.map(|o| format!("{:.2}", o.expected_gain))
+                            .unwrap_or_else(|| "-".into()),
+                    ]);
+                }
+                print!("{}", t.render());
+                println!(
+                    "{} states | {} recorded attempts | {} on disk",
+                    kb.states.len(),
+                    kb.total_attempts(),
+                    crate::util::human_bytes(kb.size_bytes())
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("load failed: {e}");
+                1
+            }
+        },
+        _ => {
+            eprintln!("kb: need init|inspect");
+            2
+        }
+    }
+}
+
+fn cmd_list() -> i32 {
+    println!("experiments:");
+    for (name, _) in experiments::registry() {
+        println!("  {name}");
+    }
+    println!("\nGPUs: A6000 A100 H100 L40S");
+    println!("\ntasks:");
+    for t in Suite::full().tasks {
+        println!("  {}", t.id);
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn args_parsing() {
+        let a = Args::parse(&argv("optimize --task L1/01_x --vendor --steps 5"));
+        assert_eq!(a.pos(0), Some("optimize"));
+        assert_eq!(a.flag("task"), Some("L1/01_x"));
+        assert!(a.has("vendor"));
+        assert_eq!(a.usize_flag("steps", 10), 5);
+        assert_eq!(a.usize_flag("missing", 7), 7);
+    }
+
+    #[test]
+    fn unknown_command_usage() {
+        assert_eq!(run(&argv("frobnicate")), 2);
+        assert_eq!(run(&[]), 2);
+    }
+
+    #[test]
+    fn version_and_list_ok() {
+        assert_eq!(run(&argv("version")), 0);
+        assert_eq!(run(&argv("list")), 0);
+    }
+
+    #[test]
+    fn optimize_requires_valid_task() {
+        assert_eq!(run(&argv("optimize")), 2);
+        assert_eq!(run(&argv("optimize --task bogus")), 2);
+        assert_eq!(run(&argv("optimize --task L1/01_matmul_square --gpu V100")), 2);
+    }
+
+    #[test]
+    fn optimize_quick_end_to_end() {
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn kb_init_and_inspect_roundtrip() {
+        let dir = std::env::temp_dir().join("kb_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kb.json");
+        let path_s = path.to_str().unwrap();
+        assert_eq!(run(&argv(&format!("kb init --path {path_s}"))), 0);
+        assert_eq!(run(&argv(&format!("kb inspect --path {path_s}"))), 0);
+        assert_eq!(run(&argv("kb inspect --path /nonexistent/x.json")), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert_eq!(run(&argv("experiment nope")), 2);
+        assert_eq!(run(&argv("experiment")), 2);
+    }
+}

@@ -1,0 +1,251 @@
+//! Run configuration: JSON config files + CLI overrides.
+//!
+//! A deployment-grade launcher needs reproducible run configs. This
+//! module defines the full configuration surface of a KernelBlaster run
+//! (driver hyperparameters, agent failure model, harness policy, GPU
+//! target, KB paths) with JSON (de)serialization, so experiments are
+//! launchable as `kernelblaster optimize --config run.json` and the exact
+//! configuration can be archived next to the results.
+
+use crate::agents::AgentConfig;
+use crate::gpu::GpuArch;
+use crate::harness::HarnessConfig;
+use crate::icrl::{IcrlConfig, KbMode};
+use crate::util::json::{Json, JsonObj};
+use std::path::Path;
+
+/// Complete run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub gpu: String,
+    pub icrl: IcrlConfig,
+    /// Optional KB to load before the run.
+    pub kb_load: Option<String>,
+    /// Optional path to save the KB after the run.
+    pub kb_save: Option<String>,
+    /// Task id filter (empty = whole suite).
+    pub tasks: Vec<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            gpu: "H100".to_string(),
+            icrl: IcrlConfig::default(),
+            kb_load: None,
+            kb_save: None,
+            tasks: Vec::new(),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+impl RunConfig {
+    pub fn resolve_arch(&self) -> Result<GpuArch, ConfigError> {
+        GpuArch::by_name(&self.gpu)
+            .ok_or_else(|| ConfigError::Invalid(format!("unknown GPU '{}'", self.gpu)))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = JsonObj::new();
+        root.set("gpu", self.gpu.as_str());
+        let mut icrl = JsonObj::new();
+        icrl.set("trajectories", self.icrl.trajectories);
+        icrl.set("rollout_steps", self.icrl.rollout_steps);
+        icrl.set("top_k", self.icrl.top_k);
+        icrl.set("seed", self.icrl.seed);
+        icrl.set("cycles_only", self.icrl.cycles_only);
+        icrl.set(
+            "kb_mode",
+            match self.icrl.kb_mode {
+                KbMode::Persistent => "persistent",
+                KbMode::EphemeralPerTask => "ephemeral",
+            },
+        );
+        root.set("icrl", icrl);
+        let mut agent = JsonObj::new();
+        agent.set("state_misclassify_rate", self.icrl.agent.state_misclassify_rate);
+        agent.set("lowering_bug_rate", self.icrl.agent.lowering_bug_rate);
+        agent.set("lowering_fail_rate", self.icrl.agent.lowering_fail_rate);
+        agent.set("reward_hack_rate", self.icrl.agent.reward_hack_rate);
+        agent.set("retry_limit", self.icrl.agent.retry_limit);
+        root.set("agent", agent);
+        let mut harness = JsonObj::new();
+        harness.set("verify_seeds", self.icrl.harness.verify_seeds);
+        harness.set("noise_sigma", self.icrl.harness.noise_sigma);
+        harness.set("allow_vendor", self.icrl.harness.allow_vendor);
+        root.set("harness", harness);
+        if let Some(p) = &self.kb_load {
+            root.set("kb_load", p.as_str());
+        }
+        if let Some(p) = &self.kb_save {
+            root.set("kb_save", p.as_str());
+        }
+        if !self.tasks.is_empty() {
+            root.set(
+                "tasks",
+                Json::Arr(self.tasks.iter().map(|t| Json::Str(t.clone())).collect()),
+            );
+        }
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig, ConfigError> {
+        let mut cfg = RunConfig::default();
+        if let Some(gpu) = j.get("gpu").and_then(Json::as_str) {
+            cfg.gpu = gpu.to_string();
+        }
+        if let Some(icrl) = j.get("icrl") {
+            let d = IcrlConfig::default();
+            cfg.icrl.trajectories = icrl
+                .get("trajectories")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.trajectories);
+            cfg.icrl.rollout_steps = icrl
+                .get("rollout_steps")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.rollout_steps);
+            cfg.icrl.top_k = icrl.get("top_k").and_then(Json::as_usize).unwrap_or(d.top_k);
+            cfg.icrl.seed = icrl
+                .get("seed")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64)
+                .unwrap_or(d.seed);
+            cfg.icrl.cycles_only = icrl
+                .get("cycles_only")
+                .and_then(Json::as_bool)
+                .unwrap_or(false);
+            cfg.icrl.kb_mode = match icrl.get("kb_mode").and_then(Json::as_str) {
+                Some("ephemeral") => KbMode::EphemeralPerTask,
+                Some("persistent") | None => KbMode::Persistent,
+                Some(other) => {
+                    return Err(ConfigError::Invalid(format!("kb_mode '{other}'")))
+                }
+            };
+        }
+        if let Some(agent) = j.get("agent") {
+            let d = AgentConfig::default();
+            let f = |k: &str, dv: f64| agent.get(k).and_then(Json::as_f64).unwrap_or(dv);
+            cfg.icrl.agent = AgentConfig {
+                state_misclassify_rate: f("state_misclassify_rate", d.state_misclassify_rate),
+                lowering_bug_rate: f("lowering_bug_rate", d.lowering_bug_rate),
+                lowering_fail_rate: f("lowering_fail_rate", d.lowering_fail_rate),
+                reward_hack_rate: f("reward_hack_rate", d.reward_hack_rate),
+                retry_limit: agent
+                    .get("retry_limit")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.retry_limit),
+            };
+        }
+        if let Some(h) = j.get("harness") {
+            let d = HarnessConfig::default();
+            cfg.icrl.harness = HarnessConfig {
+                verify_seeds: h
+                    .get("verify_seeds")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.verify_seeds),
+                noise_sigma: h
+                    .get("noise_sigma")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.noise_sigma),
+                allow_vendor: h
+                    .get("allow_vendor")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(d.allow_vendor),
+                ..d
+            };
+        }
+        cfg.kb_load = j.get("kb_load").and_then(Json::as_str).map(String::from);
+        cfg.kb_save = j.get("kb_save").and_then(Json::as_str).map(String::from);
+        if let Some(tasks) = j.get("tasks").and_then(Json::as_arr) {
+            cfg.tasks = tasks
+                .iter()
+                .filter_map(|t| t.as_str().map(String::from))
+                .collect();
+        }
+        // Validation.
+        if cfg.icrl.trajectories == 0 || cfg.icrl.rollout_steps == 0 || cfg.icrl.top_k == 0 {
+            return Err(ConfigError::Invalid(
+                "trajectories/rollout_steps/top_k must be positive".into(),
+            ));
+        }
+        cfg.resolve_arch()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ConfigError> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips() {
+        let cfg = RunConfig::default();
+        let j = cfg.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back.gpu, cfg.gpu);
+        assert_eq!(back.icrl.trajectories, cfg.icrl.trajectories);
+        assert_eq!(back.icrl.rollout_steps, cfg.icrl.rollout_steps);
+        assert_eq!(back.icrl.agent.retry_limit, cfg.icrl.agent.retry_limit);
+        assert!(
+            (back.icrl.harness.noise_sigma - cfg.icrl.harness.noise_sigma).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let j = Json::parse(r#"{"gpu":"L40S","icrl":{"trajectories":4}}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.gpu, "L40S");
+        assert_eq!(cfg.icrl.trajectories, 4);
+        assert_eq!(cfg.icrl.rollout_steps, IcrlConfig::default().rollout_steps);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let j = Json::parse(r#"{"gpu":"V100"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"icrl":{"trajectories":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"icrl":{"kb_mode":"weird"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.tasks = vec!["L2/18_linear_sum_logsumexp2".into()];
+        cfg.kb_save = Some("/tmp/kb.json".into());
+        cfg.icrl.harness.allow_vendor = true;
+        let dir = std::env::temp_dir().join("kb_config_test");
+        let path = dir.join("run.json");
+        cfg.save(&path).unwrap();
+        let back = RunConfig::load(&path).unwrap();
+        assert_eq!(back.tasks, cfg.tasks);
+        assert_eq!(back.kb_save, cfg.kb_save);
+        assert!(back.icrl.harness.allow_vendor);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,154 @@
+//! Cost experiments: Fig. 10 (speedup per tokens consumed) and the §6.4
+//! minimal-agent comparison.
+
+use super::{Ctx, Report, Section};
+use crate::baselines::agentic;
+use crate::gpu::GpuArch;
+use crate::harness::HarnessConfig;
+use crate::icrl;
+use crate::kb::KnowledgeBase;
+use crate::tasks::Level;
+use crate::util::stats;
+use crate::util::table::{fnum, fpct, Table};
+
+/// Fig. 10: scatter of speedup-over-naive-CUDA vs total tokens consumed,
+/// one point per task (L1 + L2, A6000 — the paper's cost study GPU).
+pub fn fig10(ctx: &Ctx) -> Report {
+    let arch = GpuArch::a6000();
+    let mut kb = KnowledgeBase::empty();
+    let (runs1, _) = super::run_ours(ctx, &arch, Level::L1, false, &mut kb);
+    let (runs2, _) = super::run_ours(ctx, &arch, Level::L2, false, &mut kb);
+    let mut t = Table::new(&["task", "tokens", "speedup_vs_naive"]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for r in runs1.iter().chain(&runs2) {
+        t.add_row(vec![
+            r.task_id.clone(),
+            r.tokens.total().to_string(),
+            fnum(r.speedup_vs_naive(), 3),
+        ]);
+        xs.push(r.tokens.total() as f64);
+        ys.push(r.speedup_vs_naive().ln()); // log-speedup correlation
+    }
+    let corr = stats::pearson(&xs, &ys);
+    Report {
+        name: "fig10".into(),
+        sections: vec![Section {
+            title: "Speedup vs tokens consumed (A6000, L1+L2)".into(),
+            table: t,
+            plot: None,
+            notes: vec![format!(
+                "Pearson corr(tokens, log speedup) = {corr:.3} — paper reports a \
+                 positive correlation"
+            )],
+        }],
+    }
+}
+
+/// §6.4: the minimal agent vs KernelBlaster — token cost ratio, perf per
+/// token, and win rate.
+pub fn minimal_agent(ctx: &Ctx) -> Report {
+    let arch = GpuArch::h100();
+    let hcfg = HarnessConfig::default();
+    let cfg = ctx.icrl_cfg(false);
+    let mut kb = KnowledgeBase::empty();
+
+    let mut rows = Vec::new();
+    let mut ours_tokens = 0usize;
+    let mut min_tokens = 0usize;
+    let mut ours_wins = 0usize;
+    let mut total = 0usize;
+    let mut ours_perf_per_tok = Vec::new();
+    let mut min_perf_per_tok = Vec::new();
+
+    for level in [Level::L1, Level::L2] {
+        for task in ctx.tasks(level) {
+            let ours = icrl::optimize_task(task, &arch, &mut kb, &cfg, total as u64);
+            let min = agentic::minimal_agent(
+                task,
+                &arch,
+                &hcfg,
+                cfg.trajectories,
+                cfg.rollout_steps,
+                ctx.seed,
+            );
+            total += 1;
+            ours_tokens += ours.tokens.total();
+            min_tokens += min.tokens.total();
+            if ours.best_time_s <= min.best_time_s {
+                ours_wins += 1;
+            }
+            ours_perf_per_tok.push(ours.speedup_vs_naive() / ours.tokens.total() as f64);
+            min_perf_per_tok.push(min.speedup_vs_naive() / min.tokens.total() as f64);
+            rows.push(vec![
+                task.id.clone(),
+                ours.tokens.total().to_string(),
+                min.tokens.total().to_string(),
+                fnum(ours.speedup_vs_naive(), 2),
+                fnum(min.speedup_vs_naive(), 2),
+            ]);
+        }
+    }
+
+    let mut t = Table::new(&[
+        "task",
+        "ours tokens",
+        "minimal tokens",
+        "ours speedup",
+        "minimal speedup",
+    ]);
+    for r in rows {
+        t.add_row(r);
+    }
+    let token_ratio = min_tokens as f64 / ours_tokens.max(1) as f64;
+    let ppt_ratio = stats::mean(&min_perf_per_tok) / stats::mean(&ours_perf_per_tok);
+    Report {
+        name: "minimal_agent".into(),
+        sections: vec![Section {
+            title: "Minimal agent vs KernelBlaster (§6.4)".into(),
+            table: t,
+            plot: None,
+            notes: vec![
+                format!(
+                    "minimal/ours token ratio = {token_ratio:.2}x (paper: 2.4x)"
+                ),
+                format!(
+                    "minimal perf-per-token = {ppt_ratio:.3}x of ours (paper: 0.379x)"
+                ),
+                format!(
+                    "ours better or equal in {} of cases (paper: 71%)",
+                    fpct(ours_wins as f64 / total.max(1) as f64)
+                ),
+            ],
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_quick_positive_correlation_noted() {
+        let ctx = Ctx::new(true, 11);
+        let rep = fig10(&ctx);
+        assert!(rep.sections[0].notes[0].contains("Pearson"));
+        assert!(rep.sections[0].table.n_rows() >= 10);
+    }
+
+    #[test]
+    fn minimal_agent_quick_token_ratio_above_one() {
+        let ctx = Ctx::new(true, 11);
+        let rep = minimal_agent(&ctx);
+        let note = &rep.sections[0].notes[0];
+        let ratio: f64 = note
+            .split('=')
+            .nth(1)
+            .unwrap()
+            .trim()
+            .trim_end_matches("x (paper: 2.4x)")
+            .parse()
+            .unwrap();
+        assert!(ratio > 1.0, "minimal agent must cost more tokens: {ratio}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Optimization-usage distribution experiments: Fig. 12 (applications by
+//! state), Figs. 13/14 (successes and attempts per technique), and the
+//! §5 trajectory analyses (states per kernel, prep→compute transitions).
+
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{StepLog, TaskRun};
+use crate::kb::KnowledgeBase;
+use crate::tasks::Level;
+use crate::util::stats;
+use crate::util::table::{bar_chart, fnum, fpct, Table};
+use std::collections::BTreeMap;
+
+fn collect_runs(ctx: &Ctx) -> Vec<TaskRun> {
+    // Paper Fig. 12: A6000, Level 1 + Level 2.
+    let arch = GpuArch::a6000();
+    let mut kb = KnowledgeBase::empty();
+    let (mut runs, _) = super::run_ours(ctx, &arch, Level::L1, false, &mut kb);
+    let (runs2, _) = super::run_ours(ctx, &arch, Level::L2, false, &mut kb);
+    runs.extend(runs2);
+    runs
+}
+
+fn all_steps(runs: &[TaskRun]) -> Vec<&StepLog> {
+    runs.iter().flat_map(|r| &r.steps).collect()
+}
+
+/// Fig. 12: distribution of optimization applications grouped by
+/// performance state.
+pub fn fig12(ctx: &Ctx) -> Report {
+    let runs = collect_runs(ctx);
+    let steps = all_steps(&runs);
+    let mut by_state: BTreeMap<String, usize> = BTreeMap::new();
+    for s in &steps {
+        *by_state.entry(s.state.id()).or_insert(0) += 1;
+    }
+    let total: usize = by_state.values().sum();
+    let mut rows: Vec<(&String, &usize)> = by_state.iter().collect();
+    rows.sort_by(|a, b| b.1.cmp(a.1));
+    let mut t = Table::new(&["state", "applications", "share"]);
+    for (state, n) in &rows {
+        t.add_row(vec![
+            (*state).clone(),
+            n.to_string(),
+            fpct(**n as f64 / total as f64),
+        ]);
+    }
+    let max_share = rows
+        .first()
+        .map(|(_, n)| **n as f64 / total as f64)
+        .unwrap_or(0.0);
+    let avg_states = stats::mean(
+        &runs
+            .iter()
+            .map(|r| r.states_visited as f64)
+            .collect::<Vec<_>>(),
+    );
+    let chart: Vec<(String, f64)> = rows
+        .iter()
+        .take(12)
+        .map(|(s, n)| ((*s).clone(), **n as f64))
+        .collect();
+    Report {
+        name: "fig12".into(),
+        sections: vec![Section {
+            title: format!("Distribution of {total} optimization applications by state (A6000)"),
+            table: t,
+            plot: Some(bar_chart(&chart, 40)),
+            notes: vec![
+                format!(
+                    "max state share = {} (paper: no state exceeds 20%)",
+                    fpct(max_share)
+                ),
+                format!(
+                    "average states reached per kernel = {avg_states:.1} (paper: ≈5.5)"
+                ),
+            ],
+        }],
+    }
+}
+
+/// Figs. 13/14: per-technique successful applications, and attempts
+/// stacked success/fail. Success = valid and gain > 1.01 (the paper's
+/// "negligible speedup" cut).
+pub fn fig13_14(ctx: &Ctx) -> Report {
+    let runs = collect_runs(ctx);
+    let steps = all_steps(&runs);
+    let mut per_tech: BTreeMap<&'static str, (usize, usize)> = BTreeMap::new(); // (success, attempts)
+    for s in &steps {
+        let e = per_tech.entry(s.technique.name()).or_insert((0, 0));
+        e.1 += 1;
+        if s.valid && s.gain > 1.01 {
+            e.0 += 1;
+        }
+    }
+    let mut rows: Vec<(&&str, &(usize, usize))> = per_tech.iter().collect();
+    rows.sort_by(|a, b| b.1 .1.cmp(&a.1 .1));
+    let mut t = Table::new(&["technique", "attempts", "successes", "failures", "success rate"]);
+    for (tech, (succ, att)) in &rows {
+        t.add_row(vec![
+            tech.to_string(),
+            att.to_string(),
+            succ.to_string(),
+            (att - succ).to_string(),
+            fpct(*succ as f64 / (*att).max(1) as f64),
+        ]);
+    }
+    let chart: Vec<(String, f64)> = rows
+        .iter()
+        .take(14)
+        .map(|(tech, (_, att))| (tech.to_string(), *att as f64))
+        .collect();
+    // §5 transition analysis over chosen actions.
+    let transitions = transition_analysis(&runs);
+    Report {
+        name: "fig13_14".into(),
+        sections: vec![
+            Section {
+                title: "Attempts and successes per technique (Figs. 13/14)".into(),
+                table: t,
+                plot: Some(bar_chart(&chart, 40)),
+                notes: vec![
+                    "Paper: heavy-tailed attempts; successes concentrate in broadly \
+                     applicable local techniques; high-frequency techniques also carry \
+                     substantial failure mass"
+                        .to_string(),
+                ],
+            },
+            transitions,
+        ],
+    }
+}
+
+/// §5: median gain of chosen prep→compute transitions.
+fn transition_analysis(runs: &[TaskRun]) -> Section {
+    let mut pair_gains: BTreeMap<(&'static str, &'static str), Vec<f64>> = BTreeMap::new();
+    for r in runs {
+        // Chosen actions in (trajectory, step) order.
+        let mut chosen: Vec<&StepLog> = r.steps.iter().filter(|s| s.chosen).collect();
+        chosen.sort_by_key(|s| (s.trajectory, s.step));
+        for w in chosen.windows(2) {
+            if w[0].trajectory == w[1].trajectory && w[1].gain > 0.0 {
+                pair_gains
+                    .entry((w[0].technique.name(), w[1].technique.name()))
+                    .or_default()
+                    .push(w[1].gain);
+            }
+        }
+    }
+    let mut rows: Vec<((&str, &str), f64, usize)> = pair_gains
+        .iter()
+        .filter(|(_, v)| v.len() >= 2)
+        .map(|((a, b), v)| ((*a, *b), stats::median(v), v.len()))
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut t = Table::new(&["prep -> compute", "median step gain", "n"]);
+    for ((a, b), med, n) in rows.iter().take(15) {
+        t.add_row(vec![format!("{a} -> {b}"), fnum(*med, 3), n.to_string()]);
+    }
+    Section {
+        title: "Transition analysis: median gain of the SECOND technique (§5)".into(),
+        table: t,
+        plot: None,
+        notes: vec![
+            "Paper: shared_memory_tiling -> tensor_core_utilization ≈2.41x median; \
+             layout -> fusion ≈1.95x; control-flow -> tensor-core ≈1.42x"
+                .to_string(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_quick_states_bounded() {
+        let ctx = Ctx::new(true, 5);
+        let rep = fig12(&ctx);
+        assert!(rep.sections[0].table.n_rows() >= 2);
+        assert!(rep.sections[0].notes[0].contains("max state share"));
+    }
+
+    #[test]
+    fn fig13_14_quick_has_transitions() {
+        let ctx = Ctx::new(true, 5);
+        let rep = fig13_14(&ctx);
+        assert_eq!(rep.sections.len(), 2);
+        assert!(rep.sections[0].table.n_rows() >= 5);
+        // transition table may be sparse in quick mode but must render.
+        let _ = rep.render();
+    }
+}

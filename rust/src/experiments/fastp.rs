@@ -1,0 +1,148 @@
+//! fast_p experiments: Fig. 7 (H100 L1/L2 vs PyTorch), Fig. 8 (L40S,
+//! Ours+cuDNN vs AI CUDA Engineer), Fig. 9 (four GPUs vs naive CUDA).
+
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::kb::KnowledgeBase;
+use crate::metrics::{self, TaskScore};
+use crate::tasks::Level;
+use crate::util::table::{fnum, line_plot, Table};
+
+fn curve_section(
+    title: &str,
+    curves: Vec<(String, Vec<TaskScore>)>,
+    notes: Vec<String>,
+) -> Section {
+    let thresholds = metrics::default_thresholds();
+    let mut t = Table::new(
+        &std::iter::once("r").chain(curves.iter().map(|(n, _)| n.as_str()))
+            .collect::<Vec<_>>(),
+    );
+    let series: Vec<(String, Vec<f64>)> = curves
+        .iter()
+        .map(|(name, scores)| {
+            (
+                name.clone(),
+                thresholds.iter().map(|p| metrics::fast_p(scores, *p)).collect(),
+            )
+        })
+        .collect();
+    for (i, p) in thresholds.iter().enumerate() {
+        let mut row = vec![fnum(*p, 2)];
+        for (_, ys) in &series {
+            row.push(fnum(ys[i], 3));
+        }
+        t.add_row(row);
+    }
+    let plot = line_plot(&thresholds, &series, 12, 56);
+    Section {
+        title: title.to_string(),
+        table: t,
+        plot: Some(plot),
+        notes,
+    }
+}
+
+/// Fig. 7: fast_p(r) on H100 for Level 1 and Level 2 (vs PyTorch-best).
+pub fn fig7(ctx: &Ctx) -> Report {
+    let arch = GpuArch::h100();
+    let mut kb = KnowledgeBase::empty();
+    let (_, l1) = super::run_ours(ctx, &arch, Level::L1, false, &mut kb);
+    let (_, l2) = super::run_ours(ctx, &arch, Level::L2, false, &mut kb);
+    Report {
+        name: "fig7".into(),
+        sections: vec![curve_section(
+            "fast_p(r) on H100 vs PyTorch",
+            vec![("Ours-L1".to_string(), l1), ("Ours-L2".to_string(), l2)],
+            vec![
+                "Paper: >50% of kernels beat PyTorch-best on both levels; L2 shows the \
+                 fatter moderate-to-high-speedup tail"
+                    .to_string(),
+            ],
+        )],
+    }
+}
+
+/// Fig. 8: fast_p on L40S — AI CUDA Engineer vs Ours(+cuDNN), L1 and L2.
+pub fn fig8(ctx: &Ctx) -> Report {
+    let arch = GpuArch::l40s();
+    let mut sections = Vec::new();
+    for level in [Level::L1, Level::L2] {
+        let cudaeng = super::run_cudaeng(ctx, &arch, level);
+        let mut kb = KnowledgeBase::empty();
+        let (_, ours_vendor) = super::run_ours(ctx, &arch, level, true, &mut kb);
+        sections.push(curve_section(
+            &format!("fast_p(r) on L40S — {}", level.name()),
+            vec![
+                ("CUDAEng".to_string(), cudaeng),
+                ("Ours+cuDNN".to_string(), ours_vendor),
+            ],
+            vec!["Ours+cuDNN should dominate CUDAEng across r (paper Fig. 8)".to_string()],
+        ));
+    }
+    Report {
+        name: "fig8".into(),
+        sections,
+    }
+}
+
+/// Fig. 9: fast_p vs the naive-CUDA starting point across the four GPU
+/// architectures, L1 + L2 combined.
+pub fn fig9(ctx: &Ctx) -> Report {
+    let mut curves = Vec::new();
+    for arch in GpuArch::all() {
+        let mut kb = KnowledgeBase::empty();
+        let (runs1, _) = super::run_ours(ctx, &arch, Level::L1, false, &mut kb);
+        let (runs2, _) = super::run_ours(ctx, &arch, Level::L2, false, &mut kb);
+        let scores: Vec<TaskScore> = runs1
+            .iter()
+            .chain(&runs2)
+            .map(|r| TaskScore {
+                valid: r.valid,
+                speedup: r.speedup_vs_naive(),
+            })
+            .collect();
+        curves.push((arch.name.to_string(), scores));
+    }
+    Report {
+        name: "fig9".into(),
+        sections: vec![curve_section(
+            "fast_p(r) vs naive CUDA across GPUs (L1+L2)",
+            curves,
+            vec![
+                "Gains over naive CUDA are large (paper: up to 100x) since the naive \
+                 kernels lack tiling/vectorization"
+                    .to_string(),
+            ],
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_quick() {
+        let ctx = Ctx::new(true, 3);
+        let rep = fig7(&ctx);
+        assert_eq!(rep.sections.len(), 1);
+        let csv = rep.sections[0].table.to_csv();
+        assert!(csv.starts_with("r,Ours-L1,Ours-L2"));
+        // fast_p at r=0.5 should be positive for a working optimizer.
+        let second_line = csv.lines().nth(1).unwrap();
+        let v: f64 = second_line.split(',').nth(1).unwrap().parse().unwrap();
+        assert!(v > 0.0, "fast_p(0.5) = {v}");
+    }
+
+    #[test]
+    fn fig9_has_four_archs() {
+        let ctx = Ctx::new(true, 3);
+        let rep = fig9(&ctx);
+        let header = rep.sections[0].table.to_csv();
+        assert!(header.contains("A6000"));
+        assert!(header.contains("A100"));
+        assert!(header.contains("H100"));
+        assert!(header.contains("L40S"));
+    }
+}

@@ -1,0 +1,70 @@
+//! Fig. 19 / §6.3: profiling-fidelity ablation — the full NCU-detail
+//! agent vs an agent that sees only elapsed cycles.
+
+use super::{Ctx, Report, Section};
+use crate::baselines;
+use crate::gpu::GpuArch;
+use crate::icrl::{self};
+use crate::kb::KnowledgeBase;
+use crate::tasks::Level;
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+
+pub fn fig19(ctx: &Ctx) -> Report {
+    let arch = GpuArch::h100();
+    let tasks = ctx.tasks(Level::L2);
+
+    let cfg_full = ctx.icrl_cfg(false);
+    let mut kb1 = KnowledgeBase::empty();
+    let full_runs = icrl::run_suite(&tasks, &arch, &mut kb1, &cfg_full);
+
+    let mut cfg_cycles = ctx.icrl_cfg(false);
+    cfg_cycles.cycles_only = true;
+    let mut kb2 = KnowledgeBase::empty();
+    let cycles_runs = icrl::run_suite(&tasks, &arch, &mut kb2, &cfg_cycles);
+
+    let mut t = Table::new(&["task", "full NCU speedup", "cycles-only speedup"]);
+    let mut full_sp = Vec::new();
+    let mut cyc_sp = Vec::new();
+    for ((task, f), c) in tasks.iter().zip(&full_runs).zip(&cycles_runs) {
+        let base = baselines::baseline_times(task, &arch).best_s();
+        let fv = base / f.best_time_s;
+        let cv = base / c.best_time_s;
+        if f.valid && c.valid {
+            full_sp.push(fv);
+            cyc_sp.push(cv);
+        }
+        t.add_row(vec![task.id.clone(), fnum(fv, 3), fnum(cv, 3)]);
+    }
+    let g_full = stats::geomean(&full_sp);
+    let g_cyc = stats::geomean(&cyc_sp);
+    Report {
+        name: "fig19".into(),
+        sections: vec![Section {
+            title: "Profiling fidelity: full NCU detail vs cycles-only (H100, L2)".into(),
+            table: t,
+            plot: None,
+            notes: vec![format!(
+                "geomean vs PyTorch: full {g_full:.2}x vs cycles-only {g_cyc:.2}x \
+                 (paper §6.3: 1.57x vs 1.22x on Level 2)"
+            )],
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig19_report_structure() {
+        // The directional claim (full NCU detail > cycles-only) holds at
+        // the paper's full scale and is recorded by the bench harness in
+        // EXPERIMENTS.md; at quick scale the comparison is sampling-noise
+        // dominated, so this test asserts structure only.
+        let ctx = Ctx::new(true, 31);
+        let rep = fig19(&ctx);
+        assert!(rep.sections[0].notes[0].contains("cycles-only"));
+        assert!(rep.sections[0].table.n_rows() >= 3);
+    }
+}

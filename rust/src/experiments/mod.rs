@@ -1,0 +1,242 @@
+//! Experiment registry: one regenerator per paper table/figure.
+//!
+//! Every entry produces a [`Report`] — human-readable tables/plots plus
+//! machine-readable CSVs — from the same code paths the CLI and the bench
+//! harness use. The mapping to the paper's artifacts is in DESIGN.md §6.
+
+pub mod cost;
+pub mod distribution;
+pub mod fastp;
+pub mod fidelity;
+pub mod hyperparams;
+pub mod learning;
+pub mod table3;
+
+use crate::baselines;
+use crate::gpu::GpuArch;
+use crate::harness::HarnessConfig;
+use crate::icrl::{self, IcrlConfig, TaskRun};
+use crate::kb::KnowledgeBase;
+use crate::metrics::TaskScore;
+use crate::tasks::{Level, Suite, Task};
+use crate::util::table::Table;
+use std::path::Path;
+
+/// One rendered experiment section (a table or a data series).
+pub struct Section {
+    pub title: String,
+    pub table: Table,
+    /// Optional ASCII plot rendered beneath the table.
+    pub plot: Option<String>,
+    pub notes: Vec<String>,
+}
+
+/// A full experiment report.
+pub struct Report {
+    pub name: String,
+    pub sections: Vec<Section>,
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        let mut out = format!("##### experiment: {} #####\n\n", self.name);
+        for s in &self.sections {
+            out.push_str(&format!("--- {} ---\n", s.title));
+            out.push_str(&s.table.render());
+            if let Some(p) = &s.plot {
+                out.push_str(p);
+            }
+            for n in &s.notes {
+                out.push_str(&format!("note: {n}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write one CSV per section into `dir` (created if needed).
+    pub fn write_csvs(&self, dir: &Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut written = Vec::new();
+        for (i, s) in self.sections.iter().enumerate() {
+            let slug: String = s
+                .title
+                .to_lowercase()
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect();
+            let path = dir.join(format!("{}_{i}_{slug}.csv", self.name));
+            std::fs::write(&path, s.table.to_csv())?;
+            written.push(path);
+        }
+        Ok(written)
+    }
+}
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub suite: Suite,
+    /// Quick mode: reduced trajectories/steps for smoke tests; full mode
+    /// reproduces the paper's Table-2 hyperparameters (10 × 10).
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(quick: bool, seed: u64) -> Self {
+        Self {
+            suite: Suite::full(),
+            quick,
+            seed,
+        }
+    }
+
+    /// Driver config for "Ours".
+    pub fn icrl_cfg(&self, allow_vendor: bool) -> IcrlConfig {
+        IcrlConfig {
+            trajectories: if self.quick { 3 } else { 10 },
+            rollout_steps: if self.quick { 5 } else { 10 },
+            harness: HarnessConfig {
+                allow_vendor,
+                ..Default::default()
+            },
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    /// Tasks of a level, optionally subsetted in quick mode.
+    pub fn tasks(&self, level: Level) -> Vec<&Task> {
+        let all = self.suite.of_level(level);
+        if self.quick {
+            all.into_iter().step_by(3).collect()
+        } else {
+            all
+        }
+    }
+}
+
+/// Run "Ours" on a level; returns runs plus speedups vs the PyTorch-best
+/// reference (Table 3's 1.0×).
+pub fn run_ours(
+    ctx: &Ctx,
+    arch: &GpuArch,
+    level: Level,
+    allow_vendor: bool,
+    kb: &mut KnowledgeBase,
+) -> (Vec<TaskRun>, Vec<TaskScore>) {
+    let tasks = ctx.tasks(level);
+    let cfg = ctx.icrl_cfg(allow_vendor);
+    let runs = icrl::run_suite(&tasks, arch, kb, &cfg);
+    let scores = tasks
+        .iter()
+        .zip(&runs)
+        .map(|(t, r)| TaskScore {
+            valid: r.valid,
+            speedup: baselines::baseline_times(t, arch).best_s() / r.best_time_s,
+        })
+        .collect();
+    (runs, scores)
+}
+
+/// AI CUDA Engineer scores vs PyTorch-best.
+pub fn run_cudaeng(ctx: &Ctx, arch: &GpuArch, level: Level) -> Vec<TaskScore> {
+    let hcfg = HarnessConfig::default();
+    ctx.tasks(level)
+        .iter()
+        .map(|t| {
+            let run = baselines::agentic::cuda_engineer(t, arch, &hcfg, ctx.seed);
+            TaskScore {
+                valid: run.valid,
+                speedup: baselines::baseline_times(t, arch).best_s() / run.best_time_s,
+            }
+        })
+        .collect()
+}
+
+/// IREE scores vs PyTorch-best (compile failures are invalid).
+pub fn run_iree(ctx: &Ctx, arch: &GpuArch, level: Level) -> Vec<TaskScore> {
+    ctx.tasks(level)
+        .iter()
+        .map(|t| match baselines::iree(t, arch) {
+            Some(time) => TaskScore {
+                valid: true,
+                speedup: baselines::baseline_times(t, arch).best_s() / time,
+            },
+            None => TaskScore {
+                valid: false,
+                speedup: 0.0,
+            },
+        })
+        .collect()
+}
+
+/// The experiment registry: name → runner. Names match DESIGN.md §6.
+pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
+    vec![
+        ("table3", table3::run as fn(&Ctx) -> Report),
+        ("fig7", fastp::fig7),
+        ("fig8", fastp::fig8),
+        ("fig9", fastp::fig9),
+        ("fig10", cost::fig10),
+        ("fig11", table3::fig11),
+        ("fig12", distribution::fig12),
+        ("fig13_14", distribution::fig13_14),
+        ("fig15_16", learning::fig15_16),
+        ("fig17", hyperparams::fig17),
+        ("fig18", hyperparams::fig18),
+        ("fig19", fidelity::fig19),
+        ("ablation_mem", learning::ablation_mem),
+        ("minimal_agent", cost::minimal_agent),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<fn(&Ctx) -> Report> {
+    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique() {
+        let mut names: Vec<&str> = registry().iter().map(|(n, _)| *n).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        assert!(by_name("table3").is_some());
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn quick_ctx_subsets_tasks() {
+        let q = Ctx::new(true, 1);
+        let f = Ctx::new(false, 1);
+        assert!(q.tasks(Level::L1).len() < f.tasks(Level::L1).len());
+        assert_eq!(f.tasks(Level::L1).len(), 20);
+    }
+
+    #[test]
+    fn report_renders_and_writes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["x".into(), "1".into()]);
+        let r = Report {
+            name: "smoke".into(),
+            sections: vec![Section {
+                title: "Demo".into(),
+                table: t,
+                plot: None,
+                notes: vec!["hello".into()],
+            }],
+        };
+        let text = r.render();
+        assert!(text.contains("experiment: smoke"));
+        assert!(text.contains("note: hello"));
+        let dir = std::env::temp_dir().join("kb_exp_test");
+        let files = r.write_csvs(&dir).unwrap();
+        assert_eq!(files.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,199 @@
+//! GPU architecture models for the four devices the paper evaluates:
+//! A6000 and A100 (Ampere), H100 (Hopper), L40S (Ada Lovelace).
+//!
+//! Parameters are the public datasheet numbers (SM count, clocks, DRAM
+//! bandwidth, peak FP32/tensor throughput, shared-memory and register
+//! capacities). The performance model ([`super::model`]) consumes these;
+//! cross-architecture differences are what make the paper's Fig. 16
+//! (knowledge-base transfer across GPUs) and Fig. 9 (per-arch fast_p
+//! curves) meaningful in this reproduction.
+
+/// GPU generation (drives architecture-conditional optimizations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuGen {
+    Ampere,
+    Hopper,
+    Ada,
+}
+
+/// Static architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuArch {
+    pub name: &'static str,
+    pub gen: GpuGen,
+    pub sms: usize,
+    /// Boost clock in GHz.
+    pub clock_ghz: f64,
+    /// DRAM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Peak FP32 throughput, TFLOP/s (CUDA cores).
+    pub fp32_tflops: f64,
+    /// Peak FP16/BF16 tensor-core throughput, TFLOP/s (dense).
+    pub tc_tflops: f64,
+    /// Shared memory per SM, bytes.
+    pub smem_per_sm: usize,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: usize,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// L2 cache, bytes.
+    pub l2_bytes: usize,
+    /// Kernel launch overhead, microseconds.
+    pub launch_overhead_us: f64,
+    /// SFU (transcendental) throughput as a fraction of FP32.
+    pub sfu_ratio: f64,
+}
+
+impl GpuArch {
+    pub fn a6000() -> Self {
+        GpuArch {
+            name: "A6000",
+            gen: GpuGen::Ampere,
+            sms: 84,
+            clock_ghz: 1.80,
+            mem_bw_gbs: 768.0,
+            fp32_tflops: 38.7,
+            tc_tflops: 155.0,
+            smem_per_sm: 100 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 1536,
+            l2_bytes: 6 * 1024 * 1024,
+            launch_overhead_us: 4.0,
+            sfu_ratio: 0.25,
+        }
+    }
+
+    pub fn a100() -> Self {
+        GpuArch {
+            name: "A100",
+            gen: GpuGen::Ampere,
+            sms: 108,
+            clock_ghz: 1.41,
+            mem_bw_gbs: 1555.0,
+            fp32_tflops: 19.5,
+            tc_tflops: 312.0,
+            smem_per_sm: 164 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            l2_bytes: 40 * 1024 * 1024,
+            launch_overhead_us: 4.0,
+            sfu_ratio: 0.25,
+        }
+    }
+
+    pub fn h100() -> Self {
+        GpuArch {
+            name: "H100",
+            gen: GpuGen::Hopper,
+            sms: 132,
+            clock_ghz: 1.83,
+            mem_bw_gbs: 3350.0,
+            fp32_tflops: 66.9,
+            tc_tflops: 989.0,
+            smem_per_sm: 228 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            l2_bytes: 50 * 1024 * 1024,
+            launch_overhead_us: 3.5,
+            sfu_ratio: 0.25,
+        }
+    }
+
+    pub fn l40s() -> Self {
+        GpuArch {
+            name: "L40S",
+            gen: GpuGen::Ada,
+            sms: 142,
+            clock_ghz: 2.52,
+            mem_bw_gbs: 864.0,
+            fp32_tflops: 91.6,
+            tc_tflops: 366.0,
+            smem_per_sm: 100 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 1536,
+            l2_bytes: 96 * 1024 * 1024,
+            launch_overhead_us: 4.0,
+            sfu_ratio: 0.25,
+        }
+    }
+
+    /// All four evaluation targets, paper order.
+    pub fn all() -> Vec<GpuArch> {
+        vec![Self::a6000(), Self::a100(), Self::h100(), Self::l40s()]
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuArch> {
+        match name.to_ascii_uppercase().as_str() {
+            "A6000" => Some(Self::a6000()),
+            "A100" => Some(Self::a100()),
+            "H100" => Some(Self::h100()),
+            "L40S" => Some(Self::l40s()),
+            _ => None,
+        }
+    }
+
+    /// Peak FLOP/s (not TFLOP/s) for the scalar pipeline.
+    pub fn fp32_flops(&self) -> f64 {
+        self.fp32_tflops * 1e12
+    }
+
+    /// Peak FLOP/s for tensor cores.
+    pub fn tc_flops(&self) -> f64 {
+        self.tc_tflops * 1e12
+    }
+
+    /// DRAM bandwidth in bytes/s.
+    pub fn mem_bw_bytes(&self) -> f64 {
+        self.mem_bw_gbs * 1e9
+    }
+
+    /// Ridge point of the FP32 roofline (FLOP/byte).
+    pub fn ridge_fp32(&self) -> f64 {
+        self.fp32_flops() / self.mem_bw_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_archs_registered() {
+        let all = GpuArch::all();
+        assert_eq!(all.len(), 4);
+        let names: Vec<&str> = all.iter().map(|a| a.name).collect();
+        assert_eq!(names, vec!["A6000", "A100", "H100", "L40S"]);
+    }
+
+    #[test]
+    fn lookup_by_name_case_insensitive() {
+        assert_eq!(GpuArch::by_name("h100").unwrap().name, "H100");
+        assert_eq!(GpuArch::by_name("L40s").unwrap().name, "L40S");
+        assert!(GpuArch::by_name("V100").is_none());
+    }
+
+    #[test]
+    fn h100_dominates_bandwidth_and_tc() {
+        let h = GpuArch::h100();
+        for other in [GpuArch::a6000(), GpuArch::a100(), GpuArch::l40s()] {
+            assert!(h.mem_bw_gbs > other.mem_bw_gbs);
+            assert!(h.tc_tflops > other.tc_tflops);
+        }
+    }
+
+    #[test]
+    fn ridge_points_sane() {
+        // FP32 ridge between ~10 and ~110 FLOP/byte for these parts.
+        for a in GpuArch::all() {
+            let r = a.ridge_fp32();
+            assert!((5.0..150.0).contains(&r), "{}: ridge={r}", a.name);
+        }
+    }
+
+    #[test]
+    fn generations() {
+        assert_eq!(GpuArch::a100().gen, GpuGen::Ampere);
+        assert_eq!(GpuArch::h100().gen, GpuGen::Hopper);
+        assert_eq!(GpuArch::l40s().gen, GpuGen::Ada);
+    }
+}

@@ -1,0 +1,11 @@
+//! GPU substrate: architecture models, the analytical performance model,
+//! and the NCU-like profiler. See DESIGN.md §1 for why these substitute
+//! for the paper's physical GPUs + Nsight Compute.
+
+pub mod arch;
+pub mod model;
+pub mod profiler;
+
+pub use arch::{GpuArch, GpuGen};
+pub use model::{estimate_group, estimate_schedule, LaunchEstimate, ScheduleEstimate};
+pub use profiler::{profile, Bottleneck, KernelProfile, NcuReport};

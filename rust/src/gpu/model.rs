@@ -1,0 +1,436 @@
+//! Analytical GPU performance model.
+//!
+//! Estimates per-launch execution time for a (graph, schedule) pair on a
+//! [`GpuArch`]: a roofline core (memory vs compute bound) extended with the
+//! effects every optimization technique in the catalog manipulates —
+//! operand-reuse/tiling traffic multipliers, access-pattern bandwidth
+//! efficiency, ILP/unroll compute efficiency, tensor-core throughput,
+//! occupancy limits from registers/shared-memory/threads, wave utilization
+//! for small grids, SFU throughput for transcendentals, and fixed launch
+//! overhead.
+//!
+//! The model does not chase absolute silicon accuracy; it reproduces the
+//! *structure* the paper's agents learn from: which resource saturates,
+//! what the profiler reports, and how schedule changes move the bottleneck.
+
+use super::arch::GpuArch;
+use crate::kir::cost::{self, OpCost};
+use crate::kir::schedule::{FusionGroup, MemLayout, Schedule, Tiling};
+use crate::kir::{KernelGraph, OpKind};
+
+/// Detailed timing estimate for one kernel launch (fusion group).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchEstimate {
+    /// Total wall time, seconds (execution + launch overhead).
+    pub time_s: f64,
+    /// Elapsed device cycles (time × clock), the paper's §4.1 metric.
+    pub cycles: f64,
+    pub mem_time_s: f64,
+    pub compute_time_s: f64,
+    pub launch_overhead_s: f64,
+    /// Achieved occupancy (0..1].
+    pub occupancy: f64,
+    /// Wave utilization (how full the device is, 0..1].
+    pub utilization: f64,
+    /// DRAM bandwidth utilization during execution (0..1).
+    pub dram_util: f64,
+    /// Compute-pipe utilization during execution (0..1).
+    pub compute_util: f64,
+    /// Fraction of compute time spent on SFU transcendentals.
+    pub transcendental_share: f64,
+    pub cost: OpCost,
+}
+
+/// Estimate one fusion group.
+pub fn estimate_group(arch: &GpuArch, graph: &KernelGraph, group: &FusionGroup) -> LaunchEstimate {
+    let cost = cost::group_cost(graph, group);
+    let opts = &group.opts;
+
+    // ---------------- occupancy ----------------
+    let block = group.launch.block.max(1);
+    let scratch = cost::group_scratch_bytes(graph, group).max(1);
+    let by_smem = (arch.smem_per_sm / scratch).max(if scratch > arch.smem_per_sm { 0 } else { 1 });
+    let regs_per_block = opts.regs_per_thread.max(16) * block;
+    let by_regs = (arch.regs_per_sm / regs_per_block.max(1)).max(1);
+    let by_threads = (arch.max_threads_per_sm / block.min(arch.max_threads_per_sm)).max(1);
+    let blocks_per_sm = by_smem.min(by_regs).min(by_threads).max(1);
+    let occupancy =
+        ((blocks_per_sm * block) as f64 / arch.max_threads_per_sm as f64).clamp(0.05, 1.0);
+
+    // ---------------- wave utilization ----------------
+    let total_threads = (group.launch.grid * block) as f64;
+    let resident = (arch.sms as f64) * arch.max_threads_per_sm as f64 * occupancy;
+    let utilization = (total_threads / resident).clamp(0.02, 1.0);
+
+    // ---------------- contraction reuse / traffic ----------------
+    let k_dim = contraction_k(graph, group);
+    let traffic_mult = if opts.vendor_lib {
+        1.1
+    } else if let Some(k) = k_dim {
+        // Untiled contractions re-read operands once per output element;
+        // caches recover some locality, but effective traffic still scales
+        // with K. Shared-memory tiling recovers reuse ∝ tile width. This is
+        // the dominant effect behind the paper's "naive CUDA up to 100×
+        // slower" observation (§4.6).
+        let naive_mult = (k as f64 / 8.0).clamp(1.0, 64.0);
+        match opts.tiling {
+            Tiling::None => naive_mult,
+            Tiling::Shared { tile } => {
+                let reuse = (tile as f64 / 4.0).max(1.0);
+                (naive_mult / reuse).clamp(1.0, naive_mult)
+            }
+        }
+    } else {
+        1.0
+    };
+
+    // ---------------- bandwidth efficiency ----------------
+    let layout_eff = if opts.vendor_lib {
+        0.85
+    } else {
+        match opts.layout {
+            MemLayout::Naive => 0.35,
+            MemLayout::Coalesced => 0.70,
+            MemLayout::Padded => 0.80,
+        }
+    };
+    let vec_bonus = 1.0 + 0.10 * (opts.vector_width.max(1) as f64).log2();
+    let coarsen_bonus = 1.0 + 0.04 * ((opts.coarsening.min(8) as f64) - 1.0).max(0.0);
+    let db_bonus = if opts.double_buffer { 1.08 } else { 1.0 };
+    let bw_eff = (layout_eff * vec_bonus * coarsen_bonus * db_bonus).clamp(0.05, 0.92);
+    // Latency hiding: low occupancy starves the memory pipe.
+    let occ_bw = occupancy.sqrt();
+
+    let bytes_eff = cost.bytes_total() * traffic_mult;
+    // DRAM bandwidth saturates with ~16 active SMs (memory parallelism is
+    // not per-SM); compute throughput, by contrast, scales with the full
+    // wave utilization below.
+    let active_sms = group.launch.grid.min(arch.sms) as f64;
+    let bw_parallel = (active_sms / 16.0).clamp(1.0 / 16.0, 1.0);
+    let mem_time = bytes_eff / (arch.mem_bw_bytes() * bw_eff * occ_bw * bw_parallel);
+
+    // ---------------- compute efficiency ----------------
+    let tc_active = opts.tensor_core && k_dim.is_some();
+    let (peak_flops, compute_eff) = if opts.vendor_lib {
+        // Vendor libraries pick tensor cores when dtype permits.
+        let has_16bit = group
+            .nodes
+            .iter()
+            .any(|n| graph.nodes[*n].dtype != crate::kir::DType::F32);
+        if has_16bit {
+            (arch.tc_flops(), 0.62)
+        } else {
+            (arch.fp32_flops(), 0.80)
+        }
+    } else if tc_active {
+        let tile_bonus: f64 = match opts.tiling {
+            Tiling::Shared { tile } if tile >= 64 => 0.20,
+            Tiling::Shared { tile } if tile >= 32 => 0.12,
+            Tiling::Shared { .. } => 0.05,
+            Tiling::None => 0.0,
+        };
+        let ilp_bonus = if opts.ilp >= 4 { 0.08 } else { 0.0 };
+        let db = if opts.double_buffer { 0.08 } else { 0.0 };
+        let pad = if opts.layout == MemLayout::Padded { 0.05 } else { 0.0 };
+        (arch.tc_flops(), (0.22 + tile_bonus + ilp_bonus + db + pad).min(0.65))
+    } else {
+        // Scalar-pipeline efficiency is multiplicative in the classic
+        // levers: naive one-thread-per-output code issues ~6% of peak
+        // (memory-latency-serialized); smem staging, independent
+        // accumulators (ILP), unrolling, coarsening and branchless inner
+        // loops each recover a factor, saturating near 75% of peak —
+        // the shape of a hand-tuned SGEMM progression.
+        let base = 0.06;
+        let tiling_mult = match opts.tiling {
+            Tiling::Shared { tile } if tile >= 64 => 3.0,
+            Tiling::Shared { .. } => 2.2,
+            Tiling::None => 1.0,
+        };
+        let ilp_mult = 1.0 + 0.5 * (opts.ilp.clamp(1, 8) as f64).log2();
+        let unroll_mult = if opts.unroll >= 4 { 1.2 } else { 1.0 };
+        let coarsen_mult = 1.0 + 0.10 * ((opts.coarsening.min(8) as f64) - 1.0).max(0.0);
+        let scf_mult = if opts.simplified_control_flow { 1.15 } else { 1.0 };
+        let ws_mult = if opts.warp_shuffle_reduction { 1.10 } else { 1.0 };
+        (
+            arch.fp32_flops(),
+            (base * tiling_mult * ilp_mult * unroll_mult * coarsen_mult * scf_mult * ws_mult)
+                .min(0.75),
+        )
+    };
+
+    let tf = cost.transcendental_frac;
+    let sfu_mult = if opts.fast_math { 2.0 } else { 1.0 };
+    let sfu_flops = arch.fp32_flops() * arch.sfu_ratio * sfu_mult;
+    let main_time = cost.flops * (1.0 - tf) / (peak_flops * compute_eff);
+    let trans_time = cost.flops * tf / (sfu_flops * compute_eff.max(0.3));
+    let compute_time = (main_time + trans_time) / utilization;
+    let transcendental_share = if compute_time > 0.0 {
+        (trans_time / utilization) / compute_time
+    } else {
+        0.0
+    };
+
+    // ---------------- combine ----------------
+    // Partial overlap of memory and compute (0.85 of the smaller hides).
+    let exec = mem_time.max(compute_time) + 0.15 * mem_time.min(compute_time);
+    // Very low occupancy adds a latency penalty even on the critical path.
+    let exec = if occupancy < 0.25 {
+        exec * (0.25 / occupancy).powf(0.3)
+    } else {
+        exec
+    };
+    let launch_overhead_s = arch.launch_overhead_us * 1e-6;
+    let time_s = exec + launch_overhead_s;
+
+    LaunchEstimate {
+        time_s,
+        cycles: time_s * arch.clock_ghz * 1e9,
+        mem_time_s: mem_time,
+        compute_time_s: compute_time,
+        launch_overhead_s,
+        occupancy,
+        utilization,
+        dram_util: (mem_time / exec).clamp(0.0, 1.0),
+        compute_util: (compute_time / exec).clamp(0.0, 1.0),
+        transcendental_share,
+        cost,
+    }
+}
+
+/// Extract the contraction K dimension if the group contains one (matmul
+/// K, or conv `c_in*kh*kw`). Used for the operand-reuse model.
+pub fn contraction_k(graph: &KernelGraph, group: &FusionGroup) -> Option<usize> {
+    group.nodes.iter().find_map(|&ni| {
+        let node = &graph.nodes[ni];
+        match &node.kind {
+            OpKind::Matmul => Some(graph.shape_of(node.deps[0]).dim(1)),
+            OpKind::Conv2d { .. } => {
+                let w = graph.shape_of(node.deps[1]);
+                Some(w.dim(1) * w.dim(2) * w.dim(3))
+            }
+            _ => None,
+        }
+    })
+}
+
+/// Whole-schedule estimate: per-launch estimates plus totals.
+#[derive(Debug, Clone)]
+pub struct ScheduleEstimate {
+    pub launches: Vec<LaunchEstimate>,
+    pub total_time_s: f64,
+    pub total_cycles: f64,
+}
+
+pub fn estimate_schedule(
+    arch: &GpuArch,
+    graph: &KernelGraph,
+    schedule: &Schedule,
+) -> ScheduleEstimate {
+    let launches: Vec<LaunchEstimate> = schedule
+        .groups
+        .iter()
+        .map(|g| estimate_group(arch, graph, g))
+        .collect();
+    let total_time_s = launches.iter().map(|l| l.time_s).sum();
+    let total_cycles = launches.iter().map(|l| l.cycles).sum();
+    ScheduleEstimate {
+        launches,
+        total_time_s,
+        total_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::schedule::Schedule;
+    use crate::kir::{DType, GraphBuilder, OpKind};
+
+    fn matmul_graph(m: usize, k: usize, n: usize) -> KernelGraph {
+        let mut b = GraphBuilder::new("mm");
+        let x = b.input("x", &[m, k]);
+        let w = b.input("w", &[k, n]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        b.output(mm);
+        b.finish()
+    }
+
+    fn matmul_graph_16bit(m: usize, k: usize, n: usize) -> KernelGraph {
+        let mut b = GraphBuilder::new("mm16");
+        let x = b.input_typed("x", &[m, k], DType::F16);
+        let w = b.input_typed("w", &[k, n], DType::F16);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        b.output(mm);
+        b.finish()
+    }
+
+    #[test]
+    fn tiling_speeds_up_large_matmul() {
+        let arch = GpuArch::a100();
+        let g = matmul_graph(1024, 1024, 1024);
+        let naive = Schedule::naive(&g);
+        let base = estimate_schedule(&arch, &g, &naive).total_time_s;
+        let mut tiled = naive.clone();
+        tiled.groups[0].opts.tiling = Tiling::Shared { tile: 64 };
+        tiled.groups[0].opts.layout = MemLayout::Coalesced;
+        let t = estimate_schedule(&arch, &g, &tiled).total_time_s;
+        assert!(t < base * 0.5, "tiled={t} naive={base}");
+    }
+
+    #[test]
+    fn tensor_core_beats_fp32_on_large_16bit_gemm() {
+        let arch = GpuArch::h100();
+        let g = matmul_graph_16bit(2048, 2048, 2048);
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.tiling = Tiling::Shared { tile: 64 };
+        s.groups[0].opts.layout = MemLayout::Coalesced;
+        let fp32_time = estimate_schedule(&arch, &g, &s).total_time_s;
+        s.groups[0].opts.tensor_core = true;
+        assert!(s.validate(&g).is_ok());
+        let tc_time = estimate_schedule(&arch, &g, &s).total_time_s;
+        assert!(tc_time < fp32_time * 0.6, "tc={tc_time} fp32={fp32_time}");
+    }
+
+    #[test]
+    fn vendor_lib_is_strong_baseline() {
+        let arch = GpuArch::l40s();
+        let g = matmul_graph(512, 512, 512);
+        let naive = Schedule::naive(&g);
+        let base = estimate_schedule(&arch, &g, &naive).total_time_s;
+        let mut vendor = naive.clone();
+        vendor.groups[0].opts.vendor_lib = true;
+        let v = estimate_schedule(&arch, &g, &vendor).total_time_s;
+        assert!(v < base * 0.25, "vendor={v} naive={base}");
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_kernels() {
+        let arch = GpuArch::h100();
+        let g = matmul_graph(4, 4, 4);
+        let s = Schedule::naive(&g);
+        let est = &estimate_schedule(&arch, &g, &s).launches[0];
+        assert!(est.launch_overhead_s / est.time_s > 0.5);
+    }
+
+    #[test]
+    fn fusion_reduces_total_time_on_elementwise_chain() {
+        let arch = GpuArch::a6000();
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input("x", &[1024, 1024]);
+        let a = b.op(OpKind::Relu, &[x]);
+        let c = b.op(OpKind::Scale { c: 2.0 }, &[a]);
+        let d = b.op(OpKind::AddConst { c: 1.0 }, &[c]);
+        b.output(d);
+        let g = b.finish();
+        let naive = Schedule::naive(&g);
+        let base = estimate_schedule(&arch, &g, &naive).total_time_s;
+        let mut fused = naive.clone();
+        fused.fuse(0, 1);
+        fused.fuse(0, 1);
+        assert!(fused.validate(&g).is_ok());
+        let t = estimate_schedule(&arch, &g, &fused).total_time_s;
+        assert!(t < base * 0.6, "fused={t} naive={base}");
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        let arch = GpuArch::a100();
+        let mut b = GraphBuilder::new("ew");
+        let x = b.input("x", &[4096, 4096]);
+        let y = b.op(OpKind::Relu, &[x]);
+        b.output(y);
+        let g = b.finish();
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.layout = MemLayout::Coalesced;
+        let est = &estimate_schedule(&arch, &g, &s).launches[0];
+        assert!(est.mem_time_s > est.compute_time_s * 3.0);
+    }
+
+    #[test]
+    fn big_tiled_matmul_is_compute_bound() {
+        let arch = GpuArch::a6000();
+        let g = matmul_graph(4096, 4096, 4096);
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.tiling = Tiling::Shared { tile: 128 };
+        s.groups[0].opts.layout = MemLayout::Coalesced;
+        s.groups[0].opts.ilp = 8;
+        let est = &estimate_schedule(&arch, &g, &s).launches[0];
+        assert!(est.compute_time_s > est.mem_time_s, "{est:?}");
+    }
+
+    #[test]
+    fn fast_math_helps_transcendental_kernels() {
+        let arch = GpuArch::a100();
+        let mut b = GraphBuilder::new("exp");
+        let x = b.input("x", &[4096, 4096]);
+        let y = b.op(OpKind::Exp, &[x]);
+        b.output(y);
+        let g = b.finish();
+        let s = Schedule::naive(&g);
+        let base = estimate_schedule(&arch, &g, &s).launches[0].compute_time_s;
+        let mut fm = s.clone();
+        fm.groups[0].opts.fast_math = true;
+        let t = estimate_schedule(&arch, &g, &fm).launches[0].compute_time_s;
+        assert!(t < base);
+    }
+
+    #[test]
+    fn excess_registers_reduce_occupancy() {
+        let arch = GpuArch::a100();
+        let g = matmul_graph(1024, 1024, 1024);
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.regs_per_thread = 32;
+        let high_occ = estimate_schedule(&arch, &g, &s).launches[0].occupancy;
+        s.groups[0].opts.regs_per_thread = 255;
+        let low_occ = estimate_schedule(&arch, &g, &s).launches[0].occupancy;
+        assert!(low_occ < high_occ);
+    }
+
+    #[test]
+    fn small_grid_underutilizes() {
+        let arch = GpuArch::h100();
+        let g = matmul_graph(256, 256, 256);
+        let mut s = Schedule::naive(&g);
+        s.groups[0].launch.grid = 1; // one block on a 132-SM part
+        let est = estimate_schedule(&arch, &g, &s);
+        assert!(est.launches[0].utilization < 0.05);
+    }
+
+    #[test]
+    fn cross_arch_ordering_h100_fastest_on_bandwidth_bound() {
+        let mut b = GraphBuilder::new("ew");
+        let x = b.input("x", &[8192, 8192]);
+        let y = b.op(OpKind::Relu, &[x]);
+        b.output(y);
+        let g = b.finish();
+        let s = Schedule::naive(&g);
+        let t_h100 = estimate_schedule(&GpuArch::h100(), &g, &s).total_time_s;
+        let t_a6000 = estimate_schedule(&GpuArch::a6000(), &g, &s).total_time_s;
+        assert!(t_h100 < t_a6000);
+    }
+
+    #[test]
+    fn estimates_deterministic() {
+        let arch = GpuArch::a100();
+        let g = matmul_graph(128, 128, 128);
+        let s = Schedule::naive(&g);
+        let a = estimate_schedule(&arch, &g, &s).total_time_s;
+        let b = estimate_schedule(&arch, &g, &s).total_time_s;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn contraction_k_extraction() {
+        let g = matmul_graph(8, 77, 8);
+        let s = Schedule::naive(&g);
+        assert_eq!(contraction_k(&g, &s.groups[0]), Some(77));
+        let mut b = GraphBuilder::new("c");
+        let x = b.input("x", &[1, 3, 8, 8]);
+        let w = b.input("w", &[4, 3, 5, 5]);
+        let c = b.op(OpKind::Conv2d { stride: 1, pad: 2 }, &[x, w]);
+        b.output(c);
+        let g2 = b.finish();
+        let s2 = Schedule::naive(&g2);
+        assert_eq!(contraction_k(&g2, &s2.groups[0]), Some(75));
+    }
+}

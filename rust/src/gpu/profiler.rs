@@ -1,0 +1,408 @@
+//! NCU-like profiler reports.
+//!
+//! The paper's state extractor consumes "the performance information for
+//! every executed kernel from the 'Details' section of an Nsight Compute
+//! report" (§3). This module renders the performance model's estimates
+//! into that form: per-kernel metrics, a primary/secondary bottleneck
+//! classification, and a stall-source breakdown. Measurement noise is
+//! applied here (profiling replays kernels; readings jitter run to run).
+
+use super::arch::GpuArch;
+use super::model::{self, LaunchEstimate};
+use crate::kir::schedule::Schedule;
+use crate::kir::KernelGraph;
+use crate::util::rng::Rng;
+
+/// Coarse bottleneck classes — the axes of the Knowledge Base's
+/// performance-state taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Bottleneck {
+    /// DRAM bandwidth saturated (long-scoreboard stalls dominate).
+    MemoryBandwidth,
+    /// Poor access pattern: bandwidth wasted on uncoalesced transactions.
+    MemoryLatency,
+    /// FP pipes saturated.
+    ComputeThroughput,
+    /// SFU/transcendental-limited.
+    Transcendental,
+    /// Too few resident warps (low occupancy) to hide latency.
+    Occupancy,
+    /// Grid too small to fill the device.
+    Parallelism,
+    /// Kernel launch overhead dominates.
+    LaunchOverhead,
+}
+
+impl Bottleneck {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bottleneck::MemoryBandwidth => "memory_bandwidth",
+            Bottleneck::MemoryLatency => "memory_latency",
+            Bottleneck::ComputeThroughput => "compute_throughput",
+            Bottleneck::Transcendental => "transcendental",
+            Bottleneck::Occupancy => "occupancy",
+            Bottleneck::Parallelism => "parallelism",
+            Bottleneck::LaunchOverhead => "launch_overhead",
+        }
+    }
+
+    pub fn all() -> [Bottleneck; 7] {
+        [
+            Bottleneck::MemoryBandwidth,
+            Bottleneck::MemoryLatency,
+            Bottleneck::ComputeThroughput,
+            Bottleneck::Transcendental,
+            Bottleneck::Occupancy,
+            Bottleneck::Parallelism,
+            Bottleneck::LaunchOverhead,
+        ]
+    }
+
+    pub fn from_name(name: &str) -> Option<Bottleneck> {
+        Self::all().into_iter().find(|b| b.name() == name)
+    }
+}
+
+/// Per-kernel profile — the "Details" section analog.
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    /// Kernel name (from the source renderer's naming scheme).
+    pub name: String,
+    pub elapsed_cycles: f64,
+    pub time_us: f64,
+    pub dram_util: f64,
+    pub compute_util: f64,
+    pub occupancy: f64,
+    pub utilization: f64,
+    pub grid: usize,
+    pub block: usize,
+    pub flops: f64,
+    pub bytes: f64,
+    pub primary: Bottleneck,
+    pub secondary: Bottleneck,
+    /// Stall breakdown (name, share) summing to ~1.
+    pub stalls: Vec<(&'static str, f64)>,
+}
+
+/// Whole-report: one entry per kernel launch, in execution order (the
+/// paper profiles "all instances of kernels … in the order they were
+/// executed").
+#[derive(Debug, Clone)]
+pub struct NcuReport {
+    pub arch_name: String,
+    pub kernels: Vec<KernelProfile>,
+    pub total_cycles: f64,
+    pub total_time_s: f64,
+}
+
+impl NcuReport {
+    /// Dominant bottleneck across the report, weighted by kernel time.
+    pub fn dominant_bottleneck(&self) -> Bottleneck {
+        let mut weights: Vec<(Bottleneck, f64)> = Vec::new();
+        for k in &self.kernels {
+            match weights.iter_mut().find(|(b, _)| *b == k.primary) {
+                Some((_, w)) => *w += k.time_us,
+                None => weights.push((k.primary, k.time_us)),
+            }
+        }
+        weights
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(b, _)| b)
+            .unwrap_or(Bottleneck::LaunchOverhead)
+    }
+
+    /// Render the "Details" text an agent would read.
+    pub fn render_details(&self) -> String {
+        let mut out = format!(
+            "== NCU report ({}) : {} kernels, {:.0} total cycles ==\n",
+            self.arch_name,
+            self.kernels.len(),
+            self.total_cycles
+        );
+        for k in &self.kernels {
+            out.push_str(&format!(
+                "kernel {} <<<{},{}>>> {:.1}us cycles={:.0} dram={:.0}% sm={:.0}% occ={:.0}% | {} / {}\n",
+                k.name,
+                k.grid,
+                k.block,
+                k.time_us,
+                k.elapsed_cycles,
+                k.dram_util * 100.0,
+                k.compute_util * 100.0,
+                k.occupancy * 100.0,
+                k.primary.name(),
+                k.secondary.name(),
+            ));
+            for (stall, share) in &k.stalls {
+                out.push_str(&format!("    stall.{stall}: {:.0}%\n", share * 100.0));
+            }
+        }
+        out
+    }
+}
+
+/// Classify the (primary, secondary) bottleneck of a launch estimate.
+///
+/// `layout_naive` attributes memory time to access-pattern latency rather
+/// than raw bandwidth. `untuned_contraction` marks a contraction kernel
+/// with no operand staging: its low issue rate is *latency-serialized*
+/// (long-scoreboard stalls in NCU terms), so the compute share is folded
+/// into memory latency — which is what a real profile shows for a naive
+/// GEMM, and what points the agent at tiling first (the prep→compute
+/// ordering of §5).
+pub fn classify(
+    est: &LaunchEstimate,
+    layout_naive: bool,
+    untuned_contraction: bool,
+) -> (Bottleneck, Bottleneck) {
+    // Candidate (bottleneck, weight) list; weight = estimated time share.
+    let exec = (est.time_s - est.launch_overhead_s).max(1e-12);
+    let mut cands: Vec<(Bottleneck, f64)> = Vec::new();
+    let mem_kind = if layout_naive {
+        Bottleneck::MemoryLatency
+    } else {
+        Bottleneck::MemoryBandwidth
+    };
+    let (mem_w, compute_w) = if untuned_contraction {
+        (est.mem_time_s + est.compute_time_s, est.compute_time_s * 0.5)
+    } else {
+        (est.mem_time_s, est.compute_time_s)
+    };
+    cands.push((mem_kind, mem_w));
+    if est.transcendental_share > 0.4 {
+        cands.push((Bottleneck::Transcendental, compute_w));
+    } else {
+        cands.push((Bottleneck::ComputeThroughput, compute_w));
+    }
+    cands.push((Bottleneck::LaunchOverhead, est.launch_overhead_s * 1.0));
+    if est.occupancy < 0.25 {
+        cands.push((Bottleneck::Occupancy, exec * (0.25 - est.occupancy) * 4.0));
+    }
+    if est.utilization < 0.25 {
+        cands.push((Bottleneck::Parallelism, exec * (0.25 - est.utilization) * 4.0));
+    }
+    cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let primary = cands[0].0;
+    let secondary = cands.get(1).map(|c| c.0).unwrap_or(primary);
+    (primary, secondary)
+}
+
+fn stall_breakdown(est: &LaunchEstimate, primary: Bottleneck) -> Vec<(&'static str, f64)> {
+    let mut stalls = match primary {
+        Bottleneck::MemoryBandwidth => vec![("long_scoreboard", 0.55), ("drain", 0.10)],
+        Bottleneck::MemoryLatency => vec![("long_scoreboard", 0.45), ("lg_throttle", 0.25)],
+        Bottleneck::ComputeThroughput => vec![("math_pipe_throttle", 0.50), ("not_selected", 0.15)],
+        Bottleneck::Transcendental => vec![("mio_throttle", 0.50), ("math_pipe_throttle", 0.20)],
+        Bottleneck::Occupancy => vec![("not_selected", 0.40), ("no_instruction", 0.20)],
+        Bottleneck::Parallelism => vec![("idle_sm", 0.60)],
+        Bottleneck::LaunchOverhead => vec![("launch_latency", 0.70)],
+    };
+    let rest: f64 = 1.0 - stalls.iter().map(|s| s.1).sum::<f64>();
+    stalls.push(("misc", rest.max(0.0)));
+    let _ = est;
+    stalls
+}
+
+/// Profile a scheduled kernel on an architecture. `noise_sigma` models
+/// run-to-run measurement jitter (multiplicative lognormal on times);
+/// pass 0.0 for noiseless profiling.
+pub fn profile(
+    arch: &GpuArch,
+    graph: &KernelGraph,
+    schedule: &Schedule,
+    noise_sigma: f64,
+    rng: &mut Rng,
+) -> NcuReport {
+    let est = model::estimate_schedule(arch, graph, schedule);
+    let mut kernels = Vec::with_capacity(est.launches.len());
+    for (gi, (le, group)) in est.launches.iter().zip(&schedule.groups).enumerate() {
+        let noise = if noise_sigma > 0.0 {
+            rng.lognormal_around_one(noise_sigma)
+        } else {
+            1.0
+        };
+        let time_s = le.time_s * noise;
+        let layout_naive = group.opts.layout == crate::kir::schedule::MemLayout::Naive
+            && !group.opts.vendor_lib;
+        let untuned_contraction = !group.opts.vendor_lib
+            && matches!(group.opts.tiling, crate::kir::schedule::Tiling::None)
+            && group
+                .nodes
+                .iter()
+                .any(|n| graph.nodes[*n].kind.is_contraction());
+        let (primary, secondary) = classify(le, layout_naive, untuned_contraction);
+        let ops: Vec<&'static str> = group
+            .nodes
+            .iter()
+            .map(|n| graph.nodes[*n].kind.mnemonic())
+            .collect();
+        kernels.push(KernelProfile {
+            name: format!("kernel_{gi}_{}", ops.join("_")),
+            elapsed_cycles: time_s * arch.clock_ghz * 1e9,
+            time_us: time_s * 1e6,
+            dram_util: le.dram_util,
+            compute_util: le.compute_util,
+            occupancy: le.occupancy,
+            utilization: le.utilization,
+            grid: group.launch.grid,
+            block: group.launch.block,
+            flops: le.cost.flops,
+            bytes: le.cost.bytes_total(),
+            primary,
+            secondary,
+            stalls: stall_breakdown(le, primary),
+        });
+    }
+    let total_time_s: f64 = kernels.iter().map(|k| k.time_us * 1e-6).sum();
+    NcuReport {
+        arch_name: arch.name.to_string(),
+        total_cycles: kernels.iter().map(|k| k.elapsed_cycles).sum(),
+        total_time_s,
+        kernels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::schedule::{MemLayout, Schedule, Tiling};
+    use crate::kir::{GraphBuilder, OpKind};
+
+    fn big_matmul() -> KernelGraph {
+        let mut b = GraphBuilder::new("mm");
+        let x = b.input("x", &[2048, 2048]);
+        let w = b.input("w", &[2048, 2048]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        b.output(mm);
+        b.finish()
+    }
+
+    #[test]
+    fn naive_big_matmul_is_memory_latency_bound() {
+        let arch = GpuArch::a100();
+        let g = big_matmul();
+        let s = Schedule::naive(&g);
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        assert_eq!(rep.kernels.len(), 1);
+        assert_eq!(rep.kernels[0].primary, Bottleneck::MemoryLatency);
+    }
+
+    #[test]
+    fn tuned_big_matmul_moves_to_compute_bound() {
+        let arch = GpuArch::a6000();
+        let g = big_matmul();
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.tiling = Tiling::Shared { tile: 128 };
+        s.groups[0].opts.layout = MemLayout::Coalesced;
+        s.groups[0].opts.ilp = 8;
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        assert_eq!(rep.kernels[0].primary, Bottleneck::ComputeThroughput);
+    }
+
+    #[test]
+    fn tiny_kernel_is_launch_bound() {
+        let arch = GpuArch::h100();
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input("x", &[8, 8]);
+        let y = b.op(OpKind::Relu, &[x]);
+        b.output(y);
+        let g = b.finish();
+        let s = Schedule::naive(&g);
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        assert_eq!(rep.kernels[0].primary, Bottleneck::LaunchOverhead);
+    }
+
+    #[test]
+    fn transcendental_kernel_classified() {
+        let arch = GpuArch::a100();
+        let mut b = GraphBuilder::new("exp");
+        let x = b.input("x", &[4096, 4096]);
+        let y = b.op(OpKind::Exp, &[x]);
+        b.output(y);
+        let g = b.finish();
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.layout = MemLayout::Coalesced;
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        // exp over coalesced memory: either memory-bandwidth or
+        // transcendental primary; transcendental must appear.
+        let k = &rep.kernels[0];
+        assert!(
+            k.primary == Bottleneck::Transcendental || k.secondary == Bottleneck::Transcendental,
+            "{:?}/{:?}",
+            k.primary,
+            k.secondary
+        );
+    }
+
+    #[test]
+    fn noise_perturbs_but_zero_noise_is_exact() {
+        let arch = GpuArch::a100();
+        let g = big_matmul();
+        let s = Schedule::naive(&g);
+        let mut rng = Rng::new(7);
+        let a = profile(&arch, &g, &s, 0.0, &mut rng).total_cycles;
+        let b = profile(&arch, &g, &s, 0.0, &mut rng).total_cycles;
+        assert_eq!(a, b);
+        let c = profile(&arch, &g, &s, 0.05, &mut rng).total_cycles;
+        let d = profile(&arch, &g, &s, 0.05, &mut rng).total_cycles;
+        assert_ne!(c, d);
+        // Noise stays within a few sigma.
+        assert!((c / a - 1.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn stalls_sum_to_one() {
+        let arch = GpuArch::l40s();
+        let g = big_matmul();
+        let s = Schedule::naive(&g);
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        for k in &rep.kernels {
+            let sum: f64 = k.stalls.iter().map(|s| s.1).sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn report_renders_details() {
+        let arch = GpuArch::a6000();
+        let g = big_matmul();
+        let s = Schedule::naive(&g);
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        let text = rep.render_details();
+        assert!(text.contains("kernel_0_matmul"));
+        assert!(text.contains("stall."));
+        assert!(text.contains("A6000"));
+    }
+
+    #[test]
+    fn dominant_bottleneck_weighted_by_time() {
+        let arch = GpuArch::a100();
+        let mut b = GraphBuilder::new("mix");
+        let x = b.input("x", &[2048, 2048]);
+        let w = b.input("w", &[2048, 2048]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        let r = b.op(OpKind::Relu, &[mm]);
+        b.output(r);
+        let g = b.finish();
+        let s = Schedule::naive(&g);
+        let mut rng = Rng::new(1);
+        let rep = profile(&arch, &g, &s, 0.0, &mut rng);
+        // The matmul dwarfs the relu; dominant = matmul's bottleneck.
+        assert_eq!(rep.dominant_bottleneck(), rep.kernels[0].primary);
+    }
+
+    #[test]
+    fn bottleneck_name_roundtrip() {
+        for b in Bottleneck::all() {
+            assert_eq!(Bottleneck::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Bottleneck::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,356 @@
+//! Execution and validation harness (paper §4.3–§4.4).
+//!
+//! Mirrors the paper's three-stage pipeline:
+//! 1. **Compile check** — structural validation of the candidate; failures
+//!    return compiler-style feedback to the lowering agent.
+//! 2. **Numeric verification** — the candidate's small graph is executed
+//!    against the *original task graph* on multiple randomized seeds
+//!    ("multiple randomized seeds to ensure correctness and prevent
+//!    overfitting", Table 2) with dtype-aware tolerances.
+//! 3. **Soft verification** — an LLM-style structural scan of the rendered
+//!    source guarding against reward hacking: functionality elimination
+//!    (the AI CUDA Engineer failure mode §4.4) and illegal external
+//!    library dispatch.
+//!
+//! Only candidates passing all three are profiled (stage 4) and scored.
+
+use crate::gpu::{profiler, GpuArch, NcuReport};
+use crate::kir::{interp, render, OpKind};
+use crate::opts::Candidate;
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    /// Number of randomized verification seeds.
+    pub verify_seeds: usize,
+    /// Tolerances for f32 candidates.
+    pub rtol: f32,
+    pub atol: f32,
+    /// Looser tolerances once reduced precision is in play.
+    pub rtol_reduced: f32,
+    /// Profiling measurement noise (lognormal sigma; 0 = exact).
+    pub noise_sigma: f64,
+    /// Whether vendor-library dispatch is permitted (the "+cuDNN" mode of
+    /// Figs. 8/11). Outside it, the soft verifier rejects vendor calls.
+    pub allow_vendor: bool,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        Self {
+            verify_seeds: 3,
+            rtol: 1e-4,
+            atol: 1e-4,
+            rtol_reduced: 3e-2,
+            noise_sigma: 0.02,
+            allow_vendor: false,
+        }
+    }
+}
+
+/// Outcome of one harness pass.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// Structural validation failed — "compilation feedback … returned to
+    /// the code-lowering agent".
+    CompileError(String),
+    /// Numeric mismatch against the reference.
+    WrongNumerics {
+        seed: u64,
+        max_abs_diff: f32,
+    },
+    /// Soft verifier rejected the kernel (reward-hacking guard).
+    SoftVerifyRejected(String),
+    /// All checks passed; the profile is attached.
+    Ok(NcuReport),
+}
+
+impl Outcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Outcome::Ok(_))
+    }
+
+    /// Feedback line handed back to the agents.
+    pub fn feedback(&self) -> String {
+        match self {
+            Outcome::CompileError(e) => format!("compile error: {e}"),
+            Outcome::WrongNumerics { seed, max_abs_diff } => {
+                format!("numeric verification failed (seed {seed}): max|Δ|={max_abs_diff:.3e}")
+            }
+            Outcome::SoftVerifyRejected(r) => format!("soft-verify rejected: {r}"),
+            Outcome::Ok(rep) => format!(
+                "ok: {} kernels, {:.0} cycles",
+                rep.kernels.len(),
+                rep.total_cycles
+            ),
+        }
+    }
+}
+
+/// Run the full pipeline for `cand` derived from `task` on `arch`.
+pub fn run(
+    task: &Task,
+    cand: &Candidate,
+    arch: &GpuArch,
+    cfg: &HarnessConfig,
+    rng: &mut Rng,
+) -> Outcome {
+    // Stage 1: compile check.
+    if let Err(e) = cand.validate() {
+        return Outcome::CompileError(e);
+    }
+    // Stage 2: numeric verification, multiple seeds.
+    let rtol = if cand.has_reduced_precision() {
+        cfg.rtol_reduced
+    } else {
+        cfg.rtol
+    };
+    for i in 0..cfg.verify_seeds {
+        let seed = 0x5EED_0000 + i as u64;
+        let inputs = interp::random_inputs(&task.small, seed);
+        // §Perf: the reference outputs are invariant per (task, seed) —
+        // cache them instead of re-executing the reference graph on every
+        // candidate evaluation (this halves verification cost, the hot
+        // path of the whole driver).
+        let reference = match cached_reference(task, seed, &inputs) {
+            Ok(r) => r,
+            Err(e) => return Outcome::CompileError(format!("reference failed: {e}")),
+        };
+        let got = match interp::execute(&cand.small, &inputs) {
+            Ok(g) => g,
+            Err(e) => return Outcome::CompileError(format!("candidate failed: {e}")),
+        };
+        if reference.len() != got.len() {
+            return Outcome::CompileError(format!(
+                "output arity mismatch: {} vs {}",
+                reference.len(),
+                got.len()
+            ));
+        }
+        for (r, g) in reference.iter().zip(&got) {
+            if !interp::allclose(g, r, rtol, cfg.atol) {
+                return Outcome::WrongNumerics {
+                    seed,
+                    max_abs_diff: interp::max_abs_diff(g, r),
+                };
+            }
+        }
+    }
+    // Stage 3: soft verification.
+    if let Err(reason) = soft_verify(task, cand, cfg) {
+        return Outcome::SoftVerifyRejected(reason);
+    }
+    // Stage 4: profile.
+    Outcome::Ok(profiler::profile(
+        arch,
+        &cand.full,
+        &cand.schedule,
+        cfg.noise_sigma,
+        rng,
+    ))
+}
+
+thread_local! {
+    /// (task id, seed) → reference outputs. Keyed by id: task graphs are
+    /// immutable per id within a process.
+    static REF_CACHE: std::cell::RefCell<std::collections::HashMap<(String, u64), std::rc::Rc<Vec<interp::Tensor>>>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+fn cached_reference(
+    task: &Task,
+    seed: u64,
+    inputs: &[interp::Tensor],
+) -> Result<std::rc::Rc<Vec<interp::Tensor>>, interp::InterpError> {
+    let key = (task.id.clone(), seed);
+    if let Some(hit) = REF_CACHE.with(|c| c.borrow().get(&key).cloned()) {
+        return Ok(hit);
+    }
+    let computed = std::rc::Rc::new(interp::execute(&task.small, inputs)?);
+    REF_CACHE.with(|c| c.borrow_mut().insert(key, computed.clone()));
+    Ok(computed)
+}
+
+/// The LLM-soft-verification analog: structural scans of the rendered
+/// kernel source plus graph invariants. Returns Err(reason) on rejection.
+pub fn soft_verify(task: &Task, cand: &Candidate, cfg: &HarnessConfig) -> Result<(), String> {
+    let source = render::render(&cand.full, &cand.schedule);
+    // Guard 1: external/vendor libraries outside +vendor mode ("generated
+    // kernels only use native CUDA functionality", §4.4).
+    if !cfg.allow_vendor && (source.contains("cudnn") || source.contains("cublas")) {
+        return Err("kernel dispatches to an external vendor library".to_string());
+    }
+    // Guard 2: functionality elimination — the candidate must retain the
+    // original contraction work (an agent deleting the matmul and copying
+    // inputs would otherwise score a huge "speedup").
+    let orig = task.graph.op_census();
+    let now = cand.full.op_census();
+    if now.contractions < orig.contractions {
+        return Err(format!(
+            "contraction work eliminated ({} -> {})",
+            orig.contractions, now.contractions
+        ));
+    }
+    // Guard 3: stub detection — Identity nodes feeding outputs where the
+    // original computed something.
+    for out in &cand.full.outputs {
+        if let crate::kir::ValueRef::Node(i) = out {
+            if matches!(cand.full.nodes[*i].kind, OpKind::Identity) {
+                return Err("output produced by a bare copy (stubbed work)".to_string());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Result of profiling the unmodified naive candidate (the initial CUDA
+/// state) — convenience for the ICRL driver and baselines.
+pub fn profile_naive(task: &Task, arch: &GpuArch, cfg: &HarnessConfig, rng: &mut Rng) -> NcuReport {
+    let cand = Candidate::naive(task);
+    profiler::profile(arch, &cand.full, &cand.schedule, cfg.noise_sigma, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::ValueRef;
+    use crate::opts::{apply, Technique};
+    use crate::tasks::Suite;
+
+    fn setup(id: &str) -> (Task, Candidate, GpuArch, HarnessConfig, Rng) {
+        let task = Suite::full().by_id(id).unwrap().clone();
+        let cand = Candidate::naive(&task);
+        (
+            task,
+            cand,
+            GpuArch::h100(),
+            HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            Rng::new(7),
+        )
+    }
+
+    #[test]
+    fn naive_candidate_passes() {
+        let (task, cand, arch, cfg, mut rng) = setup("L2/01_gemm_bias_relu");
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(out.is_ok(), "{}", out.feedback());
+    }
+
+    #[test]
+    fn legit_transform_passes() {
+        let (task, cand, arch, cfg, mut rng) = setup("L2/18_linear_sum_logsumexp2");
+        let a = apply::apply(Technique::AlgebraicSimplification, &cand, 0).unwrap();
+        let b = apply::apply(Technique::AlgebraicSimplification, &a, 0).unwrap();
+        let out = run(&task, &b, &arch, &cfg, &mut rng);
+        assert!(out.is_ok(), "{}", out.feedback());
+    }
+
+    #[test]
+    fn semantic_bug_caught_by_numeric_check() {
+        let (task, mut cand, arch, cfg, mut rng) = setup("L2/01_gemm_bias_relu");
+        // Inject a lowering bug: drop the ReLU by rewiring the output to
+        // the bias-add (a classic "forgot the epilogue" bug).
+        let bias_node = ValueRef::Node(1);
+        cand.full.outputs = vec![bias_node];
+        cand.small.outputs = vec![bias_node];
+        // (schedule keeps all nodes; graph still validates — only the
+        // semantics changed.)
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(
+            matches!(out, Outcome::WrongNumerics { .. }),
+            "{}",
+            out.feedback()
+        );
+    }
+
+    #[test]
+    fn wrong_axis_bug_caught() {
+        let (task, mut cand, arch, cfg, mut rng) = setup("L1/19_reduce_sum");
+        // Reduce along axis 0 instead of 1 — shapes change, so this is a
+        // compile error (shape mismatch), like real CUDA would fail.
+        cand.full.nodes[0].kind = OpKind::ReduceSum { axis: 0 };
+        cand.small.nodes[0].kind = OpKind::ReduceSum { axis: 0 };
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(
+            matches!(out, Outcome::CompileError(_)),
+            "{}",
+            out.feedback()
+        );
+    }
+
+    #[test]
+    fn vendor_dispatch_rejected_without_vendor_mode() {
+        let (task, cand, arch, cfg, mut rng) = setup("L1/01_matmul_square");
+        let v = apply::apply(Technique::VendorLibraryDispatch, &cand, 0).unwrap();
+        let out = run(&task, &v, &arch, &cfg, &mut rng);
+        assert!(
+            matches!(out, Outcome::SoftVerifyRejected(_)),
+            "{}",
+            out.feedback()
+        );
+        // …but allowed in +vendor mode (Fig. 8's "+cuDNN").
+        let mut vcfg = cfg.clone();
+        vcfg.allow_vendor = true;
+        let out2 = run(&task, &v, &arch, &vcfg, &mut rng);
+        assert!(out2.is_ok(), "{}", out2.feedback());
+    }
+
+    #[test]
+    fn functionality_elimination_rejected() {
+        let (task, mut cand, arch, cfg, mut rng) = setup("L1/01_matmul_square");
+        // Reward hack: replace the matmul with an Identity on x… which
+        // also changes shapes — so emulate the sneaky version where shapes
+        // happen to match (square matmul): identity passes shape check but
+        // must be caught by soft verify (census) or numerics.
+        cand.full.nodes[0].kind = OpKind::Identity;
+        cand.full.nodes[0].deps = vec![ValueRef::Input(0)];
+        cand.small.nodes[0].kind = OpKind::Identity;
+        cand.small.nodes[0].deps = vec![ValueRef::Input(0)];
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(!out.is_ok());
+    }
+
+    #[test]
+    fn stub_output_rejected_even_if_numerically_plausible() {
+        // Build a task whose output could accidentally match a copy: use
+        // soft_verify directly on an Identity-terminated graph.
+        let (task, mut cand, _arch, cfg, _rng) = setup("L1/15_relu");
+        cand.full.nodes[0].kind = OpKind::Identity;
+        cand.small.nodes[0].kind = OpKind::Identity;
+        let err = soft_verify(&task, &cand, &cfg).unwrap_err();
+        assert!(err.contains("copy"), "{err}");
+    }
+
+    #[test]
+    fn multi_seed_verification_catches_seed_dependent_luck() {
+        // A candidate that zeroes its output matches the reference only if
+        // the reference happens to be zero — never for random seeds.
+        let (task, mut cand, arch, cfg, mut rng) = setup("L1/15_relu");
+        cand.small.nodes[0].kind = OpKind::Scale { c: 0.0 };
+        cand.full.nodes[0].kind = OpKind::Scale { c: 0.0 };
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(matches!(out, Outcome::WrongNumerics { .. }));
+    }
+
+    #[test]
+    fn reduced_precision_gets_loose_tolerance() {
+        let (task, cand, arch, cfg, mut rng) = setup("L1/05_matmul_f16");
+        // f16 inputs: rounding error must not fail verification.
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(out.is_ok(), "{}", out.feedback());
+    }
+
+    #[test]
+    fn feedback_strings_informative() {
+        let (task, cand, arch, cfg, mut rng) = setup("L1/01_matmul_square");
+        let out = run(&task, &cand, &arch, &cfg, &mut rng);
+        assert!(out.feedback().starts_with("ok:"));
+        let ce = Outcome::CompileError("boom".into());
+        assert!(ce.feedback().contains("boom"));
+    }
+}

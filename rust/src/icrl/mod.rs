@@ -1,0 +1,19 @@
+//! The MAIC-RL driver — Algorithm 2 of the paper.
+//!
+//! Outer loop: for each task, run `trajectories` rollouts of
+//! `rollout_steps` optimization steps. Each step:
+//! 1. profile the current kernel (NCU analog),
+//! 2. extract its performance state (StateExtractor),
+//! 3. match/discover the state in the Knowledge Base,
+//! 4. retrieve + weighted-sample the top-k candidate optimizations,
+//! 5. lower each candidate (LoweringAgent, with retries on feedback),
+//! 6. validate + profile (harness), record rewards in the replay buffer,
+//! 7. step to the best valid candidate.
+//!
+//! After every trajectory the textual-gradient trio (PolicyEvaluation →
+//! PerfGapAnalysis → ParameterUpdate) integrates the replay buffer into
+//! the Knowledge Base — the in-context policy-gradient step.
+
+pub mod driver;
+
+pub use driver::{optimize_task, run_suite, IcrlConfig, KbMode, StepLog, TaskRun};

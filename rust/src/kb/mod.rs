@@ -1,0 +1,528 @@
+//! The Persistent CUDA Knowledge Base — the paper's θ.
+//!
+//! Entries have the paper's form ⟨state, ⟨optimization, score⟩⟩ (§3,
+//! Fig. 4/5): a hierarchical structure keyed by *performance states*
+//! (profile signatures), each holding scored optimization candidates plus
+//! short natural-language gradient notes. The ICRL loop treats this
+//! document as its mutable parameters: `ParameterUpdate` rewrites scores
+//! and notes from measured rewards; the `OptimizationSelector` reads it to
+//! drive weighted exploration.
+//!
+//! Size discipline matters (§5 reports ≈50 KB; §7 worries about storage
+//! overheads): notes are ring-buffered, and `size_bytes()` reports the
+//! serialized footprint which tests keep bounded.
+
+pub mod persist;
+
+use crate::gpu::Bottleneck;
+use crate::kir::KernelGraph;
+use crate::opts::Technique;
+use crate::util::rng::Rng;
+
+/// Coarse workload class, derived from the op census — the second axis of
+/// the state signature (Fig. 5 keys states by code + performance shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkloadClass {
+    ContractionHeavy,
+    ReductionHeavy,
+    Elementwise,
+    Mixed,
+}
+
+impl WorkloadClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadClass::ContractionHeavy => "contraction",
+            WorkloadClass::ReductionHeavy => "reduction",
+            WorkloadClass::Elementwise => "elementwise",
+            WorkloadClass::Mixed => "mixed",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        [
+            WorkloadClass::ContractionHeavy,
+            WorkloadClass::ReductionHeavy,
+            WorkloadClass::Elementwise,
+            WorkloadClass::Mixed,
+        ]
+        .into_iter()
+        .find(|w| w.name() == s)
+    }
+
+    /// Classify a graph by census.
+    pub fn of_graph(graph: &KernelGraph) -> Self {
+        let c = graph.op_census();
+        if c.contractions > 0 && c.reductions > 0 {
+            WorkloadClass::Mixed
+        } else if c.contractions > 0 {
+            WorkloadClass::ContractionHeavy
+        } else if c.reductions > 0 {
+            WorkloadClass::ReductionHeavy
+        } else {
+            WorkloadClass::Elementwise
+        }
+    }
+}
+
+/// A performance-state signature: the KB key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StateSig {
+    pub primary: Bottleneck,
+    pub secondary: Bottleneck,
+    pub workload: WorkloadClass,
+}
+
+impl StateSig {
+    pub fn id(&self) -> String {
+        format!(
+            "{}+{}/{}",
+            self.primary.name(),
+            self.secondary.name(),
+            self.workload.name()
+        )
+    }
+
+    pub fn parse(s: &str) -> Option<StateSig> {
+        let (bottlenecks, workload) = s.split_once('/')?;
+        let (p, sec) = bottlenecks.split_once('+')?;
+        Some(StateSig {
+            primary: Bottleneck::from_name(p)?,
+            secondary: Bottleneck::from_name(sec)?,
+            workload: WorkloadClass::from_name(workload)?,
+        })
+    }
+}
+
+/// Score record for one (state, optimization) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptEntry {
+    pub technique: Technique,
+    /// Expected speedup (EMA of measured gains; starts at the prior).
+    pub expected_gain: f64,
+    pub attempts: usize,
+    pub successes: usize,
+    /// Most recent measured gain.
+    pub last_gain: f64,
+    /// Ring buffer of short gradient notes (max [`MAX_NOTES`]).
+    pub notes: Vec<String>,
+}
+
+pub const MAX_NOTES: usize = 3;
+/// EMA step for score updates (the textual-gradient "learning rate" α).
+pub const SCORE_ALPHA: f64 = 0.35;
+
+impl OptEntry {
+    pub fn seeded(technique: Technique) -> Self {
+        OptEntry {
+            technique,
+            expected_gain: technique.prior_gain(),
+            attempts: 0,
+            successes: 0,
+            last_gain: 1.0,
+            notes: Vec::new(),
+        }
+    }
+
+    /// Integrate a measured gain (the ParameterUpdate step).
+    pub fn update(&mut self, measured_gain: f64, note: Option<String>) {
+        self.attempts += 1;
+        if measured_gain > 1.01 {
+            self.successes += 1;
+        }
+        self.expected_gain =
+            (1.0 - SCORE_ALPHA) * self.expected_gain + SCORE_ALPHA * measured_gain;
+        self.last_gain = measured_gain;
+        if let Some(n) = note {
+            if self.notes.len() >= MAX_NOTES {
+                self.notes.remove(0);
+            }
+            self.notes.push(n);
+        }
+    }
+
+    pub fn success_rate(&self) -> f64 {
+        if self.attempts == 0 {
+            return f64::NAN;
+        }
+        self.successes as f64 / self.attempts as f64
+    }
+}
+
+/// One state's record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateEntry {
+    pub sig: StateSig,
+    pub opts: Vec<OptEntry>,
+    /// Times this state was matched.
+    pub visits: usize,
+}
+
+/// The Knowledge Base.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KnowledgeBase {
+    pub states: Vec<StateEntry>,
+    /// Monotone counter of parameter updates (k in Algorithm 2).
+    pub updates: usize,
+}
+
+/// Result of a state lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Match {
+    /// Exact (primary, secondary, workload) hit.
+    Known(usize),
+    /// New state appended ("discovered state" in §3).
+    Discovered(usize),
+}
+
+impl Match {
+    pub fn index(&self) -> usize {
+        match self {
+            Match::Known(i) | Match::Discovered(i) => *i,
+        }
+    }
+
+    pub fn is_discovery(&self) -> bool {
+        matches!(self, Match::Discovered(_))
+    }
+}
+
+impl KnowledgeBase {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Match-or-append a state (the state-matcher of §3). Increments the
+    /// state's visit count.
+    pub fn match_state(&mut self, sig: StateSig) -> Match {
+        if let Some(i) = self.states.iter().position(|s| s.sig == sig) {
+            self.states[i].visits += 1;
+            return Match::Known(i);
+        }
+        self.states.push(StateEntry {
+            sig,
+            opts: Vec::new(),
+            visits: 1,
+        });
+        Match::Discovered(self.states.len() - 1)
+    }
+
+    /// Read-only lookup without mutation.
+    pub fn find_state(&self, sig: StateSig) -> Option<usize> {
+        self.states.iter().position(|s| s.sig == sig)
+    }
+
+    /// Ensure the state has candidate optimizations; if empty, seed from
+    /// the catalog priors restricted to `proposals` ("proposes and adds a
+    /// new set of candidate optimizations", §3).
+    pub fn ensure_candidates(&mut self, state: usize, proposals: &[Technique]) {
+        let entry = &mut self.states[state];
+        if entry.opts.is_empty() {
+            entry.opts = proposals.iter().map(|t| OptEntry::seeded(*t)).collect();
+        } else {
+            // Merge in any newly-proposed techniques not yet recorded.
+            for t in proposals {
+                if !entry.opts.iter().any(|o| o.technique == *t) {
+                    entry.opts.push(OptEntry::seeded(*t));
+                }
+            }
+        }
+    }
+
+    /// Weighted top-k selection (§3: "random weighted selection based on
+    /// predicted performance gain … ensures the agent does not always
+    /// select the best past performer"). Returns distinct techniques.
+    pub fn select_top_k(
+        &self,
+        state: usize,
+        k: usize,
+        filter: impl Fn(Technique) -> bool,
+        rng: &mut Rng,
+    ) -> Vec<Technique> {
+        let entry = &self.states[state];
+        let pool: Vec<&OptEntry> = entry
+            .opts
+            .iter()
+            .filter(|o| filter(o.technique))
+            .collect();
+        if pool.is_empty() {
+            return Vec::new();
+        }
+        let mut remaining: Vec<usize> = (0..pool.len()).collect();
+        let mut picked = Vec::new();
+        while picked.len() < k && !remaining.is_empty() {
+            let weights: Vec<f64> = remaining
+                .iter()
+                .map(|i| {
+                    // Weight = expected gain above parity, floored so that
+                    // even past losers keep exploration mass. The floor is
+                    // what lets *preparatory* techniques (mixed precision,
+                    // tiling) keep being tried even though their measured
+                    // solo gain is small — their value is realized by the
+                    // compute technique that follows (§5's prep→compute
+                    // transitions).
+                    (pool[*i].expected_gain - 0.9).max(0.15)
+                })
+                .collect();
+            let wi = rng.weighted_index(&weights);
+            picked.push(pool[remaining[wi]].technique);
+            remaining.remove(wi);
+        }
+        picked
+    }
+
+    /// Score update for (state, technique) — the ParameterUpdate write.
+    pub fn update_score(
+        &mut self,
+        state: usize,
+        technique: Technique,
+        measured_gain: f64,
+        note: Option<String>,
+    ) {
+        self.updates += 1;
+        let entry = &mut self.states[state];
+        match entry.opts.iter_mut().find(|o| o.technique == technique) {
+            Some(o) => o.update(measured_gain, note),
+            None => {
+                let mut o = OptEntry::seeded(technique);
+                o.update(measured_gain, note);
+                entry.opts.push(o);
+            }
+        }
+    }
+
+    /// Total recorded optimization applications.
+    pub fn total_attempts(&self) -> usize {
+        self.states
+            .iter()
+            .flat_map(|s| &s.opts)
+            .map(|o| o.attempts)
+            .sum()
+    }
+
+    /// Distinct techniques that have at least one attempt.
+    pub fn techniques_tried(&self) -> usize {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.states {
+            for o in &s.opts {
+                if o.attempts > 0 {
+                    seen.insert(o.technique);
+                }
+            }
+        }
+        seen.len()
+    }
+
+    /// Serialized size (the paper's ~50 KB footprint check).
+    pub fn size_bytes(&self) -> usize {
+        persist::to_json(self).to_string_compact().len()
+    }
+
+    /// Seed a θ₀ with prior-scored candidates for the most common state
+    /// signatures. This is the "initialized databases" artifact the paper
+    /// releases; the full *pretrained* KB is produced by a training run.
+    pub fn seed_priors() -> Self {
+        let mut kb = KnowledgeBase::empty();
+        use Bottleneck::*;
+        use WorkloadClass::*;
+        let combos = [
+            (MemoryLatency, ComputeThroughput, ContractionHeavy),
+            (MemoryBandwidth, LaunchOverhead, Elementwise),
+            (MemoryBandwidth, Transcendental, ReductionHeavy),
+            (ComputeThroughput, MemoryBandwidth, ContractionHeavy),
+            (LaunchOverhead, MemoryBandwidth, Mixed),
+        ];
+        for (p, s, w) in combos {
+            let sig = StateSig {
+                primary: p,
+                secondary: s,
+                workload: w,
+            };
+            let m = kb.match_state(sig);
+            kb.ensure_candidates(m.index(), Technique::all());
+        }
+        // seeding does not count as visits/updates
+        for s in &mut kb.states {
+            s.visits = 0;
+        }
+        kb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(p: Bottleneck, s: Bottleneck, w: WorkloadClass) -> StateSig {
+        StateSig {
+            primary: p,
+            secondary: s,
+            workload: w,
+        }
+    }
+
+    #[test]
+    fn match_discovers_then_knows() {
+        let mut kb = KnowledgeBase::empty();
+        let s = sig(
+            Bottleneck::MemoryBandwidth,
+            Bottleneck::LaunchOverhead,
+            WorkloadClass::Elementwise,
+        );
+        let m1 = kb.match_state(s);
+        assert!(m1.is_discovery());
+        let m2 = kb.match_state(s);
+        assert!(!m2.is_discovery());
+        assert_eq!(m1.index(), m2.index());
+        assert_eq!(kb.states[m1.index()].visits, 2);
+    }
+
+    #[test]
+    fn sig_id_roundtrip() {
+        let s = sig(
+            Bottleneck::ComputeThroughput,
+            Bottleneck::Occupancy,
+            WorkloadClass::ContractionHeavy,
+        );
+        assert_eq!(StateSig::parse(&s.id()), Some(s));
+        assert_eq!(s.id(), "compute_throughput+occupancy/contraction");
+        assert!(StateSig::parse("garbage").is_none());
+    }
+
+    #[test]
+    fn ensure_candidates_seeds_and_merges() {
+        let mut kb = KnowledgeBase::empty();
+        let s = sig(
+            Bottleneck::MemoryLatency,
+            Bottleneck::ComputeThroughput,
+            WorkloadClass::ContractionHeavy,
+        );
+        let m = kb.match_state(s);
+        kb.ensure_candidates(m.index(), &[Technique::SharedMemoryTiling]);
+        assert_eq!(kb.states[0].opts.len(), 1);
+        kb.ensure_candidates(
+            m.index(),
+            &[Technique::SharedMemoryTiling, Technique::MemoryCoalescing],
+        );
+        assert_eq!(kb.states[0].opts.len(), 2);
+        assert_eq!(
+            kb.states[0].opts[0].expected_gain,
+            Technique::SharedMemoryTiling.prior_gain()
+        );
+    }
+
+    #[test]
+    fn select_top_k_distinct_and_weighted() {
+        let mut kb = KnowledgeBase::empty();
+        let s = sig(
+            Bottleneck::MemoryLatency,
+            Bottleneck::ComputeThroughput,
+            WorkloadClass::ContractionHeavy,
+        );
+        let m = kb.match_state(s);
+        kb.ensure_candidates(m.index(), Technique::all());
+        // Crush one technique's score and boost another; the boosted one
+        // should be selected far more often in slot 0.
+        kb.update_score(0, Technique::LoopUnrolling, 0.2, None);
+        for _ in 0..5 {
+            kb.update_score(0, Technique::SharedMemoryTiling, 3.0, None);
+        }
+        let mut rng = Rng::new(1);
+        let mut first_counts = std::collections::BTreeMap::new();
+        for _ in 0..300 {
+            let picks = kb.select_top_k(0, 3, |_| true, &mut rng);
+            assert_eq!(picks.len(), 3);
+            let mut dedup = picks.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 3, "picks must be distinct");
+            *first_counts.entry(picks[0]).or_insert(0usize) += 1;
+        }
+        let tiling = first_counts
+            .get(&Technique::SharedMemoryTiling)
+            .copied()
+            .unwrap_or(0);
+        let unroll = first_counts
+            .get(&Technique::LoopUnrolling)
+            .copied()
+            .unwrap_or(0);
+        assert!(tiling > 25, "tiling first-picks {tiling}");
+        assert!(unroll < tiling / 2, "unroll={unroll} tiling={tiling}");
+    }
+
+    #[test]
+    fn select_respects_filter() {
+        let mut kb = KnowledgeBase::seed_priors();
+        let mut rng = Rng::new(2);
+        let picks = kb.select_top_k(0, 10, |t| t == Technique::FastMath, &mut rng);
+        assert_eq!(picks, vec![Technique::FastMath]);
+        let none = kb.select_top_k(0, 3, |_| false, &mut rng);
+        assert!(none.is_empty());
+        kb.updates += 0;
+    }
+
+    #[test]
+    fn update_score_ema_moves_toward_measurement() {
+        let mut e = OptEntry::seeded(Technique::SharedMemoryTiling);
+        let prior = e.expected_gain;
+        e.update(0.5, Some("slowdown: occupancy collapsed".into()));
+        assert!(e.expected_gain < prior);
+        assert_eq!(e.attempts, 1);
+        assert_eq!(e.successes, 0);
+        for _ in 0..10 {
+            e.update(0.5, None);
+        }
+        assert!((e.expected_gain - 0.5).abs() < 0.05);
+        assert_eq!(e.success_rate(), 0.0);
+    }
+
+    #[test]
+    fn notes_ring_buffer_bounded() {
+        let mut e = OptEntry::seeded(Technique::FastMath);
+        for i in 0..10 {
+            e.update(1.2, Some(format!("note {i}")));
+        }
+        assert_eq!(e.notes.len(), MAX_NOTES);
+        assert_eq!(e.notes.last().unwrap(), "note 9");
+        assert_eq!(e.notes.first().unwrap(), "note 7");
+    }
+
+    #[test]
+    fn seed_priors_has_states_without_visits() {
+        let kb = KnowledgeBase::seed_priors();
+        assert!(kb.states.len() >= 5);
+        assert!(kb.states.iter().all(|s| s.visits == 0));
+        assert!(kb.states.iter().all(|s| !s.opts.is_empty()));
+        assert_eq!(kb.total_attempts(), 0);
+    }
+
+    #[test]
+    fn size_stays_in_paper_ballpark() {
+        // A seeded KB with some activity must stay well under ~100 KB
+        // (paper reports ≈50 KB after full training).
+        let mut kb = KnowledgeBase::seed_priors();
+        let mut rng = Rng::new(3);
+        for s in 0..kb.states.len() {
+            for t in Technique::all() {
+                kb.update_score(s, *t, 0.8 + rng.f64(), Some("gain below expectation".into()));
+            }
+        }
+        let sz = kb.size_bytes();
+        assert!(sz < 100 * 1024, "KB too large: {sz} bytes");
+        assert!(sz > 1024, "KB suspiciously small: {sz} bytes");
+    }
+
+    #[test]
+    fn workload_classification() {
+        use crate::tasks::Suite;
+        let suite = Suite::full();
+        let mm = suite.by_id("L1/01_matmul_square").unwrap();
+        assert_eq!(WorkloadClass::of_graph(&mm.graph), WorkloadClass::ContractionHeavy);
+        let relu = suite.by_id("L1/15_relu").unwrap();
+        assert_eq!(WorkloadClass::of_graph(&relu.graph), WorkloadClass::Elementwise);
+        let sm = suite.by_id("L1/12_softmax").unwrap();
+        assert_eq!(WorkloadClass::of_graph(&sm.graph), WorkloadClass::ReductionHeavy);
+        let lenet = suite.by_id("L3/01_lenet5").unwrap();
+        assert_eq!(WorkloadClass::of_graph(&lenet.graph), WorkloadClass::Mixed);
+    }
+}

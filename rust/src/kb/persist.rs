@@ -1,0 +1,216 @@
+//! Knowledge-Base JSON persistence.
+//!
+//! The KB is the cross-task, cross-GPU reusable artifact the paper
+//! releases (§4 contribution 3, Fig. 16 reuses an A6000-trained KB on
+//! other GPUs). Format: a single ordered-JSON document, human-diffable.
+
+use super::{KnowledgeBase, OptEntry, StateEntry, StateSig};
+use crate::opts::Technique;
+use crate::util::json::{Json, JsonObj};
+use std::path::Path;
+
+pub fn to_json(kb: &KnowledgeBase) -> Json {
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-kb-v1");
+    root.set("updates", kb.updates);
+    let states: Vec<Json> = kb.states.iter().map(state_to_json).collect();
+    root.set("states", Json::Arr(states));
+    Json::Obj(root)
+}
+
+fn state_to_json(s: &StateEntry) -> Json {
+    let mut o = JsonObj::new();
+    o.set("state", s.sig.id());
+    o.set("visits", s.visits);
+    let opts: Vec<Json> = s.opts.iter().map(opt_to_json).collect();
+    o.set("optimizations", Json::Arr(opts));
+    Json::Obj(o)
+}
+
+fn opt_to_json(e: &OptEntry) -> Json {
+    let mut o = JsonObj::new();
+    o.set("technique", e.technique.name());
+    o.set("expected_gain", round3(e.expected_gain));
+    o.set("attempts", e.attempts);
+    o.set("successes", e.successes);
+    o.set("last_gain", round3(e.last_gain));
+    if !e.notes.is_empty() {
+        o.set(
+            "notes",
+            Json::Arr(e.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+    }
+    Json::Obj(o)
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PersistError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("schema: {0}")]
+    Schema(String),
+}
+
+pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
+    let bad = |m: &str| PersistError::Schema(m.to_string());
+    let fmt = j
+        .get("format")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("missing format"))?;
+    if fmt != "kernelblaster-kb-v1" {
+        return Err(bad(&format!("unknown format '{fmt}'")));
+    }
+    let mut kb = KnowledgeBase {
+        updates: j.get("updates").and_then(Json::as_usize).unwrap_or(0),
+        states: Vec::new(),
+    };
+    for sj in j
+        .get("states")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing states"))?
+    {
+        let sig_str = sj
+            .get("state")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("state missing sig"))?;
+        let sig = StateSig::parse(sig_str)
+            .ok_or_else(|| bad(&format!("unparseable state sig '{sig_str}'")))?;
+        let mut entry = StateEntry {
+            sig,
+            visits: sj.get("visits").and_then(Json::as_usize).unwrap_or(0),
+            opts: Vec::new(),
+        };
+        if let Some(opts) = sj.get("optimizations").and_then(Json::as_arr) {
+            for oj in opts {
+                let tname = oj
+                    .get("technique")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("opt missing technique"))?;
+                let technique = Technique::from_name(tname)
+                    .ok_or_else(|| bad(&format!("unknown technique '{tname}'")))?;
+                entry.opts.push(OptEntry {
+                    technique,
+                    expected_gain: oj
+                        .get("expected_gain")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(technique.prior_gain()),
+                    attempts: oj.get("attempts").and_then(Json::as_usize).unwrap_or(0),
+                    successes: oj.get("successes").and_then(Json::as_usize).unwrap_or(0),
+                    last_gain: oj.get("last_gain").and_then(Json::as_f64).unwrap_or(1.0),
+                    notes: oj
+                        .get("notes")
+                        .and_then(Json::as_arr)
+                        .map(|ns| {
+                            ns.iter()
+                                .filter_map(|n| n.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                });
+            }
+        }
+        kb.states.push(entry);
+    }
+    Ok(kb)
+}
+
+/// Save to a file (pretty-printed for diffability).
+pub fn save(kb: &KnowledgeBase, path: &Path) -> Result<(), PersistError> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_json(kb).to_string_pretty())?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<KnowledgeBase, PersistError> {
+    let text = std::fs::read_to_string(path)?;
+    from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn busy_kb() -> KnowledgeBase {
+        let mut kb = KnowledgeBase::seed_priors();
+        let mut rng = Rng::new(9);
+        for s in 0..kb.states.len() {
+            for (i, t) in Technique::all().iter().enumerate().take(6) {
+                kb.update_score(
+                    s,
+                    *t,
+                    0.5 + rng.f64() * 2.0,
+                    if i % 2 == 0 {
+                        Some(format!("note for {}", t.name()))
+                    } else {
+                        None
+                    },
+                );
+            }
+        }
+        kb
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_modulo_rounding() {
+        let kb = busy_kb();
+        let j = to_json(&kb);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.states.len(), kb.states.len());
+        assert_eq!(back.updates, kb.updates);
+        for (a, b) in kb.states.iter().zip(&back.states) {
+            assert_eq!(a.sig, b.sig);
+            assert_eq!(a.visits, b.visits);
+            assert_eq!(a.opts.len(), b.opts.len());
+            for (x, y) in a.opts.iter().zip(&b.opts) {
+                assert_eq!(x.technique, y.technique);
+                assert_eq!(x.attempts, y.attempts);
+                assert_eq!(x.successes, y.successes);
+                assert!((x.expected_gain - y.expected_gain).abs() < 1e-3);
+                assert_eq!(x.notes, y.notes);
+            }
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let kb = busy_kb();
+        let dir = std::env::temp_dir().join("kb_persist_test");
+        let path = dir.join("kb.json");
+        save(&kb, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.states.len(), kb.states.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = Json::parse(r#"{"format":"other","states":[]}"#).unwrap();
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_technique() {
+        let j = Json::parse(
+            r#"{"format":"kernelblaster-kb-v1","states":[
+                {"state":"memory_bandwidth+launch_overhead/elementwise",
+                 "optimizations":[{"technique":"quantum_annealing"}]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(from_json(&j), Err(PersistError::Schema(_))));
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/kb.json")).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! Per-op and per-group cost queries: FLOPs, bytes moved, arithmetic
+//! intensity. These are the raw inputs to the GPU roofline model.
+
+use super::schedule::{FusionGroup, Schedule, Tiling};
+use super::{KernelGraph, OpKind, Shape, ValueRef};
+
+/// Cost of a single op at its shapes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCost {
+    pub flops: f64,
+    pub bytes_in: f64,
+    pub bytes_out: f64,
+    /// Fraction of flops that are transcendental (exp/tanh/…): they run on
+    /// the SFU at lower throughput.
+    pub transcendental_frac: f64,
+}
+
+impl OpCost {
+    pub fn bytes_total(&self) -> f64 {
+        self.bytes_in + self.bytes_out
+    }
+
+    /// Arithmetic intensity (FLOP/byte).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes_total() <= 0.0 {
+            return 0.0;
+        }
+        self.flops / self.bytes_total()
+    }
+}
+
+/// Cost of one node in a graph.
+pub fn node_cost(graph: &KernelGraph, node_idx: usize) -> OpCost {
+    let node = &graph.nodes[node_idx];
+    let in_shapes: Vec<&Shape> = node.deps.iter().map(|d| graph.shape_of(*d)).collect();
+    let elem_in = node.dtype.size_bytes() as f64;
+    let bytes_in: f64 = node
+        .deps
+        .iter()
+        .map(|d| graph.shape_of(*d).numel() as f64 * graph.dtype_of(*d).size_bytes() as f64)
+        .sum();
+    let out_n = node.shape.numel() as f64;
+    let bytes_out = out_n * elem_in;
+    let (flops, trans) = match &node.kind {
+        OpKind::Matmul => {
+            let m = in_shapes[0].dim(0) as f64;
+            let k = in_shapes[0].dim(1) as f64;
+            let n = in_shapes[1].dim(1) as f64;
+            (2.0 * m * n * k, 0.0)
+        }
+        OpKind::Conv2d { .. } => {
+            let w = in_shapes[1];
+            let per_out = 2.0 * (w.dim(1) * w.dim(2) * w.dim(3)) as f64;
+            (out_n * per_out, 0.0)
+        }
+        OpKind::MaxPool2d { k, .. } | OpKind::AvgPool2d { k, .. } => {
+            (out_n * (k * k) as f64, 0.0)
+        }
+        OpKind::BiasAdd { .. } | OpKind::Add | OpKind::Sub | OpKind::Mul => (out_n, 0.0),
+        OpKind::Relu | OpKind::Scale { .. } | OpKind::AddConst { .. } | OpKind::DivConst { .. } => {
+            (out_n, 0.0)
+        }
+        OpKind::Gelu => (out_n * 10.0, 0.5),
+        OpKind::Sigmoid | OpKind::Tanh | OpKind::Exp => (out_n * 4.0, 1.0),
+        OpKind::Softmax { axis } => {
+            let axis_len = in_shapes[0].dim(*axis) as f64;
+            // max + exp + sum + div per row element
+            (in_shapes[0].numel() as f64 * 4.0 + axis_len, 0.4)
+        }
+        OpKind::LogSumExp { .. } => (in_shapes[0].numel() as f64 * 4.0, 0.4),
+        OpKind::ReduceSum { .. } | OpKind::ReduceMax { .. } | OpKind::ReduceMean { .. } => {
+            (in_shapes[0].numel() as f64, 0.0)
+        }
+        OpKind::LayerNorm => (in_shapes[0].numel() as f64 * 6.0, 0.15),
+        OpKind::Transpose | OpKind::Reshape { .. } | OpKind::Identity | OpKind::Concat { .. } => {
+            (0.0, 0.0)
+        }
+    };
+    OpCost {
+        flops,
+        bytes_in,
+        bytes_out,
+        transcendental_frac: trans,
+    }
+}
+
+/// Cost of a fusion group: flops add; *interior* tensors (produced and
+/// consumed entirely inside the group) do not touch HBM, which is the whole
+/// point of fusion. Exterior inputs are read once, group outputs written
+/// once. Tiling additionally deduplicates repeated reads of the same
+/// operand (modeled in the GPU layer via an efficiency factor, not here).
+pub fn group_cost(graph: &KernelGraph, group: &FusionGroup) -> OpCost {
+    let in_group = |r: &ValueRef| match r {
+        ValueRef::Node(i) => group.nodes.contains(i),
+        ValueRef::Input(_) => false,
+    };
+    let mut total = OpCost::default();
+    let mut trans_flops = 0.0;
+    for &ni in &group.nodes {
+        let c = node_cost(graph, ni);
+        total.flops += c.flops;
+        trans_flops += c.flops * c.transcendental_frac;
+        // Inputs: count only group-external reads.
+        for dep in &graph.nodes[ni].deps {
+            if !in_group(dep) {
+                total.bytes_in += graph.shape_of(*dep).numel() as f64
+                    * graph.dtype_of(*dep).size_bytes() as f64;
+            }
+        }
+        // Outputs: count only values escaping the group.
+        let users = graph.users_of(ValueRef::Node(ni));
+        let escapes = users.iter().any(|u| !group.nodes.contains(u))
+            || graph.outputs.contains(&ValueRef::Node(ni))
+            || users.is_empty();
+        if escapes {
+            total.bytes_out += graph.nodes[ni].shape.numel() as f64
+                * graph.nodes[ni].dtype.size_bytes() as f64;
+        }
+    }
+    // Split-K materializes a workspace (partial accumulators) round-trip.
+    if group.opts.split_k > 1 {
+        total.bytes_out += total.bytes_out.max(1.0) * (group.opts.split_k as f64 - 1.0) * 0.5;
+    }
+    total.transcendental_frac = if total.flops > 0.0 {
+        trans_flops / total.flops
+    } else {
+        0.0
+    };
+    total
+}
+
+/// Whole-schedule cost (sum over groups).
+pub fn schedule_cost(graph: &KernelGraph, schedule: &Schedule) -> OpCost {
+    let mut total = OpCost::default();
+    let mut trans = 0.0;
+    for g in &schedule.groups {
+        let c = group_cost(graph, g);
+        total.flops += c.flops;
+        total.bytes_in += c.bytes_in;
+        total.bytes_out += c.bytes_out;
+        trans += c.flops * c.transcendental_frac;
+    }
+    total.transcendental_frac = if total.flops > 0.0 { trans / total.flops } else { 0.0 };
+    total
+}
+
+/// Estimated scratch (shared-memory analog) bytes a group needs under its
+/// current tiling — occupancy input for the GPU model.
+pub fn group_scratch_bytes(graph: &KernelGraph, group: &FusionGroup) -> usize {
+    match group.opts.tiling {
+        Tiling::None => 0,
+        Tiling::Shared { tile } => {
+            // Two staged operand tiles (A-tile and B-tile) of `tile` width,
+            // times the block's row count (approximated by 32 lanes), at
+            // the group's widest dtype.
+            let elem = group
+                .nodes
+                .iter()
+                .map(|n| graph.nodes[*n].dtype.size_bytes())
+                .max()
+                .unwrap_or(4);
+            let factor = if group.opts.double_buffer { 2 } else { 1 };
+            2 * tile * 32 * elem * factor
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::schedule::Schedule;
+    use crate::kir::{GraphBuilder, OpKind};
+
+    fn mm_chain() -> KernelGraph {
+        let mut b = GraphBuilder::new("mm");
+        let x = b.input("x", &[64, 128]);
+        let w = b.input("w", &[128, 32]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        let r = b.op(OpKind::Relu, &[mm]);
+        b.output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn matmul_flops() {
+        let g = mm_chain();
+        let c = node_cost(&g, 0);
+        assert_eq!(c.flops, 2.0 * 64.0 * 128.0 * 32.0);
+        assert_eq!(c.bytes_in, (64.0 * 128.0 + 128.0 * 32.0) * 4.0);
+        assert_eq!(c.bytes_out, 64.0 * 32.0 * 4.0);
+        assert!(c.intensity() > 5.0);
+    }
+
+    #[test]
+    fn elementwise_low_intensity() {
+        let g = mm_chain();
+        let c = node_cost(&g, 1);
+        assert!(c.intensity() < 0.5);
+        assert_eq!(c.flops, 64.0 * 32.0);
+    }
+
+    #[test]
+    fn fusion_removes_interior_traffic() {
+        let g = mm_chain();
+        let naive = Schedule::naive(&g);
+        let naive_cost = schedule_cost(&g, &naive);
+        let mut fused = naive.clone();
+        fused.fuse(0, 1);
+        let fused_cost = schedule_cost(&g, &fused);
+        assert_eq!(naive_cost.flops, fused_cost.flops);
+        // Interior tensor (matmul output) no longer written+read:
+        let interior = 64.0 * 32.0 * 4.0;
+        assert!(
+            (naive_cost.bytes_total() - fused_cost.bytes_total() - 2.0 * interior).abs() < 1.0,
+            "naive={} fused={}",
+            naive_cost.bytes_total(),
+            fused_cost.bytes_total()
+        );
+    }
+
+    #[test]
+    fn split_k_adds_workspace_traffic() {
+        let g = mm_chain();
+        let s = Schedule::naive(&g);
+        let base = group_cost(&g, &s.groups[0]);
+        let mut g2 = s.groups[0].clone();
+        g2.opts.split_k = 4;
+        let with_split = group_cost(&g, &g2);
+        assert!(with_split.bytes_out > base.bytes_out);
+        assert_eq!(with_split.flops, base.flops);
+    }
+
+    #[test]
+    fn conv_cost_counts_macs() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.input("x", &[1, 3, 8, 8]);
+        let w = b.input("w", &[4, 3, 3, 3]);
+        let c = b.op(OpKind::Conv2d { stride: 1, pad: 1 }, &[x, w]);
+        b.output(c);
+        let g = b.finish();
+        let cost = node_cost(&g, 0);
+        // out = 1*4*8*8 = 256 elems, per-out = 2*3*3*3 = 54
+        assert_eq!(cost.flops, 256.0 * 54.0);
+    }
+
+    #[test]
+    fn transcendental_fraction_propagates() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[32, 32]);
+        let e = b.op(OpKind::Exp, &[x]);
+        b.output(e);
+        let g = b.finish();
+        let c = node_cost(&g, 0);
+        assert_eq!(c.transcendental_frac, 1.0);
+        let s = Schedule::naive(&g);
+        assert_eq!(schedule_cost(&g, &s).transcendental_frac, 1.0);
+    }
+
+    #[test]
+    fn scratch_bytes_reflect_tiling() {
+        let g = mm_chain();
+        let s = Schedule::naive(&g);
+        assert_eq!(group_scratch_bytes(&g, &s.groups[0]), 0);
+        let mut tiled = s.groups[0].clone();
+        tiled.opts.tiling = Tiling::Shared { tile: 64 };
+        let sb = group_scratch_bytes(&g, &tiled);
+        assert_eq!(sb, 2 * 64 * 32 * 4);
+        tiled.opts.double_buffer = true;
+        assert_eq!(group_scratch_bytes(&g, &tiled), 2 * sb);
+    }
+}

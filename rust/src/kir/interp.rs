@@ -1,0 +1,637 @@
+//! Reference interpreter for KIR graphs.
+//!
+//! This is the numeric oracle of the validation harness: after an agent
+//! transforms a kernel graph, the harness executes both the original task
+//! graph and the transformed graph on identical random inputs (multiple
+//! seeds, per the paper's §4.4 "multiple randomized seeds" rule) and
+//! compares outputs. Lowering bugs that change semantics — dropped ops,
+//! wrong reduction axes, stubbed work — are caught here, exactly as the
+//! paper's harness catches miscompiled CUDA.
+//!
+//! All arithmetic is f32 (matching the CUDA kernels' accumulate-in-f32
+//! convention); comparisons use a relative+absolute tolerance.
+
+use super::{DType, KernelGraph, OpKind, Shape, ValueRef};
+use crate::util::rng::Rng;
+
+/// A dense f32 tensor in row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Shape, data: Vec<f32>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        Self {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn random(shape: Shape, rng: &mut Rng) -> Self {
+        let n = shape.numel();
+        Self {
+            shape,
+            data: (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+        }
+    }
+
+    /// Row-major strides.
+    fn strides(&self) -> Vec<usize> {
+        let dims = &self.shape.0;
+        let mut s = vec![1usize; dims.len()];
+        for i in (0..dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * dims[i + 1];
+        }
+        s
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum InterpError {
+    #[error("missing input {0}")]
+    MissingInput(usize),
+    #[error("input {index} shape mismatch: expected {expected}, got {got}")]
+    InputShape {
+        index: usize,
+        expected: String,
+        got: String,
+    },
+}
+
+/// Execute the graph on the given inputs (indexed as graph.inputs).
+pub fn execute(graph: &KernelGraph, inputs: &[Tensor]) -> Result<Vec<Tensor>, InterpError> {
+    if inputs.len() != graph.inputs.len() {
+        return Err(InterpError::MissingInput(inputs.len()));
+    }
+    for (i, (spec, t)) in graph.inputs.iter().zip(inputs).enumerate() {
+        if spec.shape != t.shape {
+            return Err(InterpError::InputShape {
+                index: i,
+                expected: format!("{}", spec.shape),
+                got: format!("{}", t.shape),
+            });
+        }
+    }
+    // Values are evaluated in topological order; operands are borrowed,
+    // not cloned (§Perf: cloning intermediate tensors dominated the
+    // verification cost on multi-layer graphs).
+    let mut values: Vec<Tensor> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let operands: Vec<&Tensor> = node
+            .deps
+            .iter()
+            .map(|d| match d {
+                ValueRef::Input(i) => &inputs[*i],
+                ValueRef::Node(i) => &values[*i],
+            })
+            .collect();
+        let out = eval_op(&node.kind, &operands, &node.shape, node.dtype);
+        values.push(out);
+    }
+    Ok(graph
+        .outputs
+        .iter()
+        .map(|o| match o {
+            ValueRef::Input(i) => inputs[*i].clone(),
+            ValueRef::Node(i) => values[*i].clone(),
+        })
+        .collect())
+}
+
+/// Generate random inputs for a graph with a given seed.
+pub fn random_inputs(graph: &KernelGraph, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed).derive("interp-inputs");
+    graph
+        .inputs
+        .iter()
+        .map(|spec| Tensor::random(spec.shape.clone(), &mut rng))
+        .collect()
+}
+
+/// Numeric comparison: max |a-b| / (atol + rtol*|b|) <= 1.
+pub fn allclose(a: &Tensor, b: &Tensor, rtol: f32, atol: f32) -> bool {
+    if a.shape != b.shape {
+        return false;
+    }
+    a.data
+        .iter()
+        .zip(&b.data)
+        .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+/// Largest elementwise absolute difference (reported in harness feedback).
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    if a.shape != b.shape {
+        return f32::INFINITY;
+    }
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn eval_op(kind: &OpKind, operands: &[&Tensor], out_shape: &Shape, dtype: DType) -> Tensor {
+    let mut out = match kind {
+        OpKind::Matmul => matmul(operands[0], operands[1]),
+        OpKind::Conv2d { stride, pad } => conv2d(operands[0], operands[1], *stride, *pad),
+        OpKind::MaxPool2d { k, stride } => pool2d(operands[0], *k, *stride, PoolKind::Max),
+        OpKind::AvgPool2d { k, stride } => pool2d(operands[0], *k, *stride, PoolKind::Avg),
+        OpKind::BiasAdd { axis } => bias_add(operands[0], operands[1], *axis),
+        OpKind::Relu => map1(operands[0], |x| x.max(0.0)),
+        OpKind::Gelu => map1(operands[0], |x| {
+            // tanh approximation, matching jax.nn.gelu(approximate=True)
+            0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+        }),
+        OpKind::Sigmoid => map1(operands[0], |x| 1.0 / (1.0 + (-x).exp())),
+        OpKind::Tanh => map1(operands[0], f32::tanh),
+        OpKind::Exp => map1(operands[0], f32::exp),
+        OpKind::Scale { c } => {
+            let c = *c;
+            map1(operands[0], move |x| x * c)
+        }
+        OpKind::AddConst { c } => {
+            let c = *c;
+            map1(operands[0], move |x| x + c)
+        }
+        OpKind::DivConst { c } => {
+            let c = *c;
+            map1(operands[0], move |x| x / c)
+        }
+        OpKind::Add => map2(operands[0], operands[1], |a, b| a + b),
+        OpKind::Sub => map2(operands[0], operands[1], |a, b| a - b),
+        OpKind::Mul => map2(operands[0], operands[1], |a, b| a * b),
+        OpKind::Softmax { axis } => softmax(operands[0], *axis),
+        OpKind::LogSumExp { axis } => reduce(operands[0], *axis, ReduceKind::LogSumExp),
+        OpKind::ReduceSum { axis } => reduce(operands[0], *axis, ReduceKind::Sum),
+        OpKind::ReduceMax { axis } => reduce(operands[0], *axis, ReduceKind::Max),
+        OpKind::ReduceMean { axis } => reduce(operands[0], *axis, ReduceKind::Mean),
+        OpKind::Transpose => transpose(operands[0]),
+        OpKind::Reshape { shape } => Tensor::new(shape.clone(), operands[0].data.clone()),
+        OpKind::LayerNorm => layer_norm(operands[0]),
+        OpKind::Concat { axis } => concat(operands[0], operands[1], *axis),
+        OpKind::Identity => operands[0].clone(),
+    };
+    debug_assert_eq!(&out.shape, out_shape, "eval produced wrong shape for {kind:?}");
+    // Model reduced-precision storage: rounding through f16/bf16 between
+    // kernels. This keeps the oracle honest about mixed-precision kernels.
+    if dtype != DType::F32 {
+        for v in &mut out.data {
+            *v = round_to(*v, dtype);
+        }
+    }
+    out
+}
+
+fn round_to(x: f32, dtype: DType) -> f32 {
+    match dtype {
+        DType::F32 => x,
+        DType::BF16 => f32::from_bits(x.to_bits() & 0xFFFF_0000),
+        DType::F16 => {
+            // Crude but monotone f16 rounding: clamp + truncate mantissa to
+            // 10 bits. Adequate for tolerance-based comparisons.
+            let clamped = x.clamp(-65504.0, 65504.0);
+            let bits = clamped.to_bits();
+            f32::from_bits(bits & 0xFFFF_E000)
+        }
+    }
+}
+
+fn map1(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(a.shape.clone(), a.data.iter().map(|x| f(*x)).collect())
+}
+
+fn map2(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| f(*x, *y)).collect(),
+    )
+}
+
+fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape.dim(0), a.shape.dim(1));
+    let n = b.shape.dim(1);
+    assert_eq!(k, b.shape.dim(0));
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.data[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(Shape(vec![m, n]), out)
+}
+
+fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let (n, c_in, h, wd) = (
+        x.shape.dim(0),
+        x.shape.dim(1),
+        x.shape.dim(2),
+        x.shape.dim(3),
+    );
+    let (c_out, _, kh, kw) = (
+        w.shape.dim(0),
+        w.shape.dim(1),
+        w.shape.dim(2),
+        w.shape.dim(3),
+    );
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0.0f32; n * c_out * oh * ow];
+    // §Perf: slice-based inner loops (kx contiguous in both x and w)
+    // avoid per-element index arithmetic and bounds checks; interior
+    // output pixels (no padding clipping) take a branch-free fast path.
+    for b in 0..n {
+        for oc in 0..c_out {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..c_in {
+                        let x_base = (b * c_in + ic) * h;
+                        let w_base = (oc * c_in + ic) * kh;
+                        for ky in 0..kh {
+                            let iy = oy * stride + ky;
+                            if iy < pad || iy - pad >= h {
+                                continue;
+                            }
+                            let iy = iy - pad;
+                            let wrow = &w.data[(w_base + ky) * kw..(w_base + ky) * kw + kw];
+                            let ix0 = ox * stride;
+                            if ix0 >= pad && ix0 + kw - 1 < wd + pad {
+                                // Interior along x: whole kw run in-bounds.
+                                let xs = (x_base + iy) * wd + (ix0 - pad);
+                                let xrow = &x.data[xs..xs + kw];
+                                for (xv, wv) in xrow.iter().zip(wrow) {
+                                    acc += xv * wv;
+                                }
+                            } else {
+                                for (kx, wv) in wrow.iter().enumerate() {
+                                    let ix = ix0 + kx;
+                                    if ix < pad || ix - pad >= wd {
+                                        continue;
+                                    }
+                                    acc += x.data[(x_base + iy) * wd + (ix - pad)] * wv;
+                                }
+                            }
+                        }
+                    }
+                    out[((b * c_out + oc) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(Shape(vec![n, c_out, oh, ow]), out)
+}
+
+enum PoolKind {
+    Max,
+    Avg,
+}
+
+fn pool2d(x: &Tensor, k: usize, stride: usize, kind: PoolKind) -> Tensor {
+    let (n, c, h, w) = (
+        x.shape.dim(0),
+        x.shape.dim(1),
+        x.shape.dim(2),
+        x.shape.dim(3),
+    );
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = match kind {
+                        PoolKind::Max => f32::NEG_INFINITY,
+                        PoolKind::Avg => 0.0,
+                    };
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let v = x.data
+                                [((b * c + ch) * h + oy * stride + ky) * w + ox * stride + kx];
+                            match kind {
+                                PoolKind::Max => acc = acc.max(v),
+                                PoolKind::Avg => acc += v,
+                            }
+                        }
+                    }
+                    if matches!(kind, PoolKind::Avg) {
+                        acc /= (k * k) as f32;
+                    }
+                    out[((b * c + ch) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(Shape(vec![n, c, oh, ow]), out)
+}
+
+fn bias_add(x: &Tensor, bias: &Tensor, axis: usize) -> Tensor {
+    let strides = x.strides();
+    let dim = x.shape.dim(axis);
+    let stride = strides[axis];
+    let data = x
+        .data
+        .iter()
+        .enumerate()
+        .map(|(i, v)| v + bias.data[(i / stride) % dim])
+        .collect();
+    Tensor::new(x.shape.clone(), data)
+}
+
+enum ReduceKind {
+    Sum,
+    Max,
+    Mean,
+    LogSumExp,
+}
+
+/// Keepdim reduction along `axis`.
+fn reduce(x: &Tensor, axis: usize, kind: ReduceKind) -> Tensor {
+    let dims = &x.shape.0;
+    let axis_len = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let outer: usize = dims[..axis].iter().product();
+    let mut out_dims = dims.clone();
+    out_dims[axis] = 1;
+    let mut out = vec![0.0f32; outer * inner];
+    for o in 0..outer {
+        for i in 0..inner {
+            let at = |a: usize| x.data[o * axis_len * inner + a * inner + i];
+            let v = match kind {
+                ReduceKind::Sum => (0..axis_len).map(at).sum(),
+                ReduceKind::Mean => (0..axis_len).map(at).sum::<f32>() / axis_len as f32,
+                ReduceKind::Max => (0..axis_len).map(at).fold(f32::NEG_INFINITY, f32::max),
+                ReduceKind::LogSumExp => {
+                    let m = (0..axis_len).map(at).fold(f32::NEG_INFINITY, f32::max);
+                    let s: f32 = (0..axis_len).map(|a| (at(a) - m).exp()).sum();
+                    m + s.ln()
+                }
+            };
+            out[o * inner + i] = v;
+        }
+    }
+    Tensor::new(Shape(out_dims), out)
+}
+
+fn softmax(x: &Tensor, axis: usize) -> Tensor {
+    let dims = &x.shape.0;
+    let axis_len = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let outer: usize = dims[..axis].iter().product();
+    let mut out = vec![0.0f32; x.data.len()];
+    for o in 0..outer {
+        for i in 0..inner {
+            let idx = |a: usize| o * axis_len * inner + a * inner + i;
+            let m = (0..axis_len)
+                .map(|a| x.data[idx(a)])
+                .fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for a in 0..axis_len {
+                let e = (x.data[idx(a)] - m).exp();
+                out[idx(a)] = e;
+                denom += e;
+            }
+            for a in 0..axis_len {
+                out[idx(a)] /= denom;
+            }
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+fn transpose(x: &Tensor) -> Tensor {
+    let (m, n) = (x.shape.dim(0), x.shape.dim(1));
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = x.data[i * n + j];
+        }
+    }
+    Tensor::new(Shape(vec![n, m]), out)
+}
+
+fn concat(a: &Tensor, b: &Tensor, axis: usize) -> Tensor {
+    let a_dims = &a.shape.0;
+    let b_dims = &b.shape.0;
+    let outer: usize = a_dims[..axis].iter().product();
+    let a_block: usize = a_dims[axis..].iter().product();
+    let b_block: usize = b_dims[axis..].iter().product();
+    let mut out = Vec::with_capacity(a.data.len() + b.data.len());
+    for o in 0..outer {
+        out.extend_from_slice(&a.data[o * a_block..(o + 1) * a_block]);
+        out.extend_from_slice(&b.data[o * b_block..(o + 1) * b_block]);
+    }
+    let mut dims = a_dims.clone();
+    dims[axis] += b_dims[axis];
+    Tensor::new(Shape(dims), out)
+}
+
+/// LayerNorm over the last axis, eps 1e-5, no affine params.
+fn layer_norm(x: &Tensor) -> Tensor {
+    let dims = &x.shape.0;
+    let last = *dims.last().unwrap();
+    let rows = x.data.len() / last;
+    let mut out = vec![0.0f32; x.data.len()];
+    for r in 0..rows {
+        let row = &x.data[r * last..(r + 1) * last];
+        let mean: f32 = row.iter().sum::<f32>() / last as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / last as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (i, v) in row.iter().enumerate() {
+            out[r * last + i] = (v - mean) * inv;
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::{GraphBuilder, OpKind};
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(Shape(vec![2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(Shape(vec![2, 2]), vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with weight=1 is identity.
+        let x = Tensor::new(Shape(vec![1, 1, 2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(Shape(vec![1, 1, 1, 1]), vec![1.0]);
+        let y = conv2d(&x, &w, 1, 0);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_padding_sums() {
+        // 3x3 all-ones kernel, pad 1, on all-ones 3x3 input: center = 9,
+        // corners = 4, edges = 6.
+        let x = Tensor::new(Shape(vec![1, 1, 3, 3]), vec![1.0; 9]);
+        let w = Tensor::new(Shape(vec![1, 1, 3, 3]), vec![1.0; 9]);
+        let y = conv2d(&x, &w, 1, 1);
+        assert_eq!(y.shape, Shape(vec![1, 1, 3, 3]));
+        assert_eq!(y.data[4], 9.0);
+        assert_eq!(y.data[0], 4.0);
+        assert_eq!(y.data[1], 6.0);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::new(
+            Shape(vec![1, 1, 2, 2]),
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let y = pool2d(&x, 2, 2, PoolKind::Max);
+        assert_eq!(y.data, vec![5.0]);
+        let y = pool2d(&x, 2, 2, PoolKind::Avg);
+        assert_eq!(y.data, vec![2.75]);
+    }
+
+    #[test]
+    fn logsumexp_on_singleton_axis_is_identity() {
+        // The Level-2 Q18 algebraic fact: logsumexp over a size-1 axis is x.
+        let x = Tensor::new(Shape(vec![3, 1]), vec![0.5, -2.0, 7.0]);
+        let y = reduce(&x, 1, ReduceKind::LogSumExp);
+        assert!(allclose(&x, &y, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn logsumexp_matches_manual() {
+        let x = Tensor::new(Shape(vec![1, 3]), vec![1.0, 2.0, 3.0]);
+        let y = reduce(&x, 1, ReduceKind::LogSumExp);
+        let expected = ((1.0f32).exp() + (2.0f32).exp() + (3.0f32).exp()).ln();
+        assert!((y.data[0] - expected).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::random(Shape(vec![4, 7]), &mut rng);
+        let y = softmax(&x, 1);
+        for r in 0..4 {
+            let s: f32 = y.data[r * 7..(r + 1) * 7].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_add_axis1() {
+        let x = Tensor::new(Shape(vec![2, 3]), vec![0.0; 6]);
+        let b = Tensor::new(Shape(vec![3]), vec![1.0, 2.0, 3.0]);
+        let y = bias_add(&x, &b, 1);
+        assert_eq!(y.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bias_add_axis1_nchw() {
+        // Channel bias on NCHW: axis=1 broadcast over H,W.
+        let x = Tensor::new(Shape(vec![1, 2, 1, 2]), vec![0.0; 4]);
+        let b = Tensor::new(Shape(vec![2]), vec![10.0, 20.0]);
+        let y = bias_add(&x, &b, 1);
+        assert_eq!(y.data, vec![10.0, 10.0, 20.0, 20.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(7);
+        let x = Tensor::random(Shape(vec![3, 5]), &mut rng);
+        let y = transpose(&transpose(&x));
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut rng = Rng::new(9);
+        let x = Tensor::random(Shape(vec![2, 64]), &mut rng);
+        let y = layer_norm(&x);
+        for r in 0..2 {
+            let row = &y.data[r * 64..(r + 1) * 64];
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn graph_execution_end_to_end() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3]);
+        let w = b.input("w", &[3, 2]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        let act = b.op(OpKind::Relu, &[mm]);
+        b.output(act);
+        let g = b.finish();
+        let xs = vec![
+            Tensor::new(Shape(vec![2, 3]), vec![1.0, 0.0, -1.0, 2.0, 2.0, 2.0]),
+            Tensor::new(Shape(vec![3, 2]), vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]),
+        ];
+        let out = execute(&g, &xs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].data, vec![0.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_shape_inputs() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3]);
+        let y = b.op(OpKind::Relu, &[x]);
+        b.output(y);
+        let g = b.finish();
+        let bad = vec![Tensor::zeros(Shape(vec![3, 2]))];
+        assert!(execute(&g, &bad).is_err());
+    }
+
+    #[test]
+    fn random_inputs_deterministic() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 4]);
+        let y = b.op(OpKind::Relu, &[x]);
+        b.output(y);
+        let g = b.finish();
+        assert_eq!(random_inputs(&g, 1)[0], random_inputs(&g, 1)[0]);
+        assert_ne!(random_inputs(&g, 1)[0], random_inputs(&g, 2)[0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(Shape(vec![2]), vec![1.0, 100.0]);
+        let b = Tensor::new(Shape(vec![2]), vec![1.0 + 1e-6, 100.0 + 1e-4]);
+        assert!(allclose(&a, &b, 1e-5, 1e-5));
+        let c = Tensor::new(Shape(vec![2]), vec![1.1, 100.0]);
+        assert!(!allclose(&a, &c, 1e-5, 1e-5));
+        assert!(max_abs_diff(&a, &c) > 0.09);
+    }
+
+    #[test]
+    fn bf16_rounding_monotone_and_close() {
+        for x in [0.1f32, -3.75, 1000.0, 1e-3] {
+            let r = round_to(x, DType::BF16);
+            assert!((r - x).abs() / x.abs() < 0.01, "x={x} r={r}");
+        }
+        let r = round_to(70000.0, DType::F16);
+        assert!(r <= 65504.0);
+    }
+}

@@ -1,0 +1,853 @@
+//! KIR — the Kernel Intermediate Representation.
+//!
+//! The paper's agents transform CUDA source; our reproduction substitutes a
+//! structured IR that every optimization technique in Figs. 12–14 can act on
+//! *as a real transformation with checkable semantics*:
+//!
+//! - a dataflow graph of tensor ops ([`KernelGraph`]) — the "what",
+//! - a [`schedule::Schedule`] partitioning the graph into kernel launches
+//!   with per-launch execution attributes (tiling, vectorization, ILP, …)
+//!   — the "how",
+//! - a reference interpreter ([`interp`]) — the numeric oracle used by the
+//!   validation harness,
+//! - a CUDA-like source renderer ([`render`]) — used for token accounting
+//!   and the soft-verification pass,
+//! - per-op cost queries ([`cost`]) — consumed by the GPU performance model.
+
+pub mod cost;
+pub mod interp;
+pub mod render;
+pub mod schedule;
+
+use std::fmt;
+
+/// Element type. The simulator models fp32 as the default; fp16/bf16 enable
+/// tensor-core (MXU-analog) execution and halve memory traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::BF16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+        }
+    }
+}
+
+/// Tensor shape, up to 4-D (N, C, H, W) conventions where relevant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Self {
+        Shape(vec![])
+    }
+
+    pub fn of(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Reference to a value in the graph: either a graph input or a node output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ValueRef {
+    /// Index into `KernelGraph::inputs`.
+    Input(usize),
+    /// Index into `KernelGraph::nodes`.
+    Node(usize),
+}
+
+/// A named graph input (parameter or activation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+/// Tensor operations. Arity and shape rules are enforced by the builder.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// C[m,n] = A[m,k] @ B[k,n]
+    Matmul,
+    /// NCHW conv; weight is [c_out, c_in, kh, kw].
+    Conv2d {
+        stride: usize,
+        pad: usize,
+    },
+    /// NCHW max pool, no padding.
+    MaxPool2d {
+        k: usize,
+        stride: usize,
+    },
+    /// NCHW average pool, no padding.
+    AvgPool2d {
+        k: usize,
+        stride: usize,
+    },
+    /// Add a bias vector along the given axis (broadcast elsewhere).
+    BiasAdd {
+        axis: usize,
+    },
+    Relu,
+    Gelu,
+    Sigmoid,
+    Tanh,
+    Exp,
+    /// x * c
+    Scale {
+        c: f32,
+    },
+    /// x + c
+    AddConst {
+        c: f32,
+    },
+    /// Elementwise binary ops over same-shape operands.
+    Add,
+    Sub,
+    Mul,
+    /// x / c (the paper's "division by scalar" epilogues).
+    DivConst {
+        c: f32,
+    },
+    /// Softmax along an axis.
+    Softmax {
+        axis: usize,
+    },
+    /// logsumexp along an axis, keepdim (shape keeps a 1 there) — the
+    /// Level-2 Q18 op the paper's algebraic simplification eliminates.
+    LogSumExp {
+        axis: usize,
+    },
+    /// Sum-reduce along an axis, keepdim.
+    ReduceSum {
+        axis: usize,
+    },
+    /// Max-reduce along an axis, keepdim.
+    ReduceMax {
+        axis: usize,
+    },
+    /// Mean-reduce along an axis, keepdim.
+    ReduceMean {
+        axis: usize,
+    },
+    /// 2-D transpose.
+    Transpose,
+    /// Reshape to a target shape (same numel).
+    Reshape {
+        shape: Shape,
+    },
+    /// LayerNorm over the last axis.
+    LayerNorm,
+    /// Concatenate two tensors along an axis (SqueezeNet Fire expand).
+    Concat {
+        axis: usize,
+    },
+    /// Identity / copy. Appears when a lowering bug stubs out work, and as a
+    /// reward-hacking vector the soft verifier must catch.
+    Identity,
+}
+
+impl OpKind {
+    /// Number of tensor operands this op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpKind::Matmul | OpKind::Add | OpKind::Sub | OpKind::Mul => 2,
+            OpKind::Conv2d { .. } | OpKind::BiasAdd { .. } | OpKind::Concat { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Short mnemonic used in rendering, reports, and state signatures.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Matmul => "matmul",
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::MaxPool2d { .. } => "maxpool2d",
+            OpKind::AvgPool2d { .. } => "avgpool2d",
+            OpKind::BiasAdd { .. } => "bias_add",
+            OpKind::Relu => "relu",
+            OpKind::Gelu => "gelu",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::Tanh => "tanh",
+            OpKind::Exp => "exp",
+            OpKind::Scale { .. } => "scale",
+            OpKind::AddConst { .. } => "add_const",
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::DivConst { .. } => "div_const",
+            OpKind::Softmax { .. } => "softmax",
+            OpKind::LogSumExp { .. } => "logsumexp",
+            OpKind::ReduceSum { .. } => "reduce_sum",
+            OpKind::ReduceMax { .. } => "reduce_max",
+            OpKind::ReduceMean { .. } => "reduce_mean",
+            OpKind::Transpose => "transpose",
+            OpKind::Reshape { .. } => "reshape",
+            OpKind::LayerNorm => "layer_norm",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Identity => "identity",
+        }
+    }
+
+    /// True for ops that are dominated by a contraction (matmul-like inner
+    /// product) — the tensor-core-eligible class.
+    pub fn is_contraction(&self) -> bool {
+        matches!(self, OpKind::Matmul | OpKind::Conv2d { .. })
+    }
+
+    /// True for cheap elementwise ops (fusion epilogue candidates).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Relu
+                | OpKind::Gelu
+                | OpKind::Sigmoid
+                | OpKind::Tanh
+                | OpKind::Exp
+                | OpKind::Scale { .. }
+                | OpKind::AddConst { .. }
+                | OpKind::Add
+                | OpKind::Sub
+                | OpKind::Mul
+                | OpKind::DivConst { .. }
+                | OpKind::BiasAdd { .. }
+                | OpKind::Identity
+        )
+    }
+
+    /// True for reduction-style ops.
+    pub fn is_reduction(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Softmax { .. }
+                | OpKind::LogSumExp { .. }
+                | OpKind::ReduceSum { .. }
+                | OpKind::ReduceMax { .. }
+                | OpKind::ReduceMean { .. }
+                | OpKind::LayerNorm
+                | OpKind::MaxPool2d { .. }
+                | OpKind::AvgPool2d { .. }
+        )
+    }
+}
+
+/// One node in the dataflow graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub kind: OpKind,
+    pub deps: Vec<ValueRef>,
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+/// The kernel dataflow graph. Nodes are in topological order by
+/// construction (deps may only reference inputs or earlier nodes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelGraph {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub nodes: Vec<Node>,
+    /// Graph outputs (usually one).
+    pub outputs: Vec<ValueRef>,
+}
+
+/// Errors from graph construction / validation.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KirError {
+    #[error("op {op} expects {expected} operands, got {got}")]
+    Arity {
+        op: String,
+        expected: usize,
+        got: usize,
+    },
+    #[error("shape mismatch at {context}: {a} vs {b}")]
+    ShapeMismatch {
+        context: String,
+        a: String,
+        b: String,
+    },
+    #[error("invalid reference {0:?}")]
+    BadRef(ValueRef),
+    #[error("axis {axis} out of range for rank {rank}")]
+    BadAxis { axis: usize, rank: usize },
+    #[error("{0}")]
+    Invalid(String),
+}
+
+impl KernelGraph {
+    pub fn shape_of(&self, r: ValueRef) -> &Shape {
+        match r {
+            ValueRef::Input(i) => &self.inputs[i].shape,
+            ValueRef::Node(i) => &self.nodes[i].shape,
+        }
+    }
+
+    pub fn dtype_of(&self, r: ValueRef) -> DType {
+        match r {
+            ValueRef::Input(i) => self.inputs[i].dtype,
+            ValueRef::Node(i) => self.nodes[i].dtype,
+        }
+    }
+
+    /// Users (node indices) of each value, useful for fusion legality.
+    pub fn users_of(&self, r: ValueRef) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.deps.contains(&r))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Validate internal consistency: refs in range and topological,
+    /// arities and shapes consistent. This is the "compile check" of the
+    /// execution harness.
+    pub fn validate(&self) -> Result<(), KirError> {
+        for (idx, node) in self.nodes.iter().enumerate() {
+            if node.deps.len() != node.kind.arity() {
+                return Err(KirError::Arity {
+                    op: node.kind.mnemonic().to_string(),
+                    expected: node.kind.arity(),
+                    got: node.deps.len(),
+                });
+            }
+            for dep in &node.deps {
+                match dep {
+                    ValueRef::Input(i) if *i >= self.inputs.len() => {
+                        return Err(KirError::BadRef(*dep))
+                    }
+                    ValueRef::Node(i) if *i >= idx => return Err(KirError::BadRef(*dep)),
+                    _ => {}
+                }
+            }
+            let expected = infer_shape(
+                &node.kind,
+                &node
+                    .deps
+                    .iter()
+                    .map(|d| self.shape_of(*d).clone())
+                    .collect::<Vec<_>>(),
+            )?;
+            if expected != node.shape {
+                return Err(KirError::ShapeMismatch {
+                    context: format!("node {idx} ({})", node.kind.mnemonic()),
+                    a: format!("{expected}"),
+                    b: format!("{}", node.shape),
+                });
+            }
+        }
+        for out in &self.outputs {
+            match out {
+                ValueRef::Input(i) if *i >= self.inputs.len() => {
+                    return Err(KirError::BadRef(*out))
+                }
+                ValueRef::Node(i) if *i >= self.nodes.len() => {
+                    return Err(KirError::BadRef(*out))
+                }
+                _ => {}
+            }
+        }
+        if self.outputs.is_empty() {
+            return Err(KirError::Invalid("graph has no outputs".to_string()));
+        }
+        Ok(())
+    }
+
+    /// Replace every use of `old` (in node deps and graph outputs) with
+    /// `new`. Used by graph rewrites before removing a node.
+    pub fn replace_value(&mut self, old: ValueRef, new: ValueRef) {
+        for node in &mut self.nodes {
+            for dep in &mut node.deps {
+                if *dep == old {
+                    *dep = new;
+                }
+            }
+        }
+        for out in &mut self.outputs {
+            if *out == old {
+                *out = new;
+            }
+        }
+    }
+
+    /// Remove node `idx`. The node must have no remaining users (call
+    /// [`Self::replace_value`] first). All later node references shift
+    /// down by one. Returns an error if the node still has users.
+    pub fn remove_node(&mut self, idx: usize) -> Result<(), KirError> {
+        let r = ValueRef::Node(idx);
+        if !self.users_of(r).is_empty() || self.outputs.contains(&r) {
+            return Err(KirError::Invalid(format!(
+                "node {idx} still has users; rewire before removal"
+            )));
+        }
+        self.nodes.remove(idx);
+        let shift = |v: &mut ValueRef| {
+            if let ValueRef::Node(i) = v {
+                if *i > idx {
+                    *i -= 1;
+                }
+            }
+        };
+        for node in &mut self.nodes {
+            for dep in &mut node.deps {
+                shift(dep);
+            }
+        }
+        for out in &mut self.outputs {
+            shift(out);
+        }
+        Ok(())
+    }
+
+    /// Node indices that are dead: not outputs and (transitively) unused.
+    /// Returned in descending order so they can be removed one by one.
+    pub fn dead_nodes(&self) -> Vec<usize> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<usize> = self
+            .outputs
+            .iter()
+            .filter_map(|o| match o {
+                ValueRef::Node(i) => Some(*i),
+                _ => None,
+            })
+            .collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            for dep in &self.nodes[i].deps {
+                if let ValueRef::Node(d) = dep {
+                    stack.push(*d);
+                }
+            }
+        }
+        (0..self.nodes.len()).rev().filter(|i| !live[*i]).collect()
+    }
+
+    /// Count of nodes of each coarse class — part of the state signature.
+    pub fn op_census(&self) -> OpCensus {
+        let mut c = OpCensus::default();
+        for n in &self.nodes {
+            if n.kind.is_contraction() {
+                c.contractions += 1;
+            } else if n.kind.is_reduction() {
+                c.reductions += 1;
+            } else if n.kind.is_elementwise() {
+                c.elementwise += 1;
+            } else {
+                c.other += 1;
+            }
+        }
+        c
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCensus {
+    pub contractions: usize,
+    pub reductions: usize,
+    pub elementwise: usize,
+    pub other: usize,
+}
+
+impl OpCensus {
+    pub fn total(&self) -> usize {
+        self.contractions + self.reductions + self.elementwise + self.other
+    }
+}
+
+/// Shape inference for an op applied to operand shapes.
+pub fn infer_shape(kind: &OpKind, operands: &[Shape]) -> Result<Shape, KirError> {
+    let need = |n: usize| -> Result<(), KirError> {
+        if operands.len() != n {
+            Err(KirError::Arity {
+                op: kind.mnemonic().to_string(),
+                expected: n,
+                got: operands.len(),
+            })
+        } else {
+            Ok(())
+        }
+    };
+    match kind {
+        OpKind::Matmul => {
+            need(2)?;
+            let (a, b) = (&operands[0], &operands[1]);
+            if a.rank() != 2 || b.rank() != 2 || a.dim(1) != b.dim(0) {
+                return Err(KirError::ShapeMismatch {
+                    context: "matmul".to_string(),
+                    a: format!("{a}"),
+                    b: format!("{b}"),
+                });
+            }
+            Ok(Shape(vec![a.dim(0), b.dim(1)]))
+        }
+        OpKind::Conv2d { stride, pad } => {
+            need(2)?;
+            let (x, w) = (&operands[0], &operands[1]);
+            if x.rank() != 4 || w.rank() != 4 || x.dim(1) != w.dim(1) {
+                return Err(KirError::ShapeMismatch {
+                    context: "conv2d".to_string(),
+                    a: format!("{x}"),
+                    b: format!("{w}"),
+                });
+            }
+            let oh = (x.dim(2) + 2 * pad).checked_sub(w.dim(2)).map(|v| v / stride + 1);
+            let ow = (x.dim(3) + 2 * pad).checked_sub(w.dim(3)).map(|v| v / stride + 1);
+            match (oh, ow) {
+                (Some(oh), Some(ow)) if oh > 0 && ow > 0 => {
+                    Ok(Shape(vec![x.dim(0), w.dim(0), oh, ow]))
+                }
+                _ => Err(KirError::Invalid(format!(
+                    "conv2d kernel {w} too large for input {x}"
+                ))),
+            }
+        }
+        OpKind::MaxPool2d { k, stride } | OpKind::AvgPool2d { k, stride } => {
+            need(1)?;
+            let x = &operands[0];
+            if x.rank() != 4 || x.dim(2) < *k || x.dim(3) < *k {
+                return Err(KirError::Invalid(format!("pool2d on {x} with k={k}")));
+            }
+            let oh = (x.dim(2) - k) / stride + 1;
+            let ow = (x.dim(3) - k) / stride + 1;
+            Ok(Shape(vec![x.dim(0), x.dim(1), oh, ow]))
+        }
+        OpKind::BiasAdd { axis } => {
+            need(2)?;
+            let (x, b) = (&operands[0], &operands[1]);
+            if *axis >= x.rank() {
+                return Err(KirError::BadAxis {
+                    axis: *axis,
+                    rank: x.rank(),
+                });
+            }
+            if b.rank() != 1 || b.dim(0) != x.dim(*axis) {
+                return Err(KirError::ShapeMismatch {
+                    context: format!("bias_add axis {axis}"),
+                    a: format!("{x}"),
+                    b: format!("{b}"),
+                });
+            }
+            Ok(x.clone())
+        }
+        OpKind::Add | OpKind::Sub | OpKind::Mul => {
+            need(2)?;
+            if operands[0] != operands[1] {
+                return Err(KirError::ShapeMismatch {
+                    context: kind.mnemonic().to_string(),
+                    a: format!("{}", operands[0]),
+                    b: format!("{}", operands[1]),
+                });
+            }
+            Ok(operands[0].clone())
+        }
+        OpKind::Relu
+        | OpKind::Gelu
+        | OpKind::Sigmoid
+        | OpKind::Tanh
+        | OpKind::Exp
+        | OpKind::Scale { .. }
+        | OpKind::AddConst { .. }
+        | OpKind::DivConst { .. }
+        | OpKind::Identity
+        | OpKind::LayerNorm => {
+            need(1)?;
+            Ok(operands[0].clone())
+        }
+        OpKind::Softmax { axis } => {
+            need(1)?;
+            if *axis >= operands[0].rank() {
+                return Err(KirError::BadAxis {
+                    axis: *axis,
+                    rank: operands[0].rank(),
+                });
+            }
+            Ok(operands[0].clone())
+        }
+        OpKind::LogSumExp { axis }
+        | OpKind::ReduceSum { axis }
+        | OpKind::ReduceMax { axis }
+        | OpKind::ReduceMean { axis } => {
+            need(1)?;
+            let x = &operands[0];
+            if *axis >= x.rank() {
+                return Err(KirError::BadAxis {
+                    axis: *axis,
+                    rank: x.rank(),
+                });
+            }
+            let mut dims = x.0.clone();
+            dims[*axis] = 1;
+            Ok(Shape(dims))
+        }
+        OpKind::Transpose => {
+            need(1)?;
+            let x = &operands[0];
+            if x.rank() != 2 {
+                return Err(KirError::Invalid(format!("transpose needs rank-2, got {x}")));
+            }
+            Ok(Shape(vec![x.dim(1), x.dim(0)]))
+        }
+        OpKind::Concat { axis } => {
+            need(2)?;
+            let (a, b) = (&operands[0], &operands[1]);
+            if a.rank() != b.rank() || *axis >= a.rank() {
+                return Err(KirError::ShapeMismatch {
+                    context: format!("concat axis {axis}"),
+                    a: format!("{a}"),
+                    b: format!("{b}"),
+                });
+            }
+            for d in 0..a.rank() {
+                if d != *axis && a.dim(d) != b.dim(d) {
+                    return Err(KirError::ShapeMismatch {
+                        context: format!("concat axis {axis} (dim {d})"),
+                        a: format!("{a}"),
+                        b: format!("{b}"),
+                    });
+                }
+            }
+            let mut dims = a.0.clone();
+            dims[*axis] += b.dim(*axis);
+            Ok(Shape(dims))
+        }
+        OpKind::Reshape { shape } => {
+            need(1)?;
+            if shape.numel() != operands[0].numel() {
+                return Err(KirError::ShapeMismatch {
+                    context: "reshape".to_string(),
+                    a: format!("{}", operands[0]),
+                    b: format!("{shape}"),
+                });
+            }
+            Ok(shape.clone())
+        }
+    }
+}
+
+/// Fluent builder that maintains the topological invariant and infers
+/// shapes, so constructing an invalid graph is hard.
+pub struct GraphBuilder {
+    graph: KernelGraph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        Self {
+            graph: KernelGraph {
+                name: name.to_string(),
+                inputs: Vec::new(),
+                nodes: Vec::new(),
+                outputs: Vec::new(),
+            },
+        }
+    }
+
+    pub fn input(&mut self, name: &str, dims: &[usize]) -> ValueRef {
+        self.input_typed(name, dims, DType::F32)
+    }
+
+    pub fn input_typed(&mut self, name: &str, dims: &[usize], dtype: DType) -> ValueRef {
+        self.graph.inputs.push(TensorSpec {
+            name: name.to_string(),
+            shape: Shape::of(dims),
+            dtype,
+        });
+        ValueRef::Input(self.graph.inputs.len() - 1)
+    }
+
+    pub fn op(&mut self, kind: OpKind, deps: &[ValueRef]) -> ValueRef {
+        let operand_shapes: Vec<Shape> =
+            deps.iter().map(|d| self.graph.shape_of(*d).clone()).collect();
+        let shape = infer_shape(&kind, &operand_shapes)
+            .unwrap_or_else(|e| panic!("graph '{}': {e}", self.graph.name));
+        let dtype = deps
+            .first()
+            .map(|d| self.graph.dtype_of(*d))
+            .unwrap_or(DType::F32);
+        self.graph.nodes.push(Node {
+            kind,
+            deps: deps.to_vec(),
+            shape,
+            dtype,
+        });
+        ValueRef::Node(self.graph.nodes.len() - 1)
+    }
+
+    pub fn output(&mut self, r: ValueRef) -> &mut Self {
+        self.graph.outputs.push(r);
+        self
+    }
+
+    pub fn finish(self) -> KernelGraph {
+        let g = self.graph;
+        g.validate()
+            .unwrap_or_else(|e| panic!("graph '{}' failed validation: {e}", g.name));
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_graph() -> KernelGraph {
+        let mut b = GraphBuilder::new("linear");
+        let x = b.input("x", &[8, 16]);
+        let w = b.input("w", &[16, 4]);
+        let bias = b.input("b", &[4]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        let biased = b.op(OpKind::BiasAdd { axis: 1 }, &[mm, bias]);
+        let act = b.op(OpKind::Relu, &[biased]);
+        b.output(act);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_infers_shapes() {
+        let g = linear_graph();
+        assert_eq!(g.nodes[0].shape, Shape::of(&[8, 4]));
+        assert_eq!(g.nodes[2].shape, Shape::of(&[8, 4]));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn census_classifies() {
+        let g = linear_graph();
+        let c = g.op_census();
+        assert_eq!(c.contractions, 1);
+        assert_eq!(c.elementwise, 2);
+        assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        // LeNet conv1: 1x1x28x28, 6x1x5x5, pad 2 → 1x6x28x28
+        let s = infer_shape(
+            &OpKind::Conv2d { stride: 1, pad: 2 },
+            &[Shape::of(&[1, 1, 28, 28]), Shape::of(&[6, 1, 5, 5])],
+        )
+        .unwrap();
+        assert_eq!(s, Shape::of(&[1, 6, 28, 28]));
+        // no pad → 24x24
+        let s = infer_shape(
+            &OpKind::Conv2d { stride: 1, pad: 0 },
+            &[Shape::of(&[1, 1, 28, 28]), Shape::of(&[6, 1, 5, 5])],
+        )
+        .unwrap();
+        assert_eq!(s, Shape::of(&[1, 6, 24, 24]));
+    }
+
+    #[test]
+    fn pool_shape_inference() {
+        let s = infer_shape(
+            &OpKind::MaxPool2d { k: 2, stride: 2 },
+            &[Shape::of(&[1, 6, 28, 28])],
+        )
+        .unwrap();
+        assert_eq!(s, Shape::of(&[1, 6, 14, 14]));
+    }
+
+    #[test]
+    fn reduce_keepdim() {
+        let s = infer_shape(&OpKind::LogSumExp { axis: 1 }, &[Shape::of(&[32, 10])]).unwrap();
+        assert_eq!(s, Shape::of(&[32, 1]));
+    }
+
+    #[test]
+    fn matmul_mismatch_rejected() {
+        let e = infer_shape(
+            &OpKind::Matmul,
+            &[Shape::of(&[2, 3]), Shape::of(&[4, 5])],
+        );
+        assert!(matches!(e, Err(KirError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn bad_axis_rejected() {
+        let e = infer_shape(&OpKind::ReduceSum { axis: 3 }, &[Shape::of(&[2, 3])]);
+        assert!(matches!(e, Err(KirError::BadAxis { .. })));
+    }
+
+    #[test]
+    fn validate_catches_forward_ref() {
+        let mut g = linear_graph();
+        // Corrupt: node 0 depends on node 2 (forward reference).
+        g.nodes[0].deps[0] = ValueRef::Node(2);
+        assert!(matches!(g.validate(), Err(KirError::BadRef(_))));
+    }
+
+    #[test]
+    fn validate_catches_shape_corruption() {
+        let mut g = linear_graph();
+        g.nodes[1].shape = Shape::of(&[9, 9]);
+        assert!(matches!(g.validate(), Err(KirError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn users_of_finds_consumers() {
+        let g = linear_graph();
+        assert_eq!(g.users_of(ValueRef::Node(0)), vec![1]);
+        assert_eq!(g.users_of(ValueRef::Input(0)), vec![0]);
+        assert!(g.users_of(ValueRef::Node(2)).is_empty());
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        assert!(infer_shape(
+            &OpKind::Reshape {
+                shape: Shape::of(&[4, 4])
+            },
+            &[Shape::of(&[2, 8])]
+        )
+        .is_ok());
+        assert!(infer_shape(
+            &OpKind::Reshape {
+                shape: Shape::of(&[4, 5])
+            },
+            &[Shape::of(&[2, 8])]
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! CUDA-like source rendering of (graph, schedule) pairs.
+//!
+//! The paper's agents read and write CUDA source; ours act on KIR, but two
+//! parts of the system still need a source-text view:
+//!
+//! 1. **Token accounting** (§4.10 / Fig. 10): prompt and completion sizes
+//!    scale with the rendered kernel source, reproducing the paper's
+//!    observation that Level-3 problems are "extremely verbose source
+//!    files … diluting LLMs' ability to identify performance signals".
+//! 2. **Soft verification** (§4.4): the LLM-based verifier scans the
+//!    rendered source for structural red flags (eliminated functionality,
+//!    external library calls).
+//!
+//! The renderer is deterministic and cheap; it does not aim to be
+//! compilable CUDA, but it is structurally faithful: one `__global__`
+//! function per fusion group, loop nests reflecting the schedule flags.
+
+use super::schedule::{Schedule, Tiling};
+use super::{KernelGraph, OpKind};
+
+/// Render the full "source file" for a scheduled kernel.
+pub fn render(graph: &KernelGraph, schedule: &Schedule) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str(&format!(
+        "// generated kernel: {} ({} launches)\n#include <cuda_runtime.h>\n\n",
+        graph.name,
+        schedule.n_launches()
+    ));
+    for (gi, group) in schedule.groups.iter().enumerate() {
+        let ops: Vec<&'static str> = group
+            .nodes
+            .iter()
+            .map(|n| graph.nodes[*n].kind.mnemonic())
+            .collect();
+        out.push_str(&format!(
+            "__global__ void kernel_{gi}_{}(/* {} */) {{\n",
+            ops.join("_"),
+            describe_flags(group)
+        ));
+        if group.opts.vendor_lib {
+            out.push_str("    // dispatch to vendor library (cudnn/cublas)\n");
+            out.push_str(&format!("    cudnnConvolutionForward_or_cublasGemmEx();\n"));
+        }
+        if let Tiling::Shared { tile } = group.opts.tiling {
+            out.push_str(&format!(
+                "    __shared__ float s_tile[{tile}][32];  // staged operand tile\n"
+            ));
+            if group.opts.double_buffer {
+                out.push_str(&format!(
+                    "    __shared__ float s_tile_next[{tile}][32];  // double buffer\n"
+                ));
+            }
+        }
+        if group.opts.ilp > 1 {
+            out.push_str(&format!(
+                "    float acc[{}];  // independent accumulators (ILP)\n",
+                group.opts.ilp
+            ));
+        }
+        for &ni in &group.nodes {
+            render_node_body(graph, ni, group.opts.unroll, &mut out);
+        }
+        if group.opts.warp_shuffle_reduction {
+            out.push_str(
+                "    for (int o = 16; o > 0; o >>= 1) v += __shfl_down_sync(0xffffffff, v, o);\n",
+            );
+        }
+        if group.opts.split_k > 1 {
+            out.push_str(&format!(
+                "    atomicAdd(&workspace[out_idx], partial);  // split-K x{}\n",
+                group.opts.split_k
+            ));
+        }
+        out.push_str("}\n\n");
+        out.push_str(&format!(
+            "// launch: <<<{}, {}>>> regs/thread={} {}\n\n",
+            group.launch.grid,
+            group.launch.block,
+            group.opts.regs_per_thread,
+            if group.opts.fast_math { "-use_fast_math" } else { "" }
+        ));
+    }
+    out
+}
+
+fn describe_flags(group: &super::schedule::FusionGroup) -> String {
+    let o = &group.opts;
+    let mut parts = Vec::new();
+    if !matches!(o.tiling, Tiling::None) {
+        parts.push("smem-tiled".to_string());
+    }
+    if o.tensor_core {
+        parts.push("wmma".to_string());
+    }
+    if o.vector_width > 1 {
+        parts.push(format!("vec{}", o.vector_width));
+    }
+    if o.coarsening > 1 {
+        parts.push(format!("coarsen{}", o.coarsening));
+    }
+    if o.simplified_control_flow {
+        parts.push("branchless".to_string());
+    }
+    if parts.is_empty() {
+        parts.push("naive".to_string());
+    }
+    parts.join(",")
+}
+
+fn render_node_body(graph: &KernelGraph, ni: usize, unroll: usize, out: &mut String) {
+    let node = &graph.nodes[ni];
+    let pragma = if unroll > 1 {
+        format!("    #pragma unroll {unroll}\n")
+    } else {
+        String::new()
+    };
+    match &node.kind {
+        OpKind::Matmul => {
+            out.push_str(&pragma);
+            out.push_str(&format!(
+                "    for (int k = 0; k < K; ++k) acc += a[row*K+k] * b[k*N+col];  // matmul {}\n",
+                node.shape
+            ));
+        }
+        OpKind::Conv2d { stride, pad } => {
+            out.push_str(&pragma);
+            out.push_str(&format!(
+                "    for (int ic=0;ic<C;++ic) for (int ky=0;ky<KH;++ky) for (int kx=0;kx<KW;++kx)\n        acc += x[...] * w[...];  // conv2d s={stride} p={pad} {}\n",
+                node.shape
+            ));
+        }
+        OpKind::MaxPool2d { k, .. } => {
+            out.push_str(&format!(
+                "    for (int i=0;i<{k}*{k};++i) m = fmaxf(m, window[i]);  // maxpool\n"
+            ));
+        }
+        OpKind::AvgPool2d { k, .. } => {
+            out.push_str(&format!(
+                "    for (int i=0;i<{k}*{k};++i) s += window[i]; s /= {};  // avgpool\n",
+                k * k
+            ));
+        }
+        OpKind::LogSumExp { axis } => {
+            out.push_str(&format!(
+                "    m = rowmax(x); v = m + logf(rowsum(expf(x - m)));  // logsumexp axis={axis}\n"
+            ));
+        }
+        OpKind::Softmax { axis } => {
+            out.push_str(&format!(
+                "    m = rowmax(x); e = expf(x - m); v = e / rowsum(e);  // softmax axis={axis}\n"
+            ));
+        }
+        OpKind::ReduceSum { axis } | OpKind::ReduceMean { axis } => {
+            out.push_str(&pragma);
+            out.push_str(&format!(
+                "    for (int i = tid; i < R; i += blockDim.x) acc += x[i];  // reduce axis={axis}\n"
+            ));
+        }
+        OpKind::ReduceMax { axis } => {
+            out.push_str(&format!(
+                "    for (int i = tid; i < R; i += blockDim.x) m = fmaxf(m, x[i]);  // reduce_max axis={axis}\n"
+            ));
+        }
+        OpKind::Identity => {
+            out.push_str("    y[idx] = x[idx];  // identity (COPY — verify this is intended)\n");
+        }
+        other => {
+            out.push_str(&format!(
+                "    y[idx] = {}(x[idx]);  // {} {}\n",
+                other.mnemonic(),
+                other.mnemonic(),
+                node.shape
+            ));
+        }
+    }
+}
+
+/// Token count model: ~1 token per 4 source characters (the usual BPE rule
+/// of thumb). Used by the cost accounting in Fig. 10 / §6.4.
+pub fn token_count(source: &str) -> usize {
+    source.len().div_ceil(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::schedule::{Schedule, Tiling};
+    use crate::kir::{GraphBuilder, OpKind};
+
+    fn small() -> (KernelGraph, Schedule) {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[8, 8]);
+        let w = b.input("w", &[8, 8]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        let r = b.op(OpKind::Relu, &[mm]);
+        b.output(r);
+        let g = b.finish();
+        let s = Schedule::naive(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn renders_one_function_per_group() {
+        let (g, s) = small();
+        let src = render(&g, &s);
+        assert_eq!(src.matches("__global__").count(), 2);
+        assert!(src.contains("matmul"));
+        assert!(src.contains("relu"));
+    }
+
+    #[test]
+    fn fused_renders_single_function() {
+        let (g, mut s) = small();
+        s.fuse(0, 1);
+        let src = render(&g, &s);
+        assert_eq!(src.matches("__global__").count(), 1);
+        assert!(src.contains("kernel_0_matmul_relu"));
+    }
+
+    #[test]
+    fn flags_visible_in_source() {
+        let (g, mut s) = small();
+        s.groups[0].opts.tiling = Tiling::Shared { tile: 32 };
+        s.groups[0].opts.ilp = 8;
+        s.groups[0].opts.split_k = 4;
+        s.groups[0].opts.warp_shuffle_reduction = true;
+        let src = render(&g, &s);
+        assert!(src.contains("__shared__ float s_tile[32]"));
+        assert!(src.contains("float acc[8]"));
+        assert!(src.contains("atomicAdd"));
+        assert!(src.contains("__shfl_down_sync"));
+    }
+
+    #[test]
+    fn vendor_lib_marker_present() {
+        let (g, mut s) = small();
+        s.groups[0].opts.vendor_lib = true;
+        let src = render(&g, &s);
+        assert!(src.contains("cudnn") || src.contains("cublas"));
+    }
+
+    #[test]
+    fn token_count_scales_with_source() {
+        let (g, s) = small();
+        let t1 = token_count(&render(&g, &s));
+        assert!(t1 > 50);
+        assert_eq!(token_count("abcd"), 1);
+        assert_eq!(token_count("abcde"), 2);
+    }
+
+    #[test]
+    fn identity_is_flagged_in_source() {
+        let mut b = GraphBuilder::new("hack");
+        let x = b.input("x", &[4, 4]);
+        let i = b.op(OpKind::Identity, &[x]);
+        b.output(i);
+        let g = b.finish();
+        let src = render(&g, &Schedule::naive(&g));
+        assert!(src.contains("COPY"));
+    }
+}

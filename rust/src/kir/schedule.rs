@@ -1,0 +1,462 @@
+//! Execution schedules over KIR graphs.
+//!
+//! A [`Schedule`] partitions the graph's nodes into [`FusionGroup`]s — each
+//! group is one simulated kernel launch — and attaches per-group execution
+//! attributes ([`GroupOpts`]) that the optimization techniques mutate:
+//! tiling, vectorization, ILP/unrolling, tensor-core use, split-K, launch
+//! geometry, and so on. The GPU performance model consumes (graph, schedule)
+//! pairs; the optimization catalog transforms them.
+//!
+//! Legality rules enforced here (the "compile check" for schedules):
+//! - every node belongs to exactly one group;
+//! - groups are topologically ordered and internally contiguous enough to
+//!   execute (a group may only read group-external values produced earlier);
+//! - a fused group's *interior* values must not escape (only the group's
+//!   last-produced values may be consumed by later groups or graph outputs),
+//!   matching the constraint that a fused CUDA kernel materializes only its
+//!   final stores.
+
+use super::{KernelGraph, ValueRef};
+
+/// Memory layout of the group's primary operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemLayout {
+    /// Naive row-major, potentially strided access.
+    Naive,
+    /// Coalesced global accesses (vectorized loads possible).
+    Coalesced,
+    /// Padded / swizzled to avoid bank conflicts.
+    Padded,
+}
+
+/// Shared-memory-style tiling of the contraction dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tiling {
+    None,
+    /// Stage operand tiles through scratch memory; `tile` is the K-tile.
+    Shared { tile: usize },
+}
+
+/// Per-group launch geometry (CUDA grid/block analog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub grid: usize,
+    pub block: usize,
+}
+
+impl LaunchConfig {
+    pub fn threads(&self) -> usize {
+        self.grid * self.block
+    }
+}
+
+/// Mutable execution attributes of one kernel launch. Every optimization
+/// technique in the catalog maps to changes of these fields (or to graph
+/// rewrites).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupOpts {
+    pub layout: MemLayout,
+    pub tiling: Tiling,
+    /// Vector width of global loads/stores (1 = scalar, 4 = float4-style).
+    pub vector_width: usize,
+    /// Independent accumulator count (instruction-level parallelism).
+    pub ilp: usize,
+    /// Loop unroll factor.
+    pub unroll: usize,
+    /// Use MMA/tensor-core (MXU) path; requires 16-bit dtype + tiling.
+    pub tensor_core: bool,
+    /// Split-K factor for contraction kernels (1 = off).
+    pub split_k: usize,
+    /// Fast-math (reassociation, approx transcendentals).
+    pub fast_math: bool,
+    /// Warp-shuffle (vs shared-memory atomic) reductions.
+    pub warp_shuffle_reduction: bool,
+    /// Each thread computes this many outputs (thread coarsening /
+    /// work-per-thread increase).
+    pub coarsening: usize,
+    /// Registers per thread (occupancy pressure).
+    pub regs_per_thread: usize,
+    /// Double-buffered staging (overlap copy/compute).
+    pub double_buffer: bool,
+    /// Group dispatches to a vendor library (cuDNN/cuBLAS analog). Only
+    /// legal in "+vendor" mode — the soft verifier rejects it otherwise.
+    pub vendor_lib: bool,
+    /// Branchless / simplified control flow in the inner loop.
+    pub simplified_control_flow: bool,
+}
+
+impl Default for GroupOpts {
+    fn default() -> Self {
+        // The "naive CUDA" starting point the paper's §4.6 baseline uses:
+        // functionally correct, no optimization techniques applied.
+        Self {
+            layout: MemLayout::Naive,
+            tiling: Tiling::None,
+            vector_width: 1,
+            ilp: 1,
+            unroll: 1,
+            tensor_core: false,
+            split_k: 1,
+            fast_math: false,
+            warp_shuffle_reduction: false,
+            coarsening: 1,
+            regs_per_thread: 64,
+            double_buffer: false,
+            vendor_lib: false,
+            simplified_control_flow: false,
+        }
+    }
+}
+
+/// One simulated kernel launch: a set of graph nodes executed fused.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusionGroup {
+    /// Node indices, ascending.
+    pub nodes: Vec<usize>,
+    pub launch: LaunchConfig,
+    pub opts: GroupOpts,
+}
+
+impl FusionGroup {
+    pub fn single(node: usize, launch: LaunchConfig) -> Self {
+        Self {
+            nodes: vec![node],
+            launch,
+            opts: GroupOpts::default(),
+        }
+    }
+}
+
+/// A full execution schedule for a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub groups: Vec<FusionGroup>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ScheduleError {
+    #[error("node {0} appears in {1} groups (must be exactly 1)")]
+    BadPartition(usize, usize),
+    #[error("group {group} reads value from node {producer} scheduled later")]
+    TopologicalViolation { group: usize, producer: usize },
+    #[error("interior value of node {node} in group {group} escapes the group")]
+    InteriorEscape { group: usize, node: usize },
+    #[error("group {0} is empty")]
+    EmptyGroup(usize),
+    #[error("invalid launch config in group {0}: grid/block must be positive")]
+    BadLaunch(usize),
+    #[error("group {0}: tensor_core requires 16-bit dtype and shared tiling")]
+    TensorCoreIllegal(usize),
+}
+
+impl Schedule {
+    /// The naive default: one launch per node, heuristic geometry (one
+    /// thread per output element, 256-thread blocks) — the paper's
+    /// "functionally correct CUDA generated from PyTorch" starting state.
+    pub fn naive(graph: &KernelGraph) -> Self {
+        let groups = graph
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| {
+                let outputs = node.shape.numel().max(1);
+                let block = 256;
+                let grid = outputs.div_ceil(block).max(1);
+                FusionGroup::single(i, LaunchConfig { grid, block })
+            })
+            .collect();
+        Self { groups }
+    }
+
+    /// Number of kernel launches.
+    pub fn n_launches(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Index of the group containing `node`.
+    pub fn group_of(&self, node: usize) -> Option<usize> {
+        self.groups.iter().position(|g| g.nodes.contains(&node))
+    }
+
+    /// Validate partition, ordering, fusion legality, and flag coherence.
+    pub fn validate(&self, graph: &KernelGraph) -> Result<(), ScheduleError> {
+        // Exact partition.
+        let mut seen = vec![0usize; graph.nodes.len()];
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.nodes.is_empty() {
+                return Err(ScheduleError::EmptyGroup(gi));
+            }
+            if g.launch.grid == 0 || g.launch.block == 0 {
+                return Err(ScheduleError::BadLaunch(gi));
+            }
+            for n in &g.nodes {
+                seen[*n] += 1;
+            }
+        }
+        for (n, count) in seen.iter().enumerate() {
+            if *count != 1 {
+                return Err(ScheduleError::BadPartition(n, *count));
+            }
+        }
+        // Group order vs dataflow: a node's group-external deps must come
+        // from strictly earlier groups.
+        let group_of: Vec<usize> = {
+            let mut v = vec![0usize; graph.nodes.len()];
+            for (gi, g) in self.groups.iter().enumerate() {
+                for n in &g.nodes {
+                    v[*n] = gi;
+                }
+            }
+            v
+        };
+        for (gi, g) in self.groups.iter().enumerate() {
+            for n in &g.nodes {
+                for dep in &graph.nodes[*n].deps {
+                    if let ValueRef::Node(p) = dep {
+                        if group_of[*p] > gi {
+                            return Err(ScheduleError::TopologicalViolation {
+                                group: gi,
+                                producer: *p,
+                            });
+                        }
+                    }
+                }
+            }
+            // Interior-escape: values produced in this group and consumed
+            // outside it must be "group outputs". We allow escape only for
+            // nodes that are maximal in the group (no in-group consumer
+            // *after* materialization is fine — a fused kernel can store
+            // more than one output — but we forbid escape of values that
+            // the group *recomputes past*, i.e. any non-final node that has
+            // both in-group and out-of-group users).
+            for n in &g.nodes {
+                let users = graph.users_of(ValueRef::Node(*n));
+                let in_group = users.iter().any(|u| group_of[*u] == gi);
+                let out_group = users.iter().any(|u| group_of[*u] != gi)
+                    || graph.outputs.contains(&ValueRef::Node(*n));
+                if in_group && out_group {
+                    return Err(ScheduleError::InteriorEscape {
+                        group: gi,
+                        node: *n,
+                    });
+                }
+            }
+            // Flag coherence.
+            if g.opts.tensor_core {
+                let has_16bit = g
+                    .nodes
+                    .iter()
+                    .any(|n| graph.nodes[*n].dtype != super::DType::F32);
+                let tiled = !matches!(g.opts.tiling, Tiling::None);
+                if !has_16bit || !tiled {
+                    return Err(ScheduleError::TensorCoreIllegal(gi));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether fusing the groups containing `a` and `b` would be legal
+    /// (adjacent in the group order, dataflow-connected or independent).
+    pub fn can_fuse(&self, graph: &KernelGraph, ga: usize, gb: usize) -> bool {
+        if ga + 1 != gb || gb >= self.groups.len() {
+            return false;
+        }
+        let mut merged = self.clone();
+        let moved = merged.groups.remove(gb);
+        merged.groups[ga].nodes.extend(moved.nodes);
+        merged.groups[ga].nodes.sort_unstable();
+        merged.validate(graph).is_ok()
+    }
+
+    /// Fuse group `gb` into `ga` (must be adjacent, ga < gb). The merged
+    /// group keeps `ga`'s opts and the larger launch of the two.
+    pub fn fuse(&mut self, ga: usize, gb: usize) {
+        assert!(ga < gb && gb < self.groups.len());
+        let moved = self.groups.remove(gb);
+        let g = &mut self.groups[ga];
+        g.nodes.extend(moved.nodes);
+        g.nodes.sort_unstable();
+        if moved.launch.threads() > g.launch.threads() {
+            g.launch = moved.launch;
+        }
+    }
+
+    /// Mirror a graph-side node removal: drop `node` from its group (the
+    /// group itself is removed if it becomes empty) and shift all higher
+    /// node indices down by one. Keeps the schedule aligned with
+    /// [`KernelGraph::remove_node`].
+    pub fn remove_node(&mut self, node: usize) {
+        for g in &mut self.groups {
+            g.nodes.retain(|n| *n != node);
+            for n in &mut g.nodes {
+                if *n > node {
+                    *n -= 1;
+                }
+            }
+        }
+        self.groups.retain(|g| !g.nodes.is_empty());
+    }
+
+    /// Total "source verbosity" proxy: used by the render/token model.
+    pub fn complexity(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| {
+                let mut c = 4 + 3 * g.nodes.len();
+                if !matches!(g.opts.tiling, Tiling::None) {
+                    c += 8;
+                }
+                if g.opts.tensor_core {
+                    c += 12;
+                }
+                if g.opts.split_k > 1 {
+                    c += 10;
+                }
+                c += g.opts.unroll.min(16) / 2;
+                c
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::{GraphBuilder, OpKind};
+
+    fn chain_graph() -> KernelGraph {
+        // matmul -> bias -> relu -> reduce_sum
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input("x", &[8, 16]);
+        let w = b.input("w", &[16, 4]);
+        let bias = b.input("b", &[4]);
+        let mm = b.op(OpKind::Matmul, &[x, w]);
+        let bi = b.op(OpKind::BiasAdd { axis: 1 }, &[mm, bias]);
+        let r = b.op(OpKind::Relu, &[bi]);
+        let s = b.op(OpKind::ReduceSum { axis: 1 }, &[r]);
+        b.output(s);
+        b.finish()
+    }
+
+    #[test]
+    fn naive_schedule_one_group_per_node() {
+        let g = chain_graph();
+        let s = Schedule::naive(&g);
+        assert_eq!(s.n_launches(), 4);
+        assert!(s.validate(&g).is_ok());
+        // grid sized to outputs: node 0 is 8x4=32 elems -> 1 block of 256
+        assert_eq!(s.groups[0].launch.grid, 1);
+    }
+
+    #[test]
+    fn fuse_adjacent_groups_valid() {
+        let g = chain_graph();
+        let mut s = Schedule::naive(&g);
+        assert!(s.can_fuse(&g, 0, 1));
+        s.fuse(0, 1);
+        assert_eq!(s.n_launches(), 3);
+        assert!(s.validate(&g).is_ok());
+        assert_eq!(s.groups[0].nodes, vec![0, 1]);
+    }
+
+    #[test]
+    fn fuse_whole_chain() {
+        let g = chain_graph();
+        let mut s = Schedule::naive(&g);
+        while s.n_launches() > 1 {
+            assert!(s.can_fuse(&g, 0, 1));
+            s.fuse(0, 1);
+        }
+        assert!(s.validate(&g).is_ok());
+        assert_eq!(s.groups[0].nodes, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partition_violation_detected() {
+        let g = chain_graph();
+        let mut s = Schedule::naive(&g);
+        s.groups[1].nodes = vec![0]; // node 0 twice, node 1 missing
+        assert!(matches!(
+            s.validate(&g),
+            Err(ScheduleError::BadPartition(_, _))
+        ));
+    }
+
+    #[test]
+    fn topological_violation_detected() {
+        let g = chain_graph();
+        let mut s = Schedule::naive(&g);
+        s.groups.swap(0, 1);
+        assert!(matches!(
+            s.validate(&g),
+            Err(ScheduleError::TopologicalViolation { .. })
+        ));
+    }
+
+    #[test]
+    fn interior_escape_detected() {
+        // Diamond: a -> (b, c); fusing a+b while c reads a from outside
+        // means a escapes a group that also consumes it internally.
+        let mut bld = GraphBuilder::new("diamond");
+        let x = bld.input("x", &[4, 4]);
+        let a = bld.op(OpKind::Relu, &[x]);
+        let b = bld.op(OpKind::Exp, &[a]);
+        let c = bld.op(OpKind::Tanh, &[a]);
+        let d = bld.op(OpKind::Add, &[b, c]);
+        bld.output(d);
+        let g = bld.finish();
+        let mut s = Schedule::naive(&g);
+        // groups: [a],[b],[c],[d]; fuse a+b -> a is read by c (outside).
+        s.fuse(0, 1);
+        assert!(matches!(
+            s.validate(&g),
+            Err(ScheduleError::InteriorEscape { .. })
+        ));
+        // can_fuse should have predicted this.
+        let s2 = Schedule::naive(&g);
+        assert!(!s2.can_fuse(&g, 0, 1));
+    }
+
+    #[test]
+    fn tensor_core_requires_16bit_and_tiling() {
+        let g = chain_graph(); // f32 graph
+        let mut s = Schedule::naive(&g);
+        s.groups[0].opts.tensor_core = true;
+        s.groups[0].opts.tiling = Tiling::Shared { tile: 32 };
+        assert!(matches!(
+            s.validate(&g),
+            Err(ScheduleError::TensorCoreIllegal(0))
+        ));
+    }
+
+    #[test]
+    fn bad_launch_detected() {
+        let g = chain_graph();
+        let mut s = Schedule::naive(&g);
+        s.groups[0].launch.grid = 0;
+        assert!(matches!(s.validate(&g), Err(ScheduleError::BadLaunch(0))));
+    }
+
+    #[test]
+    fn complexity_grows_with_features() {
+        let g = chain_graph();
+        let s = Schedule::naive(&g);
+        let base = s.complexity();
+        let mut s2 = s.clone();
+        s2.groups[0].opts.tiling = Tiling::Shared { tile: 32 };
+        s2.groups[0].opts.split_k = 4;
+        assert!(s2.complexity() > base);
+    }
+
+    #[test]
+    fn group_of_lookup() {
+        let g = chain_graph();
+        let mut s = Schedule::naive(&g);
+        s.fuse(0, 1);
+        assert_eq!(s.group_of(0), Some(0));
+        assert_eq!(s.group_of(1), Some(0));
+        assert_eq!(s.group_of(2), Some(1));
+        assert_eq!(s.group_of(99), None);
+    }
+}

@@ -1,0 +1,38 @@
+//! KernelBlaster: continual cross-task kernel optimization via
+//! memory-augmented in-context reinforcement learning (MAIC-RL).
+//!
+//! A full-system reproduction of the paper as a three-layer Rust + JAX +
+//! Pallas stack. See DESIGN.md for the system inventory and the
+//! per-experiment index; EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! - **Layer 3 (this crate)** — the paper's contribution: the MAIC-RL
+//!   coordinator ([`icrl`]), its agents ([`agents`]), the persistent CUDA
+//!   knowledge base ([`kb`]), the execution/validation harness
+//!   ([`harness`]), plus every substrate it needs (kernel IR [`kir`], GPU
+//!   performance simulator [`gpu`], task suite [`tasks`], optimization
+//!   catalog [`opts`], baselines [`baselines`]).
+//! - **Layer 2/1 (python/compile)** — JAX anchor models calling Pallas
+//!   kernels, AOT-lowered to HLO text and executed by [`runtime`] through
+//!   the PJRT CPU client. Build-time only; never on the optimization path.
+
+pub mod util;
+
+pub mod agents;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod gpu;
+pub mod metrics;
+pub mod harness;
+pub mod icrl;
+pub mod kb;
+pub mod kir;
+pub mod opts;
+pub mod runtime;
+pub mod tasks;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

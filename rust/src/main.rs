@@ -1,0 +1,7 @@
+//! KernelBlaster leader entrypoint. All behavior lives in
+//! [`kernelblaster::cli`]; see `kernelblaster --help`/USAGE.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(kernelblaster::cli::run(&argv));
+}

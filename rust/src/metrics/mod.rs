@@ -1,0 +1,112 @@
+//! Evaluation metrics (paper §4.2): speedup summaries, ValidRate, and the
+//! fast_p distribution.
+
+use crate::util::stats::SpeedupSummary;
+
+/// Per-task result of one optimization system: validity plus speedup over
+/// a reference (speedup is meaningless when `valid` is false).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskScore {
+    pub valid: bool,
+    pub speedup: f64,
+}
+
+/// fast_p (Ouyang et al. 2024): the fraction of tasks that are BOTH
+/// correct and achieve speedup strictly greater than `p`.
+///
+/// fast_p = (1/N) · Σ 1(correct_i ∧ speedup_i > p)
+pub fn fast_p(scores: &[TaskScore], p: f64) -> f64 {
+    if scores.is_empty() {
+        return f64::NAN;
+    }
+    scores
+        .iter()
+        .filter(|s| s.valid && s.speedup > p)
+        .count() as f64
+        / scores.len() as f64
+}
+
+/// Evaluate fast_p over a sweep of thresholds (one curve of Figs. 7–9).
+pub fn fast_p_curve(scores: &[TaskScore], thresholds: &[f64]) -> Vec<(f64, f64)> {
+    thresholds.iter().map(|p| (*p, fast_p(scores, *p))).collect()
+}
+
+/// The standard threshold grid used for the fast_p figures.
+pub fn default_thresholds() -> Vec<f64> {
+    vec![0.5, 0.75, 1.0, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0]
+}
+
+/// Fraction of tasks that produced a valid kernel.
+pub fn valid_rate(scores: &[TaskScore]) -> f64 {
+    if scores.is_empty() {
+        return f64::NAN;
+    }
+    scores.iter().filter(|s| s.valid).count() as f64 / scores.len() as f64
+}
+
+/// Table-3 row: summary over the *valid* runs plus the valid rate.
+#[derive(Debug, Clone)]
+pub struct SystemSummary {
+    pub valid_rate: f64,
+    pub summary: SpeedupSummary,
+}
+
+pub fn summarize(scores: &[TaskScore]) -> SystemSummary {
+    let valid: Vec<f64> = scores
+        .iter()
+        .filter(|s| s.valid)
+        .map(|s| s.speedup)
+        .collect();
+    SystemSummary {
+        valid_rate: valid_rate(scores),
+        summary: SpeedupSummary::from_speedups(&valid),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores() -> Vec<TaskScore> {
+        vec![
+            TaskScore { valid: true, speedup: 0.5 },
+            TaskScore { valid: true, speedup: 1.5 },
+            TaskScore { valid: true, speedup: 3.0 },
+            TaskScore { valid: false, speedup: 9.0 }, // invalid: never counts
+        ]
+    }
+
+    #[test]
+    fn fast_p_counts_correct_and_fast() {
+        let s = scores();
+        assert_eq!(fast_p(&s, 1.0), 0.5); // 1.5 and 3.0 of 4
+        assert_eq!(fast_p(&s, 2.0), 0.25); // 3.0 only
+        assert_eq!(fast_p(&s, 0.0), 0.75); // all valid
+        assert_eq!(fast_p(&s, 10.0), 0.0);
+    }
+
+    #[test]
+    fn fast_p_curve_monotone_decreasing() {
+        let s = scores();
+        let curve = fast_p_curve(&s, &default_thresholds());
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+        }
+    }
+
+    #[test]
+    fn valid_rate_and_summary() {
+        let s = scores();
+        assert_eq!(valid_rate(&s), 0.75);
+        let sum = summarize(&s);
+        assert_eq!(sum.summary.n, 3);
+        assert!((sum.summary.median - 1.5).abs() < 1e-12);
+        assert_eq!(sum.valid_rate, 0.75);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(fast_p(&[], 1.0).is_nan());
+        assert!(valid_rate(&[]).is_nan());
+    }
+}

@@ -1,0 +1,470 @@
+//! Technique application: the actual transformations.
+//!
+//! `apply(technique, candidate, group)` returns a *new* candidate with the
+//! transformation performed, or an error string (the "compilation
+//! feedback" an infeasible transformation produces). All transformations
+//! are semantics-preserving by construction; semantic *bugs* are injected
+//! separately by the lowering agent's failure model, so the validation
+//! harness has something real to catch.
+
+use super::catalog::Technique;
+use super::Candidate;
+use crate::kir::schedule::{MemLayout, Tiling};
+use crate::kir::{KernelGraph, OpKind, ValueRef};
+
+/// Apply `tech` to `cand`. Schedule techniques are applied to **every**
+/// group where they are applicable (the lowering agent rewrites the whole
+/// kernel file, not one launch at a time — matching the paper's
+/// whole-source optimization actions); `gi` must name one applicable
+/// group and serves as the applicability witness. Graph techniques act
+/// globally by nature.
+pub fn apply(tech: Technique, cand: &Candidate, gi: usize) -> Result<Candidate, String> {
+    if !tech.applicable(cand, gi) {
+        return Err(format!(
+            "{} not applicable to group {gi} in current state",
+            tech.name()
+        ));
+    }
+    let mut next = cand.clone();
+    if tech.class() == super::TechniqueClass::Schedule {
+        for g in 0..cand.schedule.groups.len() {
+            if tech.applicable(cand, g) {
+                apply_to_group(tech, &mut next, g);
+            }
+        }
+        next.applied.push(tech.name());
+        next.validate()
+            .map_err(|e| format!("{} produced invalid candidate: {e}", tech.name()))?;
+        return Ok(next);
+    }
+    use Technique::*;
+    match tech {
+        // ---------------- graph techniques ----------------
+        KernelFusion => {
+            // Cross-layer fusion as ONE action (the paper's L3 kernels
+            // fuse bias+activation into convs and chains across layers in
+            // a single rewrite): greedily fuse every legal adjacent pair
+            // to a fixed point.
+            let mut fused_any = false;
+            loop {
+                let mut progressed = false;
+                let mut a = 0;
+                while a + 1 < next.schedule.groups.len() {
+                    // Never merge two contraction kernels — real fusion
+                    // folds elementwise/reduction consumers into their
+                    // producer, not GEMM into GEMM.
+                    let consumer_has_contraction = next.schedule.groups[a + 1]
+                        .nodes
+                        .iter()
+                        .any(|n| next.full.nodes[*n].kind.is_contraction());
+                    if !consumer_has_contraction && next.schedule.can_fuse(&next.full, a, a + 1) {
+                        next.schedule.fuse(a, a + 1);
+                        progressed = true;
+                        fused_any = true;
+                    } else {
+                        a += 1;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            if !fused_any {
+                return Err("no fusable adjacent groups".to_string());
+            }
+        }
+        EpilogueFusion => {
+            next.schedule.fuse(gi, gi + 1);
+        }
+        AlgebraicSimplification => {
+            let targets = algebraic_candidates(&next.full);
+            let target = *targets.first().ok_or("no algebraic candidates")?;
+            remove_noop_node(&mut next, target)?;
+        }
+        DeadCodeElimination => {
+            for idx in next.full.dead_nodes() {
+                next.full
+                    .remove_node(idx)
+                    .map_err(|e| format!("dce(full): {e}"))?;
+                next.small
+                    .remove_node(idx)
+                    .map_err(|e| format!("dce(small): {e}"))?;
+                next.schedule.remove_node(idx);
+            }
+        }
+        MixedPrecision => {
+            for g in [&mut next.full, &mut next.small] {
+                for node in &mut g.nodes {
+                    if node.kind.is_contraction() {
+                        node.dtype = crate::kir::DType::BF16;
+                    }
+                }
+            }
+        }
+        // Schedule techniques were handled above.
+        _ => unreachable!("schedule technique in graph match arm"),
+    }
+    next.applied.push(tech.name());
+    next.validate()
+        .map_err(|e| format!("{} produced invalid candidate: {e}", tech.name()))?;
+    Ok(next)
+}
+
+/// Mutate one group for a schedule technique (applicability already
+/// checked by the caller).
+fn apply_to_group(tech: Technique, next: &mut Candidate, gi: usize) {
+    use Technique::*;
+    match tech {
+        MemoryCoalescing => {
+            next.schedule.groups[gi].opts.layout = MemLayout::Coalesced;
+        }
+        MemoryLayoutPadding => {
+            next.schedule.groups[gi].opts.layout = MemLayout::Padded;
+        }
+        SharedMemoryTiling => {
+            let o = &mut next.schedule.groups[gi].opts;
+            o.tiling = Tiling::Shared { tile: 32 };
+            o.regs_per_thread = (o.regs_per_thread + 16).min(255);
+        }
+        TilingSizeTuning => {
+            let o = &mut next.schedule.groups[gi].opts;
+            if let Tiling::Shared { tile } = o.tiling {
+                o.tiling = Tiling::Shared {
+                    tile: (tile * 2).min(128),
+                };
+            }
+        }
+        VectorizedAccess => {
+            let o = &mut next.schedule.groups[gi].opts;
+            o.vector_width = (o.vector_width * 2).min(8);
+        }
+        DoubleBuffering => {
+            next.schedule.groups[gi].opts.double_buffer = true;
+        }
+        InstructionLevelParallelism => {
+            let o = &mut next.schedule.groups[gi].opts;
+            o.ilp = (o.ilp * 2).min(16);
+            o.regs_per_thread = (o.regs_per_thread + 16).min(255);
+        }
+        LoopUnrolling => {
+            let o = &mut next.schedule.groups[gi].opts;
+            o.unroll = (o.unroll * 2).min(16);
+            o.regs_per_thread = (o.regs_per_thread + 8).min(255);
+        }
+        ThreadCoarsening => {
+            let g = &mut next.schedule.groups[gi];
+            g.opts.coarsening = (g.opts.coarsening * 2).min(8);
+            g.launch.grid = (g.launch.grid / 2).max(1);
+        }
+        WorkPerThreadIncrease => {
+            let g = &mut next.schedule.groups[gi];
+            g.opts.coarsening = (g.opts.coarsening * 2).min(8);
+            g.opts.regs_per_thread = (g.opts.regs_per_thread + 8).min(255);
+            g.launch.grid = (g.launch.grid / 2).max(1);
+        }
+        FastMath => {
+            next.schedule.groups[gi].opts.fast_math = true;
+        }
+        ControlFlowSimplification => {
+            next.schedule.groups[gi].opts.simplified_control_flow = true;
+        }
+        WarpShuffleReduction => {
+            next.schedule.groups[gi].opts.warp_shuffle_reduction = true;
+        }
+        TensorCoreUtilization => {
+            next.schedule.groups[gi].opts.tensor_core = true;
+        }
+        SplitK => {
+            next.schedule.groups[gi].opts.split_k = 4;
+        }
+        GridSizeOptimization => {
+            let out_elems: usize = next.schedule.groups[gi]
+                .nodes
+                .iter()
+                .map(|n| next.full.nodes[*n].shape.numel())
+                .max()
+                .unwrap_or(1);
+            let g = &mut next.schedule.groups[gi];
+            let per_thread = g.opts.coarsening.max(1);
+            g.launch.grid = out_elems.div_ceil(g.launch.block * per_thread).max(1);
+        }
+        BlockSizeAdaptation => {
+            let g = &mut next.schedule.groups[gi];
+            let total = g.launch.threads();
+            g.launch.block = match g.launch.block {
+                256 => 128,
+                128 => 512,
+                _ => 256,
+            };
+            g.launch.grid = total.div_ceil(g.launch.block).max(1);
+        }
+        RegisterPressureReduction => {
+            let o = &mut next.schedule.groups[gi].opts;
+            o.regs_per_thread = (o.regs_per_thread / 2).max(32);
+        }
+        OccupancyTuning => {
+            let g = &mut next.schedule.groups[gi];
+            let total = g.launch.threads();
+            g.launch.block = 256;
+            g.launch.grid = total.div_ceil(256).max(1);
+            g.opts.regs_per_thread = g.opts.regs_per_thread.min(64);
+        }
+        VendorLibraryDispatch => {
+            next.schedule.groups[gi].opts.vendor_lib = true;
+        }
+        _ => unreachable!("graph technique in schedule helper"),
+    }
+}
+
+/// Node indices that are algebraically removable no-ops, in a stable
+/// order. Each can be replaced by its first operand:
+/// - `logsumexp` along a size-1 axis (the Q18 pattern),
+/// - `scale` by 1.0 / `div_const` by 1.0 / `add_const` 0.0,
+/// - `identity`,
+/// - `relu(relu(x))` (idempotent) — the outer node.
+pub fn algebraic_candidates(graph: &KernelGraph) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let removable = match &node.kind {
+            OpKind::LogSumExp { axis } => graph.shape_of(node.deps[0]).dim(*axis) == 1,
+            OpKind::Softmax { axis } => {
+                // softmax over size-1 axis is constant 1 — NOT equal to its
+                // input; never removable this way.
+                let _ = axis;
+                false
+            }
+            OpKind::Scale { c } => *c == 1.0,
+            OpKind::DivConst { c } => *c == 1.0,
+            OpKind::AddConst { c } => *c == 0.0,
+            OpKind::Identity => true,
+            OpKind::Relu => matches!(
+                node.deps[0],
+                ValueRef::Node(d) if matches!(graph.nodes[d].kind, OpKind::Relu)
+            ),
+            _ => false,
+        };
+        if removable {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Remove a no-op node from both graphs and the schedule, rewiring users
+/// to the node's first operand.
+fn remove_noop_node(cand: &mut Candidate, idx: usize) -> Result<(), String> {
+    for g in [&mut cand.full, &mut cand.small] {
+        let replacement = g.nodes[idx].deps[0];
+        g.replace_value(ValueRef::Node(idx), replacement);
+        g.remove_node(idx).map_err(|e| format!("remove: {e}"))?;
+    }
+    cand.schedule.remove_node(idx);
+    Ok(())
+}
+
+/// Exhaustively simplify: repeat algebraic simplification + DCE until a
+/// fixed point. Used by the torch.compile-analog baseline.
+pub fn simplify_fixpoint(cand: &Candidate) -> Candidate {
+    let mut cur = cand.clone();
+    loop {
+        let mut changed = false;
+        if let Some(&target) = algebraic_candidates(&cur.full).first() {
+            if remove_noop_node(&mut cur, target).is_ok() {
+                changed = true;
+            }
+        }
+        let dead = cur.full.dead_nodes();
+        if !dead.is_empty() {
+            for idx in dead {
+                let _ = cur.full.remove_node(idx);
+                let _ = cur.small.remove_node(idx);
+                cur.schedule.remove_node(idx);
+            }
+            changed = true;
+        }
+        if !changed {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{estimate_schedule, GpuArch};
+    use crate::kir::interp::{self, allclose};
+    use crate::tasks::Suite;
+
+    fn cand(id: &str) -> Candidate {
+        Candidate::naive(Suite::full().by_id(id).unwrap())
+    }
+
+    /// Semantic check: after a transformation, the small graph computes
+    /// the same function.
+    fn semantics_preserved(before: &Candidate, after: &Candidate) -> bool {
+        let inputs = interp::random_inputs(&before.small, 99);
+        let a = interp::execute(&before.small, &inputs).unwrap();
+        let b = interp::execute(&after.small, &inputs).unwrap();
+        let rtol = if after.has_reduced_precision() { 3e-2 } else { 1e-4 };
+        a.iter().zip(&b).all(|(x, y)| allclose(x, y, rtol, rtol))
+    }
+
+    #[test]
+    fn q18_algebraic_simplification_removes_logsumexp() {
+        let c = cand("L2/18_linear_sum_logsumexp2");
+        let n0 = c.full.nodes.len();
+        let once = apply(Technique::AlgebraicSimplification, &c, 0).unwrap();
+        assert_eq!(once.full.nodes.len(), n0 - 1);
+        assert!(semantics_preserved(&c, &once));
+        let twice = apply(Technique::AlgebraicSimplification, &once, 0).unwrap();
+        assert_eq!(twice.full.nodes.len(), n0 - 2);
+        assert!(semantics_preserved(&c, &twice));
+        // Both logsumexp gone → technique no longer applicable.
+        assert!(!Technique::AlgebraicSimplification.applicable(&twice, 0));
+        // And it is faster on every arch.
+        let arch = GpuArch::h100();
+        let t0 = estimate_schedule(&arch, &c.full, &c.schedule).total_time_s;
+        let t2 = estimate_schedule(&arch, &twice.full, &twice.schedule).total_time_s;
+        assert!(t2 < t0);
+    }
+
+    #[test]
+    fn every_schedule_technique_preserves_semantics() {
+        // Schedule techniques never touch the graph; verify semantics and
+        // schedule validity over a composed task.
+        let c = cand("L2/01_gemm_bias_relu");
+        for tech in Technique::all() {
+            if let Some(gi) = tech.applicable_anywhere(&c) {
+                let next = apply(*tech, &c, gi)
+                    .unwrap_or_else(|e| panic!("{}: {e}", tech.name()));
+                assert!(
+                    semantics_preserved(&c, &next),
+                    "{} broke semantics",
+                    tech.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prep_then_compute_sequence_compounds() {
+        // The paper's §5 headline interaction: shared_memory_tiling before
+        // tensor_core_utilization. Verify the sequence is (a) only legal
+        // in that order, (b) compounds to a large gain.
+        let c = cand("L2/63_gemm_bias_relu_div_f16");
+        let arch = GpuArch::l40s();
+        let t_naive = estimate_schedule(&arch, &c.full, &c.schedule).total_time_s;
+        assert!(apply(Technique::TensorCoreUtilization, &c, 0).is_err());
+        let tiled = apply(Technique::SharedMemoryTiling, &c, 0).unwrap();
+        let tc = apply(Technique::TensorCoreUtilization, &tiled, 0).unwrap();
+        let t_tc = estimate_schedule(&arch, &tc.full, &tc.schedule).total_time_s;
+        assert!(
+            t_naive / t_tc > 2.0,
+            "sequence gain {:.2} too small",
+            t_naive / t_tc
+        );
+        assert!(semantics_preserved(&c, &tc));
+    }
+
+    #[test]
+    fn fusion_reduces_launches_and_preserves_semantics() {
+        let c = cand("L2/12_scale_tanh_clip_chain");
+        let mut cur = c.clone();
+        while let Some(gi) = Technique::KernelFusion.applicable_anywhere(&cur) {
+            cur = apply(Technique::KernelFusion, &cur, gi).unwrap();
+        }
+        assert_eq!(cur.schedule.n_launches(), 1);
+        assert!(semantics_preserved(&c, &cur));
+    }
+
+    #[test]
+    fn dead_code_elimination_on_gemm_mean_sub() {
+        let c = cand("L2/19_gemm_mean_sub");
+        assert!(Technique::DeadCodeElimination.applicable(&c, 0));
+        let next = apply(Technique::DeadCodeElimination, &c, 0).unwrap();
+        assert!(next.full.dead_nodes().is_empty());
+        assert!(next.full.nodes.len() < c.full.nodes.len());
+        assert!(semantics_preserved(&c, &next));
+    }
+
+    #[test]
+    fn mixed_precision_flips_contraction_dtype() {
+        let c = cand("L1/01_matmul_square");
+        let next = apply(Technique::MixedPrecision, &c, 0).unwrap();
+        assert!(next.has_reduced_precision());
+        assert!(semantics_preserved(&c, &next));
+        // Enables the TC path after tiling.
+        let tiled = apply(Technique::SharedMemoryTiling, &next, 0).unwrap();
+        assert!(Technique::TensorCoreUtilization.applicable(&tiled, 0));
+    }
+
+    #[test]
+    fn simplify_fixpoint_cleans_q18_fully() {
+        let c = cand("L2/18_linear_sum_logsumexp2");
+        let simplified = simplify_fixpoint(&c);
+        assert!(algebraic_candidates(&simplified.full).is_empty());
+        assert!(simplified.full.dead_nodes().is_empty());
+        assert_eq!(simplified.full.nodes.len(), 3); // matmul, bias, reduce
+    }
+
+    #[test]
+    fn inapplicable_apply_is_error() {
+        let c = cand("L1/01_matmul_square");
+        assert!(apply(Technique::FastMath, &c, 0).is_err());
+        assert!(apply(Technique::KernelFusion, &c, 0).is_err());
+        assert!(apply(Technique::TensorCoreUtilization, &c, 99).is_err());
+    }
+
+    #[test]
+    fn applied_log_accumulates() {
+        let c = cand("L2/01_gemm_bias_relu");
+        let a = apply(Technique::MemoryCoalescing, &c, 0).unwrap();
+        let b = apply(Technique::SharedMemoryTiling, &a, 0).unwrap();
+        assert_eq!(
+            b.applied,
+            vec!["memory_coalescing", "shared_memory_tiling"]
+        );
+    }
+
+    #[test]
+    fn grid_size_optimization_fills_outputs() {
+        let c = cand("L1/01_matmul_square");
+        let mut bad = c.clone();
+        bad.schedule.groups[0].launch.grid = 1;
+        let fixed = apply(Technique::GridSizeOptimization, &bad, 0).unwrap();
+        let g = &fixed.schedule.groups[0];
+        assert_eq!(g.launch.grid, (1024 * 1024usize).div_ceil(g.launch.block));
+    }
+
+    #[test]
+    fn property_random_technique_sequences_stay_valid() {
+        use crate::util::proptest::{check, PropConfig};
+        let suite = Suite::full();
+        let ids = [
+            "L2/01_gemm_bias_relu",
+            "L2/09_mlp_block",
+            "L2/18_linear_sum_logsumexp2",
+            "L3/01_lenet5",
+        ];
+        check(
+            "random-opt-sequences",
+            PropConfig { cases: 24, seed: 0xBEEF },
+            |rng| {
+                let id = ids[rng.index(ids.len())];
+                let mut cur = Candidate::naive(suite.by_id(id).unwrap());
+                for _ in 0..6 {
+                    let tech = Technique::all()[rng.index(Technique::all().len())];
+                    let gi = rng.index(cur.schedule.groups.len());
+                    if tech.applicable(&cur, gi) {
+                        cur = apply(tech, &cur, gi).map_err(|e| e)?;
+                        cur.validate()?;
+                    }
+                }
+                // Terminal state must still execute correctly.
+                let inputs = interp::random_inputs(&cur.small, 5);
+                interp::execute(&cur.small, &inputs).map_err(|e| e.to_string())?;
+                Ok(())
+            },
+        );
+    }
+}

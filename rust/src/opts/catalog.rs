@@ -1,0 +1,339 @@
+//! The technique catalog: names, classes, priors, applicability.
+//!
+//! The 24 techniques are the union of those named in the paper's Figs.
+//! 12–14 and §5 trajectory analysis (instruction_level_parallelism,
+//! tensor_core_utilization, grid_size_optimization, shared_memory_tiling,
+//! simd_operations, block_size_adaptation, work_per_thread_increase,
+//! register_pressure_reduction, fast_math, thread_coarsening, …) plus the
+//! graph-level transformations its appendix kernels exhibit (kernel
+//! fusion, algebraic simplification, mixed precision, split-K).
+
+use super::Candidate;
+use crate::kir::schedule::{MemLayout, Tiling};
+use crate::kir::OpKind;
+
+/// Coarse class, used in reports and by the two-tier selection strategy
+/// the paper's §5 recommends (cheap local probes vs structured rewrites).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TechniqueClass {
+    /// Mutates one group's execution attributes.
+    Schedule,
+    /// Rewrites the dataflow graph (and mirrors it in the small graph).
+    Graph,
+}
+
+/// Every optimization technique the agents may select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Technique {
+    // ---- memory access / staging ----
+    MemoryCoalescing,
+    MemoryLayoutPadding,
+    SharedMemoryTiling,
+    TilingSizeTuning,
+    VectorizedAccess,
+    DoubleBuffering,
+    // ---- compute shaping ----
+    InstructionLevelParallelism,
+    LoopUnrolling,
+    ThreadCoarsening,
+    WorkPerThreadIncrease,
+    FastMath,
+    ControlFlowSimplification,
+    WarpShuffleReduction,
+    TensorCoreUtilization,
+    MixedPrecision,
+    SplitK,
+    // ---- launch shaping ----
+    GridSizeOptimization,
+    BlockSizeAdaptation,
+    RegisterPressureReduction,
+    OccupancyTuning,
+    // ---- graph rewrites ----
+    KernelFusion,
+    EpilogueFusion,
+    AlgebraicSimplification,
+    DeadCodeElimination,
+    // ---- vendor ----
+    VendorLibraryDispatch,
+}
+
+impl Technique {
+    /// Every technique, stable order (report order of Figs. 13/14).
+    pub fn all() -> &'static [Technique] {
+        use Technique::*;
+        &[
+            MemoryCoalescing,
+            MemoryLayoutPadding,
+            SharedMemoryTiling,
+            TilingSizeTuning,
+            VectorizedAccess,
+            DoubleBuffering,
+            InstructionLevelParallelism,
+            LoopUnrolling,
+            ThreadCoarsening,
+            WorkPerThreadIncrease,
+            FastMath,
+            ControlFlowSimplification,
+            WarpShuffleReduction,
+            TensorCoreUtilization,
+            MixedPrecision,
+            SplitK,
+            GridSizeOptimization,
+            BlockSizeAdaptation,
+            RegisterPressureReduction,
+            OccupancyTuning,
+            KernelFusion,
+            EpilogueFusion,
+            AlgebraicSimplification,
+            DeadCodeElimination,
+            VendorLibraryDispatch,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        use Technique::*;
+        match self {
+            MemoryCoalescing => "memory_coalescing",
+            MemoryLayoutPadding => "memory_layout_padding",
+            SharedMemoryTiling => "shared_memory_tiling",
+            TilingSizeTuning => "tiling_size_tuning",
+            VectorizedAccess => "simd_operations",
+            DoubleBuffering => "double_buffering",
+            InstructionLevelParallelism => "instruction_level_parallelism",
+            LoopUnrolling => "loop_unrolling",
+            ThreadCoarsening => "thread_coarsening",
+            WorkPerThreadIncrease => "work_per_thread_increase",
+            FastMath => "fast_math",
+            ControlFlowSimplification => "control_flow_simplification",
+            WarpShuffleReduction => "warp_shuffle_reduction",
+            TensorCoreUtilization => "tensor_core_utilization",
+            MixedPrecision => "mixed_precision",
+            SplitK => "split_k",
+            GridSizeOptimization => "grid_size_optimization",
+            BlockSizeAdaptation => "block_size_adaptation",
+            RegisterPressureReduction => "register_pressure_reduction",
+            OccupancyTuning => "occupancy_tuning",
+            KernelFusion => "kernel_fusion",
+            EpilogueFusion => "epilogue_fusion",
+            AlgebraicSimplification => "algebraic_simplification",
+            DeadCodeElimination => "dead_code_elimination",
+            VendorLibraryDispatch => "vendor_library_dispatch",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Technique> {
+        Technique::all().iter().copied().find(|t| t.name() == name)
+    }
+
+    pub fn class(&self) -> TechniqueClass {
+        use Technique::*;
+        match self {
+            KernelFusion | EpilogueFusion | AlgebraicSimplification | DeadCodeElimination
+            | MixedPrecision => TechniqueClass::Graph,
+            _ => TechniqueClass::Schedule,
+        }
+    }
+
+    /// Prior expected speedup, used to seed Knowledge-Base scores (θ₀):
+    /// the "priors used to generate the initial prompt" the paper's RL
+    /// loop then corrects with measured rewards.
+    pub fn prior_gain(&self) -> f64 {
+        use Technique::*;
+        match self {
+            SharedMemoryTiling => 2.2,
+            TensorCoreUtilization => 2.0,
+            KernelFusion => 1.5,
+            EpilogueFusion => 1.5,
+            AlgebraicSimplification => 1.6,
+            MemoryCoalescing => 1.8,
+            VendorLibraryDispatch => 2.5,
+            MixedPrecision => 1.5,
+            TilingSizeTuning => 1.3,
+            VectorizedAccess => 1.25,
+            GridSizeOptimization => 1.2,
+            BlockSizeAdaptation => 1.15,
+            InstructionLevelParallelism => 1.3,
+            WorkPerThreadIncrease => 1.2,
+            ThreadCoarsening => 1.15,
+            WarpShuffleReduction => 1.2,
+            SplitK => 1.3,
+            DoubleBuffering => 1.15,
+            LoopUnrolling => 1.1,
+            FastMath => 1.2,
+            ControlFlowSimplification => 1.1,
+            RegisterPressureReduction => 1.1,
+            OccupancyTuning => 1.15,
+            MemoryLayoutPadding => 1.1,
+            DeadCodeElimination => 1.05,
+        }
+    }
+
+    /// Whether the technique can be applied to group `gi` of `cand`.
+    /// These predicates encode the structural prerequisites that give rise
+    /// to the paper's prep→compute sequences.
+    pub fn applicable(&self, cand: &Candidate, gi: usize) -> bool {
+        use Technique::*;
+        let Some(group) = cand.schedule.groups.get(gi) else {
+            return false;
+        };
+        let o = &group.opts;
+        let graph = &cand.full;
+        let has_contraction = group
+            .nodes
+            .iter()
+            .any(|n| graph.nodes[*n].kind.is_contraction());
+        let has_reduction = group
+            .nodes
+            .iter()
+            .any(|n| graph.nodes[*n].kind.is_reduction());
+        let has_transcendental = group.nodes.iter().any(|n| {
+            matches!(
+                graph.nodes[*n].kind,
+                OpKind::Exp
+                    | OpKind::Tanh
+                    | OpKind::Sigmoid
+                    | OpKind::Gelu
+                    | OpKind::Softmax { .. }
+                    | OpKind::LogSumExp { .. }
+            )
+        });
+        let has_16bit = group
+            .nodes
+            .iter()
+            .any(|n| graph.nodes[*n].dtype != crate::kir::DType::F32);
+        if o.vendor_lib {
+            // A vendor-dispatched group is a black box.
+            return false;
+        }
+        match self {
+            MemoryCoalescing => o.layout == MemLayout::Naive,
+            MemoryLayoutPadding => o.layout == MemLayout::Coalesced,
+            SharedMemoryTiling => has_contraction && matches!(o.tiling, Tiling::None),
+            TilingSizeTuning => matches!(o.tiling, Tiling::Shared { tile } if tile < 128),
+            VectorizedAccess => o.vector_width < 8 && o.layout != MemLayout::Naive,
+            DoubleBuffering => !o.double_buffer && !matches!(o.tiling, Tiling::None),
+            InstructionLevelParallelism => o.ilp < 16,
+            LoopUnrolling => o.unroll < 16,
+            ThreadCoarsening => o.coarsening < 8,
+            WorkPerThreadIncrease => o.coarsening < 8 && group.launch.grid > 1,
+            FastMath => !o.fast_math && has_transcendental,
+            ControlFlowSimplification => !o.simplified_control_flow,
+            WarpShuffleReduction => !o.warp_shuffle_reduction && has_reduction,
+            // The prep→compute structure: tensor cores need 16-bit data
+            // AND tiling already in place.
+            TensorCoreUtilization => {
+                !o.tensor_core
+                    && has_contraction
+                    && has_16bit
+                    && !matches!(o.tiling, Tiling::None)
+            }
+            MixedPrecision => has_contraction && !has_16bit,
+            SplitK => {
+                has_contraction
+                    && o.split_k == 1
+                    && crate::gpu::model::contraction_k(graph, group).unwrap_or(0) >= 512
+            }
+            GridSizeOptimization | BlockSizeAdaptation => true,
+            RegisterPressureReduction => o.regs_per_thread > 32,
+            OccupancyTuning => true,
+            KernelFusion => (0..cand.schedule.groups.len().saturating_sub(1)).any(|a| {
+                let consumer_has_contraction = cand.schedule.groups[a + 1]
+                    .nodes
+                    .iter()
+                    .any(|n| graph.nodes[*n].kind.is_contraction());
+                !consumer_has_contraction && cand.schedule.can_fuse(graph, a, a + 1)
+            }),
+            EpilogueFusion => {
+                // A contraction group followed by a fusable elementwise group.
+                gi + 1 < cand.schedule.groups.len()
+                    && has_contraction
+                    && cand.schedule.groups[gi + 1]
+                        .nodes
+                        .iter()
+                        .all(|n| graph.nodes[*n].kind.is_elementwise())
+                    && cand.schedule.can_fuse(graph, gi, gi + 1)
+            }
+            AlgebraicSimplification => !super::apply::algebraic_candidates(graph).is_empty(),
+            DeadCodeElimination => !graph.dead_nodes().is_empty(),
+            VendorLibraryDispatch => has_contraction,
+        }
+    }
+
+    /// Techniques applicable anywhere in the candidate (any group).
+    pub fn applicable_anywhere(&self, cand: &Candidate) -> Option<usize> {
+        (0..cand.schedule.groups.len()).find(|gi| self.applicable(cand, *gi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn names_unique_and_roundtrip() {
+        let mut names: Vec<&str> = Technique::all().iter().map(|t| t.name()).collect();
+        let n = names.len();
+        assert_eq!(n, 25);
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        for t in Technique::all() {
+            assert_eq!(Technique::from_name(t.name()), Some(*t));
+        }
+    }
+
+    #[test]
+    fn tensor_core_requires_prep() {
+        let suite = Suite::full();
+        let f16 = suite.by_id("L1/05_matmul_f16").unwrap();
+        let cand = Candidate::naive(f16);
+        // Naive state: no tiling yet → TC inapplicable (prep→compute).
+        assert!(!Technique::TensorCoreUtilization.applicable(&cand, 0));
+        assert!(Technique::SharedMemoryTiling.applicable(&cand, 0));
+    }
+
+    #[test]
+    fn fastmath_needs_transcendentals() {
+        let suite = Suite::full();
+        let mm = Candidate::naive(suite.by_id("L1/01_matmul_square").unwrap());
+        assert!(!Technique::FastMath.applicable(&mm, 0));
+        let sm = Candidate::naive(suite.by_id("L1/12_softmax").unwrap());
+        assert!(Technique::FastMath.applicable(&sm, 0));
+    }
+
+    #[test]
+    fn fusion_applicable_on_chains() {
+        let suite = Suite::full();
+        let chain = Candidate::naive(suite.by_id("L2/01_gemm_bias_relu").unwrap());
+        assert!(Technique::KernelFusion.applicable(&chain, 0));
+        assert!(Technique::EpilogueFusion.applicable(&chain, 0));
+        let single = Candidate::naive(suite.by_id("L1/01_matmul_square").unwrap());
+        assert!(!Technique::KernelFusion.applicable(&single, 0));
+    }
+
+    #[test]
+    fn algebraic_applicable_on_q18() {
+        let suite = Suite::full();
+        let q18 = Candidate::naive(suite.by_id("L2/18_linear_sum_logsumexp2").unwrap());
+        assert!(Technique::AlgebraicSimplification.applicable(&q18, 0));
+    }
+
+    #[test]
+    fn priors_all_above_one() {
+        for t in Technique::all() {
+            assert!(t.prior_gain() > 1.0, "{}", t.name());
+        }
+    }
+
+    #[test]
+    fn split_k_needs_large_k() {
+        let suite = Suite::full();
+        // matmul_large has K=4096 → applicable
+        let big = Candidate::naive(suite.by_id("L1/02_matmul_large").unwrap());
+        assert!(Technique::SplitK.applicable(&big, 0));
+        // conv 3x3 on 64ch: K=576 ≥ 512 → applicable; conv1x1 256ch K=256 → not
+        let c1 = Candidate::naive(suite.by_id("L1/08_conv2d_1x1").unwrap());
+        assert!(!Technique::SplitK.applicable(&c1, 0));
+    }
+}

@@ -1,0 +1,128 @@
+//! Level 1: isolated single-operator tasks (KernelBench Level 1 analog).
+//!
+//! Each builder returns (full, small) graph pairs with identical structure.
+//! Shapes follow KernelBench conventions (large square GEMMs, ImageNet-ish
+//! convs, large batched reductions).
+
+use super::{Level, Task};
+use crate::kir::{DType, GraphBuilder, KernelGraph, OpKind};
+
+/// Construct all 20 Level-1 tasks.
+pub fn tasks() -> Vec<Task> {
+    let mut v = Vec::new();
+    let mut idx = 0;
+    let mut push = |name: &str, full: KernelGraph, small: KernelGraph| {
+        idx += 1;
+        v.push(Task::new(Level::L1, idx, name, full, small));
+    };
+
+    push("matmul_square", matmul(1024, 1024, 1024, DType::F32), matmul(16, 16, 16, DType::F32));
+    push("matmul_large", matmul(4096, 4096, 4096, DType::F32), matmul(32, 32, 32, DType::F32));
+    push("matmul_tall", matmul(8192, 256, 512, DType::F32), matmul(64, 8, 16, DType::F32));
+    push("matmul_wide", matmul(256, 8192, 512, DType::F32), matmul(8, 64, 16, DType::F32));
+    push("matmul_f16", matmul(2048, 2048, 2048, DType::F16), matmul(16, 16, 16, DType::F16));
+    push("matvec", matmul(4096, 4096, 1, DType::F32), matmul(32, 32, 1, DType::F32));
+    push(
+        "conv2d_3x3",
+        conv(16, 64, 128, 56, 3, 1, 1),
+        conv(1, 4, 8, 10, 3, 1, 1),
+    );
+    push(
+        "conv2d_1x1",
+        conv(16, 256, 128, 28, 1, 1, 0),
+        conv(1, 8, 4, 8, 1, 1, 0),
+    );
+    push(
+        "conv2d_stride2",
+        conv(16, 64, 128, 56, 3, 2, 1),
+        conv(1, 4, 8, 10, 3, 2, 1),
+    );
+    push("maxpool2d", pool(32, 64, 112, 2, 2, true), pool(1, 4, 12, 2, 2, true));
+    push("avgpool2d", pool(32, 64, 112, 2, 2, false), pool(1, 4, 12, 2, 2, false));
+    push("softmax", unary2d(4096, 4096, OpKind::Softmax { axis: 1 }), unary2d(16, 32, OpKind::Softmax { axis: 1 }));
+    push("logsumexp", unary2d(4096, 4096, OpKind::LogSumExp { axis: 1 }), unary2d(16, 32, OpKind::LogSumExp { axis: 1 }));
+    push("layer_norm", unary2d(4096, 1024, OpKind::LayerNorm), unary2d(8, 64, OpKind::LayerNorm));
+    push("relu", unary2d(8192, 8192, OpKind::Relu), unary2d(32, 32, OpKind::Relu));
+    push("gelu", unary2d(8192, 4096, OpKind::Gelu), unary2d(32, 32, OpKind::Gelu));
+    push("sigmoid", unary2d(8192, 4096, OpKind::Sigmoid), unary2d(32, 32, OpKind::Sigmoid));
+    push("tanh_exp_scale", elementwise_chain(8192, 4096), elementwise_chain(32, 32));
+    push("reduce_sum", unary2d(8192, 4096, OpKind::ReduceSum { axis: 1 }), unary2d(32, 32, OpKind::ReduceSum { axis: 1 }));
+    push("reduce_max", unary2d(8192, 4096, OpKind::ReduceMax { axis: 1 }), unary2d(32, 32, OpKind::ReduceMax { axis: 1 }));
+
+    v
+}
+
+fn matmul(m: usize, k: usize, n: usize, dtype: DType) -> KernelGraph {
+    let mut b = GraphBuilder::new("matmul");
+    let x = b.input_typed("x", &[m, k], dtype);
+    let w = b.input_typed("w", &[k, n], dtype);
+    let mm = b.op(OpKind::Matmul, &[x, w]);
+    b.output(mm);
+    b.finish()
+}
+
+fn conv(n: usize, c_in: usize, c_out: usize, hw: usize, k: usize, stride: usize, pad: usize) -> KernelGraph {
+    let mut b = GraphBuilder::new("conv2d");
+    let x = b.input("x", &[n, c_in, hw, hw]);
+    let w = b.input("w", &[c_out, c_in, k, k]);
+    let c = b.op(OpKind::Conv2d { stride, pad }, &[x, w]);
+    b.output(c);
+    b.finish()
+}
+
+fn pool(n: usize, c: usize, hw: usize, k: usize, stride: usize, is_max: bool) -> KernelGraph {
+    let mut b = GraphBuilder::new(if is_max { "maxpool" } else { "avgpool" });
+    let x = b.input("x", &[n, c, hw, hw]);
+    let p = if is_max {
+        b.op(OpKind::MaxPool2d { k, stride }, &[x])
+    } else {
+        b.op(OpKind::AvgPool2d { k, stride }, &[x])
+    };
+    b.output(p);
+    b.finish()
+}
+
+fn unary2d(m: usize, n: usize, kind: OpKind) -> KernelGraph {
+    let mut b = GraphBuilder::new(kind.mnemonic());
+    let x = b.input("x", &[m, n]);
+    let y = b.op(kind, &[x]);
+    b.output(y);
+    b.finish()
+}
+
+fn elementwise_chain(m: usize, n: usize) -> KernelGraph {
+    let mut b = GraphBuilder::new("tanh_exp_scale");
+    let x = b.input("x", &[m, n]);
+    let t = b.op(OpKind::Tanh, &[x]);
+    let e = b.op(OpKind::Exp, &[t]);
+    let s = b.op(OpKind::Scale { c: 0.5 }, &[e]);
+    b.output(s);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_tasks() {
+        assert_eq!(tasks().len(), 20);
+    }
+
+    #[test]
+    fn f16_task_has_16bit_dtype() {
+        let ts = tasks();
+        let f16 = ts.iter().find(|t| t.id.contains("matmul_f16")).unwrap();
+        assert_eq!(f16.graph.inputs[0].dtype, DType::F16);
+        assert_eq!(f16.small.inputs[0].dtype, DType::F16);
+    }
+
+    #[test]
+    fn matmul_task_single_contraction() {
+        let ts = tasks();
+        let mm = &ts[0];
+        let census = mm.graph.op_census();
+        assert_eq!(census.contractions, 1);
+        assert_eq!(census.total(), 1);
+    }
+}

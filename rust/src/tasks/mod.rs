@@ -1,0 +1,199 @@
+//! The benchmark task suite — our KernelBench analog.
+//!
+//! KernelBench (Ouyang et al. 2024) structures tasks in three levels:
+//! - **Level 1**: isolated single operators (matmul, conv, softmax, …) —
+//!   small optimization space, the paper sees modest gains (geomean 1.43×);
+//! - **Level 2**: composed operator patterns — fusion and algebraic
+//!   opportunities, the paper's biggest wins (geomean 2.50×), including the
+//!   Q18 double-logsumexp and Q63 GEMM+epilogue examples reproduced in the
+//!   appendix;
+//! - **Level 3**: whole models (LeNet5, SqueezeNet Fire, …) — many kernels,
+//!   verbose representations (geomean 1.50× on the paper's subset).
+//!
+//! Each task carries two structurally identical graphs: `graph` at the
+//! full benchmark shapes (used by the GPU performance model) and `small`
+//! at reduced shapes (used by the numeric-verification oracle — the same
+//! practice as validating a CUDA kernel on small inputs before timing the
+//! big ones). Graph rewrites are applied to both in lockstep.
+
+pub mod level1;
+pub mod level2;
+pub mod level3;
+
+use crate::kir::KernelGraph;
+
+/// Benchmark level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::L1 => "Level 1",
+            Level::L2 => "Level 2",
+            Level::L3 => "Level 3",
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Level::L1 => "L1",
+            Level::L2 => "L2",
+            Level::L3 => "L3",
+        }
+    }
+}
+
+/// One benchmark task.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Stable identifier, e.g. "L2/18_linear_logsumexp".
+    pub id: String,
+    pub level: Level,
+    /// Full-shape graph (performance model input).
+    pub graph: KernelGraph,
+    /// Reduced-shape graph with identical node structure (numeric oracle).
+    pub small: KernelGraph,
+}
+
+impl Task {
+    pub(crate) fn new(level: Level, idx: usize, name: &str, graph: KernelGraph, small: KernelGraph) -> Self {
+        assert_eq!(
+            graph.nodes.len(),
+            small.nodes.len(),
+            "task {name}: full/small graphs must be structurally identical"
+        );
+        for (a, b) in graph.nodes.iter().zip(&small.nodes) {
+            assert_eq!(
+                std::mem::discriminant(&a.kind),
+                std::mem::discriminant(&b.kind),
+                "task {name}: node kind mismatch between full and small graphs"
+            );
+        }
+        Task {
+            id: format!("{}/{idx:02}_{name}", level.tag()),
+            level,
+            graph,
+            small,
+        }
+    }
+}
+
+/// The full suite.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub tasks: Vec<Task>,
+}
+
+impl Suite {
+    /// Everything: 20 L1 + 20 L2 + 4 L3.
+    pub fn full() -> Suite {
+        let mut tasks = level1::tasks();
+        tasks.extend(level2::tasks());
+        tasks.extend(level3::tasks());
+        Suite { tasks }
+    }
+
+    pub fn level(level: Level) -> Suite {
+        Suite {
+            tasks: match level {
+                Level::L1 => level1::tasks(),
+                Level::L2 => level2::tasks(),
+                Level::L3 => level3::tasks(),
+            },
+        }
+    }
+
+    pub fn by_id(&self, id: &str) -> Option<&Task> {
+        self.tasks.iter().find(|t| t.id == id)
+    }
+
+    pub fn of_level(&self, level: Level) -> Vec<&Task> {
+        self.tasks.iter().filter(|t| t.level == level).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp;
+
+    #[test]
+    fn suite_sizes() {
+        let s = Suite::full();
+        assert_eq!(s.of_level(Level::L1).len(), 20);
+        assert_eq!(s.of_level(Level::L2).len(), 20);
+        assert_eq!(s.of_level(Level::L3).len(), 4);
+        assert_eq!(s.tasks.len(), 44);
+    }
+
+    #[test]
+    fn ids_unique_and_prefixed() {
+        let s = Suite::full();
+        let mut ids: Vec<&str> = s.tasks.iter().map(|t| t.id.as_str()).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate task ids");
+        for t in &s.tasks {
+            assert!(t.id.starts_with(t.level.tag()));
+        }
+    }
+
+    #[test]
+    fn all_graphs_validate() {
+        for t in Suite::full().tasks {
+            t.graph
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: full graph invalid: {e}", t.id));
+            t.small
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: small graph invalid: {e}", t.id));
+        }
+    }
+
+    #[test]
+    fn all_small_graphs_execute() {
+        for t in Suite::full().tasks {
+            let inputs = interp::random_inputs(&t.small, 42);
+            let out = interp::execute(&t.small, &inputs)
+                .unwrap_or_else(|e| panic!("{}: execution failed: {e}", t.id));
+            assert!(!out.is_empty(), "{}: no outputs", t.id);
+            for o in &out {
+                assert!(
+                    o.data.iter().all(|v| v.is_finite()),
+                    "{}: non-finite output",
+                    t.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_graphs_are_actually_small() {
+        for t in Suite::full().tasks {
+            let numel: usize = t
+                .small
+                .inputs
+                .iter()
+                .map(|i| i.shape.numel())
+                .sum();
+            assert!(numel < 200_000, "{}: small graph too big ({numel})", t.id);
+            // ... and full graphs meaningfully bigger.
+            let full: usize = t.graph.inputs.iter().map(|i| i.shape.numel()).sum();
+            assert!(full >= numel, "{}: full smaller than small", t.id);
+        }
+    }
+
+    #[test]
+    fn by_id_lookup() {
+        let s = Suite::full();
+        let first = s.tasks[0].id.clone();
+        assert!(s.by_id(&first).is_some());
+        assert!(s.by_id("L9/nope").is_none());
+    }
+}

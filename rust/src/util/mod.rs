@@ -1,0 +1,53 @@
+//! Substrate utilities built from scratch (offline registry has no
+//! rand/serde_json/proptest): deterministic RNG, JSON, statistics, table
+//! rendering, and a mini property-test harness.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count human-readably (KB dumps report their size budget).
+pub fn human_bytes(n: usize) -> String {
+    if n < 1024 {
+        format!("{n} B")
+    } else if n < 1024 * 1024 {
+        format!("{:.1} KiB", n as f64 / 1024.0)
+    } else {
+        format!("{:.2} MiB", n as f64 / (1024.0 * 1024.0))
+    }
+}
+
+/// Format a duration in engineering units.
+pub fn human_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(12), "12 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        assert_eq!(human_duration(2.5e-9), "2.5 ns");
+        assert_eq!(human_duration(1.5e-5), "15.00 µs");
+        assert_eq!(human_duration(0.002), "2.00 ms");
+        assert_eq!(human_duration(3.0), "3.00 s");
+    }
+}

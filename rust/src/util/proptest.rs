@@ -1,0 +1,131 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline registry has no `proptest`/`quickcheck`; this module provides
+//! the subset we need: run a property over N seeded random cases, and on
+//! failure report the failing case index and seed so the case is exactly
+//! reproducible. Used by the coordinator-invariant property tests (routing,
+//! batching, KB state machine) per the repro guidance.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` receives a fresh RNG per
+/// case (derived deterministically) and returns `Err(reason)` to fail.
+///
+/// Panics with a reproduction hint on the first failing case.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).derive(&format!("{name}/{case}"));
+        if let Err(reason) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {:#x}): {reason}\n\
+                 reproduce with PropConfig {{ cases: 1, seed: {:#x} }} and case index {case}",
+                cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Random vector of f64 in [lo, hi), length in [min_len, max_len].
+    pub fn vec_f64(rng: &mut Rng, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = min_len + rng.index(max_len - min_len + 1);
+        (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Random vector of f32 in [lo, hi).
+    pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + (hi - lo) * rng.f32()).collect()
+    }
+
+    /// Random dims: each in [1, cap].
+    pub fn dims(rng: &mut Rng, n: usize, cap: usize) -> Vec<usize> {
+        (0..n).map(|_| 1 + rng.index(cap)).collect()
+    }
+
+    /// Random identifier-ish string.
+    pub fn ident(rng: &mut Rng, max_len: usize) -> String {
+        let len = 1 + rng.index(max_len);
+        (0..len)
+            .map(|_| (b'a' + rng.index(26) as u8) as char)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", PropConfig { cases: 50, seed: 1 }, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed at case 0")]
+    fn failing_property_panics_with_case() {
+        check("always-false", PropConfig { cases: 10, seed: 1 }, |_rng| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first_run = Vec::new();
+        check("det", PropConfig { cases: 5, seed: 7 }, |rng| {
+            first_run.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second_run = Vec::new();
+        check("det", PropConfig { cases: 5, seed: 7 }, |rng| {
+            second_run.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first_run, second_run);
+    }
+
+    #[test]
+    fn gen_shapes_in_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = gen::vec_f64(&mut rng, 2, 6, -1.0, 1.0);
+            assert!((2..=6).contains(&v.len()));
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+            let d = gen::dims(&mut rng, 3, 8);
+            assert!(d.iter().all(|x| (1..=8).contains(x)));
+            let s = gen::ident(&mut rng, 5);
+            assert!(!s.is_empty() && s.len() <= 5);
+        }
+    }
+}

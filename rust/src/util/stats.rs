@@ -1,0 +1,235 @@
+//! Summary statistics used throughout the evaluation: geometric mean,
+//! median, percentiles, IQR, and the Table-3 style summary block.
+//!
+//! All functions are defined over `&[f64]`; non-finite values are the
+//! caller's bug and will panic in debug builds.
+
+/// Arithmetic mean. Returns NaN for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean via log-space accumulation (avoids overflow/underflow).
+/// All inputs must be > 0. Returns NaN for empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = xs
+        .iter()
+        .map(|x| {
+            debug_assert!(*x > 0.0, "geomean requires positive values, got {x}");
+            x.max(f64::MIN_POSITIVE).ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Percentile with linear interpolation (the "linear" / type-7 definition
+/// that numpy uses by default). `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("non-finite value in percentile"));
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// (Q1, median, Q3).
+pub fn quartiles(xs: &[f64]) -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN, f64::NAN);
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile_sorted(&v, 25.0),
+        percentile_sorted(&v, 50.0),
+        percentile_sorted(&v, 75.0),
+    )
+}
+
+/// Interquartile range.
+pub fn iqr(xs: &[f64]) -> f64 {
+    let (q1, _, q3) = quartiles(xs);
+    q3 - q1
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Fraction of values strictly greater than `threshold`.
+pub fn frac_above(xs: &[f64], threshold: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().filter(|x| **x > threshold).count() as f64 / xs.len() as f64
+}
+
+/// The summary block Table 3 reports for a set of per-task speedups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedupSummary {
+    pub n: usize,
+    pub average: f64,
+    pub geomean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Fraction (0..1) of tasks with speedup > 1.0.
+    pub frac_gt_1x: f64,
+    /// Fraction (0..1) of tasks with speedup <= 1.0.
+    pub frac_lt_1x: f64,
+}
+
+impl SpeedupSummary {
+    pub fn from_speedups(speedups: &[f64]) -> Self {
+        let gt = frac_above(speedups, 1.0);
+        Self {
+            n: speedups.len(),
+            average: mean(speedups),
+            geomean: geomean(speedups),
+            median: median(speedups),
+            min: min(speedups),
+            max: max(speedups),
+            frac_gt_1x: gt,
+            frac_lt_1x: 1.0 - gt,
+        }
+    }
+}
+
+/// Pearson correlation coefficient (used by the Fig. 10 cost analysis).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_no_overflow() {
+        let xs = vec![1e300, 1e300, 1e-300, 1e-300];
+        let g = geomean(&xs);
+        assert!((g - 1.0).abs() < 1e-9, "g={g}");
+    }
+
+    #[test]
+    fn geomean_empty_is_nan() {
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn percentile_matches_numpy_type7() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quartiles_and_iqr() {
+        let xs: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let (q1, q2, q3) = quartiles(&xs);
+        assert_eq!(q2, 5.0);
+        assert_eq!(q1, 3.0);
+        assert_eq!(q3, 7.0);
+        assert_eq!(iqr(&xs), 4.0);
+    }
+
+    #[test]
+    fn summary_block() {
+        let s = SpeedupSummary::from_speedups(&[0.5, 1.0, 2.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.average - 1.875).abs() < 1e-12);
+        assert!((s.geomean - 2.0f64.sqrt()).abs() < 1e-9);
+        assert_eq!(s.min, 0.5);
+        assert_eq!(s.max, 4.0);
+        assert!((s.frac_gt_1x - 0.5).abs() < 1e-12);
+        assert!((s.frac_lt_1x - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((pearson(&xs, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&xs, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        // population sd = 2; sample sd = sqrt(32/7)
+        assert!((stddev(&xs) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,288 @@
+//! ASCII table and plot rendering for experiment reports.
+//!
+//! Every paper table/figure regenerator prints a human-readable artifact to
+//! stdout and writes machine-readable CSV next to it; this module owns the
+//! human-readable half.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, align: Align) -> Self {
+        if col < self.aligns.len() {
+            self.aligns[col] = align;
+        }
+        self
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// A separator row (rendered as a rule).
+    pub fn add_rule(&mut self) -> &mut Self {
+        self.rows.push(Vec::new());
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.iter().filter(|r| !r.is_empty()).count()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let rule: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&rule);
+        out.push('\n');
+        out.push_str(&render_row(&self.headers, &widths, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            if row.is_empty() {
+                out.push_str(&rule);
+            } else {
+                out.push_str(&render_row(row, &widths, &self.aligns));
+            }
+            out.push('\n');
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out
+    }
+
+    /// CSV rendering (headers + data rows; rules skipped).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&csv_row(&self.headers));
+        for row in &self.rows {
+            if !row.is_empty() {
+                out.push_str(&csv_row(row));
+            }
+        }
+        out
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    let quoted: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect();
+    format!("{}\n", quoted.join(","))
+}
+
+fn render_row(cells: &[String], widths: &[usize], aligns: &[Align]) -> String {
+    let mut s = String::from("|");
+    for (i, cell) in cells.iter().enumerate() {
+        let pad = widths[i].saturating_sub(cell.chars().count());
+        match aligns[i] {
+            Align::Left => {
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(pad + 1));
+            }
+            Align::Right => {
+                s.push_str(&" ".repeat(pad + 1));
+                s.push_str(cell);
+                s.push(' ');
+            }
+        }
+        s.push('|');
+    }
+    s
+}
+
+/// Format a float with `prec` decimals, trimming to a compact form.
+pub fn fnum(x: f64, prec: usize) -> String {
+    if x.is_nan() {
+        return "-".to_string();
+    }
+    format!("{x:.prec$}")
+}
+
+/// Format a fraction 0..1 as a percentage.
+pub fn fpct(x: f64) -> String {
+    if x.is_nan() {
+        return "-".to_string();
+    }
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Render a horizontal ASCII bar chart: (label, value) pairs.
+pub fn bar_chart(items: &[(String, f64)], width: usize) -> String {
+    if items.is_empty() {
+        return String::new();
+    }
+    let max_val = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = items.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, value) in items {
+        let n = ((value / max_val) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} | {}{} {:.3}\n",
+            "█".repeat(n),
+            " ".repeat(width - n),
+            value
+        ));
+    }
+    out
+}
+
+/// Render an ASCII line plot of one or more series over shared x values.
+/// Series are (name, ys); all ys must have the same length as xs.
+pub fn line_plot(xs: &[f64], series: &[(String, Vec<f64>)], height: usize, width: usize) -> String {
+    if xs.is_empty() || series.is_empty() {
+        return String::new();
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let all: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.iter().copied()).collect();
+    let ymin = all.iter().copied().fold(f64::INFINITY, f64::min);
+    let ymax = all.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let yspan = (ymax - ymin).max(1e-12);
+    let xmin = xs[0];
+    let xmax = *xs.last().unwrap();
+    let xspan = (xmax - xmin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (x, y) in xs.iter().zip(ys) {
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y) / yspan) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax - (i as f64 / (height - 1).max(1) as f64) * yspan;
+        out.push_str(&format!("{yval:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9} +{}\n{:>11}{:<w$.3}{:>w2$.3}\n",
+        "",
+        "-".repeat(width),
+        "",
+        xmin,
+        xmax,
+        w = width / 2,
+        w2 = width - width / 2
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.add_row(vec!["alpha".into(), "1.00".into()]);
+        t.add_rule();
+        t.add_row(vec!["b".into(), "12.50".into()]);
+        let r = t.render();
+        assert!(r.contains("| name  | value |"), "{r}");
+        assert!(r.contains("| alpha |  1.00 |"), "{r}");
+        assert!(r.contains("| b     | 12.50 |"), "{r}");
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["k", "v"]);
+        t.add_row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "k,v\n\"has,comma\",\"has\"\"quote\"\n");
+    }
+
+    #[test]
+    fn fnum_fpct() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fpct(0.5), "50.0%");
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let items = vec![("a".to_string(), 2.0), ("bb".to_string(), 1.0)];
+        let s = bar_chart(&items, 10);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].matches('█').count() == 10);
+        assert!(lines[1].matches('█').count() == 5);
+    }
+
+    #[test]
+    fn line_plot_basic() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0];
+        let series = vec![("up".to_string(), vec![0.0, 1.0, 2.0, 3.0])];
+        let s = line_plot(&xs, &series, 5, 20);
+        assert!(s.contains('*'));
+        assert!(s.contains("up"));
+    }
+}

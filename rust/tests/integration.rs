@@ -1,0 +1,195 @@
+//! Cross-module integration tests: the full optimization pipeline,
+//! KB persistence round-trips through the driver, experiment smoke
+//! coverage, and baseline orderings.
+
+use kernelblaster::baselines;
+use kernelblaster::experiments::{self, Ctx};
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::{self, HarnessConfig};
+use kernelblaster::icrl::{self, IcrlConfig};
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::metrics;
+use kernelblaster::tasks::{Level, Suite};
+use kernelblaster::util::rng::Rng;
+
+fn quick_cfg() -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 3,
+        rollout_steps: 5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_pipeline_beats_naive_and_baselines_are_ordered() {
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg();
+    let mut kb = KnowledgeBase::empty();
+    let tasks = suite.of_level(Level::L2);
+    let subset: Vec<_> = tasks.into_iter().step_by(4).collect();
+    let runs = icrl::run_suite(&subset, &arch, &mut kb, &cfg);
+
+    let mut ours = Vec::new();
+    let mut iree = Vec::new();
+    for (task, run) in subset.iter().zip(&runs) {
+        let base = baselines::baseline_times(task, &arch).best_s();
+        assert!(run.valid, "{}: no valid kernel found", task.id);
+        ours.push(metrics::TaskScore {
+            valid: run.valid,
+            speedup: base / run.best_time_s,
+        });
+        if let Some(t) = baselines::iree(task, &arch) {
+            iree.push(metrics::TaskScore {
+                valid: true,
+                speedup: base / t,
+            });
+        }
+    }
+    let ours_gm = metrics::summarize(&ours).summary.geomean;
+    let iree_gm = metrics::summarize(&iree).summary.geomean;
+    // The paper's ordering: Ours >> IREE, with Ours near/above the
+    // PyTorch line even at this reduced 3x5 budget (the full Table-2
+    // budget reaches ~1.45x geomean on L2 — see EXPERIMENTS.md).
+    assert!(ours_gm > 0.8, "ours geomean {ours_gm:.2}");
+    assert!(
+        iree_gm < ours_gm * 0.8,
+        "IREE {iree_gm:.2} must trail ours {ours_gm:.2}"
+    );
+}
+
+#[test]
+fn kb_persistence_roundtrips_through_driver() {
+    let suite = Suite::full();
+    let arch = GpuArch::a100();
+    let cfg = quick_cfg();
+    let mut kb = KnowledgeBase::empty();
+    let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+    let _ = icrl::optimize_task(task, &arch, &mut kb, &cfg, 0);
+    assert!(kb.total_attempts() > 0);
+
+    let dir = std::env::temp_dir().join("kb_integration_test");
+    let path = dir.join("kb.json");
+    persist::save(&kb, &path).unwrap();
+    let loaded = persist::load(&path).unwrap();
+    assert_eq!(loaded.states.len(), kb.states.len());
+    assert_eq!(loaded.total_attempts(), kb.total_attempts());
+
+    // A loaded KB must be immediately usable by the driver.
+    let mut kb2 = loaded;
+    let run2 = icrl::optimize_task(task, &arch, &mut kb2, &cfg, 1);
+    assert!(run2.valid);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_experiment_runs_quick_and_writes_csvs() {
+    // Smoke coverage for the complete registry — each paper artifact
+    // regenerator must produce a non-empty report and valid CSV.
+    let ctx = Ctx::new(true, 99);
+    let out = std::env::temp_dir().join("kb_experiments_smoke");
+    for (name, f) in experiments::registry() {
+        // The heavyweight sweeps are exercised by their own unit tests;
+        // keep the smoke run bounded.
+        if matches!(name, "fig17" | "fig18" | "fig9") {
+            continue;
+        }
+        let report = f(&ctx);
+        assert!(!report.sections.is_empty(), "{name}: empty report");
+        let rendered = report.render();
+        assert!(rendered.len() > 100, "{name}: implausibly small report");
+        let files = report.write_csvs(&out).unwrap();
+        assert!(!files.is_empty(), "{name}: wrote no CSVs");
+        for fpath in files {
+            let text = std::fs::read_to_string(&fpath).unwrap();
+            assert!(text.lines().count() >= 2, "{name}: CSV has no data rows");
+        }
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn harness_catches_every_buggy_lowering_at_scale() {
+    // Error-injection sweep: whatever the lowering agent produces under
+    // maximum bug rates, nothing incorrect ever profiles as Ok.
+    use kernelblaster::agents::lowering::{self, Lowered};
+    use kernelblaster::agents::{AgentConfig, TokenMeter};
+    use kernelblaster::kir::interp;
+    use kernelblaster::opts::{Candidate, Technique};
+
+    let suite = Suite::full();
+    let arch = GpuArch::l40s();
+    let hcfg = HarnessConfig {
+        noise_sigma: 0.0,
+        ..Default::default()
+    };
+    let agent = AgentConfig {
+        lowering_bug_rate: 0.5,
+        reward_hack_rate: 0.3,
+        lowering_fail_rate: 0.1,
+        ..AgentConfig::default()
+    };
+    let mut caught = 0;
+    let mut clean = 0;
+    for id in ["L2/01_gemm_bias_relu", "L2/09_mlp_block", "L1/12_softmax"] {
+        let task = suite.by_id(id).unwrap();
+        let cand = Candidate::naive(task);
+        for seed in 0..30 {
+            let mut meter = TokenMeter::new();
+            let mut rng = Rng::new(seed);
+            let out = lowering::lower(
+                Technique::MemoryCoalescing,
+                &cand,
+                0,
+                &agent,
+                0,
+                &mut meter,
+                &mut rng,
+            );
+            match out {
+                Lowered::Ok(c) => {
+                    let res = harness::run(task, &c, &arch, &hcfg, &mut rng);
+                    assert!(res.is_ok(), "{id}: clean lowering rejected: {}", res.feedback());
+                    clean += 1;
+                }
+                Lowered::SemanticBug(c) | Lowered::RewardHack(c) => {
+                    let res = harness::run(task, &c, &arch, &hcfg, &mut rng);
+                    if res.is_ok() {
+                        // A "bug" that changed nothing observable would be
+                        // a test artifact — verify semantics really differ.
+                        let inputs = interp::random_inputs(&task.small, 0xF00D);
+                        let a = interp::execute(&task.small, &inputs).unwrap();
+                        let b = interp::execute(&c.small, &inputs).unwrap();
+                        assert!(
+                            interp::allclose(&a[0], &b[0], 1e-4, 1e-4),
+                            "{id}: harness passed a semantically different kernel"
+                        );
+                    } else {
+                        caught += 1;
+                    }
+                }
+                Lowered::CompileFail(_) => {}
+            }
+        }
+    }
+    assert!(caught > 10, "expected many catches, got {caught}");
+    assert!(clean > 10, "expected many clean lowerings, got {clean}");
+}
+
+#[test]
+fn vendor_mode_beats_no_vendor_on_contraction_suite() {
+    // Fig. 8/11 mechanism: the +cuDNN configuration composes with the
+    // agent's own optimizations and should not lose to the bare agent.
+    let ctx = Ctx::new(true, 5);
+    let arch = GpuArch::l40s();
+    let mut kb1 = KnowledgeBase::empty();
+    let (_r1, plain) = experiments::run_ours(&ctx, &arch, Level::L1, false, &mut kb1);
+    let mut kb2 = KnowledgeBase::empty();
+    let (_r2, vendor) = experiments::run_ours(&ctx, &arch, Level::L1, true, &mut kb2);
+    let g_plain = metrics::summarize(&plain).summary.geomean;
+    let g_vendor = metrics::summarize(&vendor).summary.geomean;
+    assert!(
+        g_vendor > g_plain * 0.8,
+        "vendor mode collapsed: {g_vendor:.2} vs {g_plain:.2}"
+    );
+}
