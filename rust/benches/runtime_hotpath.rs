@@ -1,37 +1,87 @@
 //! Bench: the §Perf hot paths across all three layers.
 //!
 //! - L3 coordinator: the per-step inner loop (profile → state-extract →
-//!   KB match/select → transform → verify) and its components;
+//!   KB match/select → transform → verify) and its components, on both
+//!   the sequential and parallel exploration paths;
+//! - substrates: interpreter (fresh-alloc vs pooled [`ExecContext`]),
+//!   harness (uncached vs [`VerifyCache`]d), performance model, indexed
+//!   KB retrieval;
 //! - runtime: real PJRT artifact execution (anchors) — requires
-//!   `make artifacts`;
-//! - substrates: interpreter, performance model, KB retrieval.
+//!   `make artifacts` and a `--cfg kb_pjrt` build.
 //!
-//! Results recorded in EXPERIMENTS.md §Perf.
+//! Besides the human-readable table, every measurement is appended to
+//! `BENCH_hotpath.json` (format `kernelblaster-bench-hotpath-v1`:
+//! `{"results":[{"name","ns_per_iter","iters"}…]}`) so the perf
+//! trajectory is machine-trackable across PRs — CI uploads the file as an
+//! artifact, and EXPERIMENTS.md §Perf records the headline ratios.
 
 use kernelblaster::gpu::{estimate_schedule, profiler, GpuArch};
-use kernelblaster::harness::{self, HarnessConfig};
+use kernelblaster::harness::{self, HarnessConfig, VerifyCache};
 use kernelblaster::icrl::{self, IcrlConfig};
 use kernelblaster::kb::KnowledgeBase;
 use kernelblaster::kir::interp;
 use kernelblaster::opts::{apply, Candidate, Technique};
 use kernelblaster::runtime::{anchors, default_artifact_dir, Runtime};
 use kernelblaster::tasks::Suite;
+use kernelblaster::util::json::{Json, JsonObj};
 use kernelblaster::util::rng::Rng;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
-    // warmup
-    f();
-    let start = Instant::now();
-    for _ in 0..iters {
-        f();
+/// (name, seconds-per-iter, iters) records destined for the JSON dump.
+struct Recorder {
+    rows: Vec<(String, f64, usize)>,
+}
+
+impl Recorder {
+    fn new() -> Self {
+        Self { rows: Vec::new() }
     }
-    let per = start.elapsed().as_secs_f64() / iters as f64;
-    println!("{name:55} {:>12}  ({iters} iters)", kernelblaster::util::human_duration(per));
-    per
+
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> f64 {
+        // warmup
+        f();
+        let start = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = start.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{name:55} {:>12}  ({iters} iters)",
+            kernelblaster::util::human_duration(per)
+        );
+        self.rows.push((name.to_string(), per, iters));
+        per
+    }
+
+    /// Record an externally-timed measurement (e.g. whole-run loops).
+    fn record(&mut self, name: &str, per: f64, iters: usize) {
+        self.rows.push((name.to_string(), per, iters));
+    }
+
+    fn write_json(&self, path: &str) {
+        let mut root = JsonObj::new();
+        root.set("format", "kernelblaster-bench-hotpath-v1");
+        let results: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, per, iters)| {
+                let mut o = JsonObj::new();
+                o.set("name", name.as_str());
+                o.set("ns_per_iter", per * 1e9);
+                o.set("iters", *iters);
+                Json::Obj(o)
+            })
+            .collect();
+        root.set("results", Json::Arr(results));
+        match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+            Ok(()) => eprintln!("[bench] wrote {path}"),
+            Err(e) => eprintln!("[bench] failed to write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
+    let mut rec = Recorder::new();
     let suite = Suite::full();
     let arch = GpuArch::h100();
     let task = suite.by_id("L2/09_mlp_block").unwrap();
@@ -39,50 +89,133 @@ fn main() {
     let mut rng = Rng::new(1);
 
     println!("== L3 substrate hot paths ==");
-    bench("gpu model: estimate_schedule (5-node graph)", 20_000, || {
+    rec.bench("gpu model: estimate_schedule (5-node graph)", 20_000, || {
         let _ = estimate_schedule(&arch, &cand.full, &cand.schedule);
     });
-    bench("profiler: full NCU-like report", 10_000, || {
+    rec.bench("profiler: full NCU-like report", 10_000, || {
         let _ = profiler::profile(&arch, &cand.full, &cand.schedule, 0.02, &mut rng);
     });
+
     let inputs = interp::random_inputs(&task.small, 42);
-    bench("interpreter: verify-scale mlp_block", 2_000, || {
+    let fresh = rec.bench("interpreter: verify-scale mlp_block (fresh)", 2_000, || {
         let _ = interp::execute(&task.small, &inputs).unwrap();
     });
+    let mut ctx = interp::ExecContext::new();
+    let pooled = rec.bench("interpreter: verify-scale mlp_block (pooled)", 2_000, || {
+        let _ = ctx.execute(&task.small, &inputs).unwrap();
+    });
+    println!("  -> interpreter pooled speedup: {:.2}x", fresh / pooled);
+
     let hcfg = HarnessConfig::default();
-    bench("harness: full run (3-seed verify + profile)", 500, || {
+    let uncached = rec.bench("harness: full run (uncached oracle)", 500, || {
         let _ = harness::run(task, &cand, &arch, &hcfg, &mut rng);
     });
-    bench("opts: apply shared_memory_tiling", 10_000, || {
+    let mut cache = VerifyCache::new();
+    cache.warm(task, &hcfg).unwrap();
+    let cached = rec.bench("harness: full run (VerifyCache)", 500, || {
+        let _ = harness::run_cached(task, &cand, &arch, &hcfg, Some(&cache), &mut rng);
+    });
+    println!("  -> harness cached speedup: {:.2}x", uncached / cached);
+
+    rec.bench("opts: apply shared_memory_tiling", 10_000, || {
         let _ = apply::apply(Technique::SharedMemoryTiling, &cand, 0);
     });
+
     let mut kb = KnowledgeBase::seed_priors();
-    let m = kb.match_state(kb.states[0].sig);
+    let sig0 = kb.states[0].sig;
+    let m = kb.match_state(sig0);
     let state = m.index();
-    bench("kb: select_top_k over 25 techniques", 100_000, || {
+    rec.bench("kb: select_top_k over 25 techniques", 100_000, || {
         let _ = kb.select_top_k(state, 3, |_| true, &mut rng);
     });
+    // Indexed state matching at scale: all 7×7×4 possible signatures.
+    let mut big_kb = KnowledgeBase::empty();
+    let classes = [
+        kernelblaster::kb::WorkloadClass::ContractionHeavy,
+        kernelblaster::kb::WorkloadClass::ReductionHeavy,
+        kernelblaster::kb::WorkloadClass::Elementwise,
+        kernelblaster::kb::WorkloadClass::Mixed,
+    ];
+    let mut sigs = Vec::new();
+    for p in profiler::Bottleneck::all() {
+        for s in profiler::Bottleneck::all() {
+            for w in classes {
+                sigs.push(kernelblaster::kb::StateSig {
+                    primary: p,
+                    secondary: s,
+                    workload: w,
+                });
+            }
+        }
+    }
+    for sig in &sigs {
+        big_kb.match_state(*sig);
+    }
+    let mut cursor = 0usize;
+    rec.bench("kb: match_state hit on 196-state KB (indexed)", 200_000, || {
+        let _ = big_kb.match_state(sigs[cursor % sigs.len()]);
+        cursor += 1;
+    });
 
+    // KB_BENCH_SCALE=quick (the CI smoke setting) shrinks the end-to-end
+    // section; anything else runs the Table-2 default 10×10 protocol.
+    let quick = std::env::var("KB_BENCH_SCALE").as_deref() == Ok("quick");
+    let (traj, steps) = if quick { (3, 5) } else { (10, 10) };
     println!("\n== L3 end-to-end: one full task optimization ==");
-    let cfg = IcrlConfig::default();
-    let start = Instant::now();
-    let mut kb2 = KnowledgeBase::empty();
-    let run = icrl::optimize_task(task, &arch, &mut kb2, &cfg, 0);
-    println!(
-        "optimize_task (10 traj x 10 steps): {:.2}s -> {:.2}x vs naive, {} harness samples",
-        start.elapsed().as_secs_f64(),
-        run.speedup_vs_naive(),
-        run.steps.len()
-    );
+    for (label, parallel) in [("sequential", false), ("parallel", true)] {
+        let cfg = IcrlConfig {
+            trajectories: traj,
+            rollout_steps: steps,
+            parallel_explore: parallel,
+            ..IcrlConfig::default()
+        };
+        let start = Instant::now();
+        let mut kb2 = KnowledgeBase::empty();
+        let run = icrl::optimize_task(task, &arch, &mut kb2, &cfg, 0);
+        let elapsed = start.elapsed().as_secs_f64();
+        // StepLog holds one record per evaluated pick (top_k per step);
+        // count distinct (trajectory, step) pairs for the true step rate.
+        let n_steps = run
+            .steps
+            .iter()
+            .map(|s| (s.trajectory, s.step))
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
+            .max(1);
+        let n_samples = run.steps.len().max(1);
+        println!(
+            "optimize_task [{label}] ({traj} traj x {steps} steps): {elapsed:.2}s -> {:.2}x vs naive, \
+             {} steps / {} harness samples, {:.1} ms/step",
+            run.speedup_vs_naive(),
+            n_steps,
+            run.steps.len(),
+            elapsed / n_steps as f64 * 1e3,
+        );
+        rec.record(
+            &format!("icrl: per-step inner loop ({label})"),
+            elapsed / n_steps as f64,
+            n_steps,
+        );
+        rec.record(
+            &format!("icrl: per-sample harness eval ({label})"),
+            elapsed / n_samples as f64,
+            n_samples,
+        );
+        rec.record(&format!("icrl: optimize_task whole run ({label})"), elapsed, 1);
+    }
 
     println!("\n== Runtime (PJRT) anchors ==");
     if default_artifact_dir().join("manifest.json").exists() {
-        let rt = Runtime::new(default_artifact_dir()).expect("PJRT client");
-        match anchors::calibrate(&rt, 2, 10) {
-            Ok(results) => print!("{}", anchors::render(&results)),
-            Err(e) => println!("calibration failed: {e}"),
+        match Runtime::new(default_artifact_dir()) {
+            Ok(rt) => match anchors::calibrate(&rt, 2, 10) {
+                Ok(results) => print!("{}", anchors::render(&results)),
+                Err(e) => println!("calibration failed: {e}"),
+            },
+            Err(e) => println!("PJRT unavailable: {e}"),
         }
     } else {
         println!("artifacts missing — run `make artifacts` first");
     }
+
+    rec.write_json("BENCH_hotpath.json");
 }

@@ -40,6 +40,16 @@ impl Lowered {
             Lowered::CompileFail(_) => None,
         }
     }
+
+    /// Consume the attempt, taking ownership of the produced candidate —
+    /// the driver's hot path (§Perf: avoids one full graph-pair clone per
+    /// lowering attempt).
+    pub fn into_candidate(self) -> Option<Candidate> {
+        match self {
+            Lowered::Ok(c) | Lowered::SemanticBug(c) | Lowered::RewardHack(c) => Some(c),
+            Lowered::CompileFail(_) => None,
+        }
+    }
 }
 
 /// One lowering attempt. `attempt` is the retry index (0 = first try);

@@ -79,6 +79,10 @@ pub fn cuda_engineer(
     let naive = Candidate::naive(task);
     let naive_rep = harness::profile_naive(task, arch, hcfg, &mut rng);
     let naive_time = naive_rep.total_time_s;
+    // §Perf: baselines share the memoized-oracle discipline — the task
+    // reference is computed once per run, not once per candidate.
+    let mut cache = harness::VerifyCache::new();
+    let _ = cache.warm(task, hcfg);
 
     // One-shot initial translation: ~15% of tasks never produce a valid
     // starting kernel (drives the 82% ValidRate).
@@ -114,7 +118,7 @@ pub fn cuda_engineer(
         for (tech, gi) in cands {
             let lowered = lowering::lower(tech, &elite, gi, &agent, 0, &mut meter, &mut rng);
             if let Some(c) = lowered.candidate() {
-                let out = harness::run(task, c, arch, hcfg, &mut rng);
+                let out = harness::run_cached(task, c, arch, hcfg, Some(&cache), &mut rng);
                 if let Outcome::Ok(rep) = out {
                     if rep.total_time_s < elite_time {
                         elite_time = rep.total_time_s;
@@ -156,12 +160,14 @@ pub fn zero_shot(task: &Task, arch: &GpuArch, hcfg: &HarnessConfig, seed: u64) -
         };
     }
     // The model "knows" common good practice: coalescing, maybe fusion.
+    let mut cache = harness::VerifyCache::new();
+    let _ = cache.warm(task, hcfg);
     let mut cand = naive;
     let mut time = naive_time;
     for tech in [Technique::MemoryCoalescing, Technique::KernelFusion] {
         if let Some(gi) = tech.applicable_anywhere(&cand) {
             if let Ok(c) = crate::opts::apply::apply(tech, &cand, gi) {
-                let out = harness::run(task, &c, arch, hcfg, &mut rng);
+                let out = harness::run_cached(task, &c, arch, hcfg, Some(&cache), &mut rng);
                 if let Outcome::Ok(rep) = out {
                     cand = c;
                     time = rep.total_time_s;
@@ -204,6 +210,9 @@ pub fn minimal_agent(
     let naive = Candidate::naive(task);
     let naive_rep = harness::profile_naive(task, arch, hcfg, &mut rng);
     let naive_time = naive_rep.total_time_s;
+    // §Perf: memoized oracle, as in the driver and the other baselines.
+    let mut cache = harness::VerifyCache::new();
+    let _ = cache.warm(task, hcfg);
     let mut best = naive.clone();
     let mut best_time = naive_time;
     let mut any_valid = false;
@@ -243,7 +252,7 @@ pub fn minimal_agent(
             for attempt in 0..=agent.retry_limit {
                 let lowered = lowering::lower(tech, &cand, gi, &agent, attempt, &mut meter, &mut rng);
                 if let Some(c) = lowered.candidate() {
-                    let out = harness::run(task, c, arch, hcfg, &mut rng);
+                    let out = harness::run_cached(task, c, arch, hcfg, Some(&cache), &mut rng);
                     if let Outcome::Ok(rep) = out {
                         any_valid = true;
                         if rep.total_time_s < best_time {

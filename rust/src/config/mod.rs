@@ -64,6 +64,7 @@ impl RunConfig {
         icrl.set("top_k", self.icrl.top_k);
         icrl.set("seed", self.icrl.seed);
         icrl.set("cycles_only", self.icrl.cycles_only);
+        icrl.set("parallel_explore", self.icrl.parallel_explore);
         icrl.set(
             "kb_mode",
             match self.icrl.kb_mode {
@@ -124,6 +125,10 @@ impl RunConfig {
                 .get("cycles_only")
                 .and_then(Json::as_bool)
                 .unwrap_or(false);
+            cfg.icrl.parallel_explore = icrl
+                .get("parallel_explore")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.parallel_explore);
             cfg.icrl.kb_mode = match icrl.get("kb_mode").and_then(Json::as_str) {
                 Some("ephemeral") => KbMode::EphemeralPerTask,
                 Some("persistent") | None => KbMode::Persistent,

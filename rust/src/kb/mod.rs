@@ -11,6 +11,19 @@
 //! Size discipline matters (§5 reports ≈50 KB; §7 worries about storage
 //! overheads): notes are ring-buffered, and `size_bytes()` reports the
 //! serialized footprint which tests keep bounded.
+//!
+//! # Performance architecture (§Perf)
+//!
+//! State matching and score updates sit on the driver's per-step hot path
+//! (every rollout step does one `match_state` plus top-k score reads, and
+//! every textual-gradient step does `update_score` writes). Both are
+//! backed by derived hash indexes — [`KnowledgeBase`] keeps a
+//! `StateSig → index` map, and each [`StateEntry`] keeps a
+//! `Technique → index` map — while `states`/`opts` remain plain vectors
+//! in **insertion order**, which the serialized format and the weighted
+//! selector both depend on. The indexes are never serialized; loading a
+//! KB rebuilds them (see [`persist`]), so the on-disk format is unchanged
+//! and round-trips byte-identically.
 
 pub mod persist;
 
@@ -18,6 +31,7 @@ use crate::gpu::Bottleneck;
 use crate::kir::KernelGraph;
 use crate::opts::Technique;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 
 /// Coarse workload class, derived from the op census — the second axis of
 /// the state signature (Fig. 5 keys states by code + performance shape).
@@ -156,14 +170,50 @@ pub struct StateEntry {
     pub opts: Vec<OptEntry>,
     /// Times this state was matched.
     pub visits: usize,
+    /// Technique → index into `opts` (§Perf: O(1) score lookups). Derived;
+    /// never serialized. On duplicate techniques the first wins, matching
+    /// the former linear-scan semantics.
+    tech_index: HashMap<Technique, usize>,
+}
+
+impl StateEntry {
+    pub fn new(sig: StateSig) -> Self {
+        StateEntry {
+            sig,
+            opts: Vec::new(),
+            visits: 0,
+            tech_index: HashMap::new(),
+        }
+    }
+
+    /// Append an opt entry, maintaining the technique index.
+    pub fn push_opt(&mut self, o: OptEntry) {
+        self.tech_index.entry(o.technique).or_insert(self.opts.len());
+        self.opts.push(o);
+    }
+
+    /// Index into `opts` for a technique, if recorded.
+    pub fn opt_index(&self, t: Technique) -> Option<usize> {
+        self.tech_index.get(&t).copied()
+    }
 }
 
 /// The Knowledge Base.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct KnowledgeBase {
+    /// State records, in discovery order. Read freely; do NOT push or
+    /// reorder entries (or their `opts`) directly — that desynchronizes
+    /// the derived hash indexes. Mutate through [`Self::match_state`],
+    /// [`Self::insert_state`], [`Self::ensure_candidates`],
+    /// [`Self::update_score`] / [`StateEntry::push_opt`], or call
+    /// [`Self::rebuild_indexes`] after surgery.
     pub states: Vec<StateEntry>,
     /// Monotone counter of parameter updates (k in Algorithm 2).
     pub updates: usize,
+    /// StateSig → index into `states` (§Perf: O(1) match/find). Derived;
+    /// never serialized. On duplicate sigs the first wins, matching the
+    /// former linear-scan semantics.
+    index: HashMap<StateSig, usize>,
 }
 
 /// Result of a state lookup.
@@ -192,39 +242,55 @@ impl KnowledgeBase {
         Self::default()
     }
 
+    /// Append a state entry, maintaining the sig index. Returns its
+    /// index. (Also the deserialization hook — see [`persist`].)
+    pub fn insert_state(&mut self, entry: StateEntry) -> usize {
+        let i = self.states.len();
+        self.index.entry(entry.sig).or_insert(i);
+        self.states.push(entry);
+        i
+    }
+
+    /// Recompute every derived hash index from the vectors (first-wins on
+    /// duplicates, matching lookup semantics). Escape hatch for code that
+    /// restructured `states`/`opts` directly.
+    pub fn rebuild_indexes(&mut self) {
+        self.index.clear();
+        for (i, s) in self.states.iter_mut().enumerate() {
+            self.index.entry(s.sig).or_insert(i);
+            s.tech_index.clear();
+            for (j, o) in s.opts.iter().enumerate() {
+                s.tech_index.entry(o.technique).or_insert(j);
+            }
+        }
+    }
+
     /// Match-or-append a state (the state-matcher of §3). Increments the
-    /// state's visit count.
+    /// state's visit count. Indexed: O(1) regardless of KB size.
     pub fn match_state(&mut self, sig: StateSig) -> Match {
-        if let Some(i) = self.states.iter().position(|s| s.sig == sig) {
+        if let Some(&i) = self.index.get(&sig) {
             self.states[i].visits += 1;
             return Match::Known(i);
         }
-        self.states.push(StateEntry {
-            sig,
-            opts: Vec::new(),
-            visits: 1,
-        });
-        Match::Discovered(self.states.len() - 1)
+        let mut entry = StateEntry::new(sig);
+        entry.visits = 1;
+        Match::Discovered(self.insert_state(entry))
     }
 
     /// Read-only lookup without mutation.
     pub fn find_state(&self, sig: StateSig) -> Option<usize> {
-        self.states.iter().position(|s| s.sig == sig)
+        self.index.get(&sig).copied()
     }
 
     /// Ensure the state has candidate optimizations; if empty, seed from
     /// the catalog priors restricted to `proposals` ("proposes and adds a
-    /// new set of candidate optimizations", §3).
+    /// new set of candidate optimizations", §3). Merges any
+    /// newly-proposed techniques not yet recorded, in proposal order.
     pub fn ensure_candidates(&mut self, state: usize, proposals: &[Technique]) {
         let entry = &mut self.states[state];
-        if entry.opts.is_empty() {
-            entry.opts = proposals.iter().map(|t| OptEntry::seeded(*t)).collect();
-        } else {
-            // Merge in any newly-proposed techniques not yet recorded.
-            for t in proposals {
-                if !entry.opts.iter().any(|o| o.technique == *t) {
-                    entry.opts.push(OptEntry::seeded(*t));
-                }
+        for t in proposals {
+            if entry.opt_index(*t).is_none() {
+                entry.push_opt(OptEntry::seeded(*t));
             }
         }
     }
@@ -248,30 +314,33 @@ impl KnowledgeBase {
         if pool.is_empty() {
             return Vec::new();
         }
+        // Weight = expected gain above parity, floored so that even past
+        // losers keep exploration mass. The floor is what lets
+        // *preparatory* techniques (mixed precision, tiling) keep being
+        // tried even though their measured solo gain is small — their
+        // value is realized by the compute technique that follows (§5's
+        // prep→compute transitions).
+        //
+        // §Perf: weights are computed once and shrunk in lockstep with
+        // the remaining-candidate list instead of being rebuilt every
+        // draw; the rng sees the exact same weight sequence either way.
         let mut remaining: Vec<usize> = (0..pool.len()).collect();
+        let mut weights: Vec<f64> = pool
+            .iter()
+            .map(|o| (o.expected_gain - 0.9).max(0.15))
+            .collect();
         let mut picked = Vec::new();
         while picked.len() < k && !remaining.is_empty() {
-            let weights: Vec<f64> = remaining
-                .iter()
-                .map(|i| {
-                    // Weight = expected gain above parity, floored so that
-                    // even past losers keep exploration mass. The floor is
-                    // what lets *preparatory* techniques (mixed precision,
-                    // tiling) keep being tried even though their measured
-                    // solo gain is small — their value is realized by the
-                    // compute technique that follows (§5's prep→compute
-                    // transitions).
-                    (pool[*i].expected_gain - 0.9).max(0.15)
-                })
-                .collect();
             let wi = rng.weighted_index(&weights);
             picked.push(pool[remaining[wi]].technique);
             remaining.remove(wi);
+            weights.remove(wi);
         }
         picked
     }
 
     /// Score update for (state, technique) — the ParameterUpdate write.
+    /// Indexed: O(1) in the state's technique count.
     pub fn update_score(
         &mut self,
         state: usize,
@@ -281,12 +350,12 @@ impl KnowledgeBase {
     ) {
         self.updates += 1;
         let entry = &mut self.states[state];
-        match entry.opts.iter_mut().find(|o| o.technique == technique) {
-            Some(o) => o.update(measured_gain, note),
+        match entry.opt_index(technique) {
+            Some(i) => entry.opts[i].update(measured_gain, note),
             None => {
                 let mut o = OptEntry::seeded(technique);
                 o.update(measured_gain, note);
-                entry.opts.push(o);
+                entry.push_opt(o);
             }
         }
     }
@@ -485,6 +554,25 @@ mod tests {
         assert_eq!(e.notes.len(), MAX_NOTES);
         assert_eq!(e.notes.last().unwrap(), "note 9");
         assert_eq!(e.notes.first().unwrap(), "note 7");
+    }
+
+    #[test]
+    fn rebuild_indexes_resyncs_after_direct_mutation() {
+        let mut kb = KnowledgeBase::seed_priors();
+        // Simulate external surgery the derived indexes can't track.
+        kb.states.reverse();
+        kb.rebuild_indexes();
+        for (i, s) in kb.states.iter().enumerate() {
+            assert_eq!(kb.find_state(s.sig), Some(i));
+            for (j, o) in s.opts.iter().enumerate() {
+                assert_eq!(s.opt_index(o.technique), Some(j));
+            }
+        }
+        // match_state must hit, not re-discover.
+        let sig = kb.states[0].sig;
+        let n = kb.states.len();
+        assert!(!kb.match_state(sig).is_discovery());
+        assert_eq!(kb.states.len(), n);
     }
 
     #[test]

@@ -66,10 +66,8 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
     if fmt != "kernelblaster-kb-v1" {
         return Err(bad(&format!("unknown format '{fmt}'")));
     }
-    let mut kb = KnowledgeBase {
-        updates: j.get("updates").and_then(Json::as_usize).unwrap_or(0),
-        states: Vec::new(),
-    };
+    let mut kb = KnowledgeBase::empty();
+    kb.updates = j.get("updates").and_then(Json::as_usize).unwrap_or(0);
     for sj in j
         .get("states")
         .and_then(Json::as_arr)
@@ -81,11 +79,10 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
             .ok_or_else(|| bad("state missing sig"))?;
         let sig = StateSig::parse(sig_str)
             .ok_or_else(|| bad(&format!("unparseable state sig '{sig_str}'")))?;
-        let mut entry = StateEntry {
-            sig,
-            visits: sj.get("visits").and_then(Json::as_usize).unwrap_or(0),
-            opts: Vec::new(),
-        };
+        // StateEntry::new/push_opt/insert_state rebuild the derived hash
+        // indexes (§Perf) — the wire format carries none of them.
+        let mut entry = StateEntry::new(sig);
+        entry.visits = sj.get("visits").and_then(Json::as_usize).unwrap_or(0);
         if let Some(opts) = sj.get("optimizations").and_then(Json::as_arr) {
             for oj in opts {
                 let tname = oj
@@ -94,7 +91,7 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
                     .ok_or_else(|| bad("opt missing technique"))?;
                 let technique = Technique::from_name(tname)
                     .ok_or_else(|| bad(&format!("unknown technique '{tname}'")))?;
-                entry.opts.push(OptEntry {
+                entry.push_opt(OptEntry {
                     technique,
                     expected_gain: oj
                         .get("expected_gain")
@@ -115,7 +112,7 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
                 });
             }
         }
-        kb.states.push(entry);
+        kb.insert_state(entry);
     }
     Ok(kb)
 }
@@ -177,6 +174,24 @@ mod tests {
                 assert_eq!(x.successes, y.successes);
                 assert!((x.expected_gain - y.expected_gain).abs() < 1e-3);
                 assert_eq!(x.notes, y.notes);
+            }
+        }
+    }
+
+    #[test]
+    fn serialization_is_byte_stable_through_roundtrip() {
+        // The indexed KB must serialize exactly as the linear-scan one
+        // did: parse → re-serialize is the identity on bytes, and the
+        // rebuilt hash indexes answer lookups with the original indices.
+        let kb = busy_kb();
+        let first = to_json(&kb).to_string_pretty();
+        let back = from_json(&Json::parse(&first).unwrap()).unwrap();
+        let second = to_json(&back).to_string_pretty();
+        assert_eq!(first, second);
+        for (i, s) in kb.states.iter().enumerate() {
+            assert_eq!(back.find_state(s.sig), Some(i));
+            for (j, o) in s.opts.iter().enumerate() {
+                assert_eq!(back.states[i].opt_index(o.technique), Some(j));
             }
         }
     }

@@ -10,6 +10,28 @@
 //!
 //! All arithmetic is f32 (matching the CUDA kernels' accumulate-in-f32
 //! convention); comparisons use a relative+absolute tolerance.
+//!
+//! # Performance architecture (§Perf)
+//!
+//! The interpreter is the dominant cost of the driver's inner loop: every
+//! candidate at every rollout step is executed against `verify_seeds`
+//! randomized inputs. Two invariants make that hot path allocation-free:
+//!
+//! - **Arena-backed execution** — [`ExecContext`] owns one output
+//!   [`Tensor`] per graph node plus a buffer pool of retired `Vec<f32>`s.
+//!   Repeated `execute` calls re-use those buffers in place; a graph with
+//!   different per-node shapes triggers a plan rebuild that recycles the
+//!   old buffers through the pool instead of freeing them.
+//! - **Cached evaluation plan** — per-node output shapes and row-major
+//!   strides are derived once per (context, graph-shape) pair. The node
+//!   order itself is already topological by construction, so the plan is
+//!   exactly the per-node layout metadata. Every op kernel writes each
+//!   output element (ops that accumulate, like matmul, zero their buffer
+//!   first), so stale pool contents can never leak into results.
+//!
+//! The free function [`execute`] remains the convenience entry point (a
+//! fresh context per call) and is bitwise-identical to pooled execution —
+//! asserted by the `hotpath` property tests across the whole task suite.
 
 use super::{DType, KernelGraph, OpKind, Shape, ValueRef};
 use crate::util::rng::Rng;
@@ -42,16 +64,16 @@ impl Tensor {
             data: (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect(),
         }
     }
+}
 
-    /// Row-major strides.
-    fn strides(&self) -> Vec<usize> {
-        let dims = &self.shape.0;
-        let mut s = vec![1usize; dims.len()];
-        for i in (0..dims.len().saturating_sub(1)).rev() {
-            s[i] = s[i + 1] * dims[i + 1];
-        }
-        s
+/// Row-major strides for a shape.
+fn row_major_strides(shape: &Shape) -> Vec<usize> {
+    let dims = &shape.0;
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
     }
+    s
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -66,8 +88,7 @@ pub enum InterpError {
     },
 }
 
-/// Execute the graph on the given inputs (indexed as graph.inputs).
-pub fn execute(graph: &KernelGraph, inputs: &[Tensor]) -> Result<Vec<Tensor>, InterpError> {
+fn check_inputs(graph: &KernelGraph, inputs: &[Tensor]) -> Result<(), InterpError> {
     if inputs.len() != graph.inputs.len() {
         return Err(InterpError::MissingInput(inputs.len()));
     }
@@ -80,30 +101,168 @@ pub fn execute(graph: &KernelGraph, inputs: &[Tensor]) -> Result<Vec<Tensor>, In
             });
         }
     }
-    // Values are evaluated in topological order; operands are borrowed,
-    // not cloned (§Perf: cloning intermediate tensors dominated the
-    // verification cost on multi-layer graphs).
-    let mut values: Vec<Tensor> = Vec::with_capacity(graph.nodes.len());
-    for node in &graph.nodes {
-        let operands: Vec<&Tensor> = node
-            .deps
-            .iter()
-            .map(|d| match d {
-                ValueRef::Input(i) => &inputs[*i],
-                ValueRef::Node(i) => &values[*i],
-            })
-            .collect();
-        let out = eval_op(&node.kind, &operands, &node.shape, node.dtype);
-        values.push(out);
+    Ok(())
+}
+
+/// Reusable execution arena: per-node output tensors, their precomputed
+/// strides (the cached evaluation plan), and a pool of retired buffers.
+///
+/// One context serves any sequence of graphs; buffers are recycled across
+/// plan rebuilds. Not `Sync` by design — concurrent evaluators (the
+/// driver's parallel top-k exploration) each own a private context.
+#[derive(Debug, Default)]
+pub struct ExecContext {
+    /// One output tensor per node; shapes double as the plan fingerprint.
+    values: Vec<Tensor>,
+    /// Row-major strides per node output (plan metadata).
+    strides: Vec<Vec<usize>>,
+    /// Retired `Vec<f32>` buffers awaiting reuse (kept across rebuilds).
+    pool: Vec<Vec<f32>>,
+}
+
+impl ExecContext {
+    pub fn new() -> Self {
+        Self::default()
     }
-    Ok(graph
-        .outputs
-        .iter()
-        .map(|o| match o {
-            ValueRef::Input(i) => inputs[*i].clone(),
-            ValueRef::Node(i) => values[*i].clone(),
-        })
-        .collect())
+
+    /// Number of pooled (idle) buffers — observability for tests/benches.
+    pub fn pooled_buffers(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Take a zeroed buffer of length `n`, preferring the smallest pooled
+    /// buffer whose capacity suffices.
+    fn take_buffer(&mut self, n: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if b.capacity() >= n {
+                match best {
+                    Some(j) if self.pool[j].capacity() <= b.capacity() => {}
+                    _ => best = Some(i),
+                }
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.pool.swap_remove(i);
+                b.clear();
+                b.resize(n, 0.0);
+                b
+            }
+            None => vec![0.0; n],
+        }
+    }
+
+    /// (Re)build the evaluation plan if the graph's per-node shapes differ
+    /// from the cached ones. Old buffers are recycled through the pool.
+    fn ensure_plan(&mut self, graph: &KernelGraph) {
+        let reusable = self.values.len() == graph.nodes.len()
+            && self
+                .values
+                .iter()
+                .zip(&graph.nodes)
+                .all(|(v, n)| v.shape == n.shape);
+        if reusable {
+            return;
+        }
+        // The buffer-reuse design leans on each node's recorded shape
+        // being the op's true output shape (plan == node.shape ==
+        // inference result). Re-derive it once per plan build in debug
+        // builds — the check the allocating eval_op did per node eval.
+        // (Harness-path graphs are additionally shape-checked up front by
+        // `Candidate::validate`.)
+        #[cfg(debug_assertions)]
+        for (idx, node) in graph.nodes.iter().enumerate() {
+            let operand_shapes: Vec<Shape> = node
+                .deps
+                .iter()
+                .map(|d| graph.shape_of(*d).clone())
+                .collect();
+            match super::infer_shape(&node.kind, &operand_shapes) {
+                Ok(expected) => debug_assert_eq!(
+                    expected, node.shape,
+                    "node {idx} ({:?}) has wrong recorded shape",
+                    node.kind
+                ),
+                Err(e) => debug_assert!(false, "shape inference failed at node {idx}: {e}"),
+            }
+        }
+        for t in self.values.drain(..) {
+            self.pool.push(t.data);
+        }
+        self.strides.clear();
+        for node in &graph.nodes {
+            let n = node.shape.numel();
+            let data = self.take_buffer(n);
+            self.values.push(Tensor {
+                shape: node.shape.clone(),
+                data,
+            });
+            self.strides.push(row_major_strides(&node.shape));
+        }
+    }
+
+    /// Execute the graph, returning borrowed output tensors (no clones).
+    /// The borrows keep the context frozen until dropped.
+    pub fn execute<'a>(
+        &'a mut self,
+        graph: &KernelGraph,
+        inputs: &'a [Tensor],
+    ) -> Result<Vec<&'a Tensor>, InterpError> {
+        check_inputs(graph, inputs)?;
+        self.ensure_plan(graph);
+        for i in 0..graph.nodes.len() {
+            let node = &graph.nodes[i];
+            // Split so node i's buffer is writable while earlier outputs
+            // stay readable (values are topologically ordered).
+            let (done, rest) = self.values.split_at_mut(i);
+            let out = &mut rest[0];
+            let operands: Vec<&Tensor> = node
+                .deps
+                .iter()
+                .map(|d| match d {
+                    ValueRef::Input(j) => &inputs[*j],
+                    ValueRef::Node(j) => &done[*j],
+                })
+                .collect();
+            eval_op_into(&node.kind, &operands, &self.strides[i], out);
+            // Model reduced-precision storage: rounding through f16/bf16
+            // between kernels keeps the oracle honest about mixed
+            // precision.
+            if node.dtype != DType::F32 {
+                for v in &mut out.data {
+                    *v = round_to(*v, node.dtype);
+                }
+            }
+        }
+        Ok(graph
+            .outputs
+            .iter()
+            .map(|o| match o {
+                ValueRef::Input(i) => &inputs[*i],
+                ValueRef::Node(i) => &self.values[*i],
+            })
+            .collect())
+    }
+
+    /// Execute and clone the outputs out of the arena (for callers that
+    /// need owned tensors, e.g. the verification cache).
+    pub fn execute_owned(
+        &mut self,
+        graph: &KernelGraph,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>, InterpError> {
+        let outs = self.execute(graph, inputs)?;
+        Ok(outs.into_iter().cloned().collect())
+    }
+}
+
+/// Execute the graph on the given inputs (indexed as graph.inputs) with a
+/// fresh single-use arena. Hot paths that execute repeatedly should hold
+/// an [`ExecContext`] instead (§Perf above).
+pub fn execute(graph: &KernelGraph, inputs: &[Tensor]) -> Result<Vec<Tensor>, InterpError> {
+    let mut ctx = ExecContext::new();
+    ctx.execute_owned(graph, inputs)
 }
 
 /// Generate random inputs for a graph with a given seed.
@@ -139,56 +298,63 @@ pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
         .fold(0.0, f32::max)
 }
 
-fn eval_op(kind: &OpKind, operands: &[&Tensor], out_shape: &Shape, dtype: DType) -> Tensor {
-    let mut out = match kind {
-        OpKind::Matmul => matmul(operands[0], operands[1]),
-        OpKind::Conv2d { stride, pad } => conv2d(operands[0], operands[1], *stride, *pad),
-        OpKind::MaxPool2d { k, stride } => pool2d(operands[0], *k, *stride, PoolKind::Max),
-        OpKind::AvgPool2d { k, stride } => pool2d(operands[0], *k, *stride, PoolKind::Avg),
-        OpKind::BiasAdd { axis } => bias_add(operands[0], operands[1], *axis),
-        OpKind::Relu => map1(operands[0], |x| x.max(0.0)),
-        OpKind::Gelu => map1(operands[0], |x| {
+/// Evaluate one op into a preallocated output tensor whose shape is the
+/// node's inferred shape. Every kernel writes all of `out` (accumulating
+/// kernels zero it first), so buffer reuse is safe.
+fn eval_op_into(kind: &OpKind, operands: &[&Tensor], strides: &[usize], out: &mut Tensor) {
+    debug_assert_eq!(out.shape.numel(), out.data.len());
+    match kind {
+        OpKind::Matmul => matmul_into(operands[0], operands[1], &mut out.data),
+        OpKind::Conv2d { stride, pad } => {
+            conv2d_into(operands[0], operands[1], *stride, *pad, &mut out.data)
+        }
+        OpKind::MaxPool2d { k, stride } => {
+            pool2d_into(operands[0], *k, *stride, PoolKind::Max, &mut out.data)
+        }
+        OpKind::AvgPool2d { k, stride } => {
+            pool2d_into(operands[0], *k, *stride, PoolKind::Avg, &mut out.data)
+        }
+        OpKind::BiasAdd { axis } => {
+            bias_add_into(operands[0], operands[1], *axis, strides, &mut out.data)
+        }
+        OpKind::Relu => map1_into(operands[0], &mut out.data, |x| x.max(0.0)),
+        OpKind::Gelu => map1_into(operands[0], &mut out.data, |x| {
             // tanh approximation, matching jax.nn.gelu(approximate=True)
             0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
         }),
-        OpKind::Sigmoid => map1(operands[0], |x| 1.0 / (1.0 + (-x).exp())),
-        OpKind::Tanh => map1(operands[0], f32::tanh),
-        OpKind::Exp => map1(operands[0], f32::exp),
+        OpKind::Sigmoid => map1_into(operands[0], &mut out.data, |x| 1.0 / (1.0 + (-x).exp())),
+        OpKind::Tanh => map1_into(operands[0], &mut out.data, f32::tanh),
+        OpKind::Exp => map1_into(operands[0], &mut out.data, f32::exp),
         OpKind::Scale { c } => {
             let c = *c;
-            map1(operands[0], move |x| x * c)
+            map1_into(operands[0], &mut out.data, move |x| x * c)
         }
         OpKind::AddConst { c } => {
             let c = *c;
-            map1(operands[0], move |x| x + c)
+            map1_into(operands[0], &mut out.data, move |x| x + c)
         }
         OpKind::DivConst { c } => {
             let c = *c;
-            map1(operands[0], move |x| x / c)
+            map1_into(operands[0], &mut out.data, move |x| x / c)
         }
-        OpKind::Add => map2(operands[0], operands[1], |a, b| a + b),
-        OpKind::Sub => map2(operands[0], operands[1], |a, b| a - b),
-        OpKind::Mul => map2(operands[0], operands[1], |a, b| a * b),
-        OpKind::Softmax { axis } => softmax(operands[0], *axis),
-        OpKind::LogSumExp { axis } => reduce(operands[0], *axis, ReduceKind::LogSumExp),
-        OpKind::ReduceSum { axis } => reduce(operands[0], *axis, ReduceKind::Sum),
-        OpKind::ReduceMax { axis } => reduce(operands[0], *axis, ReduceKind::Max),
-        OpKind::ReduceMean { axis } => reduce(operands[0], *axis, ReduceKind::Mean),
-        OpKind::Transpose => transpose(operands[0]),
-        OpKind::Reshape { shape } => Tensor::new(shape.clone(), operands[0].data.clone()),
-        OpKind::LayerNorm => layer_norm(operands[0]),
-        OpKind::Concat { axis } => concat(operands[0], operands[1], *axis),
-        OpKind::Identity => operands[0].clone(),
-    };
-    debug_assert_eq!(&out.shape, out_shape, "eval produced wrong shape for {kind:?}");
-    // Model reduced-precision storage: rounding through f16/bf16 between
-    // kernels. This keeps the oracle honest about mixed-precision kernels.
-    if dtype != DType::F32 {
-        for v in &mut out.data {
-            *v = round_to(*v, dtype);
+        OpKind::Add => map2_into(operands[0], operands[1], &mut out.data, |a, b| a + b),
+        OpKind::Sub => map2_into(operands[0], operands[1], &mut out.data, |a, b| a - b),
+        OpKind::Mul => map2_into(operands[0], operands[1], &mut out.data, |a, b| a * b),
+        OpKind::Softmax { axis } => softmax_into(operands[0], *axis, &mut out.data),
+        OpKind::LogSumExp { axis } => {
+            reduce_into(operands[0], *axis, ReduceKind::LogSumExp, &mut out.data)
         }
+        OpKind::ReduceSum { axis } => reduce_into(operands[0], *axis, ReduceKind::Sum, &mut out.data),
+        OpKind::ReduceMax { axis } => reduce_into(operands[0], *axis, ReduceKind::Max, &mut out.data),
+        OpKind::ReduceMean { axis } => {
+            reduce_into(operands[0], *axis, ReduceKind::Mean, &mut out.data)
+        }
+        OpKind::Transpose => transpose_into(operands[0], &mut out.data),
+        OpKind::Reshape { .. } => out.data.copy_from_slice(&operands[0].data),
+        OpKind::LayerNorm => layer_norm_into(operands[0], &mut out.data),
+        OpKind::Concat { axis } => concat_into(operands[0], operands[1], *axis, &mut out.data),
+        OpKind::Identity => out.data.copy_from_slice(&operands[0].data),
     }
-    out
 }
 
 fn round_to(x: f32, dtype: DType) -> f32 {
@@ -205,23 +371,28 @@ fn round_to(x: f32, dtype: DType) -> f32 {
     }
 }
 
-fn map1(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor::new(a.shape.clone(), a.data.iter().map(|x| f(*x)).collect())
+fn map1_into(a: &Tensor, out: &mut [f32], f: impl Fn(f32) -> f32) {
+    debug_assert_eq!(a.data.len(), out.len());
+    for (o, x) in out.iter_mut().zip(&a.data) {
+        *o = f(*x);
+    }
 }
 
-fn map2(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+fn map2_into(a: &Tensor, b: &Tensor, out: &mut [f32], f: impl Fn(f32, f32) -> f32) {
     assert_eq!(a.shape, b.shape);
-    Tensor::new(
-        a.shape.clone(),
-        a.data.iter().zip(&b.data).map(|(x, y)| f(*x, *y)).collect(),
-    )
+    debug_assert_eq!(a.data.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(&a.data).zip(&b.data) {
+        *o = f(*x, *y);
+    }
 }
 
-fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+fn matmul_into(a: &Tensor, b: &Tensor, out: &mut [f32]) {
     let (m, k) = (a.shape.dim(0), a.shape.dim(1));
     let n = b.shape.dim(1);
     assert_eq!(k, b.shape.dim(0));
-    let mut out = vec![0.0f32; m * n];
+    debug_assert_eq!(out.len(), m * n);
+    // Accumulating kernel: zero the (possibly recycled) buffer first.
+    out.fill(0.0);
     for i in 0..m {
         for kk in 0..k {
             let av = a.data[i * k + kk];
@@ -235,10 +406,9 @@ fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    Tensor::new(Shape(vec![m, n]), out)
 }
 
-fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+fn conv2d_into(x: &Tensor, w: &Tensor, stride: usize, pad: usize, out: &mut [f32]) {
     let (n, c_in, h, wd) = (
         x.shape.dim(0),
         x.shape.dim(1),
@@ -253,7 +423,7 @@ fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
     );
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (wd + 2 * pad - kw) / stride + 1;
-    let mut out = vec![0.0f32; n * c_out * oh * ow];
+    debug_assert_eq!(out.len(), n * c_out * oh * ow);
     // §Perf: slice-based inner loops (kx contiguous in both x and w)
     // avoid per-element index arithmetic and bounds checks; interior
     // output pixels (no padding clipping) take a branch-free fast path.
@@ -296,7 +466,6 @@ fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
             }
         }
     }
-    Tensor::new(Shape(vec![n, c_out, oh, ow]), out)
 }
 
 enum PoolKind {
@@ -304,7 +473,7 @@ enum PoolKind {
     Avg,
 }
 
-fn pool2d(x: &Tensor, k: usize, stride: usize, kind: PoolKind) -> Tensor {
+fn pool2d_into(x: &Tensor, k: usize, stride: usize, kind: PoolKind, out: &mut [f32]) {
     let (n, c, h, w) = (
         x.shape.dim(0),
         x.shape.dim(1),
@@ -313,7 +482,7 @@ fn pool2d(x: &Tensor, k: usize, stride: usize, kind: PoolKind) -> Tensor {
     );
     let oh = (h - k) / stride + 1;
     let ow = (w - k) / stride + 1;
-    let mut out = vec![0.0f32; n * c * oh * ow];
+    debug_assert_eq!(out.len(), n * c * oh * ow);
     for b in 0..n {
         for ch in 0..c {
             for oy in 0..oh {
@@ -340,20 +509,18 @@ fn pool2d(x: &Tensor, k: usize, stride: usize, kind: PoolKind) -> Tensor {
             }
         }
     }
-    Tensor::new(Shape(vec![n, c, oh, ow]), out)
 }
 
-fn bias_add(x: &Tensor, bias: &Tensor, axis: usize) -> Tensor {
-    let strides = x.strides();
+fn bias_add_into(x: &Tensor, bias: &Tensor, axis: usize, strides: &[usize], out: &mut [f32]) {
+    // `strides` is the plan's row-major strides of x's shape (== output
+    // shape for bias_add).
+    debug_assert_eq!(strides.len(), x.shape.rank());
     let dim = x.shape.dim(axis);
     let stride = strides[axis];
-    let data = x
-        .data
-        .iter()
-        .enumerate()
-        .map(|(i, v)| v + bias.data[(i / stride) % dim])
-        .collect();
-    Tensor::new(x.shape.clone(), data)
+    debug_assert_eq!(out.len(), x.data.len());
+    for (i, (o, v)) in out.iter_mut().zip(&x.data).enumerate() {
+        *o = v + bias.data[(i / stride) % dim];
+    }
 }
 
 enum ReduceKind {
@@ -364,14 +531,12 @@ enum ReduceKind {
 }
 
 /// Keepdim reduction along `axis`.
-fn reduce(x: &Tensor, axis: usize, kind: ReduceKind) -> Tensor {
+fn reduce_into(x: &Tensor, axis: usize, kind: ReduceKind, out: &mut [f32]) {
     let dims = &x.shape.0;
     let axis_len = dims[axis];
     let inner: usize = dims[axis + 1..].iter().product();
     let outer: usize = dims[..axis].iter().product();
-    let mut out_dims = dims.clone();
-    out_dims[axis] = 1;
-    let mut out = vec![0.0f32; outer * inner];
+    debug_assert_eq!(out.len(), outer * inner);
     for o in 0..outer {
         for i in 0..inner {
             let at = |a: usize| x.data[o * axis_len * inner + a * inner + i];
@@ -388,15 +553,14 @@ fn reduce(x: &Tensor, axis: usize, kind: ReduceKind) -> Tensor {
             out[o * inner + i] = v;
         }
     }
-    Tensor::new(Shape(out_dims), out)
 }
 
-fn softmax(x: &Tensor, axis: usize) -> Tensor {
+fn softmax_into(x: &Tensor, axis: usize, out: &mut [f32]) {
     let dims = &x.shape.0;
     let axis_len = dims[axis];
     let inner: usize = dims[axis + 1..].iter().product();
     let outer: usize = dims[..axis].iter().product();
-    let mut out = vec![0.0f32; x.data.len()];
+    debug_assert_eq!(out.len(), x.data.len());
     for o in 0..outer {
         for i in 0..inner {
             let idx = |a: usize| o * axis_len * inner + a * inner + i;
@@ -414,42 +578,40 @@ fn softmax(x: &Tensor, axis: usize) -> Tensor {
             }
         }
     }
-    Tensor::new(x.shape.clone(), out)
 }
 
-fn transpose(x: &Tensor) -> Tensor {
+fn transpose_into(x: &Tensor, out: &mut [f32]) {
     let (m, n) = (x.shape.dim(0), x.shape.dim(1));
-    let mut out = vec![0.0f32; m * n];
+    debug_assert_eq!(out.len(), m * n);
     for i in 0..m {
         for j in 0..n {
             out[j * m + i] = x.data[i * n + j];
         }
     }
-    Tensor::new(Shape(vec![n, m]), out)
 }
 
-fn concat(a: &Tensor, b: &Tensor, axis: usize) -> Tensor {
+fn concat_into(a: &Tensor, b: &Tensor, axis: usize, out: &mut [f32]) {
     let a_dims = &a.shape.0;
     let b_dims = &b.shape.0;
     let outer: usize = a_dims[..axis].iter().product();
     let a_block: usize = a_dims[axis..].iter().product();
     let b_block: usize = b_dims[axis..].iter().product();
-    let mut out = Vec::with_capacity(a.data.len() + b.data.len());
+    debug_assert_eq!(out.len(), a.data.len() + b.data.len());
+    let step = a_block + b_block;
     for o in 0..outer {
-        out.extend_from_slice(&a.data[o * a_block..(o + 1) * a_block]);
-        out.extend_from_slice(&b.data[o * b_block..(o + 1) * b_block]);
+        out[o * step..o * step + a_block]
+            .copy_from_slice(&a.data[o * a_block..(o + 1) * a_block]);
+        out[o * step + a_block..(o + 1) * step]
+            .copy_from_slice(&b.data[o * b_block..(o + 1) * b_block]);
     }
-    let mut dims = a_dims.clone();
-    dims[axis] += b_dims[axis];
-    Tensor::new(Shape(dims), out)
 }
 
 /// LayerNorm over the last axis, eps 1e-5, no affine params.
-fn layer_norm(x: &Tensor) -> Tensor {
+fn layer_norm_into(x: &Tensor, out: &mut [f32]) {
     let dims = &x.shape.0;
     let last = *dims.last().unwrap();
     let rows = x.data.len() / last;
-    let mut out = vec![0.0f32; x.data.len()];
+    debug_assert_eq!(out.len(), x.data.len());
     for r in 0..rows {
         let row = &x.data[r * last..(r + 1) * last];
         let mean: f32 = row.iter().sum::<f32>() / last as f32;
@@ -459,7 +621,70 @@ fn layer_norm(x: &Tensor) -> Tensor {
             out[r * last + i] = (v - mean) * inv;
         }
     }
-    Tensor::new(x.shape.clone(), out)
+}
+
+// ---- allocating wrappers (unit-test convenience only) ----
+
+#[cfg(test)]
+fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(Shape(vec![a.shape.dim(0), b.shape.dim(1)]));
+    matmul_into(a, b, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let oh = (x.shape.dim(2) + 2 * pad - w.shape.dim(2)) / stride + 1;
+    let ow = (x.shape.dim(3) + 2 * pad - w.shape.dim(3)) / stride + 1;
+    let mut out = Tensor::zeros(Shape(vec![x.shape.dim(0), w.shape.dim(0), oh, ow]));
+    conv2d_into(x, w, stride, pad, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn pool2d(x: &Tensor, k: usize, stride: usize, kind: PoolKind) -> Tensor {
+    let oh = (x.shape.dim(2) - k) / stride + 1;
+    let ow = (x.shape.dim(3) - k) / stride + 1;
+    let mut out = Tensor::zeros(Shape(vec![x.shape.dim(0), x.shape.dim(1), oh, ow]));
+    pool2d_into(x, k, stride, kind, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn bias_add(x: &Tensor, bias: &Tensor, axis: usize) -> Tensor {
+    let mut out = Tensor::zeros(x.shape.clone());
+    bias_add_into(x, bias, axis, &row_major_strides(&x.shape), &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn reduce(x: &Tensor, axis: usize, kind: ReduceKind) -> Tensor {
+    let mut dims = x.shape.0.clone();
+    dims[axis] = 1;
+    let mut out = Tensor::zeros(Shape(dims));
+    reduce_into(x, axis, kind, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn softmax(x: &Tensor, axis: usize) -> Tensor {
+    let mut out = Tensor::zeros(x.shape.clone());
+    softmax_into(x, axis, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn transpose(x: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(Shape(vec![x.shape.dim(1), x.shape.dim(0)]));
+    transpose_into(x, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+fn layer_norm(x: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(x.shape.clone());
+    layer_norm_into(x, &mut out.data);
+    out
 }
 
 #[cfg(test)]
@@ -633,5 +858,55 @@ mod tests {
         }
         let r = round_to(70000.0, DType::F16);
         assert!(r <= 65504.0);
+    }
+
+    #[test]
+    fn pooled_context_reuses_buffers_and_matches_fresh() {
+        let mut b = GraphBuilder::new("mlp");
+        let x = b.input("x", &[8, 16]);
+        let w1 = b.input("w1", &[16, 16]);
+        let w2 = b.input("w2", &[16, 4]);
+        let h = b.op(OpKind::Matmul, &[x, w1]);
+        let a = b.op(OpKind::Gelu, &[h]);
+        let o = b.op(OpKind::Matmul, &[a, w2]);
+        let s = b.op(OpKind::Softmax { axis: 1 }, &[o]);
+        b.output(s);
+        let g = b.finish();
+        let mut ctx = ExecContext::new();
+        for seed in 0..4u64 {
+            let inputs = random_inputs(&g, seed);
+            let fresh = execute(&g, &inputs).unwrap();
+            let pooled = ctx.execute(&g, &inputs).unwrap();
+            assert_eq!(pooled.len(), fresh.len());
+            for (p, f) in pooled.iter().zip(&fresh) {
+                assert_eq!(p.data, f.data, "seed {seed}: pooled != fresh");
+            }
+        }
+    }
+
+    #[test]
+    fn context_rebuilds_plan_on_shape_change_and_recycles() {
+        let make = |n: usize| {
+            let mut b = GraphBuilder::new("r");
+            let x = b.input("x", &[n, n]);
+            let y = b.op(OpKind::Relu, &[x]);
+            b.output(y);
+            b.finish()
+        };
+        let g8 = make(8);
+        let g4 = make(4);
+        let mut ctx = ExecContext::new();
+        let i8 = random_inputs(&g8, 1);
+        let i4 = random_inputs(&g4, 1);
+        ctx.execute_owned(&g8, &i8).unwrap();
+        assert_eq!(ctx.pooled_buffers(), 0);
+        // Shrinking reuses the 64-element buffer from the pool.
+        let small = ctx.execute_owned(&g4, &i4).unwrap();
+        assert_eq!(small[0].data.len(), 16);
+        let fresh = execute(&g4, &i4).unwrap();
+        assert_eq!(small[0].data, fresh[0].data);
+        // Growing back still agrees with fresh execution.
+        let big = ctx.execute_owned(&g8, &i8).unwrap();
+        assert_eq!(big[0].data, execute(&g8, &i8).unwrap()[0].data);
     }
 }

@@ -27,7 +27,7 @@ use crate::kir::KernelGraph;
 /// A candidate program state: the unit the agents transform, verify,
 /// profile and score. `full` drives the performance model; `small` drives
 /// the numeric oracle; `schedule` partitions both (identical node sets).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     pub full: KernelGraph,
     pub small: KernelGraph,

@@ -16,8 +16,7 @@
 //!   gate *numerics only*, with TPU performance estimated from VMEM
 //!   footprint + MXU-shape alignment in DESIGN.md §2/§8.
 
-use super::Runtime;
-use anyhow::Result;
+use super::{Result, Runtime, RuntimeError};
 
 /// Anchor class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,15 +89,20 @@ pub fn calibrate(rt: &Runtime, warmup: usize, iters: usize) -> Result<Vec<Anchor
         let b = candidate.run_f32(&inputs)?;
         let mut max_abs_diff = 0.0f32;
         for (x, y) in a.iter().zip(&b) {
-            anyhow::ensure!(x.len() == y.len(), "{name}: output arity mismatch");
+            if x.len() != y.len() {
+                return Err(RuntimeError::Backend(format!(
+                    "{name}: output arity mismatch"
+                )));
+            }
             for (p, q) in x.iter().zip(y) {
                 max_abs_diff = max_abs_diff.max((p - q).abs());
             }
         }
-        anyhow::ensure!(
-            max_abs_diff < 5e-2,
-            "{name}: baseline and candidate disagree (max|Δ|={max_abs_diff})"
-        );
+        if max_abs_diff >= 5e-2 {
+            return Err(RuntimeError::Backend(format!(
+                "{name}: baseline and candidate disagree (max|Δ|={max_abs_diff})"
+            )));
+        }
         let baseline_s = baseline.bench(&inputs, warmup, iters)?;
         let candidate_s = candidate.bench(&inputs, warmup, iters)?;
         out.push(AnchorResult {
@@ -159,7 +163,17 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let rt = Runtime::new(default_artifact_dir()).unwrap();
+        let rt = match Runtime::new(default_artifact_dir()) {
+            Ok(rt) => rt,
+            // Stub build: nothing to calibrate. A real (kb_pjrt) backend
+            // failing to initialize with artifacts present is a bug and
+            // must fail loudly, not skip.
+            Err(e @ RuntimeError::Unavailable(_)) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+            Err(e) => panic!("PJRT init failed with artifacts present: {e}"),
+        };
         let results = calibrate(&rt, 1, 3).unwrap();
         assert_eq!(results.len(), ANCHORS.len());
         let text = render(&results);

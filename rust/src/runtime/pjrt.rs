@@ -1,0 +1,239 @@
+//! Real PJRT runtime backend (compiled under `--cfg kb_pjrt` only; needs
+//! the `xla` bindings, which are not in the offline registry).
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are HLO *text* (see aot.py for
+//! the 64-bit-proto-id rationale).
+
+use super::{Result, RuntimeError};
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn berr(e: impl std::fmt::Display) -> RuntimeError {
+    RuntimeError::Backend(e.to_string())
+}
+
+/// A compiled executable plus its input signature.
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes (row-major f32) from the artifact manifest.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Construct against an artifact directory (built by `make artifacts`).
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::Backend(format!("creating PJRT CPU client: {e}")))?,
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Read input shapes for `name` from manifest.json.
+    fn manifest_shapes(&self, name: &str) -> Result<Vec<Vec<usize>>> {
+        let text = std::fs::read_to_string(self.artifact_dir.join("manifest.json"))
+            .map_err(|e| {
+                RuntimeError::Backend(format!(
+                    "reading artifacts/manifest.json (run `make artifacts`): {e}"
+                ))
+            })?;
+        let j = crate::util::json::Json::parse(&text)
+            .map_err(|e| RuntimeError::Backend(format!("parsing manifest.json: {e}")))?;
+        let entry = j
+            .get(name)
+            .ok_or_else(|| RuntimeError::Backend(format!("artifact '{name}' not in manifest")))?;
+        let inputs = entry
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| RuntimeError::Backend("manifest entry missing inputs".to_string()))?;
+        Ok(inputs
+            .iter()
+            .map(|shape| {
+                shape
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, name: &str) -> Result<LoadedModel> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| RuntimeError::Backend("non-utf8 artifact path".to_string()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| RuntimeError::Backend(format!("parsing HLO text {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError::Backend(format!("compiling {name}: {e}")))?;
+        Ok(LoadedModel {
+            name: name.to_string(),
+            exe,
+            input_shapes: self.manifest_shapes(name)?,
+        })
+    }
+
+    /// List the artifact names present on disk.
+    pub fn available(&self) -> Vec<String> {
+        super::list_artifacts(&self.artifact_dir)
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs (one Vec per input, row-major). Returns
+    /// the flattened f32 outputs (the artifacts return 1-tuples).
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(RuntimeError::Backend(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.input_shapes) {
+            let numel: usize = shape.iter().product();
+            if numel != data.len() {
+                return Err(RuntimeError::Backend(format!(
+                    "{}: input length {} != shape numel {numel}",
+                    self.name,
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| RuntimeError::Backend(format!("reshaping input literal: {e}")))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(berr)?[0][0]
+            .to_literal_sync()
+            .map_err(|e| RuntimeError::Backend(format!("fetching result literal: {e}")))?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| RuntimeError::Backend(format!("untupling result: {e}")))?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| RuntimeError::Backend(format!("reading f32 output: {e}")))
+            })
+            .collect()
+    }
+
+    /// Time `iters` executions (after `warmup` unmeasured runs); returns
+    /// seconds per iteration (min over repeats — standard practice for
+    /// wallclock microbenchmarks).
+    pub fn bench(&self, inputs: &[Vec<f32>], warmup: usize, iters: usize) -> Result<f64> {
+        for _ in 0..warmup {
+            self.run_f32(inputs)?;
+        }
+        let mut best = f64::INFINITY;
+        let repeats = 3;
+        for _ in 0..repeats {
+            let start = Instant::now();
+            for _ in 0..iters {
+                self.run_f32(inputs)?;
+            }
+            best = best.min(start.elapsed().as_secs_f64() / iters as f64);
+        }
+        Ok(best)
+    }
+
+    /// Deterministic pseudo-random inputs matching the signature.
+    pub fn random_inputs(&self, seed: u64, scale: f32) -> Vec<Vec<f32>> {
+        super::random_inputs_for(&self.name, &self.input_shapes, seed, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    fn have_artifacts() -> bool {
+        default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn runtime_loads_and_runs_q63_pair_with_matching_numerics() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::new(default_artifact_dir()).unwrap();
+        let platform = rt.platform().to_lowercase();
+        assert!(platform == "cpu" || platform == "host", "{platform}");
+        let naive = rt.load("q63_naive").unwrap();
+        let opt = rt.load("q63_optimized").unwrap();
+        let inputs = naive.random_inputs(42, 0.1);
+        let a = naive.run_f32(&inputs).unwrap();
+        let b = opt.run_f32(&inputs).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].len(), b[0].len());
+        let max_diff = a[0]
+            .iter()
+            .zip(&b[0])
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "naive vs optimized diverge: {max_diff}");
+    }
+
+    #[test]
+    fn runtime_rejects_bad_inputs() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(default_artifact_dir()).unwrap();
+        let m = rt.load("q63_naive").unwrap();
+        assert!(m.run_f32(&[]).is_err());
+        let mut inputs = m.random_inputs(1, 0.1);
+        inputs[0].pop();
+        assert!(m.run_f32(&inputs).is_err());
+    }
+
+    #[test]
+    fn available_lists_artifacts() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(default_artifact_dir()).unwrap();
+        let names = rt.available();
+        assert!(names.iter().any(|n| n == "q18_naive"));
+        assert!(names.iter().any(|n| n == "lenet5_optimized"));
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new(default_artifact_dir()).unwrap();
+        assert!(rt.load("nonexistent_model").is_err());
+    }
+}

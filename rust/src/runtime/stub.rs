@@ -1,0 +1,105 @@
+//! Stub runtime backend: compiled when `--cfg kb_pjrt` is absent.
+//!
+//! Presents the same API as the PJRT backend so every consumer
+//! typechecks; constructors fail with [`RuntimeError::Unavailable`] and
+//! callers (CLI `calibrate`, the hotpath bench's anchor section) report
+//! the condition instead of panicking.
+
+use super::{Result, RuntimeError};
+use std::path::PathBuf;
+
+/// A compiled executable plus its input signature (stub: never built).
+pub struct LoadedModel {
+    pub name: String,
+    /// Input shapes (row-major f32) from the artifact manifest.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// The PJRT runtime facade (stub: construction always fails).
+pub struct Runtime {
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Construct against an artifact directory. Always fails in the stub
+    /// backend — the binary was built without the xla bindings.
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let _ = Self {
+            artifact_dir: artifact_dir.into(),
+        };
+        Err(RuntimeError::Unavailable(
+            "built without the xla bindings".to_string(),
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Load + compile one artifact (stub: unreachable in practice, since
+    /// `new` never succeeds; kept for API parity).
+    pub fn load(&self, name: &str) -> Result<LoadedModel> {
+        Err(RuntimeError::Unavailable(format!(
+            "cannot load '{name}' from {}: built without the xla bindings",
+            self.artifact_dir.display()
+        )))
+    }
+
+    /// List the artifact names present on disk.
+    pub fn available(&self) -> Vec<String> {
+        super::list_artifacts(&self.artifact_dir)
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs (stub: always unavailable).
+    pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Err(RuntimeError::Unavailable(format!(
+            "{}: built without the xla bindings",
+            self.name
+        )))
+    }
+
+    /// Time executions (stub: always unavailable).
+    pub fn bench(&self, _inputs: &[Vec<f32>], _warmup: usize, _iters: usize) -> Result<f64> {
+        Err(RuntimeError::Unavailable(format!(
+            "{}: built without the xla bindings",
+            self.name
+        )))
+    }
+
+    /// Deterministic pseudo-random inputs matching the signature. Works
+    /// in the stub too (pure CPU-side generation).
+    pub fn random_inputs(&self, seed: u64, scale: f32) -> Vec<Vec<f32>> {
+        super::random_inputs_for(&self.name, &self.input_shapes, seed, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::new("artifacts").unwrap_err();
+        assert!(matches!(err, RuntimeError::Unavailable(_)));
+        assert!(err.to_string().contains("kb_pjrt"));
+    }
+
+    #[test]
+    fn stub_model_generates_deterministic_inputs() {
+        let m = LoadedModel {
+            name: "fake".to_string(),
+            input_shapes: vec![vec![2, 3], vec![4]],
+        };
+        let a = m.random_inputs(7, 0.1);
+        let b = m.random_inputs(7, 0.1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].len(), 6);
+        assert_eq!(a[1].len(), 4);
+        assert!(a[0].iter().all(|v| v.abs() <= 0.1));
+        assert!(m.run_f32(&a).is_err());
+        assert!(m.bench(&a, 1, 1).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Hot-path machinery properties (§Perf): the arena-backed interpreter,
+//! the memoized verification oracle, the indexed KB, and parallel top-k
+//! exploration must all be *observationally invisible* — bitwise-equal
+//! results, only faster.
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::{self, HarnessConfig, VerifyCache};
+use kernelblaster::icrl::{self, IcrlConfig};
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::kir::interp;
+use kernelblaster::opts::{apply, Candidate, Technique};
+use kernelblaster::tasks::Suite;
+use kernelblaster::util::proptest::{check, PropConfig};
+use kernelblaster::util::rng::Rng;
+
+#[test]
+fn pooled_execution_is_bitwise_equal_to_fresh_for_every_task() {
+    // One long-lived ExecContext across the whole suite: plans rebuild
+    // per graph, buffers recycle across tasks, and every output must be
+    // bit-identical to a fresh single-use execution.
+    let suite = Suite::full();
+    let mut ctx = interp::ExecContext::new();
+    for task in &suite.tasks {
+        for seed in [7u64, 1234] {
+            let inputs = interp::random_inputs(&task.small, seed);
+            let fresh = interp::execute(&task.small, &inputs)
+                .unwrap_or_else(|e| panic!("{}: fresh exec failed: {e}", task.id));
+            let pooled = ctx
+                .execute(&task.small, &inputs)
+                .unwrap_or_else(|e| panic!("{}: pooled exec failed: {e}", task.id));
+            assert_eq!(pooled.len(), fresh.len(), "{}", task.id);
+            for (p, f) in pooled.iter().zip(&fresh) {
+                assert_eq!(p.shape, f.shape, "{}", task.id);
+                assert_eq!(
+                    p.data, f.data,
+                    "{}: pooled output diverges from fresh (seed {seed})",
+                    task.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pooled_execution_matches_fresh_under_random_transforms() {
+    // Transformed candidates (the graphs the harness actually sees on
+    // the hot path) must also execute identically through a reused arena.
+    let suite = Suite::full();
+    let ids = [
+        "L1/01_matmul_square",
+        "L2/01_gemm_bias_relu",
+        "L2/18_linear_sum_logsumexp2",
+        "L3/01_lenet5",
+    ];
+    check(
+        "pooled-exec-bitwise",
+        PropConfig { cases: 20, seed: 0xA3EA },
+        |rng| {
+            let id = ids[rng.index(ids.len())];
+            let task = suite.by_id(id).unwrap();
+            let mut cand = Candidate::naive(task);
+            let mut ctx = interp::ExecContext::new();
+            for _ in 0..4 {
+                let tech = Technique::all()[rng.index(Technique::all().len())];
+                if let Some(gi) = tech.applicable_anywhere(&cand) {
+                    cand = apply::apply(tech, &cand, gi).map_err(|e| e)?;
+                }
+                let inputs = interp::random_inputs(&cand.small, rng.next_u64());
+                let fresh = interp::execute(&cand.small, &inputs).map_err(|e| e.to_string())?;
+                let pooled = ctx
+                    .execute(&cand.small, &inputs)
+                    .map_err(|e| e.to_string())?;
+                for (p, f) in pooled.iter().zip(&fresh) {
+                    if p.data != f.data {
+                        return Err(format!("{id}: pooled != fresh after {:?}", cand.applied));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cached_and_uncached_harness_agree_for_naive_and_transformed() {
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let cfg = HarnessConfig {
+        noise_sigma: 0.0,
+        ..Default::default()
+    };
+    let mut cache = VerifyCache::new();
+    for id in ["L1/12_softmax", "L2/01_gemm_bias_relu", "L2/09_mlp_block"] {
+        let task = suite.by_id(id).unwrap();
+        cache.warm(task, &cfg).unwrap();
+        let naive = Candidate::naive(task);
+        let tiled = apply::apply(Technique::MemoryCoalescing, &naive, 0).unwrap();
+        for cand in [&naive, &tiled] {
+            let a = harness::run(task, cand, &arch, &cfg, &mut Rng::new(5));
+            let b = harness::run_cached(task, cand, &arch, &cfg, Some(&cache), &mut Rng::new(5));
+            match (&a, &b) {
+                (harness::Outcome::Ok(ra), harness::Outcome::Ok(rb)) => {
+                    assert_eq!(ra.total_cycles, rb.total_cycles, "{id}");
+                    assert_eq!(ra.total_time_s, rb.total_time_s, "{id}");
+                }
+                _ => panic!(
+                    "{id}: outcomes diverged: {} vs {}",
+                    a.feedback(),
+                    b.feedback()
+                ),
+            }
+        }
+    }
+    assert_eq!(cache.len(), 3 * cfg.verify_seeds);
+}
+
+#[test]
+fn parallel_exploration_reproduces_sequential_steplog() {
+    // The headline determinism property: optimize_task with a fixed seed
+    // produces an identical TaskRun (same StepLog sequence, same
+    // best_time_s, same tokens) whether top-k picks are explored on
+    // worker threads or inline — and leaves identical KBs behind.
+    let suite = Suite::full();
+    let arch = GpuArch::a100();
+    for (id, top_k, noise) in [
+        ("L2/01_gemm_bias_relu", 3, 0.02),
+        ("L1/12_softmax", 2, 0.0),
+        ("L2/18_linear_sum_logsumexp2", 4, 0.02),
+    ] {
+        let task = suite.by_id(id).unwrap();
+        let base = IcrlConfig {
+            trajectories: 2,
+            rollout_steps: 4,
+            top_k,
+            harness: HarnessConfig {
+                noise_sigma: noise,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let seq_cfg = IcrlConfig {
+            parallel_explore: false,
+            ..base.clone()
+        };
+        let par_cfg = IcrlConfig {
+            parallel_explore: true,
+            ..base
+        };
+        let mut kb_seq = KnowledgeBase::empty();
+        let r_seq = icrl::optimize_task(task, &arch, &mut kb_seq, &seq_cfg, 11);
+        let mut kb_par = KnowledgeBase::empty();
+        let r_par = icrl::optimize_task(task, &arch, &mut kb_par, &par_cfg, 11);
+        assert_eq!(r_seq.steps, r_par.steps, "{id}: StepLog sequences differ");
+        assert_eq!(r_seq.best_time_s, r_par.best_time_s, "{id}");
+        assert_eq!(r_seq.tokens, r_par.tokens, "{id}");
+        assert_eq!(r_seq, r_par, "{id}: TaskRun differs");
+        assert_eq!(kb_seq, kb_par, "{id}: KBs differ");
+    }
+}
+
+#[test]
+fn driver_produced_kb_serializes_byte_stably() {
+    // End-to-end: a KB grown by real optimization runs must round-trip
+    // byte-identically through the indexed persistence layer.
+    let suite = Suite::full();
+    let arch = GpuArch::l40s();
+    let cfg = IcrlConfig {
+        trajectories: 2,
+        rollout_steps: 3,
+        ..Default::default()
+    };
+    let mut kb = KnowledgeBase::empty();
+    for id in ["L2/01_gemm_bias_relu", "L1/12_softmax"] {
+        let task = suite.by_id(id).unwrap();
+        let _ = icrl::optimize_task(task, &arch, &mut kb, &cfg, 0);
+    }
+    assert!(kb.total_attempts() > 0);
+    let first = persist::to_json(&kb).to_string_pretty();
+    let loaded = persist::from_json(
+        &kernelblaster::util::json::Json::parse(&first).unwrap(),
+    )
+    .unwrap();
+    let second = persist::to_json(&loaded).to_string_pretty();
+    assert_eq!(first, second, "KB serialization not byte-stable");
+    // The rebuilt indexes are consistent with insertion order.
+    for (i, s) in kb.states.iter().enumerate() {
+        assert_eq!(loaded.find_state(s.sig), Some(i));
+    }
+}
