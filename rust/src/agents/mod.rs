@@ -10,6 +10,15 @@
 //! against), and fully token-metered. The ICRL learning dynamics the
 //! evaluation measures are independent of who fills the roles; the trait
 //! boundary here is where a real LLM backend would plug in.
+//!
+//! Position in the MAIC-RL loop (profile → **state-extract** → KB-match →
+//! **lower** → verify): [`state_extractor`] reads [`crate::gpu`] profiles
+//! into the [`crate::kb::StateSig`] the KB matches on; [`lowering`]
+//! applies the selected [`crate::opts`] technique (retrying on
+//! [`crate::harness`] feedback); and [`textgrad`] writes measured rewards
+//! back into the KB — citing cross-arch transferred priors
+//! ([`crate::kb::lifecycle`]) distinctly from native evidence. The
+//! driver ([`crate::icrl`]) orchestrates all of them.
 
 pub mod lowering;
 pub mod state_extractor;

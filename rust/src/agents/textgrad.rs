@@ -170,16 +170,36 @@ pub fn perf_gap_analysis(discrepancies: &[Discrepancy], meter: &mut TokenMeter) 
 
 /// ParameterUpdate: integrate the insights into the Knowledge Base
 /// (θ_{k+1} ← ParameterUpdate(θ_k, p_k)).
+///
+/// Transferred priors are cited distinctly from native evidence: when the
+/// entry being updated is an untested prior carried over from another
+/// architecture ([`crate::kb::OptEntry::origin`], set by
+/// [`crate::kb::lifecycle::transfer`]), the integrated note names its
+/// source arch — even when the gap analysis itself had nothing to say —
+/// so the KB records which cross-arch hints were confirmed or revised by
+/// this generation's measurements.
 pub fn parameter_update(kb: &mut KnowledgeBase, insights: &[GapInsight], meter: &mut TokenMeter) {
     for ins in insights {
         let state_idx = match kb.find_state(ins.state) {
             Some(i) => i,
             None => kb.match_state(ins.state).index(),
         };
-        let note = if ins.note.is_empty() {
-            None
-        } else {
-            Some(ins.note.clone())
+        let prior_from = kb.states[state_idx].opt_index(ins.technique).and_then(|i| {
+            let o = &kb.states[state_idx].opts[i];
+            if o.attempts == 0 {
+                o.origin.clone()
+            } else {
+                None
+            }
+        });
+        let note = match (&prior_from, ins.note.is_empty()) {
+            (Some(src), true) => Some(format!(
+                "prior from {src}: measured {:.2}x on this arch",
+                ins.adjusted_gain
+            )),
+            (Some(src), false) => Some(format!("prior from {src}: {}", ins.note)),
+            (None, true) => None,
+            (None, false) => Some(ins.note.clone()),
         };
         meter.add(60, 30);
         kb.update_score(state_idx, ins.technique, ins.adjusted_gain, note);
@@ -288,6 +308,46 @@ mod tests {
         assert!(after < before, "KB must move toward measurement");
         assert_eq!(kb.updates, 1);
         assert!(!kb.states[0].opts[0].notes.is_empty());
+    }
+
+    #[test]
+    fn parameter_update_cites_transferred_priors() {
+        let mut kb = KnowledgeBase::empty();
+        let m = kb.match_state(sig());
+        kb.ensure_candidates(m.index(), &[Technique::SharedMemoryTiling]);
+        kb.states[0].opts[0].origin = Some("A6000".into());
+        let mut meter = TokenMeter::new();
+        // First native measurement against the prior: cited by source,
+        // even though the gap analysis produced no note of its own.
+        parameter_update(
+            &mut kb,
+            &[GapInsight {
+                state: sig(),
+                technique: Technique::SharedMemoryTiling,
+                adjusted_gain: 2.1,
+                note: String::new(),
+            }],
+            &mut meter,
+        );
+        let o = &kb.states[0].opts[0];
+        assert_eq!(o.attempts, 1);
+        assert!(
+            o.notes.last().unwrap().starts_with("prior from A6000:"),
+            "{:?}",
+            o.notes
+        );
+        // Once native evidence exists, notes revert to plain form.
+        parameter_update(
+            &mut kb,
+            &[GapInsight {
+                state: sig(),
+                technique: Technique::SharedMemoryTiling,
+                adjusted_gain: 2.0,
+                note: "held".into(),
+            }],
+            &mut meter,
+        );
+        assert_eq!(kb.states[0].opts[0].notes.last().unwrap(), "held");
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //! baseline, and the §6.4 minimal agent.
 //!
 //! Every baseline is evaluated "under equivalent execution and profiling
-//! conditions": the same task graphs, the same GPU performance model, the
-//! same harness. They differ only in optimization policy — exactly the
-//! axis the paper varies.
+//! conditions": the same task graphs ([`crate::tasks`]), the same GPU
+//! performance model ([`crate::gpu`]), the same harness
+//! ([`crate::harness`]). They differ only in optimization policy —
+//! exactly the axis the paper varies. [`crate::experiments`] and
+//! [`crate::metrics`] consume the resulting times alongside
+//! [`crate::icrl`]'s runs.
 
 pub mod agentic;
 

@@ -3,17 +3,29 @@
 //!
 //! - `experiment <name|all> [--quick] [--seed N] [--out DIR]`
 //! - `optimize --task <id> [--gpu NAME] [--trajectories N] [--steps N]
-//!            [--vendor] [--kb PATH] [--save-kb PATH] [--seed N]`
+//!            [--vendor] [--kb PATH] [--warm-start P1,P2,…]
+//!            [--save-kb PATH] [--seed N]`
 //! - `suite --level <L1|L2|L3> [--gpu NAME] [--quick] [--seed N]`
 //! - `calibrate [--iters N]` — PJRT anchor measurement
-//! - `kb <init|inspect> --path PATH`
+//! - `kb <init|inspect|stats> --path PATH` — single-KB inspection
+//! - `kb merge IN1 IN2 … --out PATH` — evidence-weighted KB merge
+//! - `kb compact --path IN [--out PATH] [--min-attempts N]
+//!              [--gain-floor X] [--max-notes N]`
+//! - `kb transfer --path IN --to ARCH [--from ARCH] [--decay X]
+//!               [--rekey-threshold X] [--out PATH]`
 //! - `list` — tasks, experiments, GPUs
 //! - `version`
+//!
+//! The `kb` lifecycle subcommands are thin shells over
+//! [`crate::kb::lifecycle`]; run launching goes through
+//! [`crate::icrl`] with configs from [`crate::config`]. This module sits
+//! *outside* the optimization loop — it only assembles inputs for it.
 
 use crate::baselines;
 use crate::experiments::{self, Ctx};
 use crate::gpu::GpuArch;
 use crate::icrl::{self, IcrlConfig};
+use crate::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
 use crate::kb::{persist, KnowledgeBase};
 use crate::runtime;
 use crate::tasks::{Level, Suite};
@@ -58,6 +70,12 @@ impl Args {
         self.positional.get(i).map(String::as_str)
     }
 
+    /// All positionals from index `i` on (e.g. the input files of
+    /// `kb merge a.json b.json …`).
+    pub fn pos_from(&self, i: usize) -> &[String] {
+        self.positional.get(i..).unwrap_or(&[])
+    }
+
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
     }
@@ -77,6 +95,12 @@ impl Args {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
 }
 
 pub const USAGE: &str = "\
@@ -86,16 +110,22 @@ USAGE:
   kernelblaster experiment <name|all> [--quick] [--seed N] [--out DIR]
   kernelblaster run --config run.json    # config-file launcher
   kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
-                         [--vendor] [--kb PATH] [--save-kb PATH] [--seed N]
+                         [--vendor] [--kb PATH] [--warm-start P1,P2,...]
+                         [--save-kb PATH] [--seed N]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
-  kernelblaster kb <init|inspect> --path PATH
+  kernelblaster kb <init|inspect|stats> --path PATH
+  kernelblaster kb merge IN1 IN2 [...] --out PATH
+  kernelblaster kb compact --path IN [--out PATH] [--min-attempts 4]
+                           [--gain-floor 1.0] [--max-notes 3]
+  kernelblaster kb transfer --path IN --to ARCH [--from ARCH] [--decay 0.5]
+                            [--rekey-threshold 1.5] [--out PATH]
   kernelblaster list
   kernelblaster version
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
-  fig19 ablation_mem minimal_agent
+  fig19 ablation_mem minimal_agent continual
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -187,15 +217,23 @@ fn cmd_run(args: &Args) -> i32 {
         selected
     };
     let mut kb = match &cfg.kb_load {
-        Some(p) => match persist::load(Path::new(p)) {
+        Some(p) => match load_kb(p) {
             Ok(kb) => kb,
-            Err(e) => {
-                eprintln!("failed to load KB from {p}: {e}");
-                return 1;
-            }
+            Err(code) => return code,
         },
         None => KnowledgeBase::empty(),
     };
+    if !cfg.warm_start.is_empty() {
+        kb = match assemble_warm_start(
+            std::mem::take(&mut kb),
+            &cfg.warm_start,
+            &arch,
+            &cfg.transfer,
+        ) {
+            Ok(kb) => kb,
+            Err(code) => return code,
+        };
+    }
     let runs = icrl::run_suite(&tasks, &arch, &mut kb, &cfg.icrl);
     let mut t = Table::new(&["task", "valid", "vs naive", "vs PyTorch", "tokens"]);
     let mut scores = Vec::new();
@@ -255,6 +293,23 @@ fn cmd_optimize(args: &Args) -> i32 {
         },
         None => KnowledgeBase::empty(),
     };
+    // Warm start: merge prior KBs (cross-arch ones are transferred to the
+    // target first) into the starting θ₀. A --kb KB joins as a prior.
+    if let Some(list) = args.flag("warm-start") {
+        let paths: Vec<String> = list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+        let policy = match transfer_policy_from_flags(args) {
+            Ok(p) => p,
+            Err(code) => return code,
+        };
+        kb = match assemble_warm_start(std::mem::take(&mut kb), &paths, &arch, &policy) {
+            Ok(kb) => kb,
+            Err(code) => return code,
+        };
+    }
     let mut cfg = IcrlConfig {
         trajectories: args.usize_flag("trajectories", 10),
         rollout_steps: args.usize_flag("steps", 10),
@@ -371,16 +426,77 @@ fn cmd_calibrate(args: &Args) -> i32 {
     }
 }
 
-fn cmd_kb(args: &Args) -> i32 {
-    let Some(path) = args.flag("path") else {
-        eprintln!("kb: need --path FILE");
-        return 2;
+/// Load a KB or print the error and return the CLI failure code.
+fn load_kb(path: &str) -> Result<KnowledgeBase, i32> {
+    persist::load(Path::new(path)).map_err(|e| {
+        eprintln!("failed to load KB from {path}: {e}");
+        1
+    })
+}
+
+/// Save a KB or print the error and return the CLI failure code.
+fn save_kb(kb: &KnowledgeBase, path: &str) -> Result<(), i32> {
+    persist::save(kb, Path::new(path)).map_err(|e| {
+        eprintln!("failed to save KB to {path}: {e}");
+        1
+    })
+}
+
+/// Transfer policy from `--decay` / `--rekey-threshold` flags, enforcing
+/// the same decay ∈ [0, 1] contract the config-file path validates.
+fn transfer_policy_from_flags(args: &Args) -> Result<TransferPolicy, i32> {
+    let dflt = TransferPolicy::default();
+    let policy = TransferPolicy {
+        decay: args.f64_flag("decay", dflt.decay),
+        rekey_threshold: args.f64_flag("rekey-threshold", dflt.rekey_threshold),
     };
+    if !(0.0..=1.0).contains(&policy.decay) {
+        eprintln!("--decay must be in [0, 1], got {}", policy.decay);
+        return Err(2);
+    }
+    Ok(policy)
+}
+
+/// Assemble a warm-start θ₀ for `arch`: an already-loaded KB (if
+/// non-empty) joins the priors listed in `paths`, then everything goes
+/// through [`icrl::warm_start_kb`]. Shared by `optimize --warm-start`
+/// and the config-file launcher.
+fn assemble_warm_start(
+    base: KnowledgeBase,
+    paths: &[String],
+    arch: &GpuArch,
+    policy: &TransferPolicy,
+) -> Result<KnowledgeBase, i32> {
+    let mut priors = Vec::new();
+    if !base.states.is_empty() {
+        priors.push(base);
+    }
+    for p in paths {
+        priors.push(load_kb(p)?);
+    }
+    if priors.is_empty() {
+        eprintln!("warm start: no KBs to seed from");
+        return Err(2);
+    }
+    let kb = icrl::warm_start_kb(&priors, arch, policy);
+    eprintln!(
+        "warm start: {} priors -> {} states ({} transferred entries)",
+        priors.len(),
+        kb.states.len(),
+        lifecycle::stats(&kb).transferred
+    );
+    Ok(kb)
+}
+
+fn cmd_kb(args: &Args) -> i32 {
     match args.pos(1) {
         Some("init") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("kb init: need --path FILE");
+                return 2;
+            };
             let kb = KnowledgeBase::seed_priors();
-            if let Err(e) = persist::save(&kb, Path::new(path)) {
-                eprintln!("save failed: {e}");
+            if save_kb(&kb, path).is_err() {
                 return 1;
             }
             println!(
@@ -390,40 +506,191 @@ fn cmd_kb(args: &Args) -> i32 {
             );
             0
         }
-        Some("inspect") => match persist::load(Path::new(path)) {
-            Ok(kb) => {
-                let mut t = Table::new(&["state", "visits", "opts", "best technique", "gain"]);
-                for s in &kb.states {
-                    let best = s
-                        .opts
-                        .iter()
-                        .max_by(|a, b| a.expected_gain.partial_cmp(&b.expected_gain).unwrap());
-                    t.add_row(vec![
-                        s.sig.id(),
-                        s.visits.to_string(),
-                        s.opts.len().to_string(),
-                        best.map(|o| o.technique.name().to_string())
-                            .unwrap_or_else(|| "-".into()),
-                        best.map(|o| format!("{:.2}", o.expected_gain))
-                            .unwrap_or_else(|| "-".into()),
-                    ]);
+        Some("inspect") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("kb inspect: need --path FILE");
+                return 2;
+            };
+            let kb = match load_kb(path) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            };
+            let mut t =
+                Table::new(&["state", "visits", "opts", "best technique", "gain", "origin"]);
+            for s in &kb.states {
+                let best = s
+                    .opts
+                    .iter()
+                    .max_by(|a, b| a.expected_gain.partial_cmp(&b.expected_gain).unwrap());
+                t.add_row(vec![
+                    s.sig.id(),
+                    s.visits.to_string(),
+                    s.opts.len().to_string(),
+                    best.map(|o| o.technique.name().to_string())
+                        .unwrap_or_else(|| "-".into()),
+                    best.map(|o| format!("{:.2}", o.expected_gain))
+                        .unwrap_or_else(|| "-".into()),
+                    best.and_then(|o| o.origin.clone())
+                        .unwrap_or_else(|| "native".into()),
+                ]);
+            }
+            print!("{}", t.render());
+            println!(
+                "{} states | {} recorded attempts | {} on disk",
+                kb.states.len(),
+                kb.total_attempts(),
+                crate::util::human_bytes(kb.size_bytes())
+            );
+            0
+        }
+        Some("stats") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("kb stats: need --path FILE");
+                return 2;
+            };
+            let kb = match load_kb(path) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            };
+            let st = lifecycle::stats(&kb);
+            let mut t = Table::new(&["metric", "value"]);
+            t.add_row(vec!["arch".into(), st.arch.unwrap_or_else(|| "-".into())]);
+            t.add_row(vec!["states".into(), st.states.to_string()]);
+            t.add_row(vec!["entries".into(), st.entries.to_string()]);
+            t.add_row(vec!["native attempts".into(), st.attempts.to_string()]);
+            t.add_row(vec!["successes".into(), st.successes.to_string()]);
+            t.add_row(vec![
+                "transferred priors".into(),
+                st.transferred.to_string(),
+            ]);
+            t.add_row(vec!["untried entries".into(), st.untried.to_string()]);
+            t.add_row(vec!["parameter updates".into(), st.updates.to_string()]);
+            t.add_row(vec![
+                "size".into(),
+                crate::util::human_bytes(st.size_bytes),
+            ]);
+            print!("{}", t.render());
+            if st.lineage.is_empty() {
+                println!("lineage: (none — never lifecycled)");
+            } else {
+                println!("lineage:");
+                for l in &st.lineage {
+                    println!("  - {l}");
                 }
-                print!("{}", t.render());
-                println!(
-                    "{} states | {} recorded attempts | {} on disk",
-                    kb.states.len(),
-                    kb.total_attempts(),
-                    crate::util::human_bytes(kb.size_bytes())
-                );
-                0
             }
-            Err(e) => {
-                eprintln!("load failed: {e}");
-                1
+            0
+        }
+        Some("merge") => {
+            let inputs = args.pos_from(2);
+            if inputs.len() < 2 {
+                eprintln!("kb merge: need at least two input KB files");
+                return 2;
             }
-        },
+            let Some(out) = args.flag("out") else {
+                eprintln!("kb merge: need --out FILE");
+                return 2;
+            };
+            let mut kbs = Vec::with_capacity(inputs.len());
+            for p in inputs {
+                match load_kb(p) {
+                    Ok(kb) => kbs.push(kb),
+                    Err(code) => return code,
+                }
+            }
+            let merged = lifecycle::merge(&kbs);
+            if save_kb(&merged, out).is_err() {
+                return 1;
+            }
+            println!(
+                "merged {} KBs -> {} states, {} attempts ({}) at {out}",
+                kbs.len(),
+                merged.states.len(),
+                merged.total_attempts(),
+                crate::util::human_bytes(merged.size_bytes())
+            );
+            0
+        }
+        Some("compact") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("kb compact: need --path FILE");
+                return 2;
+            };
+            let kb = match load_kb(path) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            };
+            let dflt = CompactPolicy::default();
+            let policy = CompactPolicy {
+                min_attempts: args.usize_flag("min-attempts", dflt.min_attempts),
+                gain_floor: args.f64_flag("gain-floor", dflt.gain_floor),
+                max_notes: args.usize_flag("max-notes", dflt.max_notes),
+            };
+            let before = kb.size_bytes();
+            let compacted = lifecycle::compact(&kb, &policy);
+            let out = args.flag("out").unwrap_or(path);
+            if save_kb(&compacted, out).is_err() {
+                return 1;
+            }
+            println!(
+                "compacted {} -> {} ({} states) at {out}",
+                crate::util::human_bytes(before),
+                crate::util::human_bytes(compacted.size_bytes()),
+                compacted.states.len()
+            );
+            0
+        }
+        Some("transfer") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("kb transfer: need --path FILE");
+                return 2;
+            };
+            let kb = match load_kb(path) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            };
+            let Some(to) = args.flag("to").and_then(GpuArch::by_name) else {
+                eprintln!("kb transfer: need --to ARCH (known: A6000 A100 H100 L40S)");
+                return 2;
+            };
+            // Source arch: --from overrides; else the KB's recorded arch.
+            let from = match args.flag("from") {
+                Some(name) => match GpuArch::by_name(name) {
+                    Some(a) => a,
+                    None => {
+                        eprintln!("kb transfer: unknown --from arch '{name}'");
+                        return 2;
+                    }
+                },
+                None => match kb.arch.as_deref().and_then(GpuArch::by_name) {
+                    Some(a) => a,
+                    None => {
+                        eprintln!(
+                            "kb transfer: KB records no source arch; pass --from ARCH"
+                        );
+                        return 2;
+                    }
+                },
+            };
+            let policy = match transfer_policy_from_flags(args) {
+                Ok(p) => p,
+                Err(code) => return code,
+            };
+            let transferred = lifecycle::transfer(&kb, &from, &to, &policy);
+            let out = args.flag("out").unwrap_or(path);
+            if save_kb(&transferred, out).is_err() {
+                return 1;
+            }
+            println!(
+                "transferred {} -> {}: {} states ({}) at {out}",
+                from.name,
+                to.name,
+                transferred.states.len(),
+                crate::util::human_bytes(transferred.size_bytes())
+            );
+            0
+        }
         _ => {
-            eprintln!("kb: need init|inspect");
+            eprintln!("kb: need init|inspect|stats|merge|compact|transfer");
             2
         }
     }
@@ -498,6 +765,72 @@ mod tests {
         assert_eq!(run(&argv(&format!("kb init --path {path_s}"))), 0);
         assert_eq!(run(&argv(&format!("kb inspect --path {path_s}"))), 0);
         assert_eq!(run(&argv("kb inspect --path /nonexistent/x.json")), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kb_lifecycle_subcommands_end_to_end() {
+        let dir = std::env::temp_dir().join("kb_cli_lifecycle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = |n: &str| dir.join(n).to_str().unwrap().to_string();
+        let (a, b) = (p("a.json"), p("b.json"));
+        let (merged, moved) = (p("merged.json"), p("h100.json"));
+        assert_eq!(run(&argv(&format!("kb init --path {a}"))), 0);
+        assert_eq!(run(&argv(&format!("kb init --path {b}"))), 0);
+        assert_eq!(run(&argv(&format!("kb merge {a} {b} --out {merged}"))), 0);
+        assert_eq!(run(&argv(&format!("kb stats --path {merged}"))), 0);
+        // No recorded arch and no --from: transfer must refuse.
+        assert_eq!(
+            run(&argv(&format!("kb transfer --path {merged} --to H100"))),
+            2
+        );
+        assert_eq!(
+            run(&argv(&format!(
+                "kb transfer --path {merged} --from A6000 --to H100 --out {moved}"
+            ))),
+            0
+        );
+        // Transferred KB records its arch: --from is now optional.
+        assert_eq!(
+            run(&argv(&format!("kb transfer --path {moved} --to L40S --out {moved}"))),
+            0
+        );
+        assert_eq!(
+            run(&argv(&format!("kb compact --path {moved} --max-notes 0"))),
+            0
+        );
+        assert_eq!(run(&argv(&format!("kb inspect --path {moved}"))), 0);
+        assert_eq!(run(&argv(&format!("kb stats --path {moved}"))), 0);
+        // Error paths.
+        assert_eq!(
+            run(&argv(&format!(
+                "kb transfer --path {moved} --to H100 --decay 2.0"
+            ))),
+            2
+        );
+        assert_eq!(run(&argv(&format!("kb merge {a} --out {merged}"))), 2);
+        assert_eq!(run(&argv("kb stats --path /nonexistent/x.json")), 1);
+        assert_eq!(run(&argv("kb frobnicate --path x.json")), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn optimize_warm_start_flag_seeds_run() {
+        let dir = std::env::temp_dir().join("kb_cli_warmstart_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prior = dir.join("prior.json").to_str().unwrap().to_string();
+        let out = dir.join("out.json").to_str().unwrap().to_string();
+        assert_eq!(run(&argv(&format!("kb init --path {prior}"))), 0);
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/15_relu --gpu H100 --trajectories 1 --steps 2 \
+                 --warm-start {prior} --save-kb {out}"
+            ))),
+            0
+        );
+        let kb = persist::load(Path::new(&out)).unwrap();
+        assert_eq!(kb.arch.as_deref(), Some("H100"));
+        assert!(kb.lineage.iter().any(|l| l.starts_with("warm_start")));
         std::fs::remove_dir_all(&dir).ok();
     }
 

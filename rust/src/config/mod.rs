@@ -2,15 +2,19 @@
 //!
 //! A deployment-grade launcher needs reproducible run configs. This
 //! module defines the full configuration surface of a KernelBlaster run
-//! (driver hyperparameters, agent failure model, harness policy, GPU
-//! target, KB paths) with JSON (de)serialization, so experiments are
-//! launchable as `kernelblaster optimize --config run.json` and the exact
-//! configuration can be archived next to the results.
+//! (driver hyperparameters from [`crate::icrl`], agent failure model from
+//! [`crate::agents`], harness policy from [`crate::harness`], GPU target
+//! from [`crate::gpu`], KB load/save/warm-start paths for
+//! [`crate::kb`]) with JSON (de)serialization, so experiments are
+//! launchable as `kernelblaster run --config run.json` and the exact
+//! configuration can be archived next to the results. The [`crate::cli`]
+//! is the only consumer; nothing here sits on the optimization loop.
 
 use crate::agents::AgentConfig;
 use crate::gpu::GpuArch;
 use crate::harness::HarnessConfig;
 use crate::icrl::{IcrlConfig, KbMode};
+use crate::kb::lifecycle::TransferPolicy;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
 
@@ -23,6 +27,12 @@ pub struct RunConfig {
     pub kb_load: Option<String>,
     /// Optional path to save the KB after the run.
     pub kb_save: Option<String>,
+    /// Prior KB paths to warm-start from: each is cross-arch transferred
+    /// to `gpu` when its recorded arch differs, then all are merged with
+    /// `kb_load` (see `kb::lifecycle::warm_start`).
+    pub warm_start: Vec<String>,
+    /// Transfer policy applied to warm-start priors.
+    pub transfer: TransferPolicy,
     /// Task id filter (empty = whole suite).
     pub tasks: Vec<String>,
 }
@@ -34,6 +44,8 @@ impl Default for RunConfig {
             icrl: IcrlConfig::default(),
             kb_load: None,
             kb_save: None,
+            warm_start: Vec::new(),
+            transfer: TransferPolicy::default(),
             tasks: Vec::new(),
         }
     }
@@ -90,6 +102,21 @@ impl RunConfig {
         }
         if let Some(p) = &self.kb_save {
             root.set("kb_save", p.as_str());
+        }
+        if !self.warm_start.is_empty() {
+            root.set(
+                "warm_start",
+                Json::Arr(
+                    self.warm_start
+                        .iter()
+                        .map(|p| Json::Str(p.clone()))
+                        .collect(),
+                ),
+            );
+            let mut transfer = JsonObj::new();
+            transfer.set("decay", self.transfer.decay);
+            transfer.set("rekey_threshold", self.transfer.rekey_threshold);
+            root.set("transfer", transfer);
         }
         if !self.tasks.is_empty() {
             root.set(
@@ -171,6 +198,22 @@ impl RunConfig {
         }
         cfg.kb_load = j.get("kb_load").and_then(Json::as_str).map(String::from);
         cfg.kb_save = j.get("kb_save").and_then(Json::as_str).map(String::from);
+        if let Some(ws) = j.get("warm_start").and_then(Json::as_arr) {
+            cfg.warm_start = ws
+                .iter()
+                .filter_map(|p| p.as_str().map(String::from))
+                .collect();
+        }
+        if let Some(t) = j.get("transfer") {
+            let d = TransferPolicy::default();
+            cfg.transfer = TransferPolicy {
+                decay: t.get("decay").and_then(Json::as_f64).unwrap_or(d.decay),
+                rekey_threshold: t
+                    .get("rekey_threshold")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.rekey_threshold),
+            };
+        }
         if let Some(tasks) = j.get("tasks").and_then(Json::as_arr) {
             cfg.tasks = tasks
                 .iter()
@@ -182,6 +225,12 @@ impl RunConfig {
             return Err(ConfigError::Invalid(
                 "trajectories/rollout_steps/top_k must be positive".into(),
             ));
+        }
+        if !(0.0..=1.0).contains(&cfg.transfer.decay) {
+            return Err(ConfigError::Invalid(format!(
+                "transfer.decay must be in [0, 1], got {}",
+                cfg.transfer.decay
+            )));
         }
         cfg.resolve_arch()?;
         Ok(cfg)
@@ -235,6 +284,28 @@ mod tests {
         let j = Json::parse(r#"{"icrl":{"trajectories":0}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"icrl":{"kb_mode":"weird"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn warm_start_roundtrips_and_validates() {
+        let mut cfg = RunConfig::default();
+        cfg.warm_start = vec!["a.json".into(), "b.json".into()];
+        cfg.transfer.decay = 0.7;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.warm_start, cfg.warm_start);
+        assert!((back.transfer.decay - 0.7).abs() < 1e-12);
+        assert!(
+            (back.transfer.rekey_threshold - cfg.transfer.rekey_threshold).abs() < 1e-12
+        );
+        // Absent = defaults.
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert!(plain.warm_start.is_empty());
+        // Out-of-range decay rejected.
+        let j = Json::parse(
+            r#"{"warm_start":["a.json"],"transfer":{"decay":1.5}}"#,
+        )
+        .unwrap();
         assert!(RunConfig::from_json(&j).is_err());
     }
 

@@ -1,0 +1,254 @@
+//! Continual cross-arch lifecycle scenario: grow → transfer → warm-start.
+//!
+//! The paper's continual claim, run end-to-end through the KB lifecycle
+//! subsystem ([`crate::kb::lifecycle`]): Level-1 tasks are optimized on a
+//! *training* architecture (A6000), the grown KB is compacted and
+//! transferred to an *evaluation* architecture (H100) through the arch
+//! scaling model, and the same tasks are then optimized on the target
+//! twice — warm-started from the transferred KB vs cold from an empty
+//! one. The warm/cold speedup and token deltas are the payoff of carrying
+//! knowledge across generations (Fig. 16's mechanism, now as an explicit
+//! lifecycle), and are reported both as a [`Report`] and as
+//! machine-readable `BENCH_continual.json` (format
+//! `kernelblaster-bench-continual-v1`) so the trajectory is trackable
+//! across PRs — CI uploads the file as an artifact.
+
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{self, IcrlConfig, TaskRun};
+use crate::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
+use crate::kb::KnowledgeBase;
+use crate::tasks::{Level, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+
+/// Everything one grow→transfer→warm-vs-cold pass produces.
+struct Scenario {
+    train_arch: &'static str,
+    eval_arch: &'static str,
+    /// KB grown on the training arch (post-compact).
+    grown: KnowledgeBase,
+    /// The transferred warm-start KB, pre-run.
+    transferred: KnowledgeBase,
+    warm: Vec<TaskRun>,
+    cold: Vec<TaskRun>,
+}
+
+/// Geomeans over tasks where BOTH runs are valid — warm/cold ratios are
+/// only meaningful on the paired population (a task dropping out of one
+/// arm must drop out of both). Returns (warm, cold, pairs).
+fn paired_geomeans(warm: &[TaskRun], cold: &[TaskRun]) -> (f64, f64, usize) {
+    let (mut w, mut c) = (Vec::new(), Vec::new());
+    for (wr, cr) in warm.iter().zip(cold) {
+        if wr.valid && cr.valid {
+            w.push(wr.speedup_vs_naive());
+            c.push(cr.speedup_vs_naive());
+        }
+    }
+    (stats::geomean(&w), stats::geomean(&c), w.len())
+}
+
+fn total_tokens(runs: &[TaskRun]) -> usize {
+    runs.iter().map(|r| r.tokens.total()).sum()
+}
+
+/// Run the full scenario on an explicit task list (the test shrinks it).
+fn scenario(
+    cfg: &IcrlConfig,
+    tasks: &[&Task],
+    train: &GpuArch,
+    eval: &GpuArch,
+    policy: &TransferPolicy,
+) -> Scenario {
+    // Phase 1: grow native evidence on the training arch.
+    let mut grown = KnowledgeBase::empty();
+    let _ = icrl::run_suite(tasks, train, &mut grown, cfg);
+    // Phase 2: lifecycle — compact the grown KB, transfer to the target.
+    let grown = lifecycle::compact(&grown, &CompactPolicy::default());
+    let transferred = lifecycle::transfer(&grown, train, eval, policy);
+    // Phase 3: warm vs cold on the evaluation arch (paired seeds).
+    let mut warm_kb = transferred.clone();
+    let warm = icrl::run_suite(tasks, eval, &mut warm_kb, cfg);
+    let mut cold_kb = KnowledgeBase::empty();
+    let cold = icrl::run_suite(tasks, eval, &mut cold_kb, cfg);
+    Scenario {
+        train_arch: train.name,
+        eval_arch: eval.name,
+        grown,
+        transferred,
+        warm,
+        cold,
+    }
+}
+
+/// Serialize the scenario into the `kernelblaster-bench-continual-v1`
+/// document and write it to `path`.
+fn write_bench_json(s: &Scenario, tasks: &[&Task], policy: &TransferPolicy, path: &Path) {
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-bench-continual-v1");
+    root.set("train_arch", s.train_arch);
+    root.set("eval_arch", s.eval_arch);
+    let tstats = lifecycle::stats(&s.transferred);
+    let mut transfer = JsonObj::new();
+    transfer.set("decay", policy.decay);
+    transfer.set("rekey_threshold", policy.rekey_threshold);
+    transfer.set("states", tstats.states);
+    transfer.set("transferred_entries", tstats.transferred);
+    transfer.set("size_bytes", tstats.size_bytes);
+    root.set("transfer", transfer);
+    let rows: Vec<Json> = tasks
+        .iter()
+        .zip(s.warm.iter().zip(&s.cold))
+        .map(|(t, (w, c))| {
+            let mut o = JsonObj::new();
+            o.set("task", t.id.as_str());
+            o.set("cold_speedup", c.speedup_vs_naive());
+            o.set("warm_speedup", w.speedup_vs_naive());
+            o.set("cold_tokens", c.tokens.total());
+            o.set("warm_tokens", w.tokens.total());
+            Json::Obj(o)
+        })
+        .collect();
+    root.set("tasks", Json::Arr(rows));
+    let (g_warm, g_cold, pairs) = paired_geomeans(&s.warm, &s.cold);
+    let mut summary = JsonObj::new();
+    summary.set("paired_tasks", pairs);
+    summary.set("geomean_cold", g_cold);
+    summary.set("geomean_warm", g_warm);
+    summary.set("warm_over_cold", g_warm / g_cold);
+    summary.set("cold_tokens", total_tokens(&s.cold));
+    summary.set("warm_tokens", total_tokens(&s.warm));
+    root.set("summary", summary);
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: failed to write {}: {e}", path.display()),
+    }
+}
+
+/// The `continual` experiment with an explicit JSON output path.
+pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
+    let train = GpuArch::a6000();
+    let eval = GpuArch::h100();
+    let policy = TransferPolicy::default();
+    let cfg = ctx.icrl_cfg(false);
+    let tasks = ctx.tasks(Level::L1);
+    let s = scenario(&cfg, &tasks, &train, &eval, &policy);
+
+    let mut t = Table::new(&["task", "cold speedup", "warm speedup", "delta", "tokens Δ"]);
+    for (task, (w, c)) in tasks.iter().zip(s.warm.iter().zip(&s.cold)) {
+        t.add_row(vec![
+            task.id.clone(),
+            fnum(c.speedup_vs_naive(), 2),
+            fnum(w.speedup_vs_naive(), 2),
+            fnum(w.speedup_vs_naive() - c.speedup_vs_naive(), 2),
+            format!(
+                "{:+}",
+                w.tokens.total() as i64 - c.tokens.total() as i64
+            ),
+        ]);
+    }
+    let (g_warm, g_cold, pairs) = paired_geomeans(&s.warm, &s.cold);
+    let gstats = lifecycle::stats(&s.grown);
+    let tstats = lifecycle::stats(&s.transferred);
+    write_bench_json(&s, &tasks, &policy, out);
+    Report {
+        name: "continual".into(),
+        sections: vec![Section {
+            title: format!(
+                "Continual lifecycle: L1 grown on {} -> transferred -> {} (warm vs cold)",
+                s.train_arch, s.eval_arch
+            ),
+            table: t,
+            plot: None,
+            notes: vec![
+                format!(
+                    "geomean vs naive over {pairs} both-valid pairs: warm {g_warm:.3}x \
+                     vs cold {g_cold:.3}x (warm/cold = {:.3}x)",
+                    g_warm / g_cold
+                ),
+                format!(
+                    "grown KB: {} states / {} attempts on {}; transferred: {} states, \
+                     {} prior entries, {}",
+                    gstats.states,
+                    gstats.attempts,
+                    s.train_arch,
+                    tstats.states,
+                    tstats.transferred,
+                    crate::util::human_bytes(tstats.size_bytes)
+                ),
+                format!("machine-readable deltas: {}", out.display()),
+            ],
+        }],
+    }
+}
+
+/// The `continual` experiment registry entry — writes
+/// `BENCH_continual.json` beside the working directory like the hot-path
+/// bench writes `BENCH_hotpath.json`.
+pub fn run(ctx: &Ctx) -> Report {
+    run_with_output(ctx, Path::new("BENCH_continual.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::HarnessConfig;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn scenario_grows_transfers_and_reports_deltas() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+        ];
+        let cfg = IcrlConfig {
+            trajectories: 2,
+            rollout_steps: 3,
+            top_k: 2,
+            harness: HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            seed: 11,
+            ..Default::default()
+        };
+        let policy = TransferPolicy::default();
+        let s = scenario(
+            &cfg,
+            &tasks,
+            &GpuArch::a6000(),
+            &GpuArch::h100(),
+            &policy,
+        );
+        assert_eq!(s.warm.len(), 2);
+        assert_eq!(s.cold.len(), 2);
+        assert!(s.grown.total_attempts() > 0);
+        assert_eq!(s.grown.arch.as_deref(), Some("A6000"));
+        assert_eq!(s.transferred.arch.as_deref(), Some("H100"));
+        let tstats = lifecycle::stats(&s.transferred);
+        assert!(tstats.transferred > 0);
+        assert_eq!(tstats.attempts, 0);
+
+        // The JSON artifact parses and carries the per-task deltas.
+        let dir = std::env::temp_dir().join("kb_continual_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_continual.json");
+        write_bench_json(&s, &tasks, &policy, &out);
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            j.get("format").and_then(Json::as_str),
+            Some("kernelblaster-bench-continual-v1")
+        );
+        assert_eq!(j.get("tasks").and_then(Json::as_arr).unwrap().len(), 2);
+        let summary = j.get("summary").unwrap();
+        assert!(summary
+            .get("warm_over_cold")
+            .and_then(Json::as_f64)
+            .unwrap()
+            .is_finite());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

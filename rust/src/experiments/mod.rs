@@ -1,9 +1,14 @@
-//! Experiment registry: one regenerator per paper table/figure.
+//! Experiment registry: one regenerator per paper table/figure, plus the
+//! [`continual`] cross-arch lifecycle scenario.
 //!
 //! Every entry produces a [`Report`] — human-readable tables/plots plus
-//! machine-readable CSVs — from the same code paths the CLI and the bench
-//! harness use. The mapping to the paper's artifacts is in DESIGN.md §6.
+//! machine-readable CSVs — from the same code paths the CLI
+//! ([`crate::cli`]) and the bench harness use: runs through
+//! [`crate::icrl`], scores through [`crate::metrics`] against
+//! [`crate::baselines`], all over the shared [`crate::tasks`] suite.
+//! The mapping to the paper's artifacts is in DESIGN.md §6.
 
+pub mod continual;
 pub mod cost;
 pub mod distribution;
 pub mod fastp;
@@ -188,6 +193,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("fig19", fidelity::fig19),
         ("ablation_mem", learning::ablation_mem),
         ("minimal_agent", cost::minimal_agent),
+        ("continual", continual::run),
     ]
 }
 

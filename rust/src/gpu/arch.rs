@@ -7,6 +7,14 @@
 //! cross-architecture differences are what make the paper's Fig. 16
 //! (knowledge-base transfer across GPUs) and Fig. 9 (per-arch fast_p
 //! curves) meaningful in this reproduction.
+//!
+//! The per-[`Bottleneck`] capacity hints ([`GpuArch::bottleneck_capacity`])
+//! are also the *scaling model* behind the KB lifecycle's cross-arch
+//! transfer ([`crate::kb::lifecycle::transfer`]): when a target generation
+//! relieves a state's primary bottleneck much more than its secondary one,
+//! the transferred state is re-keyed accordingly.
+
+use super::profiler::Bottleneck;
 
 /// GPU generation (drives architecture-conditional optimizations).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -151,6 +159,33 @@ impl GpuArch {
     pub fn ridge_fp32(&self) -> f64 {
         self.fp32_flops() / self.mem_bw_bytes()
     }
+
+    /// Capacity of the hardware resource that *relieves* a bottleneck
+    /// class, in arbitrary-but-consistent per-class units. Absolute values
+    /// are meaningless across classes; only same-class **ratios between
+    /// two architectures** are used — they are the scaling hints the KB
+    /// lifecycle consumes when transferring state signatures across
+    /// generations ([`crate::kb::lifecycle::transfer`]).
+    pub fn bottleneck_capacity(&self, b: Bottleneck) -> f64 {
+        match b {
+            Bottleneck::MemoryBandwidth => self.mem_bw_gbs,
+            // Latency-bound kernels are relieved by cache capacity.
+            Bottleneck::MemoryLatency => self.l2_bytes as f64,
+            Bottleneck::ComputeThroughput => self.fp32_tflops,
+            Bottleneck::Transcendental => self.fp32_tflops * self.sfu_ratio,
+            // More resident warps hide more latency.
+            Bottleneck::Occupancy => (self.sms * self.max_threads_per_sm) as f64,
+            Bottleneck::Parallelism => self.sms as f64,
+            // Lower launch overhead = more capacity.
+            Bottleneck::LaunchOverhead => 1.0 / self.launch_overhead_us,
+        }
+    }
+
+    /// How much more (>1) or less (<1) headroom `to` has than `self` for a
+    /// bottleneck class — the relief ratio driving transfer re-keying.
+    pub fn relief_ratio(&self, to: &GpuArch, b: Bottleneck) -> f64 {
+        to.bottleneck_capacity(b) / self.bottleneck_capacity(b)
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +222,23 @@ mod tests {
         for a in GpuArch::all() {
             let r = a.ridge_fp32();
             assert!((5.0..150.0).contains(&r), "{}: ridge={r}", a.name);
+        }
+    }
+
+    #[test]
+    fn relief_ratios_track_datasheet_deltas() {
+        let a = GpuArch::a6000();
+        let h = GpuArch::h100();
+        // H100 relieves bandwidth-bound states far more than an A6000.
+        assert!(a.relief_ratio(&h, Bottleneck::MemoryBandwidth) > 4.0);
+        // The reverse direction inverts the ratio.
+        let fwd = a.relief_ratio(&h, Bottleneck::ComputeThroughput);
+        let back = h.relief_ratio(&a, Bottleneck::ComputeThroughput);
+        assert!((fwd * back - 1.0).abs() < 1e-12);
+        // Identity transfer: every class is exactly 1.0.
+        for b in Bottleneck::all() {
+            assert!((a.relief_ratio(&a, b) - 1.0).abs() < 1e-12);
+            assert!(a.bottleneck_capacity(b) > 0.0);
         }
     }
 

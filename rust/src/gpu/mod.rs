@@ -1,6 +1,16 @@
-//! GPU substrate: architecture models, the analytical performance model,
-//! and the NCU-like profiler. See DESIGN.md §1 for why these substitute
-//! for the paper's physical GPUs + Nsight Compute.
+//! GPU substrate: architecture models ([`arch`]), the analytical
+//! performance model ([`model`]), and the NCU-like profiler
+//! ([`profiler`]). See DESIGN.md §1 for why these substitute for the
+//! paper's physical GPUs + Nsight Compute.
+//!
+//! Position in the MAIC-RL loop (**profile** → state-extract → KB-match →
+//! lower → verify): [`profiler::profile`] turns a
+//! ([`crate::kir::KernelGraph`], schedule) pair into the [`NcuReport`]
+//! the state extractor ([`crate::agents::state_extractor`]) reads; the
+//! harness ([`crate::harness`]) calls it on every validated candidate;
+//! and the per-[`Bottleneck`] capacities of [`GpuArch`] double as the
+//! scaling hints behind cross-arch KB transfer
+//! ([`crate::kb::lifecycle`]).
 
 pub mod arch;
 pub mod model;

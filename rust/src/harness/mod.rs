@@ -24,6 +24,16 @@
 //! candidate evaluation — including concurrent ones: entries are `Arc`ed
 //! and reads are lock-free (`&VerifyCache`). The plain [`run`] entry point
 //! stays cache-free for one-shot callers.
+//!
+//! Position in the MAIC-RL loop (profile → state-extract → KB-match →
+//! lower → **verify**): the driver ([`crate::icrl`]) hands every lowered
+//! candidate ([`crate::agents::lowering`]) here; numerics run on the
+//! [`crate::kir::interp`] oracle, soft verification scans
+//! [`crate::kir::render`] output, and passing candidates get their
+//! [`crate::gpu`] profile — the reward signal the KB ([`crate::kb`])
+//! integrates.
+
+#![deny(missing_docs)]
 
 use crate::gpu::{profiler, GpuArch, NcuReport};
 use crate::kir::{interp, render, OpKind};
@@ -38,8 +48,9 @@ use std::sync::Arc;
 pub struct HarnessConfig {
     /// Number of randomized verification seeds.
     pub verify_seeds: usize,
-    /// Tolerances for f32 candidates.
+    /// Relative tolerance for f32 candidates.
     pub rtol: f32,
+    /// Absolute tolerance for f32 candidates.
     pub atol: f32,
     /// Looser tolerances once reduced precision is in play.
     pub rtol_reduced: f32,
@@ -73,8 +84,11 @@ pub fn verify_seed(i: usize) -> u64 {
 /// and the task graph's outputs on them.
 #[derive(Debug)]
 pub struct VerifyEntry {
+    /// The verification seed the inputs were drawn from.
     pub seed: u64,
+    /// The randomized inputs for that seed.
     pub inputs: Vec<interp::Tensor>,
+    /// The task graph's outputs on those inputs (ground truth).
     pub reference: Vec<interp::Tensor>,
 }
 
@@ -87,6 +101,7 @@ pub struct VerifyCache {
 }
 
 impl VerifyCache {
+    /// An empty (cold) cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -124,6 +139,7 @@ impl VerifyCache {
         self.entries.values().map(Vec::len).sum()
     }
 
+    /// True when nothing has been warmed yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -147,6 +163,7 @@ pub enum Outcome {
 }
 
 impl Outcome {
+    /// True when every check passed and a profile is attached.
     pub fn is_ok(&self) -> bool {
         matches!(self, Outcome::Ok(_))
     }

@@ -13,7 +13,20 @@
 //! After every trajectory the textual-gradient trio (PolicyEvaluation →
 //! PerfGapAnalysis → ParameterUpdate) integrates the replay buffer into
 //! the Knowledge Base — the in-context policy-gradient step.
+//!
+//! Neighbors in the loop: profiles come from [`crate::gpu`], state
+//! extraction and lowering from [`crate::agents`], state matching and
+//! scores from [`crate::kb`], validation from [`crate::harness`], and
+//! tasks from [`crate::tasks`]. A run no longer has to start cold:
+//! [`warm_start_kb`] seeds θ₀ from prior KBs via the
+//! [`crate::kb::lifecycle`] merge/transfer pipeline, and the driver
+//! stamps the KB with the [`crate::gpu::GpuArch`] it ran on so later
+//! lifecycle hops know where the evidence came from.
+
+#![deny(missing_docs)]
 
 pub mod driver;
 
-pub use driver::{optimize_task, run_suite, IcrlConfig, KbMode, StepLog, TaskRun};
+pub use driver::{
+    optimize_task, run_suite, warm_start_kb, IcrlConfig, KbMode, StepLog, TaskRun,
+};

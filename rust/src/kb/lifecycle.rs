@@ -1,0 +1,583 @@
+//! Continual KB lifecycle: merge, compact, and cross-arch transfer.
+//!
+//! The paper's headline claim is *continual* optimization — knowledge
+//! accumulated on one task (and one GPU generation) keeps paying off on
+//! the next. A single driver run grows one KB; this module gives grown
+//! KBs a life **between** runs:
+//!
+//! - [`merge`] — fold N serialized KBs into one, resolving conflicting
+//!   scores by observed-speedup evidence (attempts-weighted means), so
+//!   fleets of independent runs pool what they learned;
+//! - [`compact`] — prune dominated entries (enough evidence, expected
+//!   gain below parity) under a tunable [`CompactPolicy`], bounding the
+//!   ~50 KB footprint the paper worries about (§7) without ever losing a
+//!   state's best-evidence or best-gain entry;
+//! - [`transfer`] — re-key state signatures across [`GpuArch`]
+//!   generations using the arch model's per-bottleneck scaling hints
+//!   ([`GpuArch::relief_ratio`]), demoting every entry to a *prior* with
+//!   decayed confidence and an [`OptEntry::origin`] provenance mark that
+//!   the textual-gradient step ([`crate::agents::textgrad`]) cites until
+//!   native evidence accumulates;
+//! - [`warm_start`] — the composition the driver uses: transfer each
+//!   prior KB to the target arch (when its recorded arch differs), then
+//!   merge, producing the θ₀ for a warm run ([`crate::icrl`]).
+//!
+//! All four are deterministic pure functions over in-memory KBs; the
+//! results round-trip through the `kernelblaster-kb-v1` wire format
+//! ([`super::persist`]) byte-stably. Algebraic contracts (checked by
+//! `tests/lifecycle.rs`): `merge` is associative up to evidence order —
+//! state/technique order, visit/attempt/success counts, and
+//! attempts-weighted expected gains are grouping-independent, while
+//! `last_gain`/notes follow the evidence-heavier side at each fold;
+//! `compact` is idempotent.
+
+use super::{KnowledgeBase, OptEntry, StateEntry, MAX_NOTES};
+use crate::gpu::GpuArch;
+
+/// Tunables for [`compact`].
+#[derive(Debug, Clone)]
+pub struct CompactPolicy {
+    /// Evidence threshold: an entry may be pruned only after this many
+    /// attempts (fewer = still exploring, keep it).
+    pub min_attempts: usize,
+    /// Entries with enough evidence and `expected_gain` below this floor
+    /// are dominated (1.0 = parity with doing nothing).
+    pub gain_floor: f64,
+    /// Gradient notes kept per surviving entry (newest first to go is the
+    /// oldest); `0` strips notes entirely for maximum shrinkage.
+    pub max_notes: usize,
+}
+
+impl Default for CompactPolicy {
+    fn default() -> Self {
+        Self {
+            min_attempts: 4,
+            gain_floor: 1.0,
+            max_notes: MAX_NOTES,
+        }
+    }
+}
+
+/// Tunables for [`transfer`].
+#[derive(Debug, Clone)]
+pub struct TransferPolicy {
+    /// Confidence decay λ ∈ [0, 1]: transferred expected gains are pulled
+    /// toward parity as `1 + (gain − 1)·λ` (0 = discard all magnitude,
+    /// 1 = full confidence in the foreign evidence).
+    pub decay: f64,
+    /// Re-key threshold: when the target arch relieves a state's primary
+    /// bottleneck more than `threshold ×` the relief of its secondary,
+    /// primary and secondary swap in the transferred signature (the old
+    /// secondary is expected to become the binding constraint).
+    pub rekey_threshold: f64,
+}
+
+impl Default for TransferPolicy {
+    fn default() -> Self {
+        Self {
+            decay: 0.5,
+            rekey_threshold: 1.5,
+        }
+    }
+}
+
+/// Fold `from`'s evidence into `into` (same state, same technique).
+///
+/// `expected_gain` becomes the attempts-weighted mean (untried priors
+/// carry zero weight; two untried priors keep `into`'s value),
+/// attempt/success counts add, `last_gain` and note recency follow the
+/// evidence-heavier side, and provenance survives only when both sides
+/// agree on it.
+fn merge_opt(into: &mut OptEntry, from: &OptEntry) {
+    let (wa, wb) = (into.attempts as f64, from.attempts as f64);
+    if wa + wb > 0.0 {
+        into.expected_gain =
+            (into.expected_gain * wa + from.expected_gain * wb) / (wa + wb);
+    }
+    if from.attempts > into.attempts {
+        into.last_gain = from.last_gain;
+    }
+    into.attempts += from.attempts;
+    into.successes += from.successes;
+    into.notes.extend(from.notes.iter().cloned());
+    while into.notes.len() > MAX_NOTES {
+        into.notes.remove(0);
+    }
+    if into.origin != from.origin {
+        into.origin = None;
+    }
+}
+
+/// Fold `from`'s record into an existing state entry.
+fn merge_state(into: &mut StateEntry, from: &StateEntry) {
+    into.visits += from.visits;
+    for o in &from.opts {
+        match into.opt_index(o.technique) {
+            Some(i) => merge_opt(&mut into.opts[i], o),
+            None => into.push_opt(o.clone()),
+        }
+    }
+}
+
+/// Deterministically merge N KBs into one.
+///
+/// States appear in first-occurrence order across `kbs` (first KB's
+/// order, then each later KB's novel states in its own order); the same
+/// rule orders techniques within a state. Conflicting scores resolve by
+/// observed-speedup evidence (attempts-weighted). `updates` counters add.
+/// The result's `arch` is kept only when every input agrees on it, and
+/// its `lineage` is a single fresh `merge(…)` record (input lineages
+/// describe histories the merged evidence no longer separates).
+pub fn merge(kbs: &[KnowledgeBase]) -> KnowledgeBase {
+    let mut out = KnowledgeBase::empty();
+    for kb in kbs {
+        out.updates += kb.updates;
+        for s in &kb.states {
+            match out.find_state(s.sig) {
+                Some(i) => merge_state(&mut out.states[i], s),
+                None => {
+                    out.insert_state(s.clone());
+                }
+            }
+        }
+    }
+    let arch_agrees = kbs
+        .first()
+        .map(|k| kbs.iter().all(|x| x.arch == k.arch))
+        .unwrap_or(false);
+    if arch_agrees {
+        out.arch = kbs[0].arch.clone();
+    }
+    out.lineage.push(format!(
+        "merge({} inputs, {} states)",
+        kbs.len(),
+        out.states.len()
+    ));
+    out
+}
+
+/// Prune dominated entries under `policy`, returning the compacted KB.
+///
+/// An entry is pruned iff it has at least `min_attempts` of evidence AND
+/// its expected gain sits below `gain_floor` — *unless* it is the state's
+/// best-evidence (most attempts) or best-gain entry, which always
+/// survive. Surviving notes are truncated to the newest `max_notes`.
+/// States, visits, and the `updates` counter are preserved; compaction is
+/// idempotent (a second pass under the same policy changes nothing).
+pub fn compact(kb: &KnowledgeBase, policy: &CompactPolicy) -> KnowledgeBase {
+    let mut out = KnowledgeBase::empty();
+    out.updates = kb.updates;
+    out.arch = kb.arch.clone();
+    out.lineage = kb.lineage.clone();
+    let mut kept_total = 0usize;
+    let mut entries_total = 0usize;
+    for s in &kb.states {
+        let best_gain = s
+            .opts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.expected_gain.total_cmp(&b.1.expected_gain))
+            .map(|(i, _)| i);
+        let best_evidence = s
+            .opts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, o)| o.attempts)
+            .map(|(i, _)| i);
+        let mut entry = StateEntry::new(s.sig);
+        entry.visits = s.visits;
+        for (i, o) in s.opts.iter().enumerate() {
+            entries_total += 1;
+            let protected = Some(i) == best_gain || Some(i) == best_evidence;
+            let dominated =
+                o.attempts >= policy.min_attempts && o.expected_gain < policy.gain_floor;
+            if dominated && !protected {
+                continue;
+            }
+            kept_total += 1;
+            let mut o = o.clone();
+            while o.notes.len() > policy.max_notes {
+                o.notes.remove(0);
+            }
+            entry.push_opt(o);
+        }
+        out.insert_state(entry);
+    }
+    out.lineage.push(format!(
+        "compact(min_attempts={}, gain_floor={}, {}/{} entries kept)",
+        policy.min_attempts, policy.gain_floor, kept_total, entries_total
+    ));
+    out
+}
+
+/// Transfer a KB grown on `from` to target generation `to`.
+///
+/// Every state signature is re-keyed through the arch model's scaling
+/// hints: when `to` relieves the state's primary bottleneck more than
+/// `rekey_threshold ×` the relief of its secondary
+/// ([`GpuArch::relief_ratio`]), primary and secondary swap — the freshly
+/// relieved resource stops being the binding constraint. Re-keyed
+/// collisions merge by evidence. Every entry is demoted to a *prior*:
+/// expected gain decays toward parity by `policy.decay`,
+/// attempts/successes/visits reset to zero (they count native evidence
+/// only), and [`OptEntry::origin`] records the source arch — unless the
+/// entry was already a transferred prior, in which case its original
+/// provenance is kept. Gradient notes ride along: they are the
+/// natural-language knowledge worth carrying across generations.
+pub fn transfer(
+    kb: &KnowledgeBase,
+    from: &GpuArch,
+    to: &GpuArch,
+    policy: &TransferPolicy,
+) -> KnowledgeBase {
+    let mut out = KnowledgeBase::empty();
+    out.updates = kb.updates;
+    out.arch = Some(to.name.to_string());
+    out.lineage = kb.lineage.clone();
+    let mut rekeyed = 0usize;
+    for s in &kb.states {
+        let rp = from.relief_ratio(to, s.sig.primary);
+        let rs = from.relief_ratio(to, s.sig.secondary);
+        let mut sig = s.sig;
+        if rp > policy.rekey_threshold * rs {
+            std::mem::swap(&mut sig.primary, &mut sig.secondary);
+            rekeyed += 1;
+        }
+        let mut entry = StateEntry::new(sig);
+        for o in &s.opts {
+            let mut o = o.clone();
+            o.expected_gain = 1.0 + (o.expected_gain - 1.0) * policy.decay;
+            o.attempts = 0;
+            o.successes = 0;
+            o.last_gain = 1.0;
+            o.origin.get_or_insert_with(|| from.name.to_string());
+            match entry.opt_index(o.technique) {
+                Some(i) => merge_opt(&mut entry.opts[i], &o),
+                None => entry.push_opt(o),
+            }
+        }
+        match out.find_state(sig) {
+            Some(i) => merge_state(&mut out.states[i], &entry),
+            None => {
+                out.insert_state(entry);
+            }
+        }
+    }
+    out.lineage.push(format!(
+        "transfer({}->{}, decay={}, {} states re-keyed)",
+        from.name, to.name, policy.decay, rekeyed
+    ));
+    out
+}
+
+/// Build a warm-start θ₀ for a run on `target` from prior KBs.
+///
+/// Each prior whose recorded [`KnowledgeBase::arch`] names a *different*
+/// known architecture is [`transfer`]red to `target` first; priors
+/// already native to `target` (or with no / unknown recorded arch) pass
+/// through untouched. The prepared set is then [`merge`]d. This is the
+/// entry point behind `icrl::driver::warm_start_kb`, the CLI's
+/// `--warm-start`, and the config file's `warm_start` list.
+pub fn warm_start(
+    priors: &[KnowledgeBase],
+    target: &GpuArch,
+    policy: &TransferPolicy,
+) -> KnowledgeBase {
+    let prepared: Vec<KnowledgeBase> = priors
+        .iter()
+        .map(|p| match p.arch.as_deref() {
+            Some(a) if a != target.name => match GpuArch::by_name(a) {
+                Some(src) => transfer(p, &src, target, policy),
+                None => p.clone(),
+            },
+            _ => p.clone(),
+        })
+        .collect();
+    let mut kb = merge(&prepared);
+    kb.arch = Some(target.name.to_string());
+    kb.lineage
+        .push(format!("warm_start({} priors -> {})", priors.len(), target.name));
+    kb
+}
+
+/// Aggregate numbers for one KB — what `kernelblaster kb stats` prints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KbStats {
+    /// Distinct performance states recorded.
+    pub states: usize,
+    /// Total (state, technique) score entries.
+    pub entries: usize,
+    /// Native optimization attempts recorded across all entries.
+    pub attempts: usize,
+    /// Attempts that measured a real gain.
+    pub successes: usize,
+    /// Entries that are transferred priors (`origin` set).
+    pub transferred: usize,
+    /// Entries with no native evidence yet (attempts == 0).
+    pub untried: usize,
+    /// Parameter updates integrated over the KB's lifetime.
+    pub updates: usize,
+    /// Serialized footprint in bytes.
+    pub size_bytes: usize,
+    /// Architecture of the KB's native evidence, if recorded.
+    pub arch: Option<String>,
+    /// Lifecycle audit trail.
+    pub lineage: Vec<String>,
+}
+
+/// Compute [`KbStats`] for a KB.
+pub fn stats(kb: &KnowledgeBase) -> KbStats {
+    let mut entries = 0;
+    let mut attempts = 0;
+    let mut successes = 0;
+    let mut transferred = 0;
+    let mut untried = 0;
+    for s in &kb.states {
+        for o in &s.opts {
+            entries += 1;
+            attempts += o.attempts;
+            successes += o.successes;
+            if o.origin.is_some() {
+                transferred += 1;
+            }
+            if o.attempts == 0 {
+                untried += 1;
+            }
+        }
+    }
+    KbStats {
+        states: kb.states.len(),
+        entries,
+        attempts,
+        successes,
+        transferred,
+        untried,
+        updates: kb.updates,
+        size_bytes: kb.size_bytes(),
+        arch: kb.arch.clone(),
+        lineage: kb.lineage.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Bottleneck;
+    use crate::kb::{StateSig, WorkloadClass};
+    use crate::opts::Technique;
+
+    fn sig(p: Bottleneck, s: Bottleneck) -> StateSig {
+        StateSig {
+            primary: p,
+            secondary: s,
+            workload: WorkloadClass::ContractionHeavy,
+        }
+    }
+
+    /// A KB with one state and controllable per-technique evidence.
+    fn kb_with(
+        s: StateSig,
+        entries: &[(Technique, f64, usize)], // (tech, gain, attempts)
+    ) -> KnowledgeBase {
+        let mut kb = KnowledgeBase::empty();
+        let m = kb.match_state(s);
+        for &(t, gain, attempts) in entries {
+            let i = m.index();
+            kb.ensure_candidates(i, &[t]);
+            let j = kb.states[i].opt_index(t).unwrap();
+            let o = &mut kb.states[i].opts[j];
+            o.expected_gain = gain;
+            o.attempts = attempts;
+            o.successes = attempts / 2;
+            o.last_gain = gain;
+        }
+        kb
+    }
+
+    #[test]
+    fn merge_weighs_by_evidence() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let a = kb_with(s, &[(Technique::SharedMemoryTiling, 2.0, 3)]);
+        let b = kb_with(s, &[(Technique::SharedMemoryTiling, 1.0, 1)]);
+        let m = merge(&[a, b]);
+        assert_eq!(m.states.len(), 1);
+        let o = &m.states[0].opts[0];
+        // (2.0·3 + 1.0·1) / 4 = 1.75
+        assert!((o.expected_gain - 1.75).abs() < 1e-12);
+        assert_eq!(o.attempts, 4);
+        assert_eq!(m.states[0].visits, 2);
+        assert_eq!(m.lineage.len(), 1);
+    }
+
+    #[test]
+    fn merge_untried_priors_keep_first_value() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let a = kb_with(s, &[(Technique::FastMath, 1.9, 0)]);
+        let b = kb_with(s, &[(Technique::FastMath, 1.1, 0)]);
+        let m = merge(&[a, b]);
+        assert!((m.states[0].opts[0].expected_gain - 1.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_preserves_first_occurrence_order_and_novel_states() {
+        let s1 = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let s2 = sig(Bottleneck::ComputeThroughput, Bottleneck::Occupancy);
+        let a = kb_with(s1, &[(Technique::SharedMemoryTiling, 2.0, 2)]);
+        let b = kb_with(s2, &[(Technique::LoopUnrolling, 1.2, 1)]);
+        let m = merge(&[a, b]);
+        assert_eq!(m.states.len(), 2);
+        assert_eq!(m.states[0].sig, s1);
+        assert_eq!(m.states[1].sig, s2);
+        assert_eq!(m.find_state(s2), Some(1));
+    }
+
+    #[test]
+    fn merge_arch_kept_only_on_agreement() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut a = kb_with(s, &[(Technique::FastMath, 1.2, 1)]);
+        let mut b = a.clone();
+        a.arch = Some("H100".into());
+        b.arch = Some("H100".into());
+        assert_eq!(merge(&[a.clone(), b.clone()]).arch.as_deref(), Some("H100"));
+        b.arch = Some("A100".into());
+        assert_eq!(merge(&[a, b]).arch, None);
+        assert_eq!(merge(&[]).arch, None);
+    }
+
+    #[test]
+    fn compact_prunes_dominated_keeps_protected() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let kb = kb_with(
+            s,
+            &[
+                (Technique::SharedMemoryTiling, 2.0, 3), // best gain
+                (Technique::LoopUnrolling, 0.6, 10),     // best evidence (protected)
+                (Technique::FastMath, 0.7, 5),           // dominated → pruned
+                (Technique::MemoryCoalescing, 0.8, 2),   // too little evidence → kept
+            ],
+        );
+        let c = compact(&kb, &CompactPolicy::default());
+        let techs: Vec<Technique> = c.states[0].opts.iter().map(|o| o.technique).collect();
+        assert!(techs.contains(&Technique::SharedMemoryTiling));
+        assert!(techs.contains(&Technique::LoopUnrolling));
+        assert!(techs.contains(&Technique::MemoryCoalescing));
+        assert!(!techs.contains(&Technique::FastMath));
+        assert_eq!(c.states[0].visits, kb.states[0].visits);
+        // Idempotent on the state content.
+        let c2 = compact(&c, &CompactPolicy::default());
+        assert_eq!(c2.states, c.states);
+    }
+
+    #[test]
+    fn compact_truncates_notes() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut kb = kb_with(s, &[(Technique::FastMath, 1.5, 2)]);
+        kb.states[0].opts[0].notes =
+            vec!["old".into(), "mid".into(), "new".into()];
+        let c = compact(
+            &kb,
+            &CompactPolicy {
+                max_notes: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(c.states[0].opts[0].notes, vec!["new".to_string()]);
+    }
+
+    #[test]
+    fn transfer_rekeys_by_relief_and_marks_priors() {
+        // A6000 → H100: memory bandwidth is relieved ~4.4×, launch
+        // overhead barely moves, so a bandwidth-primary state re-keys.
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let kb = kb_with(s, &[(Technique::SharedMemoryTiling, 3.0, 6)]);
+        let t = transfer(
+            &kb,
+            &GpuArch::a6000(),
+            &GpuArch::h100(),
+            &TransferPolicy::default(),
+        );
+        assert_eq!(t.arch.as_deref(), Some("H100"));
+        assert_eq!(t.states.len(), 1);
+        let ts = &t.states[0];
+        assert_eq!(ts.sig.primary, Bottleneck::LaunchOverhead);
+        assert_eq!(ts.sig.secondary, Bottleneck::MemoryBandwidth);
+        assert_eq!(ts.visits, 0);
+        let o = &ts.opts[0];
+        assert_eq!(o.origin.as_deref(), Some("A6000"));
+        assert_eq!(o.attempts, 0);
+        assert_eq!(o.successes, 0);
+        // 1 + (3−1)·0.5 = 2.0 — decayed toward parity.
+        assert!((o.expected_gain - 2.0).abs() < 1e-12);
+        assert!(t.lineage.last().unwrap().contains("A6000->H100"));
+    }
+
+    #[test]
+    fn transfer_keeps_balanced_states_and_original_provenance() {
+        // Compute-primary/compute-ish secondary: relief ratios are close,
+        // no re-key.
+        let s = sig(Bottleneck::ComputeThroughput, Bottleneck::Transcendental);
+        let mut kb = kb_with(s, &[(Technique::FastMath, 1.8, 4)]);
+        kb.states[0].opts[0].origin = Some("L40S".into());
+        let t = transfer(
+            &kb,
+            &GpuArch::a6000(),
+            &GpuArch::h100(),
+            &TransferPolicy::default(),
+        );
+        assert_eq!(t.states[0].sig, s);
+        // Already-transferred entries keep their root provenance.
+        assert_eq!(t.states[0].opts[0].origin.as_deref(), Some("L40S"));
+    }
+
+    #[test]
+    fn warm_start_transfers_then_merges() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut a = kb_with(s, &[(Technique::SharedMemoryTiling, 2.4, 4)]);
+        a.arch = Some("A6000".into());
+        let mut b = kb_with(s, &[(Technique::LoopUnrolling, 1.3, 2)]);
+        b.arch = Some("H100".into());
+        let target = GpuArch::h100();
+        let w = warm_start(&[a, b], &target, &TransferPolicy::default());
+        assert_eq!(w.arch.as_deref(), Some("H100"));
+        // KB a was transferred (re-keyed + origin-marked), b passed through.
+        let rekeyed = sig(Bottleneck::LaunchOverhead, Bottleneck::MemoryBandwidth);
+        assert!(w.find_state(rekeyed).is_some());
+        assert!(w.find_state(s).is_some());
+        let st = &w.states[w.find_state(rekeyed).unwrap()];
+        assert_eq!(st.opts[0].origin.as_deref(), Some("A6000"));
+        let native = &w.states[w.find_state(s).unwrap()];
+        assert!(native.opts[0].origin.is_none());
+        assert_eq!(native.opts[0].attempts, 2);
+        assert!(w.lineage.iter().any(|l| l.starts_with("warm_start")));
+    }
+
+    #[test]
+    fn stats_counts_provenance() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let kb = kb_with(
+            s,
+            &[
+                (Technique::SharedMemoryTiling, 2.0, 3),
+                (Technique::FastMath, 1.2, 0),
+            ],
+        );
+        let t = transfer(
+            &kb,
+            &GpuArch::a6000(),
+            &GpuArch::h100(),
+            &TransferPolicy::default(),
+        );
+        let st = stats(&t);
+        assert_eq!(st.states, 1);
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.attempts, 0);
+        assert_eq!(st.transferred, 2);
+        assert_eq!(st.untried, 2);
+        assert_eq!(st.arch.as_deref(), Some("H100"));
+        assert!(st.size_bytes > 0);
+        let native = stats(&kb);
+        assert_eq!(native.attempts, 3);
+        assert_eq!(native.transferred, 0);
+        assert_eq!(native.untried, 1);
+    }
+}

@@ -24,7 +24,29 @@
 //! selector both depend on. The indexes are never serialized; loading a
 //! KB rebuilds them (see [`persist`]), so the on-disk format is unchanged
 //! and round-trips byte-identically.
+//!
+//! # Lifecycle (continual cross-arch reuse)
+//!
+//! A KB is no longer bound to one driver run: [`lifecycle`] gives it a
+//! continual life — `merge` folds several grown KBs into one by evidence
+//! weight, `compact` prunes dominated entries, and `transfer` re-keys
+//! states across GPU generations (using [`crate::gpu::GpuArch`] scaling
+//! hints) while demoting entries to decayed-confidence *priors*. Entries
+//! carry [`OptEntry::origin`] provenance and the KB records the
+//! [`KnowledgeBase::arch`] its native evidence came from plus a
+//! [`KnowledgeBase::lineage`] audit trail; all three are optional wire
+//! fields, so pre-lifecycle `kernelblaster-kb-v1` documents still parse
+//! and re-serialize byte-identically.
+//!
+//! Position in the MAIC-RL loop (profile → state-extract → **KB match** →
+//! lower → verify): [`crate::icrl`] matches the extracted
+//! [`StateSig`] here, [`crate::agents::textgrad`] writes measured rewards
+//! back, and [`persist`] is the wire format the CLI's `kb` subcommands and
+//! the lifecycle operate on.
 
+#![deny(missing_docs)]
+
+pub mod lifecycle;
 pub mod persist;
 
 use crate::gpu::Bottleneck;
@@ -37,13 +59,18 @@ use std::collections::HashMap;
 /// the state signature (Fig. 5 keys states by code + performance shape).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum WorkloadClass {
+    /// Matmul/conv work dominates (tensor-core-eligible).
     ContractionHeavy,
+    /// Reductions (softmax, norms, pooling) dominate.
     ReductionHeavy,
+    /// Pure elementwise maps/epilogues.
     Elementwise,
+    /// Both contraction and reduction work present (whole models).
     Mixed,
 }
 
 impl WorkloadClass {
+    /// Stable lowercase name used in the wire format and state ids.
     pub fn name(&self) -> &'static str {
         match self {
             WorkloadClass::ContractionHeavy => "contraction",
@@ -53,6 +80,7 @@ impl WorkloadClass {
         }
     }
 
+    /// Inverse of [`Self::name`]; `None` for unknown names.
     pub fn from_name(s: &str) -> Option<Self> {
         [
             WorkloadClass::ContractionHeavy,
@@ -82,12 +110,17 @@ impl WorkloadClass {
 /// A performance-state signature: the KB key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct StateSig {
+    /// Dominant bottleneck of the profiled kernel set.
     pub primary: Bottleneck,
+    /// Second-strongest bottleneck (disambiguates similar states).
     pub secondary: Bottleneck,
+    /// Coarse workload class from the op census.
     pub workload: WorkloadClass,
 }
 
 impl StateSig {
+    /// Stable textual id, e.g. `memory_bandwidth+launch_overhead/elementwise`
+    /// — the `state` key of the wire format.
     pub fn id(&self) -> String {
         format!(
             "{}+{}/{}",
@@ -97,6 +130,7 @@ impl StateSig {
         )
     }
 
+    /// Inverse of [`Self::id`]; `None` for malformed ids.
     pub fn parse(s: &str) -> Option<StateSig> {
         let (bottlenecks, workload) = s.split_once('/')?;
         let (p, sec) = bottlenecks.split_once('+')?;
@@ -111,22 +145,35 @@ impl StateSig {
 /// Score record for one (state, optimization) pair.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OptEntry {
+    /// The optimization this record scores.
     pub technique: Technique,
     /// Expected speedup (EMA of measured gains; starts at the prior).
     pub expected_gain: f64,
+    /// Times this technique was tried in this state (native evidence
+    /// only; lifecycle `transfer` resets it — transferred entries are
+    /// priors, not observations).
     pub attempts: usize,
+    /// Attempts that measured a real gain (>1.01×).
     pub successes: usize,
     /// Most recent measured gain.
     pub last_gain: f64,
     /// Ring buffer of short gradient notes (max [`MAX_NOTES`]).
     pub notes: Vec<String>,
+    /// Provenance: `None` for evidence observed natively by this KB's
+    /// runs; `Some(arch)` when the entry is a transferred prior whose
+    /// evidence was originally measured on `arch`
+    /// ([`lifecycle::transfer`] sets it; the textual-gradient step cites
+    /// it until native evidence accumulates). Optional on the wire.
+    pub origin: Option<String>,
 }
 
+/// Capacity of the per-entry gradient-note ring buffer.
 pub const MAX_NOTES: usize = 3;
 /// EMA step for score updates (the textual-gradient "learning rate" α).
 pub const SCORE_ALPHA: f64 = 0.35;
 
 impl OptEntry {
+    /// Fresh entry scored at the technique's catalog prior.
     pub fn seeded(technique: Technique) -> Self {
         OptEntry {
             technique,
@@ -135,6 +182,7 @@ impl OptEntry {
             successes: 0,
             last_gain: 1.0,
             notes: Vec::new(),
+            origin: None,
         }
     }
 
@@ -155,6 +203,7 @@ impl OptEntry {
         }
     }
 
+    /// Fraction of attempts that measured a real gain (NaN if untried).
     pub fn success_rate(&self) -> f64 {
         if self.attempts == 0 {
             return f64::NAN;
@@ -166,7 +215,9 @@ impl OptEntry {
 /// One state's record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StateEntry {
+    /// The performance-state signature keying this record.
     pub sig: StateSig,
+    /// Scored optimization candidates, in discovery order.
     pub opts: Vec<OptEntry>,
     /// Times this state was matched.
     pub visits: usize,
@@ -177,6 +228,7 @@ pub struct StateEntry {
 }
 
 impl StateEntry {
+    /// Empty record for a signature (no candidates, no visits).
     pub fn new(sig: StateSig) -> Self {
         StateEntry {
             sig,
@@ -210,6 +262,15 @@ pub struct KnowledgeBase {
     pub states: Vec<StateEntry>,
     /// Monotone counter of parameter updates (k in Algorithm 2).
     pub updates: usize,
+    /// Name of the [`crate::gpu::GpuArch`] that produced this KB's native
+    /// evidence (stamped by the driver; rewritten by
+    /// [`lifecycle::transfer`]). `None` for pre-lifecycle KBs — the field
+    /// is optional on the wire, preserving v1 byte-stability.
+    pub arch: Option<String>,
+    /// Audit trail of lifecycle operations applied (`merge`/`compact`/
+    /// `transfer`/`warm_start` records). Empty = never lifecycled;
+    /// serialized only when non-empty.
+    pub lineage: Vec<String>,
     /// StateSig → index into `states` (§Perf: O(1) match/find). Derived;
     /// never serialized. On duplicate sigs the first wins, matching the
     /// former linear-scan semantics.
@@ -226,18 +287,21 @@ pub enum Match {
 }
 
 impl Match {
+    /// Index of the matched (or newly appended) state in `states`.
     pub fn index(&self) -> usize {
         match self {
             Match::Known(i) | Match::Discovered(i) => *i,
         }
     }
 
+    /// True when the lookup appended a new state.
     pub fn is_discovery(&self) -> bool {
         matches!(self, Match::Discovered(_))
     }
 }
 
 impl KnowledgeBase {
+    /// A blank θ₀: no states, no updates, no lineage.
     pub fn empty() -> Self {
         Self::default()
     }

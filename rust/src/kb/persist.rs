@@ -1,17 +1,34 @@
-//! Knowledge-Base JSON persistence.
+//! Knowledge-Base JSON persistence — the `kernelblaster-kb-v1` wire format.
 //!
 //! The KB is the cross-task, cross-GPU reusable artifact the paper
 //! releases (§4 contribution 3, Fig. 16 reuses an A6000-trained KB on
-//! other GPUs). Format: a single ordered-JSON document, human-diffable.
+//! other GPUs). Format: a single ordered-JSON document, human-diffable;
+//! the full field spec lives in `rust/ARCHITECTURE.md`.
+//!
+//! Lifecycle metadata (`arch`, `lineage` at the root; `origin` per
+//! optimization entry — see [`super::lifecycle`]) is strictly optional:
+//! the fields are emitted only when set, so any pre-lifecycle v1 document
+//! parses and re-serializes **byte-identically**, and parse → serialize
+//! is the identity on every v1 document this crate ever wrote.
 
 use super::{KnowledgeBase, OptEntry, StateEntry, StateSig};
 use crate::opts::Technique;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
 
+/// Serialize a KB into the ordered-JSON v1 document.
 pub fn to_json(kb: &KnowledgeBase) -> Json {
     let mut root = JsonObj::new();
     root.set("format", "kernelblaster-kb-v1");
+    if let Some(arch) = &kb.arch {
+        root.set("arch", arch.as_str());
+    }
+    if !kb.lineage.is_empty() {
+        root.set(
+            "lineage",
+            Json::Arr(kb.lineage.iter().map(|l| Json::Str(l.clone())).collect()),
+        );
+    }
     root.set("updates", kb.updates);
     let states: Vec<Json> = kb.states.iter().map(state_to_json).collect();
     root.set("states", Json::Arr(states));
@@ -34,6 +51,9 @@ fn opt_to_json(e: &OptEntry) -> Json {
     o.set("attempts", e.attempts);
     o.set("successes", e.successes);
     o.set("last_gain", round3(e.last_gain));
+    if let Some(origin) = &e.origin {
+        o.set("origin", origin.as_str());
+    }
     if !e.notes.is_empty() {
         o.set(
             "notes",
@@ -47,16 +67,22 @@ fn round3(x: f64) -> f64 {
     (x * 1000.0).round() / 1000.0
 }
 
+/// Everything that can go wrong loading/saving a KB document.
 #[derive(Debug, thiserror::Error)]
 pub enum PersistError {
+    /// Filesystem failure reading or writing the document.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
+    /// The file is not valid JSON.
     #[error("json: {0}")]
     Json(#[from] crate::util::json::JsonError),
+    /// Valid JSON, but not a well-formed `kernelblaster-kb-v1` document.
     #[error("schema: {0}")]
     Schema(String),
 }
 
+/// Parse a v1 document back into a [`KnowledgeBase`] (rebuilding the
+/// derived hash indexes, which are never serialized).
 pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
     let bad = |m: &str| PersistError::Schema(m.to_string());
     let fmt = j
@@ -67,6 +93,13 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
         return Err(bad(&format!("unknown format '{fmt}'")));
     }
     let mut kb = KnowledgeBase::empty();
+    kb.arch = j.get("arch").and_then(Json::as_str).map(String::from);
+    if let Some(lineage) = j.get("lineage").and_then(Json::as_arr) {
+        kb.lineage = lineage
+            .iter()
+            .filter_map(|l| l.as_str().map(String::from))
+            .collect();
+    }
     kb.updates = j.get("updates").and_then(Json::as_usize).unwrap_or(0);
     for sj in j
         .get("states")
@@ -100,6 +133,7 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
                     attempts: oj.get("attempts").and_then(Json::as_usize).unwrap_or(0),
                     successes: oj.get("successes").and_then(Json::as_usize).unwrap_or(0),
                     last_gain: oj.get("last_gain").and_then(Json::as_f64).unwrap_or(1.0),
+                    origin: oj.get("origin").and_then(Json::as_str).map(String::from),
                     notes: oj
                         .get("notes")
                         .and_then(Json::as_arr)
@@ -194,6 +228,28 @@ mod tests {
                 assert_eq!(back.states[i].opt_index(o.technique), Some(j));
             }
         }
+    }
+
+    #[test]
+    fn lifecycle_metadata_roundtrips_and_stays_optional() {
+        let mut kb = busy_kb();
+        // Without lifecycle metadata the optional fields never hit the
+        // wire — pre-lifecycle v1 documents stay byte-identical.
+        let plain = to_json(&kb).to_string_pretty();
+        assert!(!plain.contains("\"arch\":"));
+        assert!(!plain.contains("\"lineage\":"));
+        assert!(!plain.contains("\"origin\":"));
+        kb.arch = Some("H100".into());
+        kb.lineage.push("transfer(A6000->H100)".into());
+        kb.states[0].opts[0].origin = Some("A6000".into());
+        let first = to_json(&kb).to_string_pretty();
+        let back = from_json(&Json::parse(&first).unwrap()).unwrap();
+        assert_eq!(back.arch.as_deref(), Some("H100"));
+        assert_eq!(back.lineage, kb.lineage);
+        assert_eq!(back.states[0].opts[0].origin.as_deref(), Some("A6000"));
+        assert!(back.states[0].opts[1].origin.is_none());
+        // Parse → serialize stays the identity with metadata present too.
+        assert_eq!(first, to_json(&back).to_string_pretty());
     }
 
     #[test]

@@ -7,8 +7,11 @@ use super::{KernelGraph, OpKind, Shape, ValueRef};
 /// Cost of a single op at its shapes.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpCost {
+    /// Floating-point operations performed.
     pub flops: f64,
+    /// Bytes read from memory.
     pub bytes_in: f64,
+    /// Bytes written to memory.
     pub bytes_out: f64,
     /// Fraction of flops that are transcendental (exp/tanh/…): they run on
     /// the SFU at lower throughput.
@@ -16,6 +19,7 @@ pub struct OpCost {
 }
 
 impl OpCost {
+    /// Total bytes moved.
     pub fn bytes_total(&self) -> f64 {
         self.bytes_in + self.bytes_out
     }

@@ -39,16 +39,20 @@ use crate::util::rng::Rng;
 /// A dense f32 tensor in row-major layout.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Logical shape of the buffer.
     pub shape: Shape,
+    /// Elements in row-major order (`shape.numel()` of them).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Wrap a buffer (panics unless `data.len() == shape.numel()`).
     pub fn new(shape: Shape, data: Vec<f32>) -> Self {
         assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
         Self { shape, data }
     }
 
+    /// All-zeros tensor of a shape.
     pub fn zeros(shape: Shape) -> Self {
         let n = shape.numel();
         Self {
@@ -57,6 +61,7 @@ impl Tensor {
         }
     }
 
+    /// Uniform random tensor in [-1, 1) — verification inputs.
     pub fn random(shape: Shape, rng: &mut Rng) -> Self {
         let n = shape.numel();
         Self {
@@ -76,14 +81,20 @@ fn row_major_strides(shape: &Shape) -> Vec<usize> {
     s
 }
 
+/// Execution failures (the oracle's analog of a CUDA launch failure).
 #[derive(Debug, thiserror::Error)]
 pub enum InterpError {
+    /// Too few input tensors supplied (the count that was supplied).
     #[error("missing input {0}")]
     MissingInput(usize),
+    /// An input tensor's shape disagrees with the graph's spec.
     #[error("input {index} shape mismatch: expected {expected}, got {got}")]
     InputShape {
+        /// Which input.
         index: usize,
+        /// Shape the graph declares.
         expected: String,
+        /// Shape actually supplied.
         got: String,
     },
 }
@@ -121,6 +132,7 @@ pub struct ExecContext {
 }
 
 impl ExecContext {
+    /// A fresh arena with an empty plan and buffer pool.
     pub fn new() -> Self {
         Self::default()
     }

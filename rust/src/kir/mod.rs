@@ -13,6 +13,15 @@
 //! - a CUDA-like source renderer ([`render`]) — used for token accounting
 //!   and the soft-verification pass,
 //! - per-op cost queries ([`cost`]) — consumed by the GPU performance model.
+//!
+//! Position in the MAIC-RL loop (profile → state-extract → KB-match →
+//! **lower** → **verify**): the optimization catalog ([`crate::opts`])
+//! rewrites (graph, schedule) pairs, the harness ([`crate::harness`])
+//! checks them against [`interp`], the GPU model ([`crate::gpu`])
+//! profiles them through [`cost`], and the task suite ([`crate::tasks`])
+//! is built from [`GraphBuilder`] graphs.
+
+#![deny(missing_docs)]
 
 pub mod cost;
 pub mod interp;
@@ -25,12 +34,16 @@ use std::fmt;
 /// tensor-core (MXU-analog) execution and halve memory traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 32-bit IEEE float (the default; CUDA-core path).
     F32,
+    /// 16-bit IEEE float (tensor-core eligible).
     F16,
+    /// bfloat16 (tensor-core eligible).
     BF16,
 }
 
 impl DType {
+    /// Bytes per element.
     pub fn size_bytes(self) -> usize {
         match self {
             DType::F32 => 4,
@@ -38,6 +51,7 @@ impl DType {
         }
     }
 
+    /// Lowercase type name used in rendering.
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "f32",
@@ -52,22 +66,27 @@ impl DType {
 pub struct Shape(pub Vec<usize>);
 
 impl Shape {
+    /// The rank-0 shape.
     pub fn scalar() -> Self {
         Shape(vec![])
     }
 
+    /// Shape from a dimension list.
     pub fn of(dims: &[usize]) -> Self {
         Shape(dims.to_vec())
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.0.iter().product()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.0.len()
     }
 
+    /// Size of dimension `i` (panics out of range).
     pub fn dim(&self, i: usize) -> usize {
         self.0[i]
     }
@@ -98,8 +117,11 @@ pub enum ValueRef {
 /// A named graph input (parameter or activation).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Input name (rendered into kernel signatures).
     pub name: String,
+    /// Input shape.
     pub shape: Shape,
+    /// Element type.
     pub dtype: DType,
 }
 
@@ -127,10 +149,15 @@ pub enum OpKind {
     BiasAdd {
         axis: usize,
     },
+    /// max(x, 0).
     Relu,
+    /// Gaussian-error linear unit (tanh approximation).
     Gelu,
+    /// Logistic sigmoid.
     Sigmoid,
+    /// Hyperbolic tangent.
     Tanh,
+    /// Elementwise exponential.
     Exp,
     /// x * c
     Scale {
@@ -140,9 +167,11 @@ pub enum OpKind {
     AddConst {
         c: f32,
     },
-    /// Elementwise binary ops over same-shape operands.
+    /// Elementwise addition over same-shape operands.
     Add,
+    /// Elementwise subtraction over same-shape operands.
     Sub,
+    /// Elementwise multiplication over same-shape operands.
     Mul,
     /// x / c (the paper's "division by scalar" epilogues).
     DivConst {
@@ -273,9 +302,13 @@ impl OpKind {
 /// One node in the dataflow graph.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Node {
+    /// The operation computed.
     pub kind: OpKind,
+    /// Operands (inputs or earlier nodes only — topological invariant).
     pub deps: Vec<ValueRef>,
+    /// Output shape (validated against shape inference).
     pub shape: Shape,
+    /// Output element type.
     pub dtype: DType,
 }
 
@@ -283,8 +316,11 @@ pub struct Node {
 /// construction (deps may only reference inputs or earlier nodes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelGraph {
+    /// Graph name (task ids derive kernel names from it).
     pub name: String,
+    /// Named graph inputs.
     pub inputs: Vec<TensorSpec>,
+    /// Operation nodes, topologically ordered.
     pub nodes: Vec<Node>,
     /// Graph outputs (usually one).
     pub outputs: Vec<ValueRef>,
@@ -293,27 +329,44 @@ pub struct KernelGraph {
 /// Errors from graph construction / validation.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum KirError {
+    /// Wrong operand count for an op.
     #[error("op {op} expects {expected} operands, got {got}")]
     Arity {
+        /// Op mnemonic.
         op: String,
+        /// Operands the op requires.
         expected: usize,
+        /// Operands actually supplied.
         got: usize,
     },
+    /// Operand/result shapes are inconsistent.
     #[error("shape mismatch at {context}: {a} vs {b}")]
     ShapeMismatch {
+        /// Where the mismatch was found.
         context: String,
+        /// First shape (rendered).
         a: String,
+        /// Second shape (rendered).
         b: String,
     },
+    /// A value reference is out of range or forward-referencing.
     #[error("invalid reference {0:?}")]
     BadRef(ValueRef),
+    /// An axis argument exceeds the operand's rank.
     #[error("axis {axis} out of range for rank {rank}")]
-    BadAxis { axis: usize, rank: usize },
+    BadAxis {
+        /// The offending axis.
+        axis: usize,
+        /// The operand's rank.
+        rank: usize,
+    },
+    /// Any other structural violation.
     #[error("{0}")]
     Invalid(String),
 }
 
 impl KernelGraph {
+    /// Shape of a referenced value.
     pub fn shape_of(&self, r: ValueRef) -> &Shape {
         match r {
             ValueRef::Input(i) => &self.inputs[i].shape,
@@ -321,6 +374,7 @@ impl KernelGraph {
         }
     }
 
+    /// Element type of a referenced value.
     pub fn dtype_of(&self, r: ValueRef) -> DType {
         match r {
             ValueRef::Input(i) => self.inputs[i].dtype,
@@ -482,15 +536,22 @@ impl KernelGraph {
     }
 }
 
+/// Node counts by coarse op class — the workload axis of the KB's state
+/// signature and the soft verifier's functionality-elimination guard.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct OpCensus {
+    /// Matmul/conv nodes.
     pub contractions: usize,
+    /// Reduction-style nodes.
     pub reductions: usize,
+    /// Cheap elementwise nodes.
     pub elementwise: usize,
+    /// Everything else (transpose, reshape, …).
     pub other: usize,
 }
 
 impl OpCensus {
+    /// Total node count.
     pub fn total(&self) -> usize {
         self.contractions + self.reductions + self.elementwise + self.other
     }
@@ -673,6 +734,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Start a named, empty graph.
     pub fn new(name: &str) -> Self {
         Self {
             graph: KernelGraph {
@@ -684,10 +746,12 @@ impl GraphBuilder {
         }
     }
 
+    /// Declare an f32 graph input.
     pub fn input(&mut self, name: &str, dims: &[usize]) -> ValueRef {
         self.input_typed(name, dims, DType::F32)
     }
 
+    /// Declare a graph input with an explicit element type.
     pub fn input_typed(&mut self, name: &str, dims: &[usize], dtype: DType) -> ValueRef {
         self.graph.inputs.push(TensorSpec {
             name: name.to_string(),
@@ -697,6 +761,8 @@ impl GraphBuilder {
         ValueRef::Input(self.graph.inputs.len() - 1)
     }
 
+    /// Append an op node; its shape is inferred (panics on illegal
+    /// construction — builder misuse is a programming error).
     pub fn op(&mut self, kind: OpKind, deps: &[ValueRef]) -> ValueRef {
         let operand_shapes: Vec<Shape> =
             deps.iter().map(|d| self.graph.shape_of(*d).clone()).collect();
@@ -715,11 +781,13 @@ impl GraphBuilder {
         ValueRef::Node(self.graph.nodes.len() - 1)
     }
 
+    /// Mark a value as a graph output.
     pub fn output(&mut self, r: ValueRef) -> &mut Self {
         self.graph.outputs.push(r);
         self
     }
 
+    /// Validate and return the finished graph (panics if invalid).
     pub fn finish(self) -> KernelGraph {
         let g = self.graph;
         g.validate()

@@ -32,19 +32,26 @@ pub enum MemLayout {
 /// Shared-memory-style tiling of the contraction dimension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Tiling {
+    /// No staging; operands stream straight from global memory.
     None,
     /// Stage operand tiles through scratch memory; `tile` is the K-tile.
-    Shared { tile: usize },
+    Shared {
+        /// K-dimension tile size.
+        tile: usize,
+    },
 }
 
 /// Per-group launch geometry (CUDA grid/block analog).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LaunchConfig {
+    /// Blocks in the grid.
     pub grid: usize,
+    /// Threads per block.
     pub block: usize,
 }
 
 impl LaunchConfig {
+    /// Total threads launched.
     pub fn threads(&self) -> usize {
         self.grid * self.block
     }
@@ -55,7 +62,9 @@ impl LaunchConfig {
 /// rewrites).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GroupOpts {
+    /// Global-memory access layout.
     pub layout: MemLayout,
+    /// Scratch-memory staging of contraction operands.
     pub tiling: Tiling,
     /// Vector width of global loads/stores (1 = scalar, 4 = float4-style).
     pub vector_width: usize,
@@ -113,11 +122,14 @@ impl Default for GroupOpts {
 pub struct FusionGroup {
     /// Node indices, ascending.
     pub nodes: Vec<usize>,
+    /// Launch geometry of the fused kernel.
     pub launch: LaunchConfig,
+    /// Execution attributes the techniques mutate.
     pub opts: GroupOpts,
 }
 
 impl FusionGroup {
+    /// One-node group with default opts (naive schedule building block).
     pub fn single(node: usize, launch: LaunchConfig) -> Self {
         Self {
             nodes: vec![node],
@@ -130,21 +142,39 @@ impl FusionGroup {
 /// A full execution schedule for a graph.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
+    /// Kernel launches in execution order, partitioning the graph.
     pub groups: Vec<FusionGroup>,
 }
 
+/// Schedule legality violations (the schedule-side "compile errors").
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum ScheduleError {
+    /// A node is scheduled zero or multiple times.
     #[error("node {0} appears in {1} groups (must be exactly 1)")]
     BadPartition(usize, usize),
+    /// A group consumes a value produced by a later group.
     #[error("group {group} reads value from node {producer} scheduled later")]
-    TopologicalViolation { group: usize, producer: usize },
+    TopologicalViolation {
+        /// The consuming group.
+        group: usize,
+        /// The producing node scheduled too late.
+        producer: usize,
+    },
+    /// A fused group's interior value is consumed outside the group.
     #[error("interior value of node {node} in group {group} escapes the group")]
-    InteriorEscape { group: usize, node: usize },
+    InteriorEscape {
+        /// The group fusing the node.
+        group: usize,
+        /// The node whose value escapes.
+        node: usize,
+    },
+    /// A group schedules no nodes.
     #[error("group {0} is empty")]
     EmptyGroup(usize),
+    /// Grid or block size is zero.
     #[error("invalid launch config in group {0}: grid/block must be positive")]
     BadLaunch(usize),
+    /// Tensor-core execution without its 16-bit + tiling prerequisites.
     #[error("group {0}: tensor_core requires 16-bit dtype and shared tiling")]
     TensorCoreIllegal(usize),
 }

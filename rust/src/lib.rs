@@ -2,8 +2,16 @@
 //! memory-augmented in-context reinforcement learning (MAIC-RL).
 //!
 //! A full-system reproduction of the paper as a three-layer Rust + JAX +
-//! Pallas stack. See DESIGN.md for the system inventory and the
-//! per-experiment index; EXPERIMENTS.md for paper-vs-measured results.
+//! Pallas stack. See ARCHITECTURE.md for the dataflow diagram, the KB
+//! wire-format spec, and the determinism contract; DESIGN.md for the
+//! system inventory and the per-experiment index; EXPERIMENTS.md for
+//! paper-vs-measured results.
+//!
+//! The loop is *continual*: grown KBs outlive their runs through the
+//! [`kb::lifecycle`] subsystem (merge / compact / cross-arch transfer)
+//! and warm-start later runs on other GPU generations
+//! ([`icrl::warm_start_kb`], the CLI's `kb` subcommands, and the
+//! `experiments/continual` scenario).
 //!
 //! Layer map:
 //! - **Layer 3 (this crate)** — the paper's contribution: the MAIC-RL

@@ -1,5 +1,10 @@
 //! Evaluation metrics (paper §4.2): speedup summaries, ValidRate, and the
 //! fast_p distribution.
+//!
+//! Sits *after* the loop: [`crate::icrl`] task runs and
+//! [`crate::baselines`] comparators are scored into [`TaskScore`]s here,
+//! and [`crate::experiments`] / [`crate::cli`] render the summaries.
+//! Statistics come from [`crate::util::stats`].
 
 use crate::util::stats::SpeedupSummary;
 

@@ -3,7 +3,7 @@
 //! schedule), with an applicability predicate and a prior expected gain.
 //!
 //! Two technique classes:
-//! - **schedule techniques** mutate [`GroupOpts`]/launch geometry of one
+//! - **schedule techniques** mutate [`crate::kir::schedule::GroupOpts`]/launch geometry of one
 //!   fusion group (tiling, ILP, vectorization, …);
 //! - **graph techniques** rewrite the dataflow graph itself (kernel fusion,
 //!   algebraic simplification, dead-code elimination, mixed precision) —
@@ -15,6 +15,13 @@
 //! tensor-core tuning ≈1.42×) is *structural* here: `TensorCoreUtilization`
 //! is inapplicable until a tiling technique has run, so the high-yield
 //! sequences the paper discovers are exactly the sequences that are legal.
+//!
+//! Position in the MAIC-RL loop (profile → state-extract → KB-match →
+//! **lower** → verify): the KB ([`crate::kb`]) scores these
+//! [`Technique`]s per state, the lowering agent
+//! ([`crate::agents::lowering`]) applies them through [`apply`] onto
+//! [`crate::kir`] (graph, schedule) pairs, and the harness
+//! ([`crate::harness`]) validates the result.
 
 pub mod apply;
 pub mod catalog;

@@ -1,7 +1,12 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
 //! Rust — the hot path that proves Python never sits on the request path.
+//! Deliberately *outside* the MAIC-RL loop: the optimization path runs
+//! entirely on the [`crate::kir`] interpreter and [`crate::gpu`]
+//! simulator; this module only anchors their cost model against real
+//! Pallas executions (see [`anchors`], driven by the [`crate::cli`]
+//! `calibrate` command).
 //!
-//! The real backend (see [`pjrt`]-gated module) drives the PJRT CPU
+//! The real backend (the `pjrt`-gated module) drives the PJRT CPU
 //! client through the `xla` bindings: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. Artifacts are HLO *text* (see aot.py for

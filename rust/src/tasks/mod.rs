@@ -15,6 +15,12 @@
 //! at reduced shapes (used by the numeric-verification oracle — the same
 //! practice as validating a CUDA kernel on small inputs before timing the
 //! big ones). Graph rewrites are applied to both in lockstep.
+//!
+//! Role in the loop: tasks are the *inputs* to everything — the driver
+//! ([`crate::icrl`]) optimizes them, the harness ([`crate::harness`])
+//! verifies against their graphs, baselines ([`crate::baselines`]) and
+//! experiments ([`crate::experiments`]) score over the same
+//! [`Suite`]. Graphs are built with [`crate::kir::GraphBuilder`].
 
 pub mod level1;
 pub mod level2;

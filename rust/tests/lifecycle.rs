@@ -1,0 +1,225 @@
+//! KB lifecycle property tests over *driver-grown* KBs (not synthetic
+//! fixtures): merge associativity up to evidence order, compact's
+//! never-drop-the-best guarantee + idempotence, and byte-stability of
+//! every lifecycle product through the `kernelblaster-kb-v1` wire format
+//! — the acceptance chain `merge → transfer → bytes` included.
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::HarnessConfig;
+use kernelblaster::icrl::{self, IcrlConfig};
+use kernelblaster::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::tasks::Suite;
+use kernelblaster::util::json::Json;
+
+fn quick_cfg(seed: u64) -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 2,
+        rollout_steps: 4,
+        top_k: 2,
+        harness: HarnessConfig {
+            noise_sigma: 0.0,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Grow a KB by actually optimizing a task with the driver.
+fn grow(task_id: &str, arch: &GpuArch, seed: u64) -> KnowledgeBase {
+    let suite = Suite::full();
+    let task = suite.by_id(task_id).unwrap();
+    let mut kb = KnowledgeBase::empty();
+    let run = icrl::optimize_task(task, arch, &mut kb, &quick_cfg(seed), seed);
+    assert!(run.valid, "{task_id} must produce a valid run");
+    assert!(kb.total_attempts() > 0);
+    kb
+}
+
+/// Serialize to the canonical pretty v1 document.
+fn bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+/// The evidence view of a KB: everything `merge` promises to make
+/// grouping-independent (state order/sigs, technique order, counts,
+/// attempts-weighted gains) — excluding the order-sensitive leftovers
+/// (`last_gain`, note order) and the lineage audit trail.
+fn evidence_view(kb: &KnowledgeBase) -> Vec<(String, usize, Vec<(String, usize, usize, f64)>)> {
+    kb.states
+        .iter()
+        .map(|s| {
+            (
+                s.sig.id(),
+                s.visits,
+                s.opts
+                    .iter()
+                    .map(|o| {
+                        (
+                            o.technique.name().to_string(),
+                            o.attempts,
+                            o.successes,
+                            // 1e-6 grid: float noise from different fold
+                            // groupings is ~1e-15, far below a bucket.
+                            (o.expected_gain * 1e6).round() / 1e6,
+                        )
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn merge_is_associative_up_to_evidence_order() {
+    let arch = GpuArch::a6000();
+    let a = grow("L1/01_matmul_square", &arch, 1);
+    let b = grow("L1/12_softmax", &arch, 2);
+    let c = grow("L2/01_gemm_bias_relu", &arch, 3);
+
+    let left = lifecycle::merge(&[lifecycle::merge(&[a.clone(), b.clone()]), c.clone()]);
+    let right = lifecycle::merge(&[a.clone(), lifecycle::merge(&[b.clone(), c.clone()])]);
+    let flat = lifecycle::merge(&[a.clone(), b.clone(), c.clone()]);
+
+    assert_eq!(evidence_view(&left), evidence_view(&right));
+    assert_eq!(evidence_view(&left), evidence_view(&flat));
+    assert_eq!(left.updates, right.updates);
+    assert_eq!(left.updates, a.updates + b.updates + c.updates);
+    // Inputs grown on the same arch: the merge keeps it.
+    assert_eq!(flat.arch.as_deref(), Some("A6000"));
+    // Evidence is conserved, not duplicated or dropped.
+    assert_eq!(
+        flat.states.iter().flat_map(|s| &s.opts).map(|o| o.attempts).sum::<usize>(),
+        a.total_attempts() + b.total_attempts() + c.total_attempts()
+    );
+}
+
+#[test]
+fn merge_is_idempotent_on_evidence_weights() {
+    // Merging a KB with itself doubles counts but must keep every
+    // expected gain fixed (weighted mean of x with x is x).
+    let arch = GpuArch::l40s();
+    let a = grow("L1/12_softmax", &arch, 7);
+    let doubled = lifecycle::merge(&[a.clone(), a.clone()]);
+    assert_eq!(doubled.states.len(), a.states.len());
+    for (s, d) in a.states.iter().zip(&doubled.states) {
+        assert_eq!(s.sig, d.sig);
+        assert_eq!(d.visits, 2 * s.visits);
+        for (o, m) in s.opts.iter().zip(&d.opts) {
+            assert_eq!(o.technique, m.technique);
+            assert_eq!(m.attempts, 2 * o.attempts);
+            assert!((m.expected_gain - o.expected_gain).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn compact_never_removes_the_best_entry_per_state_and_is_idempotent() {
+    let arch = GpuArch::h100();
+    let kb = lifecycle::merge(&[
+        grow("L1/01_matmul_square", &arch, 4),
+        grow("L1/15_relu", &arch, 5),
+    ]);
+    // Aggressive policy so pruning actually happens somewhere.
+    let policy = CompactPolicy {
+        min_attempts: 1,
+        gain_floor: 1.05,
+        max_notes: 1,
+    };
+    let c = lifecycle::compact(&kb, &policy);
+    assert_eq!(c.states.len(), kb.states.len());
+    assert_eq!(c.updates, kb.updates);
+    for (before, after) in kb.states.iter().zip(&c.states) {
+        assert_eq!(before.sig, after.sig);
+        assert_eq!(before.visits, after.visits);
+        assert!(after.opts.len() <= before.opts.len());
+        if before.opts.is_empty() {
+            continue;
+        }
+        // The best-gain and best-evidence entries survive.
+        let best_gain = before
+            .opts
+            .iter()
+            .max_by(|a, b| a.expected_gain.total_cmp(&b.expected_gain))
+            .unwrap();
+        let best_evidence = before.opts.iter().max_by_key(|o| o.attempts).unwrap();
+        for must in [best_gain, best_evidence] {
+            let kept = after
+                .opts
+                .iter()
+                .find(|o| o.technique == must.technique)
+                .unwrap_or_else(|| panic!("{}: best entry pruned", before.sig.id()));
+            assert_eq!(kept.attempts, must.attempts);
+            assert!((kept.expected_gain - must.expected_gain).abs() < 1e-12);
+        }
+        for o in &after.opts {
+            assert!(o.notes.len() <= policy.max_notes);
+        }
+    }
+    // Idempotent on the state content (lineage grows by one record).
+    let c2 = lifecycle::compact(&c, &policy);
+    assert_eq!(c2.states, c.states);
+    // And the compacted artifact really is smaller or equal on disk.
+    assert!(c.size_bytes() <= kb.size_bytes());
+}
+
+#[test]
+fn merged_then_transferred_kb_roundtrips_byte_stably() {
+    // The acceptance chain: merge two driver-grown KBs, transfer across
+    // two GPU generations, and require parse → serialize to be the
+    // identity on the resulting v1 document at every stage.
+    let src = GpuArch::a6000();
+    let dst = GpuArch::h100();
+    let merged = lifecycle::merge(&[
+        grow("L1/01_matmul_square", &src, 10),
+        grow("L1/12_softmax", &src, 11),
+    ]);
+    let transferred = lifecycle::transfer(&merged, &src, &dst, &TransferPolicy::default());
+
+    for (label, kb) in [("merged", &merged), ("transferred", &transferred)] {
+        let first = bytes(kb);
+        let back = persist::from_json(&Json::parse(&first).unwrap()).unwrap();
+        assert_eq!(first, bytes(&back), "{label}: parse→serialize not identity");
+    }
+    // Transfer metadata survives the wire.
+    let back = persist::from_json(&Json::parse(&bytes(&transferred)).unwrap()).unwrap();
+    assert_eq!(back.arch.as_deref(), Some("H100"));
+    assert!(back.lineage.iter().any(|l| l.contains("A6000->H100")));
+    assert!(back
+        .states
+        .iter()
+        .flat_map(|s| &s.opts)
+        .all(|o| o.origin.as_deref() == Some("A6000") && o.attempts == 0));
+}
+
+#[test]
+fn warm_start_then_run_then_persist_roundtrips() {
+    // Full continual loop: grow on A, warm-start B, run B, persist —
+    // the KB that comes out the far end still round-trips byte-stably
+    // and carries both native evidence and cited priors.
+    let suite = Suite::full();
+    let task = suite.by_id("L1/12_softmax").unwrap();
+    let src = GpuArch::a6000();
+    let dst = GpuArch::l40s();
+    let grown = grow("L1/12_softmax", &src, 20);
+    let mut warm = icrl::warm_start_kb(&[grown], &dst, &TransferPolicy::default());
+    let run = icrl::optimize_task(task, &dst, &mut warm, &quick_cfg(21), 21);
+    assert!(run.valid);
+    assert_eq!(warm.arch.as_deref(), Some("L40S"));
+    assert!(warm.total_attempts() > 0, "native evidence accumulated");
+    let first = bytes(&warm);
+    let back = persist::from_json(&Json::parse(&first).unwrap()).unwrap();
+    assert_eq!(first, bytes(&back));
+    // The wire carries both provenances: cited priors and native counts.
+    assert_eq!(back.lineage, warm.lineage);
+    assert_eq!(
+        back.states.iter().flat_map(|s| &s.opts).map(|o| o.attempts).sum::<usize>(),
+        warm.total_attempts()
+    );
+    assert!(back
+        .states
+        .iter()
+        .flat_map(|s| &s.opts)
+        .any(|o| o.origin.as_deref() == Some("A6000")));
+}
