@@ -33,7 +33,7 @@ pub fn extract(
     let dominant = report
         .kernels
         .iter()
-        .max_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap());
+        .max_by(|a, b| a.time_us.total_cmp(&b.time_us));
     let (mut primary, mut secondary) = match dominant {
         Some(k) => (k.primary, k.secondary),
         None => (Bottleneck::LaunchOverhead, Bottleneck::LaunchOverhead),

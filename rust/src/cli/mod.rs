@@ -5,6 +5,11 @@
 //! - `optimize --task <id> [--gpu NAME] [--trajectories N] [--steps N]
 //!            [--vendor] [--kb PATH] [--warm-start P1,P2,…]
 //!            [--save-kb PATH] [--seed N]`
+//! - `batch --jobs FILE [--gpu NAME] [--workers N] [--epoch-size N]
+//!         [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
+//!         [--save-kb PATH] [--config run.json] …` — fleet batch serving:
+//!   streams per-task results as JSON-lines, checkpoints the shared KB
+//!   crash-safely (see [`crate::icrl::fleet`])
 //! - `suite --level <L1|L2|L3> [--gpu NAME] [--quick] [--seed N]`
 //! - `calibrate [--iters N]` — PJRT anchor measurement
 //! - `kb <init|inspect|stats> --path PATH` — single-KB inspection
@@ -112,6 +117,10 @@ USAGE:
   kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
                          [--vendor] [--kb PATH] [--warm-start P1,P2,...]
                          [--save-kb PATH] [--seed N]
+  kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
+                      [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
+                      [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
+                      [--vendor] [--config run.json]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
   kernelblaster kb <init|inspect|stats> --path PATH
@@ -125,7 +134,7 @@ USAGE:
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
-  fig19 ablation_mem minimal_agent continual
+  fig19 ablation_mem minimal_agent continual fleet
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -134,6 +143,7 @@ pub fn run(argv: &[String]) -> i32 {
     match args.pos(0) {
         Some("experiment") => cmd_experiment(&args),
         Some("run") => cmd_run(&args),
+        Some("batch") => cmd_batch(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("suite") => cmd_suite(&args),
         Some("calibrate") => cmd_calibrate(&args),
@@ -265,6 +275,236 @@ fn cmd_run(args: &Args) -> i32 {
             return 1;
         }
         eprintln!("saved KB to {p}");
+    }
+    0
+}
+
+/// Parse a batch job file: one task id per line; blank lines and
+/// `#`-comments are skipped.
+fn parse_job_file(path: &Path) -> Result<Vec<String>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect())
+}
+
+/// One task's JSON-lines record for the `batch` stream.
+fn task_jsonl(index: usize, run: &icrl::TaskRun) -> String {
+    let mut o = crate::util::json::JsonObj::new();
+    o.set("event", "task");
+    o.set("index", index);
+    o.set("task", run.task_id.as_str());
+    o.set("valid", run.valid);
+    o.set("naive_time_s", run.naive_time_s);
+    o.set("best_time_s", run.best_time_s);
+    o.set("speedup_vs_naive", run.speedup_vs_naive());
+    o.set("tokens", run.tokens.total());
+    o.set("states_visited", run.states_visited);
+    crate::util::json::Json::Obj(o).to_string_compact()
+}
+
+/// Fleet batch serving: run a job file's tasks concurrently over the
+/// shared KB, streaming per-task JSON-lines to stdout and checkpointing
+/// the KB crash-safely every N commits.
+fn cmd_batch(args: &Args) -> i32 {
+    use crate::icrl::fleet::{self, FleetObserver};
+
+    // Base config (optional file), then flag overrides.
+    let mut cfg = match args.flag("config") {
+        Some(p) => match crate::config::RunConfig::load(Path::new(p)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 1;
+            }
+        },
+        None => crate::config::RunConfig::default(),
+    };
+    if let Some(g) = args.flag("gpu") {
+        cfg.gpu = g.to_string();
+    }
+    cfg.icrl.trajectories = args.usize_flag("trajectories", cfg.icrl.trajectories);
+    cfg.icrl.rollout_steps = args.usize_flag("steps", cfg.icrl.rollout_steps);
+    cfg.icrl.seed = args.u64_flag("seed", cfg.icrl.seed);
+    if args.has("vendor") {
+        cfg.icrl.harness.allow_vendor = true;
+    }
+    cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
+    cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
+    cfg.fleet.checkpoint_every =
+        args.usize_flag("checkpoint-every", cfg.fleet.checkpoint_every);
+    if cfg.fleet.workers == 0 || cfg.fleet.epoch_size == 0 {
+        eprintln!("batch: --workers and --epoch-size must be positive");
+        return 2;
+    }
+    let Some(arch) = GpuArch::by_name(&cfg.gpu) else {
+        eprintln!("unknown GPU '{}' (known: A6000 A100 H100 L40S)", cfg.gpu);
+        return 2;
+    };
+
+    // Task list: the job file wins; a config's `tasks` is the fallback.
+    let ids: Vec<String> = match args.flag("jobs") {
+        Some(p) => match parse_job_file(Path::new(p)) {
+            Ok(ids) => ids,
+            Err(e) => {
+                eprintln!("batch: failed to read job file: {e}");
+                return 1;
+            }
+        },
+        None if !cfg.tasks.is_empty() => cfg.tasks.clone(),
+        None => {
+            eprintln!("batch: need --jobs FILE (one task id per line) or tasks in --config");
+            return 2;
+        }
+    };
+    if ids.is_empty() {
+        eprintln!("batch: job list is empty");
+        return 2;
+    }
+    let suite = Suite::full();
+    let mut tasks = Vec::with_capacity(ids.len());
+    for id in &ids {
+        match suite.by_id(id) {
+            Some(t) => tasks.push(t),
+            None => {
+                eprintln!("batch: unknown task '{id}' (try `kernelblaster list`)");
+                return 2;
+            }
+        }
+    }
+
+    let mut kb = match args.flag("kb").map(String::from).or(cfg.kb_load.clone()) {
+        Some(p) => match load_kb(&p) {
+            Ok(kb) => kb,
+            Err(code) => return code,
+        },
+        None => KnowledgeBase::empty(),
+    };
+    // A config's warm-start priors seed θ₀ exactly as `run` does.
+    if !cfg.warm_start.is_empty() {
+        kb = match assemble_warm_start(
+            std::mem::take(&mut kb),
+            &cfg.warm_start,
+            &arch,
+            &cfg.transfer,
+        ) {
+            Ok(kb) => kb,
+            Err(code) => return code,
+        };
+    }
+    let save_path: Option<String> =
+        args.flag("save-kb").map(String::from).or(cfg.kb_save.clone());
+    // Checkpoints default onto the save path: a crash mid-batch leaves
+    // the latest committed KB where the finished run would have put it.
+    let ckpt_path: Option<PathBuf> = args
+        .flag("checkpoint")
+        .map(PathBuf::from)
+        .or_else(|| save_path.as_ref().map(PathBuf::from));
+    // An explicit --checkpoint with no cadence means "checkpoint": the
+    // densest cadence, not silently nothing.
+    if args.has("checkpoint") && cfg.fleet.checkpoint_every == 0 {
+        cfg.fleet.checkpoint_every = 1;
+        eprintln!("batch: --checkpoint given without --checkpoint-every; defaulting to every commit");
+    }
+    // And the symmetric misuse: a cadence with nowhere to write.
+    if cfg.fleet.checkpoint_every > 0 && ckpt_path.is_none() {
+        eprintln!(
+            "warning: --checkpoint-every {} but no checkpoint destination \
+             (pass --checkpoint PATH or --save-kb PATH); checkpointing disabled",
+            cfg.fleet.checkpoint_every
+        );
+    }
+
+    /// Streams JSON-lines and checkpoints the shared KB on cadence.
+    struct BatchObserver {
+        ckpt_path: Option<PathBuf>,
+        every: usize,
+        last_ckpt: usize,
+        checkpoints: usize,
+    }
+    impl FleetObserver for BatchObserver {
+        fn task_done(&mut self, index: usize, run: &icrl::TaskRun) {
+            println!("{}", task_jsonl(index, run));
+        }
+        fn epoch_committed(&mut self, _epoch: usize, commits: usize, kb: &KnowledgeBase) {
+            let Some(path) = &self.ckpt_path else { return };
+            if self.every == 0 || commits - self.last_ckpt < self.every {
+                return;
+            }
+            match fleet::checkpoint_atomic(kb, path) {
+                Ok(()) => {
+                    self.last_ckpt = commits;
+                    self.checkpoints += 1;
+                    eprintln!("checkpointed KB at {} ({commits} commits)", path.display());
+                }
+                Err(e) => eprintln!("warning: checkpoint failed: {e}"),
+            }
+        }
+    }
+    let mut obs = BatchObserver {
+        ckpt_path,
+        every: cfg.fleet.checkpoint_every,
+        last_ckpt: 0,
+        checkpoints: 0,
+    };
+
+    eprintln!(
+        "batch: {} tasks on {} | {} workers, epochs of {}{}",
+        tasks.len(),
+        arch.name,
+        cfg.fleet.workers,
+        cfg.fleet.epoch_size,
+        if cfg.fleet.checkpoint_every > 0 {
+            format!(", checkpoint every {} commits", cfg.fleet.checkpoint_every)
+        } else {
+            String::new()
+        }
+    );
+    let start = std::time::Instant::now();
+    let outcome =
+        fleet::run_fleet_observed(&tasks, &arch, &mut kb, &cfg.icrl, &cfg.fleet, &mut obs);
+    let elapsed = start.elapsed().as_secs_f64();
+
+    let valid_speedups: Vec<f64> = outcome
+        .runs
+        .iter()
+        .filter(|r| r.valid)
+        .map(|r| r.speedup_vs_naive())
+        .collect();
+    let mut s = crate::util::json::JsonObj::new();
+    s.set("event", "summary");
+    s.set("tasks", outcome.runs.len());
+    s.set("valid", valid_speedups.len());
+    s.set(
+        "geomean_vs_naive",
+        crate::util::stats::geomean(&valid_speedups),
+    );
+    s.set("epochs", outcome.epochs);
+    s.set("commits", outcome.commits);
+    s.set("checkpoints", obs.checkpoints);
+    s.set("elapsed_s", elapsed);
+    s.set(
+        "tasks_per_min",
+        outcome.runs.len() as f64 / (elapsed / 60.0).max(1e-9),
+    );
+    s.set("kb_states", kb.states.len());
+    println!("{}", crate::util::json::Json::Obj(s).to_string_compact());
+
+    if let Some(p) = &save_path {
+        // Atomic like the mid-batch checkpoints: the final write must
+        // never be the one that tears the advertised recovery path.
+        if let Err(e) = fleet::checkpoint_atomic(&kb, Path::new(p)) {
+            eprintln!("failed to save KB to {p}: {e}");
+            return 1;
+        }
+        eprintln!(
+            "saved KB ({}) to {p}",
+            crate::util::human_bytes(kb.size_bytes())
+        );
     }
     0
 }
@@ -518,10 +758,21 @@ fn cmd_kb(args: &Args) -> i32 {
             let mut t =
                 Table::new(&["state", "visits", "opts", "best technique", "gain", "origin"]);
             for s in &kb.states {
+                // A hand-edited KB with a NaN gain must not crash `kb
+                // inspect`, and must not win "best technique" either
+                // (total_cmp alone would rank positive NaN above +inf) —
+                // non-finite gains sort below everything.
+                let rank = |o: &&crate::kb::OptEntry| {
+                    if o.expected_gain.is_finite() {
+                        o.expected_gain
+                    } else {
+                        f64::NEG_INFINITY
+                    }
+                };
                 let best = s
                     .opts
                     .iter()
-                    .max_by(|a, b| a.expected_gain.partial_cmp(&b.expected_gain).unwrap());
+                    .max_by(|a, b| rank(a).total_cmp(&rank(b)));
                 t.add_row(vec![
                     s.sig.id(),
                     s.visits.to_string(),
@@ -831,6 +1082,58 @@ mod tests {
         let kb = persist::load(Path::new(&out)).unwrap();
         assert_eq!(kb.arch.as_deref(), Some("H100"));
         assert!(kb.lineage.iter().any(|l| l.starts_with("warm_start")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_end_to_end_streams_checkpoints_and_saves() {
+        let dir = std::env::temp_dir().join("kb_cli_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(
+            &jobs,
+            "# smoke batch\nL1/12_softmax\n\nL1/15_relu\nL1/01_matmul_square\n",
+        )
+        .unwrap();
+        let out = dir.join("kb.json");
+        let (jobs_s, out_s) = (jobs.to_str().unwrap(), out.to_str().unwrap());
+        assert_eq!(
+            run(&argv(&format!(
+                "batch --jobs {jobs_s} --gpu A100 --workers 2 --epoch-size 2 \
+                 --trajectories 1 --steps 2 --checkpoint-every 1 --save-kb {out_s}"
+            ))),
+            0
+        );
+        let kb = persist::load(&out).unwrap();
+        assert!(kb.total_attempts() > 0, "batch must grow the shared KB");
+        assert_eq!(kb.arch.as_deref(), Some("A100"));
+        assert!(!dir.join("kb.json.tmp").exists(), "tmp renamed away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_rejects_bad_inputs() {
+        let dir = std::env::temp_dir().join("kb_cli_batch_errs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // No job source at all.
+        assert_eq!(run(&argv("batch")), 2);
+        // Unreadable job file.
+        assert_eq!(run(&argv("batch --jobs /nonexistent/jobs.txt")), 1);
+        // Unknown task id in the list.
+        let bogus = dir.join("bogus.txt");
+        std::fs::write(&bogus, "L1/99_not_a_task\n").unwrap();
+        let bogus_s = bogus.to_str().unwrap();
+        assert_eq!(run(&argv(&format!("batch --jobs {bogus_s}"))), 2);
+        // Empty list / bad fleet shape / bad GPU.
+        let empty = dir.join("empty.txt");
+        std::fs::write(&empty, "# nothing\n").unwrap();
+        let empty_s = empty.to_str().unwrap();
+        assert_eq!(run(&argv(&format!("batch --jobs {empty_s}"))), 2);
+        let good = dir.join("good.txt");
+        std::fs::write(&good, "L1/15_relu\n").unwrap();
+        let good_s = good.to_str().unwrap();
+        assert_eq!(run(&argv(&format!("batch --jobs {good_s} --workers 0"))), 2);
+        assert_eq!(run(&argv(&format!("batch --jobs {good_s} --gpu V100"))), 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

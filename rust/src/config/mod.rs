@@ -13,7 +13,7 @@
 use crate::agents::AgentConfig;
 use crate::gpu::GpuArch;
 use crate::harness::HarnessConfig;
-use crate::icrl::{IcrlConfig, KbMode};
+use crate::icrl::{FleetConfig, IcrlConfig, KbMode};
 use crate::kb::lifecycle::TransferPolicy;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
@@ -23,6 +23,9 @@ use std::path::Path;
 pub struct RunConfig {
     pub gpu: String,
     pub icrl: IcrlConfig,
+    /// Batch-serving knobs for `kernelblaster batch` (see
+    /// `icrl::fleet`); ignored by the single-task subcommands.
+    pub fleet: FleetConfig,
     /// Optional KB to load before the run.
     pub kb_load: Option<String>,
     /// Optional path to save the KB after the run.
@@ -42,6 +45,7 @@ impl Default for RunConfig {
         Self {
             gpu: "H100".to_string(),
             icrl: IcrlConfig::default(),
+            fleet: FleetConfig::default(),
             kb_load: None,
             kb_save: None,
             warm_start: Vec::new(),
@@ -85,6 +89,11 @@ impl RunConfig {
             },
         );
         root.set("icrl", icrl);
+        let mut fleet = JsonObj::new();
+        fleet.set("workers", self.fleet.workers);
+        fleet.set("epoch_size", self.fleet.epoch_size);
+        fleet.set("checkpoint_every", self.fleet.checkpoint_every);
+        root.set("fleet", fleet);
         let mut agent = JsonObj::new();
         agent.set("state_misclassify_rate", self.icrl.agent.state_misclassify_rate);
         agent.set("lowering_bug_rate", self.icrl.agent.lowering_bug_rate);
@@ -164,6 +173,23 @@ impl RunConfig {
                 }
             };
         }
+        if let Some(fleet) = j.get("fleet") {
+            let d = FleetConfig::default();
+            cfg.fleet = FleetConfig {
+                workers: fleet
+                    .get("workers")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.workers),
+                epoch_size: fleet
+                    .get("epoch_size")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.epoch_size),
+                checkpoint_every: fleet
+                    .get("checkpoint_every")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.checkpoint_every),
+            };
+        }
         if let Some(agent) = j.get("agent") {
             let d = AgentConfig::default();
             let f = |k: &str, dv: f64| agent.get(k).and_then(Json::as_f64).unwrap_or(dv);
@@ -224,6 +250,11 @@ impl RunConfig {
         if cfg.icrl.trajectories == 0 || cfg.icrl.rollout_steps == 0 || cfg.icrl.top_k == 0 {
             return Err(ConfigError::Invalid(
                 "trajectories/rollout_steps/top_k must be positive".into(),
+            ));
+        }
+        if cfg.fleet.workers == 0 || cfg.fleet.epoch_size == 0 {
+            return Err(ConfigError::Invalid(
+                "fleet.workers/epoch_size must be positive".into(),
             ));
         }
         if !(0.0..=1.0).contains(&cfg.transfer.decay) {
@@ -306,6 +337,26 @@ mod tests {
             r#"{"warm_start":["a.json"],"transfer":{"decay":1.5}}"#,
         )
         .unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fleet_roundtrips_and_validates() {
+        let mut cfg = RunConfig::default();
+        cfg.fleet = FleetConfig {
+            workers: 8,
+            epoch_size: 16,
+            checkpoint_every: 5,
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fleet, cfg.fleet);
+        // Absent section = defaults.
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert_eq!(plain.fleet, FleetConfig::default());
+        // Zero workers/epoch rejected.
+        let j = Json::parse(r#"{"fleet":{"workers":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"fleet":{"epoch_size":0}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
     }
 

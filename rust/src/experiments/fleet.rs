@@ -1,0 +1,309 @@
+//! Fleet batch-serving scenario: throughput and KB-quality parity of the
+//! [`crate::icrl::fleet`] scheduler vs the sequential driver.
+//!
+//! Three arms over the same task list and seed:
+//!
+//! 1. **sequential** — [`crate::icrl::run_suite`], one task at a time,
+//!    in-place KB mutation (the pre-fleet serving mode);
+//! 2. **fleet** — `run_fleet` with a worker pool and multi-task epochs
+//!    (the batch-serving mode; the throughput arm);
+//! 3. **fleet/epoch=1** — the degenerate fleet pipeline that must equal
+//!    the sequential driver **bit-identically** (serialized-KB bytes and
+//!    per-task results compared), the determinism anchor of the fleet's
+//!    commit protocol.
+//!
+//! Reported as a [`Report`] plus machine-readable `BENCH_fleet.json`
+//! (format `kernelblaster-bench-fleet-v1`) with tasks/min for both
+//! serving modes and the parity verdicts — CI runs it at `--quick` scale
+//! and uploads the JSON as an artifact. Wall-clock numbers are
+//! host-dependent; the parity booleans are not.
+
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{self, FleetConfig, IcrlConfig, TaskRun};
+use crate::kb::lifecycle;
+use crate::kb::{persist, KnowledgeBase};
+use crate::tasks::{Level, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+use std::time::Instant;
+
+/// One serving mode's measurement.
+struct Arm {
+    name: &'static str,
+    seconds: f64,
+    runs: Vec<TaskRun>,
+    kb: KnowledgeBase,
+}
+
+impl Arm {
+    fn tasks_per_min(&self) -> f64 {
+        self.runs.len() as f64 / (self.seconds / 60.0).max(1e-9)
+    }
+
+    fn geomean_valid(&self) -> f64 {
+        let v: Vec<f64> = self
+            .runs
+            .iter()
+            .filter(|r| r.valid)
+            .map(|r| r.speedup_vs_naive())
+            .collect();
+        stats::geomean(&v)
+    }
+
+    fn to_json(&self) -> Json {
+        let st = lifecycle::stats(&self.kb);
+        let mut o = JsonObj::new();
+        o.set("seconds", self.seconds);
+        o.set("tasks_per_min", self.tasks_per_min());
+        o.set("geomean_vs_naive", self.geomean_valid());
+        o.set("valid", self.runs.iter().filter(|r| r.valid).count());
+        let mut kb = JsonObj::new();
+        kb.set("states", st.states);
+        kb.set("entries", st.entries);
+        kb.set("attempts", st.attempts);
+        o.set("kb", kb);
+        Json::Obj(o)
+    }
+}
+
+/// Run all three arms over an explicit task list (tests shrink it).
+fn arms(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    cfg: &IcrlConfig,
+    fleet_cfg: &FleetConfig,
+) -> (Arm, Arm, Arm) {
+    let mut kb_seq = KnowledgeBase::empty();
+    let t = Instant::now();
+    let seq_runs = icrl::run_suite(tasks, arch, &mut kb_seq, cfg);
+    let seq = Arm {
+        name: "sequential",
+        seconds: t.elapsed().as_secs_f64(),
+        runs: seq_runs,
+        kb: kb_seq,
+    };
+
+    let mut kb_fleet = KnowledgeBase::empty();
+    let t = Instant::now();
+    let out = icrl::run_fleet(tasks, arch, &mut kb_fleet, cfg, fleet_cfg);
+    let fleet = Arm {
+        name: "fleet",
+        seconds: t.elapsed().as_secs_f64(),
+        runs: out.runs,
+        kb: kb_fleet,
+    };
+
+    let e1_cfg = FleetConfig {
+        epoch_size: 1,
+        ..fleet_cfg.clone()
+    };
+    let mut kb_e1 = KnowledgeBase::empty();
+    let t = Instant::now();
+    let out = icrl::run_fleet(tasks, arch, &mut kb_e1, cfg, &e1_cfg);
+    let e1 = Arm {
+        name: "fleet/epoch=1",
+        seconds: t.elapsed().as_secs_f64(),
+        runs: out.runs,
+        kb: kb_e1,
+    };
+    (seq, fleet, e1)
+}
+
+/// The epoch=1 determinism verdicts, computed once and shared by the
+/// rendered report and the JSON artifact (they must never disagree).
+struct Parity {
+    kb_bytes_identical: bool,
+    runs_identical: bool,
+}
+
+impl Parity {
+    fn of(seq: &Arm, e1: &Arm) -> Self {
+        let bytes = |kb: &KnowledgeBase| persist::to_json(kb).to_string_pretty();
+        Self {
+            kb_bytes_identical: bytes(&e1.kb) == bytes(&seq.kb),
+            runs_identical: e1.runs == seq.runs,
+        }
+    }
+}
+
+/// Serialize the measurement into `kernelblaster-bench-fleet-v1`.
+fn write_bench_json(
+    arch: &GpuArch,
+    fleet_cfg: &FleetConfig,
+    n_tasks: usize,
+    seq: &Arm,
+    fleet: &Arm,
+    parity: &Parity,
+    path: &Path,
+) {
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-bench-fleet-v1");
+    root.set("gpu", arch.name);
+    root.set("tasks", n_tasks);
+    root.set("workers", fleet_cfg.workers);
+    root.set("epoch_size", fleet_cfg.epoch_size);
+    root.set("sequential", seq.to_json());
+    root.set("fleet", fleet.to_json());
+    let mut p = JsonObj::new();
+    p.set("epoch1_kb_bytes_identical", parity.kb_bytes_identical);
+    p.set("epoch1_runs_identical", parity.runs_identical);
+    p.set(
+        "fleet_over_seq_geomean",
+        fleet.geomean_valid() / seq.geomean_valid(),
+    );
+    p.set(
+        "speedup_wallclock",
+        seq.seconds / fleet.seconds.max(1e-9),
+    );
+    root.set("parity", p);
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: failed to write {}: {e}", path.display()),
+    }
+}
+
+/// The `fleet` experiment with an explicit JSON output path.
+pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
+    let arch = GpuArch::h100();
+    let cfg = ctx.icrl_cfg(false);
+    let fleet_cfg = FleetConfig {
+        workers: 4,
+        epoch_size: 4,
+        checkpoint_every: 0,
+    };
+    let tasks = ctx.tasks(Level::L1);
+    let (seq, fleet, e1) = arms(&tasks, &arch, &cfg, &fleet_cfg);
+
+    let mut t = Table::new(&[
+        "mode",
+        "tasks/min",
+        "wall s",
+        "geomean vs naive",
+        "KB states",
+        "KB attempts",
+    ]);
+    for arm in [&seq, &fleet, &e1] {
+        let st = lifecycle::stats(&arm.kb);
+        t.add_row(vec![
+            arm.name.to_string(),
+            fnum(arm.tasks_per_min(), 1),
+            fnum(arm.seconds, 2),
+            fnum(arm.geomean_valid(), 3),
+            st.states.to_string(),
+            st.attempts.to_string(),
+        ]);
+    }
+    let parity = Parity::of(&seq, &e1);
+    let (bytes_ok, runs_ok) = (parity.kb_bytes_identical, parity.runs_identical);
+    write_bench_json(&arch, &fleet_cfg, tasks.len(), &seq, &fleet, &parity, out);
+    Report {
+        name: "fleet".into(),
+        sections: vec![Section {
+            title: format!(
+                "Fleet batch serving vs sequential driver ({} L1 tasks, {}, {} workers, \
+                 epochs of {})",
+                tasks.len(),
+                arch.name,
+                fleet_cfg.workers,
+                fleet_cfg.epoch_size
+            ),
+            table: t,
+            plot: None,
+            notes: vec![
+                format!(
+                    "epoch=1 parity vs sequential: KB bytes identical = {bytes_ok}, \
+                     per-task runs identical = {runs_ok} (both must be true)"
+                ),
+                format!(
+                    "throughput: {:.1} -> {:.1} tasks/min ({:.2}x wall-clock); \
+                     KB quality parity fleet/seq geomean = {:.3}",
+                    seq.tasks_per_min(),
+                    fleet.tasks_per_min(),
+                    seq.seconds / fleet.seconds.max(1e-9),
+                    fleet.geomean_valid() / seq.geomean_valid()
+                ),
+                format!("machine-readable: {}", out.display()),
+            ],
+        }],
+    }
+}
+
+/// The `fleet` experiment registry entry — writes `BENCH_fleet.json`
+/// beside the working directory like the continual scenario does.
+pub fn run(ctx: &Ctx) -> Report {
+    run_with_output(ctx, Path::new("BENCH_fleet.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::HarnessConfig;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn fleet_experiment_measures_parity_and_throughput() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let cfg = IcrlConfig {
+            trajectories: 2,
+            rollout_steps: 3,
+            top_k: 2,
+            harness: HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            seed: 9,
+            ..Default::default()
+        };
+        let fleet_cfg = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            checkpoint_every: 0,
+        };
+        let arch = GpuArch::a100();
+        let (seq, fleet, e1) = arms(&tasks, &arch, &cfg, &fleet_cfg);
+        assert_eq!(seq.runs.len(), 3);
+        assert_eq!(fleet.runs.len(), 3);
+        // The determinism anchor: epoch=1 equals the sequential driver.
+        assert_eq!(e1.runs, seq.runs, "epoch=1 TaskRuns diverged");
+        assert_eq!(
+            persist::to_json(&e1.kb).to_string_pretty(),
+            persist::to_json(&seq.kb).to_string_pretty(),
+            "epoch=1 KB bytes diverged"
+        );
+        // The JSON artifact parses and carries the parity verdicts.
+        let dir = std::env::temp_dir().join("kb_fleet_exp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_fleet.json");
+        let parity = Parity::of(&seq, &e1);
+        write_bench_json(&arch, &fleet_cfg, tasks.len(), &seq, &fleet, &parity, &out);
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            j.get("format").and_then(Json::as_str),
+            Some("kernelblaster-bench-fleet-v1")
+        );
+        let parity = j.get("parity").unwrap();
+        assert_eq!(
+            parity.get("epoch1_kb_bytes_identical").and_then(Json::as_bool),
+            Some(true)
+        );
+        assert_eq!(
+            parity.get("epoch1_runs_identical").and_then(Json::as_bool),
+            Some(true)
+        );
+        assert!(j
+            .get("fleet")
+            .and_then(|f| f.get("tasks_per_min"))
+            .and_then(Json::as_f64)
+            .unwrap()
+            > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

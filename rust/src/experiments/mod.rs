@@ -1,5 +1,6 @@
 //! Experiment registry: one regenerator per paper table/figure, plus the
-//! [`continual`] cross-arch lifecycle scenario.
+//! [`continual`] cross-arch lifecycle scenario and the [`fleet`]
+//! batch-serving throughput/parity scenario.
 //!
 //! Every entry produces a [`Report`] — human-readable tables/plots plus
 //! machine-readable CSVs — from the same code paths the CLI
@@ -13,6 +14,7 @@ pub mod cost;
 pub mod distribution;
 pub mod fastp;
 pub mod fidelity;
+pub mod fleet;
 pub mod hyperparams;
 pub mod learning;
 pub mod table3;
@@ -194,6 +196,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("ablation_mem", learning::ablation_mem),
         ("minimal_agent", cost::minimal_agent),
         ("continual", continual::run),
+        ("fleet", fleet::run),
     ]
 }
 

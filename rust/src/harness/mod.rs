@@ -19,8 +19,13 @@
 //! The reference outputs of stage 2 are invariant per (task, seed): the
 //! task graph never changes during a run, while hundreds of candidates are
 //! verified against it. [`VerifyCache`] memoizes those reference outputs
-//! (and the random inputs they were produced from). The ICRL driver owns
-//! one cache per task, warms it once, and hands shared references to every
+//! (and the random inputs they were produced from). Ownership scales with
+//! the serving mode: a one-task run owns one cache
+//! (`icrl::optimize_task`), while each fleet worker owns one cache for
+//! *all* the tasks it serves (`icrl::optimize_task_in` takes the cache by
+//! `&mut`; entries are keyed by task id and [`VerifyCache::warm`] is
+//! idempotent, so repeated task ids in a batch hit the same fixtures).
+//! Within a run the cache is handed out as shared references to every
 //! candidate evaluation — including concurrent ones: entries are `Arc`ed
 //! and reads are lock-free (`&VerifyCache`). The plain [`run`] entry point
 //! stays cache-free for one-shot callers.

@@ -1,0 +1,403 @@
+//! Fleet scheduler: concurrent multi-task serving over a shared KB.
+//!
+//! The paper amortizes exploration across tasks through one Persistent
+//! CUDA Knowledge Base; this module amortizes it across *time* as well —
+//! a batch of optimization requests is served by a bounded worker pool
+//! instead of strictly one task at a time.
+//!
+//! # Dataflow (snapshot → worker → delta → epoch-ordered commit)
+//!
+//! ```text
+//!   task list ──► epochs of `epoch_size` tasks
+//!                     │
+//!        ┌── epoch ───┴──────────────────────────────────────────┐
+//!        │  shared KB ──clone──► read-only snapshot              │
+//!        │      ▲                    │ (same snapshot for every  │
+//!        │      │                    │  task of the epoch)       │
+//!        │      │        ┌───────────┼───────────┐               │
+//!        │      │     worker 0    worker 1 …  worker W-1         │
+//!        │      │     (own VerifyCache, own RNG streams, own     │
+//!        │      │      interpreter arenas — no shared mutable    │
+//!        │      │      state; tasks pulled from a shared queue)  │
+//!        │      │        │           │           │               │
+//!        │      │     optimize_task_delta: clone snapshot, run   │
+//!        │      │     the unmodified driver loop, extract a      │
+//!        │      │     KbDelta of the evidence the run added      │
+//!        │      │        └───────────┼───────────┘               │
+//!        │      │                    ▼                           │
+//!        │      └── committer: lifecycle::apply_delta in TASK    │
+//!        │          ORDER (epoch order), one delta at a time     │
+//!        └───────────────────────────────────────────────────────┘
+//! ```
+//!
+//! # Determinism contract
+//!
+//! `fleet(batch)` is bit-identical to `sequential(batch)` — the same
+//! epoch/snapshot/commit pipeline executed serially — for **any** worker
+//! count, the same contract the driver's `parallel_explore` established
+//! for in-step exploration (see [`crate::icrl::driver`] §Perf):
+//!
+//! - each task's [`TaskRun`] is a pure function of (task, arch, config,
+//!   global task index, epoch snapshot) — never of which worker ran it
+//!   or in what order workers finished;
+//! - deltas commit in task order, and [`lifecycle::apply_delta`] is
+//!   deterministic, so the shared KB after every epoch is worker-count
+//!   invariant;
+//! - with `epoch_size == 1` the pipeline degenerates to the sequential
+//!   driver exactly: one delta per epoch applies to its own base, which
+//!   [`lifecycle::apply_delta`] replays bit-identically — the final KB
+//!   and every `TaskRun` equal [`crate::icrl::run_suite`]'s.
+//!
+//! `tests/fleet.rs` asserts all three (workers ∈ {1, 2, 8}; serialized
+//! KB bytes compared).
+//!
+//! `epoch_size` trades shared-knowledge freshness for parallelism: tasks
+//! within an epoch cannot see each other's discoveries (they all read
+//! the epoch snapshot), so larger epochs mean more concurrency but
+//! staler retrieval. Worker count never changes results — only wall
+//! clock. `experiments/fleet.rs` measures the throughput side
+//! (tasks/min) and the KB-quality parity, emitting `BENCH_fleet.json`.
+//!
+//! # Checkpointing
+//!
+//! Long batches checkpoint the shared KB every
+//! [`FleetConfig::checkpoint_every`] commits (a commit = one task's
+//! delta folded in). [`checkpoint_atomic`] writes the full
+//! `kernelblaster-kb-v1` document to `<file>.tmp` in the target
+//! directory and atomically renames it over the destination, so a crash
+//! mid-write can never leave a torn KB — readers observe either the
+//! previous checkpoint or the new one, nothing in between.
+
+use super::driver::{optimize_task_delta, optimize_task_in, IcrlConfig, KbMode, TaskRun};
+use crate::gpu::GpuArch;
+use crate::harness::VerifyCache;
+use crate::kb::lifecycle::{self, KbDelta};
+use crate::kb::{persist, KnowledgeBase};
+use crate::tasks::Task;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Fleet scheduling knobs ([`crate::config::RunConfig`] plumbs these
+/// from the `fleet` section of a run config; `kernelblaster batch`
+/// exposes them as flags).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Worker threads serving each epoch (≥ 1). Never affects results —
+    /// only throughput.
+    pub workers: usize,
+    /// Tasks per epoch (≥ 1): every task of an epoch reads the same
+    /// shared-KB snapshot, so this bounds both the available concurrency
+    /// and the staleness of retrieval. `1` reproduces the sequential
+    /// driver exactly.
+    pub epoch_size: usize,
+    /// Checkpoint the shared KB every N commits (0 = never). A commit is
+    /// one task's delta folded into the shared KB.
+    pub checkpoint_every: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            epoch_size: 8,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// What a fleet run produced, beyond the shared KB mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetOutcome {
+    /// Per-task results, in task-list order (same order as
+    /// [`crate::icrl::run_suite`]).
+    pub runs: Vec<TaskRun>,
+    /// Epochs executed.
+    pub epochs: usize,
+    /// Deltas committed into the shared KB (0 in
+    /// [`KbMode::EphemeralPerTask`]).
+    pub commits: usize,
+}
+
+/// Progress hooks for streaming consumers (the `batch` CLI command
+/// streams JSON-lines and checkpoints from these). Default
+/// implementations do nothing.
+pub trait FleetObserver {
+    /// Task `index` (position in the task list) finished and — in
+    /// persistent mode — its delta has been committed.
+    fn task_done(&mut self, _index: usize, _run: &TaskRun) {}
+
+    /// An epoch's deltas have all been folded in. `commits` is the
+    /// running total; `kb` is the shared KB after the fold.
+    fn epoch_committed(&mut self, _epoch: usize, _commits: usize, _kb: &KnowledgeBase) {}
+}
+
+/// The do-nothing observer for callers that only want [`FleetOutcome`].
+pub struct NullObserver;
+
+impl FleetObserver for NullObserver {}
+
+/// Run a batch through the fleet pipeline. See the module docs for the
+/// dataflow and the determinism contract; per-task `run_seed`s are the
+/// global task indices, matching [`crate::icrl::run_suite`].
+pub fn run_fleet(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    fleet: &FleetConfig,
+) -> FleetOutcome {
+    run_fleet_observed(tasks, arch, kb, cfg, fleet, &mut NullObserver)
+}
+
+/// [`run_fleet`] with progress hooks.
+pub fn run_fleet_observed(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    fleet: &FleetConfig,
+    obs: &mut dyn FleetObserver,
+) -> FleetOutcome {
+    let epoch_size = fleet.epoch_size.max(1);
+    let workers = fleet.workers.max(1);
+    let ephemeral = cfg.kb_mode == KbMode::EphemeralPerTask;
+    let mut runs: Vec<TaskRun> = Vec::with_capacity(tasks.len());
+    let mut epochs = 0usize;
+    let mut commits = 0usize;
+    let mut offset = 0usize;
+    for chunk in tasks.chunks(epoch_size) {
+        let results = epoch_results(chunk, offset, arch, kb, cfg, workers, ephemeral);
+        // Lineage lines observed on this epoch's shared snapshot: every
+        // worker of the epoch sees the same snapshot, so a condition
+        // (e.g. the mixed-arch audit flag) is reported once per epoch,
+        // matching the once-per-transition behavior of the sequential
+        // driver. With one task per epoch nothing is stripped — deltas
+        // replay verbatim.
+        let mut epoch_lines: Vec<String> = Vec::new();
+        for (i, (run, mut delta)) in results.into_iter().enumerate() {
+            if !ephemeral {
+                delta.lineage_added.retain(|l| !epoch_lines.contains(l));
+                epoch_lines.extend(delta.lineage_added.iter().cloned());
+                lifecycle::apply_delta(kb, &delta);
+                commits += 1;
+            }
+            obs.task_done(offset + i, &run);
+            runs.push(run);
+        }
+        epochs += 1;
+        obs.epoch_committed(epochs, commits, kb);
+        offset += chunk.len();
+    }
+    FleetOutcome {
+        runs,
+        epochs,
+        commits,
+    }
+}
+
+/// Serve one epoch: the chunk's tasks against a single snapshot, over a
+/// pool of `workers` threads pulling from a shared queue. Results come
+/// back in task order regardless of completion order.
+fn epoch_results(
+    chunk: &[&Task],
+    offset: usize,
+    arch: &GpuArch,
+    snapshot: &KnowledgeBase,
+    cfg: &IcrlConfig,
+    workers: usize,
+    ephemeral: bool,
+) -> Vec<(TaskRun, KbDelta)> {
+    let n = chunk.len();
+    let serve_one = |i: usize, cache: &mut VerifyCache| {
+        let run_seed = (offset + i) as u64;
+        if ephemeral {
+            // The ablation arm starts every task cold and discards the
+            // KB, exactly as run_suite's EphemeralPerTask does — no
+            // delta to extract, nothing to commit.
+            let mut scratch = KnowledgeBase::empty();
+            let run = optimize_task_in(chunk[i], arch, &mut scratch, cfg, run_seed, cache);
+            (run, KbDelta::empty())
+        } else {
+            optimize_task_delta(chunk[i], arch, snapshot, cfg, run_seed, cache)
+        }
+    };
+    if workers <= 1 || n <= 1 {
+        // Thread-free serial path (also the profiling-friendly mode).
+        let mut cache = VerifyCache::new();
+        return (0..n).map(|i| serve_one(i, &mut cache)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<(TaskRun, KbDelta)>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers.min(n))
+            .map(|_| {
+                scope.spawn(|| {
+                    // §Perf: one verification cache per worker, reused
+                    // across every task this worker serves (idempotent
+                    // warm, keyed by task id) — see harness docs.
+                    let mut cache = VerifyCache::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let out = serve_one(i, &mut cache);
+                        *slots[i].lock().expect("slot lock") = Some(out);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("fleet worker panicked");
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("slot lock")
+                .expect("every epoch slot is filled before the scope ends")
+        })
+        .collect()
+}
+
+/// Crash-safe KB checkpoint: write the serialized document to a `.tmp`
+/// sibling, then atomically rename it over `path`. On any error the
+/// previous checkpoint (if one exists) is left untouched.
+pub fn checkpoint_atomic(kb: &KnowledgeBase, path: &Path) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("mkdir: {e}"))?;
+        }
+    }
+    let mut tmp_name = path.file_name().map(|f| f.to_os_string()).ok_or_else(|| {
+        format!("checkpoint path has no file name: {}", path.display())
+    })?;
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    std::fs::write(&tmp, persist::to_json(kb).to_string_pretty())
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::HarnessConfig;
+    use crate::tasks::Suite;
+
+    fn quick_cfg() -> IcrlConfig {
+        IcrlConfig {
+            trajectories: 2,
+            rollout_steps: 3,
+            top_k: 2,
+            harness: HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_runs_batch_in_task_order() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let arch = GpuArch::h100();
+        let mut kb = KnowledgeBase::empty();
+        let fleet = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            checkpoint_every: 0,
+        };
+        let out = run_fleet(&tasks, &arch, &mut kb, &quick_cfg(), &fleet);
+        assert_eq!(out.runs.len(), 3);
+        assert_eq!(out.epochs, 2);
+        assert_eq!(out.commits, 3);
+        for (t, r) in tasks.iter().zip(&out.runs) {
+            assert_eq!(t.id, r.task_id);
+        }
+        assert!(kb.total_attempts() > 0);
+        assert_eq!(kb.arch.as_deref(), Some("H100"));
+    }
+
+    #[test]
+    fn ephemeral_mode_leaves_shared_kb_untouched() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![suite.by_id("L1/15_relu").unwrap()];
+        let arch = GpuArch::a100();
+        let mut kb = KnowledgeBase::empty();
+        let cfg = IcrlConfig {
+            kb_mode: KbMode::EphemeralPerTask,
+            ..quick_cfg()
+        };
+        let out = run_fleet(&tasks, &arch, &mut kb, &cfg, &FleetConfig::default());
+        assert_eq!(out.commits, 0);
+        assert!(kb.states.is_empty());
+        assert_eq!(kb.total_attempts(), 0);
+        assert!(out.runs[0].valid);
+    }
+
+    #[test]
+    fn observer_sees_every_task_and_epoch() {
+        struct Spy {
+            tasks: Vec<usize>,
+            epochs: Vec<(usize, usize)>,
+        }
+        impl FleetObserver for Spy {
+            fn task_done(&mut self, index: usize, _run: &TaskRun) {
+                self.tasks.push(index);
+            }
+            fn epoch_committed(&mut self, epoch: usize, commits: usize, _kb: &KnowledgeBase) {
+                self.epochs.push((epoch, commits));
+            }
+        }
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let arch = GpuArch::l40s();
+        let mut kb = KnowledgeBase::empty();
+        let mut spy = Spy {
+            tasks: vec![],
+            epochs: vec![],
+        };
+        let fleet = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            checkpoint_every: 0,
+        };
+        let _ = run_fleet_observed(&tasks, &arch, &mut kb, &quick_cfg(), &fleet, &mut spy);
+        assert_eq!(spy.tasks, vec![0, 1, 2]);
+        assert_eq!(spy.epochs, vec![(1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn checkpoint_atomic_writes_loadable_kb_and_cleans_tmp() {
+        let dir = std::env::temp_dir().join("kb_fleet_checkpoint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kb.json");
+        let kb = KnowledgeBase::seed_priors();
+        checkpoint_atomic(&kb, &path).unwrap();
+        let back = persist::load(&path).unwrap();
+        assert_eq!(back.states.len(), kb.states.len());
+        assert!(
+            !dir.join("kb.json.tmp").exists(),
+            "tmp file must be renamed away"
+        );
+        // Overwrite is atomic too (same path, new content).
+        let kb2 = KnowledgeBase::empty();
+        checkpoint_atomic(&kb2, &path).unwrap();
+        assert!(persist::load(&path).unwrap().states.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -22,11 +22,20 @@
 //! [`crate::kb::lifecycle`] merge/transfer pipeline, and the driver
 //! stamps the KB with the [`crate::gpu::GpuArch`] it ran on so later
 //! lifecycle hops know where the evidence came from.
+//!
+//! Batches of tasks no longer run strictly one at a time either: the
+//! [`fleet`] scheduler serves many optimization requests concurrently
+//! over a bounded worker pool (snapshot → worker → delta →
+//! epoch-ordered commit), bit-identical to the sequential driver — see
+//! its module docs for the determinism contract.
 
 #![deny(missing_docs)]
 
 pub mod driver;
+pub mod fleet;
 
 pub use driver::{
-    optimize_task, run_suite, warm_start_kb, IcrlConfig, KbMode, StepLog, TaskRun,
+    optimize_task, optimize_task_delta, optimize_task_in, run_suite, warm_start_kb,
+    IcrlConfig, KbMode, StepLog, TaskRun,
 };
+pub use fleet::{run_fleet, run_fleet_observed, FleetConfig, FleetOutcome};

@@ -20,18 +20,28 @@
 //!   native evidence accumulates;
 //! - [`warm_start`] — the composition the driver uses: transfer each
 //!   prior KB to the target arch (when its recorded arch differs), then
-//!   merge, producing the θ₀ for a warm run ([`crate::icrl`]).
+//!   merge, producing the θ₀ for a warm run ([`crate::icrl`]);
+//! - [`extract_delta`] / [`apply_delta`] — the fleet commit protocol
+//!   ([`crate::icrl::fleet`]): a worker runs the driver over a *clone* of
+//!   a shared-KB snapshot, the evidence it added is extracted as a
+//!   [`KbDelta`], and a single committer folds deltas back into the
+//!   shared KB in deterministic epoch order. Applying a delta to the
+//!   exact base it was extracted from replays the worker's mutations
+//!   **bit-identically** (`apply ∘ extract = identity` on driver
+//!   transitions); entries another delta of the same epoch already
+//!   touched fold by the [`merge`] evidence rule instead.
 //!
-//! All four are deterministic pure functions over in-memory KBs; the
+//! All of these are deterministic pure functions over in-memory KBs; the
 //! results round-trip through the `kernelblaster-kb-v1` wire format
 //! ([`super::persist`]) byte-stably. Algebraic contracts (checked by
-//! `tests/lifecycle.rs`): `merge` is associative up to evidence order —
-//! state/technique order, visit/attempt/success counts, and
-//! attempts-weighted expected gains are grouping-independent, while
-//! `last_gain`/notes follow the evidence-heavier side at each fold;
-//! `compact` is idempotent.
+//! `tests/lifecycle.rs` and `tests/fleet.rs`): `merge` is associative up
+//! to evidence order — state/technique order, visit/attempt/success
+//! counts, and attempts-weighted expected gains are grouping-independent,
+//! while `last_gain`/notes follow the evidence-heavier side at each fold;
+//! `compact` is idempotent; `apply_delta ∘ extract_delta` is the identity
+//! on unconflicted bases.
 
-use super::{KnowledgeBase, OptEntry, StateEntry, MAX_NOTES};
+use super::{KnowledgeBase, OptEntry, StateEntry, StateSig, MAX_NOTES};
 use crate::gpu::GpuArch;
 
 /// Tunables for [`compact`].
@@ -300,6 +310,187 @@ pub fn warm_start(
     kb
 }
 
+/// One state's worth of changes in a [`KbDelta`]: the record as it looked
+/// in the snapshot (`base`) and as the worker's run left it (`grown`).
+/// Keeping both sides is what lets [`apply_delta`] distinguish "nobody
+/// else touched this — replay the worker's result exactly" from "another
+/// delta of the same epoch got here first — fold by evidence".
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateDelta {
+    /// Signature of the touched state.
+    pub sig: StateSig,
+    /// Visits the run added (`grown.visits − base.visits`).
+    pub visits_added: usize,
+    /// The snapshot-side record; `None` when the run discovered the
+    /// state (it did not exist in the base).
+    pub base: Option<StateEntry>,
+    /// The full post-run record.
+    pub grown: StateEntry,
+}
+
+/// The evidence one driver run added to a KB, relative to the snapshot it
+/// started from — the unit of the fleet commit protocol
+/// ([`crate::icrl::fleet`]). Produced by [`extract_delta`], consumed by
+/// [`apply_delta`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct KbDelta {
+    /// Arch stamp the run left on the grown KB (the committer adopts it).
+    pub arch: Option<String>,
+    /// Lineage lines the run appended (e.g. a mixed-arch audit flag).
+    pub lineage_added: Vec<String>,
+    /// Parameter updates the run performed (`grown.updates − base.updates`).
+    pub updates_added: usize,
+    /// Touched states, in the grown KB's discovery order.
+    pub states: Vec<StateDelta>,
+}
+
+impl KbDelta {
+    /// The delta of a run that changed nothing.
+    pub fn empty() -> Self {
+        Self {
+            arch: None,
+            lineage_added: Vec::new(),
+            updates_added: 0,
+            states: Vec::new(),
+        }
+    }
+
+    /// True when the run changed nothing (no state touched, no updates,
+    /// no lineage, and no arch re-stamp needed).
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+            && self.updates_added == 0
+            && self.lineage_added.is_empty()
+            && self.arch.is_none()
+    }
+}
+
+/// Extract the evidence `grown` added relative to `base`.
+///
+/// Contract: `grown` must have been produced by running the driver over a
+/// clone of `base` — the driver only *appends* states/opts/notes/lineage
+/// and *increments* counters, which is what makes the suffix arithmetic
+/// below exact. States (and entries) the run never touched are omitted.
+pub fn extract_delta(base: &KnowledgeBase, grown: &KnowledgeBase) -> KbDelta {
+    debug_assert!(grown.states.len() >= base.states.len());
+    debug_assert!(grown.updates >= base.updates);
+    let mut states = Vec::new();
+    for gs in &grown.states {
+        let bs = base.find_state(gs.sig).map(|i| &base.states[i]);
+        match bs {
+            Some(bs) if bs == gs => continue, // untouched
+            _ => states.push(StateDelta {
+                sig: gs.sig,
+                visits_added: gs.visits.saturating_sub(bs.map_or(0, |b| b.visits)),
+                base: bs.cloned(),
+                grown: gs.clone(),
+            }),
+        }
+    }
+    KbDelta {
+        // Carried only when the run actually re-stamped the arch — an
+        // unchanged stamp replays identically without it, and a no-op
+        // run's delta stays `is_empty()`.
+        arch: if grown.arch != base.arch {
+            grown.arch.clone()
+        } else {
+            None
+        },
+        lineage_added: grown.lineage[base.lineage.len().min(grown.lineage.len())..].to_vec(),
+        updates_added: grown.updates.saturating_sub(base.updates),
+        states,
+    }
+}
+
+/// The notes a run appended: `grown` minus the longest prefix that
+/// survives from `base`'s ring buffer (the ring only drops from the
+/// front, so the overlap is a prefix of `grown` that is a suffix of
+/// `base`).
+fn new_notes(base: &[String], grown: &[String]) -> Vec<String> {
+    let overlap = (0..=grown.len().min(base.len()))
+        .rev()
+        .find(|&k| base[base.len() - k..] == grown[..k])
+        .unwrap_or(0);
+    grown[overlap..].to_vec()
+}
+
+/// Fold one worker's [`KbDelta`] into the shared KB — the fleet commit.
+///
+/// Deterministic: the result depends only on the shared KB's current
+/// content and the delta, never on thread scheduling. Per (state,
+/// technique) entry:
+///
+/// - entry unchanged since the delta's base → **exact replay**: the
+///   worker's post-run record replaces it verbatim (this is what makes a
+///   one-task epoch bit-identical to the sequential driver);
+/// - entry already advanced by an earlier delta of the same epoch →
+///   **evidence fold**: the run's *new* attempts/successes/notes merge in
+///   by the [`merge`] conflict rule (attempts-weighted gains).
+///
+/// Lineage lines are appended verbatim (exact replay — a sequential run
+/// re-observing a condition re-records it); a committer folding several
+/// same-snapshot deltas is responsible for dropping the duplicates its
+/// concurrency manufactured ([`crate::icrl::fleet`] dedups within an
+/// epoch). The arch stamp is adopted from the delta.
+pub fn apply_delta(shared: &mut KnowledgeBase, delta: &KbDelta) {
+    for sd in &delta.states {
+        let si = match shared.find_state(sd.sig) {
+            Some(i) => i,
+            None => {
+                shared.insert_state(sd.grown.clone());
+                continue;
+            }
+        };
+        shared.states[si].visits += sd.visits_added;
+        for go in &sd.grown.opts {
+            let bo = sd
+                .base
+                .as_ref()
+                .and_then(|b| b.opt_index(go.technique).map(|k| &b.opts[k]));
+            let entry = &mut shared.states[si];
+            let j = match entry.opt_index(go.technique) {
+                Some(j) => j,
+                None => {
+                    // New in the grown KB and not yet in shared: append.
+                    entry.push_opt(go.clone());
+                    continue;
+                }
+            };
+            match bo {
+                Some(bo) if bo == go => {} // untouched by this run
+                Some(bo) if entry.opts[j] == *bo => {
+                    // Unconflicted: replay the worker's result exactly.
+                    entry.opts[j] = go.clone();
+                }
+                _ => {
+                    // Conflict: fold only the evidence this run added.
+                    let (ba, bs_) = bo.map_or((0, 0), |b| (b.attempts, b.successes));
+                    let evidence = OptEntry {
+                        technique: go.technique,
+                        expected_gain: go.expected_gain,
+                        attempts: go.attempts.saturating_sub(ba),
+                        successes: go.successes.saturating_sub(bs_),
+                        last_gain: go.last_gain,
+                        notes: new_notes(bo.map(|b| b.notes.as_slice()).unwrap_or(&[]), &go.notes),
+                        origin: go.origin.clone(),
+                    };
+                    // A run that only (re-)seeded the entry added no
+                    // evidence — folding would perturb the shared score
+                    // (FP round-trip) and provenance for nothing.
+                    if evidence.attempts > 0 || !evidence.notes.is_empty() {
+                        merge_opt(&mut entry.opts[j], &evidence);
+                    }
+                }
+            }
+        }
+    }
+    shared.updates += delta.updates_added;
+    if delta.arch.is_some() {
+        shared.arch = delta.arch.clone();
+    }
+    shared.lineage.extend(delta.lineage_added.iter().cloned());
+}
+
 /// Aggregate numbers for one KB — what `kernelblaster kb stats` prints.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KbStats {
@@ -549,6 +740,113 @@ mod tests {
         assert!(native.opts[0].origin.is_none());
         assert_eq!(native.opts[0].attempts, 2);
         assert!(w.lineage.iter().any(|l| l.starts_with("warm_start")));
+    }
+
+    #[test]
+    fn delta_roundtrip_replays_mutations_exactly() {
+        // grown = clone(base) + driver-style mutations (visit, score
+        // updates, new opt, new state). apply(extract) must reproduce it.
+        let s1 = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let s2 = sig(Bottleneck::ComputeThroughput, Bottleneck::Occupancy);
+        let mut base = kb_with(s1, &[(Technique::SharedMemoryTiling, 2.0, 3)]);
+        base.arch = Some("A6000".into());
+        let mut grown = base.clone();
+        let m = grown.match_state(s1);
+        grown.update_score(m.index(), Technique::SharedMemoryTiling, 1.7, Some("n1".into()));
+        grown.ensure_candidates(m.index(), &[Technique::FastMath]);
+        let m2 = grown.match_state(s2);
+        grown.update_score(m2.index(), Technique::LoopUnrolling, 1.2, None);
+        grown.arch = Some("H100".into());
+        grown.lineage.push("mixed-arch evidence: test".into());
+
+        let delta = extract_delta(&base, &grown);
+        assert!(!delta.is_empty());
+        assert_eq!(delta.states.len(), 2);
+        assert_eq!(delta.updates_added, 2);
+        assert_eq!(delta.lineage_added, vec!["mixed-arch evidence: test".to_string()]);
+        let mut replayed = base.clone();
+        apply_delta(&mut replayed, &delta);
+        assert_eq!(replayed, grown);
+    }
+
+    #[test]
+    fn delta_of_untouched_kb_is_empty() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut base = kb_with(s, &[(Technique::FastMath, 1.4, 2)]);
+        // Arch-stamped too: an unchanged stamp is not a change.
+        base.arch = Some("H100".into());
+        let delta = extract_delta(&base, &base.clone());
+        assert!(delta.states.is_empty());
+        assert_eq!(delta.updates_added, 0);
+        assert!(delta.arch.is_none());
+        assert!(delta.is_empty());
+        assert!(KbDelta::empty().is_empty());
+        let mut kb = base.clone();
+        apply_delta(&mut kb, &delta);
+        assert_eq!(kb, base);
+    }
+
+    #[test]
+    fn conflicting_deltas_fold_by_evidence() {
+        // Two workers start from the same snapshot and both update the
+        // same entry; the second commit must fold, not overwrite.
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let base = kb_with(s, &[(Technique::SharedMemoryTiling, 2.0, 2)]);
+        let grow = |gain: f64, note: &str| {
+            let mut g = base.clone();
+            g.update_score(0, Technique::SharedMemoryTiling, gain, Some(note.into()));
+            g
+        };
+        let (ga, gb) = (grow(3.0, "a"), grow(1.0, "b"));
+        let (da, db) = (extract_delta(&base, &ga), extract_delta(&base, &gb));
+        let mut shared = base.clone();
+        apply_delta(&mut shared, &da);
+        apply_delta(&mut shared, &db);
+        let o = &shared.states[0].opts[0];
+        // Both runs' attempts land; the gain is the evidence-weighted
+        // fold of worker A's post-run EMA with worker B's new evidence.
+        assert_eq!(o.attempts, 4);
+        assert!(o.expected_gain.is_finite());
+        assert!(o.notes.contains(&"a".to_string()));
+        assert!(o.notes.contains(&"b".to_string()));
+        assert_eq!(shared.updates, base.updates + 2);
+        // Commit order is part of the deterministic contract: same order,
+        // same bytes.
+        let mut shared2 = base.clone();
+        apply_delta(&mut shared2, &da);
+        apply_delta(&mut shared2, &db);
+        assert_eq!(shared, shared2);
+    }
+
+    #[test]
+    fn concurrent_state_discovery_merges() {
+        // Both workers discover the same brand-new state.
+        let s = sig(Bottleneck::ComputeThroughput, Bottleneck::Transcendental);
+        let base = KnowledgeBase::empty();
+        let grow = |gain: f64| {
+            let mut g = base.clone();
+            let m = g.match_state(s);
+            g.update_score(m.index(), Technique::FastMath, gain, None);
+            g
+        };
+        let (ga, gb) = (grow(1.5), grow(2.5));
+        let mut shared = base.clone();
+        apply_delta(&mut shared, &extract_delta(&base, &ga));
+        apply_delta(&mut shared, &extract_delta(&base, &gb));
+        assert_eq!(shared.states.len(), 1);
+        assert_eq!(shared.states[0].visits, 2);
+        assert_eq!(shared.states[0].opts[0].attempts, 2);
+    }
+
+    #[test]
+    fn new_notes_strips_ring_overlap() {
+        let v = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(new_notes(&v(&["a", "b", "c"]), &v(&["c", "d", "e"])), v(&["d", "e"]));
+        assert_eq!(new_notes(&v(&["a"]), &v(&["a"])), v(&[]));
+        assert_eq!(new_notes(&[], &v(&["x"])), v(&["x"]));
+        assert_eq!(new_notes(&v(&["a", "b"]), &v(&["a", "b"])), v(&[]));
+        // No overlap: everything is new.
+        assert_eq!(new_notes(&v(&["a"]), &v(&["b"])), v(&["b"]));
     }
 
     #[test]

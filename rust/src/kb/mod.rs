@@ -187,7 +187,22 @@ impl OptEntry {
     }
 
     /// Integrate a measured gain (the ParameterUpdate step).
+    ///
+    /// A non-finite `measured_gain` (a division artifact upstream) is
+    /// recorded as a failed 0.0-gain attempt instead of being folded
+    /// into the EMA — `expected_gain` stays finite by construction, the
+    /// invariant the selection-weight pool ([`KnowledgeBase::select_top_k`])
+    /// and every `total_cmp` ranking rely on.
     pub fn update(&mut self, measured_gain: f64, note: Option<String>) {
+        debug_assert!(
+            measured_gain.is_finite(),
+            "non-finite measured gain {measured_gain}"
+        );
+        let measured_gain = if measured_gain.is_finite() {
+            measured_gain
+        } else {
+            0.0
+        };
         self.attempts += 1;
         if measured_gain > 1.01 {
             self.successes += 1;
@@ -203,12 +218,15 @@ impl OptEntry {
         }
     }
 
-    /// Fraction of attempts that measured a real gain (NaN if untried).
-    pub fn success_rate(&self) -> f64 {
+    /// Fraction of attempts that measured a real gain; `None` for an
+    /// untried entry. (Explicit untried handling — the former NaN return
+    /// flowed silently into comparisons and weight pools; a caller must
+    /// now decide what "no evidence" means for its ranking.)
+    pub fn success_rate(&self) -> Option<f64> {
         if self.attempts == 0 {
-            return f64::NAN;
+            return None;
         }
-        self.successes as f64 / self.attempts as f64
+        Some(self.successes as f64 / self.attempts as f64)
     }
 }
 
@@ -385,13 +403,24 @@ impl KnowledgeBase {
         // value is realized by the compute technique that follows (§5's
         // prep→compute transitions).
         //
+        // A non-finite expected gain (impossible through `update`, which
+        // guards it, but reachable via a hand-edited KB document) drops
+        // to the exploration floor explicitly — a NaN weight must never
+        // reach `weighted_index` or distort the draw distribution.
+        //
         // §Perf: weights are computed once and shrunk in lockstep with
         // the remaining-candidate list instead of being rebuilt every
         // draw; the rng sees the exact same weight sequence either way.
         let mut remaining: Vec<usize> = (0..pool.len()).collect();
         let mut weights: Vec<f64> = pool
             .iter()
-            .map(|o| (o.expected_gain - 0.9).max(0.15))
+            .map(|o| {
+                if o.expected_gain.is_finite() {
+                    (o.expected_gain - 0.9).max(0.15)
+                } else {
+                    0.15
+                }
+            })
             .collect();
         let mut picked = Vec::new();
         while picked.len() < k && !remaining.is_empty() {
@@ -606,7 +635,58 @@ mod tests {
             e.update(0.5, None);
         }
         assert!((e.expected_gain - 0.5).abs() < 0.05);
-        assert_eq!(e.success_rate(), 0.0);
+        assert_eq!(e.success_rate(), Some(0.0));
+    }
+
+    #[test]
+    fn success_rate_is_explicit_about_untried() {
+        let e = OptEntry::seeded(Technique::FastMath);
+        assert_eq!(e.success_rate(), None);
+        let mut e = e;
+        e.update(2.0, None);
+        assert_eq!(e.success_rate(), Some(1.0));
+    }
+
+    #[test]
+    fn nonfinite_gain_recorded_as_failure_keeps_scores_finite() {
+        // Release-build guard: poisoned measurements must not reach the
+        // EMA (debug builds additionally assert).
+        let mut e = OptEntry::seeded(Technique::SharedMemoryTiling);
+        let prior = e.expected_gain;
+        if cfg!(debug_assertions) {
+            let mut e2 = e.clone();
+            let r = std::panic::catch_unwind(move || {
+                e2.update(f64::NAN, None);
+                e2
+            });
+            assert!(r.is_err(), "debug build must assert on NaN gain");
+            return;
+        }
+        e.update(f64::NAN, None);
+        assert!(e.expected_gain.is_finite());
+        assert!(e.expected_gain < prior, "NaN folds as a failed attempt");
+        assert_eq!(e.last_gain, 0.0);
+        assert_eq!(e.successes, 0);
+        e.update(f64::INFINITY, None);
+        assert!(e.expected_gain.is_finite());
+    }
+
+    #[test]
+    fn select_top_k_survives_nonfinite_scores() {
+        // A hand-edited KB with a NaN/inf expected gain must still draw
+        // distinct techniques with well-formed weights.
+        let mut kb = KnowledgeBase::seed_priors();
+        kb.states[0].opts[0].expected_gain = f64::NAN;
+        kb.states[0].opts[1].expected_gain = f64::INFINITY;
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let picks = kb.select_top_k(0, 3, |_| true, &mut rng);
+            assert_eq!(picks.len(), 3);
+            let mut dedup = picks.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 3);
+        }
     }
 
     #[test]

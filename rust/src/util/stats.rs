@@ -1,8 +1,23 @@
 //! Summary statistics used throughout the evaluation: geometric mean,
 //! median, percentiles, IQR, and the Table-3 style summary block.
 //!
-//! All functions are defined over `&[f64]`; non-finite values are the
-//! caller's bug and will panic in debug builds.
+//! # Degenerate-input convention
+//!
+//! All functions are defined over `&[f64]` and follow one convention in
+//! **both debug and release builds**: an undefined statistic is `NaN`,
+//! never a silently fabricated number.
+//!
+//! - empty input → `NaN` (`mean`, `geomean`, `median`, `percentile`,
+//!   `quartiles`, `min`, `max`, `frac_above`, `stddev`);
+//! - `stddev` additionally returns `NaN` for a single sample (the n−1
+//!   sample variance is undefined);
+//! - `geomean` returns `NaN` when any input is non-finite or ≤ 0 — an
+//!   invalid 0.0 "speedup" must surface as NaN, not inflate the mean.
+//!   Callers aggregating task speedups filter to valid runs first
+//!   (`metrics::summarize` and every `experiments/*` call site do).
+//!
+//! Sorting-based statistics (`percentile`, `quartiles`) still panic on
+//! non-finite input — those are caller bugs, not degenerate data.
 
 /// Arithmetic mean. Returns NaN for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -13,18 +28,14 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// Geometric mean via log-space accumulation (avoids overflow/underflow).
-/// All inputs must be > 0. Returns NaN for empty input.
+/// Returns NaN for empty input, and NaN when any input is non-finite or
+/// ≤ 0 — identically in debug and release builds (a 0.0 from an invalid
+/// run must poison the aggregate visibly, not be clamped away).
 pub fn geomean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
+    if xs.is_empty() || xs.iter().any(|x| !x.is_finite() || *x <= 0.0) {
         return f64::NAN;
     }
-    let log_sum: f64 = xs
-        .iter()
-        .map(|x| {
-            debug_assert!(*x > 0.0, "geomean requires positive values, got {x}");
-            x.max(f64::MIN_POSITIVE).ln()
-        })
-        .sum();
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
     (log_sum / xs.len() as f64).exp()
 }
 
@@ -79,18 +90,29 @@ pub fn iqr(xs: &[f64]) -> f64 {
     q3 - q1
 }
 
+/// Smallest value. Returns NaN for empty input.
 pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest value. Returns NaN for empty input.
 pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
-/// Sample standard deviation (n-1 denominator).
+/// Sample standard deviation (n−1 denominator). Returns NaN for n < 2:
+/// the sample variance is undefined there, and 0.0 would fake perfect
+/// agreement out of no evidence (see the module's degenerate-input
+/// convention).
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
-        return 0.0;
+        return f64::NAN;
     }
     let m = mean(xs);
     let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
@@ -106,6 +128,12 @@ pub fn frac_above(xs: &[f64], threshold: f64) -> f64 {
 }
 
 /// The summary block Table 3 reports for a set of per-task speedups.
+///
+/// Contract: the input is the speedups of *valid* runs only — finite and
+/// strictly positive (`metrics::summarize` applies the valid filter
+/// before calling [`SpeedupSummary::from_speedups`]). An invalid 0.0
+/// sneaking in makes `geomean` NaN by the module convention, which is
+/// the intended loud failure, not a reporting mode.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpeedupSummary {
     pub n: usize,
@@ -179,6 +207,31 @@ mod tests {
     #[test]
     fn geomean_empty_is_nan() {
         assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn geomean_rejects_nonpositive_and_nonfinite_in_all_profiles() {
+        // The old release-build behavior clamped 0.0 to MIN_POSITIVE and
+        // produced a tiny-but-finite geomean; the contract is now NaN in
+        // both profiles (this test has no debug_assert dependence).
+        assert!(geomean(&[1.0, 0.0, 2.0]).is_nan());
+        assert!(geomean(&[-1.0]).is_nan());
+        assert!(geomean(&[1.0, f64::NAN]).is_nan());
+        assert!(geomean(&[1.0, f64::INFINITY]).is_nan());
+        // Valid inputs are unaffected.
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_nan_uniformly() {
+        assert!(mean(&[]).is_nan());
+        assert!(min(&[]).is_nan());
+        assert!(max(&[]).is_nan());
+        assert!(stddev(&[]).is_nan());
+        assert!(stddev(&[3.0]).is_nan(), "sample stddev undefined for n=1");
+        assert!(frac_above(&[], 1.0).is_nan());
+        // n >= 2 still works.
+        assert!((stddev(&[1.0, 3.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Fleet scheduler determinism suite (the acceptance contract of the
+//! batch-serving layer):
+//!
+//! 1. worker-count invariance — `run_fleet` with workers ∈ {1, 2, 8}
+//!    produces byte-identical serialized KBs and identical per-task
+//!    `TaskRun`s for a fixed seed and task list;
+//! 2. sequential equivalence — the epoch=1 fleet pipeline equals
+//!    `icrl::run_suite` bit for bit (KB bytes and runs);
+//! 3. the delta commit protocol round-trips driver-grown KBs exactly;
+//! 4. mid-batch checkpoints are loadable, byte-stable v1 documents.
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::{HarnessConfig, VerifyCache};
+use kernelblaster::icrl::fleet::{self, FleetConfig, FleetObserver};
+use kernelblaster::icrl::{self, IcrlConfig, KbMode};
+use kernelblaster::kb::{lifecycle, persist, KnowledgeBase};
+use kernelblaster::tasks::{Suite, Task};
+
+fn quick_cfg(seed: u64) -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 2,
+        rollout_steps: 3,
+        top_k: 2,
+        harness: HarnessConfig {
+            noise_sigma: 0.0,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    }
+}
+
+/// A mixed batch: several levels, plus a repeated task id (distinct
+/// global indices → distinct run seeds; same verification fixtures →
+/// exercises per-worker cache reuse).
+fn batch(suite: &Suite) -> Vec<&Task> {
+    [
+        "L1/01_matmul_square",
+        "L1/12_softmax",
+        "L2/01_gemm_bias_relu",
+        "L1/15_relu",
+        "L1/12_softmax",
+        "L2/09_mlp_block",
+    ]
+    .iter()
+    .map(|id| suite.by_id(id).unwrap())
+    .collect()
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+#[test]
+fn fleet_is_worker_count_invariant() {
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg(17);
+    let mut baseline: Option<(Vec<icrl::TaskRun>, String)> = None;
+    for workers in [1usize, 2, 8] {
+        let fleet_cfg = FleetConfig {
+            workers,
+            epoch_size: 3,
+            checkpoint_every: 0,
+        };
+        let mut kb = KnowledgeBase::empty();
+        let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);
+        let bytes = kb_bytes(&kb);
+        match &baseline {
+            None => baseline = Some((out.runs, bytes)),
+            Some((runs0, bytes0)) => {
+                assert_eq!(&out.runs, runs0, "{workers} workers: TaskRuns diverged");
+                assert_eq!(&bytes, bytes0, "{workers} workers: KB bytes diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_epoch_one_equals_sequential_driver_bit_for_bit() {
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::a100();
+    let cfg = quick_cfg(23);
+    let mut kb_seq = KnowledgeBase::empty();
+    let seq_runs = icrl::run_suite(&tasks, &arch, &mut kb_seq, &cfg);
+    let fleet_cfg = FleetConfig {
+        workers: 8,
+        epoch_size: 1,
+        checkpoint_every: 0,
+    };
+    let mut kb_fleet = KnowledgeBase::empty();
+    let out = icrl::run_fleet(&tasks, &arch, &mut kb_fleet, &cfg, &fleet_cfg);
+    assert_eq!(out.runs, seq_runs, "per-task results diverged from run_suite");
+    assert_eq!(kb_fleet, kb_seq, "in-memory KBs diverged");
+    assert_eq!(
+        kb_bytes(&kb_fleet),
+        kb_bytes(&kb_seq),
+        "serialized KBs diverged"
+    );
+    assert_eq!(out.commits, tasks.len());
+}
+
+#[test]
+fn fleet_epoch_one_replays_duplicate_lineage_history_exactly() {
+    // A KB whose lineage already contains the mixed-arch line a new run
+    // will push again: the sequential driver records the duplicate, so
+    // the epoch=1 fleet must too (lineage dedup is scoped to the
+    // concurrency inside one epoch, never to pre-existing history).
+    let suite = Suite::full();
+    let tasks: Vec<&Task> = vec![
+        suite.by_id("L1/15_relu").unwrap(),
+        suite.by_id("L1/12_softmax").unwrap(),
+    ];
+    let cfg = quick_cfg(13);
+    // History: A6000 → H100 (pushes the line) → back to A6000.
+    let mut history = KnowledgeBase::empty();
+    let _ = icrl::optimize_task(tasks[0], &GpuArch::a6000(), &mut history, &cfg, 90);
+    let _ = icrl::optimize_task(tasks[0], &GpuArch::h100(), &mut history, &cfg, 91);
+    let _ = icrl::optimize_task(tasks[0], &GpuArch::a6000(), &mut history, &cfg, 92);
+    let count_h100 = |kb: &KnowledgeBase| {
+        kb.lineage
+            .iter()
+            .filter(|l| l.contains("ran on H100"))
+            .count()
+    };
+    assert_eq!(count_h100(&history), 1);
+    // A new H100 batch over this KB re-pushes the same line.
+    let arch = GpuArch::h100();
+    let mut kb_seq = history.clone();
+    let seq_runs = icrl::run_suite(&tasks, &arch, &mut kb_seq, &cfg);
+    assert_eq!(count_h100(&kb_seq), 2, "sequential driver records the duplicate");
+    let mut kb_fleet = history.clone();
+    let out = icrl::run_fleet(
+        &tasks,
+        &arch,
+        &mut kb_fleet,
+        &cfg,
+        &FleetConfig {
+            workers: 2,
+            epoch_size: 1,
+            checkpoint_every: 0,
+        },
+    );
+    assert_eq!(out.runs, seq_runs);
+    assert_eq!(kb_bytes(&kb_fleet), kb_bytes(&kb_seq));
+}
+
+#[test]
+fn fleet_warm_started_batches_are_deterministic_too() {
+    // Worker-count invariance must also hold over a non-empty θ₀ (a
+    // warm-started shared KB with transferred priors).
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg(31);
+    // Grow a prior on another arch and warm-start from it.
+    let src = GpuArch::a6000();
+    let mut prior = KnowledgeBase::empty();
+    let _ = icrl::optimize_task(tasks[0], &src, &mut prior, &cfg, 0);
+    let theta0 = icrl::warm_start_kb(
+        &[prior],
+        &arch,
+        &kernelblaster::kb::lifecycle::TransferPolicy::default(),
+    );
+    let run_with = |workers: usize| {
+        let fleet_cfg = FleetConfig {
+            workers,
+            epoch_size: 4,
+            checkpoint_every: 0,
+        };
+        let mut kb = theta0.clone();
+        let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);
+        (out.runs, kb_bytes(&kb))
+    };
+    let (runs1, bytes1) = run_with(1);
+    let (runs8, bytes8) = run_with(8);
+    assert_eq!(runs1, runs8);
+    assert_eq!(bytes1, bytes8);
+}
+
+#[test]
+fn fleet_ephemeral_mode_matches_run_suite_semantics() {
+    let suite = Suite::full();
+    let tasks: Vec<&Task> = vec![
+        suite.by_id("L1/12_softmax").unwrap(),
+        suite.by_id("L1/15_relu").unwrap(),
+    ];
+    let arch = GpuArch::l40s();
+    let cfg = IcrlConfig {
+        kb_mode: KbMode::EphemeralPerTask,
+        ..quick_cfg(5)
+    };
+    let mut kb_seq = KnowledgeBase::empty();
+    let seq_runs = icrl::run_suite(&tasks, &arch, &mut kb_seq, &cfg);
+    let mut kb_fleet = KnowledgeBase::empty();
+    let out = icrl::run_fleet(
+        &tasks,
+        &arch,
+        &mut kb_fleet,
+        &cfg,
+        &FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            checkpoint_every: 0,
+        },
+    );
+    assert_eq!(out.runs, seq_runs);
+    assert_eq!(out.commits, 0);
+    assert!(kb_fleet.states.is_empty() && kb_seq.states.is_empty());
+}
+
+#[test]
+fn delta_protocol_roundtrips_driver_grown_transitions() {
+    // extract_delta/apply_delta must be the identity on (base → grown)
+    // transitions produced by real driver runs, across a growing KB.
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg(41);
+    let mut kb = KnowledgeBase::empty();
+    let mut cache = VerifyCache::new();
+    for (i, id) in ["L1/01_matmul_square", "L1/12_softmax", "L2/01_gemm_bias_relu"]
+        .iter()
+        .enumerate()
+    {
+        let task = suite.by_id(id).unwrap();
+        let base = kb.clone();
+        let run_seq =
+            icrl::optimize_task_in(task, &arch, &mut kb, &cfg, i as u64, &mut cache);
+        let delta = lifecycle::extract_delta(&base, &kb);
+        let mut replayed = base.clone();
+        lifecycle::apply_delta(&mut replayed, &delta);
+        assert_eq!(replayed, kb, "{id}: delta roundtrip diverged");
+        assert_eq!(kb_bytes(&replayed), kb_bytes(&kb), "{id}: bytes diverged");
+        // And the snapshot-in/delta-out entry point agrees with the
+        // in-place run.
+        let (run_delta, delta2) =
+            icrl::optimize_task_delta(task, &arch, &base, &cfg, i as u64, &mut cache);
+        assert_eq!(run_delta, run_seq, "{id}: TaskRun diverged");
+        assert_eq!(delta2, delta, "{id}: deltas diverged");
+    }
+}
+
+#[test]
+fn batch_cli_is_worker_count_invariant_on_disk() {
+    // The acceptance contract at the CLI surface: `kernelblaster batch`
+    // with workers ∈ {1, 2, 8} leaves byte-identical saved KBs for a
+    // fixed seed, job file, and epoch size.
+    let dir = std::env::temp_dir().join("kb_fleet_cli_det_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs = dir.join("jobs.txt");
+    std::fs::write(
+        &jobs,
+        "L1/01_matmul_square\nL1/12_softmax\nL1/15_relu\nL2/01_gemm_bias_relu\n",
+    )
+    .unwrap();
+    let mut saved: Vec<String> = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let out = dir.join(format!("kb_w{workers}.json"));
+        let argv: Vec<String> = format!(
+            "batch --jobs {} --gpu H100 --workers {workers} --epoch-size 2 \
+             --trajectories 1 --steps 2 --seed 7 --save-kb {}",
+            jobs.to_str().unwrap(),
+            out.to_str().unwrap()
+        )
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+        assert_eq!(kernelblaster::cli::run(&argv), 0, "{workers} workers");
+        saved.push(std::fs::read_to_string(&out).unwrap());
+    }
+    assert_eq!(saved[0], saved[1], "1 vs 2 workers: saved KB bytes differ");
+    assert_eq!(saved[0], saved[2], "1 vs 8 workers: saved KB bytes differ");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_batch_checkpoints_are_loadable_byte_stable_documents() {
+    struct Checkpointer {
+        path: std::path::PathBuf,
+        seen: usize,
+    }
+    impl FleetObserver for Checkpointer {
+        fn epoch_committed(&mut self, _epoch: usize, _commits: usize, kb: &KnowledgeBase) {
+            fleet::checkpoint_atomic(kb, &self.path).unwrap();
+            // Every checkpoint must load back and re-serialize to the
+            // exact bytes on disk (torn/partial states are impossible by
+            // construction of the atomic rename).
+            let on_disk = std::fs::read_to_string(&self.path).unwrap();
+            let back = persist::load(&self.path).unwrap();
+            assert_eq!(persist::to_json(&back).to_string_pretty(), on_disk);
+            self.seen += 1;
+        }
+    }
+    let dir = std::env::temp_dir().join("kb_fleet_ckpt_suite_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::h100();
+    let mut kb = KnowledgeBase::empty();
+    let mut obs = Checkpointer {
+        path: dir.join("ckpt.json"),
+        seen: 0,
+    };
+    let fleet_cfg = FleetConfig {
+        workers: 2,
+        epoch_size: 2,
+        checkpoint_every: 1,
+    };
+    let out = icrl::run_fleet_observed(
+        &tasks,
+        &arch,
+        &mut kb,
+        &quick_cfg(3),
+        &fleet_cfg,
+        &mut obs,
+    );
+    assert_eq!(obs.seen, out.epochs);
+    // The final checkpoint equals the final shared KB.
+    let last = persist::load(&dir.join("ckpt.json")).unwrap();
+    assert_eq!(kb_bytes(&last), kb_bytes(&kb));
+    std::fs::remove_dir_all(&dir).ok();
+}

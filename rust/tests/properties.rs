@@ -178,6 +178,137 @@ fn prop_state_matching_is_stable_and_monotone() {
 }
 
 #[test]
+fn prop_geomean_is_nan_iff_input_degenerate() {
+    // The float-edge-case contract (identical in debug and release):
+    // any non-positive or non-finite element poisons the geomean to NaN;
+    // otherwise it is finite and bracketed by min/max.
+    use kernelblaster::util::proptest::gen;
+    use kernelblaster::util::stats;
+    check(
+        "geomean-edge-cases",
+        PropConfig { cases: 300, seed: 0x6E0 },
+        |rng| {
+            let mut xs = gen::vec_f64(rng, 1, 12, 0.01, 100.0);
+            let poison = rng.chance(0.5);
+            if poison {
+                let i = rng.index(xs.len());
+                xs[i] = *rng
+                    .choose(&[0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY])
+                    .unwrap();
+            }
+            let g = stats::geomean(&xs);
+            if poison {
+                if !g.is_nan() {
+                    return Err(format!("poisoned input produced {g}"));
+                }
+                return Ok(());
+            }
+            if !g.is_finite() {
+                return Err(format!("positive input produced {g}"));
+            }
+            let lo = stats::min(&xs);
+            let hi = stats::max(&xs);
+            if g < lo * (1.0 - 1e-12) || g > hi * (1.0 + 1e-12) {
+                return Err(format!("geomean {g} outside [{lo}, {hi}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stddev_nan_only_below_two_samples() {
+    use kernelblaster::util::proptest::gen;
+    use kernelblaster::util::stats;
+    check(
+        "stddev-degenerate-convention",
+        PropConfig { cases: 200, seed: 0x57D },
+        |rng| {
+            let xs = gen::vec_f64(rng, 0, 6, -50.0, 50.0);
+            let sd = stats::stddev(&xs);
+            if xs.len() < 2 {
+                if !sd.is_nan() {
+                    return Err(format!("n={} gave stddev {sd}", xs.len()));
+                }
+            } else if !(sd.is_finite() && sd >= 0.0) {
+                return Err(format!("n={} gave stddev {sd}", xs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_driver_grown_kb_weight_pools_stay_nan_free() {
+    // After real optimization runs (valid and failed attempts, textual
+    // gradients, warm starts), every score in the KB must be finite and
+    // top-k selection must keep returning distinct well-formed picks —
+    // a NaN can never poison the weighted-sampling pool.
+    use kernelblaster::harness::HarnessConfig;
+    use kernelblaster::icrl::{self, IcrlConfig};
+    let suite = Suite::full();
+    let ids = ["L1/01_matmul_square", "L1/12_softmax", "L1/15_relu", "L2/01_gemm_bias_relu"];
+    check(
+        "kb-weights-nan-free",
+        PropConfig { cases: 6, seed: 0xF1EE7 },
+        |rng| {
+            let arch = GpuArch::h100();
+            let cfg = IcrlConfig {
+                trajectories: 2,
+                rollout_steps: 3,
+                top_k: 2,
+                harness: HarnessConfig {
+                    noise_sigma: 0.0,
+                    ..Default::default()
+                },
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let mut kb = KnowledgeBase::empty();
+            for _ in 0..2 {
+                let task = suite.by_id(ids[rng.index(ids.len())]).unwrap();
+                let _ = icrl::optimize_task(task, &arch, &mut kb, &cfg, rng.next_u64());
+            }
+            for (si, s) in kb.states.iter().enumerate() {
+                for o in &s.opts {
+                    if !o.expected_gain.is_finite() || !o.last_gain.is_finite() {
+                        return Err(format!(
+                            "state {si} {} has non-finite score {} / {}",
+                            o.technique.name(),
+                            o.expected_gain,
+                            o.last_gain
+                        ));
+                    }
+                    match o.success_rate() {
+                        None => {
+                            if o.attempts != 0 {
+                                return Err("tried entry reported None rate".into());
+                            }
+                        }
+                        Some(r) => {
+                            if !(0.0..=1.0).contains(&r) {
+                                return Err(format!("success rate {r} out of range"));
+                            }
+                        }
+                    }
+                }
+            }
+            // Selection stays well-formed over the grown pools.
+            for si in 0..kb.states.len() {
+                let picks = kb.select_top_k(si, 3, |_| true, rng);
+                let mut dedup = picks.clone();
+                dedup.sort();
+                dedup.dedup();
+                if dedup.len() != picks.len() {
+                    return Err("duplicate picks from grown pool".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_perf_model_monotone_in_problem_size() {
     // Routing/batching sanity of the simulator: strictly larger matmuls
     // never get faster estimates under the same schedule settings.
