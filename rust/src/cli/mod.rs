@@ -29,7 +29,7 @@
 use crate::baselines;
 use crate::experiments::{self, Ctx};
 use crate::gpu::GpuArch;
-use crate::icrl::{self, IcrlConfig};
+use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind};
 use crate::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
 use crate::kb::{persist, KnowledgeBase};
 use crate::runtime;
@@ -117,10 +117,13 @@ USAGE:
   kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
                          [--vendor] [--kb PATH] [--warm-start P1,P2,...]
                          [--save-kb PATH] [--seed N]
+                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search]
+                         [--epsilon X] [--ucb-c X] [--beam-width N]
   kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
                       [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
                       [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
-                      [--vendor] [--config run.json]
+                      [--vendor] [--policy NAME] [--epsilon X] [--ucb-c X]
+                      [--beam-width N] [--config run.json]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
   kernelblaster kb <init|inspect|stats> --path PATH
@@ -134,7 +137,7 @@ USAGE:
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
-  fig19 ablation_mem minimal_agent continual fleet
+  fig19 ablation_mem minimal_agent continual fleet policy
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -333,6 +336,13 @@ fn cmd_batch(args: &Args) -> i32 {
     if args.has("vendor") {
         cfg.icrl.harness.allow_vendor = true;
     }
+    // Per-batch policy: flags override the config file's [policy] section
+    // (the whole fleet runs one policy; per-task policies would break the
+    // shared-KB delta semantics' evidence comparability).
+    cfg.icrl.policy = match policy_from_flags(args, cfg.icrl.policy) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
     cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
     cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
     cfg.fleet.checkpoint_every =
@@ -557,12 +567,17 @@ fn cmd_optimize(args: &Args) -> i32 {
         ..Default::default()
     };
     cfg.harness.allow_vendor = args.has("vendor");
+    cfg.policy = match policy_from_flags(args, cfg.policy) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
     let run = icrl::optimize_task(task, &arch, &mut kb, &cfg, 0);
     let baselines = baselines::baseline_times(task, &arch);
 
     let mut t = Table::new(&["metric", "value"]);
     t.add_row(vec!["task".into(), run.task_id.clone()]);
     t.add_row(vec!["gpu".into(), arch.name.to_string()]);
+    t.add_row(vec!["policy".into(), cfg.policy.kind.name().to_string()]);
     t.add_row(vec!["valid".into(), run.valid.to_string()]);
     t.add_row(vec![
         "naive CUDA time".into(),
@@ -680,6 +695,37 @@ fn save_kb(kb: &KnowledgeBase, path: &str) -> Result<(), i32> {
         eprintln!("failed to save KB to {path}: {e}");
         1
     })
+}
+
+/// Search-policy config from `--policy` / `--epsilon` / `--ucb-c` /
+/// `--beam-width` flags over a base (default or config-file) policy,
+/// enforcing the same hyperparameter contract the config-file path
+/// validates.
+fn policy_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyConfig, i32> {
+    let kind = match args.flag("policy") {
+        None => base.kind,
+        Some(name) => match PolicyKind::from_name(name) {
+            Some(k) => k,
+            None => {
+                eprintln!(
+                    "unknown --policy '{name}' (known: {})",
+                    PolicyKind::known_names()
+                );
+                return Err(2);
+            }
+        },
+    };
+    let policy = PolicyConfig {
+        kind,
+        epsilon: args.f64_flag("epsilon", base.epsilon),
+        ucb_c: args.f64_flag("ucb-c", base.ucb_c),
+        beam_width: args.usize_flag("beam-width", base.beam_width),
+    };
+    if let Err(e) = policy.validate() {
+        eprintln!("{e}");
+        return Err(2);
+    }
+    Ok(policy)
 }
 
 /// Transfer policy from `--decay` / `--rekey-threshold` flags, enforcing
@@ -1004,6 +1050,42 @@ mod tests {
                 "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2"
             )),
             0
+        );
+    }
+
+    #[test]
+    fn optimize_policy_flags_select_and_validate() {
+        // Every named policy is reachable from the CLI.
+        for policy in ["greedy_topk", "epsilon_greedy", "ucb_bandit", "beam_search"] {
+            assert_eq!(
+                run(&argv(&format!(
+                    "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                     --policy {policy}"
+                ))),
+                0,
+                "--policy {policy} failed"
+            );
+        }
+        // Unknown names and invalid hyperparameters are usage errors.
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --policy annealing")),
+            2
+        );
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --policy epsilon_greedy --epsilon 1.5"
+            )),
+            2
+        );
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --policy beam_search --beam-width 0"
+            )),
+            2
+        );
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --policy ucb_bandit --ucb-c -2")),
+            2
         );
     }
 

@@ -13,7 +13,7 @@
 use crate::agents::AgentConfig;
 use crate::gpu::GpuArch;
 use crate::harness::HarnessConfig;
-use crate::icrl::{FleetConfig, IcrlConfig, KbMode};
+use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind};
 use crate::kb::lifecycle::TransferPolicy;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
@@ -89,6 +89,12 @@ impl RunConfig {
             },
         );
         root.set("icrl", icrl);
+        let mut policy = JsonObj::new();
+        policy.set("kind", self.icrl.policy.kind.name());
+        policy.set("epsilon", self.icrl.policy.epsilon);
+        policy.set("ucb_c", self.icrl.policy.ucb_c);
+        policy.set("beam_width", self.icrl.policy.beam_width);
+        root.set("policy", policy);
         let mut fleet = JsonObj::new();
         fleet.set("workers", self.fleet.workers);
         fleet.set("epoch_size", self.fleet.epoch_size);
@@ -171,6 +177,27 @@ impl RunConfig {
                 Some(other) => {
                     return Err(ConfigError::Invalid(format!("kb_mode '{other}'")))
                 }
+            };
+        }
+        if let Some(p) = j.get("policy") {
+            let d = PolicyConfig::default();
+            let kind = match p.get("kind").and_then(Json::as_str) {
+                None => d.kind,
+                Some(name) => PolicyKind::from_name(name).ok_or_else(|| {
+                    ConfigError::Invalid(format!(
+                        "unknown policy '{name}' (known: {})",
+                        PolicyKind::known_names()
+                    ))
+                })?,
+            };
+            cfg.icrl.policy = PolicyConfig {
+                kind,
+                epsilon: p.get("epsilon").and_then(Json::as_f64).unwrap_or(d.epsilon),
+                ucb_c: p.get("ucb_c").and_then(Json::as_f64).unwrap_or(d.ucb_c),
+                beam_width: p
+                    .get("beam_width")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.beam_width),
             };
         }
         if let Some(fleet) = j.get("fleet") {
@@ -263,6 +290,7 @@ impl RunConfig {
                 cfg.transfer.decay
             )));
         }
+        cfg.icrl.policy.validate().map_err(ConfigError::Invalid)?;
         cfg.resolve_arch()?;
         Ok(cfg)
     }
@@ -320,9 +348,14 @@ mod tests {
 
     #[test]
     fn warm_start_roundtrips_and_validates() {
-        let mut cfg = RunConfig::default();
-        cfg.warm_start = vec!["a.json".into(), "b.json".into()];
-        cfg.transfer.decay = 0.7;
+        let cfg = RunConfig {
+            warm_start: vec!["a.json".into(), "b.json".into()],
+            transfer: TransferPolicy {
+                decay: 0.7,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.warm_start, cfg.warm_start);
         assert!((back.transfer.decay - 0.7).abs() < 1e-12);
@@ -341,12 +374,50 @@ mod tests {
     }
 
     #[test]
+    fn policy_roundtrips_and_validates() {
+        let cfg = RunConfig {
+            icrl: IcrlConfig {
+                policy: PolicyConfig {
+                    kind: PolicyKind::BeamSearch,
+                    epsilon: 0.3,
+                    ucb_c: 1.25,
+                    beam_width: 4,
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.icrl.policy, cfg.icrl.policy);
+        // Absent section = default policy (back-compat with pre-policy
+        // config files).
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert_eq!(plain.icrl.policy, PolicyConfig::default());
+        // Partial section fills defaults.
+        let j = Json::parse(r#"{"policy":{"kind":"ucb_bandit"}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.icrl.policy.kind, PolicyKind::UcbBandit);
+        assert_eq!(c.icrl.policy.ucb_c, PolicyConfig::default().ucb_c);
+        // Unknown kind and bad hyperparameters rejected.
+        let j = Json::parse(r#"{"policy":{"kind":"quantum_annealing"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"policy":{"epsilon":1.5}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"policy":{"kind":"beam_search","beam_width":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"policy":{"ucb_c":-1}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn fleet_roundtrips_and_validates() {
-        let mut cfg = RunConfig::default();
-        cfg.fleet = FleetConfig {
-            workers: 8,
-            epoch_size: 16,
-            checkpoint_every: 5,
+        let cfg = RunConfig {
+            fleet: FleetConfig {
+                workers: 8,
+                epoch_size: 16,
+                checkpoint_every: 5,
+            },
+            ..Default::default()
         };
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.fleet, cfg.fleet);
@@ -362,10 +433,18 @@ mod tests {
 
     #[test]
     fn file_roundtrip() {
-        let mut cfg = RunConfig::default();
-        cfg.tasks = vec!["L2/18_linear_sum_logsumexp2".into()];
-        cfg.kb_save = Some("/tmp/kb.json".into());
-        cfg.icrl.harness.allow_vendor = true;
+        let cfg = RunConfig {
+            tasks: vec!["L2/18_linear_sum_logsumexp2".into()],
+            kb_save: Some("/tmp/kb.json".into()),
+            icrl: IcrlConfig {
+                harness: HarnessConfig {
+                    allow_vendor: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         let dir = std::env::temp_dir().join("kb_config_test");
         let path = dir.join("run.json");
         cfg.save(&path).unwrap();

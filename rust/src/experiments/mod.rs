@@ -1,6 +1,7 @@
 //! Experiment registry: one regenerator per paper table/figure, plus the
-//! [`continual`] cross-arch lifecycle scenario and the [`fleet`]
-//! batch-serving throughput/parity scenario.
+//! [`continual`] cross-arch lifecycle scenario, the [`fleet`]
+//! batch-serving throughput/parity scenario, and the [`policy`]
+//! four-arm search-policy comparison.
 //!
 //! Every entry produces a [`Report`] — human-readable tables/plots plus
 //! machine-readable CSVs — from the same code paths the CLI
@@ -17,6 +18,7 @@ pub mod fidelity;
 pub mod fleet;
 pub mod hyperparams;
 pub mod learning;
+pub mod policy;
 pub mod table3;
 
 use crate::baselines;
@@ -197,6 +199,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("minimal_agent", cost::minimal_agent),
         ("continual", continual::run),
         ("fleet", fleet::run),
+        ("policy", policy::run),
     ]
 }
 

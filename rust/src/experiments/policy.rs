@@ -1,0 +1,282 @@
+//! Search-policy scenario: the four [`crate::icrl::policy`] arms
+//! compared over paired seeds.
+//!
+//! Same task list, same `(task, seed)` grid for every arm — only the
+//! [`crate::icrl::PolicyKind`] differs — so per-cell differences are
+//! attributable to the policy alone. Per arm we report the geomean
+//! speedup vs naive, the paired geomean ratio against the `greedy_topk`
+//! baseline (computed over cells where **both** arms produced a valid
+//! kernel, the same pairing discipline as the continual scenario), token
+//! cost, and the grown KB's state count. Reported as a [`Report`] plus
+//! machine-readable `BENCH_policy.json` (format
+//! `kernelblaster-bench-policy-v1`) — CI runs the quick scale and
+//! uploads the JSON as an artifact.
+
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind};
+use crate::kb::KnowledgeBase;
+use crate::tasks::{Level, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+
+/// One `(task, seed)` cell of an arm's grid.
+struct Cell {
+    valid: bool,
+    speedup: f64,
+    tokens: usize,
+}
+
+/// One policy arm's measurements over the full grid.
+struct Arm {
+    kind: PolicyKind,
+    /// Cells in grid order: seed-major, task-minor (identical layout for
+    /// every arm — the pairing key is the cell index).
+    cells: Vec<Cell>,
+    /// KB states discovered, summed over the per-seed runs.
+    kb_states: usize,
+}
+
+impl Arm {
+    fn geomean_valid(&self) -> f64 {
+        let v: Vec<f64> = self
+            .cells
+            .iter()
+            .filter(|c| c.valid)
+            .map(|c| c.speedup)
+            .collect();
+        stats::geomean(&v)
+    }
+
+    fn valid_count(&self) -> usize {
+        self.cells.iter().filter(|c| c.valid).count()
+    }
+
+    fn tokens_per_cell(&self) -> f64 {
+        let total: usize = self.cells.iter().map(|c| c.tokens).sum();
+        total as f64 / self.cells.len().max(1) as f64
+    }
+}
+
+/// Paired comparison of an arm against the baseline arm: geomean ratio
+/// over cells valid in BOTH (the both-valid discipline of
+/// [`super::continual`]). Returns (ratio, pairs). With zero both-valid
+/// pairs the ratio is NaN by the crate's degenerate-input stats
+/// convention (`util::stats`) — rendered as `-` in the table and `null`
+/// in the JSON artifact; consumers must check `paired_cells` first.
+fn paired_vs(arm: &Arm, baseline: &Arm) -> (f64, usize) {
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    for (ca, cb) in arm.cells.iter().zip(&baseline.cells) {
+        if ca.valid && cb.valid {
+            a.push(ca.speedup);
+            b.push(cb.speedup);
+        }
+    }
+    (stats::geomean(&a) / stats::geomean(&b), a.len())
+}
+
+/// Run all four arms over an explicit task list and seed set (tests
+/// shrink both).
+fn arms(tasks: &[&Task], arch: &GpuArch, base: &IcrlConfig, seeds: &[u64]) -> Vec<Arm> {
+    PolicyKind::all()
+        .iter()
+        .map(|kind| {
+            let mut cells = Vec::with_capacity(seeds.len() * tasks.len());
+            let mut kb_states = 0;
+            for &seed in seeds {
+                let cfg = IcrlConfig {
+                    policy: PolicyConfig::of_kind(*kind),
+                    seed,
+                    ..base.clone()
+                };
+                let mut kb = KnowledgeBase::empty();
+                let runs = icrl::run_suite(tasks, arch, &mut kb, &cfg);
+                kb_states += kb.states.len();
+                cells.extend(runs.iter().map(|r| Cell {
+                    valid: r.valid,
+                    speedup: r.speedup_vs_naive(),
+                    tokens: r.tokens.total(),
+                }));
+            }
+            Arm {
+                kind: *kind,
+                cells,
+                kb_states,
+            }
+        })
+        .collect()
+}
+
+/// Serialize the measurement into `kernelblaster-bench-policy-v1`.
+fn write_bench_json(
+    arch: &GpuArch,
+    base: &IcrlConfig,
+    n_tasks: usize,
+    seeds: &[u64],
+    all: &[Arm],
+    path: &Path,
+) {
+    let baseline = &all[0]; // PolicyKind::all() leads with GreedyTopK
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-bench-policy-v1");
+    root.set("gpu", arch.name);
+    root.set("tasks", n_tasks);
+    root.set(
+        "seeds",
+        Json::Arr(seeds.iter().map(|&s| Json::from(s)).collect()),
+    );
+    root.set("top_k", base.top_k);
+    root.set("trajectories", base.trajectories);
+    root.set("rollout_steps", base.rollout_steps);
+    let arms_json: Vec<Json> = all
+        .iter()
+        .map(|arm| {
+            let (ratio, pairs) = paired_vs(arm, baseline);
+            let mut o = JsonObj::new();
+            o.set("policy", arm.kind.name());
+            o.set("geomean_vs_naive", arm.geomean_valid());
+            o.set("valid", arm.valid_count());
+            o.set("cells", arm.cells.len());
+            o.set("vs_greedy_paired", ratio);
+            o.set("paired_cells", pairs);
+            o.set("tokens_per_task", arm.tokens_per_cell());
+            o.set("kb_states", arm.kb_states);
+            Json::Obj(o)
+        })
+        .collect();
+    root.set("arms", Json::Arr(arms_json));
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: failed to write {}: {e}", path.display()),
+    }
+}
+
+/// The `policy` experiment with an explicit JSON output path.
+pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
+    let arch = GpuArch::h100();
+    let base = ctx.icrl_cfg(false);
+    let seeds: Vec<u64> = if ctx.quick {
+        vec![ctx.seed, ctx.seed + 1]
+    } else {
+        vec![ctx.seed, ctx.seed + 1, ctx.seed + 2]
+    };
+    let tasks = ctx.tasks(Level::L1);
+    let all = arms(&tasks, &arch, &base, &seeds);
+    let baseline = &all[0];
+
+    let mut t = Table::new(&[
+        "policy",
+        "geomean vs naive",
+        "vs greedy (paired)",
+        "valid",
+        "tokens/task",
+        "KB states",
+    ]);
+    for arm in &all {
+        let (ratio, pairs) = paired_vs(arm, baseline);
+        t.add_row(vec![
+            arm.kind.name().to_string(),
+            fnum(arm.geomean_valid(), 3),
+            format!("{} ({pairs} pairs)", fnum(ratio, 3)),
+            format!("{}/{}", arm.valid_count(), arm.cells.len()),
+            fnum(arm.tokens_per_cell(), 0),
+            arm.kb_states.to_string(),
+        ]);
+    }
+    write_bench_json(&arch, &base, tasks.len(), &seeds, &all, out);
+    Report {
+        name: "policy".into(),
+        sections: vec![Section {
+            title: format!(
+                "Search policies over paired seeds ({} L1 tasks x {} seeds, {}, top-k {})",
+                tasks.len(),
+                seeds.len(),
+                arch.name,
+                base.top_k
+            ),
+            table: t,
+            plot: None,
+            notes: vec![
+                "pairing: identical (task, seed) grid per arm; \"vs greedy\" is the \
+                 geomean ratio over cells valid in both arms"
+                    .to_string(),
+                "greedy_topk is the pre-policy-subsystem driver bit-for-bit \
+                 (tests/policy.rs); the other arms trade its exploit-heavy draw for \
+                 an exploration floor (epsilon_greedy), an evidence-uncertainty bonus \
+                 (ucb_bandit), or a carried frontier (beam_search)"
+                    .to_string(),
+                format!("machine-readable: {}", out.display()),
+            ],
+        }],
+    }
+}
+
+/// The `policy` experiment registry entry — writes `BENCH_policy.json`
+/// beside the working directory like the continual and fleet scenarios.
+pub fn run(ctx: &Ctx) -> Report {
+    run_with_output(ctx, Path::new("BENCH_policy.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::HarnessConfig;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn policy_experiment_compares_four_paired_arms() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let base = IcrlConfig {
+            trajectories: 2,
+            rollout_steps: 3,
+            top_k: 2,
+            harness: HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let arch = GpuArch::a100();
+        let seeds = [3u64, 4];
+        let all = arms(&tasks, &arch, &base, &seeds);
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[0].kind, PolicyKind::GreedyTopK);
+        for arm in &all {
+            assert_eq!(arm.cells.len(), 4, "{}: 2 tasks x 2 seeds", arm.kind.name());
+            assert!(arm.valid_count() > 0, "{}: nothing valid", arm.kind.name());
+            assert!(arm.geomean_valid().is_finite());
+        }
+        // The baseline's paired ratio against itself is exactly 1.
+        let (self_ratio, pairs) = paired_vs(&all[0], &all[0]);
+        assert_eq!(self_ratio, 1.0);
+        assert_eq!(pairs, all[0].valid_count());
+
+        // The JSON artifact parses and carries all four arms.
+        let dir = std::env::temp_dir().join("kb_policy_exp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_policy.json");
+        write_bench_json(&arch, &base, tasks.len(), &seeds, &all, &out);
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            j.get("format").and_then(Json::as_str),
+            Some("kernelblaster-bench-policy-v1")
+        );
+        let arms_json = j.get("arms").and_then(Json::as_arr).unwrap();
+        assert_eq!(arms_json.len(), 4);
+        assert_eq!(
+            arms_json[0].get("policy").and_then(Json::as_str),
+            Some("greedy_topk")
+        );
+        assert_eq!(
+            arms_json[0].get("vs_greedy_paired").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

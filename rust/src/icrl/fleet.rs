@@ -58,6 +58,16 @@
 //! clock. `experiments/fleet.rs` measures the throughput side
 //! (tasks/min) and the KB-quality parity, emitting `BENCH_fleet.json`.
 //!
+//! The search policy rides per-batch: every worker runs the batch's
+//! [`IcrlConfig::policy`] (`kernelblaster batch --policy`, or the
+//! config file's `policy` section), so the shared KB accumulates
+//! evidence gathered under one selection rule — mixing policies within
+//! a batch would make its delta evidence populations incomparable. The
+//! determinism contract is policy-independent (each `TaskRun` is still
+//! a pure function of task, arch, config, global task index, and the
+//! epoch snapshot); `tests/policy.rs` anchors the default-policy fleet
+//! against the pre-policy sequential driver bit-for-bit.
+//!
 //! # Checkpointing
 //!
 //! Long batches checkpoint the shared KB every

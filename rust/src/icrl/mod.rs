@@ -28,14 +28,26 @@
 //! over a bounded worker pool (snapshot → worker → delta →
 //! epoch-ordered commit), bit-identical to the sequential driver — see
 //! its module docs for the determinism contract.
+//!
+//! Step 4's selection rule is no longer hard-wired: the driver is
+//! parameterized over a [`policy::SearchPolicy`]
+//! ([`IcrlConfig::policy`], CLI `--policy`) — weighted top-k
+//! (`greedy_topk`, the default, bit-identical to the previous driver),
+//! ε-greedy, a UCB bandit over KB evidence, or beam search carrying B
+//! candidates across steps. `experiment policy` compares all four over
+//! paired seeds.
 
 #![deny(missing_docs)]
 
 pub mod driver;
 pub mod fleet;
+pub mod policy;
 
 pub use driver::{
     optimize_task, optimize_task_delta, optimize_task_in, run_suite, warm_start_kb,
     IcrlConfig, KbMode, StepLog, TaskRun,
 };
 pub use fleet::{run_fleet, run_fleet_observed, FleetConfig, FleetOutcome};
+pub use policy::{
+    BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, SearchPolicy, UcbBandit,
+};

@@ -230,6 +230,68 @@ impl OptEntry {
     }
 }
 
+/// One entry of a state's scored candidate enumeration
+/// ([`KnowledgeBase::scored_candidates`]): the snapshot of evidence a
+/// search policy ([`crate::icrl::policy`]) ranks and draws from. A plain
+/// value — copying it out of the KB decouples selection from KB mutation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoredCandidate {
+    /// The candidate optimization.
+    pub technique: Technique,
+    /// Expected speedup (EMA; the paper's predicted performance gain).
+    pub expected_gain: f64,
+    /// Native attempts recorded for this (state, technique) pair.
+    pub attempts: usize,
+    /// Attempts that measured a real gain (>1.01×).
+    pub successes: usize,
+    /// Precomputed weighted-draw mass ([`selection_weight`]); finite and
+    /// positive by construction.
+    pub weight: f64,
+}
+
+/// Selection weight of an expected gain: gain above parity, floored so
+/// that even past losers keep exploration mass. The floor is what lets
+/// *preparatory* techniques (mixed precision, tiling) keep being tried
+/// even though their measured solo gain is small — their value is
+/// realized by the compute technique that follows (§5's prep→compute
+/// transitions).
+///
+/// A non-finite expected gain (impossible through [`OptEntry::update`],
+/// which guards it, but reachable via a hand-edited KB document) drops to
+/// the exploration floor explicitly — a NaN weight must never reach
+/// `weighted_index` or distort the draw distribution.
+pub fn selection_weight(expected_gain: f64) -> f64 {
+    if expected_gain.is_finite() {
+        (expected_gain - 0.9).max(0.15)
+    } else {
+        0.15
+    }
+}
+
+/// Draw up to `k` distinct techniques from a scored candidate set,
+/// proportionally to [`ScoredCandidate::weight`] without replacement —
+/// the canonical weighted-selection rule (`GreedyTopK`'s draw, and the
+/// body of [`KnowledgeBase::select_top_k`]).
+///
+/// §Perf: weights are computed once and shrunk in lockstep with the
+/// remaining-candidate list instead of being rebuilt every draw; the rng
+/// sees the exact same weight sequence either way.
+pub fn weighted_top_k(pool: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+    if pool.is_empty() {
+        return Vec::new();
+    }
+    let mut remaining: Vec<usize> = (0..pool.len()).collect();
+    let mut weights: Vec<f64> = pool.iter().map(|c| c.weight).collect();
+    let mut picked = Vec::new();
+    while picked.len() < k && !remaining.is_empty() {
+        let wi = rng.weighted_index(&weights);
+        picked.push(pool[remaining[wi]].technique);
+        remaining.remove(wi);
+        weights.remove(wi);
+    }
+    picked
+}
+
 /// One state's record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StateEntry {
@@ -377,9 +439,41 @@ impl KnowledgeBase {
         }
     }
 
+    /// Deterministic scored-candidate enumeration for one state — the
+    /// read-side API every [`crate::icrl::policy`] implementation builds
+    /// on. Entries come back in KB insertion order (the wire-format
+    /// order), restricted to `filter`, with the selection weight
+    /// precomputed by [`selection_weight`]. Pure read: consumes no RNG
+    /// and mutates nothing, so a policy's draw distribution is entirely
+    /// its own business.
+    pub fn scored_candidates(
+        &self,
+        state: usize,
+        filter: impl Fn(Technique) -> bool,
+    ) -> Vec<ScoredCandidate> {
+        self.states[state]
+            .opts
+            .iter()
+            .filter(|o| filter(o.technique))
+            .map(|o| ScoredCandidate {
+                technique: o.technique,
+                expected_gain: o.expected_gain,
+                attempts: o.attempts,
+                successes: o.successes,
+                weight: selection_weight(o.expected_gain),
+            })
+            .collect()
+    }
+
     /// Weighted top-k selection (§3: "random weighted selection based on
     /// predicted performance gain … ensures the agent does not always
     /// select the best past performer"). Returns distinct techniques.
+    ///
+    /// This is the pre-policy-subsystem selection rule, kept as the
+    /// reference implementation: `GreedyTopK` in
+    /// [`crate::icrl::policy`] is defined as exactly this draw
+    /// ([`weighted_top_k`] over [`Self::scored_candidates`]) and is
+    /// asserted draw-for-draw equal in `tests/policy.rs`.
     pub fn select_top_k(
         &self,
         state: usize,
@@ -387,49 +481,7 @@ impl KnowledgeBase {
         filter: impl Fn(Technique) -> bool,
         rng: &mut Rng,
     ) -> Vec<Technique> {
-        let entry = &self.states[state];
-        let pool: Vec<&OptEntry> = entry
-            .opts
-            .iter()
-            .filter(|o| filter(o.technique))
-            .collect();
-        if pool.is_empty() {
-            return Vec::new();
-        }
-        // Weight = expected gain above parity, floored so that even past
-        // losers keep exploration mass. The floor is what lets
-        // *preparatory* techniques (mixed precision, tiling) keep being
-        // tried even though their measured solo gain is small — their
-        // value is realized by the compute technique that follows (§5's
-        // prep→compute transitions).
-        //
-        // A non-finite expected gain (impossible through `update`, which
-        // guards it, but reachable via a hand-edited KB document) drops
-        // to the exploration floor explicitly — a NaN weight must never
-        // reach `weighted_index` or distort the draw distribution.
-        //
-        // §Perf: weights are computed once and shrunk in lockstep with
-        // the remaining-candidate list instead of being rebuilt every
-        // draw; the rng sees the exact same weight sequence either way.
-        let mut remaining: Vec<usize> = (0..pool.len()).collect();
-        let mut weights: Vec<f64> = pool
-            .iter()
-            .map(|o| {
-                if o.expected_gain.is_finite() {
-                    (o.expected_gain - 0.9).max(0.15)
-                } else {
-                    0.15
-                }
-            })
-            .collect();
-        let mut picked = Vec::new();
-        while picked.len() < k && !remaining.is_empty() {
-            let wi = rng.weighted_index(&weights);
-            picked.push(pool[remaining[wi]].technique);
-            remaining.remove(wi);
-            weights.remove(wi);
-        }
-        picked
+        weighted_top_k(&self.scored_candidates(state, filter), k, rng)
     }
 
     /// Score update for (state, technique) — the ParameterUpdate write.
@@ -610,6 +662,36 @@ mod tests {
             .unwrap_or(0);
         assert!(tiling > 25, "tiling first-picks {tiling}");
         assert!(unroll < tiling / 2, "unroll={unroll} tiling={tiling}");
+    }
+
+    #[test]
+    fn scored_candidates_enumerate_in_insertion_order_with_weights() {
+        let mut kb = KnowledgeBase::seed_priors();
+        kb.update_score(0, Technique::SharedMemoryTiling, 3.0, None);
+        kb.states[0].opts[1].expected_gain = f64::NAN; // hand-edited doc
+        let scored = kb.scored_candidates(0, |_| true);
+        assert_eq!(scored.len(), kb.states[0].opts.len());
+        for (s, o) in scored.iter().zip(&kb.states[0].opts) {
+            assert_eq!(s.technique, o.technique);
+            assert_eq!(s.attempts, o.attempts);
+            assert_eq!(s.successes, o.successes);
+            assert_eq!(s.weight, selection_weight(o.expected_gain));
+            assert!(s.weight.is_finite() && s.weight > 0.0);
+        }
+        // NaN expected gain drops to the exploration floor.
+        assert_eq!(scored[1].weight, 0.15);
+        // Filters restrict the enumeration, preserving order.
+        let only = kb.scored_candidates(0, |t| t == Technique::FastMath);
+        assert_eq!(only.len(), 1);
+        assert_eq!(only[0].technique, Technique::FastMath);
+        // The draw helper consumes the same stream as select_top_k.
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        assert_eq!(
+            weighted_top_k(&scored, 4, &mut r1),
+            kb.select_top_k(0, 4, |_| true, &mut r2)
+        );
+        assert_eq!(r1, r2);
     }
 
     #[test]

@@ -28,7 +28,17 @@ pub fn apply(tech: Technique, cand: &Candidate, gi: usize) -> Result<Candidate, 
     let mut next = cand.clone();
     if tech.class() == super::TechniqueClass::Schedule {
         for g in 0..cand.schedule.groups.len() {
-            if tech.applicable(cand, g) {
+            // Re-checked against `next`, not the pristine `cand`: by the
+            // time group g is visited, earlier groups have already been
+            // mutated, and a predicate that (today or in a future
+            // technique) reads anything beyond group g's own state would
+            // otherwise act on stale applicability. For the current
+            // catalog every schedule predicate is group-local, so the
+            // two checks agree — an invariant pinned by the
+            // `schedule_applicability_is_group_local_under_mutation`
+            // regression test below; this form stays correct even if a
+            // cross-group-coupled predicate is ever added.
+            if tech.applicable(&next, g) {
                 apply_to_group(tech, &mut next, g);
             }
         }
@@ -437,6 +447,56 @@ mod tests {
     }
 
     #[test]
+    fn schedule_applicability_is_group_local_under_mutation() {
+        // Regression for the stale-applicability bug class: `apply`'s
+        // schedule loop re-checks applicability against the partially
+        // mutated candidate, which is only equivalent to the old
+        // check-the-original behavior if mutating one group can never
+        // flip a schedule technique's applicability on a *different*
+        // group. Pin that group-locality invariant: for every pair of
+        // schedule techniques (t1, t2) on multi-group tasks, applying t1
+        // (which mutates exactly the groups where t1 is applicable) must
+        // leave t2's applicability unchanged on every group t1 did not
+        // touch.
+        let suite = Suite::full();
+        for id in ["L2/01_gemm_bias_relu", "L2/09_mlp_block", "L3/01_lenet5"] {
+            let c = cand(id);
+            assert!(c.schedule.groups.len() > 1, "{id}: need multi-group");
+            let schedule_techs: Vec<Technique> = Technique::all()
+                .iter()
+                .copied()
+                .filter(|t| t.class() == super::super::TechniqueClass::Schedule)
+                .collect();
+            for &t1 in &schedule_techs {
+                if t1.applicable_anywhere(&c).is_none() {
+                    continue;
+                }
+                let touched: Vec<bool> = (0..c.schedule.groups.len())
+                    .map(|g| t1.applicable(&c, g))
+                    .collect();
+                let gi = touched.iter().position(|&t| t).unwrap();
+                let Ok(after) = apply(t1, &c, gi) else {
+                    continue;
+                };
+                for &t2 in &schedule_techs {
+                    for g in 0..c.schedule.groups.len() {
+                        if touched[g] {
+                            continue; // t1 mutated this group — its own change is expected
+                        }
+                        assert_eq!(
+                            t2.applicable(&after, g),
+                            t2.applicable(&c, g),
+                            "{id}: applying {} to other groups flipped {} on group {g}",
+                            t1.name(),
+                            t2.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn property_random_technique_sequences_stay_valid() {
         use crate::util::proptest::{check, PropConfig};
         let suite = Suite::full();
@@ -456,7 +516,7 @@ mod tests {
                     let tech = Technique::all()[rng.index(Technique::all().len())];
                     let gi = rng.index(cur.schedule.groups.len());
                     if tech.applicable(&cur, gi) {
-                        cur = apply(tech, &cur, gi).map_err(|e| e)?;
+                        cur = apply(tech, &cur, gi)?;
                         cur.validate()?;
                     }
                 }

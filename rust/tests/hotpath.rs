@@ -63,7 +63,7 @@ fn prop_pooled_execution_matches_fresh_under_random_transforms() {
             for _ in 0..4 {
                 let tech = Technique::all()[rng.index(Technique::all().len())];
                 if let Some(gi) = tech.applicable_anywhere(&cand) {
-                    cand = apply::apply(tech, &cand, gi).map_err(|e| e)?;
+                    cand = apply::apply(tech, &cand, gi)?;
                 }
                 let inputs = interp::random_inputs(&cand.small, rng.next_u64());
                 let fresh = interp::execute(&cand.small, &inputs).map_err(|e| e.to_string())?;

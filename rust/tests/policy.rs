@@ -1,0 +1,509 @@
+//! Search-policy subsystem properties.
+//!
+//! The load-bearing assertion: the default `greedy_topk` policy is
+//! **bit-identical** to the pre-refactor hard-wired driver. The
+//! pre-refactor step loop is transcribed below as
+//! [`reference_optimize_task`] (sequential path, built exclusively from
+//! public APIs against the legacy `kb::select_top_k` draw) and compared
+//! run-for-run and byte-for-byte against the policy-parameterized
+//! driver — cold and warm-started, sequential and through the fleet, at
+//! lib and CLI level.
+//!
+//! The remaining tests are the policy layer's blanket properties: every
+//! policy on every exercised task yields well-formed `TaskRun`s, leaves
+//! NaN-free KB selection-weight pools behind, and its grown KBs
+//! serialize byte-stably.
+
+use kernelblaster::agents::textgrad::{self, Sample};
+use kernelblaster::agents::{state_extractor, TokenMeter};
+use kernelblaster::gpu::{GpuArch, NcuReport};
+use kernelblaster::harness::{self, Outcome, VerifyCache};
+use kernelblaster::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, SearchPolicy, StepLog, TaskRun};
+use kernelblaster::kb::{self, persist, KnowledgeBase, StateSig};
+use kernelblaster::kir::interp;
+use kernelblaster::opts::{Candidate, Technique};
+use kernelblaster::tasks::{Suite, Task};
+use kernelblaster::util::json::Json;
+use kernelblaster::util::rng::Rng;
+use std::path::Path;
+
+fn quick_cfg(seed: u64) -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 2,
+        rollout_steps: 4,
+        top_k: 3,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The pre-policy-subsystem driver, transcribed from the pre-refactor
+/// `optimize_task_in` (sequential exploration path; the parallel path
+/// was already asserted bit-identical to it). Every picked technique
+/// comes from the legacy `kb::select_top_k` draw, every stream label is
+/// the historical one — this is the behavioral baseline the default
+/// policy must reproduce exactly.
+fn reference_optimize_task(
+    task: &Task,
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    run_seed: u64,
+) -> TaskRun {
+    if let Some(prev) = &kb.arch {
+        if prev != arch.name {
+            kb.lineage.push(format!(
+                "mixed-arch evidence: ran on {} over a {prev} KB without transfer",
+                arch.name
+            ));
+        }
+    }
+    kb.arch = Some(arch.name.to_string());
+    let mut rng = Rng::new(cfg.seed ^ run_seed).derive(&task.id);
+    let mut tokens = TokenMeter::new();
+    let mut steps: Vec<StepLog> = Vec::new();
+    let mut visited: Vec<StateSig> = Vec::new();
+
+    let mut cache = VerifyCache::new();
+    let _ = cache.warm(task, &cfg.harness);
+
+    let naive = Candidate::naive(task);
+    let naive_report = harness::profile_naive(task, arch, &cfg.harness, &mut rng);
+    let naive_time = naive_report.total_time_s;
+
+    let mut best = naive.clone();
+    let mut best_time = naive_time;
+    let mut any_valid = false;
+
+    for traj in 0..cfg.trajectories {
+        let mut cand = naive.clone();
+        let mut cur_report = naive_report.clone();
+        let mut cur_time = naive_time;
+        let mut replay: Vec<Sample> = Vec::new();
+
+        for step in 0..cfg.rollout_steps {
+            let sig = state_extractor::extract(
+                &cur_report,
+                &cand.full,
+                &cfg.agent,
+                &mut tokens,
+                &mut rng,
+            );
+            let matched = kb.match_state(sig);
+            let discovered = matched.is_discovery();
+            let state_idx = matched.index();
+            if !visited.contains(&sig) {
+                visited.push(sig);
+            }
+
+            let applicable: Vec<Technique> = Technique::all()
+                .iter()
+                .copied()
+                .filter(|t| {
+                    (cfg.harness.allow_vendor || *t != Technique::VendorLibraryDispatch)
+                        && t.applicable_anywhere(&cand).is_some()
+                })
+                .collect();
+            if applicable.is_empty() {
+                break;
+            }
+            kb.ensure_candidates(state_idx, &applicable);
+            let picks =
+                kb.select_top_k(state_idx, cfg.top_k, |t| applicable.contains(&t), &mut rng);
+
+            let dominant_group = cur_report
+                .kernels
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.time_us.total_cmp(&b.1.time_us))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let pick_info: Vec<(Technique, f64, usize)> = picks
+                .iter()
+                .map(|&tech| {
+                    let expected = kb.states[state_idx]
+                        .opt_index(tech)
+                        .map(|i| kb.states[state_idx].opts[i].expected_gain)
+                        .unwrap_or(tech.prior_gain());
+                    let group = if tech.applicable(&cand, dominant_group) {
+                        dominant_group
+                    } else {
+                        tech.applicable_anywhere(&cand).unwrap_or(0)
+                    };
+                    (tech, expected, group)
+                })
+                .collect();
+
+            let step_rng = rng.derive(&format!("explore-t{traj}-s{step}"));
+            let mut step_best: Option<(Candidate, NcuReport, f64, Technique)> = None;
+            let step_log_start = steps.len();
+            for (i, &(tech, expected, group)) in pick_info.iter().enumerate() {
+                let mut pick_rng = step_rng.derive(&format!("pick-{i}"));
+                let mut meter = TokenMeter::new();
+                let mut outcome: Option<(Candidate, Outcome)> = None;
+                let mut retries = 0;
+                let mut interp_ctx = interp::ExecContext::new();
+                for attempt in 0..=cfg.agent.retry_limit {
+                    retries = attempt;
+                    let lowered = kernelblaster::agents::lowering::lower(
+                        tech,
+                        &cand,
+                        group,
+                        &cfg.agent,
+                        attempt,
+                        &mut meter,
+                        &mut pick_rng,
+                    );
+                    match lowered.into_candidate() {
+                        None => continue,
+                        Some(c) => {
+                            let res = harness::run_cached_in(
+                                task,
+                                &c,
+                                arch,
+                                &cfg.harness,
+                                Some(&cache),
+                                &mut interp_ctx,
+                                &mut pick_rng,
+                            );
+                            let ok = res.is_ok();
+                            outcome = Some((c, res));
+                            if ok {
+                                break;
+                            }
+                        }
+                    }
+                }
+                tokens.merge(&meter);
+                let (valid, gain, occ, util, new_primary) = match outcome {
+                    Some((c, Outcome::Ok(rep))) => {
+                        any_valid = true;
+                        let gain = cur_time / rep.total_time_s;
+                        let (occ, util) = rep
+                            .kernels
+                            .first()
+                            .map(|k| (k.occupancy, k.utilization))
+                            .unwrap_or((1.0, 1.0));
+                        let np = rep.dominant_bottleneck();
+                        let improves = step_best
+                            .as_ref()
+                            .map(|(_, _, g, _)| gain > *g)
+                            .unwrap_or(true);
+                        if improves {
+                            step_best = Some((c, rep, gain, tech));
+                        }
+                        (true, gain, occ, util, np)
+                    }
+                    _ => (false, 0.0, 1.0, 1.0, sig.primary),
+                };
+                replay.push(Sample {
+                    state: sig,
+                    technique: tech,
+                    expected_gain: expected,
+                    measured_gain: gain,
+                    valid,
+                    occupancy: occ,
+                    utilization: util,
+                    new_primary,
+                });
+                steps.push(StepLog {
+                    trajectory: traj,
+                    step,
+                    state: sig,
+                    new_state_discovered: discovered && step == 0,
+                    technique: tech,
+                    valid,
+                    gain,
+                    retries,
+                    chosen: false,
+                });
+            }
+
+            if let Some((c, rep, _gain, chosen_tech)) = step_best {
+                for s in &mut steps[step_log_start..] {
+                    if s.technique == chosen_tech && s.valid {
+                        s.chosen = true;
+                    }
+                }
+                cur_time = rep.total_time_s;
+                cur_report = rep;
+                cand = c;
+                if cur_time < best_time {
+                    best_time = cur_time;
+                    best = cand.clone();
+                }
+            }
+        }
+
+        let g = textgrad::policy_evaluation(&replay, &mut tokens);
+        let p = textgrad::perf_gap_analysis(&g, &mut tokens);
+        textgrad::parameter_update(kb, &p, &mut tokens);
+    }
+
+    TaskRun {
+        task_id: task.id.clone(),
+        naive_time_s: naive_time,
+        best_time_s: best_time,
+        best,
+        tokens,
+        steps,
+        states_visited: visited.len(),
+        valid: any_valid,
+    }
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+#[test]
+fn default_policy_is_bit_identical_to_the_pre_refactor_driver() {
+    // Cold start, multiple tasks and seeds, sequential exploration (the
+    // reference is sequential; parallel==sequential is asserted by the
+    // driver's own tests and tests/hotpath.rs).
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    for (id, seed) in [
+        ("L2/01_gemm_bias_relu", 0u64),
+        ("L1/12_softmax", 7),
+        ("L2/18_linear_sum_logsumexp2", 3),
+    ] {
+        let task = suite.by_id(id).unwrap();
+        let cfg = IcrlConfig {
+            parallel_explore: false,
+            ..quick_cfg(seed)
+        };
+        assert_eq!(cfg.policy.kind, PolicyKind::GreedyTopK, "default changed");
+        let mut kb_ref = KnowledgeBase::empty();
+        let r_ref = reference_optimize_task(task, &arch, &mut kb_ref, &cfg, seed);
+        let mut kb_new = KnowledgeBase::empty();
+        let r_new = icrl::optimize_task(task, &arch, &mut kb_new, &cfg, seed);
+        assert_eq!(r_new, r_ref, "{id}: TaskRun diverged from pre-refactor driver");
+        assert_eq!(kb_new, kb_ref, "{id}: KB diverged");
+        assert_eq!(kb_bytes(&kb_new), kb_bytes(&kb_ref), "{id}: saved KB bytes diverged");
+    }
+}
+
+#[test]
+fn default_policy_bit_identity_holds_warm_started() {
+    // Warm start: grow a KB on one task, then optimize another over a
+    // clone of it through both drivers — the mutation trace must match.
+    let suite = Suite::full();
+    let arch = GpuArch::a100();
+    let cfg = IcrlConfig {
+        parallel_explore: false,
+        ..quick_cfg(5)
+    };
+    let mut grown = KnowledgeBase::empty();
+    let _ = icrl::optimize_task(
+        suite.by_id("L2/01_gemm_bias_relu").unwrap(),
+        &arch,
+        &mut grown,
+        &cfg,
+        0,
+    );
+    assert!(grown.total_attempts() > 0);
+    let task = suite.by_id("L2/63_gemm_bias_relu_div_f16").unwrap();
+    let mut kb_ref = grown.clone();
+    let r_ref = reference_optimize_task(task, &arch, &mut kb_ref, &cfg, 1);
+    let mut kb_new = grown.clone();
+    let r_new = icrl::optimize_task(task, &arch, &mut kb_new, &cfg, 1);
+    assert_eq!(r_new, r_ref, "warm TaskRun diverged");
+    assert_eq!(kb_bytes(&kb_new), kb_bytes(&kb_ref), "warm KB bytes diverged");
+}
+
+#[test]
+fn default_policy_bit_identity_holds_through_the_fleet() {
+    // The fleet serves the batch with the same default policy: its
+    // committed KB and runs must equal the reference driver applied
+    // task-by-task (run_seed = global task index, as run_suite does).
+    let suite = Suite::full();
+    let arch = GpuArch::l40s();
+    let tasks: Vec<&Task> = vec![
+        suite.by_id("L1/01_matmul_square").unwrap(),
+        suite.by_id("L1/12_softmax").unwrap(),
+        suite.by_id("L1/15_relu").unwrap(),
+    ];
+    let cfg = quick_cfg(9);
+    let mut kb_ref = KnowledgeBase::empty();
+    let mut runs_ref = Vec::new();
+    for (i, task) in tasks.iter().enumerate() {
+        // The reference is sequential-exploration; the production driver
+        // runs parallel picks — their equality is part of the assertion.
+        let seq_cfg = IcrlConfig {
+            parallel_explore: false,
+            ..cfg.clone()
+        };
+        runs_ref.push(reference_optimize_task(task, &arch, &mut kb_ref, &seq_cfg, i as u64));
+    }
+    // epoch_size 1 is the fleet's exact-sequential-replay mode (tasks in
+    // a wider epoch deliberately read a stale snapshot and cannot match
+    // a sequential trace); worker count never changes results.
+    let mut kb_fleet = KnowledgeBase::empty();
+    let out = icrl::run_fleet(
+        &tasks,
+        &arch,
+        &mut kb_fleet,
+        &cfg,
+        &icrl::FleetConfig {
+            workers: 2,
+            epoch_size: 1,
+            checkpoint_every: 0,
+        },
+    );
+    assert_eq!(out.runs, runs_ref, "fleet runs diverged from pre-refactor driver");
+    assert_eq!(
+        kb_bytes(&kb_fleet),
+        kb_bytes(&kb_ref),
+        "fleet-committed KB bytes diverged from pre-refactor driver"
+    );
+}
+
+#[test]
+fn cli_default_and_explicit_greedy_policy_save_identical_kbs() {
+    // CLI-level identity: omitting --policy and passing the default name
+    // must write byte-identical KBs (the flag plumbing adds nothing to
+    // the default path).
+    let dir = std::env::temp_dir().join("kb_policy_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = dir.join("default.json");
+    let b = dir.join("explicit.json");
+    let argv = |extra: &str, out: &Path| -> Vec<String> {
+        format!(
+            "optimize --task L1/12_softmax --gpu H100 --trajectories 2 --steps 3 \
+             --seed 11{extra} --save-kb {}",
+            out.display()
+        )
+        .split_whitespace()
+        .map(String::from)
+        .collect()
+    };
+    assert_eq!(kernelblaster::cli::run(&argv("", &a)), 0);
+    assert_eq!(kernelblaster::cli::run(&argv(" --policy greedy_topk", &b)), 0);
+    let bytes_a = std::fs::read(&a).unwrap();
+    let bytes_b = std::fs::read(&b).unwrap();
+    assert!(!bytes_a.is_empty());
+    assert_eq!(bytes_a, bytes_b, "CLI KBs diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_policy_yields_wellformed_runs_and_stable_kbs() {
+    // Blanket property over the whole policy surface: for every kind, on
+    // tasks of each suite level, the driver produces well-formed
+    // TaskRuns, the KB's selection-weight pool stays NaN-free, and the
+    // grown KB round-trips byte-stably through the v1 wire format.
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let ids = ["L1/12_softmax", "L2/09_mlp_block", "L3/01_lenet5"];
+    for kind in PolicyKind::all() {
+        let cfg = IcrlConfig {
+            policy: PolicyConfig::of_kind(*kind),
+            trajectories: 2,
+            rollout_steps: 3,
+            top_k: 2,
+            seed: 17,
+            ..Default::default()
+        };
+        let mut kbase = KnowledgeBase::empty();
+        for (i, id) in ids.iter().enumerate() {
+            let task = suite.by_id(id).unwrap();
+            let run = icrl::optimize_task(task, &arch, &mut kbase, &cfg, i as u64);
+            // Well-formed TaskRun: a validated best no worse than naive,
+            // coherent trace metadata.
+            assert!(run.valid, "{}/{id}: no valid kernel", kind.name());
+            assert!(
+                run.best_time_s <= run.naive_time_s * 1.0001,
+                "{}/{id}: best worse than naive",
+                kind.name()
+            );
+            let mut vrng = Rng::new(0);
+            assert!(
+                harness::run(task, &run.best, &arch, &cfg.harness, &mut vrng).is_ok(),
+                "{}/{id}: best candidate fails re-verification",
+                kind.name()
+            );
+            assert!(!run.steps.is_empty(), "{}/{id}", kind.name());
+            let width = if cfg.policy.kind == PolicyKind::BeamSearch {
+                cfg.policy.beam_width
+            } else {
+                1
+            };
+            let mut chosen = std::collections::BTreeMap::new();
+            for s in &run.steps {
+                assert!(s.gain.is_finite(), "{}/{id}: non-finite gain", kind.name());
+                assert!(s.trajectory < cfg.trajectories && s.step < cfg.rollout_steps);
+                if s.chosen {
+                    assert!(s.valid, "{}/{id}: chosen-but-invalid step", kind.name());
+                    *chosen.entry((s.trajectory, s.step)).or_insert(0usize) += 1;
+                }
+            }
+            assert!(
+                chosen.values().all(|&n| n <= width),
+                "{}/{id}: more chosen steps than the frontier width",
+                kind.name()
+            );
+            assert!(run.states_visited > 0);
+        }
+        // NaN-free weight pool: every scored candidate of every state
+        // must carry a finite positive draw weight.
+        for (si, state) in kbase.states.iter().enumerate() {
+            for cand in kbase.scored_candidates(si, |_| true) {
+                assert!(
+                    cand.expected_gain.is_finite(),
+                    "{}: state {si} has a non-finite expected gain",
+                    kind.name()
+                );
+                assert!(
+                    cand.weight.is_finite() && cand.weight > 0.0,
+                    "{}: state {si} has a degenerate weight",
+                    kind.name()
+                );
+            }
+            assert!(!state.opts.is_empty());
+        }
+        assert!(kbase.total_attempts() > 0, "{}", kind.name());
+        // Byte-stable serialization of the policy-grown KB.
+        let first = kb_bytes(&kbase);
+        let reloaded = persist::from_json(&Json::parse(&first).unwrap()).unwrap();
+        assert_eq!(first, kb_bytes(&reloaded), "{}: KB not byte-stable", kind.name());
+    }
+}
+
+#[test]
+fn greedy_policy_select_equals_legacy_draw_on_driver_grown_kbs() {
+    // The selection-level half of the bit-identity argument, on real
+    // driver-grown states (not synthetic pools): GreedyTopK's draw and
+    // the legacy select_top_k consume the same stream and pick the same
+    // techniques, state by state, under assorted filters.
+    let suite = Suite::full();
+    let arch = GpuArch::a6000();
+    let cfg = quick_cfg(23);
+    let mut kbase = KnowledgeBase::empty();
+    for (i, id) in ["L2/01_gemm_bias_relu", "L1/12_softmax"].iter().enumerate() {
+        let _ = icrl::optimize_task(suite.by_id(id).unwrap(), &arch, &mut kbase, &cfg, i as u64);
+    }
+    assert!(!kbase.states.is_empty());
+    let greedy = icrl::GreedyTopK;
+    let filters: [&dyn Fn(Technique) -> bool; 3] = [
+        &|_| true,
+        &|t: Technique| t.class() == kernelblaster::opts::TechniqueClass::Schedule,
+        &|t: Technique| t != Technique::VendorLibraryDispatch,
+    ];
+    for si in 0..kbase.states.len() {
+        for (fi, filter) in filters.iter().enumerate() {
+            let scored = kbase.scored_candidates(si, filter);
+            for seed in [1u64, 42, 1234] {
+                let mut r1 = Rng::new(seed).derive("policy-equiv");
+                let mut r2 = r1.clone();
+                let via_policy = greedy.select(&scored, 3, &mut r1);
+                let via_legacy = kbase.select_top_k(si, 3, filter, &mut r2);
+                assert_eq!(via_policy, via_legacy, "state {si}, filter {fi}, seed {seed}");
+                assert_eq!(r1, r2, "state {si}: stream consumption diverged");
+                // And the free-function form agrees too.
+                let mut r3 = Rng::new(seed).derive("policy-equiv");
+                assert_eq!(kb::weighted_top_k(&scored, 3, &mut r3), via_policy);
+            }
+        }
+    }
+}

@@ -56,7 +56,7 @@ fn prop_transformed_kernels_compute_the_same_function() {
             for _ in 0..5 {
                 let tech = Technique::all()[rng.index(Technique::all().len())];
                 if let Some(gi) = tech.applicable_anywhere(&cand) {
-                    cand = apply::apply(tech, &cand, gi).map_err(|e| e)?;
+                    cand = apply::apply(tech, &cand, gi)?;
                 }
             }
             let inputs = interp::random_inputs(&task.small, rng.next_u64());

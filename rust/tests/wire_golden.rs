@@ -1,0 +1,87 @@
+//! Golden-file wire-format tests for `kernelblaster-kb-v1`.
+//!
+//! The in-module persistence tests assert *self* round-trip stability
+//! (serialize → parse → serialize), which cannot catch drift that moves
+//! both directions at once — a format change whose writer and reader
+//! agree with each other but no longer with documents already on disk.
+//! These tests pin the format against **checked-in fixture documents**:
+//! `load → save` must reproduce each fixture byte-for-byte, exactly the
+//! contract a user's archived KB (or a released pretrained KB artifact)
+//! depends on across crate versions.
+//!
+//! If one of these tests fails, the wire format changed. That is a
+//! breaking event for every saved KB in the wild: either restore
+//! compatibility, or introduce a new format version string and keep v1
+//! parsing byte-stable (then add a new fixture for the new version —
+//! never regenerate the old ones).
+
+use kernelblaster::kb::persist;
+use kernelblaster::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// load(fixture) → save must be the identity on bytes.
+fn assert_golden_roundtrip(name: &str) {
+    let path = fixture(name);
+    let original = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing fixture {}: {e}", path.display()));
+    let kb = persist::load(&path).unwrap_or_else(|e| panic!("{name} failed to load: {e}"));
+    // Byte-level identity through the save path (what a user's
+    // `kb <op> --out` actually writes)… (per-fixture dir: the golden
+    // tests run on parallel test threads and must not race on cleanup)
+    let dir = std::env::temp_dir().join(format!("kb_wire_golden_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join(name);
+    persist::save(&kb, &out).unwrap();
+    let rewritten = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(
+        rewritten, original,
+        "{name}: load -> save no longer reproduces the v1 document byte-for-byte \
+         (wire-format drift against existing KB files)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    // …and through the in-memory serializer the checkpoints use.
+    assert_eq!(persist::to_json(&kb).to_string_pretty(), original, "{name}");
+}
+
+#[test]
+fn plain_v1_document_reproduced_byte_for_byte() {
+    assert_golden_roundtrip("kb_v1_plain.golden.json");
+}
+
+#[test]
+fn lifecycle_v1_document_reproduced_byte_for_byte() {
+    assert_golden_roundtrip("kb_v1_lifecycle.golden.json");
+}
+
+#[test]
+fn golden_fixtures_carry_the_fields_they_pin() {
+    // Guard the fixtures themselves: they must exercise every optional
+    // field class of the format, or the byte-identity assertions above
+    // prove less than they claim.
+    let plain = persist::load(&fixture("kb_v1_plain.golden.json")).unwrap();
+    assert!(plain.arch.is_none() && plain.lineage.is_empty());
+    assert_eq!(plain.states.len(), 3);
+    assert!(plain.states[0].opts.iter().any(|o| !o.notes.is_empty()));
+    assert!(plain.states[0].opts.iter().any(|o| o.notes.is_empty()));
+    assert!(plain.states.iter().flat_map(|s| &s.opts).all(|o| o.origin.is_none()));
+
+    let lc = persist::load(&fixture("kb_v1_lifecycle.golden.json")).unwrap();
+    assert_eq!(lc.arch.as_deref(), Some("H100"));
+    assert_eq!(lc.lineage.len(), 2);
+    let opts: Vec<_> = lc.states.iter().flat_map(|s| &s.opts).collect();
+    assert!(opts.iter().any(|o| o.origin.is_some() && !o.notes.is_empty()));
+    assert!(opts.iter().any(|o| o.origin.is_some() && o.notes.is_empty()));
+    assert!(opts.iter().any(|o| o.origin.is_none()));
+
+    // The fixtures parse as plain JSON too (no printer-only quirks).
+    for name in ["kb_v1_plain.golden.json", "kb_v1_lifecycle.golden.json"] {
+        let text = std::fs::read_to_string(fixture(name)).unwrap();
+        assert!(Json::parse(&text).is_ok(), "{name} is not valid JSON");
+    }
+}
