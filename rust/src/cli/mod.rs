@@ -29,7 +29,7 @@
 use crate::baselines;
 use crate::experiments::{self, Ctx};
 use crate::gpu::GpuArch;
-use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind};
+use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, Schedule};
 use crate::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
 use crate::kb::{persist, KnowledgeBase};
 use crate::runtime;
@@ -117,13 +117,17 @@ USAGE:
   kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
                          [--vendor] [--kb PATH] [--warm-start P1,P2,...]
                          [--save-kb PATH] [--seed N]
-                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search]
+                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search|portfolio]
                          [--epsilon X] [--ucb-c X] [--beam-width N]
+                         [--schedule constant|harmonic|exponential] [--schedule-rate X]
+                         [--dedup-distance X]
   kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
                       [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
                       [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
                       [--vendor] [--policy NAME] [--epsilon X] [--ucb-c X]
-                      [--beam-width N] [--config run.json]
+                      [--beam-width N] [--schedule NAME] [--schedule-rate X]
+                      [--dedup-distance X] [--epoch-policies NAME,NAME,...]
+                      [--config run.json]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
   kernelblaster kb <init|inspect|stats> --path PATH
@@ -137,7 +141,7 @@ USAGE:
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
-  fig19 ablation_mem minimal_agent continual fleet policy
+  fig19 ablation_mem minimal_agent continual fleet policy sweep
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -337,12 +341,31 @@ fn cmd_batch(args: &Args) -> i32 {
         cfg.icrl.harness.allow_vendor = true;
     }
     // Per-batch policy: flags override the config file's [policy] section
-    // (the whole fleet runs one policy; per-task policies would break the
-    // shared-KB delta semantics' evidence comparability).
+    // (within an epoch the whole fleet runs one policy; per-task policies
+    // would break the shared-KB delta semantics' evidence comparability).
     cfg.icrl.policy = match policy_from_flags(args, cfg.icrl.policy) {
         Ok(p) => p,
         Err(code) => return code,
     };
+    // Per-epoch policy mix: `--epoch-policies` replaces the config
+    // file's fleet.epoch_policies outright (explore-heavy early epochs,
+    // exploit later; saturates at the last name). Without it, the CLI
+    // hyperparameter flags overlay each config-file entry so `--epsilon`
+    // etc. mean the same thing whichever source named the mix — only
+    // each entry's kind is the file's to keep.
+    match epoch_policies_from_flags(args, &cfg.icrl.policy) {
+        Ok(mix) if !mix.is_empty() => cfg.fleet.epoch_policies = mix,
+        Ok(_) => {
+            for i in 0..cfg.fleet.epoch_policies.len() {
+                let entry = cfg.fleet.epoch_policies[i].clone();
+                cfg.fleet.epoch_policies[i] = match policy_hypers_from_flags(args, entry) {
+                    Ok(p) => p,
+                    Err(code) => return code,
+                };
+            }
+        }
+        Err(code) => return code,
+    }
     cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
     cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
     cfg.fleet.checkpoint_every =
@@ -698,9 +721,10 @@ fn save_kb(kb: &KnowledgeBase, path: &str) -> Result<(), i32> {
 }
 
 /// Search-policy config from `--policy` / `--epsilon` / `--ucb-c` /
-/// `--beam-width` flags over a base (default or config-file) policy,
-/// enforcing the same hyperparameter contract the config-file path
-/// validates.
+/// `--beam-width` / `--schedule` / `--schedule-rate` /
+/// `--dedup-distance` flags over a base (default or config-file)
+/// policy, enforcing the same hyperparameter contract the config-file
+/// path validates.
 fn policy_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyConfig, i32> {
     let kind = match args.flag("policy") {
         None => base.kind,
@@ -715,17 +739,102 @@ fn policy_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyConfig, i3
             }
         },
     };
+    // A bare --schedule-rate over a constant schedule would be a silent
+    // no-op for the run's policy — reject it here. (The per-entry
+    // epoch-mix overlay is deliberately lenient instead: a mix entry
+    // that pinned `constant` simply keeps it.)
+    if args.flag("schedule").is_none()
+        && args.flag("schedule-rate").is_some()
+        && base.schedule == Schedule::Constant
+    {
+        eprintln!(
+            "--schedule-rate has no effect on the constant schedule; \
+             pass --schedule harmonic|exponential"
+        );
+        return Err(2);
+    }
+    policy_hypers_from_flags(args, PolicyConfig { kind, ..base })
+}
+
+/// Overlay only the hyperparameter flags (`--epsilon` / `--ucb-c` /
+/// `--beam-width` / `--schedule` / `--schedule-rate` /
+/// `--dedup-distance`) onto `base`, keeping its kind. Applied to each
+/// config-file epoch-mix entry so the shared flags mean the same thing
+/// whichever source named the mix (`--policy` changes only the batch
+/// default, never a mix entry's kind).
+fn policy_hypers_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyConfig, i32> {
+    let schedule = match args.flag("schedule") {
+        None => match args.flag("schedule-rate") {
+            None => base.schedule,
+            // A bare --schedule-rate re-rates the base schedule's kind;
+            // a constant base has no rate and keeps its schedule (the
+            // would-be-no-op hard error lives in `policy_from_flags`,
+            // scoped to the run's own policy).
+            Some(_) if base.schedule == Schedule::Constant => base.schedule,
+            Some(_) => Schedule::from_parts(
+                base.schedule.name(),
+                args.f64_flag("schedule-rate", Schedule::DEFAULT_RATE),
+            )
+            .expect("own names always parse"),
+        },
+        Some(name) => {
+            let rate = args.f64_flag("schedule-rate", Schedule::DEFAULT_RATE);
+            match Schedule::from_parts(name, rate) {
+                Some(s) => s,
+                None => {
+                    eprintln!(
+                        "unknown --schedule '{name}' (known: {})",
+                        Schedule::known_names()
+                    );
+                    return Err(2);
+                }
+            }
+        }
+    };
     let policy = PolicyConfig {
-        kind,
+        kind: base.kind,
         epsilon: args.f64_flag("epsilon", base.epsilon),
         ucb_c: args.f64_flag("ucb-c", base.ucb_c),
         beam_width: args.usize_flag("beam-width", base.beam_width),
+        schedule,
+        dedup_distance: args.f64_flag("dedup-distance", base.dedup_distance),
     };
     if let Err(e) = policy.validate() {
         eprintln!("{e}");
         return Err(2);
     }
     Ok(policy)
+}
+
+/// Parse `--epoch-policies a,b,c` into a per-epoch policy mix: each name
+/// becomes the batch policy with its `kind` replaced, so the shared
+/// hyperparameter flags (`--epsilon`, `--schedule`, …) apply to every
+/// epoch. Returns an empty vec when the flag is absent.
+fn epoch_policies_from_flags(args: &Args, base: &PolicyConfig) -> Result<Vec<PolicyConfig>, i32> {
+    let Some(list) = args.flag("epoch-policies") else {
+        return Ok(Vec::new());
+    };
+    let mut mix = Vec::new();
+    for name in list.split(',').filter(|s| !s.is_empty()) {
+        match PolicyKind::from_name(name) {
+            Some(kind) => mix.push(PolicyConfig {
+                kind,
+                ..base.clone()
+            }),
+            None => {
+                eprintln!(
+                    "unknown policy '{name}' in --epoch-policies (known: {})",
+                    PolicyKind::known_names()
+                );
+                return Err(2);
+            }
+        }
+    }
+    if mix.is_empty() {
+        eprintln!("batch: --epoch-policies given but names no policy");
+        return Err(2);
+    }
+    Ok(mix)
 }
 
 /// Transfer policy from `--decay` / `--rekey-threshold` flags, enforcing
@@ -1056,7 +1165,13 @@ mod tests {
     #[test]
     fn optimize_policy_flags_select_and_validate() {
         // Every named policy is reachable from the CLI.
-        for policy in ["greedy_topk", "epsilon_greedy", "ucb_bandit", "beam_search"] {
+        for policy in [
+            "greedy_topk",
+            "epsilon_greedy",
+            "ucb_bandit",
+            "beam_search",
+            "portfolio",
+        ] {
             assert_eq!(
                 run(&argv(&format!(
                     "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
@@ -1087,6 +1202,130 @@ mod tests {
             run(&argv("optimize --task L1/15_relu --policy ucb_bandit --ucb-c -2")),
             2
         );
+    }
+
+    #[test]
+    fn optimize_schedule_and_dedup_flags_select_and_validate() {
+        // Annealed schedules ride any policy from the CLI.
+        for sched in ["constant", "harmonic", "exponential"] {
+            assert_eq!(
+                run(&argv(&format!(
+                    "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                     --policy epsilon_greedy --schedule {sched} --schedule-rate 0.5"
+                ))),
+                0,
+                "--schedule {sched} failed"
+            );
+        }
+        // Similarity dedup threshold on a beam run.
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                 --policy beam_search --beam-width 2 --dedup-distance 1.5"
+            )),
+            0
+        );
+        // Unknown schedule / bad rate / bad threshold / a bare rate over
+        // the constant schedule are usage errors.
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --schedule cosine")),
+            2
+        );
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --schedule-rate 0.5")),
+            2
+        );
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --schedule harmonic --schedule-rate -1"
+            )),
+            2
+        );
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --dedup-distance -0.5")),
+            2
+        );
+    }
+
+    #[test]
+    fn batch_epoch_policies_flag_schedules_the_mix() {
+        let dir = std::env::temp_dir().join("kb_cli_epoch_mix_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(&jobs, "L1/12_softmax\nL1/15_relu\nL1/01_matmul_square\n").unwrap();
+        let jobs_s = jobs.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&format!(
+                "batch --jobs {jobs_s} --gpu A100 --workers 2 --epoch-size 1 \
+                 --trajectories 1 --steps 2 \
+                 --epoch-policies epsilon_greedy,epsilon_greedy,ucb_bandit"
+            ))),
+            0
+        );
+        // Unknown names in the mix are usage errors.
+        assert_eq!(
+            run(&argv(&format!(
+                "batch --jobs {jobs_s} --epoch-policies epsilon_greedy,bogus"
+            ))),
+            2
+        );
+        assert_eq!(
+            run(&argv(&format!("batch --jobs {jobs_s} --epoch-policies ,"))),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_hyperparameter_flags_overlay_config_file_epoch_mix() {
+        // A config file's epoch mix must see later CLI hyperparameter
+        // overrides exactly as a flag-built mix does: `--epsilon 0.6`
+        // over a file mix equals a file whose policy already says 0.6.
+        let dir = std::env::temp_dir().join("kb_cli_mix_overlay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(&jobs, "L1/12_softmax\nL1/15_relu\n").unwrap();
+        let write_cfg = |name: &str, epsilon: f64| {
+            let p = dir.join(name);
+            std::fs::write(
+                &p,
+                format!(
+                    r#"{{"gpu":"A100","policy":{{"kind":"epsilon_greedy","epsilon":{epsilon}}},
+                        "fleet":{{"epoch_size":1,"epoch_policies":[
+                            {{"kind":"epsilon_greedy"}},{{"kind":"ucb_bandit"}}]}}}}"#
+                ),
+            )
+            .unwrap();
+            p
+        };
+        let low = write_cfg("low.json", 0.0);
+        let high = write_cfg("high.json", 1.0);
+        let run_batch = |cfg_path: &Path, extra: &str, out: &Path| {
+            let argv: Vec<String> = format!(
+                "batch --jobs {} --config {}{extra} --workers 1 \
+                 --trajectories 2 --steps 3 --seed 5 --save-kb {}",
+                jobs.to_str().unwrap(),
+                cfg_path.display(),
+                out.display()
+            )
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+            assert_eq!(run(&argv), 0);
+            std::fs::read(out).unwrap()
+        };
+        let flag_over_low = run_batch(&low, " --epsilon 1.0", &dir.join("a.json"));
+        let native_high = run_batch(&high, "", &dir.join("b.json"));
+        let native_low = run_batch(&low, "", &dir.join("c.json"));
+        assert_eq!(
+            flag_over_low, native_high,
+            "--epsilon must overlay the config-file epoch mix"
+        );
+        assert_ne!(
+            native_low, native_high,
+            "fixture must be ε-sensitive for the overlay check to mean anything"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

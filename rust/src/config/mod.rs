@@ -13,7 +13,7 @@
 use crate::agents::AgentConfig;
 use crate::gpu::GpuArch;
 use crate::harness::HarnessConfig;
-use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind};
+use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind, Schedule};
 use crate::kb::lifecycle::TransferPolicy;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
@@ -65,6 +65,81 @@ pub enum ConfigError {
     Invalid(String),
 }
 
+/// Serialize one search-policy block (the root `policy` section and each
+/// `fleet.epoch_policies` entry share this shape).
+fn policy_to_json(p: &PolicyConfig) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("kind", p.kind.name());
+    o.set("epsilon", p.epsilon);
+    o.set("ucb_c", p.ucb_c);
+    o.set("beam_width", p.beam_width);
+    o.set("schedule", p.schedule.name());
+    o.set("schedule_rate", p.schedule.rate());
+    o.set("dedup_distance", p.dedup_distance);
+    o
+}
+
+/// Parse one search-policy block over a base config (absent keys inherit
+/// the base — the root section inherits the crate defaults, an
+/// `epoch_policies` entry inherits the run's policy, so a mix entry can
+/// name just a `kind` and keep the batch's hyperparameters).
+fn policy_from_json(p: &Json, base: &PolicyConfig) -> Result<PolicyConfig, ConfigError> {
+    let kind = match p.get("kind").and_then(Json::as_str) {
+        None => base.kind,
+        Some(name) => PolicyKind::from_name(name).ok_or_else(|| {
+            ConfigError::Invalid(format!(
+                "unknown policy '{name}' (known: {})",
+                PolicyKind::known_names()
+            ))
+        })?,
+    };
+    let schedule = match p.get("schedule").and_then(Json::as_str) {
+        None => match p.get("schedule_rate").and_then(Json::as_f64) {
+            None => base.schedule,
+            // A bare rate re-rates the inherited schedule's kind — but a
+            // constant base has no rate to re-rate: silently dropping the
+            // key would hide a config mistake, so reject it.
+            Some(rate) => {
+                if base.schedule == Schedule::Constant {
+                    return Err(ConfigError::Invalid(
+                        "policy.schedule_rate has no effect on the constant schedule; \
+                         set policy.schedule to harmonic or exponential"
+                            .into(),
+                    ));
+                }
+                Schedule::from_parts(base.schedule.name(), rate)
+                    .expect("own names always parse")
+            }
+        },
+        Some(name) => {
+            let rate = p
+                .get("schedule_rate")
+                .and_then(Json::as_f64)
+                .unwrap_or(Schedule::DEFAULT_RATE);
+            Schedule::from_parts(name, rate).ok_or_else(|| {
+                ConfigError::Invalid(format!(
+                    "unknown schedule '{name}' (known: {})",
+                    Schedule::known_names()
+                ))
+            })?
+        }
+    };
+    Ok(PolicyConfig {
+        kind,
+        epsilon: p.get("epsilon").and_then(Json::as_f64).unwrap_or(base.epsilon),
+        ucb_c: p.get("ucb_c").and_then(Json::as_f64).unwrap_or(base.ucb_c),
+        beam_width: p
+            .get("beam_width")
+            .and_then(Json::as_usize)
+            .unwrap_or(base.beam_width),
+        schedule,
+        dedup_distance: p
+            .get("dedup_distance")
+            .and_then(Json::as_f64)
+            .unwrap_or(base.dedup_distance),
+    })
+}
+
 impl RunConfig {
     pub fn resolve_arch(&self) -> Result<GpuArch, ConfigError> {
         GpuArch::by_name(&self.gpu)
@@ -89,16 +164,23 @@ impl RunConfig {
             },
         );
         root.set("icrl", icrl);
-        let mut policy = JsonObj::new();
-        policy.set("kind", self.icrl.policy.kind.name());
-        policy.set("epsilon", self.icrl.policy.epsilon);
-        policy.set("ucb_c", self.icrl.policy.ucb_c);
-        policy.set("beam_width", self.icrl.policy.beam_width);
-        root.set("policy", policy);
+        root.set("policy", policy_to_json(&self.icrl.policy));
         let mut fleet = JsonObj::new();
         fleet.set("workers", self.fleet.workers);
         fleet.set("epoch_size", self.fleet.epoch_size);
         fleet.set("checkpoint_every", self.fleet.checkpoint_every);
+        if !self.fleet.epoch_policies.is_empty() {
+            fleet.set(
+                "epoch_policies",
+                Json::Arr(
+                    self.fleet
+                        .epoch_policies
+                        .iter()
+                        .map(|p| Json::Obj(policy_to_json(p)))
+                        .collect(),
+                ),
+            );
+        }
         root.set("fleet", fleet);
         let mut agent = JsonObj::new();
         agent.set("state_misclassify_rate", self.icrl.agent.state_misclassify_rate);
@@ -180,28 +262,19 @@ impl RunConfig {
             };
         }
         if let Some(p) = j.get("policy") {
-            let d = PolicyConfig::default();
-            let kind = match p.get("kind").and_then(Json::as_str) {
-                None => d.kind,
-                Some(name) => PolicyKind::from_name(name).ok_or_else(|| {
-                    ConfigError::Invalid(format!(
-                        "unknown policy '{name}' (known: {})",
-                        PolicyKind::known_names()
-                    ))
-                })?,
-            };
-            cfg.icrl.policy = PolicyConfig {
-                kind,
-                epsilon: p.get("epsilon").and_then(Json::as_f64).unwrap_or(d.epsilon),
-                ucb_c: p.get("ucb_c").and_then(Json::as_f64).unwrap_or(d.ucb_c),
-                beam_width: p
-                    .get("beam_width")
-                    .and_then(Json::as_usize)
-                    .unwrap_or(d.beam_width),
-            };
+            cfg.icrl.policy = policy_from_json(p, &PolicyConfig::default())?;
         }
         if let Some(fleet) = j.get("fleet") {
             let d = FleetConfig::default();
+            let mut epoch_policies = Vec::new();
+            if let Some(arr) = fleet.get("epoch_policies").and_then(Json::as_arr) {
+                // Mix entries inherit the run's policy (parsed above), so
+                // `[{"kind":"epsilon_greedy"},{"kind":"ucb_bandit"}]`
+                // keeps the batch's ε / c / schedule knobs.
+                for p in arr {
+                    epoch_policies.push(policy_from_json(p, &cfg.icrl.policy)?);
+                }
+            }
             cfg.fleet = FleetConfig {
                 workers: fleet
                     .get("workers")
@@ -215,6 +288,7 @@ impl RunConfig {
                     .get("checkpoint_every")
                     .and_then(Json::as_usize)
                     .unwrap_or(d.checkpoint_every),
+                epoch_policies,
             };
         }
         if let Some(agent) = j.get("agent") {
@@ -291,6 +365,10 @@ impl RunConfig {
             )));
         }
         cfg.icrl.policy.validate().map_err(ConfigError::Invalid)?;
+        for (i, p) in cfg.fleet.epoch_policies.iter().enumerate() {
+            p.validate()
+                .map_err(|e| ConfigError::Invalid(format!("fleet.epoch_policies[{i}]: {e}")))?;
+        }
         cfg.resolve_arch()?;
         Ok(cfg)
     }
@@ -382,6 +460,8 @@ mod tests {
                     epsilon: 0.3,
                     ucb_c: 1.25,
                     beam_width: 4,
+                    schedule: Schedule::Harmonic { rate: 0.5 },
+                    dedup_distance: 1.5,
                 },
                 ..Default::default()
             },
@@ -410,12 +490,103 @@ mod tests {
     }
 
     #[test]
+    fn schedule_and_dedup_roundtrip_and_validate() {
+        // Named schedule with explicit rate.
+        let j = Json::parse(
+            r#"{"policy":{"kind":"epsilon_greedy","schedule":"exponential","schedule_rate":0.5,"dedup_distance":2.0}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.icrl.policy.schedule, Schedule::Exponential { rate: 0.5 });
+        assert_eq!(c.icrl.policy.dedup_distance, 2.0);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.icrl.policy, c.icrl.policy);
+        // Named schedule without a rate takes the default.
+        let j = Json::parse(r#"{"policy":{"schedule":"harmonic"}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.icrl.policy.schedule,
+            Schedule::Harmonic {
+                rate: Schedule::DEFAULT_RATE
+            }
+        );
+        // Absent schedule keys = constant (the bit-identity default).
+        let plain = RunConfig::from_json(&Json::parse(r#"{"policy":{"kind":"ucb_bandit"}}"#).unwrap())
+            .unwrap();
+        assert_eq!(plain.icrl.policy.schedule, Schedule::Constant);
+        assert_eq!(plain.icrl.policy.dedup_distance, 0.0);
+        // A bare rate over a non-constant inherited schedule re-rates it…
+        let j = Json::parse(
+            r#"{"policy":{"schedule":"harmonic"},
+                "fleet":{"epoch_policies":[{"kind":"ucb_bandit","schedule_rate":0.75}]}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(
+            c.fleet.epoch_policies[0].schedule,
+            Schedule::Harmonic { rate: 0.75 }
+        );
+        // Unknown schedule name, bad rates/thresholds, and a bare rate
+        // over the constant schedule (nothing to re-rate) rejected.
+        for bad in [
+            r#"{"policy":{"schedule":"cosine"}}"#,
+            r#"{"policy":{"schedule":"harmonic","schedule_rate":-0.5}}"#,
+            r#"{"policy":{"dedup_distance":-1.0}}"#,
+            r#"{"policy":{"schedule_rate":0.5}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(RunConfig::from_json(&j).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn epoch_policy_mix_roundtrips_inherits_and_validates() {
+        // Entries inherit the run policy's hyperparameters: name just a
+        // kind, keep the batch's ε and schedule.
+        let j = Json::parse(
+            r#"{"policy":{"epsilon":0.4,"schedule":"harmonic","schedule_rate":0.5},
+                "fleet":{"epoch_size":2,"epoch_policies":[
+                    {"kind":"epsilon_greedy"},
+                    {"kind":"epsilon_greedy","epsilon":0.1},
+                    {"kind":"ucb_bandit"}]}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.fleet.epoch_policies.len(), 3);
+        assert_eq!(c.fleet.epoch_policies[0].kind, PolicyKind::EpsilonGreedy);
+        assert_eq!(c.fleet.epoch_policies[0].epsilon, 0.4, "inherits run ε");
+        assert_eq!(
+            c.fleet.epoch_policies[0].schedule,
+            Schedule::Harmonic { rate: 0.5 },
+            "inherits run schedule"
+        );
+        assert_eq!(c.fleet.epoch_policies[1].epsilon, 0.1, "own ε wins");
+        assert_eq!(c.fleet.epoch_policies[2].kind, PolicyKind::UcbBandit);
+        // Full file roundtrip preserves the mix.
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.fleet.epoch_policies, c.fleet.epoch_policies);
+        // Absent = empty (the pre-mix fleet).
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert!(plain.fleet.epoch_policies.is_empty());
+        // Invalid entries are rejected with their index.
+        let j = Json::parse(
+            r#"{"fleet":{"epoch_policies":[{"kind":"epsilon_greedy","epsilon":2.0}]}}"#,
+        )
+        .unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("epoch_policies[0]"), "{err}");
+        let j = Json::parse(r#"{"fleet":{"epoch_policies":[{"kind":"bogus"}]}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn fleet_roundtrips_and_validates() {
         let cfg = RunConfig {
             fleet: FleetConfig {
                 workers: 8,
                 epoch_size: 16,
                 checkpoint_every: 5,
+                ..Default::default()
             },
             ..Default::default()
         };

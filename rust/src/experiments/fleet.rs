@@ -173,6 +173,7 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
         workers: 4,
         epoch_size: 4,
         checkpoint_every: 0,
+        ..Default::default()
     };
     let tasks = ctx.tasks(Level::L1);
     let (seq, fleet, e1) = arms(&tasks, &arch, &cfg, &fleet_cfg);
@@ -266,6 +267,7 @@ mod tests {
             workers: 2,
             epoch_size: 2,
             checkpoint_every: 0,
+            ..Default::default()
         };
         let arch = GpuArch::a100();
         let (seq, fleet, e1) = arms(&tasks, &arch, &cfg, &fleet_cfg);

@@ -1,7 +1,7 @@
 //! Experiment registry: one regenerator per paper table/figure, plus the
 //! [`continual`] cross-arch lifecycle scenario, the [`fleet`]
-//! batch-serving throughput/parity scenario, and the [`policy`]
-//! four-arm search-policy comparison.
+//! batch-serving throughput/parity scenario, the [`policy`] search-policy
+//! comparison, and the [`sweep`] exploration-hyperparameter grid.
 //!
 //! Every entry produces a [`Report`] — human-readable tables/plots plus
 //! machine-readable CSVs — from the same code paths the CLI
@@ -19,7 +19,63 @@ pub mod fleet;
 pub mod hyperparams;
 pub mod learning;
 pub mod policy;
+pub mod sweep;
 pub mod table3;
+
+/// Paired-grid measurement plumbing shared by the [`policy`] and
+/// [`sweep`] scenarios: every arm runs an identical `(task, seed)` grid
+/// (seed-major, task-minor — the pairing key is the cell index), and
+/// arm-vs-baseline comparisons use the both-valid pairing discipline.
+pub(crate) mod pairing {
+    use crate::util::stats;
+
+    /// One `(task, seed)` cell of an arm's grid.
+    pub(crate) struct Cell {
+        /// The run produced at least one valid kernel.
+        pub valid: bool,
+        /// Speedup vs naive (meaningful only when `valid`).
+        pub speedup: f64,
+        /// Token cost of the cell's run.
+        pub tokens: usize,
+    }
+
+    /// Geomean speedup over the arm's valid cells (NaN when none — the
+    /// crate's degenerate-input stats convention).
+    pub(crate) fn geomean_valid(cells: &[Cell]) -> f64 {
+        let v: Vec<f64> = cells
+            .iter()
+            .filter(|c| c.valid)
+            .map(|c| c.speedup)
+            .collect();
+        stats::geomean(&v)
+    }
+
+    /// Cells that produced a valid kernel.
+    pub(crate) fn valid_count(cells: &[Cell]) -> usize {
+        cells.iter().filter(|c| c.valid).count()
+    }
+
+    /// Mean token cost per cell.
+    pub(crate) fn tokens_per_cell(cells: &[Cell]) -> f64 {
+        let total: usize = cells.iter().map(|c| c.tokens).sum();
+        total as f64 / cells.len().max(1) as f64
+    }
+
+    /// Paired comparison against a baseline arm: geomean speedup ratio
+    /// over cells valid in BOTH. Returns (ratio, pairs); with zero
+    /// both-valid pairs the ratio is NaN (serialized as `null`, rendered
+    /// `-`) — consumers must check the pair count first.
+    pub(crate) fn paired_vs(arm: &[Cell], baseline: &[Cell]) -> (f64, usize) {
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for (ca, cb) in arm.iter().zip(baseline) {
+            if ca.valid && cb.valid {
+                a.push(ca.speedup);
+                b.push(cb.speedup);
+            }
+        }
+        (stats::geomean(&a) / stats::geomean(&b), a.len())
+    }
+}
 
 use crate::baselines;
 use crate::gpu::GpuArch;
@@ -200,6 +256,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("continual", continual::run),
         ("fleet", fleet::run),
         ("policy", policy::run),
+        ("sweep", sweep::run),
     ]
 }
 

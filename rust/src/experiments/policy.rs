@@ -1,5 +1,7 @@
-//! Search-policy scenario: the four [`crate::icrl::policy`] arms
-//! compared over paired seeds.
+//! Search-policy scenario: the built-in [`crate::icrl::policy`] arms
+//! (one per [`PolicyKind`], each at its default hyperparameters)
+//! compared over paired seeds. The per-knob grid is the separate
+//! [`super::sweep`] scenario.
 //!
 //! Same task list, same `(task, seed)` grid for every arm — only the
 //! [`crate::icrl::PolicyKind`] differs — so per-cell differences are
@@ -12,28 +14,20 @@
 //! `kernelblaster-bench-policy-v1`) — CI runs the quick scale and
 //! uploads the JSON as an artifact.
 
+use super::pairing::{self, Cell};
 use super::{Ctx, Report, Section};
 use crate::gpu::GpuArch;
 use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind};
 use crate::kb::KnowledgeBase;
 use crate::tasks::{Level, Task};
 use crate::util::json::{Json, JsonObj};
-use crate::util::stats;
 use crate::util::table::{fnum, Table};
 use std::path::Path;
 
-/// One `(task, seed)` cell of an arm's grid.
-struct Cell {
-    valid: bool,
-    speedup: f64,
-    tokens: usize,
-}
-
-/// One policy arm's measurements over the full grid.
+/// One policy arm's measurements over the full grid (cells in the
+/// [`pairing`] discipline's grid order).
 struct Arm {
     kind: PolicyKind,
-    /// Cells in grid order: seed-major, task-minor (identical layout for
-    /// every arm — the pairing key is the cell index).
     cells: Vec<Cell>,
     /// KB states discovered, summed over the per-seed runs.
     kb_states: usize,
@@ -41,44 +35,27 @@ struct Arm {
 
 impl Arm {
     fn geomean_valid(&self) -> f64 {
-        let v: Vec<f64> = self
-            .cells
-            .iter()
-            .filter(|c| c.valid)
-            .map(|c| c.speedup)
-            .collect();
-        stats::geomean(&v)
+        pairing::geomean_valid(&self.cells)
     }
 
     fn valid_count(&self) -> usize {
-        self.cells.iter().filter(|c| c.valid).count()
+        pairing::valid_count(&self.cells)
     }
 
     fn tokens_per_cell(&self) -> f64 {
-        let total: usize = self.cells.iter().map(|c| c.tokens).sum();
-        total as f64 / self.cells.len().max(1) as f64
+        pairing::tokens_per_cell(&self.cells)
     }
 }
 
-/// Paired comparison of an arm against the baseline arm: geomean ratio
-/// over cells valid in BOTH (the both-valid discipline of
-/// [`super::continual`]). Returns (ratio, pairs). With zero both-valid
-/// pairs the ratio is NaN by the crate's degenerate-input stats
-/// convention (`util::stats`) — rendered as `-` in the table and `null`
-/// in the JSON artifact; consumers must check `paired_cells` first.
+/// Paired comparison of an arm against the baseline arm — the shared
+/// both-valid discipline ([`pairing::paired_vs`]; check the pair count
+/// before the ratio).
 fn paired_vs(arm: &Arm, baseline: &Arm) -> (f64, usize) {
-    let (mut a, mut b) = (Vec::new(), Vec::new());
-    for (ca, cb) in arm.cells.iter().zip(&baseline.cells) {
-        if ca.valid && cb.valid {
-            a.push(ca.speedup);
-            b.push(cb.speedup);
-        }
-    }
-    (stats::geomean(&a) / stats::geomean(&b), a.len())
+    pairing::paired_vs(&arm.cells, &baseline.cells)
 }
 
-/// Run all four arms over an explicit task list and seed set (tests
-/// shrink both).
+/// Run every [`PolicyKind`] arm over an explicit task list and seed set
+/// (tests shrink both).
 fn arms(tasks: &[&Task], arch: &GpuArch, base: &IcrlConfig, seeds: &[u64]) -> Vec<Arm> {
     PolicyKind::all()
         .iter()
@@ -205,7 +182,8 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
                 "greedy_topk is the pre-policy-subsystem driver bit-for-bit \
                  (tests/policy.rs); the other arms trade its exploit-heavy draw for \
                  an exploration floor (epsilon_greedy), an evidence-uncertainty bonus \
-                 (ucb_bandit), or a carried frontier (beam_search)"
+                 (ucb_bandit), a carried frontier (beam_search), or a contrastive \
+                 explore/exploit mix arbitrated per state (portfolio)"
                     .to_string(),
                 format!("machine-readable: {}", out.display()),
             ],
@@ -226,7 +204,7 @@ mod tests {
     use crate::tasks::Suite;
 
     #[test]
-    fn policy_experiment_compares_four_paired_arms() {
+    fn policy_experiment_compares_all_paired_arms() {
         let suite = Suite::full();
         let tasks: Vec<&Task> = vec![
             suite.by_id("L1/12_softmax").unwrap(),
@@ -245,8 +223,10 @@ mod tests {
         let arch = GpuArch::a100();
         let seeds = [3u64, 4];
         let all = arms(&tasks, &arch, &base, &seeds);
-        assert_eq!(all.len(), 4);
+        assert_eq!(all.len(), PolicyKind::all().len());
+        assert_eq!(all.len(), 5);
         assert_eq!(all[0].kind, PolicyKind::GreedyTopK);
+        assert_eq!(all[4].kind, PolicyKind::Portfolio);
         for arm in &all {
             assert_eq!(arm.cells.len(), 4, "{}: 2 tasks x 2 seeds", arm.kind.name());
             assert!(arm.valid_count() > 0, "{}: nothing valid", arm.kind.name());
@@ -257,7 +237,7 @@ mod tests {
         assert_eq!(self_ratio, 1.0);
         assert_eq!(pairs, all[0].valid_count());
 
-        // The JSON artifact parses and carries all four arms.
+        // The JSON artifact parses and carries every arm.
         let dir = std::env::temp_dir().join("kb_policy_exp_test");
         std::fs::create_dir_all(&dir).unwrap();
         let out = dir.join("BENCH_policy.json");
@@ -268,7 +248,7 @@ mod tests {
             Some("kernelblaster-bench-policy-v1")
         );
         let arms_json = j.get("arms").and_then(Json::as_arr).unwrap();
-        assert_eq!(arms_json.len(), 4);
+        assert_eq!(arms_json.len(), 5);
         assert_eq!(
             arms_json[0].get("policy").and_then(Json::as_str),
             Some("greedy_topk")

@@ -1,0 +1,424 @@
+//! Hyperparameter-sweep scenario: a paired-seed grid over the
+//! exploration knobs — ε, UCB-c, beam width B, and the annealing
+//! schedules — locating the knees `experiment policy` (which runs every
+//! arm at its defaults) cannot see.
+//!
+//! Same discipline as the policy scenario: every arm runs the identical
+//! `(task, seed)` grid, so per-cell differences are attributable to the
+//! hyperparameter alone, and each arm's headline is its paired geomean
+//! ratio against the `greedy_topk` baseline over both-valid cells.
+//! Reported as a [`Report`] plus machine-readable `BENCH_sweep.json`
+//! (format `kernelblaster-bench-sweep-v1`) — CI runs the quick scale and
+//! uploads the JSON as an artifact. How to *read* a sweep (which knob to
+//! move when) is the worked example in `docs/TUNING.md`.
+
+use super::pairing::{self, Cell};
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, Schedule};
+use crate::kb::KnowledgeBase;
+use crate::tasks::{Level, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+
+/// One hyperparameter setting's measurements over the full grid (cells
+/// in the [`pairing`] discipline's grid order).
+struct Arm {
+    /// Human-readable knob setting (`eps=0.05+harmonic`, `B=4`, …).
+    label: String,
+    policy: PolicyConfig,
+    cells: Vec<Cell>,
+}
+
+impl Arm {
+    fn geomean_valid(&self) -> f64 {
+        pairing::geomean_valid(&self.cells)
+    }
+
+    fn valid_count(&self) -> usize {
+        pairing::valid_count(&self.cells)
+    }
+
+    fn tokens_per_cell(&self) -> f64 {
+        pairing::tokens_per_cell(&self.cells)
+    }
+}
+
+/// Paired comparison against the baseline arm — the shared both-valid
+/// discipline ([`pairing::paired_vs`]; check the pair count before the
+/// ratio).
+fn paired_vs(arm: &Arm, baseline: &Arm) -> (f64, usize) {
+    pairing::paired_vs(&arm.cells, &baseline.cells)
+}
+
+/// The sweep grid: label + policy per arm, `greedy_topk` first (the
+/// pairing baseline). Quick mode trims each axis to its endpoints.
+fn grid(quick: bool) -> Vec<(String, PolicyConfig)> {
+    let d = PolicyConfig::default();
+    let schedules = [
+        Schedule::Harmonic {
+            rate: Schedule::DEFAULT_RATE,
+        },
+        Schedule::Exponential {
+            rate: Schedule::DEFAULT_RATE,
+        },
+    ];
+    let mut arms: Vec<(String, PolicyConfig)> =
+        vec![("greedy_topk".to_string(), d.clone())];
+    // ε axis (constant schedule), then the schedules at the default ε.
+    let eps: &[f64] = if quick { &[0.05, 0.3] } else { &[0.05, 0.15, 0.3] };
+    for &e in eps {
+        arms.push((
+            format!("eps={e}"),
+            PolicyConfig {
+                kind: PolicyKind::EpsilonGreedy,
+                epsilon: e,
+                ..d.clone()
+            },
+        ));
+    }
+    for s in schedules {
+        arms.push((
+            format!("eps={}+{}", d.epsilon, s.name()),
+            PolicyConfig {
+                kind: PolicyKind::EpsilonGreedy,
+                schedule: s,
+                ..d.clone()
+            },
+        ));
+    }
+    // UCB-c axis, then the schedules at the default c.
+    let cs: &[f64] = if quick { &[0.25, 1.0] } else { &[0.25, 0.5, 1.0] };
+    for &c in cs {
+        arms.push((
+            format!("c={c}"),
+            PolicyConfig {
+                kind: PolicyKind::UcbBandit,
+                ucb_c: c,
+                ..d.clone()
+            },
+        ));
+    }
+    for s in schedules {
+        arms.push((
+            format!("c={}+{}", d.ucb_c, s.name()),
+            PolicyConfig {
+                kind: PolicyKind::UcbBandit,
+                schedule: s,
+                ..d.clone()
+            },
+        ));
+    }
+    // Beam-width axis.
+    let widths: &[usize] = if quick { &[2] } else { &[2, 3, 4] };
+    for &b in widths {
+        arms.push((
+            format!("B={b}"),
+            PolicyConfig {
+                kind: PolicyKind::BeamSearch,
+                beam_width: b,
+                ..d.clone()
+            },
+        ));
+    }
+    // Portfolio: default knobs, plus its annealed variants at full scale.
+    arms.push((
+        "portfolio".to_string(),
+        PolicyConfig {
+            kind: PolicyKind::Portfolio,
+            ..d.clone()
+        },
+    ));
+    if !quick {
+        for s in schedules {
+            arms.push((
+                format!("portfolio+{}", s.name()),
+                PolicyConfig {
+                    kind: PolicyKind::Portfolio,
+                    schedule: s,
+                    ..d.clone()
+                },
+            ));
+        }
+    }
+    arms
+}
+
+/// Run every arm of the grid over an explicit task list and seed set
+/// (tests shrink both).
+fn run_arms(
+    grid: &[(String, PolicyConfig)],
+    tasks: &[&Task],
+    arch: &GpuArch,
+    base: &IcrlConfig,
+    seeds: &[u64],
+) -> Vec<Arm> {
+    grid.iter()
+        .map(|(label, policy)| {
+            let mut cells = Vec::with_capacity(seeds.len() * tasks.len());
+            for &seed in seeds {
+                let cfg = IcrlConfig {
+                    policy: policy.clone(),
+                    seed,
+                    ..base.clone()
+                };
+                let mut kb = KnowledgeBase::empty();
+                let runs = icrl::run_suite(tasks, arch, &mut kb, &cfg);
+                cells.extend(runs.iter().map(|r| Cell {
+                    valid: r.valid,
+                    speedup: r.speedup_vs_naive(),
+                    tokens: r.tokens.total(),
+                }));
+            }
+            Arm {
+                label: label.clone(),
+                policy: policy.clone(),
+                cells,
+            }
+        })
+        .collect()
+}
+
+/// Serialize the measurement into `kernelblaster-bench-sweep-v1`.
+fn write_bench_json(
+    arch: &GpuArch,
+    base: &IcrlConfig,
+    n_tasks: usize,
+    seeds: &[u64],
+    all: &[Arm],
+    path: &Path,
+) {
+    let baseline = &all[0]; // the grid leads with greedy_topk
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-bench-sweep-v1");
+    root.set("gpu", arch.name);
+    root.set("tasks", n_tasks);
+    root.set(
+        "seeds",
+        Json::Arr(seeds.iter().map(|&s| Json::from(s)).collect()),
+    );
+    root.set("top_k", base.top_k);
+    root.set("trajectories", base.trajectories);
+    root.set("rollout_steps", base.rollout_steps);
+    let arms_json: Vec<Json> = all
+        .iter()
+        .map(|arm| {
+            let (ratio, pairs) = paired_vs(arm, baseline);
+            let mut o = JsonObj::new();
+            o.set("label", arm.label.as_str());
+            o.set("policy", arm.policy.kind.name());
+            o.set("epsilon", arm.policy.epsilon);
+            o.set("ucb_c", arm.policy.ucb_c);
+            o.set("beam_width", arm.policy.beam_width);
+            o.set("schedule", arm.policy.schedule.name());
+            o.set("schedule_rate", arm.policy.schedule.rate());
+            o.set("geomean_vs_naive", arm.geomean_valid());
+            o.set("valid", arm.valid_count());
+            o.set("cells", arm.cells.len());
+            o.set("vs_greedy_paired", ratio);
+            o.set("paired_cells", pairs);
+            o.set("tokens_per_task", arm.tokens_per_cell());
+            Json::Obj(o)
+        })
+        .collect();
+    root.set("arms", Json::Arr(arms_json));
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: failed to write {}: {e}", path.display()),
+    }
+}
+
+/// The `sweep` experiment with an explicit JSON output path.
+pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
+    let arch = GpuArch::h100();
+    let base = ctx.icrl_cfg(false);
+    let seeds: Vec<u64> = if ctx.quick {
+        vec![ctx.seed, ctx.seed + 1]
+    } else {
+        vec![ctx.seed, ctx.seed + 1, ctx.seed + 2]
+    };
+    // The sweep multiplies arms, so its task list is leaner than the
+    // policy scenario's: every other L1 task at quick scale.
+    let all_tasks = ctx.tasks(Level::L1);
+    let tasks: Vec<&Task> = if ctx.quick {
+        all_tasks.into_iter().step_by(2).collect()
+    } else {
+        all_tasks
+    };
+    let grid = grid(ctx.quick);
+    let all = run_arms(&grid, &tasks, &arch, &base, &seeds);
+    let baseline = &all[0];
+
+    let mut t = Table::new(&[
+        "arm",
+        "policy",
+        "schedule",
+        "geomean vs naive",
+        "vs greedy (paired)",
+        "valid",
+        "tokens/task",
+    ]);
+    for arm in &all {
+        let (ratio, pairs) = paired_vs(arm, baseline);
+        t.add_row(vec![
+            arm.label.clone(),
+            arm.policy.kind.name().to_string(),
+            arm.policy.schedule.name().to_string(),
+            fnum(arm.geomean_valid(), 3),
+            format!("{} ({pairs} pairs)", fnum(ratio, 3)),
+            format!("{}/{}", arm.valid_count(), arm.cells.len()),
+            fnum(arm.tokens_per_cell(), 0),
+        ]);
+    }
+    write_bench_json(&arch, &base, tasks.len(), &seeds, &all, out);
+    Report {
+        name: "sweep".into(),
+        sections: vec![Section {
+            title: format!(
+                "Exploration-knob sweep over paired seeds ({} L1 tasks x {} seeds, {}, top-k {})",
+                tasks.len(),
+                seeds.len(),
+                arch.name,
+                base.top_k
+            ),
+            table: t,
+            plot: None,
+            notes: vec![
+                "pairing: identical (task, seed) grid per arm; \"vs greedy\" is the \
+                 geomean ratio over cells valid in both arms"
+                    .to_string(),
+                "axes: eps=* sweeps epsilon_greedy's floor, c=* sweeps ucb_bandit's \
+                 bonus, B=* sweeps beam width, +harmonic/+exponential anneal the \
+                 default knob per state as KB evidence accumulates"
+                    .to_string(),
+                "how to pick a knob from these numbers: docs/TUNING.md (worked \
+                 example reads this exact artifact)"
+                    .to_string(),
+                format!("machine-readable: {}", out.display()),
+            ],
+        }],
+    }
+}
+
+/// The `sweep` experiment registry entry — writes `BENCH_sweep.json`
+/// beside the working directory like the policy scenario.
+pub fn run(ctx: &Ctx) -> Report {
+    run_with_output(ctx, Path::new("BENCH_sweep.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::HarnessConfig;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn grid_leads_with_greedy_and_covers_every_axis() {
+        for quick in [true, false] {
+            let g = grid(quick);
+            assert_eq!(g[0].1.kind, PolicyKind::GreedyTopK, "baseline first");
+            // Every arm label is unique and every policy validates.
+            let mut labels: Vec<&str> = g.iter().map(|(l, _)| l.as_str()).collect();
+            let n = labels.len();
+            labels.sort_unstable();
+            labels.dedup();
+            assert_eq!(labels.len(), n, "duplicate arm labels");
+            for (label, p) in &g {
+                p.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+            }
+            // All five kinds and all three schedules appear at full scale.
+            for kind in [
+                PolicyKind::EpsilonGreedy,
+                PolicyKind::UcbBandit,
+                PolicyKind::BeamSearch,
+                PolicyKind::Portfolio,
+            ] {
+                assert!(g.iter().any(|(_, p)| p.kind == kind), "{kind:?} missing");
+            }
+            assert!(g
+                .iter()
+                .any(|(_, p)| matches!(p.schedule, Schedule::Harmonic { .. })));
+            assert!(g
+                .iter()
+                .any(|(_, p)| matches!(p.schedule, Schedule::Exponential { .. })));
+        }
+        assert!(grid(true).len() < grid(false).len(), "quick must trim");
+    }
+
+    #[test]
+    fn sweep_emits_wellformed_paired_artifact() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let base = IcrlConfig {
+            trajectories: 2,
+            rollout_steps: 3,
+            top_k: 2,
+            harness: HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let arch = GpuArch::a100();
+        let seeds = [5u64, 6];
+        // A tiny 3-arm grid keeps the test fast while exercising the
+        // pairing and serialization paths end to end.
+        let small: Vec<(String, PolicyConfig)> = vec![
+            ("greedy_topk".into(), PolicyConfig::default()),
+            (
+                "eps=0.3".into(),
+                PolicyConfig {
+                    kind: PolicyKind::EpsilonGreedy,
+                    epsilon: 0.3,
+                    ..Default::default()
+                },
+            ),
+            (
+                "eps=0.15+harmonic".into(),
+                PolicyConfig {
+                    kind: PolicyKind::EpsilonGreedy,
+                    schedule: Schedule::Harmonic { rate: 0.25 },
+                    ..Default::default()
+                },
+            ),
+        ];
+        let all = run_arms(&small, &tasks, &arch, &base, &seeds);
+        assert_eq!(all.len(), 3);
+        for arm in &all {
+            assert_eq!(arm.cells.len(), 4, "{}: 2 tasks x 2 seeds", arm.label);
+            assert!(arm.valid_count() > 0, "{}: nothing valid", arm.label);
+        }
+        let (self_ratio, pairs) = paired_vs(&all[0], &all[0]);
+        assert_eq!(self_ratio, 1.0);
+        assert_eq!(pairs, all[0].valid_count());
+
+        let dir = std::env::temp_dir().join("kb_sweep_exp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_sweep.json");
+        write_bench_json(&arch, &base, tasks.len(), &seeds, &all, &out);
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            j.get("format").and_then(Json::as_str),
+            Some("kernelblaster-bench-sweep-v1")
+        );
+        let arms_json = j.get("arms").and_then(Json::as_arr).unwrap();
+        assert_eq!(arms_json.len(), 3);
+        assert_eq!(
+            arms_json[0].get("label").and_then(Json::as_str),
+            Some("greedy_topk")
+        );
+        assert_eq!(
+            arms_json[0].get("vs_greedy_paired").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            arms_json[2].get("schedule").and_then(Json::as_str),
+            Some("harmonic")
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

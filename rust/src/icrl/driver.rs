@@ -590,6 +590,7 @@ pub fn optimize_task_in(
                     outcomes.into_iter().map(Some).collect();
                 let mut next_frontier: Vec<BeamNode> =
                     Vec::with_capacity(beam_width.min(order.len()));
+                let dedup_distance = cfg.policy.dedup_distance;
                 for &oi in &order {
                     if next_frontier.len() >= beam_width {
                         break;
@@ -599,10 +600,20 @@ pub fn optimize_task_in(
                     // candidates; duplicates would waste frontier width.
                     // Identity is the *candidate program* — measured
                     // times carry per-pick noise and must not decide
-                    // duplication.
+                    // duplication. With `policy.dedup_distance > 0`,
+                    // near-duplicates are pruned too: an outcome within
+                    // that schedule-distance of an already-kept node
+                    // (same graph, nearly identical execution plan)
+                    // yields its slot to a genuinely different plan. At
+                    // the default 0.0 the similarity check is skipped
+                    // outright — exact-equality behavior, byte for byte.
                     let is_dup = {
                         let o = slots[oi].as_ref().expect("order indexes are unique");
-                        next_frontier.iter().any(|n| n.cand == o.cand)
+                        next_frontier.iter().any(|n| {
+                            n.cand == o.cand
+                                || (dedup_distance > 0.0
+                                    && n.cand.schedule_distance(&o.cand) <= dedup_distance)
+                        })
                     };
                     if is_dup {
                         continue;
@@ -1044,6 +1055,49 @@ mod tests {
         );
         assert_eq!(r_seq, r_par, "beam TaskRun diverged");
         assert_eq!(kb_seq, kb_par, "beam KB diverged");
+    }
+
+    #[test]
+    fn similarity_dedup_is_off_by_default_and_deterministic_when_on() {
+        use crate::icrl::policy::{PolicyConfig, PolicyKind};
+        let suite = Suite::full();
+        let task = suite.by_id("L2/09_mlp_block").unwrap();
+        let arch = GpuArch::h100();
+        let beam = |dedup_distance: f64| IcrlConfig {
+            policy: PolicyConfig {
+                kind: PolicyKind::BeamSearch,
+                beam_width: 3,
+                dedup_distance,
+                ..Default::default()
+            },
+            ..quick_cfg()
+        };
+        // Default 0.0 IS the exact-equality driver: an explicit 0.0 and
+        // the default config field are the same code path.
+        assert_eq!(PolicyConfig::default().dedup_distance, 0.0);
+        let mut kb_a = KnowledgeBase::empty();
+        let r_a = optimize_task(task, &arch, &mut kb_a, &beam(0.0), 2);
+        // Similarity dedup on: still deterministic, still valid, and the
+        // per-step chosen count stays within the frontier width.
+        let threshold = 1.5;
+        let mut kb_b1 = KnowledgeBase::empty();
+        let r_b1 = optimize_task(task, &arch, &mut kb_b1, &beam(threshold), 2);
+        let mut kb_b2 = KnowledgeBase::empty();
+        let r_b2 = optimize_task(task, &arch, &mut kb_b2, &beam(threshold), 2);
+        assert_eq!(r_b1, r_b2, "dedup run not reproducible");
+        assert_eq!(kb_b1, kb_b2);
+        assert!(r_b1.valid && r_a.valid);
+        let mut chosen = std::collections::BTreeMap::new();
+        for s in &r_b1.steps {
+            if s.chosen {
+                *chosen.entry((s.trajectory, s.step)).or_insert(0usize) += 1;
+            }
+        }
+        assert!(chosen.values().all(|&n| n <= 3));
+        assert!(
+            r_b1.best_time_s <= r_b1.naive_time_s * 1.0001,
+            "dedup run regressed past naive"
+        );
     }
 
     #[test]

@@ -58,15 +58,21 @@
 //! clock. `experiments/fleet.rs` measures the throughput side
 //! (tasks/min) and the KB-quality parity, emitting `BENCH_fleet.json`.
 //!
-//! The search policy rides per-batch: every worker runs the batch's
-//! [`IcrlConfig::policy`] (`kernelblaster batch --policy`, or the
-//! config file's `policy` section), so the shared KB accumulates
-//! evidence gathered under one selection rule — mixing policies within
-//! a batch would make its delta evidence populations incomparable. The
-//! determinism contract is policy-independent (each `TaskRun` is still
-//! a pure function of task, arch, config, global task index, and the
-//! epoch snapshot); `tests/policy.rs` anchors the default-policy fleet
-//! against the pre-policy sequential driver bit-for-bit.
+//! The search policy rides per-**epoch**: by default every epoch runs
+//! the batch's [`IcrlConfig::policy`] (`kernelblaster batch --policy`,
+//! or the config file's `policy` section), and
+//! [`FleetConfig::epoch_policies`] can schedule a *mix* across epochs —
+//! explore-heavy policies while the shared KB is cold, exploit-heavy
+//! ones once it has evidence (`--epoch-policies`, saturating at the
+//! last entry). Within one epoch every task runs the same policy:
+//! mixing *within* an epoch would make its deltas' evidence populations
+//! incomparable. The determinism contract is policy-independent (each
+//! `TaskRun` is still a pure function of task, arch, epoch config,
+//! global task index, and the epoch snapshot, and the epoch's policy is
+//! a pure function of the epoch index); `tests/policy.rs` anchors the
+//! default-policy fleet against the pre-policy sequential driver
+//! bit-for-bit, and `tests/fleet.rs` pins the epoch mix's worker-count
+//! invariance.
 //!
 //! # Checkpointing
 //!
@@ -79,6 +85,7 @@
 //! previous checkpoint or the new one, nothing in between.
 
 use super::driver::{optimize_task_delta, optimize_task_in, IcrlConfig, KbMode, TaskRun};
+use super::policy::PolicyConfig;
 use crate::gpu::GpuArch;
 use crate::harness::VerifyCache;
 use crate::kb::lifecycle::{self, KbDelta};
@@ -91,7 +98,7 @@ use std::sync::Mutex;
 /// Fleet scheduling knobs ([`crate::config::RunConfig`] plumbs these
 /// from the `fleet` section of a run config; `kernelblaster batch`
 /// exposes them as flags).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetConfig {
     /// Worker threads serving each epoch (≥ 1). Never affects results —
     /// only throughput.
@@ -104,6 +111,17 @@ pub struct FleetConfig {
     /// Checkpoint the shared KB every N commits (0 = never). A commit is
     /// one task's delta folded into the shared KB.
     pub checkpoint_every: usize,
+    /// Per-epoch search-policy mix: epoch `e` (0-based) runs
+    /// `epoch_policies[e]`, saturating at the last entry — so
+    /// `[explore, explore, exploit]` means two explore-heavy epochs and
+    /// then exploit for the rest of the batch. Empty (the default) runs
+    /// the batch's [`IcrlConfig::policy`] in every epoch, byte-identical
+    /// to the pre-mix fleet. Within one epoch every task still runs the
+    /// same policy (mixing *within* an epoch would make its deltas'
+    /// evidence populations incomparable), and the worker-count
+    /// determinism contract is untouched: the epoch's policy is a pure
+    /// function of the epoch index, never of worker scheduling.
+    pub epoch_policies: Vec<PolicyConfig>,
 }
 
 impl Default for FleetConfig {
@@ -112,6 +130,19 @@ impl Default for FleetConfig {
             workers: 4,
             epoch_size: 8,
             checkpoint_every: 0,
+            epoch_policies: Vec::new(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The search policy epoch `epoch` (0-based) runs: the epoch-mix
+    /// entry for that index, saturating at the last configured entry, or
+    /// `base` (the batch's [`IcrlConfig::policy`]) when no mix is set.
+    pub fn policy_for_epoch(&self, epoch: usize, base: &PolicyConfig) -> PolicyConfig {
+        match self.epoch_policies.last() {
+            None => base.clone(),
+            Some(last) => self.epoch_policies.get(epoch).unwrap_or(last).clone(),
         }
     }
 }
@@ -176,8 +207,16 @@ pub fn run_fleet_observed(
     let mut epochs = 0usize;
     let mut commits = 0usize;
     let mut offset = 0usize;
-    for chunk in tasks.chunks(epoch_size) {
-        let results = epoch_results(chunk, offset, arch, kb, cfg, workers, ephemeral);
+    for (epoch_idx, chunk) in tasks.chunks(epoch_size).enumerate() {
+        // Policy-aware scheduling: the epoch's policy comes from the
+        // per-epoch mix (pure function of the epoch index — results stay
+        // worker-count invariant). With no mix configured this clones
+        // the batch config unchanged.
+        let epoch_cfg = IcrlConfig {
+            policy: fleet.policy_for_epoch(epoch_idx, &cfg.policy),
+            ..cfg.clone()
+        };
+        let results = epoch_results(chunk, offset, arch, kb, &epoch_cfg, workers, ephemeral);
         // Lineage lines observed on this epoch's shared snapshot: every
         // worker of the epoch sees the same snapshot, so a condition
         // (e.g. the mixed-arch audit flag) is reported once per epoch,
@@ -326,6 +365,7 @@ mod tests {
             workers: 2,
             epoch_size: 2,
             checkpoint_every: 0,
+            ..Default::default()
         };
         let out = run_fleet(&tasks, &arch, &mut kb, &quick_cfg(), &fleet);
         assert_eq!(out.runs.len(), 3);
@@ -385,10 +425,91 @@ mod tests {
             workers: 2,
             epoch_size: 2,
             checkpoint_every: 0,
+            ..Default::default()
         };
         let _ = run_fleet_observed(&tasks, &arch, &mut kb, &quick_cfg(), &fleet, &mut spy);
         assert_eq!(spy.tasks, vec![0, 1, 2]);
         assert_eq!(spy.epochs, vec![(1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn policy_for_epoch_saturates_at_the_last_mix_entry() {
+        use crate::icrl::policy::PolicyKind;
+        let base = PolicyConfig::default();
+        // No mix: every epoch runs the batch policy.
+        let plain = FleetConfig::default();
+        for e in 0..4 {
+            assert_eq!(plain.policy_for_epoch(e, &base), base);
+        }
+        // Mix: explore-heavy first, then exploit for the rest.
+        let explore = PolicyConfig::of_kind(PolicyKind::EpsilonGreedy);
+        let exploit = PolicyConfig::of_kind(PolicyKind::UcbBandit);
+        let mixed = FleetConfig {
+            epoch_policies: vec![explore.clone(), explore.clone(), exploit.clone()],
+            ..Default::default()
+        };
+        assert_eq!(mixed.policy_for_epoch(0, &base), explore);
+        assert_eq!(mixed.policy_for_epoch(1, &base), explore);
+        assert_eq!(mixed.policy_for_epoch(2, &base), exploit);
+        assert_eq!(mixed.policy_for_epoch(99, &base), exploit, "saturates");
+    }
+
+    #[test]
+    fn epoch_mix_runs_each_epoch_under_its_scheduled_policy() {
+        use crate::icrl::policy::PolicyKind;
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+            suite.by_id("L2/01_gemm_bias_relu").unwrap(),
+        ];
+        let arch = GpuArch::h100();
+        let cfg = quick_cfg();
+        // Epochs of 2 → epoch 0 explores (ε-greedy), epoch 1 exploits
+        // (UCB). Reproducibility first, then the exactness anchor: with
+        // epoch_size = 1 the mix degenerates to the sequential driver
+        // run task-by-task under the matching per-epoch policy.
+        let mix = vec![
+            PolicyConfig::of_kind(PolicyKind::EpsilonGreedy),
+            PolicyConfig::of_kind(PolicyKind::UcbBandit),
+        ];
+        let fleet_cfg = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            checkpoint_every: 0,
+            epoch_policies: mix.clone(),
+        };
+        let mut kb1 = KnowledgeBase::empty();
+        let out1 = run_fleet(&tasks, &arch, &mut kb1, &cfg, &fleet_cfg);
+        let mut kb2 = KnowledgeBase::empty();
+        let out2 = run_fleet(&tasks, &arch, &mut kb2, &cfg, &fleet_cfg);
+        assert_eq!(out1.runs, out2.runs, "mixed-epoch fleet not reproducible");
+        assert_eq!(kb1, kb2);
+        assert_eq!(out1.epochs, 2);
+        // epoch_size=1 mix == the sequential driver run with the same
+        // per-epoch (here per-task) policy schedule, bit for bit.
+        let e1 = FleetConfig {
+            workers: 2,
+            epoch_size: 1,
+            checkpoint_every: 0,
+            epoch_policies: mix.clone(),
+        };
+        let mut kb_fleet = KnowledgeBase::empty();
+        let out_e1 = run_fleet(&tasks, &arch, &mut kb_fleet, &cfg, &e1);
+        let mut kb_seq = KnowledgeBase::empty();
+        let mut seq_runs = Vec::new();
+        for (i, task) in tasks.iter().enumerate() {
+            let task_cfg = IcrlConfig {
+                policy: e1.policy_for_epoch(i, &cfg.policy),
+                ..cfg.clone()
+            };
+            seq_runs.push(crate::icrl::optimize_task(
+                task, &arch, &mut kb_seq, &task_cfg, i as u64,
+            ));
+        }
+        assert_eq!(out_e1.runs, seq_runs, "epoch=1 mix diverged from sequential");
+        assert_eq!(kb_fleet, kb_seq);
     }
 
     #[test]

@@ -33,9 +33,12 @@
 //! parameterized over a [`policy::SearchPolicy`]
 //! ([`IcrlConfig::policy`], CLI `--policy`) — weighted top-k
 //! (`greedy_topk`, the default, bit-identical to the previous driver),
-//! ε-greedy, a UCB bandit over KB evidence, or beam search carrying B
-//! candidates across steps. `experiment policy` compares all four over
-//! paired seeds.
+//! ε-greedy, a UCB bandit over KB evidence, beam search carrying B
+//! candidates across steps, or the contrastive [`policy::Portfolio`]
+//! that arbitrates an explore/exploit pair per state from replay
+//! statistics. ε and UCB-c can anneal per state as evidence accumulates
+//! ([`policy::Schedule`]); `experiment policy` compares the arms over
+//! paired seeds and `experiment sweep` grids their hyperparameters.
 
 #![deny(missing_docs)]
 
@@ -49,5 +52,6 @@ pub use driver::{
 };
 pub use fleet::{run_fleet, run_fleet_observed, FleetConfig, FleetOutcome};
 pub use policy::{
-    BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, SearchPolicy, UcbBandit,
+    BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, Portfolio, Schedule,
+    SearchPolicy, UcbBandit,
 };

@@ -46,6 +46,27 @@
 //!   hard-wired loop — asserted draw-for-draw and run-for-run in
 //!   `tests/policy.rs`.
 //!
+//! # Adaptive exploration (§anneal)
+//!
+//! The KB accumulates per-state evidence precisely so that later
+//! decisions stop paying run-constant exploration costs — yet a fixed ε
+//! or UCB-c charges the same exploration tax on a state with 40 recorded
+//! attempts as on one with none. Two mechanisms close that gap:
+//!
+//! - **Annealed schedules** ([`Schedule`]): [`EpsilonGreedy`] and
+//!   [`UcbBandit`] decay their exploration hyperparameter *per state*, as
+//!   a function of the candidate pool's total recorded attempts
+//!   ([`ScoredCandidate::attempts`]). [`Schedule::Constant`] (the
+//!   default) applies the configured value verbatim — bit-identical to
+//!   the fixed-hyperparameter policies it replaced (asserted in
+//!   `tests/policy.rs`).
+//! - **The [`Portfolio`] contrastive policy**: runs an exploring member
+//!   (ε-greedy) and an exploiting member (UCB) side by side each step
+//!   and arbitrates between their pick sets using the state's replay
+//!   statistics (CUDA-L1-style contrastive selection) — fresh states
+//!   follow the explorer, evidence-heavy states follow the exploiter,
+//!   and both members always contribute picks.
+//!
 //! # Adding a policy
 //!
 //! Implement [`SearchPolicy`] (selection + optional beam width), add a
@@ -57,6 +78,105 @@
 use crate::kb::{self, ScoredCandidate};
 use crate::opts::Technique;
 use crate::util::rng::Rng;
+
+/// Annealing schedule for an exploration hyperparameter (ε or UCB-c):
+/// how the configured base value decays as a *state's* evidence
+/// accumulates. `n` is the candidate pool's total recorded attempts
+/// ([`ScoredCandidate::attempts`] summed over the enumeration), so fresh
+/// states explore at full strength while well-evidenced states exploit.
+///
+/// [`Schedule::Constant`] returns the base value verbatim (no arithmetic
+/// touches it), which makes the default configuration bit-identical to
+/// the pre-schedule fixed-hyperparameter policies — the regression
+/// anchor `tests/policy.rs` pins. A rate of `0.0` also degenerates to
+/// the constant schedule exactly (`base / 1.0` and `base · e⁰` are
+/// IEEE-identity operations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// No decay: the configured value applies at every evidence level.
+    Constant,
+    /// `base / (1 + rate·n)` — heavy-tailed decay; exploration never
+    /// quite reaches zero (the classic 1/t bandit annealing).
+    Harmonic {
+        /// Decay per recorded attempt (finite, ≥ 0).
+        rate: f64,
+    },
+    /// `base · exp(−rate·n)` — aggressive decay; exploration is
+    /// effectively off once a state is well evidenced.
+    Exponential {
+        /// Decay per recorded attempt (finite, ≥ 0).
+        rate: f64,
+    },
+}
+
+impl Schedule {
+    /// Default decay rate for the non-constant schedules (the CLI's
+    /// `--schedule-rate` fallback): halves ε after 4 attempts under
+    /// [`Schedule::Harmonic`], reaches `e⁻¹` after 4 under
+    /// [`Schedule::Exponential`].
+    pub const DEFAULT_RATE: f64 = 0.25;
+
+    /// The annealed value of `base` after `attempts` recorded attempts.
+    pub fn apply(&self, base: f64, attempts: usize) -> f64 {
+        match self {
+            Schedule::Constant => base,
+            Schedule::Harmonic { rate } => base / (1.0 + rate * attempts as f64),
+            Schedule::Exponential { rate } => base * (-rate * attempts as f64).exp(),
+        }
+    }
+
+    /// Stable lowercase name (CLI `--schedule`, config `schedule` key,
+    /// report labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Constant => "constant",
+            Schedule::Harmonic { .. } => "harmonic",
+            Schedule::Exponential { .. } => "exponential",
+        }
+    }
+
+    /// The decay rate (0.0 for [`Schedule::Constant`], which has none).
+    pub fn rate(&self) -> f64 {
+        match self {
+            Schedule::Constant => 0.0,
+            Schedule::Harmonic { rate } | Schedule::Exponential { rate } => *rate,
+        }
+    }
+
+    /// Build a schedule from its name and rate; `None` for unknown
+    /// names. `rate` is ignored by `constant`.
+    pub fn from_parts(name: &str, rate: f64) -> Option<Schedule> {
+        match name {
+            "constant" => Some(Schedule::Constant),
+            "harmonic" => Some(Schedule::Harmonic { rate }),
+            "exponential" => Some(Schedule::Exponential { rate }),
+            _ => None,
+        }
+    }
+
+    /// Space-separated list of the schedule names — the single source of
+    /// truth for "unknown schedule" error messages.
+    pub fn known_names() -> &'static str {
+        "constant harmonic exponential"
+    }
+
+    /// Rate sanity: finite and ≥ 0 (a negative rate would *grow*
+    /// exploration with evidence — never meaningful).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            Schedule::Constant => Ok(()),
+            Schedule::Harmonic { rate } | Schedule::Exponential { rate } => {
+                if rate.is_finite() && *rate >= 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "policy.schedule_rate must be finite and >= 0, got {rate}"
+                    ))
+                }
+            }
+        }
+    }
+}
 
 /// A search policy: candidate selection plus the step transition rule.
 /// See the module docs for the full contract.
@@ -100,10 +220,20 @@ impl SearchPolicy for GreedyTopK {
 /// weighted draw structurally starves once a few techniques accumulate
 /// evidence), tails falls back to the weighted draw. With no untried
 /// candidates left the slot is always a weighted draw.
+///
+/// The effective ε is annealed per state by `schedule` over the pool's
+/// total recorded attempts, so a fresh state gets the full floor and an
+/// evidence-heavy state converges to the pure weighted draw.
+/// [`Schedule::Constant`] keeps ε fixed — bit-identical to the
+/// pre-schedule policy (the coin consumes the same stream draw with the
+/// same probability).
 #[derive(Debug, Clone, Copy)]
 pub struct EpsilonGreedy {
-    /// Probability of the uniform-over-untried draw per slot, in [0, 1].
+    /// Base probability of the uniform-over-untried draw per slot, in
+    /// [0, 1].
     pub epsilon: f64,
+    /// Per-state annealing of ε over the pool's recorded attempts.
+    pub schedule: Schedule,
 }
 
 impl SearchPolicy for EpsilonGreedy {
@@ -112,6 +242,8 @@ impl SearchPolicy for EpsilonGreedy {
     }
 
     fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+        let evidence: usize = candidates.iter().map(|c| c.attempts).sum();
+        let epsilon = self.schedule.apply(self.epsilon, evidence);
         let mut remaining: Vec<usize> = (0..candidates.len()).collect();
         let mut picked = Vec::new();
         while picked.len() < k && !remaining.is_empty() {
@@ -122,7 +254,7 @@ impl SearchPolicy for EpsilonGreedy {
                 .filter(|(_, &ci)| candidates[ci].attempts == 0)
                 .map(|(pos, _)| pos)
                 .collect();
-            let pos = if !untried.is_empty() && rng.chance(self.epsilon) {
+            let pos = if !untried.is_empty() && rng.chance(epsilon) {
                 untried[rng.index(untried.len())]
             } else {
                 let weights: Vec<f64> =
@@ -142,23 +274,32 @@ impl SearchPolicy for EpsilonGreedy {
 /// deterministically (enumeration order breaks ties). Turns the KB's
 /// attempt counts into a principled exploration bonus — an entry's
 /// uncertainty, not just its mean, earns it picks. Consumes no RNG.
+///
+/// The effective c is annealed per state by `schedule` over the pool's
+/// total attempts (on top of UCB's own `1/√attempts` per-entry decay —
+/// the schedule shrinks the *whole state's* bonus as its evidence
+/// matures). [`Schedule::Constant`] keeps c fixed — bit-identical to
+/// the pre-schedule policy.
 #[derive(Debug, Clone, Copy)]
 pub struct UcbBandit {
-    /// Exploration coefficient (≥ 0; 0 degenerates to deterministic
+    /// Base exploration coefficient (≥ 0; 0 degenerates to deterministic
     /// exploit-by-expected-gain).
     pub c: f64,
+    /// Per-state annealing of c over the pool's recorded attempts.
+    pub schedule: Schedule,
 }
 
 impl UcbBandit {
-    /// The UCB score of one candidate given the pool's total attempts.
-    fn score(&self, cand: &ScoredCandidate, total_attempts: usize) -> f64 {
+    /// The UCB score of one candidate given the (possibly annealed)
+    /// coefficient and the pool's total attempts.
+    fn score(cand: &ScoredCandidate, c: f64, total_attempts: usize) -> f64 {
         let base = if cand.expected_gain.is_finite() {
             cand.expected_gain
         } else {
             0.0
         };
         let ln_t = ((total_attempts + 1) as f64).ln();
-        base + self.c * (ln_t / (cand.attempts as f64 + 1.0)).sqrt()
+        base + c * (ln_t / (cand.attempts as f64 + 1.0)).sqrt()
     }
 }
 
@@ -169,10 +310,11 @@ impl SearchPolicy for UcbBandit {
 
     fn select(&self, candidates: &[ScoredCandidate], k: usize, _rng: &mut Rng) -> Vec<Technique> {
         let total: usize = candidates.iter().map(|c| c.attempts).sum();
+        let c_eff = self.schedule.apply(self.c, total);
         let mut idx: Vec<usize> = (0..candidates.len()).collect();
         idx.sort_by(|&a, &b| {
-            self.score(&candidates[b], total)
-                .total_cmp(&self.score(&candidates[a], total))
+            Self::score(&candidates[b], c_eff, total)
+                .total_cmp(&Self::score(&candidates[a], c_eff, total))
                 .then(a.cmp(&b))
         });
         idx.truncate(k);
@@ -207,7 +349,113 @@ impl SearchPolicy for BeamSearch {
     }
 }
 
-/// The four built-in policies, as a closed nameable set (CLI/config/
+/// Contrastive two-member portfolio (CUDA-L1-style contrastive selection
+/// over the KB's replay statistics): every step runs an *exploring*
+/// member ([`EpsilonGreedy`]) and an *exploiting* member ([`UcbBandit`])
+/// side by side on the same scored enumeration, then arbitrates between
+/// their pick sets using the state's recorded evidence. The trust signal
+/// is learned **per `StateSig`** the ICRL way — it is read from the KB
+/// each step rather than held in mutable policy state, so the policy
+/// stays a pure function and the KB remains the only memory.
+///
+/// Arbitration: each pick set is scored by its evidence-backed expected
+/// advantage (mean over picks of `confidence · (expected_gain − 1)`,
+/// where `confidence = attempts/(attempts+1)`). The higher-scoring
+/// member *leads*; picks interleave lead-first (lead[0], other[0],
+/// lead[1], …, duplicates skipped) so **both** members always contribute
+/// to the explored set. A fresh state scores every set 0, so ties break
+/// toward the explorer — exploration-first on unknown states,
+/// exploitation-first once confident positive evidence accumulates.
+///
+/// # RNG-stream rule (the two-member draw)
+///
+/// The members must not race each other for main-stream draws (their
+/// consumption counts differ: UCB draws nothing). `select` therefore
+/// derives one child stream per member from the main stream
+/// (`portfolio-explore` / `portfolio-exploit`) and advances the parent
+/// by **exactly one draw** — so consumption is a fixed one-draw cost
+/// regardless of member internals, successive selections (and multiple
+/// frontier nodes within one step) get fresh member streams, and the
+/// whole selection stays a pure function of (candidates, k, rng state).
+#[derive(Debug, Clone, Copy)]
+pub struct Portfolio {
+    /// The exploring member (runs on the `portfolio-explore` stream).
+    pub explore: EpsilonGreedy,
+    /// The exploiting member (consumes no draws from its
+    /// `portfolio-exploit` stream).
+    pub exploit: UcbBandit,
+}
+
+impl Portfolio {
+    /// Evidence-backed score of a pick set: mean confidence-weighted
+    /// expected advantage over parity. 0.0 for an empty set or a fully
+    /// untried state.
+    fn trust(picks: &[Technique], candidates: &[ScoredCandidate]) -> f64 {
+        if picks.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for t in picks {
+            if let Some(c) = candidates.iter().find(|c| c.technique == *t) {
+                if c.expected_gain.is_finite() {
+                    let confidence = c.attempts as f64 / (c.attempts as f64 + 1.0);
+                    sum += confidence * (c.expected_gain - 1.0);
+                }
+            }
+        }
+        sum / picks.len() as f64
+    }
+}
+
+impl SearchPolicy for Portfolio {
+    fn name(&self) -> &'static str {
+        "portfolio"
+    }
+
+    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+        let mut explore_rng = rng.derive("portfolio-explore");
+        let mut exploit_rng = rng.derive("portfolio-exploit");
+        let _ = rng.next_u64(); // fixed one-draw parent cost (see docs)
+        let explore_picks = self.explore.select(candidates, k, &mut explore_rng);
+        let exploit_picks = self.exploit.select(candidates, k, &mut exploit_rng);
+        let exploit_leads = Self::trust(&exploit_picks, candidates)
+            > Self::trust(&explore_picks, candidates);
+        let (lead, other) = if exploit_leads {
+            (exploit_picks, explore_picks)
+        } else {
+            (explore_picks, exploit_picks)
+        };
+        // Interleave lead-first, skipping duplicates: both members'
+        // proposals compete for slots every step, the trusted one with
+        // first-pick priority at each rank.
+        let queues = [lead.as_slice(), other.as_slice()];
+        let mut pos = [0usize; 2];
+        let mut picked: Vec<Technique> = Vec::with_capacity(k.min(candidates.len()));
+        while picked.len() < k {
+            let mut advanced = false;
+            for (m, queue) in queues.iter().enumerate() {
+                if picked.len() >= k {
+                    break;
+                }
+                while pos[m] < queue.len() {
+                    let t = queue[pos[m]];
+                    pos[m] += 1;
+                    if !picked.contains(&t) {
+                        picked.push(t);
+                        advanced = true;
+                        break;
+                    }
+                }
+            }
+            if !advanced {
+                break; // both members exhausted
+            }
+        }
+        picked
+    }
+}
+
+/// The five built-in policies, as a closed nameable set (CLI/config/
 /// experiment surface).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -221,6 +469,9 @@ pub enum PolicyKind {
     UcbBandit,
     /// [`BeamSearch`] — carry B candidates across steps.
     BeamSearch,
+    /// [`Portfolio`] — contrastive ε-greedy/UCB mix arbitrated per state
+    /// by replay statistics.
+    Portfolio,
 }
 
 impl PolicyKind {
@@ -231,6 +482,7 @@ impl PolicyKind {
             PolicyKind::EpsilonGreedy,
             PolicyKind::UcbBandit,
             PolicyKind::BeamSearch,
+            PolicyKind::Portfolio,
         ]
     }
 
@@ -242,6 +494,7 @@ impl PolicyKind {
             PolicyKind::EpsilonGreedy => "epsilon_greedy",
             PolicyKind::UcbBandit => "ucb_bandit",
             PolicyKind::BeamSearch => "beam_search",
+            PolicyKind::Portfolio => "portfolio",
         }
     }
 
@@ -276,6 +529,20 @@ pub struct PolicyConfig {
     pub ucb_c: f64,
     /// [`BeamSearch`]'s frontier width (ignored by the others).
     pub beam_width: usize,
+    /// Annealing schedule for ε / UCB-c (used by [`EpsilonGreedy`],
+    /// [`UcbBandit`], and both [`Portfolio`] members; ignored by the
+    /// RNG-weighted draws). [`Schedule::Constant`] (the default)
+    /// reproduces the fixed-hyperparameter policies bit-for-bit.
+    pub schedule: Schedule,
+    /// Beam-frontier similarity-dedup threshold, in schedule-distance
+    /// units ([`crate::opts::Candidate::schedule_distance`]): two step
+    /// outcomes within this distance are treated as duplicates when
+    /// filling the next frontier, so near-identical candidates stop
+    /// wasting beam width. `0.0` (the default) disables the similarity
+    /// check entirely — dedup falls back to exact candidate equality,
+    /// byte-identical to the pre-threshold driver. Only meaningful for
+    /// frontiers wider than one.
+    pub dedup_distance: f64,
 }
 
 impl Default for PolicyConfig {
@@ -285,6 +552,8 @@ impl Default for PolicyConfig {
             epsilon: 0.15,
             ucb_c: 0.5,
             beam_width: 3,
+            schedule: Schedule::Constant,
+            dedup_distance: 0.0,
         }
     }
 }
@@ -299,9 +568,10 @@ impl PolicyConfig {
         }
     }
 
-    /// Hyperparameter sanity: ε ∈ [0, 1], finite c ≥ 0, width ≥ 1. The
-    /// config-file loader and the CLI flags both enforce this before a
-    /// run starts.
+    /// Hyperparameter sanity: ε ∈ [0, 1], finite c ≥ 0, width ≥ 1, a
+    /// finite non-negative schedule rate, and a finite non-negative
+    /// dedup threshold. The config-file loader and the CLI flags both
+    /// enforce this before a run starts.
     pub fn validate(&self) -> Result<(), String> {
         if !(0.0..=1.0).contains(&self.epsilon) {
             return Err(format!("policy.epsilon must be in [0, 1], got {}", self.epsilon));
@@ -312,6 +582,13 @@ impl PolicyConfig {
         if self.beam_width == 0 {
             return Err("policy.beam_width must be >= 1".to_string());
         }
+        self.schedule.validate()?;
+        if !self.dedup_distance.is_finite() || self.dedup_distance < 0.0 {
+            return Err(format!(
+                "policy.dedup_distance must be finite and >= 0, got {}",
+                self.dedup_distance
+            ));
+        }
         Ok(())
     }
 
@@ -321,10 +598,24 @@ impl PolicyConfig {
             PolicyKind::GreedyTopK => Box::new(GreedyTopK),
             PolicyKind::EpsilonGreedy => Box::new(EpsilonGreedy {
                 epsilon: self.epsilon,
+                schedule: self.schedule,
             }),
-            PolicyKind::UcbBandit => Box::new(UcbBandit { c: self.ucb_c }),
+            PolicyKind::UcbBandit => Box::new(UcbBandit {
+                c: self.ucb_c,
+                schedule: self.schedule,
+            }),
             PolicyKind::BeamSearch => Box::new(BeamSearch {
                 width: self.beam_width,
+            }),
+            PolicyKind::Portfolio => Box::new(Portfolio {
+                explore: EpsilonGreedy {
+                    epsilon: self.epsilon,
+                    schedule: self.schedule,
+                },
+                exploit: UcbBandit {
+                    c: self.ucb_c,
+                    schedule: self.schedule,
+                },
             }),
         }
     }
@@ -392,7 +683,10 @@ mod tests {
         let scored = kbase.scored_candidates(state, |_| true);
         // ε = 1: slot 0 must always be an untried candidate while any
         // remain untried.
-        let always = EpsilonGreedy { epsilon: 1.0 };
+        let always = EpsilonGreedy {
+            epsilon: 1.0,
+            schedule: Schedule::Constant,
+        };
         let mut rng = Rng::new(3);
         for _ in 0..50 {
             let picks = always.select(&scored, 2, &mut rng);
@@ -400,7 +694,10 @@ mod tests {
             assert_eq!(first.attempts, 0, "ε=1 must pick untried first");
         }
         // ε = 0 degenerates to the greedy weighted draw, same rng stream.
-        let never = EpsilonGreedy { epsilon: 0.0 };
+        let never = EpsilonGreedy {
+            epsilon: 0.0,
+            schedule: Schedule::Constant,
+        };
         let mut r1 = Rng::new(11);
         let mut r2 = Rng::new(11);
         // ε=0 still consumes the coin flip, so streams differ from pure
@@ -416,7 +713,10 @@ mod tests {
     fn ucb_is_deterministic_and_rewards_uncertainty() {
         let (kbase, state) = pool();
         let scored = kbase.scored_candidates(state, |_| true);
-        let ucb = UcbBandit { c: 5.0 };
+        let ucb = UcbBandit {
+            c: 5.0,
+            schedule: Schedule::Constant,
+        };
         let mut r1 = Rng::new(1);
         let mut r2 = Rng::new(999);
         let a = ucb.select(&scored, 4, &mut r1);
@@ -430,7 +730,10 @@ mod tests {
             "c=5 should crowd out the 4-attempt arm: {a:?}"
         );
         // With c = 0 it is pure exploitation: best expected gain first.
-        let exploit = UcbBandit { c: 0.0 };
+        let exploit = UcbBandit {
+            c: 0.0,
+            schedule: Schedule::Constant,
+        };
         let picks = exploit.select(&scored, 1, &mut Rng::new(0));
         let best = scored
             .iter()
@@ -480,9 +783,173 @@ mod tests {
                 beam_width: 0,
                 ..Default::default()
             },
+            PolicyConfig {
+                schedule: Schedule::Harmonic { rate: -0.1 },
+                ..Default::default()
+            },
+            PolicyConfig {
+                schedule: Schedule::Exponential { rate: f64::NAN },
+                ..Default::default()
+            },
+            PolicyConfig {
+                dedup_distance: -1.0,
+                ..Default::default()
+            },
+            PolicyConfig {
+                dedup_distance: f64::INFINITY,
+                ..Default::default()
+            },
         ];
         for c in bad {
             assert!(c.validate().is_err(), "{c:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn schedules_decay_monotonically_and_constant_is_exact() {
+        for base in [0.15f64, 0.5, 1.0] {
+            for n in [0usize, 1, 4, 40, 400] {
+                // Constant returns the base verbatim — the bit-identity
+                // anchor (no arithmetic may touch the value).
+                assert_eq!(Schedule::Constant.apply(base, n).to_bits(), base.to_bits());
+                // Rate 0 degenerates to constant exactly.
+                assert_eq!(
+                    Schedule::Harmonic { rate: 0.0 }.apply(base, n).to_bits(),
+                    base.to_bits()
+                );
+                assert_eq!(
+                    Schedule::Exponential { rate: 0.0 }.apply(base, n).to_bits(),
+                    base.to_bits()
+                );
+            }
+            // Monotone non-increasing in evidence, never negative.
+            for sched in [
+                Schedule::Harmonic { rate: 0.25 },
+                Schedule::Exponential { rate: 0.25 },
+            ] {
+                let mut prev = sched.apply(base, 0);
+                assert_eq!(prev, base, "{}: no evidence = full strength", sched.name());
+                for n in 1..50usize {
+                    let v = sched.apply(base, n);
+                    assert!(v <= prev && v >= 0.0, "{}: not decaying at {n}", sched.name());
+                    prev = v;
+                }
+                // Exponential outruns harmonic at matched rates.
+                assert!(
+                    Schedule::Exponential { rate: 0.25 }.apply(base, 40)
+                        < Schedule::Harmonic { rate: 0.25 }.apply(base, 40)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_names_and_parts_roundtrip() {
+        for sched in [
+            Schedule::Constant,
+            Schedule::Harmonic { rate: 0.5 },
+            Schedule::Exponential { rate: 0.5 },
+        ] {
+            let back = Schedule::from_parts(sched.name(), sched.rate()).unwrap();
+            assert_eq!(back, sched);
+            assert!(Schedule::known_names().contains(sched.name()));
+            assert!(sched.validate().is_ok());
+        }
+        assert_eq!(Schedule::from_parts("cosine", 0.5), None);
+        // constant ignores the rate it is handed.
+        assert_eq!(Schedule::from_parts("constant", 9.0), Some(Schedule::Constant));
+        assert!(Schedule::Harmonic { rate: -1.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn annealed_epsilon_converges_to_the_weighted_draw() {
+        // On an evidence-heavy pool an aggressively annealed ε=1 policy
+        // must consume the same stream as the pure weighted draw (the
+        // coin still flips, but the untried branch is never taken once
+        // the effective ε underflows the coin's [0,1) draw)… statistical
+        // claim avoided: assert the effective-ε math instead, plus
+        // determinism of the full selection.
+        let (kbase, state) = pool();
+        let scored = kbase.scored_candidates(state, |_| true);
+        let evidence: usize = scored.iter().map(|c| c.attempts).sum();
+        assert!(evidence >= 5, "fixture must carry evidence");
+        let annealed = Schedule::Exponential { rate: 2.0 }.apply(1.0, evidence);
+        assert!(annealed < 1e-4, "ε must collapse on evidence: {annealed}");
+        let policy = EpsilonGreedy {
+            epsilon: 1.0,
+            schedule: Schedule::Exponential { rate: 2.0 },
+        };
+        let a = policy.select(&scored, 3, &mut Rng::new(5));
+        let b = policy.select(&scored, 3, &mut Rng::new(5));
+        assert_eq!(a, b, "annealed selection must stay deterministic");
+    }
+
+    #[test]
+    fn portfolio_is_deterministic_and_advances_parent_one_draw() {
+        let (kbase, state) = pool();
+        let scored = kbase.scored_candidates(state, |_| true);
+        let portfolio = PolicyConfig::of_kind(PolicyKind::Portfolio).build();
+        // Deterministic for a fixed stream, distinct, within budget.
+        for k in [1usize, 2, 4, 100] {
+            let mut r1 = Rng::new(31);
+            let mut r2 = Rng::new(31);
+            let a = portfolio.select(&scored, k, &mut r1);
+            let b = portfolio.select(&scored, k, &mut r2);
+            assert_eq!(a, b);
+            assert_eq!(r1, r2, "stream consumption must be deterministic");
+            assert_eq!(a.len(), k.min(scored.len()));
+            let mut d = a.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), a.len(), "duplicate picks");
+        }
+        // The parent stream advances by exactly one u64 (the documented
+        // fixed cost), independent of member internals.
+        let mut used = Rng::new(31);
+        let _ = portfolio.select(&scored, 3, &mut used);
+        let mut reference = Rng::new(31);
+        let _ = reference.next_u64();
+        assert_eq!(used, reference, "parent must advance exactly one draw");
+    }
+
+    #[test]
+    fn portfolio_trust_follows_replay_statistics() {
+        let (kbase, state) = pool();
+        let scored = kbase.scored_candidates(state, |_| true);
+        // The evidence-backed winner (4 attempts at gain ≈ 2.5) trusts
+        // higher than any untried set.
+        let confident = Portfolio::trust(&[Technique::SharedMemoryTiling], &scored);
+        let untried: Vec<Technique> = scored
+            .iter()
+            .filter(|c| c.attempts == 0)
+            .map(|c| c.technique)
+            .take(2)
+            .collect();
+        assert!(!untried.is_empty());
+        assert_eq!(Portfolio::trust(&untried, &scored), 0.0, "untried = no trust");
+        assert!(confident > 0.0, "confident positive evidence must score > 0");
+        assert_eq!(Portfolio::trust(&[], &scored), 0.0);
+        // On an all-untried (fresh) pool the explorer leads: with ε = 1
+        // the first pick of the portfolio must be an untried technique.
+        let mut fresh = KnowledgeBase::empty();
+        let m = fresh.match_state(StateSig {
+            primary: Bottleneck::MemoryLatency,
+            secondary: Bottleneck::ComputeThroughput,
+            workload: WorkloadClass::ContractionHeavy,
+        });
+        fresh.ensure_candidates(m.index(), Technique::all());
+        let fresh_scored = fresh.scored_candidates(m.index(), |_| true);
+        let p = Portfolio {
+            explore: EpsilonGreedy {
+                epsilon: 1.0,
+                schedule: Schedule::Constant,
+            },
+            exploit: UcbBandit {
+                c: 0.5,
+                schedule: Schedule::Constant,
+            },
+        };
+        let picks = p.select(&fresh_scored, 3, &mut Rng::new(2));
+        assert_eq!(picks.len(), 3);
     }
 }

@@ -328,6 +328,67 @@ impl Schedule {
         self.groups.retain(|g| !g.nodes.is_empty());
     }
 
+    /// Feature-space distance to another schedule — how far apart two
+    /// execution plans are, for similarity-aware deduplication
+    /// (the beam frontier's near-duplicate pruning in
+    /// [`crate::icrl::driver`]).
+    ///
+    /// Schedules that partition the graph differently (different group
+    /// count or node sets) describe structurally different kernels: the
+    /// distance is `f64::INFINITY`. Over an identical partition the
+    /// distance sums per-group attribute gaps: categorical attributes
+    /// (layout, tiling kind, each boolean flag) count 1 per mismatch;
+    /// power-of-two numeric knobs (tile size, vector width, ILP,
+    /// unroll, split-K, coarsening, registers, launch geometry) count
+    /// `|log2 a − log2 b|` — one doubling = distance 1, so "same plan,
+    /// slightly different tile" lands well under 1 while "tiled vs
+    /// untiled" is at least 1. Symmetric; 0.0 exactly when the
+    /// schedules are equal.
+    pub fn distance(&self, other: &Schedule) -> f64 {
+        if self.groups.len() != other.groups.len() {
+            return f64::INFINITY;
+        }
+        let log_gap = |x: usize, y: usize| {
+            ((x.max(1) as f64).log2() - (y.max(1) as f64).log2()).abs()
+        };
+        let mut d = 0.0;
+        for (a, b) in self.groups.iter().zip(&other.groups) {
+            if a.nodes != b.nodes {
+                return f64::INFINITY;
+            }
+            let (oa, ob) = (&a.opts, &b.opts);
+            if oa.layout != ob.layout {
+                d += 1.0;
+            }
+            d += match (oa.tiling, ob.tiling) {
+                (Tiling::None, Tiling::None) => 0.0,
+                (Tiling::Shared { tile: ta }, Tiling::Shared { tile: tb }) => log_gap(ta, tb),
+                _ => 1.0,
+            };
+            d += log_gap(oa.vector_width, ob.vector_width);
+            d += log_gap(oa.ilp, ob.ilp);
+            d += log_gap(oa.unroll, ob.unroll);
+            d += log_gap(oa.split_k, ob.split_k);
+            d += log_gap(oa.coarsening, ob.coarsening);
+            d += log_gap(oa.regs_per_thread, ob.regs_per_thread);
+            for (fa, fb) in [
+                (oa.tensor_core, ob.tensor_core),
+                (oa.fast_math, ob.fast_math),
+                (oa.warp_shuffle_reduction, ob.warp_shuffle_reduction),
+                (oa.double_buffer, ob.double_buffer),
+                (oa.vendor_lib, ob.vendor_lib),
+                (oa.simplified_control_flow, ob.simplified_control_flow),
+            ] {
+                if fa != fb {
+                    d += 1.0;
+                }
+            }
+            d += log_gap(a.launch.grid, b.launch.grid);
+            d += log_gap(a.launch.block, b.launch.block);
+        }
+        d
+    }
+
     /// Total "source verbosity" proxy: used by the render/token model.
     pub fn complexity(&self) -> usize {
         self.groups
@@ -477,6 +538,49 @@ mod tests {
         s2.groups[0].opts.tiling = Tiling::Shared { tile: 32 };
         s2.groups[0].opts.split_k = 4;
         assert!(s2.complexity() > base);
+    }
+
+    #[test]
+    fn distance_zero_iff_equal_and_symmetric() {
+        let g = chain_graph();
+        let s = Schedule::naive(&g);
+        assert_eq!(s.distance(&s), 0.0);
+        let mut t = s.clone();
+        t.groups[0].opts.fast_math = true;
+        t.groups[1].opts.vector_width = 4;
+        let d = s.distance(&t);
+        assert!(d > 0.0 && d.is_finite());
+        assert_eq!(s.distance(&t), t.distance(&s), "distance must be symmetric");
+        // One boolean flip (1.0) + scalar->float4 (log2 4 = 2.0).
+        assert!((d - 3.0).abs() < 1e-12, "d = {d}");
+    }
+
+    #[test]
+    fn distance_counts_doublings_of_numeric_knobs() {
+        let g = chain_graph();
+        let s = Schedule::naive(&g);
+        let mut t = s.clone();
+        t.groups[0].opts.tiling = Tiling::Shared { tile: 32 };
+        let mut u = s.clone();
+        u.groups[0].opts.tiling = Tiling::Shared { tile: 64 };
+        // Tiled-vs-untiled is a categorical unit; tile doubling is 1.
+        assert_eq!(s.distance(&t), 1.0);
+        assert_eq!(t.distance(&u), 1.0);
+        assert!(t.distance(&u) <= s.distance(&u) + s.distance(&t)); // sanity, not a metric proof
+    }
+
+    #[test]
+    fn distance_infinite_across_partitions() {
+        let g = chain_graph();
+        let s = Schedule::naive(&g);
+        let mut fused = s.clone();
+        fused.fuse(0, 1);
+        assert_eq!(s.distance(&fused), f64::INFINITY);
+        // Same group count but different node partition: also infinite.
+        let mut swapped = s.clone();
+        swapped.groups[0].nodes = vec![1];
+        swapped.groups[1].nodes = vec![0];
+        assert_eq!(s.distance(&swapped), f64::INFINITY);
     }
 
     #[test]

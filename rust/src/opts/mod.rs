@@ -78,6 +78,22 @@ impl Candidate {
         Ok(())
     }
 
+    /// Schedule-space distance to another candidate, for similarity-aware
+    /// beam-frontier dedup ([`crate::icrl::driver`]; threshold
+    /// `policy.dedup_distance`). Candidates whose dataflow graphs differ
+    /// (graph-rewrite techniques ran on one but not the other) are
+    /// structurally different kernels — the distance is infinite.
+    /// Otherwise it is the schedules' feature distance
+    /// ([`crate::kir::schedule::Schedule::distance`]). Symmetric; 0.0
+    /// means same graph and same schedule (the `applied` trajectory log
+    /// may still differ — two routes to one program are one program).
+    pub fn schedule_distance(&self, other: &Candidate) -> f64 {
+        if self.full != other.full {
+            return f64::INFINITY;
+        }
+        self.schedule.distance(&other.schedule)
+    }
+
     /// True if any node computes in reduced precision (affects the
     /// verification tolerance, like fp16 CUDA kernels do).
     pub fn has_reduced_precision(&self) -> bool {
@@ -106,6 +122,24 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{}: {e}", task.id));
             assert_eq!(c.schedule.n_launches(), c.full.nodes.len());
         }
+    }
+
+    #[test]
+    fn schedule_distance_tracks_schedule_and_graph_changes() {
+        let suite = Suite::full();
+        let task = suite.by_id("L1/01_matmul_square").unwrap();
+        let a = Candidate::naive(task);
+        assert_eq!(a.schedule_distance(&a), 0.0);
+        // Same graph, nudged schedule: small finite distance.
+        let mut b = a.clone();
+        b.schedule.groups[0].opts.unroll = 2;
+        b.applied.push("loop_unrolling");
+        let d = a.schedule_distance(&b);
+        assert!(d > 0.0 && d.is_finite(), "d = {d}");
+        assert_eq!(a.schedule_distance(&b), b.schedule_distance(&a));
+        // Different graph (other task): structurally different kernel.
+        let other = Candidate::naive(suite.by_id("L1/12_softmax").unwrap());
+        assert_eq!(a.schedule_distance(&other), f64::INFINITY);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use kernelblaster::gpu::GpuArch;
 use kernelblaster::harness::{HarnessConfig, VerifyCache};
 use kernelblaster::icrl::fleet::{self, FleetConfig, FleetObserver};
-use kernelblaster::icrl::{self, IcrlConfig, KbMode};
+use kernelblaster::icrl::{self, IcrlConfig, KbMode, PolicyConfig, PolicyKind};
 use kernelblaster::kb::{lifecycle, persist, KnowledgeBase};
 use kernelblaster::tasks::{Suite, Task};
 
@@ -63,6 +63,7 @@ fn fleet_is_worker_count_invariant() {
             workers,
             epoch_size: 3,
             checkpoint_every: 0,
+            ..Default::default()
         };
         let mut kb = KnowledgeBase::empty();
         let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);
@@ -89,6 +90,7 @@ fn fleet_epoch_one_equals_sequential_driver_bit_for_bit() {
         workers: 8,
         epoch_size: 1,
         checkpoint_every: 0,
+        ..Default::default()
     };
     let mut kb_fleet = KnowledgeBase::empty();
     let out = icrl::run_fleet(&tasks, &arch, &mut kb_fleet, &cfg, &fleet_cfg);
@@ -141,6 +143,7 @@ fn fleet_epoch_one_replays_duplicate_lineage_history_exactly() {
             workers: 2,
             epoch_size: 1,
             checkpoint_every: 0,
+            ..Default::default()
         },
     );
     assert_eq!(out.runs, seq_runs);
@@ -169,6 +172,7 @@ fn fleet_warm_started_batches_are_deterministic_too() {
             workers,
             epoch_size: 4,
             checkpoint_every: 0,
+            ..Default::default()
         };
         let mut kb = theta0.clone();
         let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);
@@ -204,11 +208,73 @@ fn fleet_ephemeral_mode_matches_run_suite_semantics() {
             workers: 2,
             epoch_size: 2,
             checkpoint_every: 0,
+            ..Default::default()
         },
     );
     assert_eq!(out.runs, seq_runs);
     assert_eq!(out.commits, 0);
     assert!(kb_fleet.states.is_empty() && kb_seq.states.is_empty());
+}
+
+#[test]
+fn epoch_policy_mix_is_worker_count_invariant() {
+    // Policy-aware fleet scheduling must not weaken the determinism
+    // contract: with an explore→exploit epoch mix, workers ∈ {1, 2, 8}
+    // still produce byte-identical KBs and identical TaskRuns.
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg(37);
+    let mix = vec![
+        PolicyConfig::of_kind(PolicyKind::EpsilonGreedy),
+        PolicyConfig::of_kind(PolicyKind::Portfolio),
+        PolicyConfig::of_kind(PolicyKind::UcbBandit),
+    ];
+    let mut baseline: Option<(Vec<icrl::TaskRun>, String)> = None;
+    for workers in [1usize, 2, 8] {
+        let fleet_cfg = FleetConfig {
+            workers,
+            epoch_size: 2,
+            checkpoint_every: 0,
+            epoch_policies: mix.clone(),
+        };
+        let mut kb = KnowledgeBase::empty();
+        let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);
+        let bytes = kb_bytes(&kb);
+        match &baseline {
+            None => baseline = Some((out.runs, bytes)),
+            Some((runs0, bytes0)) => {
+                assert_eq!(&out.runs, runs0, "{workers} workers: mixed runs diverged");
+                assert_eq!(&bytes, bytes0, "{workers} workers: mixed KB diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn singleton_epoch_mix_of_the_batch_policy_equals_no_mix_bit_for_bit() {
+    // A mix that schedules the batch's own policy for every epoch is the
+    // identity configuration — the pre-mix fleet byte for byte.
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::a100();
+    let cfg = quick_cfg(43);
+    let plain = FleetConfig {
+        workers: 2,
+        epoch_size: 2,
+        checkpoint_every: 0,
+        ..Default::default()
+    };
+    let mut kb_plain = KnowledgeBase::empty();
+    let out_plain = icrl::run_fleet(&tasks, &arch, &mut kb_plain, &cfg, &plain);
+    let mixed = FleetConfig {
+        epoch_policies: vec![cfg.policy.clone()],
+        ..plain
+    };
+    let mut kb_mixed = KnowledgeBase::empty();
+    let out_mixed = icrl::run_fleet(&tasks, &arch, &mut kb_mixed, &cfg, &mixed);
+    assert_eq!(out_mixed.runs, out_plain.runs, "identity mix changed results");
+    assert_eq!(kb_bytes(&kb_mixed), kb_bytes(&kb_plain), "identity mix changed KB");
 }
 
 #[test]
@@ -307,6 +373,7 @@ fn mid_batch_checkpoints_are_loadable_byte_stable_documents() {
         workers: 2,
         epoch_size: 2,
         checkpoint_every: 1,
+        ..Default::default()
     };
     let out = icrl::run_fleet_observed(
         &tasks,

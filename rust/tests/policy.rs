@@ -18,8 +18,11 @@ use kernelblaster::agents::textgrad::{self, Sample};
 use kernelblaster::agents::{state_extractor, TokenMeter};
 use kernelblaster::gpu::{GpuArch, NcuReport};
 use kernelblaster::harness::{self, Outcome, VerifyCache};
-use kernelblaster::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, SearchPolicy, StepLog, TaskRun};
-use kernelblaster::kb::{self, persist, KnowledgeBase, StateSig};
+use kernelblaster::icrl::{
+    self, EpsilonGreedy, IcrlConfig, PolicyConfig, PolicyKind, Schedule, SearchPolicy, StepLog,
+    TaskRun, UcbBandit,
+};
+use kernelblaster::kb::{self, persist, KnowledgeBase, ScoredCandidate, StateSig};
 use kernelblaster::kir::interp;
 use kernelblaster::opts::{Candidate, Technique};
 use kernelblaster::tasks::{Suite, Task};
@@ -349,6 +352,7 @@ fn default_policy_bit_identity_holds_through_the_fleet() {
             workers: 2,
             epoch_size: 1,
             checkpoint_every: 0,
+            ..Default::default()
         },
     );
     assert_eq!(out.runs, runs_ref, "fleet runs diverged from pre-refactor driver");
@@ -503,6 +507,231 @@ fn greedy_policy_select_equals_legacy_draw_on_driver_grown_kbs() {
                 // And the free-function form agrees too.
                 let mut r3 = Rng::new(seed).derive("policy-equiv");
                 assert_eq!(kb::weighted_top_k(&scored, 3, &mut r3), via_policy);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Annealed-schedule regression anchors: Schedule::Constant (the default)
+// must reproduce the pre-schedule fixed-hyperparameter policies exactly.
+// ---------------------------------------------------------------------------
+
+/// The pre-schedule (PR-4) ε-greedy selection, transcribed verbatim: a
+/// fixed ε for the whole run, same per-slot coin/draw structure.
+fn reference_epsilon_greedy_select(
+    epsilon: f64,
+    candidates: &[ScoredCandidate],
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<Technique> {
+    let mut remaining: Vec<usize> = (0..candidates.len()).collect();
+    let mut picked = Vec::new();
+    while picked.len() < k && !remaining.is_empty() {
+        let untried: Vec<usize> = remaining
+            .iter()
+            .enumerate()
+            .filter(|(_, &ci)| candidates[ci].attempts == 0)
+            .map(|(pos, _)| pos)
+            .collect();
+        let pos = if !untried.is_empty() && rng.chance(epsilon) {
+            untried[rng.index(untried.len())]
+        } else {
+            let weights: Vec<f64> = remaining.iter().map(|&ci| candidates[ci].weight).collect();
+            rng.weighted_index(&weights)
+        };
+        picked.push(candidates[remaining[pos]].technique);
+        remaining.remove(pos);
+    }
+    picked
+}
+
+/// The pre-schedule (PR-4) UCB selection, transcribed verbatim: a fixed
+/// coefficient, deterministic top-k by score with enumeration-order ties.
+fn reference_ucb_select(
+    c: f64,
+    candidates: &[ScoredCandidate],
+    k: usize,
+) -> Vec<Technique> {
+    let total: usize = candidates.iter().map(|c| c.attempts).sum();
+    let score = |cand: &ScoredCandidate| {
+        let base = if cand.expected_gain.is_finite() {
+            cand.expected_gain
+        } else {
+            0.0
+        };
+        let ln_t = ((total + 1) as f64).ln();
+        base + c * (ln_t / (cand.attempts as f64 + 1.0)).sqrt()
+    };
+    let mut idx: Vec<usize> = (0..candidates.len()).collect();
+    idx.sort_by(|&a, &b| {
+        score(&candidates[b])
+            .total_cmp(&score(&candidates[a]))
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.into_iter().map(|i| candidates[i].technique).collect()
+}
+
+#[test]
+fn constant_schedule_equals_fixed_hyperparameters_draw_for_draw() {
+    // Selection-level anchor on real driver-grown pools: the annealed
+    // policies under Schedule::Constant must pick the same techniques
+    // AND consume the same stream as the pre-schedule transcriptions,
+    // state by state.
+    let suite = Suite::full();
+    let arch = GpuArch::a6000();
+    let cfg = quick_cfg(29);
+    let mut kbase = KnowledgeBase::empty();
+    for (i, id) in ["L2/01_gemm_bias_relu", "L1/12_softmax"].iter().enumerate() {
+        let _ = icrl::optimize_task(suite.by_id(id).unwrap(), &arch, &mut kbase, &cfg, i as u64);
+    }
+    assert!(!kbase.states.is_empty());
+    for si in 0..kbase.states.len() {
+        let scored = kbase.scored_candidates(si, |_| true);
+        for seed in [2u64, 77, 4096] {
+            for epsilon in [0.0, 0.15, 0.6] {
+                let policy = EpsilonGreedy {
+                    epsilon,
+                    schedule: Schedule::Constant,
+                };
+                let mut r1 = Rng::new(seed).derive("anneal-anchor");
+                let mut r2 = r1.clone();
+                let now = policy.select(&scored, 3, &mut r1);
+                let then = reference_epsilon_greedy_select(epsilon, &scored, 3, &mut r2);
+                assert_eq!(now, then, "state {si}, seed {seed}, eps {epsilon}");
+                assert_eq!(r1, r2, "state {si}: ε-greedy stream diverged");
+            }
+            for c in [0.0, 0.5, 2.0] {
+                let policy = UcbBandit {
+                    c,
+                    schedule: Schedule::Constant,
+                };
+                let mut rng = Rng::new(seed);
+                let before = rng.clone();
+                let now = policy.select(&scored, 3, &mut rng);
+                assert_eq!(rng, before, "UCB must stay draw-free");
+                assert_eq!(now, reference_ucb_select(c, &scored, 3), "state {si}, c {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_rate_schedules_equal_constant_at_the_driver_level() {
+    // A harmonic/exponential schedule with rate 0 is mathematically the
+    // constant schedule; the driver must agree bit-for-bit (TaskRuns and
+    // saved-KB bytes) — pinning that the annealing layer adds no stray
+    // arithmetic or RNG consumption on the constant path.
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+    for kind in [PolicyKind::EpsilonGreedy, PolicyKind::UcbBandit, PolicyKind::Portfolio] {
+        let cfg_for = |schedule: Schedule| IcrlConfig {
+            policy: PolicyConfig {
+                kind,
+                schedule,
+                ..Default::default()
+            },
+            ..quick_cfg(13)
+        };
+        let mut kb_const = KnowledgeBase::empty();
+        let r_const = icrl::optimize_task(task, &arch, &mut kb_const, &cfg_for(Schedule::Constant), 0);
+        for schedule in [
+            Schedule::Harmonic { rate: 0.0 },
+            Schedule::Exponential { rate: 0.0 },
+        ] {
+            let mut kb_zero = KnowledgeBase::empty();
+            let r_zero = icrl::optimize_task(task, &arch, &mut kb_zero, &cfg_for(schedule), 0);
+            assert_eq!(
+                r_zero, r_const,
+                "{kind:?}/{}: rate-0 diverged from constant",
+                schedule.name()
+            );
+            assert_eq!(
+                kb_bytes(&kb_zero),
+                kb_bytes(&kb_const),
+                "{kind:?}/{}: KB bytes diverged",
+                schedule.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn annealed_and_portfolio_policies_hold_fleet_determinism_and_stability() {
+    // The every-policy property suite, extended over the new surface:
+    // for the portfolio and the annealed variants, fleet runs must be
+    // worker-count invariant (workers ∈ {1, 2, 8}, byte-identical KBs),
+    // runs well-formed, KB weight pools NaN-free, and saved KBs
+    // byte-stable through the wire format.
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let tasks: Vec<&Task> = vec![
+        suite.by_id("L1/01_matmul_square").unwrap(),
+        suite.by_id("L1/12_softmax").unwrap(),
+        suite.by_id("L2/01_gemm_bias_relu").unwrap(),
+    ];
+    let variants: Vec<(PolicyKind, Schedule)> = vec![
+        (PolicyKind::EpsilonGreedy, Schedule::Harmonic { rate: 0.25 }),
+        (PolicyKind::EpsilonGreedy, Schedule::Exponential { rate: 0.25 }),
+        (PolicyKind::UcbBandit, Schedule::Harmonic { rate: 0.25 }),
+        (PolicyKind::UcbBandit, Schedule::Exponential { rate: 0.25 }),
+        (PolicyKind::Portfolio, Schedule::Constant),
+        (PolicyKind::Portfolio, Schedule::Harmonic { rate: 0.25 }),
+        (PolicyKind::Portfolio, Schedule::Exponential { rate: 0.25 }),
+    ];
+    for (kind, schedule) in variants {
+        let label = format!("{}/{}", kind.name(), schedule.name());
+        let cfg = IcrlConfig {
+            policy: PolicyConfig {
+                kind,
+                schedule,
+                ..Default::default()
+            },
+            ..quick_cfg(19)
+        };
+        let mut baseline: Option<(Vec<TaskRun>, String)> = None;
+        for workers in [1usize, 2, 8] {
+            let fleet_cfg = icrl::FleetConfig {
+                workers,
+                epoch_size: 2,
+                checkpoint_every: 0,
+                ..Default::default()
+            };
+            let mut kbase = KnowledgeBase::empty();
+            let out = icrl::run_fleet(&tasks, &arch, &mut kbase, &cfg, &fleet_cfg);
+            let bytes = kb_bytes(&kbase);
+            match &baseline {
+                None => {
+                    // Well-formedness + KB health, checked once (the
+                    // other worker counts must be bit-identical anyway).
+                    for run in &out.runs {
+                        assert!(run.valid, "{label}: no valid kernel");
+                        assert!(
+                            run.best_time_s <= run.naive_time_s * 1.0001,
+                            "{label}: best worse than naive"
+                        );
+                        assert!(run.steps.iter().all(|s| s.gain.is_finite()), "{label}");
+                    }
+                    for (si, state) in kbase.states.iter().enumerate() {
+                        for cand in kbase.scored_candidates(si, |_| true) {
+                            assert!(
+                                cand.weight.is_finite() && cand.weight > 0.0,
+                                "{label}: state {si} degenerate weight"
+                            );
+                        }
+                        assert!(!state.opts.is_empty());
+                    }
+                    // Byte-stable wire round trip.
+                    let reloaded = persist::from_json(&Json::parse(&bytes).unwrap()).unwrap();
+                    assert_eq!(bytes, kb_bytes(&reloaded), "{label}: KB not byte-stable");
+                    baseline = Some((out.runs, bytes));
+                }
+                Some((runs0, bytes0)) => {
+                    assert_eq!(&out.runs, runs0, "{label}: {workers} workers diverged");
+                    assert_eq!(&bytes, bytes0, "{label}: {workers} workers KB diverged");
+                }
             }
         }
     }

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Policy trend gate: fail CI when a search-policy arm regresses.
+
+Compares the current ``BENCH_policy.json`` (format
+``kernelblaster-bench-policy-v1``) against the artifact uploaded by a
+previous CI run and exits non-zero when any arm's ``vs_greedy_paired``
+ratio dropped by more than the threshold (default 5%). Contract details
+live in EXPERIMENTS.md §Policy ("Trend tracking").
+
+Rules:
+- arms are matched by their ``policy`` name; arms present only on one
+  side are reported but never fail the gate (adding or removing a policy
+  is a reviewed code change, not a regression);
+- an arm is skipped when either side has ``paired_cells`` == 0 or a
+  non-numeric ratio (the crate serializes degenerate geomeans as null) —
+  there is nothing comparable to trend;
+- the ``greedy_topk`` baseline arm is skipped (its ratio is 1.0 by
+  construction);
+- a missing/unreadable previous artifact passes with a notice: the first
+  run on a branch has no baseline, and a gate that fails open on missing
+  history would block unrelated changes.
+
+Usage: policy_trend.py CURRENT_JSON PREVIOUS_JSON [--threshold 0.05]
+Exit codes: 0 ok / no baseline; 1 regression; 2 bad invocation or a
+malformed *current* artifact (the build must have produced a valid one).
+"""
+
+import argparse
+import json
+import sys
+
+FORMAT = "kernelblaster-bench-policy-v1"
+BASELINE_ARM = "greedy_topk"
+
+
+def load_arms(path, required):
+    """Return {policy_name: arm_dict} or None if missing/malformed."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        if required:
+            print(f"policy-trend: cannot read current artifact {path}: {e}")
+            sys.exit(2)
+        print(f"policy-trend: no previous artifact at {path} ({e}); passing")
+        return None
+    if doc.get("format") != FORMAT:
+        if required:
+            print(f"policy-trend: {path} has format {doc.get('format')!r}, want {FORMAT!r}")
+            sys.exit(2)
+        print("policy-trend: previous artifact has unexpected format; passing")
+        return None
+    return {a.get("policy"): a for a in doc.get("arms", [])}
+
+
+def comparable(arm):
+    ratio = arm.get("vs_greedy_paired")
+    return (
+        isinstance(ratio, (int, float))
+        and arm.get("paired_cells", 0) > 0
+    )
+
+
+def main(argv):
+    parser = argparse.ArgumentParser(
+        prog="policy_trend.py",
+        description="Fail when a policy arm's vs_greedy_paired regresses "
+        "past the threshold vs a previous BENCH_policy.json.",
+    )
+    parser.add_argument("current", help="BENCH_policy.json of this run")
+    parser.add_argument("previous", help="baseline artifact (may be absent)")
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.05,
+        help="allowed fractional drop before failing (default 0.05 = 5%%)",
+    )
+    try:
+        args = parser.parse_args(argv)
+    except SystemExit:
+        return 2
+    threshold = args.threshold
+
+    current = load_arms(args.current, required=True)
+    previous = load_arms(args.previous, required=False)
+    if previous is None:
+        return 0
+
+    regressions = []
+    for name, cur in current.items():
+        if name == BASELINE_ARM:
+            continue
+        prev = previous.get(name)
+        if prev is None:
+            print(f"policy-trend: arm '{name}' is new (no baseline) — skipped")
+            continue
+        if not comparable(cur) or not comparable(prev):
+            print(f"policy-trend: arm '{name}' has no comparable paired cells — skipped")
+            continue
+        cur_ratio = cur["vs_greedy_paired"]
+        prev_ratio = prev["vs_greedy_paired"]
+        floor = prev_ratio * (1.0 - threshold)
+        verdict = "REGRESSED" if cur_ratio < floor else "ok"
+        print(
+            f"policy-trend: {name}: vs_greedy_paired {prev_ratio:.4f} -> "
+            f"{cur_ratio:.4f} (floor {floor:.4f}) {verdict}"
+        )
+        if cur_ratio < floor:
+            regressions.append(name)
+    for name in previous:
+        if name != BASELINE_ARM and name not in current:
+            print(f"policy-trend: arm '{name}' disappeared — skipped (reviewed change)")
+
+    if regressions:
+        print(
+            f"policy-trend: FAIL — {len(regressions)} arm(s) regressed more than "
+            f"{threshold:.0%}: {', '.join(regressions)}"
+        )
+        return 1
+    print("policy-trend: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
