@@ -4,7 +4,9 @@
 //! - `experiment <name|all> [--quick] [--seed N] [--out DIR]`
 //! - `optimize --task <id> [--gpu NAME] [--trajectories N] [--steps N]
 //!            [--vendor] [--kb PATH] [--warm-start P1,P2,…]
-//!            [--save-kb PATH] [--seed N]`
+//!            [--save-kb PATH] [--seed N] [--staged] [--memo PATH]` —
+//!   `--staged` turns on the tiered verification pipeline
+//!   ([`crate::harness::staged`]); `--memo` persists verdicts across runs
 //! - `batch --jobs FILE [--gpu NAME] [--workers N] [--epoch-size N]
 //!         [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
 //!         [--save-kb PATH] [--config run.json] …` — fleet batch serving:
@@ -29,6 +31,8 @@
 use crate::baselines;
 use crate::experiments::{self, Ctx};
 use crate::gpu::GpuArch;
+use crate::harness::memo;
+use crate::harness::staged::VerifyConfig;
 use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, Schedule};
 use crate::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
 use crate::kb::{persist, KnowledgeBase};
@@ -117,17 +121,20 @@ USAGE:
   kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
                          [--vendor] [--kb PATH] [--warm-start P1,P2,...]
                          [--save-kb PATH] [--seed N]
-                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search|portfolio]
+                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search|portfolio|thompson]
                          [--epsilon X] [--ucb-c X] [--beam-width N]
                          [--schedule constant|harmonic|exponential] [--schedule-rate X]
                          [--dedup-distance X]
+                         [--staged] [--no-screen] [--no-probe] [--screen-margin X]
+                         [--probe-seeds N] [--memo PATH]
   kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
                       [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
                       [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
                       [--vendor] [--policy NAME] [--epsilon X] [--ucb-c X]
                       [--beam-width N] [--schedule NAME] [--schedule-rate X]
-                      [--dedup-distance X] [--epoch-policies NAME,NAME,...]
-                      [--config run.json]
+                      [--dedup-distance X] [--epoch-policies NAME,NAME,...|auto]
+                      [--staged] [--no-screen] [--no-probe] [--screen-margin X]
+                      [--probe-seeds N] [--memo PATH] [--config run.json]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
   kernelblaster kb <init|inspect|stats> --path PATH
@@ -141,7 +148,7 @@ USAGE:
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
-  fig19 ablation_mem minimal_agent continual fleet policy sweep
+  fig19 ablation_mem minimal_agent continual fleet policy sweep verify
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -353,19 +360,33 @@ fn cmd_batch(args: &Args) -> i32 {
     // hyperparameter flags overlay each config-file entry so `--epsilon`
     // etc. mean the same thing whichever source named the mix — only
     // each entry's kind is the file's to keep.
-    match epoch_policies_from_flags(args, &cfg.icrl.policy) {
-        Ok(mix) if !mix.is_empty() => cfg.fleet.epoch_policies = mix,
-        Ok(_) => {
-            for i in 0..cfg.fleet.epoch_policies.len() {
-                let entry = cfg.fleet.epoch_policies[i].clone();
-                cfg.fleet.epoch_policies[i] = match policy_hypers_from_flags(args, entry) {
-                    Ok(p) => p,
-                    Err(code) => return code,
-                };
+    // `--epoch-policies auto` hands the mix to the KB-maturity scheduler
+    // ([`fleet::auto_epoch_policy`]) instead of naming it by hand.
+    if args.flag("epoch-policies") == Some("auto") {
+        cfg.fleet.auto_epoch_policies = true;
+        cfg.fleet.epoch_policies.clear();
+    } else {
+        match epoch_policies_from_flags(args, &cfg.icrl.policy) {
+            Ok(mix) if !mix.is_empty() => {
+                cfg.fleet.epoch_policies = mix;
+                cfg.fleet.auto_epoch_policies = false;
             }
+            Ok(_) => {
+                for i in 0..cfg.fleet.epoch_policies.len() {
+                    let entry = cfg.fleet.epoch_policies[i].clone();
+                    cfg.fleet.epoch_policies[i] = match policy_hypers_from_flags(args, entry) {
+                        Ok(p) => p,
+                        Err(code) => return code,
+                    };
+                }
+            }
+            Err(code) => return code,
         }
-        Err(code) => return code,
     }
+    cfg.icrl.verify = match verify_from_flags(args, cfg.icrl.verify.clone()) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
     cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
     cfg.fleet.checkpoint_every =
@@ -497,9 +518,30 @@ fn cmd_batch(args: &Args) -> i32 {
             String::new()
         }
     );
+    let staged = cfg.icrl.verify.staged;
+    let memo_path: Option<PathBuf> = if staged {
+        cfg.icrl.verify.memo_path.clone().map(PathBuf::from)
+    } else {
+        None
+    };
+    let mut verify_memo = memo_path
+        .as_deref()
+        .map(memo::load_or_cold)
+        .unwrap_or_default();
     let start = std::time::Instant::now();
-    let outcome =
-        fleet::run_fleet_observed(&tasks, &arch, &mut kb, &cfg.icrl, &cfg.fleet, &mut obs);
+    let outcome = if staged {
+        fleet::run_fleet_memo(
+            &tasks,
+            &arch,
+            &mut kb,
+            &cfg.icrl,
+            &cfg.fleet,
+            &mut verify_memo,
+            &mut obs,
+        )
+    } else {
+        fleet::run_fleet_observed(&tasks, &arch, &mut kb, &cfg.icrl, &cfg.fleet, &mut obs)
+    };
     let elapsed = start.elapsed().as_secs_f64();
 
     let valid_speedups: Vec<f64> = outcome
@@ -525,8 +567,28 @@ fn cmd_batch(args: &Args) -> i32 {
         outcome.runs.len() as f64 / (elapsed / 60.0).max(1e-9),
     );
     s.set("kb_states", kb.states.len());
+    // Tier counters only appear when staging ran — the default summary
+    // line stays byte-compatible with pre-staging consumers.
+    if staged {
+        s.set("screen_rejected", outcome.tiers.screen_rejected);
+        s.set("probe_rejected", outcome.tiers.probe_rejected);
+        s.set("memo_hits", outcome.tiers.memo_hits);
+        s.set("full_verifications", outcome.tiers.full_verifications);
+        s.set("seeds_executed", outcome.tiers.seeds_executed);
+    }
     println!("{}", crate::util::json::Json::Obj(s).to_string_compact());
 
+    if let Some(p) = &memo_path {
+        if let Err(e) = memo::save(&verify_memo, p) {
+            eprintln!("failed to save memo to {}: {e}", p.display());
+            return 1;
+        }
+        eprintln!(
+            "saved memo ({} verdicts) to {}",
+            verify_memo.len(),
+            p.display()
+        );
+    }
     if let Some(p) = &save_path {
         // Atomic like the mid-batch checkpoints: the final write must
         // never be the one that tears the advertised recovery path.
@@ -594,7 +656,43 @@ fn cmd_optimize(args: &Args) -> i32 {
         Ok(p) => p,
         Err(code) => return code,
     };
-    let run = icrl::optimize_task(task, &arch, &mut kb, &cfg, 0);
+    cfg.verify = match verify_from_flags(args, cfg.verify) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    // Staged runs go through the verified entry point so memo verdicts
+    // flow in (snapshot) and out (delta); the default path stays on the
+    // plain driver, bit-identical to the pre-staging CLI.
+    let run = if cfg.verify.staged {
+        let memo_path = cfg.verify.memo_path.clone().map(PathBuf::from);
+        let mut memo = memo_path
+            .as_deref()
+            .map(memo::load_or_cold)
+            .unwrap_or_default();
+        let mut cache = crate::harness::VerifyCache::new();
+        let (run, delta, tiers) =
+            icrl::optimize_task_verified(task, &arch, &mut kb, &cfg, 0, &mut cache, Some(&memo));
+        memo.apply_delta(&delta);
+        eprintln!(
+            "verify tiers: {} screened, {} probe-rejected, {} memo hits, \
+             {} full oracle runs, {} seeds executed",
+            tiers.screen_rejected,
+            tiers.probe_rejected,
+            tiers.memo_hits,
+            tiers.full_verifications,
+            tiers.seeds_executed
+        );
+        if let Some(p) = &memo_path {
+            if let Err(e) = memo::save(&memo, p) {
+                eprintln!("failed to save memo to {}: {e}", p.display());
+                return 1;
+            }
+            eprintln!("saved memo ({} verdicts) to {}", memo.len(), p.display());
+        }
+        run
+    } else {
+        icrl::optimize_task(task, &arch, &mut kb, &cfg, 0)
+    };
     let baselines = baselines::baseline_times(task, &arch);
 
     let mut t = Table::new(&["metric", "value"]);
@@ -804,6 +902,28 @@ fn policy_hypers_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyCon
         return Err(2);
     }
     Ok(policy)
+}
+
+/// Tiered-verification config from `--staged` / `--no-screen` /
+/// `--no-probe` / `--screen-margin` / `--probe-seeds` / `--memo` flags
+/// over a base (default or config-file) section, enforcing the same
+/// contract the config-file path validates. Flags only ever turn
+/// staging on or tune it — absent flags keep the base, so a config
+/// file's `verify` section survives untouched.
+fn verify_from_flags(args: &Args, base: VerifyConfig) -> Result<VerifyConfig, i32> {
+    let verify = VerifyConfig {
+        staged: base.staged || args.has("staged"),
+        screen: base.screen && !args.has("no-screen"),
+        probe: base.probe && !args.has("no-probe"),
+        screen_margin: args.f64_flag("screen-margin", base.screen_margin),
+        probe_seeds: args.usize_flag("probe-seeds", base.probe_seeds),
+        memo_path: args.flag("memo").map(String::from).or(base.memo_path),
+    };
+    if let Err(e) = verify.validate() {
+        eprintln!("{e}");
+        return Err(2);
+    }
+    Ok(verify)
 }
 
 /// Parse `--epoch-policies a,b,c` into a per-epoch policy mix: each name
@@ -1171,6 +1291,7 @@ mod tests {
             "ucb_bandit",
             "beam_search",
             "portfolio",
+            "thompson",
         ] {
             assert_eq!(
                 run(&argv(&format!(
@@ -1325,6 +1446,63 @@ mod tests {
             native_low, native_high,
             "fixture must be ε-sensitive for the overlay check to mean anything"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn optimize_staged_and_memo_flags_end_to_end() {
+        let dir = std::env::temp_dir().join("kb_cli_staged_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo = dir.join("memo.json");
+        let memo_s = memo.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2 \
+                 --staged --memo {memo_s}"
+            ))),
+            0
+        );
+        assert!(memo.exists(), "staged run must persist the memo");
+        // A second run replays the persisted verdicts and still succeeds.
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2 \
+                 --staged --memo {memo_s}"
+            ))),
+            0
+        );
+        // Invalid verify knobs are usage errors.
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --staged --screen-margin 0.5"
+            )),
+            2
+        );
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --staged --probe-seeds 0")),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_staged_memo_and_auto_epochs_end_to_end() {
+        let dir = std::env::temp_dir().join("kb_cli_batch_staged_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(&jobs, "L1/12_softmax\nL1/15_relu\n").unwrap();
+        let memo = dir.join("memo.json");
+        assert_eq!(
+            run(&argv(&format!(
+                "batch --jobs {} --gpu A100 --workers 2 --epoch-size 1 \
+                 --trajectories 1 --steps 2 --epoch-policies auto \
+                 --staged --memo {}",
+                jobs.to_str().unwrap(),
+                memo.display()
+            ))),
+            0
+        );
+        assert!(memo.exists(), "staged batch must persist the memo");
         std::fs::remove_dir_all(&dir).ok();
     }
 

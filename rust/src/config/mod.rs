@@ -12,6 +12,7 @@
 
 use crate::agents::AgentConfig;
 use crate::gpu::GpuArch;
+use crate::harness::staged::VerifyConfig;
 use crate::harness::HarnessConfig;
 use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind, Schedule};
 use crate::kb::lifecycle::TransferPolicy;
@@ -169,7 +170,10 @@ impl RunConfig {
         fleet.set("workers", self.fleet.workers);
         fleet.set("epoch_size", self.fleet.epoch_size);
         fleet.set("checkpoint_every", self.fleet.checkpoint_every);
-        if !self.fleet.epoch_policies.is_empty() {
+        if self.fleet.auto_epoch_policies {
+            // "auto" (KB-maturity tuning) supersedes any hand-written mix.
+            fleet.set("epoch_policies", "auto");
+        } else if !self.fleet.epoch_policies.is_empty() {
             fleet.set(
                 "epoch_policies",
                 Json::Arr(
@@ -194,6 +198,21 @@ impl RunConfig {
         harness.set("noise_sigma", self.icrl.harness.noise_sigma);
         harness.set("allow_vendor", self.icrl.harness.allow_vendor);
         root.set("harness", harness);
+        // Staged verification: emitted only when something differs from
+        // the defaults, keeping pre-staging config files byte-stable.
+        if self.icrl.verify != VerifyConfig::default() {
+            let v = &self.icrl.verify;
+            let mut verify = JsonObj::new();
+            verify.set("staged", v.staged);
+            verify.set("screen", v.screen);
+            verify.set("probe", v.probe);
+            verify.set("screen_margin", v.screen_margin);
+            verify.set("probe_seeds", v.probe_seeds);
+            if let Some(p) = &v.memo_path {
+                verify.set("memo", p.as_str());
+            }
+            root.set("verify", verify);
+        }
         if let Some(p) = &self.kb_load {
             root.set("kb_load", p.as_str());
         }
@@ -267,13 +286,28 @@ impl RunConfig {
         if let Some(fleet) = j.get("fleet") {
             let d = FleetConfig::default();
             let mut epoch_policies = Vec::new();
-            if let Some(arr) = fleet.get("epoch_policies").and_then(Json::as_arr) {
-                // Mix entries inherit the run's policy (parsed above), so
-                // `[{"kind":"epsilon_greedy"},{"kind":"ucb_bandit"}]`
-                // keeps the batch's ε / c / schedule knobs.
-                for p in arr {
-                    epoch_policies.push(policy_from_json(p, &cfg.icrl.policy)?);
+            let mut auto_epoch_policies = false;
+            match fleet.get("epoch_policies") {
+                // `"epoch_policies": "auto"` → derive each epoch's policy
+                // from KB maturity instead of a hand-written mix.
+                Some(Json::Str(s)) if s == "auto" => auto_epoch_policies = true,
+                Some(Json::Str(other)) => {
+                    return Err(ConfigError::Invalid(format!(
+                        "fleet.epoch_policies must be \"auto\" or a policy list, got \"{other}\""
+                    )));
                 }
+                Some(p) => {
+                    if let Some(arr) = p.as_arr() {
+                        // Mix entries inherit the run's policy (parsed
+                        // above), so `[{"kind":"epsilon_greedy"},
+                        // {"kind":"ucb_bandit"}]` keeps the batch's
+                        // ε / c / schedule knobs.
+                        for p in arr {
+                            epoch_policies.push(policy_from_json(p, &cfg.icrl.policy)?);
+                        }
+                    }
+                }
+                None => {}
             }
             cfg.fleet = FleetConfig {
                 workers: fleet
@@ -289,6 +323,7 @@ impl RunConfig {
                     .and_then(Json::as_usize)
                     .unwrap_or(d.checkpoint_every),
                 epoch_policies,
+                auto_epoch_policies,
             };
         }
         if let Some(agent) = j.get("agent") {
@@ -321,6 +356,23 @@ impl RunConfig {
                     .and_then(Json::as_bool)
                     .unwrap_or(d.allow_vendor),
                 ..d
+            };
+        }
+        if let Some(v) = j.get("verify") {
+            let d = VerifyConfig::default();
+            cfg.icrl.verify = VerifyConfig {
+                staged: v.get("staged").and_then(Json::as_bool).unwrap_or(d.staged),
+                screen: v.get("screen").and_then(Json::as_bool).unwrap_or(d.screen),
+                probe: v.get("probe").and_then(Json::as_bool).unwrap_or(d.probe),
+                screen_margin: v
+                    .get("screen_margin")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.screen_margin),
+                probe_seeds: v
+                    .get("probe_seeds")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.probe_seeds),
+                memo_path: v.get("memo").and_then(Json::as_str).map(String::from),
             };
         }
         cfg.kb_load = j.get("kb_load").and_then(Json::as_str).map(String::from);
@@ -369,6 +421,7 @@ impl RunConfig {
             p.validate()
                 .map_err(|e| ConfigError::Invalid(format!("fleet.epoch_policies[{i}]: {e}")))?;
         }
+        cfg.icrl.verify.validate().map_err(ConfigError::Invalid)?;
         cfg.resolve_arch()?;
         Ok(cfg)
     }
@@ -600,6 +653,70 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"fleet":{"epoch_size":0}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn verify_section_roundtrips_and_validates() {
+        // Absent section = defaults, and the default config emits no
+        // "verify" key at all — pre-staging config files stay byte-stable.
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert_eq!(plain.icrl.verify, VerifyConfig::default());
+        let default_text = RunConfig::default().to_json().to_string_pretty();
+        assert!(
+            !default_text.contains("\"verify\""),
+            "default config must not emit a verify section:\n{default_text}"
+        );
+        // Non-default section roundtrips every knob.
+        let cfg = RunConfig {
+            icrl: IcrlConfig {
+                verify: VerifyConfig {
+                    staged: true,
+                    screen: false,
+                    probe: true,
+                    screen_margin: 2.0,
+                    probe_seeds: 2,
+                    memo_path: Some("/tmp/memo.json".into()),
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.icrl.verify, cfg.icrl.verify);
+        // Partial section inherits the remaining defaults.
+        let j = Json::parse(r#"{"verify":{"staged":true}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.icrl.verify.staged);
+        assert!(c.icrl.verify.screen);
+        assert_eq!(c.icrl.verify.probe_seeds, 1);
+        assert_eq!(c.icrl.verify.memo_path, None);
+        // Invalid knobs are rejected.
+        let j = Json::parse(r#"{"verify":{"screen_margin":0.9}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("screen_margin"), "{err}");
+        let j = Json::parse(r#"{"verify":{"probe_seeds":0}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("probe_seeds"), "{err}");
+    }
+
+    #[test]
+    fn auto_epoch_policies_roundtrips_and_rejects_bad_strings() {
+        let j = Json::parse(r#"{"fleet":{"epoch_policies":"auto"}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.fleet.auto_epoch_policies);
+        assert!(c.fleet.epoch_policies.is_empty());
+        // to_json emits the string form, and it roundtrips.
+        let text = c.to_json().to_string_compact();
+        assert!(text.contains("\"epoch_policies\":\"auto\""), "{text}");
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert!(back.fleet.auto_epoch_policies);
+        // Any other string is an error, not silently ignored.
+        let j = Json::parse(r#"{"fleet":{"epoch_policies":"bogus"}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(
+            err.contains("must be \"auto\" or a policy list"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Experiment registry: one regenerator per paper table/figure, plus the
 //! [`continual`] cross-arch lifecycle scenario, the [`fleet`]
 //! batch-serving throughput/parity scenario, the [`policy`] search-policy
-//! comparison, and the [`sweep`] exploration-hyperparameter grid.
+//! comparison, the [`sweep`] exploration-hyperparameter grid, and the
+//! [`verify`] tiered-verification op-count benchmark.
 //!
 //! Every entry produces a [`Report`] — human-readable tables/plots plus
 //! machine-readable CSVs — from the same code paths the CLI
@@ -21,6 +22,7 @@ pub mod learning;
 pub mod policy;
 pub mod sweep;
 pub mod table3;
+pub mod verify;
 
 /// Paired-grid measurement plumbing shared by the [`policy`] and
 /// [`sweep`] scenarios: every arm runs an identical `(task, seed)` grid
@@ -257,6 +259,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("fleet", fleet::run),
         ("policy", policy::run),
         ("sweep", sweep::run),
+        ("verify", verify::run),
     ]
 }
 

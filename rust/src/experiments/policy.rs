@@ -182,8 +182,9 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
                 "greedy_topk is the pre-policy-subsystem driver bit-for-bit \
                  (tests/policy.rs); the other arms trade its exploit-heavy draw for \
                  an exploration floor (epsilon_greedy), an evidence-uncertainty bonus \
-                 (ucb_bandit), a carried frontier (beam_search), or a contrastive \
-                 explore/exploit mix arbitrated per state (portfolio)"
+                 (ucb_bandit), a carried frontier (beam_search), a contrastive \
+                 explore/exploit mix arbitrated per state (portfolio), or a \
+                 deterministic Beta-posterior draw over per-entry evidence (thompson)"
                     .to_string(),
                 format!("machine-readable: {}", out.display()),
             ],
@@ -224,9 +225,10 @@ mod tests {
         let seeds = [3u64, 4];
         let all = arms(&tasks, &arch, &base, &seeds);
         assert_eq!(all.len(), PolicyKind::all().len());
-        assert_eq!(all.len(), 5);
+        assert_eq!(all.len(), 6);
         assert_eq!(all[0].kind, PolicyKind::GreedyTopK);
         assert_eq!(all[4].kind, PolicyKind::Portfolio);
+        assert_eq!(all[5].kind, PolicyKind::Thompson);
         for arm in &all {
             assert_eq!(arm.cells.len(), 4, "{}: 2 tasks x 2 seeds", arm.kind.name());
             assert!(arm.valid_count() > 0, "{}: nothing valid", arm.kind.name());
@@ -248,7 +250,7 @@ mod tests {
             Some("kernelblaster-bench-policy-v1")
         );
         let arms_json = j.get("arms").and_then(Json::as_arr).unwrap();
-        assert_eq!(arms_json.len(), 5);
+        assert_eq!(arms_json.len(), 6);
         assert_eq!(
             arms_json[0].get("policy").and_then(Json::as_str),
             Some("greedy_topk")

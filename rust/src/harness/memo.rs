@@ -1,0 +1,674 @@
+//! Persistent cross-run candidate-verification memo — the
+//! `kernelblaster-memo-v1` wire format.
+//!
+//! Verification verdicts are pure functions of (task identity, candidate
+//! program, harness tolerances): the same candidate graph + schedule
+//! verified under the same config always passes or fails the same way.
+//! [`VerifyMemo`] exploits that by memoizing verdicts across picks,
+//! tasks, epochs, and *sessions*, keyed by a canonical content hash
+//! ([`candidate_key`]). A repeat encounter skips the screen/probe tiers
+//! and the full multi-seed oracle entirely; passing candidates are still
+//! re-profiled (profiles are noisy measurements, not verdicts — see
+//! [`super::staged`]).
+//!
+//! # What is (and is not) memoizable
+//!
+//! Recorded verdicts must be deterministic functions of the key alone:
+//! - **pass** — recorded only after the full tier-2 oracle (all seeds +
+//!   soft verify) accepted the candidate;
+//! - **compile_error / wrong_numerics / soft_rejected** — the harness's
+//!   deterministic rejections, replayed verbatim on a hit.
+//!
+//! Tier-0 screen rejections are **never** recorded: they depend on the
+//! run's current-best time, which is not part of the key.
+//!
+//! # Sharing discipline (fleet)
+//!
+//! Like the KB, the memo flows snapshot-in / delta-out through the fleet:
+//! workers read an epoch-start snapshot, collect [`MemoDelta`]s, and the
+//! scheduler commits them insert-or-ignore in task order. Because every
+//! entry is a deterministic function of its key, commit order cannot
+//! change a value — saved memos are byte-identical for any worker count
+//! (the entries serialize sorted by key).
+//!
+//! # Wire format
+//!
+//! A single ordered-JSON document, `format` key first, entries sorted by
+//! key; written with the same atomic tmp+rename discipline as KB
+//! checkpoints. Parse → serialize is the identity on every v1 document
+//! this crate writes. Corrupt or missing files degrade to a cold (empty)
+//! memo with a stderr notice — a damaged cache must never fail a run.
+
+use super::{HarnessConfig, Outcome};
+use crate::kir::schedule::{MemLayout, Schedule, Tiling};
+use crate::kir::{KernelGraph, OpKind, ValueRef};
+use crate::opts::Candidate;
+use crate::util::json::{Json, JsonObj};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// FNV-1a 64-bit hash of a string — the memo's content-hash primitive
+/// (same constants as [`crate::util::rng::Rng::derive`]'s label hash).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A memoized verification verdict — the deterministic part of an
+/// [`Outcome`] (profiles are excluded: they carry measurement noise).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemoVerdict {
+    /// The candidate passed the full oracle (all seeds + soft verify).
+    /// On a hit the caller skips re-verification and goes straight to
+    /// profiling.
+    Pass,
+    /// Structural validation / execution failure, with its feedback.
+    CompileError(String),
+    /// Numeric mismatch at a verification seed. `max_abs_diff` is stored
+    /// bit-exactly on the wire so replayed feedback is byte-identical.
+    WrongNumerics {
+        /// The failing verification seed.
+        seed: u64,
+        /// Largest elementwise |Δ| observed at that seed.
+        max_abs_diff: f32,
+    },
+    /// Soft-verify (reward-hacking guard) rejection, with its reason.
+    SoftRejected(String),
+}
+
+impl MemoVerdict {
+    /// The memoizable verdict of a harness outcome; `None` for outcomes
+    /// that must not be recorded (tier-0 screens depend on run state).
+    pub fn of(outcome: &Outcome) -> Option<MemoVerdict> {
+        match outcome {
+            Outcome::Ok(_) => Some(MemoVerdict::Pass),
+            Outcome::CompileError(e) => Some(MemoVerdict::CompileError(e.clone())),
+            Outcome::WrongNumerics { seed, max_abs_diff } => Some(MemoVerdict::WrongNumerics {
+                seed: *seed,
+                max_abs_diff: *max_abs_diff,
+            }),
+            Outcome::SoftVerifyRejected(r) => Some(MemoVerdict::SoftRejected(r.clone())),
+            Outcome::ScreenedOut(_) => None,
+        }
+    }
+
+    /// Replay the verdict as an [`Outcome`]. `None` for [`Self::Pass`]:
+    /// a pass carries no profile — the caller must re-profile.
+    pub fn to_outcome(&self) -> Option<Outcome> {
+        match self {
+            MemoVerdict::Pass => None,
+            MemoVerdict::CompileError(e) => Some(Outcome::CompileError(e.clone())),
+            MemoVerdict::WrongNumerics { seed, max_abs_diff } => Some(Outcome::WrongNumerics {
+                seed: *seed,
+                max_abs_diff: *max_abs_diff,
+            }),
+            MemoVerdict::SoftRejected(r) => Some(Outcome::SoftVerifyRejected(r.clone())),
+        }
+    }
+
+    /// Stable wire name of the verdict variant.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            MemoVerdict::Pass => "pass",
+            MemoVerdict::CompileError(_) => "compile_error",
+            MemoVerdict::WrongNumerics { .. } => "wrong_numerics",
+            MemoVerdict::SoftRejected(_) => "soft_rejected",
+        }
+    }
+}
+
+/// The persistent candidate-verification memo: verdicts keyed by the
+/// canonical content hash of (task id, candidate, harness fingerprint).
+/// Sorted storage keeps serialization byte-stable regardless of insert
+/// order — the fleet's worker-count-invariance anchor.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VerifyMemo {
+    entries: BTreeMap<String, MemoVerdict>,
+}
+
+impl VerifyMemo {
+    /// An empty (cold) memo.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of memoized verdicts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up the verdict for a candidate key.
+    pub fn get(&self, key: &str) -> Option<&MemoVerdict> {
+        self.entries.get(key)
+    }
+
+    /// Record a verdict. Insert-or-ignore: verdicts are deterministic
+    /// functions of their key, so the first record is as good as any
+    /// later one and commit order can never change the memo's content.
+    /// Returns true when the key was new.
+    pub fn insert(&mut self, key: String, verdict: MemoVerdict) -> bool {
+        match self.entries.entry(key) {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(verdict);
+                true
+            }
+            std::collections::btree_map::Entry::Occupied(_) => false,
+        }
+    }
+
+    /// Merge a delta (insert-or-ignore, see [`Self::insert`]).
+    pub fn apply_delta(&mut self, delta: &MemoDelta) {
+        for (k, v) in &delta.added {
+            self.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Iterate entries in key order (tests and serialization).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MemoVerdict)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+}
+
+/// Verdicts a run recorded beyond its input snapshot — the memo analog
+/// of `kb::lifecycle::KbDelta`, committed by the fleet in task order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoDelta {
+    /// New (key, verdict) records, in the order the run produced them.
+    pub added: Vec<(String, MemoVerdict)>,
+}
+
+impl MemoDelta {
+    /// A delta with no records.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// True when the run recorded nothing new.
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty()
+    }
+
+    /// Number of new records.
+    pub fn len(&self) -> usize {
+        self.added.len()
+    }
+}
+
+fn push_value_ref(out: &mut String, r: ValueRef) {
+    match r {
+        ValueRef::Input(i) => {
+            let _ = write!(out, "i{i}");
+        }
+        ValueRef::Node(i) => {
+            let _ = write!(out, "n{i}");
+        }
+    }
+}
+
+fn push_refs(out: &mut String, refs: &[ValueRef]) {
+    for (i, r) in refs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_value_ref(out, *r);
+    }
+}
+
+fn push_dims(out: &mut String, dims: &[usize]) {
+    for (i, d) in dims.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{d}");
+    }
+}
+
+/// Canonical op spelling. Exhaustive over [`OpKind`] **by design**: a new
+/// op added without extending this writer is a compile error, not a
+/// silent hash collision. Float parameters are spelled as raw IEEE bits
+/// so the canonical form is exact.
+fn push_op(out: &mut String, op: &OpKind) {
+    let _ = match op {
+        OpKind::Matmul => write!(out, "matmul"),
+        OpKind::Conv2d { stride, pad } => write!(out, "conv2d(s={stride},p={pad})"),
+        OpKind::MaxPool2d { k, stride } => write!(out, "maxpool2d(k={k},s={stride})"),
+        OpKind::AvgPool2d { k, stride } => write!(out, "avgpool2d(k={k},s={stride})"),
+        OpKind::BiasAdd { axis } => write!(out, "bias_add(a={axis})"),
+        OpKind::Relu => write!(out, "relu"),
+        OpKind::Gelu => write!(out, "gelu"),
+        OpKind::Sigmoid => write!(out, "sigmoid"),
+        OpKind::Tanh => write!(out, "tanh"),
+        OpKind::Exp => write!(out, "exp"),
+        OpKind::Scale { c } => write!(out, "scale(c={:08x})", c.to_bits()),
+        OpKind::AddConst { c } => write!(out, "add_const(c={:08x})", c.to_bits()),
+        OpKind::Add => write!(out, "add"),
+        OpKind::Sub => write!(out, "sub"),
+        OpKind::Mul => write!(out, "mul"),
+        OpKind::DivConst { c } => write!(out, "div_const(c={:08x})", c.to_bits()),
+        OpKind::Softmax { axis } => write!(out, "softmax(a={axis})"),
+        OpKind::LogSumExp { axis } => write!(out, "logsumexp(a={axis})"),
+        OpKind::ReduceSum { axis } => write!(out, "reduce_sum(a={axis})"),
+        OpKind::ReduceMax { axis } => write!(out, "reduce_max(a={axis})"),
+        OpKind::ReduceMean { axis } => write!(out, "reduce_mean(a={axis})"),
+        OpKind::Transpose => write!(out, "transpose"),
+        OpKind::Reshape { shape } => {
+            out.push_str("reshape(");
+            push_dims(out, &shape.0);
+            write!(out, ")")
+        }
+        OpKind::LayerNorm => write!(out, "layer_norm"),
+        OpKind::Concat { axis } => write!(out, "concat(a={axis})"),
+        OpKind::Identity => write!(out, "identity"),
+    };
+}
+
+fn push_graph(out: &mut String, label: &str, g: &KernelGraph) {
+    let _ = writeln!(out, "graph={label} name={}", g.name);
+    for inp in &g.inputs {
+        let _ = write!(out, "in {}:{}:", inp.name, inp.dtype.name());
+        push_dims(out, &inp.shape.0);
+        out.push('\n');
+    }
+    for (i, node) in g.nodes.iter().enumerate() {
+        let _ = write!(out, "node {i} ");
+        push_op(out, &node.kind);
+        out.push_str(" deps=");
+        push_refs(out, &node.deps);
+        out.push_str(" shape=");
+        push_dims(out, &node.shape.0);
+        let _ = writeln!(out, " dtype={}", node.dtype.name());
+    }
+    out.push_str("out ");
+    push_refs(out, &g.outputs);
+    out.push('\n');
+}
+
+fn push_schedule(out: &mut String, s: &Schedule) {
+    out.push_str("schedule\n");
+    for g in &s.groups {
+        out.push_str("group nodes=");
+        push_dims(out, &g.nodes);
+        let _ = write!(out, " grid={} block={}", g.launch.grid, g.launch.block);
+        let o = &g.opts;
+        let layout = match o.layout {
+            MemLayout::Naive => "naive",
+            MemLayout::Coalesced => "coalesced",
+            MemLayout::Padded => "padded",
+        };
+        let _ = write!(out, " layout={layout}");
+        match o.tiling {
+            Tiling::None => out.push_str(" tiling=none"),
+            Tiling::Shared { tile } => {
+                let _ = write!(out, " tiling=shared({tile})");
+            }
+        }
+        let _ = writeln!(
+            out,
+            " vw={} ilp={} unroll={} tc={} splitk={} fm={} wsr={} coarse={} regs={} db={} vendor={} scf={}",
+            o.vector_width,
+            o.ilp,
+            o.unroll,
+            o.tensor_core as u8,
+            o.split_k as u64,
+            o.fast_math as u8,
+            o.warp_shuffle_reduction as u8,
+            o.coarsening,
+            o.regs_per_thread,
+            o.double_buffer as u8,
+            o.vendor_lib as u8,
+            o.simplified_control_flow as u8,
+        );
+    }
+}
+
+/// The canonical text a candidate key hashes: task id, the
+/// verdict-relevant harness fingerprint, both graphs, and the schedule.
+/// Exposed so tests can pin the spelling against a checked-in fixture
+/// (hash-stability drift pin).
+///
+/// The fingerprint includes exactly the config fields a verdict depends
+/// on — `verify_seeds` and the tolerances (as raw IEEE bits) plus
+/// `allow_vendor` — and deliberately excludes `noise_sigma`, which only
+/// shapes profiles, never verdicts.
+pub fn canonical_string(task_id: &str, cand: &Candidate, cfg: &HarnessConfig) -> String {
+    let mut out = String::with_capacity(1024);
+    let _ = writeln!(out, "memo-v1 task={task_id}");
+    let _ = writeln!(
+        out,
+        "cfg seeds={} rtol={:08x} atol={:08x} rtol_reduced={:08x} vendor={}",
+        cfg.verify_seeds,
+        cfg.rtol.to_bits(),
+        cfg.atol.to_bits(),
+        cfg.rtol_reduced.to_bits(),
+        cfg.allow_vendor as u8,
+    );
+    push_graph(&mut out, "full", &cand.full);
+    push_graph(&mut out, "small", &cand.small);
+    push_schedule(&mut out, &cand.schedule);
+    out
+}
+
+/// The memo key of a candidate: 16 lowercase hex digits of the FNV-1a 64
+/// hash of [`canonical_string`].
+pub fn candidate_key(task_id: &str, cand: &Candidate, cfg: &HarnessConfig) -> String {
+    format!("{:016x}", fnv1a64(&canonical_string(task_id, cand, cfg)))
+}
+
+/// Everything that can go wrong loading/saving a memo document.
+#[derive(Debug, thiserror::Error)]
+pub enum MemoError {
+    /// Filesystem failure reading or writing the document.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    /// The file is not valid JSON.
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    /// Valid JSON, but not a well-formed `kernelblaster-memo-v1` document.
+    #[error("schema: {0}")]
+    Schema(String),
+}
+
+/// Serialize a memo into the ordered-JSON v1 document (entries sorted by
+/// key — byte-stable for any insertion history).
+pub fn to_json(memo: &VerifyMemo) -> Json {
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-memo-v1");
+    let entries: Vec<Json> = memo
+        .entries
+        .iter()
+        .map(|(key, verdict)| {
+            let mut o = JsonObj::new();
+            o.set("key", key.as_str());
+            o.set("verdict", verdict.kind_name());
+            match verdict {
+                MemoVerdict::Pass => {}
+                MemoVerdict::CompileError(reason) | MemoVerdict::SoftRejected(reason) => {
+                    o.set("reason", reason.as_str());
+                }
+                MemoVerdict::WrongNumerics { seed, max_abs_diff } => {
+                    o.set("seed", *seed);
+                    o.set("max_abs_diff_bits", max_abs_diff.to_bits());
+                }
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    root.set("entries", Json::Arr(entries));
+    Json::Obj(root)
+}
+
+/// Parse a v1 document back into a [`VerifyMemo`].
+pub fn from_json(j: &Json) -> Result<VerifyMemo, MemoError> {
+    let bad = |m: &str| MemoError::Schema(m.to_string());
+    let fmt = j
+        .get("format")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("missing format"))?;
+    if fmt != "kernelblaster-memo-v1" {
+        return Err(bad(&format!("unknown format '{fmt}'")));
+    }
+    let mut memo = VerifyMemo::new();
+    for ej in j
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing entries"))?
+    {
+        let key = ej
+            .get("key")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("entry missing key"))?;
+        let kind = ej
+            .get("verdict")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("entry missing verdict"))?;
+        let verdict = match kind {
+            "pass" => MemoVerdict::Pass,
+            "compile_error" => MemoVerdict::CompileError(
+                ej.get("reason")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("compile_error missing reason"))?
+                    .to_string(),
+            ),
+            "soft_rejected" => MemoVerdict::SoftRejected(
+                ej.get("reason")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("soft_rejected missing reason"))?
+                    .to_string(),
+            ),
+            "wrong_numerics" => {
+                let seed = ej
+                    .get("seed")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad("wrong_numerics missing seed"))?
+                    as u64;
+                let bits = ej
+                    .get("max_abs_diff_bits")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad("wrong_numerics missing max_abs_diff_bits"))?
+                    as u32;
+                MemoVerdict::WrongNumerics {
+                    seed,
+                    max_abs_diff: f32::from_bits(bits),
+                }
+            }
+            other => return Err(bad(&format!("unknown verdict '{other}'"))),
+        };
+        memo.insert(key.to_string(), verdict);
+    }
+    Ok(memo)
+}
+
+/// Save atomically: write a `.tmp` sibling, then rename over the target
+/// (the same crash-safety discipline as `icrl::fleet::checkpoint_atomic`).
+pub fn save(memo: &VerifyMemo, path: &Path) -> Result<(), MemoError> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp_name = match path.file_name() {
+        Some(n) => {
+            let mut t = n.to_os_string();
+            t.push(".tmp");
+            t
+        }
+        None => return Err(MemoError::Schema(format!("bad memo path {}", path.display()))),
+    };
+    let tmp = path.with_file_name(tmp_name);
+    std::fs::write(&tmp, to_json(memo).to_string_pretty())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Strict load (tests and tooling; runs should use [`load_or_cold`]).
+pub fn load(path: &Path) -> Result<VerifyMemo, MemoError> {
+    let text = std::fs::read_to_string(path)?;
+    from_json(&Json::parse(&text)?)
+}
+
+/// Load a memo, degrading to a cold (empty) one when the file is missing
+/// or damaged: the memo is a cache, and a damaged cache must cost a
+/// re-verification, never a failed run. A notice goes to stderr for
+/// anything other than a cleanly missing file.
+pub fn load_or_cold(path: &Path) -> VerifyMemo {
+    match load(path) {
+        Ok(memo) => memo,
+        Err(MemoError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => VerifyMemo::new(),
+        Err(e) => {
+            eprintln!(
+                "verify-memo: ignoring unreadable {} ({e}); starting cold",
+                path.display()
+            );
+            VerifyMemo::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Suite;
+
+    fn sample_memo() -> VerifyMemo {
+        let mut m = VerifyMemo::new();
+        m.insert("00ff00ff00ff00ff".into(), MemoVerdict::Pass);
+        m.insert(
+            "0123456789abcdef".into(),
+            MemoVerdict::WrongNumerics {
+                seed: 0x5EED_0000,
+                max_abs_diff: 0.125,
+            },
+        );
+        m.insert(
+            "fedcba9876543210".into(),
+            MemoVerdict::CompileError("candidate failed: boom".into()),
+        );
+        m.insert(
+            "deadbeefdeadbeef".into(),
+            MemoVerdict::SoftRejected("kernel dispatches to an external vendor library".into()),
+        );
+        m
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Public FNV-1a 64 test vectors — pins the hash the keys use.
+        assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64("a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn roundtrip_is_identity_on_bytes() {
+        let m = sample_memo();
+        let first = to_json(&m).to_string_pretty();
+        let back = from_json(&Json::parse(&first).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(to_json(&back).to_string_pretty(), first);
+    }
+
+    #[test]
+    fn serialization_is_insert_order_independent() {
+        let m = sample_memo();
+        let mut reversed = VerifyMemo::new();
+        let pairs: Vec<_> = m.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        for (k, v) in pairs.into_iter().rev() {
+            reversed.insert(k, v);
+        }
+        assert_eq!(
+            to_json(&m).to_string_pretty(),
+            to_json(&reversed).to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn insert_is_insert_or_ignore() {
+        let mut m = VerifyMemo::new();
+        assert!(m.insert("aa".into(), MemoVerdict::Pass));
+        assert!(!m.insert("aa".into(), MemoVerdict::CompileError("later".into())));
+        assert_eq!(m.get("aa"), Some(&MemoVerdict::Pass));
+        let delta = MemoDelta {
+            added: vec![
+                ("aa".into(), MemoVerdict::SoftRejected("ignored".into())),
+                ("bb".into(), MemoVerdict::Pass),
+            ],
+        };
+        m.apply_delta(&delta);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get("aa"), Some(&MemoVerdict::Pass));
+        assert_eq!(m.get("bb"), Some(&MemoVerdict::Pass));
+    }
+
+    #[test]
+    fn candidate_key_is_stable_and_content_sensitive() {
+        let task = Suite::full().by_id("L1/01_matmul_square").unwrap().clone();
+        let cfg = HarnessConfig::default();
+        let cand = Candidate::naive(&task);
+        let k1 = candidate_key(&task.id, &cand, &cfg);
+        let k2 = candidate_key(&task.id, &cand, &cfg);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.len(), 16);
+        assert_eq!(
+            k1,
+            format!("{:016x}", fnv1a64(&canonical_string(&task.id, &cand, &cfg)))
+        );
+        // Any content change — schedule, config, task id — moves the key.
+        let mut tweaked = cand.clone();
+        tweaked.schedule.groups[0].opts.unroll = 4;
+        assert_ne!(candidate_key(&task.id, &tweaked, &cfg), k1);
+        let mut vcfg = cfg.clone();
+        vcfg.allow_vendor = true;
+        assert_ne!(candidate_key(&task.id, &cand, &vcfg), k1);
+        assert_ne!(candidate_key("L1/other", &cand, &cfg), k1);
+        // …but noise_sigma is profile-only and must NOT move the key.
+        let mut ncfg = cfg.clone();
+        ncfg.noise_sigma = 0.5;
+        assert_eq!(candidate_key(&task.id, &cand, &ncfg), k1);
+    }
+
+    #[test]
+    fn verdict_outcome_conversions() {
+        let rep_free = [
+            Outcome::CompileError("x".into()),
+            Outcome::WrongNumerics {
+                seed: 7,
+                max_abs_diff: 1.5,
+            },
+            Outcome::SoftVerifyRejected("y".into()),
+        ];
+        for o in &rep_free {
+            let v = MemoVerdict::of(o).unwrap();
+            let back = v.to_outcome().unwrap();
+            assert_eq!(back.feedback(), o.feedback());
+        }
+        assert_eq!(MemoVerdict::of(&Outcome::ScreenedOut("cost".into())), None);
+        assert_eq!(MemoVerdict::Pass.to_outcome(), None);
+    }
+
+    #[test]
+    fn file_roundtrip_and_cold_degradation() {
+        let dir = std::env::temp_dir().join("kb_memo_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memo.json");
+        let m = sample_memo();
+        save(&m, &path).unwrap();
+        // tmp sibling cleaned up by the rename.
+        assert!(!dir.join("memo.json.tmp").exists());
+        assert_eq!(load(&path).unwrap(), m);
+        assert_eq!(load_or_cold(&path), m);
+        // Missing file → cold, silently.
+        assert!(load_or_cold(&dir.join("absent.json")).is_empty());
+        // Corrupt file → cold with a notice, never an error.
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(load_or_cold(&path).is_empty());
+        // Wrong format → schema error on strict load, cold on soft load.
+        std::fs::write(&path, r#"{"format":"other","entries":[]}"#).unwrap();
+        assert!(matches!(load(&path), Err(MemoError::Schema(_))));
+        assert!(load_or_cold(&path).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        for doc in [
+            r#"{"entries":[]}"#,
+            r#"{"format":"kernelblaster-memo-v1"}"#,
+            r#"{"format":"kernelblaster-memo-v1","entries":[{"verdict":"pass"}]}"#,
+            r#"{"format":"kernelblaster-memo-v1","entries":[{"key":"aa"}]}"#,
+            r#"{"format":"kernelblaster-memo-v1","entries":[{"key":"aa","verdict":"maybe"}]}"#,
+            r#"{"format":"kernelblaster-memo-v1","entries":[{"key":"aa","verdict":"wrong_numerics"}]}"#,
+            r#"{"format":"kernelblaster-memo-v1","entries":[{"key":"aa","verdict":"compile_error"}]}"#,
+        ] {
+            assert!(from_json(&Json::parse(doc).unwrap()).is_err(), "{doc}");
+        }
+    }
+}

@@ -37,8 +37,21 @@
 //! [`crate::kir::render`] output, and passing candidates get their
 //! [`crate::gpu`] profile — the reward signal the KB ([`crate::kb`])
 //! integrates.
+//!
+//! # Tiered verification (§staged)
+//!
+//! The [`staged`] submodule wraps this pipeline in a screen → probe →
+//! full-oracle cascade with a persistent cross-run verdict memo
+//! ([`memo`]), spending the expensive stages only on candidates the
+//! cheap tiers cannot reject. The full oracle here remains the only
+//! committing gate; staging is opt-in (`verify.staged`) and off by
+//! default, in which case this module's behavior is bit-identical to
+//! the pre-staging crate.
 
 #![deny(missing_docs)]
+
+pub mod memo;
+pub mod staged;
 
 use crate::gpu::{profiler, GpuArch, NcuReport};
 use crate::kir::{interp, render, OpKind};
@@ -163,6 +176,11 @@ pub enum Outcome {
     },
     /// Soft verifier rejected the kernel (reward-hacking guard).
     SoftVerifyRejected(String),
+    /// Tier-0 static screen rejected the candidate before any execution
+    /// (staged pipeline only, [`staged`]): the cost model estimates it
+    /// clearly dominated by the current best. Carries the cost-model
+    /// feedback string so the textgrad loop still learns from it.
+    ScreenedOut(String),
     /// All checks passed; the profile is attached.
     Ok(NcuReport),
 }
@@ -181,6 +199,7 @@ impl Outcome {
                 format!("numeric verification failed (seed {seed}): max|Δ|={max_abs_diff:.3e}")
             }
             Outcome::SoftVerifyRejected(r) => format!("soft-verify rejected: {r}"),
+            Outcome::ScreenedOut(r) => format!("static screen rejected: {r}"),
             Outcome::Ok(rep) => format!(
                 "ok: {} kernels, {:.0} cycles",
                 rep.kernels.len(),
@@ -201,6 +220,25 @@ fn verify_numerics(
     cache: Option<&VerifyCache>,
     cand_ctx: &mut interp::ExecContext,
 ) -> Option<Outcome> {
+    verify_numerics_range(task, cand, cfg, cache, cand_ctx, 0, cfg.verify_seeds).0
+}
+
+/// Stage-2 verification over the seed-index range `[from, to)` — the
+/// building block the staged pipeline ([`staged`]) splits the oracle
+/// with (probe seeds first, the remainder at tier 2). Also returns how
+/// many seed checks actually ran (the staged op counter). Checking
+/// `[0, p)` then `[p, n)` is exactly equivalent to checking `[0, n)`:
+/// seeds are independent and the loop fails on the first mismatch in
+/// index order either way.
+pub(crate) fn verify_numerics_range(
+    task: &Task,
+    cand: &Candidate,
+    cfg: &HarnessConfig,
+    cache: Option<&VerifyCache>,
+    cand_ctx: &mut interp::ExecContext,
+    from: usize,
+    to: usize,
+) -> (Option<Outcome>, usize) {
     let rtol = if cand.has_reduced_precision() {
         cfg.rtol_reduced
     } else {
@@ -208,8 +246,10 @@ fn verify_numerics(
     };
     // Reference context only materializes on cache misses.
     let mut ref_ctx: Option<interp::ExecContext> = None;
-    for i in 0..cfg.verify_seeds {
+    let mut executed = 0usize;
+    for i in from..to {
         let seed = verify_seed(i);
+        executed += 1;
         let bad = match cache.and_then(|c| c.get(&task.id, i)) {
             Some(entry) => check_one_seed(
                 cand,
@@ -226,17 +266,20 @@ fn verify_numerics(
                 let reference = match rctx.execute_owned(&task.small, &inputs) {
                     Ok(r) => r,
                     Err(e) => {
-                        return Some(Outcome::CompileError(format!("reference failed: {e}")))
+                        return (
+                            Some(Outcome::CompileError(format!("reference failed: {e}"))),
+                            executed,
+                        )
                     }
                 };
                 check_one_seed(cand, rtol, cfg.atol, seed, &inputs, &reference, cand_ctx)
             }
         };
         if bad.is_some() {
-            return bad;
+            return (bad, executed);
         }
     }
-    None
+    (None, executed)
 }
 
 /// Execute the candidate on one seed's inputs and compare to the

@@ -1,0 +1,576 @@
+//! Tiered candidate verification: screen → probe → full oracle.
+//!
+//! The four-stage harness ([`super::run_cached_in`]) charges every
+//! lowered candidate the full bill — all verification seeds plus the
+//! soft-verify scan — even when a static cost model could discard it
+//! instantly or a prior run already verified the identical program. This
+//! module stages that spend (the profile-guided economy of paper
+//! §4.3–§4.4, and the hardware-feedback triage CudaForge argues for):
+//!
+//! - **Tier 0 — static screen.** A deterministic roofline estimate
+//!   ([`crate::gpu::estimate_schedule`], built on `kir::cost`) rejects
+//!   candidates whose estimated time is clearly dominated by the current
+//!   best (`screen_margin`× worse). Rejections return
+//!   [`Outcome::ScreenedOut`] with a cost-model feedback string, so the
+//!   textgrad loop still learns from them. No candidate execution at all.
+//! - **Tier 1 — low-fidelity probe.** Numeric verification on
+//!   `probe_seeds` seeds (default 1) instead of all `verify_seeds`,
+//!   reusing [`super::VerifyCache`] fixtures — wrong numerics fail fast.
+//! - **Tier 2 — the unchanged full oracle.** The remaining seeds, the
+//!   soft-verify reward-hacking guards, and the profile. Because seeds
+//!   are checked independently and in the same order, probe + remainder
+//!   is *exactly* the full multi-seed oracle, split: no candidate can
+//!   pass staged verification that the unstaged harness would reject,
+//!   and vice versa.
+//!
+//! **The full oracle is the only committing gate.** [`Outcome::Ok`] is
+//! produced by tier 2 alone (or by re-profiling a memo-verified pass);
+//! tiers 0–1 can only reject. The driver commits to the KB and picks
+//! step winners exclusively from `Ok` outcomes, so every committed
+//! candidate passed all seeds + soft verify — bitwise the same guards as
+//! the unstaged path.
+//!
+//! The cross-run memo ([`super::memo`]) short-circuits the whole
+//! pipeline on repeat encounters: a recorded failure replays verbatim
+//! (zero executions), a recorded pass skips straight to re-profiling
+//! (profiles stay fresh; verdicts don't age).
+//!
+//! With `staged: false` (the default) the driver never calls into this
+//! module — behavior is bit-identical to the pre-staging crate, asserted
+//! by `tests/staged.rs`.
+
+use super::memo::{self, MemoVerdict, VerifyMemo};
+use super::{soft_verify, verify_numerics_range, HarnessConfig, Outcome, VerifyCache};
+use crate::gpu::{profiler, GpuArch};
+use crate::kir::interp;
+use crate::opts::Candidate;
+use crate::tasks::Task;
+use crate::util::rng::Rng;
+
+/// Staged-verification configuration — the `verify` config section and
+/// the `--staged` family of CLI flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyConfig {
+    /// Master switch. Off (the default) bypasses this module entirely:
+    /// the driver runs the classic four-stage harness, bit-identical to
+    /// the pre-staging crate.
+    pub staged: bool,
+    /// Tier 0: static cost-model screen (only consulted when `staged`).
+    pub screen: bool,
+    /// Tier 1: low-fidelity numeric probe (only consulted when `staged`).
+    pub probe: bool,
+    /// Tier-0 dominance margin: reject when the estimate exceeds
+    /// `margin ×` the current best's time. ≥ 1.0 (1.0 = aggressive,
+    /// anything estimated slower than best is screened).
+    pub screen_margin: f64,
+    /// Tier-1 seed count (clamped to `verify_seeds`; ≥ 1).
+    pub probe_seeds: usize,
+    /// Path of the persistent cross-run memo; `None` keeps the memo
+    /// in-memory for the run (fleet batches still share it across tasks).
+    pub memo_path: Option<String>,
+}
+
+impl Default for VerifyConfig {
+    fn default() -> Self {
+        Self {
+            staged: false,
+            screen: true,
+            probe: true,
+            screen_margin: 1.5,
+            probe_seeds: 1,
+            memo_path: None,
+        }
+    }
+}
+
+impl VerifyConfig {
+    /// Knob sanity: a finite margin ≥ 1 and at least one probe seed.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.screen_margin.is_finite() || self.screen_margin < 1.0 {
+            return Err(format!(
+                "verify.screen_margin must be finite and >= 1, got {}",
+                self.screen_margin
+            ));
+        }
+        if self.probe_seeds == 0 {
+            return Err("verify.probe_seeds must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Per-tier activity counters. Deliberately kept *outside* `TaskRun` so
+/// result records stay comparable across staged and unstaged runs; the
+/// driver aggregates these alongside the run and `experiment verify`
+/// reports them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Candidates rejected by the tier-0 static screen.
+    pub screen_rejected: usize,
+    /// Candidates rejected by the tier-1 probe.
+    pub probe_rejected: usize,
+    /// Memo hits (pass or fail) that skipped tiers 0–1.
+    pub memo_hits: usize,
+    /// Candidates that entered the full tier-2 oracle.
+    pub full_verifications: usize,
+    /// Candidate-seed executions performed — the verification-op count
+    /// the benchmark reports (the container has no wall-clock worth
+    /// trusting; op counts are exact and deterministic).
+    pub seeds_executed: usize,
+}
+
+impl TierStats {
+    /// Accumulate another stats block into this one.
+    pub fn add(&mut self, other: &TierStats) {
+        self.screen_rejected += other.screen_rejected;
+        self.probe_rejected += other.probe_rejected;
+        self.memo_hits += other.memo_hits;
+        self.full_verifications += other.full_verifications;
+        self.seeds_executed += other.seeds_executed;
+    }
+}
+
+/// One staged-verification request. Bundles the borrow-heavy inputs so
+/// the entry point stays a readable three-argument call.
+pub struct StagedRequest<'a> {
+    /// The task the candidate was derived from.
+    pub task: &'a Task,
+    /// The candidate under verification.
+    pub cand: &'a Candidate,
+    /// Profiling architecture.
+    pub arch: &'a GpuArch,
+    /// Harness tolerances and seed count.
+    pub cfg: &'a HarnessConfig,
+    /// Staging knobs.
+    pub verify: &'a VerifyConfig,
+    /// The current best wall time (seconds) the tier-0 screen compares
+    /// against — the frontier node's profiled time in the driver. Pass
+    /// `f64::INFINITY` to disable dominance screening for this call.
+    pub best_time_s: f64,
+    /// Reference-fixture cache (shared, lock-free reads).
+    pub cache: Option<&'a VerifyCache>,
+    /// Verdict memo snapshot; `None` disables memoization.
+    pub memo: Option<&'a VerifyMemo>,
+}
+
+/// The result of a staged run: the outcome, the verdict to merge into
+/// the working memo (if this evaluation produced a new memoizable one),
+/// and what each tier did.
+pub struct StagedOutcome {
+    /// The harness outcome (same meaning as the unstaged pipeline, plus
+    /// [`Outcome::ScreenedOut`] for tier-0 rejections).
+    pub outcome: Outcome,
+    /// `Some((key, verdict))` when this evaluation produced a verdict
+    /// the memo did not already hold. The driver merges these in pick
+    /// order, keeping parallel and sequential exploration identical.
+    pub memo_record: Option<(String, MemoVerdict)>,
+    /// Tier activity of this single evaluation.
+    pub stats: TierStats,
+}
+
+impl StagedOutcome {
+    fn plain(outcome: Outcome, stats: TierStats) -> Self {
+        Self {
+            outcome,
+            memo_record: None,
+            stats,
+        }
+    }
+
+    fn recorded(outcome: Outcome, key: Option<String>, stats: TierStats) -> Self {
+        let memo_record = key.and_then(|k| MemoVerdict::of(&outcome).map(|v| (k, v)));
+        Self {
+            outcome,
+            memo_record,
+            stats,
+        }
+    }
+}
+
+/// Run the staged pipeline for one candidate. RNG discipline matches
+/// [`super::run_cached_in`] exactly: verification consumes zero draws,
+/// only the profile draws — so a memo-verified pass re-profiles on the
+/// identical stream a cold pass would have used, and staged-off /
+/// staged-on runs stay comparable draw-for-draw on passing candidates.
+pub fn run_staged_in(
+    req: &StagedRequest<'_>,
+    ctx: &mut interp::ExecContext,
+    rng: &mut Rng,
+) -> StagedOutcome {
+    let mut stats = TierStats::default();
+    let cfg = req.cfg;
+
+    // Cross-run memo: a repeat encounter skips every tier.
+    let pending_key = match req.memo {
+        Some(m) => {
+            let key = memo::candidate_key(&req.task.id, req.cand, cfg);
+            if let Some(verdict) = m.get(&key) {
+                stats.memo_hits += 1;
+                return match verdict.to_outcome() {
+                    // Recorded failure replays verbatim, zero executions.
+                    Some(fail) => StagedOutcome::plain(fail, stats),
+                    // Recorded pass: skip re-verification, NOT
+                    // re-profiling — profiles are measurements.
+                    None => {
+                        let rep = profiler::profile(
+                            req.arch,
+                            &req.cand.full,
+                            &req.cand.schedule,
+                            cfg.noise_sigma,
+                            rng,
+                        );
+                        StagedOutcome::plain(Outcome::Ok(rep), stats)
+                    }
+                };
+            }
+            Some(key)
+        }
+        None => None,
+    };
+
+    // Stage 1 (all tiers): structural compile check.
+    if let Err(e) = req.cand.validate() {
+        return StagedOutcome::recorded(Outcome::CompileError(e), pending_key, stats);
+    }
+
+    // Tier 0: static dominance screen. Never memoized — the verdict
+    // depends on the run's current best, which is not part of the key.
+    if req.verify.screen {
+        let est = crate::gpu::estimate_schedule(req.arch, &req.cand.full, &req.cand.schedule);
+        let cutoff = req.best_time_s * req.verify.screen_margin;
+        if req.best_time_s.is_finite() && est.total_time_s > cutoff {
+            stats.screen_rejected += 1;
+            let reason = format!(
+                "cost model estimates {:.3e}s vs current best {:.3e}s \
+                 (>{:.2}x margin); dominated before execution",
+                est.total_time_s, req.best_time_s, req.verify.screen_margin
+            );
+            return StagedOutcome::plain(Outcome::ScreenedOut(reason), stats);
+        }
+    }
+
+    // Tier 1: low-fidelity probe on the first `probe_seeds` seeds.
+    let probe_n = if req.verify.probe {
+        req.verify.probe_seeds.min(cfg.verify_seeds)
+    } else {
+        0
+    };
+    if probe_n > 0 {
+        let (bad, executed) =
+            verify_numerics_range(req.task, req.cand, cfg, req.cache, ctx, 0, probe_n);
+        stats.seeds_executed += executed;
+        if let Some(fail) = bad {
+            stats.probe_rejected += 1;
+            return StagedOutcome::recorded(fail, pending_key, stats);
+        }
+    }
+
+    // Tier 2: the full oracle — remaining seeds, soft verify, profile.
+    // Seeds [0, probe_n) were already checked by the probe with the very
+    // comparisons the full loop would run, so probe + remainder is the
+    // complete multi-seed oracle.
+    stats.full_verifications += 1;
+    let (bad, executed) = verify_numerics_range(
+        req.task,
+        req.cand,
+        cfg,
+        req.cache,
+        ctx,
+        probe_n,
+        cfg.verify_seeds,
+    );
+    stats.seeds_executed += executed;
+    if let Some(fail) = bad {
+        return StagedOutcome::recorded(fail, pending_key, stats);
+    }
+    if let Err(reason) = soft_verify(req.task, req.cand, cfg) {
+        return StagedOutcome::recorded(
+            Outcome::SoftVerifyRejected(reason),
+            pending_key,
+            stats,
+        );
+    }
+    let rep = profiler::profile(
+        req.arch,
+        &req.cand.full,
+        &req.cand.schedule,
+        cfg.noise_sigma,
+        rng,
+    );
+    StagedOutcome::recorded(Outcome::Ok(rep), pending_key, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::OpKind;
+    use crate::tasks::Suite;
+
+    fn setup(id: &str) -> (Task, Candidate, GpuArch, HarnessConfig) {
+        let task = Suite::full().by_id(id).unwrap().clone();
+        let cand = Candidate::naive(&task);
+        (
+            task,
+            cand,
+            GpuArch::h100(),
+            HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn full_staging() -> VerifyConfig {
+        VerifyConfig {
+            staged: true,
+            ..Default::default()
+        }
+    }
+
+    fn request<'a>(
+        task: &'a Task,
+        cand: &'a Candidate,
+        arch: &'a GpuArch,
+        cfg: &'a HarnessConfig,
+        verify: &'a VerifyConfig,
+        memo: Option<&'a VerifyMemo>,
+    ) -> StagedRequest<'a> {
+        StagedRequest {
+            task,
+            cand,
+            arch,
+            cfg,
+            verify,
+            best_time_s: f64::INFINITY,
+            cache: None,
+            memo,
+        }
+    }
+
+    #[test]
+    fn config_defaults_are_off_and_valid() {
+        let v = VerifyConfig::default();
+        assert!(!v.staged);
+        assert!(v.screen && v.probe);
+        assert!(v.validate().is_ok());
+        for bad in [
+            VerifyConfig {
+                screen_margin: 0.9,
+                ..Default::default()
+            },
+            VerifyConfig {
+                screen_margin: f64::NAN,
+                ..Default::default()
+            },
+            VerifyConfig {
+                screen_margin: f64::INFINITY,
+                ..Default::default()
+            },
+            VerifyConfig {
+                probe_seeds: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn staged_pass_matches_unstaged_bit_for_bit() {
+        // Probe + remainder must be the same oracle and the same RNG
+        // consumption as the classic pipeline.
+        let (task, cand, arch, cfg) = setup("L2/01_gemm_bias_relu");
+        let vcfg = full_staging();
+        let mut ctx = interp::ExecContext::new();
+        let mut rng_a = Rng::new(3);
+        let a = super::super::run_cached_in(&task, &cand, &arch, &cfg, None, &mut ctx, &mut rng_a);
+        let mut rng_b = Rng::new(3);
+        let b = run_staged_in(
+            &request(&task, &cand, &arch, &cfg, &vcfg, None),
+            &mut ctx,
+            &mut rng_b,
+        );
+        match (a, b.outcome) {
+            (Outcome::Ok(ra), Outcome::Ok(rb)) => {
+                assert_eq!(ra.total_cycles, rb.total_cycles);
+                assert_eq!(ra.kernels.len(), rb.kernels.len());
+            }
+            (x, y) => panic!("diverged: {} vs {}", x.feedback(), y.feedback()),
+        }
+        assert_eq!(rng_a, rng_b, "staged must consume the same draws");
+        assert_eq!(b.stats.full_verifications, 1);
+        assert_eq!(b.stats.seeds_executed, cfg.verify_seeds);
+        assert_eq!(b.stats.screen_rejected + b.stats.probe_rejected, 0);
+    }
+
+    #[test]
+    fn screen_rejects_dominated_candidates_with_cost_feedback() {
+        let (task, cand, arch, cfg) = setup("L1/01_matmul_square");
+        let vcfg = VerifyConfig {
+            screen_margin: 1.0,
+            ..full_staging()
+        };
+        let est = crate::gpu::estimate_schedule(&arch, &cand.full, &cand.schedule);
+        let mut req = request(&task, &cand, &arch, &cfg, &vcfg, None);
+        // Best is 10× faster than the estimate → dominated.
+        req.best_time_s = est.total_time_s / 10.0;
+        let mut ctx = interp::ExecContext::new();
+        let out = run_staged_in(&req, &mut ctx, &mut Rng::new(1));
+        match &out.outcome {
+            Outcome::ScreenedOut(reason) => {
+                assert!(reason.contains("cost model"), "{reason}");
+                assert!(out.outcome.feedback().contains("screen"), "feedback must name the tier");
+            }
+            other => panic!("expected screen-out, got {}", other.feedback()),
+        }
+        assert_eq!(out.stats.screen_rejected, 1);
+        assert_eq!(out.stats.seeds_executed, 0, "no execution on screen-out");
+        assert!(out.memo_record.is_none(), "screen verdicts are run-local");
+        // An infinite best disables the screen.
+        req.best_time_s = f64::INFINITY;
+        let out2 = run_staged_in(&req, &mut ctx, &mut Rng::new(1));
+        assert!(out2.outcome.is_ok(), "{}", out2.outcome.feedback());
+    }
+
+    #[test]
+    fn probe_fails_fast_on_wrong_numerics() {
+        let (task, mut cand, arch, cfg) = setup("L1/15_relu");
+        cand.small.nodes[0].kind = OpKind::Scale { c: 0.0 };
+        cand.full.nodes[0].kind = OpKind::Scale { c: 0.0 };
+        let vcfg = full_staging();
+        let mut ctx = interp::ExecContext::new();
+        let out = run_staged_in(
+            &request(&task, &cand, &arch, &cfg, &vcfg, None),
+            &mut ctx,
+            &mut Rng::new(5),
+        );
+        assert!(matches!(out.outcome, Outcome::WrongNumerics { .. }));
+        assert_eq!(out.stats.probe_rejected, 1);
+        assert_eq!(out.stats.seeds_executed, 1, "one probe seed, not all {}", cfg.verify_seeds);
+        assert_eq!(out.stats.full_verifications, 0);
+    }
+
+    #[test]
+    fn reward_hacking_guards_hold_under_full_staging() {
+        // Vendor dispatch and stubbed work must still be rejected by the
+        // tier-2 soft verifier — staging never bypasses the guards.
+        let (task, cand, arch, cfg) = setup("L1/01_matmul_square");
+        let vendor = crate::opts::apply::apply(
+            crate::opts::Technique::VendorLibraryDispatch,
+            &cand,
+            0,
+        )
+        .unwrap();
+        let vcfg = full_staging();
+        let mut ctx = interp::ExecContext::new();
+        let out = run_staged_in(
+            &request(&task, &vendor, &arch, &cfg, &vcfg, None),
+            &mut ctx,
+            &mut Rng::new(2),
+        );
+        assert!(matches!(out.outcome, Outcome::SoftVerifyRejected(_)));
+        // …and the deterministic rejection is memoizable.
+        let memo = VerifyMemo::new();
+        let out2 = run_staged_in(
+            &request(&task, &vendor, &arch, &cfg, &vcfg, Some(&memo)),
+            &mut ctx,
+            &mut Rng::new(2),
+        );
+        let (_, verdict) = out2.memo_record.expect("soft rejection must be recorded");
+        assert!(matches!(verdict, MemoVerdict::SoftRejected(_)));
+    }
+
+    #[test]
+    fn memo_hits_replay_failures_and_reprofile_passes() {
+        let (task, cand, arch, cfg) = setup("L2/09_mlp_block");
+        let vcfg = full_staging();
+        let mut ctx = interp::ExecContext::new();
+        // Cold run records a pass.
+        let cold_memo = VerifyMemo::new();
+        let cold = run_staged_in(
+            &request(&task, &cand, &arch, &cfg, &vcfg, Some(&cold_memo)),
+            &mut ctx,
+            &mut Rng::new(9),
+        );
+        let (key, verdict) = cold.memo_record.expect("cold pass must be recorded");
+        assert_eq!(verdict, MemoVerdict::Pass);
+        assert_eq!(cold.stats.memo_hits, 0);
+        // Warm run: same RNG stream → identical profile, zero seeds run.
+        let mut warm_memo = VerifyMemo::new();
+        warm_memo.insert(key, verdict);
+        let warm = run_staged_in(
+            &request(&task, &cand, &arch, &cfg, &vcfg, Some(&warm_memo)),
+            &mut ctx,
+            &mut Rng::new(9),
+        );
+        assert_eq!(warm.stats.memo_hits, 1);
+        assert_eq!(warm.stats.seeds_executed, 0);
+        assert!(warm.memo_record.is_none(), "hits record nothing new");
+        match (&cold.outcome, &warm.outcome) {
+            (Outcome::Ok(a), Outcome::Ok(b)) => assert_eq!(a.total_cycles, b.total_cycles),
+            (x, y) => panic!("diverged: {} vs {}", x.feedback(), y.feedback()),
+        }
+        // Failure verdicts replay verbatim.
+        let mut fail_memo = VerifyMemo::new();
+        let fail_key = memo::candidate_key(&task.id, &cand, &cfg);
+        fail_memo.insert(
+            fail_key,
+            MemoVerdict::WrongNumerics {
+                seed: 0x5EED_0000,
+                max_abs_diff: 0.5,
+            },
+        );
+        let replay = run_staged_in(
+            &request(&task, &cand, &arch, &cfg, &vcfg, Some(&fail_memo)),
+            &mut ctx,
+            &mut Rng::new(9),
+        );
+        assert!(matches!(replay.outcome, Outcome::WrongNumerics { .. }));
+        assert_eq!(replay.stats.memo_hits, 1);
+        assert_eq!(replay.stats.seeds_executed, 0);
+    }
+
+    #[test]
+    fn probe_disabled_still_runs_the_full_oracle() {
+        let (task, mut cand, arch, cfg) = setup("L1/15_relu");
+        cand.small.nodes[0].kind = OpKind::Scale { c: 0.0 };
+        cand.full.nodes[0].kind = OpKind::Scale { c: 0.0 };
+        let vcfg = VerifyConfig {
+            probe: false,
+            screen: false,
+            ..full_staging()
+        };
+        let mut ctx = interp::ExecContext::new();
+        let out = run_staged_in(
+            &request(&task, &cand, &arch, &cfg, &vcfg, None),
+            &mut ctx,
+            &mut Rng::new(4),
+        );
+        assert!(matches!(out.outcome, Outcome::WrongNumerics { .. }));
+        assert_eq!(out.stats.probe_rejected, 0);
+        assert_eq!(out.stats.full_verifications, 1);
+    }
+
+    #[test]
+    fn tier_stats_accumulate() {
+        let mut a = TierStats {
+            screen_rejected: 1,
+            probe_rejected: 2,
+            memo_hits: 3,
+            full_verifications: 4,
+            seeds_executed: 5,
+        };
+        let b = a;
+        a.add(&b);
+        assert_eq!(
+            a,
+            TierStats {
+                screen_rejected: 2,
+                probe_rejected: 4,
+                memo_hits: 6,
+                full_verifications: 8,
+                seeds_executed: 10,
+            }
+        );
+    }
+}

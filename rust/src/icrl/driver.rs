@@ -53,6 +53,8 @@ use crate::agents::lowering;
 use crate::agents::textgrad::{self, Sample};
 use crate::agents::{state_extractor, AgentConfig, TokenMeter};
 use crate::gpu::{Bottleneck, GpuArch, NcuReport};
+use crate::harness::memo::{MemoDelta, MemoVerdict, VerifyMemo};
+use crate::harness::staged::{self, StagedRequest, TierStats, VerifyConfig};
 use crate::harness::{self, HarnessConfig, Outcome, VerifyCache};
 use crate::kb::lifecycle::{self, KbDelta, TransferPolicy};
 use crate::kb::{KnowledgeBase, StateSig, WorkloadClass};
@@ -100,6 +102,11 @@ pub struct IcrlConfig {
     pub policy: PolicyConfig,
     /// Base RNG seed (combined with the per-task run seed).
     pub seed: u64,
+    /// Tiered-verification staging ([`crate::harness::staged`]). Off by
+    /// default: the classic four-stage harness runs for every candidate,
+    /// bit-identical to the pre-staging driver (asserted by
+    /// `tests/staged.rs`).
+    pub verify: VerifyConfig,
 }
 
 impl Default for IcrlConfig {
@@ -115,6 +122,7 @@ impl Default for IcrlConfig {
             parallel_explore: true,
             policy: PolicyConfig::default(),
             seed: 42,
+            verify: VerifyConfig::default(),
         }
     }
 }
@@ -184,12 +192,16 @@ fn cycles_only_sig(graph: &crate::kir::KernelGraph) -> StateSig {
 
 /// One pick's fixed evaluation context, decided at selection time:
 /// the technique, the KB expectation recorded into the replay buffer,
-/// and the fusion group the lowering targets.
+/// the fusion group the lowering targets, and the frontier node's
+/// profiled time (the tier-0 screen's dominance reference).
 #[derive(Clone, Copy)]
 struct PickPlan {
     tech: Technique,
     expected: f64,
     group: usize,
+    /// The frontier node's `report.total_time_s` — what the staged
+    /// pipeline's static screen compares candidate estimates against.
+    node_time: f64,
 }
 
 /// One pick's evaluation result, produced by [`evaluate_pick`] on either
@@ -203,6 +215,29 @@ struct PickEval {
     outcome: Option<(Candidate, Outcome)>,
     retries: usize,
     meter: TokenMeter,
+    /// New memo verdicts this pick produced (staged mode only), in
+    /// attempt order; the step loop merges them in pick order so the
+    /// parallel and sequential paths stay bit-identical.
+    memo_records: Vec<(String, MemoVerdict)>,
+    /// Tier activity of this pick (all-zero when staging is off).
+    tiers: TierStats,
+}
+
+/// Read-only inputs shared by every pick evaluation of a step: the task,
+/// the architecture, the config, the warmed reference cache, and (staged
+/// mode) the working-memo snapshot. Bundled so [`evaluate_pick`] stays
+/// under a sane argument count while remaining a plain `Copy` capture
+/// for the scoped-thread closures.
+#[derive(Clone, Copy)]
+struct EvalCtx<'a> {
+    task: &'a Task,
+    arch: &'a GpuArch,
+    cfg: &'a IcrlConfig,
+    cache: &'a VerifyCache,
+    /// Verify-memo snapshot at node-evaluation start; `None` when
+    /// staging is off. Reads only — new verdicts travel back through
+    /// [`PickEval::memo_records`] and are merged after the evaluations.
+    memo: Option<&'a VerifyMemo>,
 }
 
 /// One frontier element the step loop carries across steps: a candidate
@@ -231,21 +266,18 @@ struct StepOutcome {
 }
 
 /// Lower the planned technique onto `cand` (with retries on failure
-/// feedback) and run the harness. Self-contained: owns its RNG stream
+/// feedback) and run the harness — staged
+/// ([`staged::run_staged_in`]) when `cfg.verify.staged`, the classic
+/// four-stage pipeline otherwise. Self-contained: owns its RNG stream
 /// and token meter so picks can run concurrently yet merge
 /// deterministically.
-fn evaluate_pick(
-    task: &Task,
-    arch: &GpuArch,
-    cfg: &IcrlConfig,
-    cache: &VerifyCache,
-    cand: &Candidate,
-    plan: &PickPlan,
-    mut rng: Rng,
-) -> PickEval {
+fn evaluate_pick(ctx: &EvalCtx<'_>, cand: &Candidate, plan: &PickPlan, mut rng: Rng) -> PickEval {
+    let cfg = ctx.cfg;
     let mut meter = TokenMeter::new();
     let mut outcome: Option<(Candidate, Outcome)> = None;
     let mut retries = 0;
+    let mut memo_records: Vec<(String, MemoVerdict)> = Vec::new();
+    let mut tiers = TierStats::default();
     // One interpreter arena for the whole pick: buffer pools and the
     // per-graph plan amortize across lowering retries × verify seeds.
     let mut interp_ctx = interp::ExecContext::new();
@@ -257,15 +289,37 @@ fn evaluate_pick(
         match lowered.into_candidate() {
             None => continue, // compile fail → retry
             Some(c) => {
-                let res = harness::run_cached_in(
-                    task,
-                    &c,
-                    arch,
-                    &cfg.harness,
-                    Some(cache),
-                    &mut interp_ctx,
-                    &mut rng,
-                );
+                let res = if cfg.verify.staged {
+                    let staged_out = staged::run_staged_in(
+                        &StagedRequest {
+                            task: ctx.task,
+                            cand: &c,
+                            arch: ctx.arch,
+                            cfg: &cfg.harness,
+                            verify: &cfg.verify,
+                            best_time_s: plan.node_time,
+                            cache: Some(ctx.cache),
+                            memo: ctx.memo,
+                        },
+                        &mut interp_ctx,
+                        &mut rng,
+                    );
+                    tiers.add(&staged_out.stats);
+                    if let Some(rec) = staged_out.memo_record {
+                        memo_records.push(rec);
+                    }
+                    staged_out.outcome
+                } else {
+                    harness::run_cached_in(
+                        ctx.task,
+                        &c,
+                        ctx.arch,
+                        &cfg.harness,
+                        Some(ctx.cache),
+                        &mut interp_ctx,
+                        &mut rng,
+                    )
+                };
                 let ok = res.is_ok();
                 outcome = Some((c, res));
                 if ok {
@@ -280,6 +334,8 @@ fn evaluate_pick(
         outcome,
         retries,
         meter,
+        memo_records,
+        tiers,
     }
 }
 
@@ -330,6 +386,44 @@ pub fn optimize_task_in(
     run_seed: u64,
     cache: &mut VerifyCache,
 ) -> TaskRun {
+    optimize_task_core(task, arch, kb, cfg, run_seed, cache, None).0
+}
+
+/// [`optimize_task_in`] plus the staged-verification outputs: the
+/// [`MemoDelta`] of verdicts this run added over the caller's memo
+/// snapshot (empty when `cfg.verify.staged` is off) and the run's
+/// [`TierStats`] (all-zero likewise). `memo` is the snapshot-in side of
+/// the fleet's snapshot-in/delta-out memo contract; `None` starts the
+/// run's working memo cold. Memo contents never change a `TaskRun` when
+/// the tier-0 screen is off — verification consumes no RNG, so a
+/// memo-verified pass re-profiles on the identical stream (asserted by
+/// `tests/staged.rs`).
+pub fn optimize_task_verified(
+    task: &Task,
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    run_seed: u64,
+    cache: &mut VerifyCache,
+    memo: Option<&VerifyMemo>,
+) -> (TaskRun, MemoDelta, TierStats) {
+    optimize_task_core(task, arch, kb, cfg, run_seed, cache, memo)
+}
+
+/// The driver core behind every entry point. Maintains a working verify
+/// memo when staging is on (seeded from `memo_snapshot`, grown in pick
+/// order) and reports the delta relative to the snapshot; with staging
+/// off the memo machinery is inert and the body is the pre-staging
+/// driver, byte for byte.
+fn optimize_task_core(
+    task: &Task,
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    run_seed: u64,
+    cache: &mut VerifyCache,
+    memo_snapshot: Option<&VerifyMemo>,
+) -> (TaskRun, MemoDelta, TierStats) {
     if let Some(prev) = &kb.arch {
         if prev != arch.name {
             kb.lineage.push(format!(
@@ -357,6 +451,17 @@ pub fn optimize_task_in(
     let mut best = naive.clone();
     let mut best_time = naive_time;
     let mut any_valid = false;
+
+    // Staged verification: the run's working memo (snapshot + everything
+    // learned so far this run) and the delta going back to the caller.
+    // `None` when staging is off — zero additional work on that path.
+    let mut working_memo: Option<VerifyMemo> = if cfg.verify.staged {
+        Some(memo_snapshot.cloned().unwrap_or_default())
+    } else {
+        None
+    };
+    let mut memo_delta = MemoDelta::empty();
+    let mut tier_stats = TierStats::default();
 
     // The search policy (§policy in the module docs). Built once per
     // task; the frontier width is its declared transition rule.
@@ -450,6 +555,7 @@ pub fn optimize_task_in(
                             tech,
                             expected,
                             group,
+                            node_time: node.time,
                         }
                     })
                     .collect();
@@ -471,10 +577,16 @@ pub fn optimize_task_in(
                 let pick_rngs: Vec<Rng> = (0..pick_info.len())
                     .map(|i| step_rng.derive(&format!("pick-{i}")))
                     .collect();
-                let cache_ref: &VerifyCache = &*cache;
+                let ectx = EvalCtx {
+                    task,
+                    arch,
+                    cfg,
+                    cache: &*cache,
+                    memo: working_memo.as_ref(),
+                };
                 let cand_ref = &node.cand;
                 let eval_one = move |plan: &PickPlan, pick_rng: Rng| {
-                    evaluate_pick(task, arch, cfg, cache_ref, cand_ref, plan, pick_rng)
+                    evaluate_pick(&ectx, cand_ref, plan, pick_rng)
                 };
                 let evals: Vec<PickEval> = if cfg.parallel_explore && pick_info.len() > 1 {
                     std::thread::scope(|scope| {
@@ -504,8 +616,22 @@ pub fn optimize_task_in(
                         outcome,
                         retries,
                         meter,
+                        memo_records,
+                        tiers,
                     } = eval;
                     tokens.merge(&meter);
+                    tier_stats.add(&tiers);
+                    // Grow the working memo in pick order; only verdicts
+                    // the snapshot didn't already hold enter the delta
+                    // (insert-or-ignore — verdicts are deterministic per
+                    // key, so first-write-wins loses nothing).
+                    if let Some(wm) = working_memo.as_mut() {
+                        for (key, verdict) in memo_records {
+                            if wm.insert(key.clone(), verdict.clone()) {
+                                memo_delta.added.push((key, verdict));
+                            }
+                        }
+                    }
                     let (valid, gain, occ, util, new_primary) = match outcome {
                         Some((c, Outcome::Ok(rep))) => {
                             any_valid = true;
@@ -641,7 +767,7 @@ pub fn optimize_task_in(
         textgrad::parameter_update(kb, &p, &mut tokens);
     }
 
-    TaskRun {
+    let run = TaskRun {
         task_id: task.id.clone(),
         naive_time_s: naive_time,
         best_time_s: best_time,
@@ -650,7 +776,8 @@ pub fn optimize_task_in(
         steps,
         states_visited: visited.len(),
         valid: any_valid,
-    }
+    };
+    (run, memo_delta, tier_stats)
 }
 
 /// Snapshot-in / delta-out entry point — the fleet worker's unit of work
@@ -672,6 +799,28 @@ pub fn optimize_task_delta(
     let run = optimize_task_in(task, arch, &mut grown, cfg, run_seed, cache);
     let delta = lifecycle::extract_delta(snapshot, &grown);
     (run, delta)
+}
+
+/// [`optimize_task_delta`] plus the verify-memo side of the fleet
+/// contract: the run reads `memo` as its snapshot-in and returns the
+/// [`MemoDelta`] of new verdicts as its delta-out, mirroring the KB's
+/// snapshot/delta discipline exactly. Verdicts are deterministic per
+/// key, so commit order across workers cannot change merged contents —
+/// the root of the fleet's worker-count-invariant saved memos.
+pub fn optimize_task_delta_verified(
+    task: &Task,
+    arch: &GpuArch,
+    snapshot: &KnowledgeBase,
+    cfg: &IcrlConfig,
+    run_seed: u64,
+    cache: &mut VerifyCache,
+    memo: Option<&VerifyMemo>,
+) -> (TaskRun, KbDelta, MemoDelta, TierStats) {
+    let mut grown = snapshot.clone();
+    let (run, mdelta, tiers) =
+        optimize_task_core(task, arch, &mut grown, cfg, run_seed, cache, memo);
+    let delta = lifecycle::extract_delta(snapshot, &grown);
+    (run, delta, mdelta, tiers)
 }
 
 /// Run the driver over a task list. Returns per-task runs; `kb` carries
@@ -1141,5 +1290,91 @@ mod tests {
             "beam never carried two survivors"
         );
         assert!(r_beam.valid);
+    }
+
+    #[test]
+    fn staged_with_screen_off_is_bit_identical_to_unstaged() {
+        // Probe + remainder is the full oracle and verification draws no
+        // RNG, so staging with the heuristic screen disabled must
+        // reproduce the unstaged driver exactly — including when the
+        // in-run working memo replays repeat candidates.
+        let suite = Suite::full();
+        let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+        let arch = GpuArch::h100();
+        let base = quick_cfg();
+        let staged_cfg = IcrlConfig {
+            verify: VerifyConfig {
+                staged: true,
+                screen: false,
+                ..Default::default()
+            },
+            ..base.clone()
+        };
+        let mut kb_a = KnowledgeBase::empty();
+        let r_a = optimize_task(task, &arch, &mut kb_a, &base, 4);
+        let mut kb_b = KnowledgeBase::empty();
+        let mut cache = VerifyCache::new();
+        let (r_b, delta, tiers) =
+            optimize_task_verified(task, &arch, &mut kb_b, &staged_cfg, 4, &mut cache, None);
+        assert_eq!(r_a, r_b, "staged (screen off) TaskRun diverged");
+        assert_eq!(kb_a, kb_b, "staged (screen off) KB diverged");
+        assert!(tiers.full_verifications > 0);
+        assert!(!delta.is_empty(), "a grown run must memoize verdicts");
+    }
+
+    #[test]
+    fn staged_off_keeps_verified_outputs_inert() {
+        // The default config through the verified entry point is the
+        // plain driver: same TaskRun, empty delta, zero tier activity.
+        let suite = Suite::full();
+        let task = suite.by_id("L1/12_softmax").unwrap();
+        let arch = GpuArch::a100();
+        let cfg = quick_cfg();
+        assert!(!cfg.verify.staged, "default must be off");
+        let mut kb_a = KnowledgeBase::empty();
+        let r_a = optimize_task(task, &arch, &mut kb_a, &cfg, 2);
+        let mut kb_b = KnowledgeBase::empty();
+        let mut cache = VerifyCache::new();
+        let (r_b, delta, tiers) =
+            optimize_task_verified(task, &arch, &mut kb_b, &cfg, 2, &mut cache, None);
+        assert_eq!(r_a, r_b);
+        assert_eq!(kb_a, kb_b);
+        assert!(delta.is_empty());
+        assert_eq!(tiers, TierStats::default());
+    }
+
+    #[test]
+    fn fully_staged_driver_is_deterministic_and_best_passes_the_oracle() {
+        // Screen + probe + memo all on: the run stays reproducible, and
+        // the returned best still passes the full unstaged harness — the
+        // "full oracle is the only committing gate" invariant, end to
+        // end.
+        let suite = Suite::full();
+        let task = suite.by_id("L2/09_mlp_block").unwrap();
+        let arch = GpuArch::h100();
+        let cfg = IcrlConfig {
+            verify: VerifyConfig {
+                staged: true,
+                ..Default::default()
+            },
+            ..quick_cfg()
+        };
+        let mut kb1 = KnowledgeBase::empty();
+        let mut cache1 = VerifyCache::new();
+        let (r1, d1, t1) =
+            optimize_task_verified(task, &arch, &mut kb1, &cfg, 6, &mut cache1, None);
+        let mut kb2 = KnowledgeBase::empty();
+        let mut cache2 = VerifyCache::new();
+        let (r2, d2, t2) =
+            optimize_task_verified(task, &arch, &mut kb2, &cfg, 6, &mut cache2, None);
+        assert_eq!(r1, r2, "staged run not reproducible");
+        assert_eq!(kb1, kb2);
+        assert_eq!(d1, d2);
+        assert_eq!(t1, t2);
+        assert!(r1.valid);
+        let mut rng = Rng::new(0);
+        let out = harness::run(task, &r1.best, &arch, &cfg.harness, &mut rng);
+        assert!(out.is_ok(), "{}", out.feedback());
+        assert!(r1.best_time_s <= r1.naive_time_s * 1.0001);
     }
 }

@@ -84,9 +84,13 @@
 //! mid-write can never leave a torn KB — readers observe either the
 //! previous checkpoint or the new one, nothing in between.
 
-use super::driver::{optimize_task_delta, optimize_task_in, IcrlConfig, KbMode, TaskRun};
-use super::policy::PolicyConfig;
+use super::driver::{
+    optimize_task_delta_verified, optimize_task_verified, IcrlConfig, KbMode, TaskRun,
+};
+use super::policy::{PolicyConfig, PolicyKind};
 use crate::gpu::GpuArch;
+use crate::harness::memo::{MemoDelta, VerifyMemo};
+use crate::harness::staged::TierStats;
 use crate::harness::VerifyCache;
 use crate::kb::lifecycle::{self, KbDelta};
 use crate::kb::{persist, KnowledgeBase};
@@ -122,6 +126,16 @@ pub struct FleetConfig {
     /// determinism contract is untouched: the epoch's policy is a pure
     /// function of the epoch index, never of worker scheduling.
     pub epoch_policies: Vec<PolicyConfig>,
+    /// Auto-tune the per-epoch policy from KB maturity instead of a
+    /// hand-written mix (`fleet.epoch_policies: "auto"` in a run config):
+    /// each epoch reads the shared KB's untried-entry ratio
+    /// ([`lifecycle::stats`]) at commit-boundary time and picks
+    /// explore-heavy policies while most entries are unexplored,
+    /// settling on the batch's base policy once evidence has
+    /// accumulated (see [`auto_epoch_policy`]). Takes precedence over
+    /// `epoch_policies` when both are set. The choice is a pure function
+    /// of the epoch-start KB, so worker-count invariance is untouched.
+    pub auto_epoch_policies: bool,
 }
 
 impl Default for FleetConfig {
@@ -131,6 +145,7 @@ impl Default for FleetConfig {
             epoch_size: 8,
             checkpoint_every: 0,
             epoch_policies: Vec::new(),
+            auto_epoch_policies: false,
         }
     }
 }
@@ -147,6 +162,31 @@ impl FleetConfig {
     }
 }
 
+/// The maturity-driven epoch policy (`fleet.epoch_policies: "auto"`):
+/// derive the next epoch's search policy from how much of the shared KB
+/// is still unexplored. A mostly-untried KB (> 50% entries without
+/// attempts — including the empty cold-start KB) explores with
+/// ε-greedy; a partially-explored one (> 20% untried) balances with the
+/// UCB bandit; a mature KB runs the batch's base policy (exploit what
+/// the evidence says). Pure function of the KB passed in, so calling it
+/// at epoch-commit boundaries keeps the fleet's worker-count-invariance
+/// contract intact.
+pub fn auto_epoch_policy(kb: &KnowledgeBase, base: &PolicyConfig) -> PolicyConfig {
+    let st = lifecycle::stats(kb);
+    let untried_ratio = if st.entries == 0 {
+        1.0
+    } else {
+        st.untried as f64 / st.entries as f64
+    };
+    if untried_ratio > 0.5 {
+        PolicyConfig::of_kind(PolicyKind::EpsilonGreedy)
+    } else if untried_ratio > 0.2 {
+        PolicyConfig::of_kind(PolicyKind::UcbBandit)
+    } else {
+        base.clone()
+    }
+}
+
 /// What a fleet run produced, beyond the shared KB mutation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetOutcome {
@@ -158,6 +198,9 @@ pub struct FleetOutcome {
     /// Deltas committed into the shared KB (0 in
     /// [`KbMode::EphemeralPerTask`]).
     pub commits: usize,
+    /// Aggregated staged-verification activity across every task of the
+    /// batch (all-zero when `verify.staged` is off).
+    pub tiers: TierStats,
 }
 
 /// Progress hooks for streaming consumers (the `batch` CLI command
@@ -200,6 +243,36 @@ pub fn run_fleet_observed(
     fleet: &FleetConfig,
     obs: &mut dyn FleetObserver,
 ) -> FleetOutcome {
+    run_fleet_core(tasks, arch, kb, cfg, fleet, None, obs)
+}
+
+/// [`run_fleet_observed`] plus the persistent verify memo
+/// ([`crate::harness::staged`]): `memo` is read as each epoch's
+/// snapshot-in and grown by task-ordered delta commits — exactly the
+/// shared KB's discipline, so saved memo bytes are worker-count
+/// invariant (`tests/staged.rs`). With `verify.staged` off the memo is
+/// left untouched.
+pub fn run_fleet_memo(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    fleet: &FleetConfig,
+    memo: &mut VerifyMemo,
+    obs: &mut dyn FleetObserver,
+) -> FleetOutcome {
+    run_fleet_core(tasks, arch, kb, cfg, fleet, Some(memo), obs)
+}
+
+fn run_fleet_core(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    fleet: &FleetConfig,
+    mut memo: Option<&mut VerifyMemo>,
+    obs: &mut dyn FleetObserver,
+) -> FleetOutcome {
     let epoch_size = fleet.epoch_size.max(1);
     let workers = fleet.workers.max(1);
     let ephemeral = cfg.kb_mode == KbMode::EphemeralPerTask;
@@ -207,16 +280,32 @@ pub fn run_fleet_observed(
     let mut epochs = 0usize;
     let mut commits = 0usize;
     let mut offset = 0usize;
+    let mut tiers = TierStats::default();
     for (epoch_idx, chunk) in tasks.chunks(epoch_size).enumerate() {
         // Policy-aware scheduling: the epoch's policy comes from the
-        // per-epoch mix (pure function of the epoch index — results stay
-        // worker-count invariant). With no mix configured this clones
+        // KB-maturity autotuner or the per-epoch mix (pure functions of
+        // the epoch-start KB / the epoch index — results stay
+        // worker-count invariant). With neither configured this clones
         // the batch config unchanged.
+        let epoch_policy = if fleet.auto_epoch_policies {
+            auto_epoch_policy(kb, &cfg.policy)
+        } else {
+            fleet.policy_for_epoch(epoch_idx, &cfg.policy)
+        };
         let epoch_cfg = IcrlConfig {
-            policy: fleet.policy_for_epoch(epoch_idx, &cfg.policy),
+            policy: epoch_policy,
             ..cfg.clone()
         };
-        let results = epoch_results(chunk, offset, arch, kb, &epoch_cfg, workers, ephemeral);
+        let results = epoch_results(&EpochJob {
+            chunk,
+            offset,
+            arch,
+            snapshot: kb,
+            cfg: &epoch_cfg,
+            workers,
+            ephemeral,
+            memo: memo.as_deref(),
+        });
         // Lineage lines observed on this epoch's shared snapshot: every
         // worker of the epoch sees the same snapshot, so a condition
         // (e.g. the mixed-arch audit flag) is reported once per epoch,
@@ -224,13 +313,27 @@ pub fn run_fleet_observed(
         // driver. With one task per epoch nothing is stripped — deltas
         // replay verbatim.
         let mut epoch_lines: Vec<String> = Vec::new();
-        for (i, (run, mut delta)) in results.into_iter().enumerate() {
+        for (i, res) in results.into_iter().enumerate() {
+            let TaskResult {
+                run,
+                mut delta,
+                memo: mdelta,
+                tiers: t,
+            } = res;
             if !ephemeral {
                 delta.lineage_added.retain(|l| !epoch_lines.contains(l));
                 epoch_lines.extend(delta.lineage_added.iter().cloned());
                 lifecycle::apply_delta(kb, &delta);
                 commits += 1;
             }
+            // Memo verdicts commit in task order regardless of KB mode —
+            // verification truths are mode-independent. Insert-or-ignore
+            // over deterministic verdicts makes the merged contents
+            // independent of epoch partitioning and worker count.
+            if let Some(m) = memo.as_deref_mut() {
+                m.apply_delta(&mdelta);
+            }
+            tiers.add(&t);
             obs.task_done(offset + i, &run);
             runs.push(run);
         }
@@ -242,45 +345,88 @@ pub fn run_fleet_observed(
         runs,
         epochs,
         commits,
+        tiers,
     }
+}
+
+/// One epoch's inputs, bundled: the task chunk, its global offset, the
+/// epoch-shared snapshots (KB and verify memo), and the serving knobs.
+struct EpochJob<'a> {
+    chunk: &'a [&'a Task],
+    offset: usize,
+    arch: &'a GpuArch,
+    snapshot: &'a KnowledgeBase,
+    cfg: &'a IcrlConfig,
+    workers: usize,
+    ephemeral: bool,
+    /// Verify-memo snapshot shared by every task of the epoch (same
+    /// staleness contract as the KB snapshot).
+    memo: Option<&'a VerifyMemo>,
+}
+
+/// What one task's serving produced: the run, the KB evidence delta, the
+/// verify-memo delta, and the tier counters.
+struct TaskResult {
+    run: TaskRun,
+    delta: KbDelta,
+    memo: MemoDelta,
+    tiers: TierStats,
 }
 
 /// Serve one epoch: the chunk's tasks against a single snapshot, over a
 /// pool of `workers` threads pulling from a shared queue. Results come
 /// back in task order regardless of completion order.
-fn epoch_results(
-    chunk: &[&Task],
-    offset: usize,
-    arch: &GpuArch,
-    snapshot: &KnowledgeBase,
-    cfg: &IcrlConfig,
-    workers: usize,
-    ephemeral: bool,
-) -> Vec<(TaskRun, KbDelta)> {
-    let n = chunk.len();
+fn epoch_results(job: &EpochJob<'_>) -> Vec<TaskResult> {
+    let n = job.chunk.len();
     let serve_one = |i: usize, cache: &mut VerifyCache| {
-        let run_seed = (offset + i) as u64;
-        if ephemeral {
+        let run_seed = (job.offset + i) as u64;
+        if job.ephemeral {
             // The ablation arm starts every task cold and discards the
             // KB, exactly as run_suite's EphemeralPerTask does — no
             // delta to extract, nothing to commit.
             let mut scratch = KnowledgeBase::empty();
-            let run = optimize_task_in(chunk[i], arch, &mut scratch, cfg, run_seed, cache);
-            (run, KbDelta::empty())
+            let (run, mdelta, tiers) = optimize_task_verified(
+                job.chunk[i],
+                job.arch,
+                &mut scratch,
+                job.cfg,
+                run_seed,
+                cache,
+                job.memo,
+            );
+            TaskResult {
+                run,
+                delta: KbDelta::empty(),
+                memo: mdelta,
+                tiers,
+            }
         } else {
-            optimize_task_delta(chunk[i], arch, snapshot, cfg, run_seed, cache)
+            let (run, delta, mdelta, tiers) = optimize_task_delta_verified(
+                job.chunk[i],
+                job.arch,
+                job.snapshot,
+                job.cfg,
+                run_seed,
+                cache,
+                job.memo,
+            );
+            TaskResult {
+                run,
+                delta,
+                memo: mdelta,
+                tiers,
+            }
         }
     };
-    if workers <= 1 || n <= 1 {
+    if job.workers <= 1 || n <= 1 {
         // Thread-free serial path (also the profiling-friendly mode).
         let mut cache = VerifyCache::new();
         return (0..n).map(|i| serve_one(i, &mut cache)).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<(TaskRun, KbDelta)>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<TaskResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers.min(n))
+        let handles: Vec<_> = (0..job.workers.min(n))
             .map(|_| {
                 scope.spawn(|| {
                     // §Perf: one verification cache per worker, reused
@@ -479,6 +625,7 @@ mod tests {
             epoch_size: 2,
             checkpoint_every: 0,
             epoch_policies: mix.clone(),
+            ..Default::default()
         };
         let mut kb1 = KnowledgeBase::empty();
         let out1 = run_fleet(&tasks, &arch, &mut kb1, &cfg, &fleet_cfg);
@@ -494,6 +641,7 @@ mod tests {
             epoch_size: 1,
             checkpoint_every: 0,
             epoch_policies: mix.clone(),
+            ..Default::default()
         };
         let mut kb_fleet = KnowledgeBase::empty();
         let out_e1 = run_fleet(&tasks, &arch, &mut kb_fleet, &cfg, &e1);
@@ -510,6 +658,110 @@ mod tests {
         }
         assert_eq!(out_e1.runs, seq_runs, "epoch=1 mix diverged from sequential");
         assert_eq!(kb_fleet, kb_seq);
+    }
+
+    #[test]
+    fn auto_epoch_policy_tracks_kb_maturity() {
+        let base = PolicyConfig::default();
+        // A cold KB (no entries at all) must explore.
+        assert_eq!(
+            auto_epoch_policy(&KnowledgeBase::empty(), &base).kind,
+            PolicyKind::EpsilonGreedy
+        );
+        // Grown evidence: the choice must agree with the stats ratio.
+        let suite = Suite::full();
+        let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+        let arch = GpuArch::h100();
+        let mut kb = KnowledgeBase::empty();
+        let _ = crate::icrl::optimize_task(task, &arch, &mut kb, &quick_cfg(), 0);
+        let st = lifecycle::stats(&kb);
+        assert!(st.entries > 0);
+        let ratio = st.untried as f64 / st.entries as f64;
+        let got = auto_epoch_policy(&kb, &base).kind;
+        if ratio > 0.5 {
+            assert_eq!(got, PolicyKind::EpsilonGreedy);
+        } else if ratio > 0.2 {
+            assert_eq!(got, PolicyKind::UcbBandit);
+        } else {
+            assert_eq!(got, base.kind);
+        }
+        // A fully-attempted KB exploits with the base policy.
+        let mut mature = kb.clone();
+        for s in &mut mature.states {
+            for o in &mut s.opts {
+                o.attempts = o.attempts.max(1);
+            }
+        }
+        assert_eq!(auto_epoch_policy(&mature, &base).kind, base.kind);
+    }
+
+    #[test]
+    fn auto_epoch_fleet_is_reproducible() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let arch = GpuArch::h100();
+        let fleet = FleetConfig {
+            workers: 2,
+            epoch_size: 1,
+            auto_epoch_policies: true,
+            ..Default::default()
+        };
+        let mut kb1 = KnowledgeBase::empty();
+        let out1 = run_fleet(&tasks, &arch, &mut kb1, &quick_cfg(), &fleet);
+        let mut kb2 = KnowledgeBase::empty();
+        let out2 = run_fleet(&tasks, &arch, &mut kb2, &quick_cfg(), &fleet);
+        assert_eq!(out1.runs, out2.runs, "auto-epoch fleet not reproducible");
+        assert_eq!(kb1, kb2);
+        assert!(out1.runs.iter().all(|r| r.valid));
+    }
+
+    #[test]
+    fn memo_fleet_grows_a_memo_and_stays_reproducible() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let arch = GpuArch::a100();
+        let cfg = IcrlConfig {
+            verify: crate::harness::staged::VerifyConfig {
+                staged: true,
+                ..Default::default()
+            },
+            ..quick_cfg()
+        };
+        let fleet = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            ..Default::default()
+        };
+        let mut kb1 = KnowledgeBase::empty();
+        let mut memo1 = VerifyMemo::new();
+        let out1 = run_fleet_memo(&tasks, &arch, &mut kb1, &cfg, &fleet, &mut memo1, &mut NullObserver);
+        assert!(!memo1.is_empty(), "staged fleet must memoize verdicts");
+        assert!(out1.tiers.full_verifications > 0);
+        let mut kb2 = KnowledgeBase::empty();
+        let mut memo2 = VerifyMemo::new();
+        let out2 = run_fleet_memo(&tasks, &arch, &mut kb2, &cfg, &fleet, &mut memo2, &mut NullObserver);
+        assert_eq!(out1.runs, out2.runs);
+        assert_eq!(memo1, memo2);
+        // Staging off leaves a provided memo untouched.
+        let mut memo3 = VerifyMemo::new();
+        let mut kb3 = KnowledgeBase::empty();
+        let _ = run_fleet_memo(
+            &tasks,
+            &arch,
+            &mut kb3,
+            &quick_cfg(),
+            &fleet,
+            &mut memo3,
+            &mut NullObserver,
+        );
+        assert!(memo3.is_empty());
     }
 
     #[test]

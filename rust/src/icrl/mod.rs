@@ -39,6 +39,13 @@
 //! statistics. ε and UCB-c can anneal per state as evidence accumulates
 //! ([`policy::Schedule`]); `experiment policy` compares the arms over
 //! paired seeds and `experiment sweep` grids their hyperparameters.
+//!
+//! Step 6's verification can run **staged**
+//! ([`IcrlConfig::verify`], CLI `--staged`): a static cost-model screen
+//! and a one-seed probe triage candidates before the full oracle, and a
+//! persistent cross-run memo ([`crate::harness::memo`]) replays verdicts
+//! for candidates any earlier run already verified. The full oracle
+//! remains the only committing gate — see [`crate::harness::staged`].
 
 #![deny(missing_docs)]
 
@@ -47,11 +54,13 @@ pub mod fleet;
 pub mod policy;
 
 pub use driver::{
-    optimize_task, optimize_task_delta, optimize_task_in, run_suite, warm_start_kb,
-    IcrlConfig, KbMode, StepLog, TaskRun,
+    optimize_task, optimize_task_delta, optimize_task_delta_verified, optimize_task_in,
+    optimize_task_verified, run_suite, warm_start_kb, IcrlConfig, KbMode, StepLog, TaskRun,
 };
-pub use fleet::{run_fleet, run_fleet_observed, FleetConfig, FleetOutcome};
+pub use fleet::{
+    auto_epoch_policy, run_fleet, run_fleet_memo, run_fleet_observed, FleetConfig, FleetOutcome,
+};
 pub use policy::{
     BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, Portfolio, Schedule,
-    SearchPolicy, UcbBandit,
+    SearchPolicy, Thompson, UcbBandit,
 };

@@ -322,6 +322,84 @@ impl SearchPolicy for UcbBandit {
     }
 }
 
+/// Thompson sampling over the KB's replay statistics: each candidate's
+/// success probability gets a Beta posterior — `Beta(successes + 1,
+/// failures + 1)` under a uniform prior — and each selection slot ranks
+/// candidates by `θ · expected_gain` where `θ` is one posterior draw.
+/// Exploration emerges from posterior width instead of an explicit ε or
+/// bonus term: an entry with 1/1 successes still draws θ anywhere in
+/// (0, 1), while 40/40 concentrates near 1 — so uncertainty earns picks
+/// exactly in proportion to how unresolved the entry is, and the policy
+/// anneals itself as evidence accumulates (no [`Schedule`] needed).
+///
+/// Draws consume only the handed stream (one Beta = two Gamma draws per
+/// candidate, via Marsaglia–Tsang), keeping the selection a pure
+/// function of (candidates, k, rng state) like every other policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Thompson;
+
+impl Thompson {
+    /// Gamma(shape, 1) via Marsaglia–Tsang. Shapes here are always
+    /// ≥ 1 (count + 1), the regime where the squeeze-free rejection
+    /// loop applies directly.
+    fn gamma(shape: f64, rng: &mut Rng) -> f64 {
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = rng.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = rng.f64();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(a, b) as the Gamma ratio Gₐ/(Gₐ+G_b).
+    fn beta(a: f64, b: f64, rng: &mut Rng) -> f64 {
+        let x = Self::gamma(a, rng);
+        let y = Self::gamma(b, rng);
+        if x + y <= 0.0 {
+            return 0.5;
+        }
+        x / (x + y)
+    }
+}
+
+impl SearchPolicy for Thompson {
+    fn name(&self) -> &'static str {
+        "thompson"
+    }
+
+    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+        let mut scored: Vec<(usize, f64)> = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let a = c.successes as f64 + 1.0;
+                let b = c.attempts.saturating_sub(c.successes) as f64 + 1.0;
+                let theta = Self::beta(a, b, rng);
+                let gain = if c.expected_gain.is_finite() {
+                    c.expected_gain
+                } else {
+                    0.0
+                };
+                (i, theta * gain)
+            })
+            .collect();
+        scored.sort_by(|x, y| y.1.total_cmp(&x.1).then(x.0.cmp(&y.0)));
+        scored.truncate(k);
+        scored.into_iter().map(|(i, _)| candidates[i].technique).collect()
+    }
+}
+
 /// Beam search: the same weighted draw as [`GreedyTopK`] per frontier
 /// node, but the driver carries the best `width` distinct valid outcomes
 /// across steps instead of stepping to the single best — a slower step
@@ -455,7 +533,7 @@ impl SearchPolicy for Portfolio {
     }
 }
 
-/// The five built-in policies, as a closed nameable set (CLI/config/
+/// The six built-in policies, as a closed nameable set (CLI/config/
 /// experiment surface).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -472,6 +550,9 @@ pub enum PolicyKind {
     /// [`Portfolio`] — contrastive ε-greedy/UCB mix arbitrated per state
     /// by replay statistics.
     Portfolio,
+    /// [`Thompson`] — Beta-posterior sampling over per-entry
+    /// success/attempt counts.
+    Thompson,
 }
 
 impl PolicyKind {
@@ -483,6 +564,7 @@ impl PolicyKind {
             PolicyKind::UcbBandit,
             PolicyKind::BeamSearch,
             PolicyKind::Portfolio,
+            PolicyKind::Thompson,
         ]
     }
 
@@ -495,6 +577,7 @@ impl PolicyKind {
             PolicyKind::UcbBandit => "ucb_bandit",
             PolicyKind::BeamSearch => "beam_search",
             PolicyKind::Portfolio => "portfolio",
+            PolicyKind::Thompson => "thompson",
         }
     }
 
@@ -617,6 +700,7 @@ impl PolicyConfig {
                     schedule: self.schedule,
                 },
             }),
+            PolicyKind::Thompson => Box::new(Thompson),
         }
     }
 }
@@ -910,6 +994,48 @@ mod tests {
         let mut reference = Rng::new(31);
         let _ = reference.next_u64();
         assert_eq!(used, reference, "parent must advance exactly one draw");
+    }
+
+    #[test]
+    fn thompson_is_deterministic_and_posterior_sharpens_with_evidence() {
+        let (kbase, state) = pool();
+        let scored = kbase.scored_candidates(state, |_| true);
+        let policy = PolicyConfig::of_kind(PolicyKind::Thompson).build();
+        assert_eq!(policy.name(), "thompson");
+        for k in [1usize, 3, 100] {
+            let mut r1 = Rng::new(13);
+            let mut r2 = Rng::new(13);
+            let a = policy.select(&scored, k, &mut r1);
+            let b = policy.select(&scored, k, &mut r2);
+            assert_eq!(a, b, "same stream must reproduce the draw");
+            assert_eq!(r1, r2, "stream consumption must be deterministic");
+            assert_eq!(a.len(), k.min(scored.len()));
+            let mut d = a.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), a.len(), "duplicate picks");
+        }
+        // Posterior draws live in (0, 1) and concentrate with evidence:
+        // Beta(41, 1) sits far above Beta(1, 1)'s typical spread.
+        let mut rng = Rng::new(21);
+        let mut lo = 1.0f64;
+        for _ in 0..200 {
+            let sharp = Thompson::beta(41.0, 1.0, &mut rng);
+            assert!((0.0..=1.0).contains(&sharp));
+            lo = lo.min(sharp);
+        }
+        assert!(lo > 0.8, "Beta(41,1) draws must concentrate near 1: {lo}");
+        // A 4/4-success entry at measured gain ≈ 2.4 must win the top
+        // slot far above the 1/25 uniform rate — posterior mass follows
+        // the evidence (exact rate depends on the 24 untried priors).
+        let mut wins = 0;
+        for seed in 0..100u64 {
+            let picks = Thompson.select(&scored, 1, &mut Rng::new(seed));
+            if picks[0] == Technique::SharedMemoryTiling {
+                wins += 1;
+            }
+        }
+        assert!(wins > 30, "evidence-backed winner picked only {wins}/100");
     }
 
     #[test]

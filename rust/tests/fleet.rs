@@ -237,6 +237,7 @@ fn epoch_policy_mix_is_worker_count_invariant() {
             epoch_size: 2,
             checkpoint_every: 0,
             epoch_policies: mix.clone(),
+            ..Default::default()
         };
         let mut kb = KnowledgeBase::empty();
         let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);

@@ -1,0 +1,302 @@
+//! Staged-verification pipeline properties.
+//!
+//! The load-bearing assertions, in order of importance:
+//!
+//! 1. **Inert by default** — with `verify.staged` off (the default), the
+//!    memo-threading driver entry point is bit-identical to the plain
+//!    driver: same `TaskRun`, same saved-KB bytes, all-zero tier
+//!    counters, empty memo delta.
+//! 2. **Screen-off parity** — staging with the tier-0 screen disabled
+//!    reorders verification into probe + remainder but performs exactly
+//!    the same work on the same RNG streams, so it too is bit-identical
+//!    to the unstaged driver.
+//! 3. **Memo replay invariance** — re-running against a memo grown by an
+//!    identical earlier run changes no observable result, only skips
+//!    verification work (memo hits recorded, fewer seeds executed).
+//! 4. **Cold-start degradation** — corrupt or missing memo files load as
+//!    an empty memo and never fail a run.
+//! 5. **Worker-count invariance** — fleet batches save byte-identical
+//!    memo documents for any worker count (the snapshot-in/delta-out
+//!    discipline plus sorted serialization).
+//! 6. **Format pins** — the canonical string a candidate key hashes and
+//!    the `kernelblaster-memo-v1` wire document are pinned against
+//!    checked-in golden fixtures; drift in either silently invalidates
+//!    every persisted memo in the wild, so it must fail loudly here.
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::memo::{self, VerifyMemo};
+use kernelblaster::harness::staged::{TierStats, VerifyConfig};
+use kernelblaster::harness::{HarnessConfig, VerifyCache};
+use kernelblaster::icrl::fleet::NullObserver;
+use kernelblaster::icrl::{self, FleetConfig, IcrlConfig, TaskRun};
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::kir::schedule::Schedule;
+use kernelblaster::kir::{GraphBuilder, OpKind};
+use kernelblaster::opts::Candidate;
+use kernelblaster::tasks::{Suite, Task};
+use std::path::{Path, PathBuf};
+
+fn quick_cfg(seed: u64) -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 2,
+        rollout_steps: 3,
+        top_k: 2,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// Run the plain (pre-staging) driver on a fresh KB.
+fn plain_run(task: &Task, arch: &GpuArch, cfg: &IcrlConfig) -> (TaskRun, String) {
+    let mut kb = KnowledgeBase::empty();
+    let run = icrl::optimize_task(task, arch, &mut kb, cfg, 0);
+    let bytes = kb_bytes(&kb);
+    (run, bytes)
+}
+
+#[test]
+fn staged_off_is_bit_identical_to_plain_driver() {
+    let suite = Suite::full();
+    let task = suite.by_id("L1/12_softmax").unwrap();
+    let arch = GpuArch::a100();
+    let cfg = quick_cfg(7);
+    assert!(!cfg.verify.staged, "staging must default to off");
+
+    let (r1, kb1) = plain_run(task, &arch, &cfg);
+    let mut kb2 = KnowledgeBase::empty();
+    let mut cache = VerifyCache::new();
+    let (r2, delta, tiers) =
+        icrl::optimize_task_verified(task, &arch, &mut kb2, &cfg, 0, &mut cache, None);
+
+    assert_eq!(r1, r2, "staged-off TaskRun must match the plain driver");
+    assert_eq!(kb1, kb_bytes(&kb2), "staged-off KB bytes must match");
+    assert!(delta.is_empty(), "staged-off runs must record no verdicts");
+    assert_eq!(tiers, TierStats::default(), "staged-off counters must be zero");
+}
+
+#[test]
+fn staged_screen_off_matches_unstaged_bit_for_bit() {
+    let suite = Suite::full();
+    let task = suite.by_id("L1/12_softmax").unwrap();
+    let arch = GpuArch::h100();
+    let base = quick_cfg(11);
+    let (r1, kb1) = plain_run(task, &arch, &base);
+
+    let cfg = IcrlConfig {
+        verify: VerifyConfig {
+            staged: true,
+            screen: false,
+            ..Default::default()
+        },
+        ..base
+    };
+    let mut kb2 = KnowledgeBase::empty();
+    let mut cache = VerifyCache::new();
+    let (r2, delta, tiers) =
+        icrl::optimize_task_verified(task, &arch, &mut kb2, &cfg, 0, &mut cache, None);
+
+    assert_eq!(
+        r1, r2,
+        "screen-off staging reorders verification but must not change results"
+    );
+    assert_eq!(kb1, kb_bytes(&kb2));
+    assert_eq!(tiers.screen_rejected, 0, "the screen is off");
+    assert!(tiers.full_verifications > 0, "tier 2 must have run");
+    assert!(tiers.seeds_executed > 0);
+    assert!(!delta.is_empty(), "staged runs record verdicts for the memo");
+}
+
+#[test]
+fn memo_replay_changes_no_results_and_skips_work() {
+    let suite = Suite::full();
+    let task = suite.by_id("L1/15_relu").unwrap();
+    let arch = GpuArch::a100();
+    // Screen off: memo lookups run before the tier-0 screen, so with the
+    // screen on a hit can change which candidates get screened — the
+    // equality contract is screen-off only.
+    let cfg = IcrlConfig {
+        verify: VerifyConfig {
+            staged: true,
+            screen: false,
+            ..Default::default()
+        },
+        ..quick_cfg(3)
+    };
+
+    let mut kb1 = KnowledgeBase::empty();
+    let mut cache1 = VerifyCache::new();
+    let (r1, delta1, t1) =
+        icrl::optimize_task_verified(task, &arch, &mut kb1, &cfg, 0, &mut cache1, None);
+    let kb1_bytes = kb_bytes(&kb1);
+
+    let mut memo = VerifyMemo::new();
+    memo.apply_delta(&delta1);
+    assert!(!memo.is_empty());
+
+    let mut kb2 = KnowledgeBase::empty();
+    let mut cache2 = VerifyCache::new();
+    let (r2, delta2, t2) =
+        icrl::optimize_task_verified(task, &arch, &mut kb2, &cfg, 0, &mut cache2, Some(&memo));
+
+    assert_eq!(r1, r2, "a warm memo must not change the TaskRun");
+    assert_eq!(kb1_bytes, kb_bytes(&kb2), "a warm memo must not change the KB");
+    assert!(t2.memo_hits > 0, "the repeat run must hit the memo");
+    assert!(
+        t2.seeds_executed < t1.seeds_executed,
+        "memo hits must skip verification executions ({} vs {})",
+        t2.seeds_executed,
+        t1.seeds_executed
+    );
+    assert!(
+        delta2.is_empty(),
+        "an identical run against its own memo has nothing new to record"
+    );
+}
+
+#[test]
+fn corrupt_or_missing_memo_degrades_to_cold_start() {
+    let dir = std::env::temp_dir().join("kb_staged_cold_start_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let corrupt = dir.join("corrupt.json");
+    std::fs::write(&corrupt, "{\"format\": \"not-a-memo\"").unwrap();
+    let missing = dir.join("does_not_exist.json");
+
+    assert!(memo::load(&corrupt).is_err());
+    assert!(memo::load_or_cold(&corrupt).is_empty());
+    assert!(memo::load_or_cold(&missing).is_empty());
+
+    // A cold memo behaves exactly like no memo at all.
+    let suite = Suite::full();
+    let task = suite.by_id("L1/15_relu").unwrap();
+    let arch = GpuArch::a100();
+    let cfg = IcrlConfig {
+        verify: VerifyConfig {
+            staged: true,
+            screen: false,
+            ..Default::default()
+        },
+        ..quick_cfg(3)
+    };
+    let cold = memo::load_or_cold(&corrupt);
+    let mut kb1 = KnowledgeBase::empty();
+    let mut cache1 = VerifyCache::new();
+    let (r1, _, _) =
+        icrl::optimize_task_verified(task, &arch, &mut kb1, &cfg, 0, &mut cache1, Some(&cold));
+    let mut kb2 = KnowledgeBase::empty();
+    let mut cache2 = VerifyCache::new();
+    let (r2, _, _) =
+        icrl::optimize_task_verified(task, &arch, &mut kb2, &cfg, 0, &mut cache2, None);
+    assert_eq!(r1, r2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_worker_counts_save_identical_memo_bytes() {
+    let suite = Suite::full();
+    let tasks: Vec<&Task> = vec![
+        suite.by_id("L1/12_softmax").unwrap(),
+        suite.by_id("L1/15_relu").unwrap(),
+    ];
+    let arch = GpuArch::h100();
+    let cfg = IcrlConfig {
+        verify: VerifyConfig {
+            staged: true,
+            ..Default::default()
+        },
+        ..quick_cfg(5)
+    };
+
+    let mut results: Vec<(Vec<TaskRun>, String)> = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let fleet = FleetConfig {
+            workers,
+            epoch_size: 2,
+            ..Default::default()
+        };
+        let mut kb = KnowledgeBase::empty();
+        let mut vm = VerifyMemo::new();
+        let out =
+            icrl::run_fleet_memo(&tasks, &arch, &mut kb, &cfg, &fleet, &mut vm, &mut NullObserver);
+        assert!(!vm.is_empty(), "workers={workers}: staged runs must record verdicts");
+        results.push((out.runs, memo::to_json(&vm).to_string_pretty()));
+    }
+    let (runs0, memo0) = &results[0];
+    for (i, (runs, memo_bytes)) in results.iter().enumerate().skip(1) {
+        assert_eq!(runs0, runs, "worker count {} changed task results", [2, 8][i - 1]);
+        assert_eq!(
+            memo0,
+            memo_bytes,
+            "worker count {} changed saved memo bytes",
+            [2, 8][i - 1]
+        );
+    }
+}
+
+/// The tiny two-node candidate the canonical-string fixture pins: a
+/// matmul → relu chain under the naive schedule.
+fn tiny_candidate() -> Candidate {
+    let mut b = GraphBuilder::new("tiny");
+    let x = b.input("x", &[2, 3]);
+    let w = b.input("w", &[3, 4]);
+    let mm = b.op(OpKind::Matmul, &[x, w]);
+    let r = b.op(OpKind::Relu, &[mm]);
+    b.output(r);
+    let g = b.finish();
+    let schedule = Schedule::naive(&g);
+    Candidate {
+        full: g.clone(),
+        small: g,
+        schedule,
+        applied: vec![],
+    }
+}
+
+#[test]
+fn canonical_string_matches_golden_fixture() {
+    let cand = tiny_candidate();
+    let cfg = HarnessConfig::default();
+    let canonical = memo::canonical_string("golden/tiny", &cand, &cfg);
+    let path = fixture("memo_canonical.golden.txt");
+    let golden = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing fixture {}: {e}", path.display()));
+    assert_eq!(
+        canonical, golden,
+        "canonical-string spelling drifted — every persisted memo key is now unreachable"
+    );
+    let key = memo::candidate_key("golden/tiny", &cand, &cfg);
+    assert_eq!(key, format!("{:016x}", memo::fnv1a64(&canonical)));
+    assert_eq!(key, "f2ad649e43bdafd2", "candidate key drifted");
+}
+
+#[test]
+fn memo_v1_document_reproduced_byte_for_byte() {
+    let path = fixture("memo_v1.golden.json");
+    let original = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing fixture {}: {e}", path.display()));
+    let loaded = memo::load(&path).unwrap_or_else(|e| panic!("fixture failed to load: {e}"));
+    assert_eq!(loaded.len(), 4, "one entry per verdict kind");
+
+    // Byte identity through the save path (atomic tmp+rename)…
+    let dir = std::env::temp_dir().join("kb_memo_wire_golden_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("memo_v1.golden.json");
+    memo::save(&loaded, &out).unwrap();
+    let rewritten = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(
+        rewritten, original,
+        "load -> save no longer reproduces the v1 memo document byte-for-byte"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    // …and through the in-memory serializer the fleet summary uses.
+    assert_eq!(memo::to_json(&loaded).to_string_pretty(), original);
+}

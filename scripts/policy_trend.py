@@ -1,16 +1,22 @@
 #!/usr/bin/env python3
-"""Policy trend gate: fail CI when a search-policy arm regresses.
+"""Bench trend gate: fail CI when a paired-arm benchmark regresses.
 
-Compares the current ``BENCH_policy.json`` (format
-``kernelblaster-bench-policy-v1``) against the artifact uploaded by a
-previous CI run and exits non-zero when any arm's ``vs_greedy_paired``
-ratio dropped by more than the threshold (default 5%). Contract details
-live in EXPERIMENTS.md §Policy ("Trend tracking").
+Compares a current bench artifact against the one uploaded by a previous
+CI run and exits non-zero when any arm's ``vs_greedy_paired`` ratio
+dropped by more than the threshold (default 5%). Two artifact formats
+are understood, auto-detected from the document's ``format`` key:
+
+- ``kernelblaster-bench-policy-v1`` (``BENCH_policy.json``) — arms are
+  matched by their ``policy`` name;
+- ``kernelblaster-bench-sweep-v1`` (``BENCH_sweep.json``) — arms are
+  matched by their ``label`` (one per hyperparameter grid point).
+
+Contract details live in EXPERIMENTS.md §Policy ("Trend tracking").
 
 Rules:
-- arms are matched by their ``policy`` name; arms present only on one
-  side are reported but never fail the gate (adding or removing a policy
-  is a reviewed code change, not a regression);
+- arms present only on one side are reported but never fail the gate
+  (adding or removing an arm is a reviewed code change, not a
+  regression);
 - an arm is skipped when either side has ``paired_cells`` == 0 or a
   non-numeric ratio (the crate serializes degenerate geomeans as null) —
   there is nothing comparable to trend;
@@ -18,7 +24,9 @@ Rules:
   construction);
 - a missing/unreadable previous artifact passes with a notice: the first
   run on a branch has no baseline, and a gate that fails open on missing
-  history would block unrelated changes.
+  history would block unrelated changes. A previous artifact in a
+  *different* format than the current one passes the same way — the two
+  are not comparable.
 
 Usage: policy_trend.py CURRENT_JSON PREVIOUS_JSON [--threshold 0.05]
 Exit codes: 0 ok / no baseline; 1 regression; 2 bad invocation or a
@@ -29,12 +37,20 @@ import argparse
 import json
 import sys
 
-FORMAT = "kernelblaster-bench-policy-v1"
+# format identifier -> the arm key that names an arm in that format.
+FORMATS = {
+    "kernelblaster-bench-policy-v1": "policy",
+    "kernelblaster-bench-sweep-v1": "label",
+}
 BASELINE_ARM = "greedy_topk"
 
 
-def load_arms(path, required):
-    """Return {policy_name: arm_dict} or None if missing/malformed."""
+def load_arms(path, required, expect_format=None):
+    """Return (format, {arm_name: arm_dict}) or None if missing/malformed.
+
+    ``expect_format`` pins the accepted format (used for the previous
+    artifact, which must match the current one to be comparable).
+    """
     try:
         with open(path, encoding="utf-8") as f:
             doc = json.load(f)
@@ -44,13 +60,19 @@ def load_arms(path, required):
             sys.exit(2)
         print(f"policy-trend: no previous artifact at {path} ({e}); passing")
         return None
-    if doc.get("format") != FORMAT:
+    fmt = doc.get("format")
+    wanted = [expect_format] if expect_format else sorted(FORMATS)
+    if fmt not in wanted:
         if required:
-            print(f"policy-trend: {path} has format {doc.get('format')!r}, want {FORMAT!r}")
+            print(f"policy-trend: {path} has format {fmt!r}, want one of {wanted}")
             sys.exit(2)
-        print("policy-trend: previous artifact has unexpected format; passing")
+        print(
+            f"policy-trend: previous artifact has format {fmt!r}, "
+            f"not comparable to the current one; passing"
+        )
         return None
-    return {a.get("policy"): a for a in doc.get("arms", [])}
+    key = FORMATS[fmt]
+    return fmt, {a.get(key): a for a in doc.get("arms", [])}
 
 
 def comparable(arm):
@@ -64,10 +86,10 @@ def comparable(arm):
 def main(argv):
     parser = argparse.ArgumentParser(
         prog="policy_trend.py",
-        description="Fail when a policy arm's vs_greedy_paired regresses "
-        "past the threshold vs a previous BENCH_policy.json.",
+        description="Fail when a bench arm's vs_greedy_paired regresses past "
+        "the threshold vs a previous BENCH_policy.json / BENCH_sweep.json.",
     )
-    parser.add_argument("current", help="BENCH_policy.json of this run")
+    parser.add_argument("current", help="bench JSON of this run")
     parser.add_argument("previous", help="baseline artifact (may be absent)")
     parser.add_argument(
         "--threshold",
@@ -81,10 +103,11 @@ def main(argv):
         return 2
     threshold = args.threshold
 
-    current = load_arms(args.current, required=True)
-    previous = load_arms(args.previous, required=False)
-    if previous is None:
+    cur_format, current = load_arms(args.current, required=True)
+    loaded = load_arms(args.previous, required=False, expect_format=cur_format)
+    if loaded is None:
         return 0
+    _, previous = loaded
 
     regressions = []
     for name, cur in current.items():
