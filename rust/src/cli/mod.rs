@@ -20,6 +20,12 @@
 //!              [--gain-floor X] [--max-notes N]`
 //! - `kb transfer --path IN --to ARCH [--from ARCH] [--decay X]
 //!               [--rekey-threshold X] [--out PATH]`
+//! - `kb mine --path IN [--out PATH] …` — run fresh rollouts over the
+//!   KB, mine winning technique chains from the replay logs
+//!   ([`crate::kb::skills`]) and install them as composite skill entries;
+//!   `--skills` on `optimize`/`batch` lets policies draw them
+//! - `memo compact --path IN [--out PATH] --max-entries N` — bound a
+//!   persistent verification memo (failures evicted first, then LRU)
 //! - `list` — tasks, experiments, GPUs
 //! - `version`
 //!
@@ -33,8 +39,9 @@ use crate::experiments::{self, Ctx};
 use crate::gpu::GpuArch;
 use crate::harness::memo;
 use crate::harness::staged::VerifyConfig;
-use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, Schedule};
+use crate::icrl::{self, IcrlConfig, PolicyConfig, PolicyKind, Schedule, SkillsConfig};
 use crate::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
+use crate::kb::skills as kb_skills;
 use crate::kb::{persist, KnowledgeBase};
 use crate::runtime;
 use crate::tasks::{Level, Suite};
@@ -127,6 +134,8 @@ USAGE:
                          [--dedup-distance X]
                          [--staged] [--no-screen] [--no-probe] [--screen-margin X]
                          [--probe-seeds N] [--memo PATH]
+                         [--skills] [--skill-max-len N] [--skill-min-support N]
+                         [--skill-min-gain X] [--skill-max-per-state N]
   kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
                       [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
                       [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
@@ -135,6 +144,8 @@ USAGE:
                       [--dedup-distance X] [--epoch-policies NAME,NAME,...|auto]
                       [--staged] [--no-screen] [--no-probe] [--screen-margin X]
                       [--probe-seeds N] [--memo PATH] [--config run.json]
+                      [--skills] [--skill-max-len N] [--skill-min-support N]
+                      [--skill-min-gain X] [--skill-max-per-state N]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
   kernelblaster kb <init|inspect|stats> --path PATH
@@ -143,12 +154,19 @@ USAGE:
                            [--gain-floor 1.0] [--max-notes 3]
   kernelblaster kb transfer --path IN --to ARCH [--from ARCH] [--decay 0.5]
                             [--rekey-threshold 1.5] [--out PATH]
+  kernelblaster kb mine --path IN [--out PATH] [--gpu H100]
+                        [--tasks id,id,...|--jobs FILE] [--trajectories N]
+                        [--steps N] [--seed N] [--skill-max-len 3]
+                        [--skill-min-support 2] [--skill-min-gain 1.05]
+                        [--skill-max-per-state 4]
+  kernelblaster memo compact --path IN [--out PATH] --max-entries N
   kernelblaster list
   kernelblaster version
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
   fig19 ablation_mem minimal_agent continual fleet policy sweep verify
+  skills
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -162,6 +180,7 @@ pub fn run(argv: &[String]) -> i32 {
         Some("suite") => cmd_suite(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("kb") => cmd_kb(&args),
+        Some("memo") => cmd_memo(&args),
         Some("list") => cmd_list(),
         Some("version") => {
             println!("kernelblaster {}", env!("CARGO_PKG_VERSION"));
@@ -385,6 +404,10 @@ fn cmd_batch(args: &Args) -> i32 {
     }
     cfg.icrl.verify = match verify_from_flags(args, cfg.icrl.verify.clone()) {
         Ok(v) => v,
+        Err(code) => return code,
+    };
+    cfg.icrl.skills = match skills_from_flags(args, cfg.icrl.skills.clone()) {
+        Ok(s) => s,
         Err(code) => return code,
     };
     cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
@@ -660,6 +683,10 @@ fn cmd_optimize(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    cfg.skills = match skills_from_flags(args, cfg.skills) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
     // Staged runs go through the verified entry point so memo verdicts
     // flow in (snapshot) and out (delta); the default path stays on the
     // plain driver, bit-identical to the pre-staging CLI.
@@ -722,6 +749,13 @@ fn cmd_optimize(args: &Args) -> i32 {
     ]);
     t.add_row(vec!["tokens".into(), run.tokens.total().to_string()]);
     t.add_row(vec!["states visited".into(), run.states_visited.to_string()]);
+    // Only surfaced when drawing is on — the default table is unchanged.
+    if cfg.skills.enabled {
+        t.add_row(vec![
+            "skills installed".into(),
+            kb_skills::count(&kb).to_string(),
+        ]);
+    }
     t.add_row(vec![
         "techniques applied".into(),
         run.best.applied.join(", "),
@@ -926,6 +960,26 @@ fn verify_from_flags(args: &Args, base: VerifyConfig) -> Result<VerifyConfig, i3
     Ok(verify)
 }
 
+/// Skill-drawing config from `--skills` / `--skill-max-len` /
+/// `--skill-min-support` / `--skill-min-gain` / `--skill-max-per-state`
+/// flags over a base (default or config-file) section, enforcing the
+/// same contract the config-file path validates. Flags only ever turn
+/// drawing on or tune the knobs — absent flags keep the base.
+fn skills_from_flags(args: &Args, base: SkillsConfig) -> Result<SkillsConfig, i32> {
+    let skills = SkillsConfig {
+        enabled: base.enabled || args.has("skills"),
+        max_len: args.usize_flag("skill-max-len", base.max_len),
+        min_support: args.usize_flag("skill-min-support", base.min_support),
+        min_gain: args.f64_flag("skill-min-gain", base.min_gain),
+        max_per_state: args.usize_flag("skill-max-per-state", base.max_per_state),
+    };
+    if let Err(e) = skills.validate() {
+        eprintln!("{e}");
+        return Err(2);
+    }
+    Ok(skills)
+}
+
 /// Parse `--epoch-policies a,b,c` into a per-epoch policy mix: each name
 /// becomes the batch policy with its `kind` replaced, so the shared
 /// hyperparameter flags (`--epsilon`, `--schedule`, …) apply to every
@@ -1090,6 +1144,7 @@ fn cmd_kb(args: &Args) -> i32 {
                 st.transferred.to_string(),
             ]);
             t.add_row(vec!["untried entries".into(), st.untried.to_string()]);
+            t.add_row(vec!["skills".into(), st.skills.to_string()]);
             t.add_row(vec!["parameter updates".into(), st.updates.to_string()]);
             t.add_row(vec![
                 "size".into(),
@@ -1215,8 +1270,126 @@ fn cmd_kb(args: &Args) -> i32 {
             );
             0
         }
+        Some("mine") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("kb mine: need --path FILE");
+                return 2;
+            };
+            let mut kb = match load_kb(path) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            };
+            let Some(arch) = GpuArch::by_name(args.flag("gpu").unwrap_or("H100")) else {
+                eprintln!("unknown GPU (known: A6000 A100 H100 L40S)");
+                return 2;
+            };
+            // Tasks whose rollouts supply the replay traces: --tasks or
+            // --jobs narrows; default is the whole suite.
+            let suite = Suite::full();
+            let ids: Vec<String> = if let Some(list) = args.flag("tasks") {
+                list.split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect()
+            } else if let Some(p) = args.flag("jobs") {
+                match parse_job_file(Path::new(p)) {
+                    Ok(ids) => ids,
+                    Err(e) => {
+                        eprintln!("kb mine: failed to read job file: {e}");
+                        return 1;
+                    }
+                }
+            } else {
+                suite.tasks.iter().map(|t| t.id.clone()).collect()
+            };
+            if ids.is_empty() {
+                eprintln!("kb mine: task list is empty");
+                return 2;
+            }
+            let mut tasks = Vec::with_capacity(ids.len());
+            for id in &ids {
+                match suite.by_id(id) {
+                    Some(t) => tasks.push(t),
+                    None => {
+                        eprintln!("kb mine: unknown task '{id}' (try `kernelblaster list`)");
+                        return 2;
+                    }
+                }
+            }
+            let scfg = match skills_from_flags(args, SkillsConfig::default()) {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            // The rollouts that produce the traces run with drawing off:
+            // mining compresses *single-technique* winning chains, and
+            // the miner skips composite skill-draw samples anyway.
+            let icfg = IcrlConfig {
+                trajectories: args.usize_flag("trajectories", 4),
+                rollout_steps: args.usize_flag("steps", 6),
+                seed: args.u64_flag("seed", 42),
+                ..Default::default()
+            };
+            let runs = icrl::run_suite(&tasks, &arch, &mut kb, &icfg);
+            let mined = kb_skills::mine_runs(&runs, &scfg);
+            let added = kb_skills::install(&mut kb, &mined);
+            let out = args.flag("out").unwrap_or(path);
+            if save_kb(&kb, out).is_err() {
+                return 1;
+            }
+            println!(
+                "mined {} chains over {} tasks -> {} new skills ({} installed total) at {out}",
+                mined.len(),
+                tasks.len(),
+                added,
+                kb_skills::count(&kb)
+            );
+            0
+        }
         _ => {
-            eprintln!("kb: need init|inspect|stats|merge|compact|transfer");
+            eprintln!("kb: need init|inspect|stats|merge|compact|transfer|mine");
+            2
+        }
+    }
+}
+
+/// `memo <compact>` — maintenance for persistent verification memos.
+fn cmd_memo(args: &Args) -> i32 {
+    match args.pos(1) {
+        Some("compact") => {
+            let Some(path) = args.flag("path") else {
+                eprintln!("memo compact: need --path FILE");
+                return 2;
+            };
+            let Some(max) = args.flag("max-entries").and_then(|v| v.parse::<usize>().ok())
+            else {
+                eprintln!("memo compact: need --max-entries N");
+                return 2;
+            };
+            let mut m = match memo::load(Path::new(path)) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("failed to load memo from {path}: {e}");
+                    return 1;
+                }
+            };
+            let before = m.len();
+            let evicted = m.compact(max);
+            // Compaction closes a recency era: entries recorded after
+            // this point outrank everything that survived it.
+            m.advance_epoch();
+            let out = args.flag("out").unwrap_or(path);
+            if let Err(e) = memo::save(&m, Path::new(out)) {
+                eprintln!("failed to save memo to {out}: {e}");
+                return 1;
+            }
+            println!(
+                "compacted memo {before} -> {} verdicts ({evicted} evicted) at {out}",
+                m.len()
+            );
+            0
+        }
+        _ => {
+            eprintln!("memo: need compact");
             2
         }
     }
@@ -1640,5 +1813,100 @@ mod tests {
     fn unknown_experiment_rejected() {
         assert_eq!(run(&argv("experiment nope")), 2);
         assert_eq!(run(&argv("experiment")), 2);
+    }
+
+    #[test]
+    fn optimize_skills_flags_select_and_validate() {
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 --skills"
+            )),
+            0
+        );
+        // Degenerate knob values are usage errors.
+        assert_eq!(
+            run(&argv("optimize --task L1/15_relu --skills --skill-max-len 1")),
+            2
+        );
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --skills --skill-min-support 0"
+            )),
+            2
+        );
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --skills --skill-max-per-state 0"
+            )),
+            2
+        );
+    }
+
+    #[test]
+    fn kb_mine_end_to_end() {
+        let dir = std::env::temp_dir().join("kb_cli_mine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let kb_path = dir.join("kb.json").to_str().unwrap().to_string();
+        assert_eq!(run(&argv(&format!("kb init --path {kb_path}"))), 0);
+        assert_eq!(
+            run(&argv(&format!(
+                "kb mine --path {kb_path} --gpu A100 --tasks L1/12_softmax,L1/15_relu \
+                 --trajectories 2 --steps 3 --skill-min-support 1 --skill-min-gain 1.0"
+            ))),
+            0
+        );
+        // The mined KB still loads, reports, and drives a skills-on run.
+        assert_eq!(run(&argv(&format!("kb stats --path {kb_path}"))), 0);
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2 \
+                 --kb {kb_path} --skills"
+            ))),
+            0
+        );
+        // Error paths.
+        assert_eq!(run(&argv("kb mine")), 2);
+        assert_eq!(
+            run(&argv(&format!("kb mine --path {kb_path} --tasks L9/nope"))),
+            2
+        );
+        assert_eq!(run(&argv("kb mine --path /nonexistent/x.json")), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn memo_compact_end_to_end() {
+        let dir = std::env::temp_dir().join("kb_cli_memo_compact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo_path = dir.join("memo.json");
+        let memo_s = memo_path.to_str().unwrap();
+        // Grow a memo with a staged run, then bound it.
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2 \
+                 --staged --memo {memo_s}"
+            ))),
+            0
+        );
+        let grown = memo::load(&memo_path).unwrap();
+        assert!(!grown.is_empty());
+        assert_eq!(
+            run(&argv(&format!(
+                "memo compact --path {memo_s} --max-entries 1"
+            ))),
+            0
+        );
+        let bounded = memo::load(&memo_path).unwrap();
+        assert!(bounded.len() <= 1, "bound not enforced: {}", bounded.len());
+        assert_eq!(bounded.epoch(), grown.epoch() + 1, "compaction closes an era");
+        // Error paths.
+        assert_eq!(run(&argv("memo compact")), 2);
+        assert_eq!(run(&argv(&format!("memo compact --path {memo_s}"))), 2);
+        assert_eq!(
+            run(&argv("memo compact --path /nonexistent/m.json --max-entries 5")),
+            1
+        );
+        assert_eq!(run(&argv("memo frobnicate")), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -14,7 +14,7 @@ use crate::agents::AgentConfig;
 use crate::gpu::GpuArch;
 use crate::harness::staged::VerifyConfig;
 use crate::harness::HarnessConfig;
-use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind, Schedule};
+use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind, Schedule, SkillsConfig};
 use crate::kb::lifecycle::TransferPolicy;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
@@ -213,6 +213,18 @@ impl RunConfig {
             }
             root.set("verify", verify);
         }
+        // Skill drawing: emitted only when something differs from the
+        // defaults, keeping pre-skills config files byte-stable.
+        if self.icrl.skills != SkillsConfig::default() {
+            let s = &self.icrl.skills;
+            let mut skills = JsonObj::new();
+            skills.set("enabled", s.enabled);
+            skills.set("max_len", s.max_len);
+            skills.set("min_support", s.min_support);
+            skills.set("min_gain", s.min_gain);
+            skills.set("max_per_state", s.max_per_state);
+            root.set("skills", skills);
+        }
         if let Some(p) = &self.kb_load {
             root.set("kb_load", p.as_str());
         }
@@ -375,6 +387,28 @@ impl RunConfig {
                 memo_path: v.get("memo").and_then(Json::as_str).map(String::from),
             };
         }
+        if let Some(s) = j.get("skills") {
+            let d = SkillsConfig::default();
+            cfg.icrl.skills = SkillsConfig {
+                enabled: s.get("enabled").and_then(Json::as_bool).unwrap_or(d.enabled),
+                max_len: s
+                    .get("max_len")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.max_len),
+                min_support: s
+                    .get("min_support")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.min_support),
+                min_gain: s
+                    .get("min_gain")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.min_gain),
+                max_per_state: s
+                    .get("max_per_state")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.max_per_state),
+            };
+        }
         cfg.kb_load = j.get("kb_load").and_then(Json::as_str).map(String::from);
         cfg.kb_save = j.get("kb_save").and_then(Json::as_str).map(String::from);
         if let Some(ws) = j.get("warm_start").and_then(Json::as_arr) {
@@ -422,6 +456,7 @@ impl RunConfig {
                 .map_err(|e| ConfigError::Invalid(format!("fleet.epoch_policies[{i}]: {e}")))?;
         }
         cfg.icrl.verify.validate().map_err(ConfigError::Invalid)?;
+        cfg.icrl.skills.validate().map_err(ConfigError::Invalid)?;
         cfg.resolve_arch()?;
         Ok(cfg)
     }
@@ -697,6 +732,48 @@ mod tests {
         let j = Json::parse(r#"{"verify":{"probe_seeds":0}}"#).unwrap();
         let err = RunConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("probe_seeds"), "{err}");
+    }
+
+    #[test]
+    fn skills_section_roundtrips_and_validates() {
+        // Absent section = defaults, and the default config emits no
+        // "skills" key at all — pre-skills config files stay byte-stable.
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert_eq!(plain.icrl.skills, SkillsConfig::default());
+        let default_text = RunConfig::default().to_json().to_string_pretty();
+        assert!(
+            !default_text.contains("\"skills\""),
+            "default config must not emit a skills section:\n{default_text}"
+        );
+        // Non-default section roundtrips every knob.
+        let cfg = RunConfig {
+            icrl: IcrlConfig {
+                skills: SkillsConfig {
+                    enabled: true,
+                    max_len: 4,
+                    min_support: 3,
+                    min_gain: 1.2,
+                    max_per_state: 2,
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.icrl.skills, cfg.icrl.skills);
+        // Partial section inherits the remaining defaults.
+        let j = Json::parse(r#"{"skills":{"enabled":true}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.icrl.skills.enabled);
+        assert_eq!(c.icrl.skills.max_len, SkillsConfig::default().max_len);
+        // Invalid knobs are rejected.
+        let j = Json::parse(r#"{"skills":{"max_len":1}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("max_len"), "{err}");
+        let j = Json::parse(r#"{"skills":{"min_support":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"skills":{"max_per_state":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Experiment registry: one regenerator per paper table/figure, plus the
 //! [`continual`] cross-arch lifecycle scenario, the [`fleet`]
 //! batch-serving throughput/parity scenario, the [`policy`] search-policy
-//! comparison, the [`sweep`] exploration-hyperparameter grid, and the
-//! [`verify`] tiered-verification op-count benchmark.
+//! comparison, the [`sweep`] exploration-hyperparameter grid, the
+//! [`verify`] tiered-verification op-count benchmark, and the [`skills`]
+//! mined-macro-opt efficiency scenario.
 //!
 //! Every entry produces a [`Report`] — human-readable tables/plots plus
 //! machine-readable CSVs — from the same code paths the CLI
@@ -20,6 +21,7 @@ pub mod fleet;
 pub mod hyperparams;
 pub mod learning;
 pub mod policy;
+pub mod skills;
 pub mod sweep;
 pub mod table3;
 pub mod verify;
@@ -260,6 +262,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("policy", policy::run),
         ("sweep", sweep::run),
         ("verify", verify::run),
+        ("skills", skills::run),
     ]
 }
 

@@ -1,0 +1,331 @@
+//! Skill-mining scenario: no-skills vs mined-skills arms on warm KBs.
+//!
+//! The claim under test is the [`crate::kb::skills`] contract: chains the
+//! miner compressed out of earlier runs' replay logs, drawn as single
+//! composite steps ([`crate::icrl::IcrlConfig::skills`]), reach the run's
+//! best kernel in fewer rollout steps without moving the speedup.
+//!
+//! Protocol, per seed:
+//!
+//! 1. **Warm phase** — grow a KB from empty over the task list (skills
+//!    off; the warm runs supply the replay traces).
+//! 2. **Mine + install** — [`crate::kb::skills::mine_runs`] over the warm
+//!    traces, installed into the warm KB as `origin: "mined"` entries.
+//! 3. **Paired arms** — two runs over clones of that mined KB at a fresh
+//!    eval seed, identical in everything except `skills.enabled`:
+//!    `no_skills` (the pairing baseline — the mined entries sit inert in
+//!    the KB) and `mined_skills` (policies may draw them).
+//!
+//! The efficiency metric is **mean steps-to-best** ([`TaskRun`]'s
+//! `steps_to_best`: the 1-based sample index that set the run's final
+//! best, averaged over cells that improved at all); quality parity is
+//! the paired geomean speedup ratio over both-valid cells. Reported as a
+//! [`Report`] plus machine-readable `BENCH_skills.json` (format
+//! `kernelblaster-bench-skills-v1`).
+
+use super::pairing::{self, Cell};
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{self, IcrlConfig, TaskRun};
+use crate::kb::skills::{self as kb_skills, SkillsConfig};
+use crate::kb::KnowledgeBase;
+use crate::tasks::{Level, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+
+/// One arm's measurements over the `(seed, task)` grid.
+struct Arm {
+    label: &'static str,
+    cells: Vec<Cell>,
+    /// Per-cell `steps_to_best` (0 = the run never improved on naive).
+    steps_to_best: Vec<usize>,
+    /// Chosen steps that applied a whole mined chain, summed over runs.
+    skill_draws: usize,
+}
+
+impl Arm {
+    /// Mean steps-to-best over cells that improved at all (0.0 when
+    /// none — consumers must check `improved_cells` first).
+    fn mean_steps_to_best(&self) -> f64 {
+        let improved: Vec<f64> = self
+            .steps_to_best
+            .iter()
+            .filter(|&&s| s > 0)
+            .map(|&s| s as f64)
+            .collect();
+        let n = improved.len();
+        improved.into_iter().sum::<f64>() / n.max(1) as f64
+    }
+
+    fn improved_cells(&self) -> usize {
+        self.steps_to_best.iter().filter(|&&s| s > 0).count()
+    }
+}
+
+/// The mining gates the experiment uses: the crate defaults with a
+/// looser gain floor so quick grids still surface chains (the default
+/// 1.05 floor is tuned for long production traces).
+fn mining_cfg() -> SkillsConfig {
+    SkillsConfig {
+        min_gain: 1.01,
+        ..Default::default()
+    }
+}
+
+fn collect_cells(runs: &[TaskRun], arm: &mut Arm) {
+    for run in runs {
+        arm.cells.push(Cell {
+            valid: run.valid,
+            speedup: run.speedup_vs_naive(),
+            tokens: run.tokens.total(),
+        });
+        arm.steps_to_best.push(run.steps_to_best);
+        arm.skill_draws += run
+            .steps
+            .iter()
+            .filter(|s| s.chosen && s.skill.is_some())
+            .count();
+    }
+}
+
+/// Run the full protocol: per seed, one warm+mine phase and both eval
+/// arms over clones of the same mined KB at a shifted eval seed.
+/// Returns (arms, total skills installed over every seed's KB).
+fn run_arms(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    base: &IcrlConfig,
+    seeds: &[u64],
+) -> (Vec<Arm>, usize) {
+    let mine = mining_cfg();
+    let mut no_skills = Arm {
+        label: "no_skills",
+        cells: Vec::new(),
+        steps_to_best: Vec::new(),
+        skill_draws: 0,
+    };
+    let mut mined_skills = Arm {
+        label: "mined_skills",
+        cells: Vec::new(),
+        steps_to_best: Vec::new(),
+        skill_draws: 0,
+    };
+    let mut installed = 0;
+    for &seed in seeds {
+        // Warm phase: grow the KB and keep its replay traces.
+        let warm_cfg = IcrlConfig {
+            seed,
+            ..base.clone()
+        };
+        let mut kb = KnowledgeBase::empty();
+        let warm_runs = icrl::run_suite(tasks, arch, &mut kb, &warm_cfg);
+        let mined = kb_skills::mine_runs(&warm_runs, &mine);
+        kb_skills::install(&mut kb, &mined);
+        installed += kb_skills::count(&kb);
+
+        // Eval arms: same mined KB, same fresh seed, drawing toggled.
+        let eval_seed = seed + 101;
+        for (on, arm) in [(false, &mut no_skills), (true, &mut mined_skills)] {
+            let cfg = IcrlConfig {
+                seed: eval_seed,
+                skills: SkillsConfig {
+                    enabled: on,
+                    ..mine.clone()
+                },
+                ..base.clone()
+            };
+            let mut akb = kb.clone();
+            let runs = icrl::run_suite(tasks, arch, &mut akb, &cfg);
+            collect_cells(&runs, arm);
+        }
+    }
+    (vec![no_skills, mined_skills], installed)
+}
+
+/// Serialize the measurement into `kernelblaster-bench-skills-v1`.
+fn write_bench_json(
+    arch: &GpuArch,
+    base: &IcrlConfig,
+    n_tasks: usize,
+    seeds: &[u64],
+    all: &[Arm],
+    installed: usize,
+    path: &Path,
+) {
+    let baseline = &all[0]; // run_arms() leads with "no_skills"
+    let mine = mining_cfg();
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-bench-skills-v1");
+    root.set("gpu", arch.name);
+    root.set("tasks", n_tasks);
+    root.set(
+        "seeds",
+        Json::Arr(seeds.iter().map(|&s| Json::from(s)).collect()),
+    );
+    root.set("trajectories", base.trajectories);
+    root.set("rollout_steps", base.rollout_steps);
+    root.set("mine_max_len", mine.max_len);
+    root.set("mine_min_support", mine.min_support);
+    root.set("mine_min_gain", mine.min_gain);
+    root.set("mine_max_per_state", mine.max_per_state);
+    root.set("skills_installed", installed);
+    let arms_json: Vec<Json> = all
+        .iter()
+        .map(|arm| {
+            let (ratio, pairs) = pairing::paired_vs(&arm.cells, &baseline.cells);
+            let mut o = JsonObj::new();
+            o.set("label", arm.label);
+            o.set("geomean_vs_naive", pairing::geomean_valid(&arm.cells));
+            o.set("valid", pairing::valid_count(&arm.cells));
+            o.set("cells", arm.cells.len());
+            o.set("vs_no_skills_paired", ratio);
+            o.set("paired_cells", pairs);
+            o.set("mean_steps_to_best", arm.mean_steps_to_best());
+            o.set("improved_cells", arm.improved_cells());
+            o.set("tokens_per_task", pairing::tokens_per_cell(&arm.cells));
+            o.set("skill_draws", arm.skill_draws);
+            Json::Obj(o)
+        })
+        .collect();
+    root.set("arms", Json::Arr(arms_json));
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: failed to write {}: {e}", path.display()),
+    }
+}
+
+/// The `skills` experiment with an explicit JSON output path.
+pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
+    let arch = GpuArch::h100();
+    let base = ctx.icrl_cfg(false);
+    let seeds: Vec<u64> = if ctx.quick {
+        vec![ctx.seed, ctx.seed + 1]
+    } else {
+        vec![ctx.seed, ctx.seed + 1, ctx.seed + 2]
+    };
+    let tasks = ctx.tasks(Level::L1);
+    let (all, installed) = run_arms(&tasks, &arch, &base, &seeds);
+    let baseline = &all[0];
+
+    let mut t = Table::new(&[
+        "arm",
+        "geomean vs naive",
+        "vs no_skills (paired)",
+        "valid",
+        "mean steps-to-best",
+        "improved cells",
+        "skill draws",
+    ]);
+    for arm in &all {
+        let (ratio, pairs) = pairing::paired_vs(&arm.cells, &baseline.cells);
+        t.add_row(vec![
+            arm.label.to_string(),
+            fnum(pairing::geomean_valid(&arm.cells), 3),
+            format!("{} ({pairs} pairs)", fnum(ratio, 3)),
+            format!("{}/{}", pairing::valid_count(&arm.cells), arm.cells.len()),
+            fnum(arm.mean_steps_to_best(), 2),
+            arm.improved_cells().to_string(),
+            arm.skill_draws.to_string(),
+        ]);
+    }
+    write_bench_json(&arch, &base, tasks.len(), &seeds, &all, installed, out);
+    Report {
+        name: "skills".into(),
+        sections: vec![Section {
+            title: format!(
+                "Mined skills on warm KBs over paired seeds ({} L1 tasks x {} seeds, {}, {} skills installed)",
+                tasks.len(),
+                seeds.len(),
+                arch.name,
+                installed
+            ),
+            table: t,
+            plot: None,
+            notes: vec![
+                "both arms run the same mined KB at the same eval seed; only \
+                 skills.enabled differs, so cell pairs isolate the composite-draw \
+                 path"
+                    .to_string(),
+                "steps-to-best is the 1-based sample index that set the run's \
+                 final best kernel, averaged over cells that improved at all — \
+                 the search-depth analog of wall-clock on a container with no GPU"
+                    .to_string(),
+                "speedup parity is expected: skills reorder the search, the full \
+                 oracle still gates every commit"
+                    .to_string(),
+                format!("machine-readable: {}", out.display()),
+            ],
+        }],
+    }
+}
+
+/// The `skills` experiment registry entry — writes `BENCH_skills.json`
+/// beside the working directory like the policy and verify scenarios.
+pub fn run(ctx: &Ctx) -> Report {
+    run_with_output(ctx, Path::new("BENCH_skills.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Suite;
+
+    #[test]
+    fn skills_experiment_pairs_arms_and_reports_steps_to_best() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+            suite.by_id("L1/01_matmul_square").unwrap(),
+        ];
+        let base = IcrlConfig {
+            trajectories: 3,
+            rollout_steps: 4,
+            top_k: 2,
+            ..Default::default()
+        };
+        let arch = GpuArch::h100();
+        let seeds = [7u64, 8];
+        let (all, installed) = run_arms(&tasks, &arch, &base, &seeds);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].label, "no_skills");
+        assert_eq!(all[1].label, "mined_skills");
+        for arm in &all {
+            assert_eq!(arm.cells.len(), 6, "{}: 3 tasks x 2 seeds", arm.label);
+            assert_eq!(arm.steps_to_best.len(), arm.cells.len());
+            assert!(pairing::valid_count(&arm.cells) > 0, "{}", arm.label);
+        }
+        // The baseline never draws skills even though they sit in its KB.
+        assert_eq!(all[0].skill_draws, 0, "drawing must stay gated off");
+        assert!(installed > 0, "warm traces must mine at least one skill");
+
+        // The JSON artifact parses and carries both arms with the
+        // steps-to-best metric.
+        let dir = std::env::temp_dir().join("kb_skills_exp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_skills.json");
+        write_bench_json(&arch, &base, tasks.len(), &seeds, &all, installed, &out);
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(
+            j.get("format").and_then(Json::as_str),
+            Some("kernelblaster-bench-skills-v1")
+        );
+        let arms_json = j.get("arms").and_then(Json::as_arr).unwrap();
+        assert_eq!(arms_json.len(), 2);
+        assert_eq!(
+            arms_json[0].get("label").and_then(Json::as_str),
+            Some("no_skills")
+        );
+        assert_eq!(
+            arms_json[0].get("vs_no_skills_paired").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        for a in arms_json {
+            assert!(a.get("mean_steps_to_best").is_some());
+            assert!(a.get("improved_cells").and_then(Json::as_usize).is_some());
+            assert!(a.get("skill_draws").and_then(Json::as_usize).is_some());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

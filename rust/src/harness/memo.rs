@@ -38,6 +38,20 @@
 //! checkpoints. Parse → serialize is the identity on every v1 document
 //! this crate writes. Corrupt or missing files degrade to a cold (empty)
 //! memo with a stderr notice — a damaged cache must never fail a run.
+//!
+//! # Compaction (bounded growth)
+//!
+//! Left alone the memo only grows. [`VerifyMemo::compact`] enforces a
+//! size bound by evicting non-`pass` verdicts first (cheap to
+//! rediscover — a failed candidate just fails again), then passes, both
+//! in least-recently-hit order (the `last_hit` epoch, ties by key).
+//! Recency is tracked by a caller-advanced epoch counter
+//! ([`VerifyMemo::advance_epoch`]) — the fleet never advances it on its
+//! own, so worker-count invariance and sequential parity are untouched.
+//! Both the root `epoch` and per-entry `last_hit` serialize as
+//! **strictly optional** fields, emitted only when non-zero: every
+//! pre-compaction document, and every memo that never advances its
+//! epoch, stays byte-identical on the wire.
 
 use super::{HarnessConfig, Outcome};
 use crate::kir::schedule::{MemLayout, Schedule, Tiling};
@@ -122,13 +136,24 @@ impl MemoVerdict {
     }
 }
 
+/// A stored verdict plus the recency stamp compaction orders by.
+#[derive(Debug, Clone, PartialEq)]
+struct MemoSlot {
+    verdict: MemoVerdict,
+    /// Epoch of the most recent insert/re-encounter of this key. Stays 0
+    /// unless the caller advances the epoch, keeping legacy wire bytes.
+    last_hit: u64,
+}
+
 /// The persistent candidate-verification memo: verdicts keyed by the
 /// canonical content hash of (task id, candidate, harness fingerprint).
 /// Sorted storage keeps serialization byte-stable regardless of insert
 /// order — the fleet's worker-count-invariance anchor.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct VerifyMemo {
-    entries: BTreeMap<String, MemoVerdict>,
+    entries: BTreeMap<String, MemoSlot>,
+    /// Caller-advanced recency clock; stamps `last_hit` on insert.
+    epoch: u64,
 }
 
 impl VerifyMemo {
@@ -149,20 +174,49 @@ impl VerifyMemo {
 
     /// Look up the verdict for a candidate key.
     pub fn get(&self, key: &str) -> Option<&MemoVerdict> {
-        self.entries.get(key)
+        self.entries.get(key).map(|s| &s.verdict)
+    }
+
+    /// The current recency epoch (0 until [`Self::advance_epoch`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Tick the recency clock. Strictly caller-driven: `kernelblaster
+    /// memo compact` advances once per compaction (closing an "era" — runs
+    /// between compactions stamp the new epoch); the fleet and the driver
+    /// never call this, so all their equality/byte-stability contracts
+    /// hold trivially at epoch 0.
+    pub fn advance_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// The `last_hit` epoch recorded for a key (tests and tooling).
+    pub fn last_hit(&self, key: &str) -> Option<u64> {
+        self.entries.get(key).map(|s| s.last_hit)
     }
 
     /// Record a verdict. Insert-or-ignore: verdicts are deterministic
     /// functions of their key, so the first record is as good as any
     /// later one and commit order can never change the memo's content.
+    /// A re-encounter of an existing key refreshes its `last_hit` stamp
+    /// (monotonically — commit order still cannot change the memo).
     /// Returns true when the key was new.
     pub fn insert(&mut self, key: String, verdict: MemoVerdict) -> bool {
+        let epoch = self.epoch;
         match self.entries.entry(key) {
             std::collections::btree_map::Entry::Vacant(v) => {
-                v.insert(verdict);
+                v.insert(MemoSlot {
+                    verdict,
+                    last_hit: epoch,
+                });
                 true
             }
-            std::collections::btree_map::Entry::Occupied(_) => false,
+            std::collections::btree_map::Entry::Occupied(mut o) => {
+                let slot = o.get_mut();
+                slot.last_hit = slot.last_hit.max(epoch);
+                false
+            }
         }
     }
 
@@ -175,7 +229,38 @@ impl VerifyMemo {
 
     /// Iterate entries in key order (tests and serialization).
     pub fn iter(&self) -> impl Iterator<Item = (&str, &MemoVerdict)> {
-        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+        self.entries.iter().map(|(k, s)| (k.as_str(), &s.verdict))
+    }
+
+    /// Enforce a size bound, returning how many entries were evicted.
+    ///
+    /// Eviction order: non-`pass` verdicts first (a failed candidate
+    /// simply fails verification again — the cheapest knowledge to
+    /// rediscover), then passes; within each class least-recently-hit
+    /// first (`last_hit` ascending), ties broken by key so the result is
+    /// deterministic for any insertion history.
+    pub fn compact(&mut self, max_entries: usize) -> usize {
+        if self.entries.len() <= max_entries {
+            return 0;
+        }
+        let excess = self.entries.len() - max_entries;
+        let mut order: Vec<(bool, u64, String)> = self
+            .entries
+            .iter()
+            .map(|(k, s)| {
+                (
+                    matches!(s.verdict, MemoVerdict::Pass),
+                    s.last_hit,
+                    k.clone(),
+                )
+            })
+            .collect();
+        // (false, …) sorts before (true, …): failures evict first.
+        order.sort();
+        for (_, _, key) in order.into_iter().take(excess) {
+            self.entries.remove(&key);
+        }
+        excess
     }
 }
 
@@ -379,18 +464,24 @@ pub enum MemoError {
 }
 
 /// Serialize a memo into the ordered-JSON v1 document (entries sorted by
-/// key — byte-stable for any insertion history).
+/// key — byte-stable for any insertion history). The recency fields
+/// (`epoch`, `last_hit`) are emitted only when non-zero, so documents
+/// written before compaction existed — and memos that never advance
+/// their epoch — reproduce the original v1 bytes exactly.
 pub fn to_json(memo: &VerifyMemo) -> Json {
     let mut root = JsonObj::new();
     root.set("format", "kernelblaster-memo-v1");
+    if memo.epoch > 0 {
+        root.set("epoch", memo.epoch);
+    }
     let entries: Vec<Json> = memo
         .entries
         .iter()
-        .map(|(key, verdict)| {
+        .map(|(key, slot)| {
             let mut o = JsonObj::new();
             o.set("key", key.as_str());
-            o.set("verdict", verdict.kind_name());
-            match verdict {
+            o.set("verdict", slot.verdict.kind_name());
+            match &slot.verdict {
                 MemoVerdict::Pass => {}
                 MemoVerdict::CompileError(reason) | MemoVerdict::SoftRejected(reason) => {
                     o.set("reason", reason.as_str());
@@ -399,6 +490,9 @@ pub fn to_json(memo: &VerifyMemo) -> Json {
                     o.set("seed", *seed);
                     o.set("max_abs_diff_bits", max_abs_diff.to_bits());
                 }
+            }
+            if slot.last_hit > 0 {
+                o.set("last_hit", slot.last_hit);
             }
             Json::Obj(o)
         })
@@ -418,6 +512,11 @@ pub fn from_json(j: &Json) -> Result<VerifyMemo, MemoError> {
         return Err(bad(&format!("unknown format '{fmt}'")));
     }
     let mut memo = VerifyMemo::new();
+    if let Some(ej) = j.get("epoch") {
+        memo.epoch = ej
+            .as_f64()
+            .ok_or_else(|| bad("epoch must be a number"))? as u64;
+    }
     for ej in j
         .get("entries")
         .and_then(Json::as_arr)
@@ -463,7 +562,15 @@ pub fn from_json(j: &Json) -> Result<VerifyMemo, MemoError> {
             }
             other => return Err(bad(&format!("unknown verdict '{other}'"))),
         };
-        memo.insert(key.to_string(), verdict);
+        let last_hit = match ej.get("last_hit") {
+            Some(lj) => lj
+                .as_f64()
+                .ok_or_else(|| bad("last_hit must be a number"))? as u64,
+            None => 0,
+        };
+        memo.entries
+            .entry(key.to_string())
+            .or_insert(MemoSlot { verdict, last_hit });
     }
     Ok(memo)
 }
@@ -654,6 +761,117 @@ mod tests {
         std::fs::write(&path, r#"{"format":"other","entries":[]}"#).unwrap();
         assert!(matches!(load(&path), Err(MemoError::Schema(_))));
         assert!(load_or_cold(&path).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn epoch_zero_memo_emits_no_recency_fields() {
+        // Every pre-compaction document — and every memo whose epoch was
+        // never advanced — must keep the original v1 bytes exactly.
+        let m = sample_memo();
+        let text = to_json(&m).to_string_pretty();
+        assert!(!text.contains("epoch"), "epoch-0 memo leaked an epoch field");
+        assert!(!text.contains("last_hit"), "zero last_hit leaked to the wire");
+    }
+
+    #[test]
+    fn recency_fields_roundtrip_byte_stably() {
+        let mut m = VerifyMemo::new();
+        m.insert("aaaa".into(), MemoVerdict::Pass);
+        m.advance_epoch();
+        m.advance_epoch();
+        m.insert("bbbb".into(), MemoVerdict::CompileError("late".into()));
+        assert_eq!(m.epoch(), 2);
+        assert_eq!(m.last_hit("aaaa"), Some(0));
+        assert_eq!(m.last_hit("bbbb"), Some(2));
+
+        let first = to_json(&m).to_string_pretty();
+        assert!(first.contains("\"epoch\""));
+        assert!(first.contains("\"last_hit\""));
+        let back = from_json(&Json::parse(&first).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(to_json(&back).to_string_pretty(), first);
+    }
+
+    #[test]
+    fn reencounter_refreshes_last_hit_monotonically() {
+        let mut m = VerifyMemo::new();
+        m.insert("aa".into(), MemoVerdict::Pass);
+        m.advance_epoch();
+        // Re-encounter at epoch 1: verdict ignored, recency refreshed.
+        assert!(!m.insert("aa".into(), MemoVerdict::CompileError("x".into())));
+        assert_eq!(m.get("aa"), Some(&MemoVerdict::Pass));
+        assert_eq!(m.last_hit("aa"), Some(1));
+        // Replaying a delta never rolls recency back either.
+        let delta = MemoDelta {
+            added: vec![("aa".into(), MemoVerdict::Pass)],
+        };
+        m.apply_delta(&delta);
+        assert_eq!(m.last_hit("aa"), Some(1));
+    }
+
+    #[test]
+    fn compact_evicts_failures_first_then_lru_passes() {
+        let mut m = VerifyMemo::new();
+        m.insert("p_old".into(), MemoVerdict::Pass);
+        m.insert("f_old".into(), MemoVerdict::CompileError("a".into()));
+        m.advance_epoch();
+        m.insert("p_new".into(), MemoVerdict::Pass);
+        m.insert("f_new".into(), MemoVerdict::SoftRejected("b".into()));
+        assert_eq!(m.len(), 4);
+
+        // Bound not exceeded → no-op.
+        assert_eq!(m.compact(4), 0);
+        assert_eq!(m.len(), 4);
+
+        // Evict one: the oldest failure goes, every pass survives.
+        assert_eq!(m.compact(3), 1);
+        assert!(m.get("f_old").is_none());
+        assert!(m.get("f_new").is_some());
+        assert!(m.get("p_old").is_some() && m.get("p_new").is_some());
+
+        // Evict down to one: remaining failure first, then the LRU pass.
+        assert_eq!(m.compact(1), 2);
+        assert!(m.get("f_new").is_none());
+        assert!(m.get("p_old").is_none());
+        assert_eq!(m.get("p_new"), Some(&MemoVerdict::Pass));
+    }
+
+    #[test]
+    fn compact_ties_break_by_key_deterministically() {
+        let mut m1 = VerifyMemo::new();
+        for k in ["cc", "aa", "bb", "dd"] {
+            m1.insert(k.into(), MemoVerdict::Pass);
+        }
+        let mut m2 = VerifyMemo::new();
+        for k in ["dd", "bb", "aa", "cc"] {
+            m2.insert(k.into(), MemoVerdict::Pass);
+        }
+        assert_eq!(m1.compact(2), 2);
+        assert_eq!(m2.compact(2), 2);
+        assert_eq!(
+            to_json(&m1).to_string_pretty(),
+            to_json(&m2).to_string_pretty()
+        );
+        // All-equal recency: lexicographically smallest keys evict first.
+        assert!(m1.get("aa").is_none() && m1.get("bb").is_none());
+        assert!(m1.get("cc").is_some() && m1.get("dd").is_some());
+    }
+
+    #[test]
+    fn compacted_memo_save_is_byte_stable() {
+        let dir = std::env::temp_dir().join("kb_memo_compact_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memo.json");
+        let mut m = sample_memo();
+        m.advance_epoch();
+        m.insert("ffffffffffffffff".into(), MemoVerdict::Pass);
+        m.compact(3);
+        save(&m, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded, m);
+        save(&loaded, &path).unwrap();
+        assert_eq!(load(&path).unwrap(), m);
         std::fs::remove_dir_all(&dir).ok();
     }
 

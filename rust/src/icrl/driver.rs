@@ -44,9 +44,24 @@
 //! `greedy_topk` policy reproduces the pre-policy-subsystem driver
 //! **bit-identically**: frontier node 0 uses the historical
 //! `explore-t{traj}-s{step}` stream label and its selection is the
-//! unchanged `kb::weighted_top_k` draw, so RNG consumption is
-//! byte-for-byte the same (asserted by `tests/policy.rs` against a
-//! reference reimplementation of the pre-refactor loop).
+//! unchanged `kb::weighted_top_k` draw (in its index-returning form,
+//! same RNG stream), so RNG consumption is byte-for-byte the same
+//! (asserted by `tests/policy.rs` against a reference reimplementation
+//! of the pre-refactor loop).
+//!
+//! # Mined skills (§skills)
+//!
+//! With [`IcrlConfig::skills`] enabled, each state's mined chains
+//! ([`crate::kb::skills`]) join the selection pool as composite
+//! candidates appended after the plain opts; a policy that picks one
+//! triggers the multi-link apply path ([`evaluate_skill_pick`]): every
+//! link is lowered in sequence on the evolving candidate and the end
+//! state is verified once, so a whole §5 prep→compute sequence costs
+//! one step. Skill evidence lands on the KB's composite entries (in
+//! pick order, preserving parallel/sequential bit-identity) and skill
+//! samples are excluded from the single-technique replay buffer. Off —
+//! the default — the pool is exactly the scored enumeration and the
+//! driver is bit-identical to the pre-skills build (`tests/skills.rs`).
 
 use super::policy::PolicyConfig;
 use crate::agents::lowering;
@@ -57,7 +72,8 @@ use crate::harness::memo::{MemoDelta, MemoVerdict, VerifyMemo};
 use crate::harness::staged::{self, StagedRequest, TierStats, VerifyConfig};
 use crate::harness::{self, HarnessConfig, Outcome, VerifyCache};
 use crate::kb::lifecycle::{self, KbDelta, TransferPolicy};
-use crate::kb::{KnowledgeBase, StateSig, WorkloadClass};
+use crate::kb::skills::SkillsConfig;
+use crate::kb::{self, KnowledgeBase, ScoredCandidate, StateSig, WorkloadClass};
 use crate::kir::interp;
 use crate::opts::{Candidate, Technique};
 use crate::tasks::Task;
@@ -107,6 +123,13 @@ pub struct IcrlConfig {
     /// bit-identical to the pre-staging driver (asserted by
     /// `tests/staged.rs`).
     pub verify: VerifyConfig,
+    /// Mined-skill drawing ([`crate::kb::skills`]). Off by default: the
+    /// candidate pool is exactly the KB's scored enumeration and the
+    /// driver is bit-identical to the pre-skills build (asserted by
+    /// `tests/skills.rs`). When enabled, the state's mined skills join
+    /// the pool as composite candidates and a pick may apply a whole
+    /// chain in one step.
+    pub skills: SkillsConfig,
 }
 
 impl Default for IcrlConfig {
@@ -123,6 +146,7 @@ impl Default for IcrlConfig {
             policy: PolicyConfig::default(),
             seed: 42,
             verify: VerifyConfig::default(),
+            skills: SkillsConfig::default(),
         }
     }
 }
@@ -150,6 +174,13 @@ pub struct StepLog {
     /// chosen action — the others were explored and discarded). The §5
     /// transition analysis follows chosen actions only.
     pub chosen: bool,
+    /// `Some(chain)` when this sample drew a mined skill and applied the
+    /// whole chain in one step ([`crate::kb::skills`]); `technique` then
+    /// holds the chain's first link and `gain` the end-to-end chain
+    /// gain. `None` for every single-technique sample (and always when
+    /// `IcrlConfig::skills` is off). The miner skips skill-draw samples
+    /// so skills never re-mine their own output.
+    pub skill: Option<Vec<Technique>>,
 }
 
 /// Result of optimizing one task.
@@ -171,6 +202,11 @@ pub struct TaskRun {
     pub states_visited: usize,
     /// True if the task produced at least one valid optimized kernel.
     pub valid: bool,
+    /// 1-based index (into `steps`, evaluation order) of the sample that
+    /// set the run's final best time; 0 when no sample beat the naive
+    /// baseline. The `experiment skills` time-to-solution metric: mined
+    /// skills should reach the run's best in fewer samples.
+    pub steps_to_best: usize,
 }
 
 impl TaskRun {
@@ -194,7 +230,7 @@ fn cycles_only_sig(graph: &crate::kir::KernelGraph) -> StateSig {
 /// the technique, the KB expectation recorded into the replay buffer,
 /// the fusion group the lowering targets, and the frontier node's
 /// profiled time (the tier-0 screen's dominance reference).
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 struct PickPlan {
     tech: Technique,
     expected: f64,
@@ -202,6 +238,10 @@ struct PickPlan {
     /// The frontier node's `report.total_time_s` — what the staged
     /// pipeline's static screen compares candidate estimates against.
     node_time: f64,
+    /// `Some(chain)` when this pick draws a mined skill: the full
+    /// technique chain to apply in one step (`tech` is its first link).
+    /// `None` for every single-technique pick.
+    chain: Option<Vec<Technique>>,
 }
 
 /// One pick's evaluation result, produced by [`evaluate_pick`] on either
@@ -221,6 +261,10 @@ struct PickEval {
     memo_records: Vec<(String, MemoVerdict)>,
     /// Tier activity of this pick (all-zero when staging is off).
     tiers: TierStats,
+    /// The mined-skill chain this pick applied (`None` for plain picks).
+    /// Carried so the merge loop can log it, record skill evidence, and
+    /// keep the sample out of the single-technique replay buffer.
+    chain: Option<Vec<Technique>>,
 }
 
 /// Read-only inputs shared by every pick evaluation of a step: the task,
@@ -272,6 +316,9 @@ struct StepOutcome {
 /// and token meter so picks can run concurrently yet merge
 /// deterministically.
 fn evaluate_pick(ctx: &EvalCtx<'_>, cand: &Candidate, plan: &PickPlan, mut rng: Rng) -> PickEval {
+    if let Some(chain) = plan.chain.as_deref() {
+        return evaluate_skill_pick(ctx, cand, plan, chain, rng);
+    }
     let cfg = ctx.cfg;
     let mut meter = TokenMeter::new();
     let mut outcome: Option<(Candidate, Outcome)> = None;
@@ -336,6 +383,117 @@ fn evaluate_pick(ctx: &EvalCtx<'_>, cand: &Candidate, plan: &PickPlan, mut rng: 
         meter,
         memo_records,
         tiers,
+        chain: None,
+    }
+}
+
+/// Apply a mined-skill chain as one pick: lower every link in sequence
+/// on the evolving candidate, then verify the **end state** once. The
+/// chain's realized gain is an end-to-end measurement against the
+/// frontier node (exactly how the miner scored it — a product of
+/// per-link gains telescopes to end-over-start), so intermediate links
+/// are lowering-only: verifying them would multiply the oracle cost of
+/// a pick by the chain length for verdicts nothing consumes. Each link
+/// retries compile failures on its own slice of the retry budget; a
+/// link whose technique stops being applicable on the evolved candidate
+/// (or exhausts its retries) fails the whole pick (`outcome: None`),
+/// mirroring a plain pick that never lowered. Self-contained like
+/// [`evaluate_pick`]: own RNG stream, own meter, deterministic merge.
+fn evaluate_skill_pick(
+    ctx: &EvalCtx<'_>,
+    cand: &Candidate,
+    plan: &PickPlan,
+    chain: &[Technique],
+    mut rng: Rng,
+) -> PickEval {
+    let cfg = ctx.cfg;
+    let mut meter = TokenMeter::new();
+    let mut outcome: Option<(Candidate, Outcome)> = None;
+    let mut retries = 0;
+    let mut memo_records: Vec<(String, MemoVerdict)> = Vec::new();
+    let mut tiers = TierStats::default();
+    let mut interp_ctx = interp::ExecContext::new();
+    let mut current = cand.clone();
+    'links: for (li, &tech) in chain.iter().enumerate() {
+        // Link 0 targets the group planned at selection time (the
+        // node's dominant kernel where applicable); later links re-site
+        // on the evolved candidate — there is no profile for the
+        // intermediate program, so applicability is the only signal.
+        let group = if li == 0 {
+            plan.group
+        } else {
+            match tech.applicable_anywhere(&current) {
+                Some(g) => g,
+                None => break 'links, // chain no longer applies here
+            }
+        };
+        let last = li + 1 == chain.len();
+        let mut advanced = false;
+        for attempt in 0..=cfg.agent.retry_limit {
+            retries += if attempt > 0 { 1 } else { 0 };
+            let lowered = lowering::lower(
+                tech, &current, group, &cfg.agent, attempt, &mut meter, &mut rng,
+            );
+            let Some(c) = lowered.into_candidate() else {
+                continue; // compile fail → retry this link
+            };
+            if !last {
+                current = c;
+                advanced = true;
+                break;
+            }
+            // Final link: the one harness run of the whole pick.
+            let res = if cfg.verify.staged {
+                let staged_out = staged::run_staged_in(
+                    &StagedRequest {
+                        task: ctx.task,
+                        cand: &c,
+                        arch: ctx.arch,
+                        cfg: &cfg.harness,
+                        verify: &cfg.verify,
+                        best_time_s: plan.node_time,
+                        cache: Some(ctx.cache),
+                        memo: ctx.memo,
+                    },
+                    &mut interp_ctx,
+                    &mut rng,
+                );
+                tiers.add(&staged_out.stats);
+                if let Some(rec) = staged_out.memo_record {
+                    memo_records.push(rec);
+                }
+                staged_out.outcome
+            } else {
+                harness::run_cached_in(
+                    ctx.task,
+                    &c,
+                    ctx.arch,
+                    &cfg.harness,
+                    Some(ctx.cache),
+                    &mut interp_ctx,
+                    &mut rng,
+                )
+            };
+            let ok = res.is_ok();
+            outcome = Some((c, res));
+            advanced = true;
+            if ok {
+                break;
+            }
+        }
+        if !advanced {
+            break; // link exhausted its retries without lowering
+        }
+    }
+    PickEval {
+        tech: plan.tech,
+        expected: plan.expected,
+        outcome,
+        retries,
+        meter,
+        memo_records,
+        tiers,
+        chain: Some(chain.to_vec()),
     }
 }
 
@@ -451,6 +609,10 @@ fn optimize_task_core(
     let mut best = naive.clone();
     let mut best_time = naive_time;
     let mut any_valid = false;
+    // 1-based log index of the sample that set the final best (0 =
+    // never improved). A pure function of data the run already
+    // produces, so tracking it is invisible to every existing output.
+    let mut steps_to_best = 0usize;
 
     // Staged verification: the run's working memo (snapshot + everything
     // learned so far this run) and the delta going back to the caller.
@@ -518,8 +680,32 @@ fn optimize_task_core(
                 }
                 any_applicable = true;
                 kb.ensure_candidates(state_idx, &applicable);
-                let scored = kb.scored_candidates(state_idx, |t| applicable.contains(&t));
-                let picks = policy.select(&scored, cfg.top_k, &mut rng);
+                let mut pool = kb.scored_candidates(state_idx, |t| applicable.contains(&t));
+                // Skills on: the state's mined chains join the pool as
+                // composite candidates (appended after the plain opts,
+                // so the opt indices — and the skills-off pool — are
+                // untouched). A chain is drawn only when its first link
+                // is applicable here; later links re-check applicability
+                // on the evolving candidate inside the pick.
+                if cfg.skills.enabled {
+                    for (si, sk) in kb.states[state_idx].skills.iter().enumerate() {
+                        let Some(&lead) = sk.techniques.first() else {
+                            continue; // defensive: empty chains never mine
+                        };
+                        if !applicable.contains(&lead) {
+                            continue;
+                        }
+                        pool.push(ScoredCandidate {
+                            technique: lead,
+                            expected_gain: sk.expected_gain,
+                            attempts: sk.attempts,
+                            successes: sk.successes,
+                            weight: kb::selection_weight(sk.expected_gain),
+                            skill: Some(si),
+                        });
+                    }
+                }
+                let picks = policy.select_indices(&pool, cfg.top_k, &mut rng);
 
                 // --- explore each pick ---
                 // Per-pick context is fixed up front: KB expectation and
@@ -539,11 +725,8 @@ fn optimize_task_core(
                     .unwrap_or(0);
                 let pick_info: Vec<PickPlan> = picks
                     .iter()
-                    .map(|&tech| {
-                        let expected = kb.states[state_idx]
-                            .opt_index(tech)
-                            .map(|i| kb.states[state_idx].opts[i].expected_gain)
-                            .unwrap_or(tech.prior_gain());
+                    .map(|&pi| {
+                        let tech = pool[pi].technique;
                         let group = if cfg.cycles_only {
                             tech.applicable_anywhere(&node.cand).unwrap_or(0)
                         } else if tech.applicable(&node.cand, dominant_group) {
@@ -551,11 +734,29 @@ fn optimize_task_core(
                         } else {
                             tech.applicable_anywhere(&node.cand).unwrap_or(0)
                         };
+                        if let Some(si) = pool[pi].skill {
+                            // A mined chain: the KB's composite entry is
+                            // the expectation; the plan sites link 0 on
+                            // the dominant group like a plain pick.
+                            let sk = &kb.states[state_idx].skills[si];
+                            return PickPlan {
+                                tech,
+                                expected: sk.expected_gain,
+                                group,
+                                node_time: node.time,
+                                chain: Some(sk.techniques.clone()),
+                            };
+                        }
+                        let expected = kb.states[state_idx]
+                            .opt_index(tech)
+                            .map(|i| kb.states[state_idx].opts[i].expected_gain)
+                            .unwrap_or(tech.prior_gain());
                         PickPlan {
                             tech,
                             expected,
                             group,
                             node_time: node.time,
+                            chain: None,
                         }
                     })
                     .collect();
@@ -618,6 +819,7 @@ fn optimize_task_core(
                         meter,
                         memo_records,
                         tiers,
+                        chain,
                     } = eval;
                     tokens.merge(&meter);
                     tier_stats.add(&tiers);
@@ -654,16 +856,26 @@ fn optimize_task_core(
                         }
                         _ => (false, 0.0, 1.0, 1.0, sig.primary),
                     };
-                    replay.push(Sample {
-                        state: sig,
-                        technique: tech,
-                        expected_gain: expected,
-                        measured_gain: gain,
-                        valid,
-                        occupancy: occ,
-                        utilization: util,
-                        new_primary,
-                    });
+                    match &chain {
+                        // Skill picks stay out of the single-technique
+                        // replay buffer — a chain's end-to-end gain
+                        // credited to its first link would corrupt that
+                        // opt's EMA. Their evidence lands on the KB's
+                        // composite entry instead, in pick order (the
+                        // canonical merge order, so parallel and
+                        // sequential exploration stay bit-identical).
+                        Some(c) => kb.update_skill(state_idx, c, gain),
+                        None => replay.push(Sample {
+                            state: sig,
+                            technique: tech,
+                            expected_gain: expected,
+                            measured_gain: gain,
+                            valid,
+                            occupancy: occ,
+                            utilization: util,
+                            new_primary,
+                        }),
+                    }
                     steps.push(StepLog {
                         trajectory: traj,
                         step,
@@ -674,6 +886,7 @@ fn optimize_task_core(
                         gain,
                         retries,
                         chosen: false,
+                        skill: chain,
                     });
                 }
             }
@@ -707,6 +920,7 @@ fn optimize_task_core(
                 if fastest.time < best_time {
                     best_time = fastest.time;
                     best = fastest.cand.clone();
+                    steps_to_best = fastest.log_index + 1;
                 }
                 let mut order: Vec<usize> = (0..outcomes.len()).collect();
                 order.sort_by(|&a, &b| {
@@ -776,6 +990,7 @@ fn optimize_task_core(
         steps,
         states_visited: visited.len(),
         valid: any_valid,
+        steps_to_best,
     };
     (run, memo_delta, tier_stats)
 }
@@ -1341,6 +1556,71 @@ mod tests {
         assert_eq!(kb_a, kb_b);
         assert!(delta.is_empty());
         assert_eq!(tiers, TierStats::default());
+    }
+
+    #[test]
+    fn skill_draws_apply_whole_chains_and_record_composite_evidence() {
+        use crate::kb::SkillEntry;
+        let suite = Suite::full();
+        let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+        let arch = GpuArch::h100();
+        // Grow states cold, then hand a high-expectation mined chain to
+        // every state so the weighted draw is all but certain to pull
+        // it at least once across the run.
+        let mut kb = KnowledgeBase::empty();
+        let _ = optimize_task(task, &arch, &mut kb, &quick_cfg(), 0);
+        for s in &mut kb.states {
+            s.skills.push(SkillEntry {
+                techniques: vec![
+                    Technique::SharedMemoryTiling,
+                    Technique::VectorizedAccess,
+                ],
+                expected_gain: 6.0,
+                support: 3,
+                attempts: 0,
+                successes: 0,
+                last_gain: 1.0,
+                origin: Some(crate::kb::MINED_ORIGIN.to_string()),
+            });
+        }
+        let cfg_on = IcrlConfig {
+            skills: SkillsConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            ..quick_cfg()
+        };
+        let mut kb1 = kb.clone();
+        let r1 = optimize_task(task, &arch, &mut kb1, &cfg_on, 1);
+        let mut kb2 = kb.clone();
+        let r2 = optimize_task(task, &arch, &mut kb2, &cfg_on, 1);
+        assert_eq!(r1, r2, "skills-on run not reproducible");
+        assert_eq!(kb1, kb2);
+        assert!(r1.valid);
+        let skill_draws: Vec<_> = r1.steps.iter().filter(|s| s.skill.is_some()).collect();
+        assert!(
+            !skill_draws.is_empty(),
+            "a 6x-expectation chain was never drawn"
+        );
+        for s in &skill_draws {
+            let chain = s.skill.as_ref().unwrap();
+            assert_eq!(s.technique, chain[0], "log carries the lead link");
+            assert!(chain.len() >= 2);
+        }
+        // Evidence landed on the composite entries, not the lead opts'
+        // replay buffer: every skill attempt in the KB came from a draw.
+        let skill_attempts: usize = kb1
+            .states
+            .iter()
+            .flat_map(|s| &s.skills)
+            .map(|k| k.attempts)
+            .sum();
+        assert_eq!(skill_attempts, skill_draws.len());
+        // steps_to_best points at a real sample that set the best time.
+        if r1.steps_to_best > 0 {
+            let s = &r1.steps[r1.steps_to_best - 1];
+            assert!(s.valid && s.chosen);
+        }
     }
 
     #[test]

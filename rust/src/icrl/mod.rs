@@ -46,6 +46,13 @@
 //! persistent cross-run memo ([`crate::harness::memo`]) replays verdicts
 //! for candidates any earlier run already verified. The full oracle
 //! remains the only committing gate — see [`crate::harness::staged`].
+//!
+//! Step 4 can also draw **mined skills** ([`IcrlConfig::skills`], CLI
+//! `--skills`): composite technique chains the [`crate::kb::skills`]
+//! miner compressed out of earlier runs' replay logs join the candidate
+//! pool, and a single pick applies the whole chain (lowering every link,
+//! verifying once at the end) — see the driver's §skills docs. Off by
+//! default and bit-identical off.
 
 #![deny(missing_docs)]
 
@@ -64,3 +71,5 @@ pub use policy::{
     BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, Portfolio, Schedule,
     SearchPolicy, Thompson, UcbBandit,
 };
+
+pub use crate::kb::skills::SkillsConfig;

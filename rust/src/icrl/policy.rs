@@ -15,9 +15,12 @@
 //! Per rollout step, for each frontier node, the driver hands the policy
 //! the KB's **scored candidate enumeration** for the node's current
 //! state ([`crate::kb::KnowledgeBase::scored_candidates`] — deterministic,
-//! insertion-ordered, RNG-free) plus the step's pick budget `k` and the
-//! task's main RNG stream. The policy returns up to `k` **distinct**
-//! techniques to explore ([`SearchPolicy::select`]). The transition rule
+//! insertion-ordered, RNG-free; with skills enabled the driver appends
+//! mined-skill candidates after the plain opts) plus the step's pick
+//! budget `k` and the task's main RNG stream. The policy returns up to
+//! `k` **distinct** candidate indices to explore
+//! ([`SearchPolicy::select_indices`]; [`SearchPolicy::select`] is the
+//! technique-level view of the same draw). The transition rule
 //! is declared by [`SearchPolicy::beam_width`]: after every pick of
 //! every frontier node is evaluated, the driver keeps the best
 //! `beam_width` *distinct* valid outcomes (ranked by step gain relative
@@ -180,6 +183,16 @@ impl Schedule {
 
 /// A search policy: candidate selection plus the step transition rule.
 /// See the module docs for the full contract.
+///
+/// Policies select **indices** into the candidate slice
+/// ([`Self::select_indices`]) rather than techniques, because with
+/// skills enabled the driver's pool can hold two candidates sharing a
+/// lead technique (a plain opt and a mined chain starting with it —
+/// [`ScoredCandidate::skill`]); an index names a candidate
+/// unambiguously where a technique no longer does. [`Self::select`] is
+/// the technique-level view of the same draw, kept for callers that
+/// work over plain `scored_candidates` enumerations (where techniques
+/// are distinct and the two views are interchangeable).
 pub trait SearchPolicy {
     /// Stable name (CLI/config/report identifier).
     fn name(&self) -> &'static str;
@@ -191,10 +204,22 @@ pub trait SearchPolicy {
         1
     }
 
-    /// Choose up to `k` distinct techniques to explore from the state's
-    /// scored candidate enumeration. `candidates` is never empty when the
-    /// driver calls this; order is KB insertion order.
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique>;
+    /// Choose up to `k` distinct candidate indices to explore from the
+    /// state's scored candidate enumeration. `candidates` is never empty
+    /// when the driver calls this; order is KB insertion order (with any
+    /// skill candidates appended by the driver after the plain opts).
+    /// RNG consumption is a pure function of (candidates, k, rng state).
+    fn select_indices(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng)
+        -> Vec<usize>;
+
+    /// [`Self::select_indices`] mapped to techniques — same draw, same
+    /// RNG consumption, technique-level result.
+    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+        self.select_indices(candidates, k, rng)
+            .into_iter()
+            .map(|i| candidates[i].technique)
+            .collect()
+    }
 }
 
 /// The paper's §3 rule and the crate's default: weighted draw without
@@ -209,8 +234,13 @@ impl SearchPolicy for GreedyTopK {
         "greedy_topk"
     }
 
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
-        kb::weighted_top_k(candidates, k, rng)
+    fn select_indices(
+        &self,
+        candidates: &[ScoredCandidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        kb::weighted_top_k_indices(candidates, k, rng)
     }
 }
 
@@ -241,7 +271,12 @@ impl SearchPolicy for EpsilonGreedy {
         "epsilon_greedy"
     }
 
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+    fn select_indices(
+        &self,
+        candidates: &[ScoredCandidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
         let evidence: usize = candidates.iter().map(|c| c.attempts).sum();
         let epsilon = self.schedule.apply(self.epsilon, evidence);
         let mut remaining: Vec<usize> = (0..candidates.len()).collect();
@@ -261,7 +296,7 @@ impl SearchPolicy for EpsilonGreedy {
                     remaining.iter().map(|&ci| candidates[ci].weight).collect();
                 rng.weighted_index(&weights)
             };
-            picked.push(candidates[remaining[pos]].technique);
+            picked.push(remaining[pos]);
             remaining.remove(pos);
         }
         picked
@@ -308,7 +343,12 @@ impl SearchPolicy for UcbBandit {
         "ucb_bandit"
     }
 
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, _rng: &mut Rng) -> Vec<Technique> {
+    fn select_indices(
+        &self,
+        candidates: &[ScoredCandidate],
+        k: usize,
+        _rng: &mut Rng,
+    ) -> Vec<usize> {
         let total: usize = candidates.iter().map(|c| c.attempts).sum();
         let c_eff = self.schedule.apply(self.c, total);
         let mut idx: Vec<usize> = (0..candidates.len()).collect();
@@ -318,7 +358,7 @@ impl SearchPolicy for UcbBandit {
                 .then(a.cmp(&b))
         });
         idx.truncate(k);
-        idx.into_iter().map(|i| candidates[i].technique).collect()
+        idx
     }
 }
 
@@ -378,7 +418,12 @@ impl SearchPolicy for Thompson {
         "thompson"
     }
 
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+    fn select_indices(
+        &self,
+        candidates: &[ScoredCandidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
         let mut scored: Vec<(usize, f64)> = candidates
             .iter()
             .enumerate()
@@ -396,7 +441,7 @@ impl SearchPolicy for Thompson {
             .collect();
         scored.sort_by(|x, y| y.1.total_cmp(&x.1).then(x.0.cmp(&y.0)));
         scored.truncate(k);
-        scored.into_iter().map(|(i, _)| candidates[i].technique).collect()
+        scored.into_iter().map(|(i, _)| i).collect()
     }
 }
 
@@ -422,8 +467,13 @@ impl SearchPolicy for BeamSearch {
         self.width.max(1)
     }
 
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
-        kb::weighted_top_k(candidates, k, rng)
+    fn select_indices(
+        &self,
+        candidates: &[ScoredCandidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        kb::weighted_top_k_indices(candidates, k, rng)
     }
 }
 
@@ -465,20 +515,19 @@ pub struct Portfolio {
 }
 
 impl Portfolio {
-    /// Evidence-backed score of a pick set: mean confidence-weighted
-    /// expected advantage over parity. 0.0 for an empty set or a fully
-    /// untried state.
-    fn trust(picks: &[Technique], candidates: &[ScoredCandidate]) -> f64 {
+    /// Evidence-backed score of a pick set (candidate indices): mean
+    /// confidence-weighted expected advantage over parity. 0.0 for an
+    /// empty set or a fully untried state.
+    fn trust(picks: &[usize], candidates: &[ScoredCandidate]) -> f64 {
         if picks.is_empty() {
             return 0.0;
         }
         let mut sum = 0.0;
-        for t in picks {
-            if let Some(c) = candidates.iter().find(|c| c.technique == *t) {
-                if c.expected_gain.is_finite() {
-                    let confidence = c.attempts as f64 / (c.attempts as f64 + 1.0);
-                    sum += confidence * (c.expected_gain - 1.0);
-                }
+        for &i in picks {
+            let c = &candidates[i];
+            if c.expected_gain.is_finite() {
+                let confidence = c.attempts as f64 / (c.attempts as f64 + 1.0);
+                sum += confidence * (c.expected_gain - 1.0);
             }
         }
         sum / picks.len() as f64
@@ -490,12 +539,17 @@ impl SearchPolicy for Portfolio {
         "portfolio"
     }
 
-    fn select(&self, candidates: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+    fn select_indices(
+        &self,
+        candidates: &[ScoredCandidate],
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
         let mut explore_rng = rng.derive("portfolio-explore");
         let mut exploit_rng = rng.derive("portfolio-exploit");
         let _ = rng.next_u64(); // fixed one-draw parent cost (see docs)
-        let explore_picks = self.explore.select(candidates, k, &mut explore_rng);
-        let exploit_picks = self.exploit.select(candidates, k, &mut exploit_rng);
+        let explore_picks = self.explore.select_indices(candidates, k, &mut explore_rng);
+        let exploit_picks = self.exploit.select_indices(candidates, k, &mut exploit_rng);
         let exploit_leads = Self::trust(&exploit_picks, candidates)
             > Self::trust(&explore_picks, candidates);
         let (lead, other) = if exploit_leads {
@@ -508,7 +562,7 @@ impl SearchPolicy for Portfolio {
         // first-pick priority at each rank.
         let queues = [lead.as_slice(), other.as_slice()];
         let mut pos = [0usize; 2];
-        let mut picked: Vec<Technique> = Vec::with_capacity(k.min(candidates.len()));
+        let mut picked: Vec<usize> = Vec::with_capacity(k.min(candidates.len()));
         while picked.len() < k {
             let mut advanced = false;
             for (m, queue) in queues.iter().enumerate() {
@@ -516,10 +570,10 @@ impl SearchPolicy for Portfolio {
                     break;
                 }
                 while pos[m] < queue.len() {
-                    let t = queue[pos[m]];
+                    let i = queue[pos[m]];
                     pos[m] += 1;
-                    if !picked.contains(&t) {
-                        picked.push(t);
+                    if !picked.contains(&i) {
+                        picked.push(i);
                         advanced = true;
                         break;
                     }
@@ -740,6 +794,32 @@ mod tests {
             assert_eq!(a, b, "seed {seed}");
             // Identical RNG consumption, not just identical picks.
             assert_eq!(r1, r2, "seed {seed}: rng streams diverged");
+        }
+    }
+
+    #[test]
+    fn select_and_select_indices_agree_draw_for_draw() {
+        let (kbase, state) = pool();
+        let scored = kbase.scored_candidates(state, |_| true);
+        for kind in PolicyKind::all() {
+            let policy = PolicyConfig::of_kind(*kind).build();
+            for seed in 0..10u64 {
+                let mut r1 = Rng::new(seed);
+                let mut r2 = Rng::new(seed);
+                let idx = policy.select_indices(&scored, 3, &mut r1);
+                let techs = policy.select(&scored, 3, &mut r2);
+                assert_eq!(
+                    idx.iter().map(|&i| scored[i].technique).collect::<Vec<_>>(),
+                    techs,
+                    "{}: index and technique views diverged",
+                    policy.name()
+                );
+                assert_eq!(r1, r2, "{}: rng streams diverged", policy.name());
+                let mut d = idx.clone();
+                d.sort_unstable();
+                d.dedup();
+                assert_eq!(d.len(), idx.len(), "{}: duplicate indices", policy.name());
+            }
         }
     }
 
@@ -1044,11 +1124,16 @@ mod tests {
         let scored = kbase.scored_candidates(state, |_| true);
         // The evidence-backed winner (4 attempts at gain ≈ 2.5) trusts
         // higher than any untried set.
-        let confident = Portfolio::trust(&[Technique::SharedMemoryTiling], &scored);
-        let untried: Vec<Technique> = scored
+        let winner = scored
             .iter()
-            .filter(|c| c.attempts == 0)
-            .map(|c| c.technique)
+            .position(|c| c.technique == Technique::SharedMemoryTiling)
+            .unwrap();
+        let confident = Portfolio::trust(&[winner], &scored);
+        let untried: Vec<usize> = scored
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.attempts == 0)
+            .map(|(i, _)| i)
             .take(2)
             .collect();
         assert!(!untried.is_empty());

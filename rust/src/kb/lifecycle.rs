@@ -31,6 +31,13 @@
 //!   transitions); entries another delta of the same epoch already
 //!   touched fold by the [`merge`] evidence rule instead.
 //!
+//! Mined composite skills ([`super::SkillEntry`], see [`super::skills`])
+//! are first-class citizens of every operation: they merge by the same
+//! evidence-weighted rule (weight = native attempts + mining support),
+//! compact under the same domination/protection policy, demote to priors
+//! on transfer with their `"mined"` provenance intact, and commit through
+//! the delta protocol keyed by their technique chain.
+//!
 //! All of these are deterministic pure functions over in-memory KBs; the
 //! results round-trip through the `kernelblaster-kb-v1` wire format
 //! ([`super::persist`]) byte-stably. Algebraic contracts (checked by
@@ -41,7 +48,7 @@
 //! `compact` is idempotent; `apply_delta ∘ extract_delta` is the identity
 //! on unconflicted bases.
 
-use super::{KnowledgeBase, OptEntry, StateEntry, StateSig, MAX_NOTES};
+use super::{KnowledgeBase, OptEntry, SkillEntry, StateEntry, StateSig, MAX_NOTES};
 use crate::gpu::GpuArch;
 
 /// Tunables for [`compact`].
@@ -118,6 +125,34 @@ fn merge_opt(into: &mut OptEntry, from: &OptEntry) {
     }
 }
 
+/// Fold `from`'s evidence into `into` (same state, same technique chain).
+///
+/// The skill analogue of [`merge_opt`]: evidence weight is
+/// `attempts + support` (a freshly mined skill's weight is its mining
+/// support; a drawn skill's weight grows with native attempts), counts
+/// add, `last_gain` follows the draw-evidence-heavier side, and
+/// provenance survives only on agreement — two `"mined"` sides stay
+/// `"mined"`.
+fn merge_skill(into: &mut SkillEntry, from: &SkillEntry) {
+    let (wa, wb) = (
+        (into.attempts + into.support) as f64,
+        (from.attempts + from.support) as f64,
+    );
+    if wa + wb > 0.0 {
+        into.expected_gain =
+            (into.expected_gain * wa + from.expected_gain * wb) / (wa + wb);
+    }
+    if from.attempts > into.attempts {
+        into.last_gain = from.last_gain;
+    }
+    into.attempts += from.attempts;
+    into.successes += from.successes;
+    into.support += from.support;
+    if into.origin != from.origin {
+        into.origin = None;
+    }
+}
+
 /// Fold `from`'s record into an existing state entry.
 fn merge_state(into: &mut StateEntry, from: &StateEntry) {
     into.visits += from.visits;
@@ -125,6 +160,12 @@ fn merge_state(into: &mut StateEntry, from: &StateEntry) {
         match into.opt_index(o.technique) {
             Some(i) => merge_opt(&mut into.opts[i], o),
             None => into.push_opt(o.clone()),
+        }
+    }
+    for k in &from.skills {
+        match into.skill_index(&k.techniques) {
+            Some(i) => merge_skill(&mut into.skills[i], k),
+            None => into.skills.push(k.clone()),
         }
     }
 }
@@ -211,6 +252,33 @@ pub fn compact(kb: &KnowledgeBase, policy: &CompactPolicy) -> KnowledgeBase {
             }
             entry.push_opt(o);
         }
+        // Skills compact under the same rule, with evidence measured as
+        // attempts + mining support (a freshly mined skill's only
+        // evidence is its support) and the same best-gain/best-evidence
+        // protection.
+        let best_sk_gain = s
+            .skills
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.expected_gain.total_cmp(&b.1.expected_gain))
+            .map(|(i, _)| i);
+        let best_sk_evidence = s
+            .skills
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, k)| k.attempts + k.support)
+            .map(|(i, _)| i);
+        for (i, k) in s.skills.iter().enumerate() {
+            entries_total += 1;
+            let protected = Some(i) == best_sk_gain || Some(i) == best_sk_evidence;
+            let dominated = k.attempts + k.support >= policy.min_attempts
+                && k.expected_gain < policy.gain_floor;
+            if dominated && !protected {
+                continue;
+            }
+            kept_total += 1;
+            entry.skills.push(k.clone());
+        }
         out.insert_state(entry);
     }
     out.lineage.push(format!(
@@ -264,6 +332,21 @@ pub fn transfer(
             match entry.opt_index(o.technique) {
                 Some(i) => merge_opt(&mut entry.opts[i], &o),
                 None => entry.push_opt(o),
+            }
+        }
+        // Skills demote to priors the same way; existing provenance (the
+        // `"mined"` kind, or an earlier source arch) survives the hop —
+        // only provenance-less skills pick up the source arch mark.
+        for k in &s.skills {
+            let mut k = k.clone();
+            k.expected_gain = 1.0 + (k.expected_gain - 1.0) * policy.decay;
+            k.attempts = 0;
+            k.successes = 0;
+            k.last_gain = 1.0;
+            k.origin.get_or_insert_with(|| from.name.to_string());
+            match entry.skill_index(&k.techniques) {
+                Some(i) => merge_skill(&mut entry.skills[i], &k),
+                None => entry.skills.push(k),
             }
         }
         match out.find_state(sig) {
@@ -483,6 +566,44 @@ pub fn apply_delta(shared: &mut KnowledgeBase, delta: &KbDelta) {
                 }
             }
         }
+        // Skills commit by the same replay-or-fold rule, keyed by the
+        // technique chain.
+        for gk in &sd.grown.skills {
+            let bk = sd
+                .base
+                .as_ref()
+                .and_then(|b| b.skill_index(&gk.techniques).map(|k| &b.skills[k]));
+            let entry = &mut shared.states[si];
+            let j = match entry.skill_index(&gk.techniques) {
+                Some(j) => j,
+                None => {
+                    entry.skills.push(gk.clone());
+                    continue;
+                }
+            };
+            match bk {
+                Some(bk) if bk == gk => {} // untouched by this run
+                Some(bk) if entry.skills[j] == *bk => {
+                    entry.skills[j] = gk.clone();
+                }
+                _ => {
+                    let (ba, bs_, bsup) =
+                        bk.map_or((0, 0, 0), |b| (b.attempts, b.successes, b.support));
+                    let evidence = SkillEntry {
+                        techniques: gk.techniques.clone(),
+                        expected_gain: gk.expected_gain,
+                        support: gk.support.saturating_sub(bsup),
+                        attempts: gk.attempts.saturating_sub(ba),
+                        successes: gk.successes.saturating_sub(bs_),
+                        last_gain: gk.last_gain,
+                        origin: gk.origin.clone(),
+                    };
+                    if evidence.attempts > 0 || evidence.support > 0 {
+                        merge_skill(&mut entry.skills[j], &evidence);
+                    }
+                }
+            }
+        }
     }
     shared.updates += delta.updates_added;
     if delta.arch.is_some() {
@@ -506,6 +627,8 @@ pub struct KbStats {
     pub transferred: usize,
     /// Entries with no native evidence yet (attempts == 0).
     pub untried: usize,
+    /// Mined composite skills installed across all states.
+    pub skills: usize,
     /// Parameter updates integrated over the KB's lifetime.
     pub updates: usize,
     /// Serialized footprint in bytes.
@@ -523,6 +646,7 @@ pub fn stats(kb: &KnowledgeBase) -> KbStats {
     let mut successes = 0;
     let mut transferred = 0;
     let mut untried = 0;
+    let mut skills = 0;
     for s in &kb.states {
         for o in &s.opts {
             entries += 1;
@@ -535,6 +659,7 @@ pub fn stats(kb: &KnowledgeBase) -> KbStats {
                 untried += 1;
             }
         }
+        skills += s.skills.len();
     }
     KbStats {
         states: kb.states.len(),
@@ -543,6 +668,7 @@ pub fn stats(kb: &KnowledgeBase) -> KbStats {
         successes,
         transferred,
         untried,
+        skills,
         updates: kb.updates,
         size_bytes: kb.size_bytes(),
         arch: kb.arch.clone(),
@@ -847,6 +973,123 @@ mod tests {
         assert_eq!(new_notes(&v(&["a", "b"]), &v(&["a", "b"])), v(&[]));
         // No overlap: everything is new.
         assert_eq!(new_notes(&v(&["a"]), &v(&["b"])), v(&["b"]));
+    }
+
+    fn mined_skill(gain: f64, support: usize) -> SkillEntry {
+        SkillEntry {
+            techniques: vec![Technique::MixedPrecision, Technique::TensorCoreUtilization],
+            expected_gain: gain,
+            support,
+            attempts: 0,
+            successes: 0,
+            last_gain: 1.0,
+            origin: Some(crate::kb::MINED_ORIGIN.to_string()),
+        }
+    }
+
+    #[test]
+    fn merge_skills_weighs_by_support_and_attempts() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut a = kb_with(s, &[(Technique::FastMath, 1.2, 1)]);
+        let mut b = a.clone();
+        a.states[0].skills.push(mined_skill(2.0, 3));
+        b.states[0].skills.push(mined_skill(1.0, 1));
+        let m = merge(&[a, b]);
+        assert_eq!(m.states[0].skills.len(), 1);
+        let k = &m.states[0].skills[0];
+        // (2.0·3 + 1.0·1) / 4 = 1.75, support adds, provenance agrees.
+        assert!((k.expected_gain - 1.75).abs() < 1e-12);
+        assert_eq!(k.support, 4);
+        assert_eq!(k.origin.as_deref(), Some("mined"));
+    }
+
+    #[test]
+    fn skills_survive_merge_compact_transfer_with_provenance() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut kb = kb_with(s, &[(Technique::SharedMemoryTiling, 2.0, 4)]);
+        kb.states[0].skills.push(mined_skill(2.4, 2));
+        kb.arch = Some("A6000".into());
+        let merged = merge(&[kb.clone(), kb.clone()]);
+        let compacted = compact(&merged, &CompactPolicy::default());
+        let transferred = transfer(
+            &compacted,
+            &GpuArch::a6000(),
+            &GpuArch::h100(),
+            &TransferPolicy::default(),
+        );
+        assert_eq!(transferred.states.len(), 1);
+        let k = &transferred.states[0].skills[0];
+        assert_eq!(
+            k.techniques,
+            vec![Technique::MixedPrecision, Technique::TensorCoreUtilization]
+        );
+        // The mined kind survives every hop; transfer demotes evidence.
+        assert_eq!(k.origin.as_deref(), Some("mined"));
+        assert_eq!(k.attempts, 0);
+        assert_eq!(k.support, 4, "merge doubled the mining support");
+        // 1 + (2.4 − 1)·0.5 = 1.7 after the transfer decay.
+        assert!((k.expected_gain - 1.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compact_prunes_dominated_skills_but_protects_best() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut kb = kb_with(s, &[(Technique::FastMath, 1.5, 2)]);
+        let mut losing = mined_skill(0.7, 5); // dominated, less evidence
+        losing.techniques = vec![Technique::LoopUnrolling, Technique::FastMath];
+        kb.states[0].skills.push(mined_skill(2.0, 6)); // best gain+evidence → kept
+        kb.states[0].skills.push(losing);
+        let c = compact(&kb, &CompactPolicy::default());
+        assert_eq!(c.states[0].skills.len(), 1);
+        assert!((c.states[0].skills[0].expected_gain - 2.0).abs() < 1e-12);
+        // Idempotent with skills present too.
+        let c2 = compact(&c, &CompactPolicy::default());
+        assert_eq!(c2.states, c.states);
+    }
+
+    #[test]
+    fn delta_replays_skill_evidence_exactly_and_folds_conflicts() {
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let mut base = kb_with(s, &[(Technique::FastMath, 1.4, 2)]);
+        base.states[0].skills.push(mined_skill(2.4, 2));
+        let chain = base.states[0].skills[0].techniques.clone();
+        // Unconflicted replay: one run draws the skill twice.
+        let mut grown = base.clone();
+        grown.update_skill(0, &chain, 2.0);
+        grown.update_skill(0, &chain, 3.0);
+        let delta = extract_delta(&base, &grown);
+        assert_eq!(delta.states.len(), 1);
+        let mut replayed = base.clone();
+        apply_delta(&mut replayed, &delta);
+        assert_eq!(replayed, grown);
+        // Conflict: two runs draw from the same snapshot; counts add.
+        let grow = |gain: f64| {
+            let mut g = base.clone();
+            g.update_skill(0, &chain, gain);
+            g
+        };
+        let (ga, gb) = (grow(3.0), grow(1.0));
+        let mut shared = base.clone();
+        apply_delta(&mut shared, &extract_delta(&base, &ga));
+        apply_delta(&mut shared, &extract_delta(&base, &gb));
+        let k = &shared.states[0].skills[0];
+        assert_eq!(k.attempts, 2);
+        assert_eq!(k.successes, 1);
+        assert!(k.expected_gain.is_finite());
+        // A brand-new skill discovered by a run lands in shared.
+        let mut gnew = base.clone();
+        gnew.states[0].skills.push(SkillEntry {
+            techniques: vec![Technique::SharedMemoryTiling, Technique::MemoryCoalescing],
+            expected_gain: 1.8,
+            support: 2,
+            attempts: 0,
+            successes: 0,
+            last_gain: 1.0,
+            origin: Some(crate::kb::MINED_ORIGIN.to_string()),
+        });
+        let mut shared2 = base.clone();
+        apply_delta(&mut shared2, &extract_delta(&base, &gnew));
+        assert_eq!(shared2, gnew);
     }
 
     #[test]

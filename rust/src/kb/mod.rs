@@ -48,6 +48,7 @@
 
 pub mod lifecycle;
 pub mod persist;
+pub mod skills;
 
 use crate::gpu::Bottleneck;
 use crate::kir::KernelGraph;
@@ -230,13 +231,71 @@ impl OptEntry {
     }
 }
 
+/// A mined macro-optimization ("skill"): a short technique chain that won
+/// repeatedly from one state, stored as a first-class composite entry.
+/// The `techniques` vector is the provenance pointer to the constituent
+/// single-technique opts; `origin` records the `Mined` kind (and, after a
+/// [`lifecycle::transfer`], the arch the evidence came from). Strictly
+/// optional on the wire — pre-skills `kernelblaster-kb-v1` documents
+/// serialize byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkillEntry {
+    /// The constituent techniques, applied in order as one composite step.
+    pub techniques: Vec<Technique>,
+    /// Expected end-to-end chain speedup (EMA of realized chain gains;
+    /// starts at the mining pass's evidence-weighted realized gain).
+    pub expected_gain: f64,
+    /// Mining occurrences backing this skill (how many winning trajectory
+    /// windows exhibited the chain).
+    pub support: usize,
+    /// Times this skill was drawn and applied as a composite step (native
+    /// evidence only; lifecycle `transfer` resets it).
+    pub attempts: usize,
+    /// Composite applications that measured a real gain (>1.01×).
+    pub successes: usize,
+    /// Most recent measured end-to-end chain gain.
+    pub last_gain: f64,
+    /// Provenance kind: `Some("mined")` when produced by the mining pass;
+    /// transfer folds the source arch in. `None` only for hand-built
+    /// entries. Optional on the wire.
+    pub origin: Option<String>,
+}
+
+/// The origin string stamped on skills produced by [`skills::mine`] —
+/// the wire spelling of the `Mined` provenance kind.
+pub const MINED_ORIGIN: &str = "mined";
+
+impl SkillEntry {
+    /// Integrate a measured end-to-end chain gain (same EMA discipline as
+    /// [`OptEntry::update`], including the non-finite guard).
+    pub fn update(&mut self, measured_gain: f64) {
+        debug_assert!(
+            measured_gain.is_finite(),
+            "non-finite measured skill gain {measured_gain}"
+        );
+        let measured_gain = if measured_gain.is_finite() {
+            measured_gain
+        } else {
+            0.0
+        };
+        self.attempts += 1;
+        if measured_gain > 1.01 {
+            self.successes += 1;
+        }
+        self.expected_gain =
+            (1.0 - SCORE_ALPHA) * self.expected_gain + SCORE_ALPHA * measured_gain;
+        self.last_gain = measured_gain;
+    }
+}
+
 /// One entry of a state's scored candidate enumeration
 /// ([`KnowledgeBase::scored_candidates`]): the snapshot of evidence a
 /// search policy ([`crate::icrl::policy`]) ranks and draws from. A plain
 /// value — copying it out of the KB decouples selection from KB mutation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ScoredCandidate {
-    /// The candidate optimization.
+    /// The candidate optimization (for a skill candidate: the chain's
+    /// first technique, kept for display/filter purposes).
     pub technique: Technique,
     /// Expected speedup (EMA; the paper's predicted performance gain).
     pub expected_gain: f64,
@@ -247,6 +306,11 @@ pub struct ScoredCandidate {
     /// Precomputed weighted-draw mass ([`selection_weight`]); finite and
     /// positive by construction.
     pub weight: f64,
+    /// `Some(i)` when this candidate is the state's `skills[i]` composite
+    /// entry rather than a single-technique opt. `None` for every entry of
+    /// [`KnowledgeBase::scored_candidates`] — the driver appends skill
+    /// candidates itself when the skills feature is enabled.
+    pub skill: Option<usize>,
 }
 
 /// Selection weight of an expected gain: gain above parity, floored so
@@ -277,6 +341,18 @@ pub fn selection_weight(expected_gain: f64) -> f64 {
 /// remaining-candidate list instead of being rebuilt every draw; the rng
 /// sees the exact same weight sequence either way.
 pub fn weighted_top_k(pool: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<Technique> {
+    weighted_top_k_indices(pool, k, rng)
+        .into_iter()
+        .map(|i| pool[i].technique)
+        .collect()
+}
+
+/// Index-returning form of [`weighted_top_k`]: same draw, same RNG stream,
+/// but the picks come back as pool indices. This is the primitive the
+/// policy subsystem selects through — with skill candidates in the pool,
+/// two entries can share a leading technique, so an index (not a
+/// technique) is the only unambiguous pick identity.
+pub fn weighted_top_k_indices(pool: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<usize> {
     if pool.is_empty() {
         return Vec::new();
     }
@@ -285,7 +361,7 @@ pub fn weighted_top_k(pool: &[ScoredCandidate], k: usize, rng: &mut Rng) -> Vec<
     let mut picked = Vec::new();
     while picked.len() < k && !remaining.is_empty() {
         let wi = rng.weighted_index(&weights);
-        picked.push(pool[remaining[wi]].technique);
+        picked.push(remaining[wi]);
         remaining.remove(wi);
         weights.remove(wi);
     }
@@ -299,6 +375,10 @@ pub struct StateEntry {
     pub sig: StateSig,
     /// Scored optimization candidates, in discovery order.
     pub opts: Vec<OptEntry>,
+    /// Mined composite entries ([`SkillEntry`]), in mining order. Almost
+    /// always empty — populated only by [`skills::install`] (or a loaded
+    /// document carrying the optional `skills` wire field).
+    pub skills: Vec<SkillEntry>,
     /// Times this state was matched.
     pub visits: usize,
     /// Technique → index into `opts` (§Perf: O(1) score lookups). Derived;
@@ -313,6 +393,7 @@ impl StateEntry {
         StateEntry {
             sig,
             opts: Vec::new(),
+            skills: Vec::new(),
             visits: 0,
             tech_index: HashMap::new(),
         }
@@ -327,6 +408,12 @@ impl StateEntry {
     /// Index into `opts` for a technique, if recorded.
     pub fn opt_index(&self, t: Technique) -> Option<usize> {
         self.tech_index.get(&t).copied()
+    }
+
+    /// Index into `skills` for a technique chain, if recorded. Linear —
+    /// skill lists are short by construction (mining caps them per state).
+    pub fn skill_index(&self, chain: &[Technique]) -> Option<usize> {
+        self.skills.iter().position(|s| s.techniques == chain)
     }
 }
 
@@ -461,6 +548,7 @@ impl KnowledgeBase {
                 attempts: o.attempts,
                 successes: o.successes,
                 weight: selection_weight(o.expected_gain),
+                skill: None,
             })
             .collect()
     }
@@ -502,6 +590,20 @@ impl KnowledgeBase {
                 o.update(measured_gain, note);
                 entry.push_opt(o);
             }
+        }
+    }
+
+    /// Evidence update for a composite skill draw: folds the measured
+    /// end-to-end chain gain into the state's matching [`SkillEntry`].
+    /// Unlike [`Self::update_score`] this does not bump `updates` — the
+    /// textual-gradient step owns that counter, and skill draws are
+    /// recorded directly by the driver, outside the gradient replay.
+    /// A chain with no matching skill is a no-op (the skill was compacted
+    /// away mid-run).
+    pub fn update_skill(&mut self, state: usize, chain: &[Technique], measured_gain: f64) {
+        let entry = &mut self.states[state];
+        if let Some(i) = entry.skill_index(chain) {
+            entry.skills[i].update(measured_gain);
         }
     }
 

@@ -6,12 +6,14 @@
 //! the full field spec lives in `rust/ARCHITECTURE.md`.
 //!
 //! Lifecycle metadata (`arch`, `lineage` at the root; `origin` per
-//! optimization entry — see [`super::lifecycle`]) is strictly optional:
-//! the fields are emitted only when set, so any pre-lifecycle v1 document
-//! parses and re-serializes **byte-identically**, and parse → serialize
-//! is the identity on every v1 document this crate ever wrote.
+//! optimization entry — see [`super::lifecycle`]) and the mined-skill
+//! layer (`skills` per state — see [`super::skills`]) are strictly
+//! optional: the fields are emitted only when set, so any pre-lifecycle,
+//! pre-skills v1 document parses and re-serializes **byte-identically**,
+//! and parse → serialize is the identity on every v1 document this crate
+//! ever wrote.
 
-use super::{KnowledgeBase, OptEntry, StateEntry, StateSig};
+use super::{KnowledgeBase, OptEntry, SkillEntry, StateEntry, StateSig};
 use crate::opts::Technique;
 use crate::util::json::{Json, JsonObj};
 use std::path::Path;
@@ -41,6 +43,34 @@ fn state_to_json(s: &StateEntry) -> Json {
     o.set("visits", s.visits);
     let opts: Vec<Json> = s.opts.iter().map(opt_to_json).collect();
     o.set("optimizations", Json::Arr(opts));
+    // Skills are strictly optional on the wire: emitted only when present,
+    // so pre-skills v1 documents re-serialize byte-identically.
+    if !s.skills.is_empty() {
+        let skills: Vec<Json> = s.skills.iter().map(skill_to_json).collect();
+        o.set("skills", Json::Arr(skills));
+    }
+    Json::Obj(o)
+}
+
+fn skill_to_json(e: &SkillEntry) -> Json {
+    let mut o = JsonObj::new();
+    o.set(
+        "techniques",
+        Json::Arr(
+            e.techniques
+                .iter()
+                .map(|t| Json::Str(t.name().to_string()))
+                .collect(),
+        ),
+    );
+    o.set("expected_gain", round3(e.expected_gain));
+    o.set("support", e.support);
+    o.set("attempts", e.attempts);
+    o.set("successes", e.successes);
+    o.set("last_gain", round3(e.last_gain));
+    if let Some(origin) = &e.origin {
+        o.set("origin", origin.as_str());
+    }
     Json::Obj(o)
 }
 
@@ -143,6 +173,37 @@ pub fn from_json(j: &Json) -> Result<KnowledgeBase, PersistError> {
                                 .collect()
                         })
                         .unwrap_or_default(),
+                });
+            }
+        }
+        if let Some(skills) = sj.get("skills").and_then(Json::as_arr) {
+            for kj in skills {
+                let chain = kj
+                    .get("techniques")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad("skill missing techniques"))?;
+                let mut techniques = Vec::with_capacity(chain.len());
+                for tj in chain {
+                    let tname = tj.as_str().ok_or_else(|| bad("skill technique not a string"))?;
+                    techniques.push(
+                        Technique::from_name(tname)
+                            .ok_or_else(|| bad(&format!("unknown technique '{tname}'")))?,
+                    );
+                }
+                if techniques.is_empty() {
+                    return Err(bad("skill with empty technique chain"));
+                }
+                entry.skills.push(SkillEntry {
+                    techniques,
+                    expected_gain: kj
+                        .get("expected_gain")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(1.0),
+                    support: kj.get("support").and_then(Json::as_usize).unwrap_or(0),
+                    attempts: kj.get("attempts").and_then(Json::as_usize).unwrap_or(0),
+                    successes: kj.get("successes").and_then(Json::as_usize).unwrap_or(0),
+                    last_gain: kj.get("last_gain").and_then(Json::as_f64).unwrap_or(1.0),
+                    origin: kj.get("origin").and_then(Json::as_str).map(String::from),
                 });
             }
         }
@@ -250,6 +311,58 @@ mod tests {
         assert!(back.states[0].opts[1].origin.is_none());
         // Parse → serialize stays the identity with metadata present too.
         assert_eq!(first, to_json(&back).to_string_pretty());
+    }
+
+    #[test]
+    fn skills_roundtrip_and_stay_optional() {
+        let mut kb = busy_kb();
+        // A skill-free KB never emits the optional field — pre-skills v1
+        // documents stay byte-identical.
+        let plain = to_json(&kb).to_string_pretty();
+        assert!(!plain.contains("\"skills\":"));
+        kb.states[0].skills.push(SkillEntry {
+            techniques: vec![Technique::MixedPrecision, Technique::TensorCoreUtilization],
+            expected_gain: 2.25,
+            support: 3,
+            attempts: 2,
+            successes: 2,
+            last_gain: 2.4,
+            origin: Some(crate::kb::MINED_ORIGIN.to_string()),
+        });
+        let first = to_json(&kb).to_string_pretty();
+        assert!(first.contains("\"skills\":"));
+        let back = from_json(&Json::parse(&first).unwrap()).unwrap();
+        let sk = &back.states[0].skills[0];
+        assert_eq!(
+            sk.techniques,
+            vec![Technique::MixedPrecision, Technique::TensorCoreUtilization]
+        );
+        assert_eq!(sk.support, 3);
+        assert_eq!(sk.attempts, 2);
+        assert_eq!(sk.origin.as_deref(), Some("mined"));
+        assert!(back.states[1].skills.is_empty());
+        // Parse → serialize stays the identity with skills present.
+        assert_eq!(first, to_json(&back).to_string_pretty());
+    }
+
+    #[test]
+    fn rejects_unknown_skill_technique() {
+        let j = Json::parse(
+            r#"{"format":"kernelblaster-kb-v1","states":[
+                {"state":"memory_bandwidth+launch_overhead/elementwise",
+                 "optimizations":[],
+                 "skills":[{"techniques":["quantum_annealing","fast_math"]}]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(from_json(&j), Err(PersistError::Schema(_))));
+        let empty = Json::parse(
+            r#"{"format":"kernelblaster-kb-v1","states":[
+                {"state":"memory_bandwidth+launch_overhead/elementwise",
+                 "optimizations":[],
+                 "skills":[{"techniques":[]}]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(from_json(&empty), Err(PersistError::Schema(_))));
     }
 
     #[test]

@@ -1,0 +1,452 @@
+//! Skill mining: compress winning technique chains into first-class KB
+//! macro-opts.
+//!
+//! The driver's replay logs ([`crate::icrl::StepLog`]) record which
+//! technique actually won each rollout step. On a mature KB the same
+//! short chains keep winning from the same performance state — mixed
+//! precision → tensor-core dispatch, tiling → coalescing — yet every
+//! warm run re-searches them one step at a time. This module mines those
+//! chains into [`SkillEntry`] composites ("skills", after KernelSkill's
+//! skill library and STARK's strategy reuse) that policies can draw as a
+//! single step, shortening search depth where the memory is strongest.
+//!
+//! The pass is deterministic and idempotent:
+//!
+//! 1. [`mine`] walks each trace's chosen-and-valid lead branch, emits
+//!    every contiguous technique window of length `2..=max_len` keyed by
+//!    the window's *starting* [`StateSig`], and scores each distinct
+//!    chain by the geometric mean of its realized end-to-end gains
+//!    (per-step gains are relative to the node time, so their product is
+//!    the chain's true speedup — a prep step that looks like a loss solo
+//!    is credited by the compute step it enables).
+//! 2. Chains below `min_support` occurrences or `min_gain` realized gain
+//!    are dropped; survivors are ranked (gain desc, support desc, chain
+//!    asc) and capped at `max_per_state` per state.
+//! 3. [`install`] upserts the result into the KB as [`SkillEntry`]
+//!    records with `origin: Some("mined")` provenance. Re-installing the
+//!    same mining output is a no-op; native draw evidence accumulated by
+//!    the driver is never overwritten.
+//!
+//! Skills flow through the whole KB lifecycle (merge / compact /
+//! transfer / warm-start / delta extraction — see
+//! [`crate::kb::lifecycle`]) and the wire format as strictly-optional
+//! fields: a KB without skills serializes byte-identically to a
+//! pre-skills document.
+
+#![deny(missing_docs)]
+
+use super::{KnowledgeBase, SkillEntry, StateEntry, StateSig, MINED_ORIGIN};
+use crate::icrl::{StepLog, TaskRun};
+use crate::opts::Technique;
+use std::collections::BTreeMap;
+
+/// Knobs for the mining pass and the driver's skill-drawing step.
+/// `enabled` gates only the *drawing* side (the driver's composite-step
+/// pool extension); mining itself is an explicit offline pass
+/// (`kernelblaster kb mine`). Default off — and bit-identical off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkillsConfig {
+    /// Let the driver's search policies draw installed skills as single
+    /// composite steps. Default `false`; the off path is asserted
+    /// bit-identical to the pre-skills driver.
+    pub enabled: bool,
+    /// Longest chain the miner extracts (windows of length `2..=max_len`).
+    pub max_len: usize,
+    /// Minimum occurrences of a chain before it becomes a skill.
+    pub min_support: usize,
+    /// Minimum realized end-to-end gain (geomean over occurrences).
+    pub min_gain: f64,
+    /// Cap on installed skills per state (best-ranked survive).
+    pub max_per_state: usize,
+}
+
+impl Default for SkillsConfig {
+    fn default() -> Self {
+        SkillsConfig {
+            enabled: false,
+            max_len: 3,
+            min_support: 2,
+            min_gain: 1.05,
+            max_per_state: 4,
+        }
+    }
+}
+
+impl SkillsConfig {
+    /// Validate knob ranges; `Err` holds a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_len < 2 {
+            return Err(format!("skills max_len must be >= 2, got {}", self.max_len));
+        }
+        if self.min_support == 0 {
+            return Err("skills min_support must be >= 1".into());
+        }
+        if !self.min_gain.is_finite() || self.min_gain <= 0.0 {
+            return Err(format!("skills min_gain must be finite and > 0, got {}", self.min_gain));
+        }
+        if self.max_per_state == 0 {
+            return Err("skills max_per_state must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// One chain the miner extracted: the raw material [`install`] turns
+/// into a [`SkillEntry`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinedSkill {
+    /// State the chain starts from (the KB key it installs under).
+    pub state: StateSig,
+    /// The technique chain, in application order.
+    pub techniques: Vec<Technique>,
+    /// Winning trajectory windows that exhibited the chain.
+    pub support: usize,
+    /// Evidence-weighted realized gain: geometric mean of the chain's
+    /// end-to-end speedups across its occurrences.
+    pub gain: f64,
+}
+
+/// Emit every window of `chain` into the accumulator. Key = (state id,
+/// technique chain) — `BTreeMap` keeps accumulation order-independent.
+fn emit_windows(
+    chain: &[&StepLog],
+    max_len: usize,
+    windows: &mut BTreeMap<(String, Vec<Technique>), (StateSig, usize, f64)>,
+) {
+    for start in 0..chain.len() {
+        let longest = max_len.min(chain.len() - start);
+        for len in 2..=longest {
+            let win = &chain[start..start + len];
+            let gain: f64 = win.iter().map(|s| s.gain).product();
+            if !gain.is_finite() || gain <= 0.0 {
+                continue;
+            }
+            let key = (
+                win[0].state.id(),
+                win.iter().map(|s| s.technique).collect::<Vec<_>>(),
+            );
+            let e = windows.entry(key).or_insert((win[0].state, 0, 0.0));
+            e.1 += 1;
+            e.2 += gain.ln();
+        }
+    }
+}
+
+/// Mine frequent winning technique chains from replay traces. Each trace
+/// is one run's `steps` log; trajectories never chain across traces.
+///
+/// Deterministic: accumulation is keyed through a `BTreeMap` and the
+/// output is fully ordered (state id asc, then rank), so the same traces
+/// always yield the same `Vec<MinedSkill>` — in any trace order the
+/// per-chain evidence is identical, and the output order depends only on
+/// the aggregate.
+pub fn mine(traces: &[&[StepLog]], cfg: &SkillsConfig) -> Vec<MinedSkill> {
+    let mut windows: BTreeMap<(String, Vec<Technique>), (StateSig, usize, f64)> = BTreeMap::new();
+    for trace in traces {
+        // Lead branch: the first chosen-and-valid single-technique log per
+        // (trajectory, step). Beam frontiers mark several chosen logs per
+        // step; the first is the pick-order lead. Skill-draw logs are
+        // excluded so already-composite steps don't compound.
+        let mut lead: BTreeMap<(usize, usize), &StepLog> = BTreeMap::new();
+        for s in *trace {
+            if s.chosen && s.valid && s.skill.is_none() {
+                lead.entry((s.trajectory, s.step)).or_insert(s);
+            }
+        }
+        // Split the lead branch into maximal runs of consecutive steps.
+        let mut chain: Vec<&StepLog> = Vec::new();
+        for (&(traj, step), s) in &lead {
+            let contiguous = chain
+                .last()
+                .map(|p| p.trajectory == traj && p.step + 1 == step)
+                .unwrap_or(false);
+            if !contiguous {
+                emit_windows(&chain, cfg.max_len, &mut windows);
+                chain.clear();
+            }
+            chain.push(s);
+        }
+        emit_windows(&chain, cfg.max_len, &mut windows);
+    }
+
+    let mut mined: Vec<MinedSkill> = windows
+        .into_iter()
+        .filter_map(|((_, techniques), (state, support, ln_sum))| {
+            if support < cfg.min_support {
+                return None;
+            }
+            let gain = (ln_sum / support as f64).exp();
+            if !(gain >= cfg.min_gain) {
+                return None;
+            }
+            Some(MinedSkill {
+                state,
+                techniques,
+                support,
+                gain,
+            })
+        })
+        .collect();
+
+    // Rank within each state and enforce the per-state cap. The sort key
+    // starts with the state id so the cap scan is a single pass; ties
+    // break on the chain itself for full determinism.
+    mined.sort_by(|a, b| {
+        a.state
+            .id()
+            .cmp(&b.state.id())
+            .then(b.gain.total_cmp(&a.gain))
+            .then(b.support.cmp(&a.support))
+            .then(a.techniques.cmp(&b.techniques))
+    });
+    let mut kept = Vec::new();
+    let mut cur_state: Option<String> = None;
+    let mut in_state = 0usize;
+    for m in mined {
+        let id = m.state.id();
+        if cur_state.as_deref() != Some(&id) {
+            cur_state = Some(id);
+            in_state = 0;
+        }
+        if in_state < cfg.max_per_state {
+            kept.push(m);
+            in_state += 1;
+        }
+    }
+    kept
+}
+
+/// Convenience wrapper: mine from whole task runs.
+pub fn mine_runs(runs: &[TaskRun], cfg: &SkillsConfig) -> Vec<MinedSkill> {
+    let traces: Vec<&[StepLog]> = runs.iter().map(|r| r.steps.as_slice()).collect();
+    mine(&traces, cfg)
+}
+
+/// Install mined skills into a KB as first-class [`SkillEntry`] records.
+/// Returns the number of *new* skills added. Upsert semantics make the
+/// pass idempotent: an existing chain has its mining `support` refreshed,
+/// its expected gain re-seeded only while it has no native draw evidence
+/// (`attempts == 0`), and its provenance left intact.
+pub fn install(kb: &mut KnowledgeBase, mined: &[MinedSkill]) -> usize {
+    let mut added = 0;
+    for m in mined {
+        let si = match kb.find_state(m.state) {
+            Some(i) => i,
+            None => kb.insert_state(StateEntry::new(m.state)),
+        };
+        let entry = &mut kb.states[si];
+        match entry.skill_index(&m.techniques) {
+            Some(j) => {
+                let sk = &mut entry.skills[j];
+                sk.support = m.support;
+                if sk.attempts == 0 {
+                    sk.expected_gain = m.gain;
+                }
+                sk.origin.get_or_insert_with(|| MINED_ORIGIN.to_string());
+            }
+            None => {
+                entry.skills.push(SkillEntry {
+                    techniques: m.techniques.clone(),
+                    expected_gain: m.gain,
+                    support: m.support,
+                    attempts: 0,
+                    successes: 0,
+                    last_gain: 1.0,
+                    origin: Some(MINED_ORIGIN.to_string()),
+                });
+                added += 1;
+            }
+        }
+    }
+    added
+}
+
+/// Total installed skills across the KB (stats/reporting helper).
+pub fn count(kb: &KnowledgeBase) -> usize {
+    kb.states.iter().map(|s| s.skills.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Bottleneck;
+    use crate::kb::WorkloadClass;
+
+    fn sig(primary: Bottleneck) -> StateSig {
+        StateSig {
+            primary,
+            secondary: Bottleneck::LaunchOverhead,
+            workload: WorkloadClass::Elementwise,
+        }
+    }
+
+    fn log(traj: usize, step: usize, state: StateSig, tech: Technique, gain: f64) -> StepLog {
+        StepLog {
+            trajectory: traj,
+            step,
+            state,
+            new_state_discovered: false,
+            technique: tech,
+            valid: true,
+            gain,
+            retries: 0,
+            chosen: true,
+            skill: None,
+        }
+    }
+
+    /// Two trajectories exhibiting the same 2-chain: it is mined with
+    /// support 2 and the geometric-mean realized gain.
+    fn winning_trace() -> Vec<StepLog> {
+        let s = sig(Bottleneck::MemoryBandwidth);
+        vec![
+            log(0, 0, s, Technique::MixedPrecision, 1.0),
+            log(0, 1, s, Technique::TensorCoreUtilization, 2.0),
+            log(1, 0, s, Technique::MixedPrecision, 1.0),
+            log(1, 1, s, Technique::TensorCoreUtilization, 2.88),
+        ]
+    }
+
+    #[test]
+    fn mines_recurring_chain_with_geomean_gain() {
+        let trace = winning_trace();
+        let mined = mine(&[&trace], &SkillsConfig::default());
+        assert_eq!(mined.len(), 1);
+        let m = &mined[0];
+        assert_eq!(
+            m.techniques,
+            vec![Technique::MixedPrecision, Technique::TensorCoreUtilization]
+        );
+        assert_eq!(m.support, 2);
+        // geomean(2.0, 2.88) = 2.4
+        assert!((m.gain - 2.4).abs() < 1e-9, "gain {}", m.gain);
+    }
+
+    #[test]
+    fn mining_is_deterministic_and_trace_order_invariant() {
+        let a = winning_trace();
+        let mut b = winning_trace();
+        b[3].gain = 1.5; // a second, distinct trace
+        let cfg = SkillsConfig {
+            min_support: 1,
+            ..Default::default()
+        };
+        let m1 = mine(&[&a, &b], &cfg);
+        let m2 = mine(&[&b, &a], &cfg);
+        assert_eq!(m1, m2);
+        assert_eq!(m1, mine(&[&a, &b], &cfg));
+    }
+
+    #[test]
+    fn respects_support_gain_and_length_gates() {
+        let s = sig(Bottleneck::MemoryBandwidth);
+        // One occurrence only → below default min_support.
+        let once = vec![
+            log(0, 0, s, Technique::MixedPrecision, 1.0),
+            log(0, 1, s, Technique::TensorCoreUtilization, 2.0),
+        ];
+        assert!(mine(&[&once], &SkillsConfig::default()).is_empty());
+        // Chain gain below min_gain → dropped.
+        let losing: Vec<StepLog> = winning_trace()
+            .into_iter()
+            .map(|mut l| {
+                l.gain = 1.0;
+                l
+            })
+            .collect();
+        assert!(mine(&[&losing], &SkillsConfig::default()).is_empty());
+        // Non-consecutive steps never chain.
+        let gapped = vec![
+            log(0, 0, s, Technique::MixedPrecision, 1.2),
+            log(0, 2, s, Technique::TensorCoreUtilization, 2.0),
+            log(1, 0, s, Technique::MixedPrecision, 1.2),
+            log(1, 2, s, Technique::TensorCoreUtilization, 2.0),
+        ];
+        assert!(mine(&[&gapped], &SkillsConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn skill_draw_logs_are_not_re_mined() {
+        let mut trace = winning_trace();
+        for l in &mut trace {
+            l.skill = Some(vec![l.technique]);
+        }
+        assert!(mine(&[&trace], &SkillsConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn per_state_cap_keeps_best_ranked() {
+        let s = sig(Bottleneck::MemoryBandwidth);
+        // Three distinct 2-chains from the same state, different gains,
+        // two supporting trajectories each.
+        let chains = [
+            (Technique::LoopUnrolling, Technique::FastMath, 1.3),
+            (Technique::MemoryCoalescing, Technique::FastMath, 1.6),
+            (Technique::SharedMemoryTiling, Technique::FastMath, 2.1),
+        ];
+        let mut trace = Vec::new();
+        for (i, &(a, b, g)) in chains.iter().enumerate() {
+            for rep in 0..2 {
+                let traj = i * 2 + rep;
+                trace.push(log(traj, 0, s, a, 1.0));
+                trace.push(log(traj, 1, s, b, g));
+            }
+        }
+        let cfg = SkillsConfig {
+            max_per_state: 2,
+            ..Default::default()
+        };
+        let mined = mine(&[&trace], &cfg);
+        assert_eq!(mined.len(), 2);
+        assert!(mined[0].gain >= mined[1].gain);
+        assert_eq!(mined[0].techniques[0], Technique::SharedMemoryTiling);
+    }
+
+    #[test]
+    fn install_is_idempotent_and_preserves_native_evidence() {
+        let trace = winning_trace();
+        let mined = mine(&[&trace], &SkillsConfig::default());
+        let mut kb = KnowledgeBase::empty();
+        assert_eq!(install(&mut kb, &mined), 1);
+        let snapshot = kb.clone();
+        assert_eq!(install(&mut kb, &mined), 0);
+        assert_eq!(kb, snapshot, "re-install must be a no-op");
+        assert_eq!(count(&kb), 1);
+        let sk = &kb.states[0].skills[0];
+        assert_eq!(sk.origin.as_deref(), Some(MINED_ORIGIN));
+        assert_eq!(sk.attempts, 0);
+        // Accumulate native evidence, re-install: evidence survives.
+        let chain = sk.techniques.clone();
+        kb.update_skill(0, &chain, 3.0);
+        let gained = kb.states[0].skills[0].expected_gain;
+        assert_eq!(kb.states[0].skills[0].attempts, 1);
+        assert_eq!(install(&mut kb, &mined), 0);
+        assert_eq!(kb.states[0].skills[0].attempts, 1);
+        assert_eq!(kb.states[0].skills[0].expected_gain, gained);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_knobs() {
+        assert!(SkillsConfig::default().validate().is_ok());
+        for bad in [
+            SkillsConfig {
+                max_len: 1,
+                ..Default::default()
+            },
+            SkillsConfig {
+                min_support: 0,
+                ..Default::default()
+            },
+            SkillsConfig {
+                min_gain: f64::NAN,
+                ..Default::default()
+            },
+            SkillsConfig {
+                max_per_state: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Registry-wide experiment smoke tests.
+//!
+//! Every entry of `experiments::registry()` must run to completion in
+//! `--quick` mode in-process and yield a renderable, non-empty
+//! [`Report`]; the six scenario experiments that also emit a
+//! machine-readable `BENCH_*.json` artifact are checked against their
+//! schema: the versioned `format` string and the required root keys a
+//! downstream consumer (CI artifact upload, paper plotting scripts)
+//! depends on.
+//!
+//! BENCH-writing experiments run through `run_with_output` with a
+//! temp-dir path so the smoke never litters the working directory; the
+//! figure/table experiments write nothing by construction. A
+//! completeness guard pins the two groups to the registry, so adding an
+//! experiment without covering it here fails loudly.
+
+use kernelblaster::experiments::{self, Ctx, Report};
+use kernelblaster::util::json::Json;
+use std::path::Path;
+
+/// The registry entries that write a machine-readable artifact, with
+/// their schema version string and required root keys.
+const BENCH_EXPERIMENTS: &[(&str, &str, &[&str])] = &[
+    (
+        "continual",
+        "kernelblaster-bench-continual-v1",
+        &["train_arch", "eval_arch", "transfer", "tasks", "summary"],
+    ),
+    (
+        "fleet",
+        "kernelblaster-bench-fleet-v1",
+        &["gpu", "tasks", "workers", "epoch_size", "sequential", "fleet", "parity"],
+    ),
+    ("policy", "kernelblaster-bench-policy-v1", &["gpu", "tasks", "seeds", "arms"]),
+    ("sweep", "kernelblaster-bench-sweep-v1", &["gpu", "tasks", "seeds", "arms"]),
+    ("verify", "kernelblaster-bench-verify-v1", &["gpu", "tasks", "seeds", "arms"]),
+    (
+        "skills",
+        "kernelblaster-bench-skills-v1",
+        &["gpu", "tasks", "seeds", "skills_installed", "arms"],
+    ),
+];
+
+/// Registry entries that only produce a [`Report`] (no artifact).
+const FIGURE_EXPERIMENTS: &[&str] = &[
+    "table3", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13_14",
+    "fig15_16", "fig17", "fig18", "fig19", "ablation_mem", "minimal_agent",
+];
+
+fn assert_renderable(name: &str, report: &Report) {
+    assert!(!report.sections.is_empty(), "{name}: empty report");
+    let text = report.render();
+    assert!(text.contains("experiment:"), "{name}: render missing header");
+    for s in &report.sections {
+        assert!(!s.title.is_empty(), "{name}: untitled section");
+    }
+}
+
+/// Run one BENCH-writing experiment into a temp dir and validate the
+/// artifact's schema.
+fn assert_bench_schema(name: &str, format: &str, keys: &[&str]) {
+    let ctx = Ctx::new(true, 1);
+    let dir = std::env::temp_dir().join(format!("kb_exp_smoke_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join(format!("BENCH_{name}.json"));
+    let report = match name {
+        "continual" => experiments::continual::run_with_output(&ctx, &out),
+        "fleet" => experiments::fleet::run_with_output(&ctx, &out),
+        "policy" => experiments::policy::run_with_output(&ctx, &out),
+        "sweep" => experiments::sweep::run_with_output(&ctx, &out),
+        "verify" => experiments::verify::run_with_output(&ctx, &out),
+        "skills" => experiments::skills::run_with_output(&ctx, &out),
+        other => panic!("unmapped BENCH experiment '{other}'"),
+    };
+    assert_renderable(name, &report);
+    let text = std::fs::read_to_string(&out)
+        .unwrap_or_else(|e| panic!("{name}: artifact not written: {e}"));
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+    assert_eq!(
+        j.get("format").and_then(Json::as_str),
+        Some(format),
+        "{name}: schema version string drifted"
+    );
+    for key in keys {
+        assert!(j.get(key).is_some(), "{name}: artifact lost required key '{key}'");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_smoke_groups_cover_the_whole_registry() {
+    // Completeness guard: the two groups here must partition the
+    // registry exactly, so a new experiment can't land uncovered.
+    let mut covered: Vec<&str> = BENCH_EXPERIMENTS
+        .iter()
+        .map(|(n, _, _)| *n)
+        .chain(FIGURE_EXPERIMENTS.iter().copied())
+        .collect();
+    let mut registered: Vec<&str> = experiments::registry().iter().map(|(n, _)| *n).collect();
+    covered.sort_unstable();
+    registered.sort_unstable();
+    assert_eq!(
+        covered, registered,
+        "experiment registry and smoke-test coverage diverged — update tests/experiments.rs"
+    );
+}
+
+#[test]
+fn continual_and_fleet_artifacts_keep_their_schema() {
+    for (name, format, keys) in &BENCH_EXPERIMENTS[..2] {
+        assert_bench_schema(name, format, keys);
+    }
+}
+
+#[test]
+fn policy_and_sweep_artifacts_keep_their_schema() {
+    for (name, format, keys) in &BENCH_EXPERIMENTS[2..4] {
+        assert_bench_schema(name, format, keys);
+    }
+}
+
+#[test]
+fn verify_and_skills_artifacts_keep_their_schema() {
+    for (name, format, keys) in &BENCH_EXPERIMENTS[4..] {
+        assert_bench_schema(name, format, keys);
+    }
+}
+
+#[test]
+fn skills_artifact_reports_paired_steps_to_best() {
+    // The §Skills acceptance surface: both arms present, the baseline is
+    // its own pairing unit, and each arm carries the efficiency metric.
+    let ctx = Ctx::new(true, 3);
+    let dir = std::env::temp_dir().join("kb_exp_smoke_skills_metric");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("BENCH_skills.json");
+    let _ = experiments::skills::run_with_output(&ctx, &out);
+    let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let arms = j.get("arms").and_then(Json::as_arr).unwrap();
+    assert_eq!(arms.len(), 2);
+    let labels: Vec<_> = arms
+        .iter()
+        .map(|a| a.get("label").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(labels, vec!["no_skills", "mined_skills"]);
+    for a in arms {
+        assert!(a.get("mean_steps_to_best").is_some());
+        assert!(a.get("improved_cells").and_then(Json::as_usize).is_some());
+        assert!(a.get("vs_no_skills_paired").is_some());
+        assert!(a.get("paired_cells").and_then(Json::as_usize).is_some());
+    }
+    assert!(j.get("skills_installed").and_then(Json::as_usize).unwrap() > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn figure_experiments_smoke_run_in_quick_mode_a() {
+    let ctx = Ctx::new(true, 1);
+    for name in &FIGURE_EXPERIMENTS[..5] {
+        let run = experiments::by_name(name).unwrap_or_else(|| panic!("{name} unregistered"));
+        assert_renderable(name, &run(&ctx));
+    }
+}
+
+#[test]
+fn figure_experiments_smoke_run_in_quick_mode_b() {
+    let ctx = Ctx::new(true, 1);
+    for name in &FIGURE_EXPERIMENTS[5..10] {
+        let run = experiments::by_name(name).unwrap_or_else(|| panic!("{name} unregistered"));
+        assert_renderable(name, &run(&ctx));
+    }
+}
+
+#[test]
+fn figure_experiments_smoke_run_in_quick_mode_c() {
+    let ctx = Ctx::new(true, 1);
+    for name in &FIGURE_EXPERIMENTS[10..] {
+        let run = experiments::by_name(name).unwrap_or_else(|| panic!("{name} unregistered"));
+        assert_renderable(name, &run(&ctx));
+    }
+}
+
+#[test]
+fn reports_write_csvs_for_downstream_consumers() {
+    // The CSV side-channel every experiment shares: a quick report's
+    // sections all land as parseable non-empty files.
+    let ctx = Ctx::new(true, 1);
+    let dir = std::env::temp_dir().join("kb_exp_smoke_csvs");
+    let report = experiments::by_name("fig7").unwrap()(&ctx);
+    let files = report.write_csvs(&dir).unwrap();
+    assert_eq!(files.len(), report.sections.len());
+    for f in &files {
+        let text = std::fs::read_to_string(f).unwrap();
+        assert!(text.lines().count() >= 2, "{}: CSV has no data rows", f.display());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -3,14 +3,22 @@
 //! never-drop-the-best guarantee + idempotence, and byte-stability of
 //! every lifecycle product through the `kernelblaster-kb-v1` wire format
 //! — the acceptance chain `merge → transfer → bytes` included.
+//!
+//! The trailing fuzz section widens the algebraic checks beyond
+//! handcrafted shapes: seeded-random KBs and delta sequences (opts AND
+//! mined skill entries) exercised in shuffled evidence orders, pinning
+//! merge's order-invariant evidence view and the delta commit protocol's
+//! count conservation.
 
-use kernelblaster::gpu::GpuArch;
+use kernelblaster::gpu::{Bottleneck, GpuArch};
 use kernelblaster::harness::HarnessConfig;
 use kernelblaster::icrl::{self, IcrlConfig};
-use kernelblaster::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
-use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::kb::lifecycle::{self, CompactPolicy, KbDelta, TransferPolicy};
+use kernelblaster::kb::{persist, KnowledgeBase, SkillEntry, StateSig, WorkloadClass, MINED_ORIGIN};
+use kernelblaster::opts::Technique;
 use kernelblaster::tasks::Suite;
 use kernelblaster::util::json::Json;
+use kernelblaster::util::rng::Rng;
 
 fn quick_cfg(seed: u64) -> IcrlConfig {
     IcrlConfig {
@@ -222,4 +230,302 @@ fn warm_start_then_run_then_persist_roundtrips() {
         .iter()
         .flat_map(|s| &s.opts)
         .any(|o| o.origin.as_deref() == Some("A6000")));
+}
+
+// ---------------------------------------------------------------------------
+// Randomized-delta fuzz: seeded-random KBs and KbDelta sequences (with
+// skill entries) in shuffled evidence orders.
+// ---------------------------------------------------------------------------
+
+fn random_sig(rng: &mut Rng) -> StateSig {
+    const BN: [Bottleneck; 5] = [
+        Bottleneck::MemoryBandwidth,
+        Bottleneck::ComputeThroughput,
+        Bottleneck::Occupancy,
+        Bottleneck::LaunchOverhead,
+        Bottleneck::Transcendental,
+    ];
+    const WL: [WorkloadClass; 4] = [
+        WorkloadClass::ContractionHeavy,
+        WorkloadClass::ReductionHeavy,
+        WorkloadClass::Elementwise,
+        WorkloadClass::Mixed,
+    ];
+    let p = BN[rng.index(BN.len())];
+    let mut s = BN[rng.index(BN.len())];
+    if s == p {
+        s = BN[(BN.iter().position(|b| *b == p).unwrap() + 1) % BN.len()];
+    }
+    StateSig {
+        primary: p,
+        secondary: s,
+        workload: WL[rng.index(WL.len())],
+    }
+}
+
+fn random_chain(rng: &mut Rng) -> Vec<Technique> {
+    let all = Technique::all();
+    let a = all[rng.index(all.len())];
+    let mut b = all[rng.index(all.len())];
+    if b == a {
+        b = all[(all.iter().position(|t| *t == a).unwrap() + 1) % all.len()];
+    }
+    let mut chain = vec![a, b];
+    if rng.chance(0.4) {
+        let c = all[rng.index(all.len())];
+        if c != a && c != b {
+            chain.push(c);
+        }
+    }
+    chain
+}
+
+/// Apply driver-style random mutations to `kb` (append-only states and
+/// entries, incremented counters — exactly the transitions
+/// `extract_delta` is specified over), including mined-skill pushes and
+/// composite-draw evidence.
+fn mutate_randomly(kb: &mut KnowledgeBase, rng: &mut Rng) {
+    let all = Technique::all();
+    for _ in 0..(2 + rng.index(4)) {
+        let sig = random_sig(rng);
+        let i = kb.match_state(sig).index();
+        for _ in 0..(1 + rng.index(3)) {
+            let t = all[rng.index(all.len())];
+            kb.ensure_candidates(i, &[t]);
+            if rng.chance(0.8) {
+                let note = if rng.chance(0.3) {
+                    Some(format!("fuzz note {}", rng.index(100)))
+                } else {
+                    None
+                };
+                kb.update_score(i, t, 0.5 + rng.f64() * 2.0, note);
+            }
+        }
+        if rng.chance(0.7) {
+            let chain = random_chain(rng);
+            if kb.states[i].skill_index(&chain).is_none() {
+                kb.states[i].skills.push(SkillEntry {
+                    techniques: chain.clone(),
+                    expected_gain: 1.0 + rng.f64(),
+                    support: 1 + rng.index(4),
+                    attempts: 0,
+                    successes: 0,
+                    last_gain: 1.0,
+                    origin: Some(MINED_ORIGIN.to_string()),
+                });
+            }
+            if rng.chance(0.6) {
+                kb.update_skill(i, &chain, 0.5 + rng.f64() * 2.5);
+            }
+        }
+    }
+}
+
+fn random_kb(seed: u64) -> KnowledgeBase {
+    let mut rng = Rng::new(seed).derive("lifecycle-fuzz");
+    let mut kb = KnowledgeBase::empty();
+    mutate_randomly(&mut kb, &mut rng);
+    kb
+}
+
+/// Order-insensitive evidence view with skills: states sorted by id,
+/// opts by technique, skills by chain; gains quantized to a 1e-6 grid
+/// (fold-grouping float noise is ~1e-15).
+#[allow(clippy::type_complexity)]
+fn sorted_evidence(
+    kb: &KnowledgeBase,
+) -> Vec<(
+    String,
+    usize,
+    Vec<(String, usize, usize, f64)>,
+    Vec<(Vec<String>, usize, usize, usize, f64)>,
+)> {
+    let q = |x: f64| (x * 1e6).round() / 1e6;
+    let mut v: Vec<_> = kb
+        .states
+        .iter()
+        .map(|s| {
+            let mut opts: Vec<_> = s
+                .opts
+                .iter()
+                .map(|o| (o.technique.name().to_string(), o.attempts, o.successes, q(o.expected_gain)))
+                .collect();
+            opts.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut skills: Vec<_> = s
+                .skills
+                .iter()
+                .map(|k| {
+                    (
+                        k.techniques.iter().map(|t| t.name().to_string()).collect::<Vec<_>>(),
+                        k.support,
+                        k.attempts,
+                        k.successes,
+                        q(k.expected_gain),
+                    )
+                })
+                .collect();
+            skills.sort_by(|a, b| a.0.cmp(&b.0));
+            (s.sig.id(), s.visits, opts, skills)
+        })
+        .collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// (Σ opt attempts, Σ opt successes, Σ visits, Σ skill attempts,
+/// Σ skill support) — the conserved quantities.
+fn counts(kb: &KnowledgeBase) -> (usize, usize, usize, usize, usize) {
+    let mut t = (0, 0, 0, 0, 0);
+    for s in &kb.states {
+        t.2 += s.visits;
+        for o in &s.opts {
+            t.0 += o.attempts;
+            t.1 += o.successes;
+        }
+        for k in &s.skills {
+            t.3 += k.attempts;
+            t.4 += k.support;
+        }
+    }
+    t
+}
+
+#[test]
+fn fuzz_merge_is_order_invariant_and_conserves_evidence_with_skills() {
+    for round in 0..4u64 {
+        let kbs: Vec<KnowledgeBase> =
+            (0..4).map(|i| random_kb(round * 100 + i)).collect();
+        let flat = lifecycle::merge(&kbs);
+        // Groupings: ((a b) c) d, (a (b c d)), pairwise.
+        let left = lifecycle::merge(&[
+            lifecycle::merge(&[
+                lifecycle::merge(&[kbs[0].clone(), kbs[1].clone()]),
+                kbs[2].clone(),
+            ]),
+            kbs[3].clone(),
+        ]);
+        let right = lifecycle::merge(&[
+            kbs[0].clone(),
+            lifecycle::merge(&[kbs[1].clone(), kbs[2].clone(), kbs[3].clone()]),
+        ]);
+        // Shuffled input orders.
+        let rev = lifecycle::merge(&[
+            kbs[3].clone(),
+            kbs[2].clone(),
+            kbs[1].clone(),
+            kbs[0].clone(),
+        ]);
+        let rot = lifecycle::merge(&[
+            kbs[2].clone(),
+            kbs[3].clone(),
+            kbs[0].clone(),
+            kbs[1].clone(),
+        ]);
+        let want = sorted_evidence(&flat);
+        for (label, m) in [("left", &left), ("right", &right), ("rev", &rev), ("rot", &rot)] {
+            assert_eq!(
+                sorted_evidence(m),
+                want,
+                "round {round}: {label} fold diverged from flat merge"
+            );
+        }
+        // Conservation: nothing duplicated, nothing dropped.
+        let input_total = kbs.iter().map(counts).fold((0, 0, 0, 0, 0), |a, b| {
+            (a.0 + b.0, a.1 + b.1, a.2 + b.2, a.3 + b.3, a.4 + b.4)
+        });
+        assert_eq!(counts(&flat), input_total, "round {round}: evidence not conserved");
+        assert_eq!(flat.updates, kbs.iter().map(|k| k.updates).sum::<usize>());
+        // And the merged artifact stays byte-stable on the wire.
+        let b = bytes(&flat);
+        let back = persist::from_json(&Json::parse(&b).unwrap()).unwrap();
+        assert_eq!(b, bytes(&back), "round {round}: merged KB not byte-stable");
+    }
+}
+
+#[test]
+fn fuzz_shuffled_delta_commits_replay_and_conserve_counts() {
+    for round in 0..3u64 {
+        let base = random_kb(7000 + round);
+        let base_counts = counts(&base);
+        // N workers grow independent clones; deltas capture the evidence.
+        let grown: Vec<KnowledgeBase> = (0..5)
+            .map(|w| {
+                let mut g = base.clone();
+                let mut rng = Rng::new(round * 1000 + w).derive("fuzz-worker");
+                mutate_randomly(&mut g, &mut rng);
+                g
+            })
+            .collect();
+        let deltas: Vec<KbDelta> =
+            grown.iter().map(|g| lifecycle::extract_delta(&base, g)).collect();
+        // Single-delta replay identity on the exact base, for every
+        // random shape (the module tests pin only handcrafted ones).
+        for (g, d) in grown.iter().zip(&deltas) {
+            let mut replayed = base.clone();
+            lifecycle::apply_delta(&mut replayed, d);
+            assert_eq!(&replayed, g, "round {round}: apply∘extract not identity");
+        }
+        // Shuffled commit orders: counts are conserved regardless of
+        // order (gains legitimately depend on commit order — the fleet
+        // fixes one deterministically; that is out of scope here).
+        let added = deltas.iter().fold((0, 0, 0, 0, 0), |a, d| {
+            let mut t = a;
+            for sd in &d.states {
+                t.2 += sd.visits_added;
+                let b = sd.base.as_ref();
+                for o in &sd.grown.opts {
+                    let (ba, bs) = b
+                        .and_then(|b| b.opt_index(o.technique).map(|i| &b.opts[i]))
+                        .map_or((0, 0), |o| (o.attempts, o.successes));
+                    t.0 += o.attempts - ba;
+                    t.1 += o.successes - bs;
+                }
+                for k in &sd.grown.skills {
+                    let (ba, bsup) = b
+                        .and_then(|b| b.skill_index(&k.techniques).map(|i| &b.skills[i]))
+                        .map_or((0, 0), |k| (k.attempts, k.support));
+                    t.3 += k.attempts - ba;
+                    t.4 += k.support - bsup;
+                }
+            }
+            t
+        });
+        let orders: [Vec<usize>; 3] =
+            [vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0], vec![2, 0, 4, 1, 3]];
+        for order in &orders {
+            let mut shared = base.clone();
+            for &i in order {
+                lifecycle::apply_delta(&mut shared, &deltas[i]);
+            }
+            let got = counts(&shared);
+            assert_eq!(
+                got,
+                (
+                    base_counts.0 + added.0,
+                    base_counts.1 + added.1,
+                    base_counts.2 + added.2,
+                    base_counts.3 + added.3,
+                    base_counts.4 + added.4,
+                ),
+                "round {round}, order {order:?}: counts not conserved"
+            );
+            assert_eq!(
+                shared.updates,
+                base.updates + deltas.iter().map(|d| d.updates_added).sum::<usize>()
+            );
+            // Every gain stays finite and the committed KB serializes
+            // byte-stably whatever the order.
+            for s in &shared.states {
+                for o in &s.opts {
+                    assert!(o.expected_gain.is_finite());
+                }
+                for k in &s.skills {
+                    assert!(k.expected_gain.is_finite());
+                }
+            }
+            let b = bytes(&shared);
+            let back = persist::from_json(&Json::parse(&b).unwrap()).unwrap();
+            assert_eq!(b, bytes(&back), "round {round}: committed KB not byte-stable");
+        }
+    }
 }

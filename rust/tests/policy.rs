@@ -77,6 +77,7 @@ fn reference_optimize_task(
     let mut best = naive.clone();
     let mut best_time = naive_time;
     let mut any_valid = false;
+    let mut steps_to_best = 0usize;
 
     for traj in 0..cfg.trajectories {
         let mut cand = naive.clone();
@@ -138,7 +139,7 @@ fn reference_optimize_task(
                 .collect();
 
             let step_rng = rng.derive(&format!("explore-t{traj}-s{step}"));
-            let mut step_best: Option<(Candidate, NcuReport, f64, Technique)> = None;
+            let mut step_best: Option<(Candidate, NcuReport, f64, Technique, usize)> = None;
             let step_log_start = steps.len();
             for (i, &(tech, expected, group)) in pick_info.iter().enumerate() {
                 let mut pick_rng = step_rng.derive(&format!("pick-{i}"));
@@ -190,10 +191,10 @@ fn reference_optimize_task(
                         let np = rep.dominant_bottleneck();
                         let improves = step_best
                             .as_ref()
-                            .map(|(_, _, g, _)| gain > *g)
+                            .map(|(_, _, g, _, _)| gain > *g)
                             .unwrap_or(true);
                         if improves {
-                            step_best = Some((c, rep, gain, tech));
+                            step_best = Some((c, rep, gain, tech, steps.len()));
                         }
                         (true, gain, occ, util, np)
                     }
@@ -219,10 +220,11 @@ fn reference_optimize_task(
                     gain,
                     retries,
                     chosen: false,
+                    skill: None,
                 });
             }
 
-            if let Some((c, rep, _gain, chosen_tech)) = step_best {
+            if let Some((c, rep, _gain, chosen_tech, log_index)) = step_best {
                 for s in &mut steps[step_log_start..] {
                     if s.technique == chosen_tech && s.valid {
                         s.chosen = true;
@@ -234,6 +236,7 @@ fn reference_optimize_task(
                 if cur_time < best_time {
                     best_time = cur_time;
                     best = cand.clone();
+                    steps_to_best = log_index + 1;
                 }
             }
         }
@@ -252,6 +255,7 @@ fn reference_optimize_task(
         steps,
         states_visited: visited.len(),
         valid: any_valid,
+        steps_to_best,
     }
 }
 

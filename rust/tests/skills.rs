@@ -1,0 +1,291 @@
+//! Skill-mining subsystem properties and wire pinning.
+//!
+//! Three contracts from `kb::skills` (see its module docs), checked on
+//! real driver traces rather than synthetic logs:
+//!
+//! 1. **Mining is a pure function of the traces** — deterministic,
+//!    trace-order invariant, and idempotent through `install`.
+//! 2. **Skills off is bit-identical to the pre-skills driver** — on
+//!    TaskRuns AND saved-KB bytes, whether the knobs are merely
+//!    non-default or mined skills are already sitting in the KB.
+//! 3. **Mined skills are first-class lifecycle citizens** — they survive
+//!    merge → compact → transfer with their `"mined"` provenance intact
+//!    and serialize byte-stably.
+//!
+//! Plus the wire pin: `kb_v1_skills.golden.json` is a checked-in
+//! `kernelblaster-kb-v1` document carrying the optional `skills` fields;
+//! `load → save` must reproduce it byte-for-byte (same contract as
+//! `tests/wire_golden.rs` — never regenerate the fixture).
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::icrl::{self, IcrlConfig, SkillsConfig, TaskRun};
+use kernelblaster::kb::lifecycle::{self, CompactPolicy, TransferPolicy};
+use kernelblaster::kb::{persist, skills, KnowledgeBase, MINED_ORIGIN};
+use kernelblaster::tasks::{Suite, Task};
+use kernelblaster::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn quick_cfg(seed: u64) -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 3,
+        rollout_steps: 4,
+        top_k: 2,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Permissive mining gates for short test grids: any chain that recurs
+/// qualifies, so the property tests exercise non-empty mining output.
+fn lax_mining() -> SkillsConfig {
+    SkillsConfig {
+        min_support: 2,
+        min_gain: 0.9,
+        ..Default::default()
+    }
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+/// Grow a KB over a few tasks and return (runs, grown KB).
+fn grow(seed: u64) -> (Vec<TaskRun>, KnowledgeBase) {
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let tasks: Vec<&Task> = vec![
+        suite.by_id("L1/12_softmax").unwrap(),
+        suite.by_id("L1/15_relu").unwrap(),
+        suite.by_id("L2/01_gemm_bias_relu").unwrap(),
+    ];
+    let cfg = quick_cfg(seed);
+    let mut kb = KnowledgeBase::empty();
+    let runs = icrl::run_suite(&tasks, &arch, &mut kb, &cfg);
+    (runs, kb)
+}
+
+// ---------------------------------------------------------------- wire pin
+
+#[test]
+fn skills_v1_document_reproduced_byte_for_byte() {
+    let path = fixture("kb_v1_skills.golden.json");
+    let original = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing fixture {}: {e}", path.display()));
+    let kb = persist::load(&path).expect("skills golden failed to load");
+    let dir = std::env::temp_dir().join("kb_wire_golden_skills");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("kb_v1_skills.golden.json");
+    persist::save(&kb, &out).unwrap();
+    let rewritten = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(
+        rewritten, original,
+        "load -> save no longer reproduces the skills v1 document byte-for-byte \
+         (wire-format drift against existing KB files)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(persist::to_json(&kb).to_string_pretty(), original);
+}
+
+#[test]
+fn skills_golden_fixture_carries_the_fields_it_pins() {
+    // Guard the fixture itself: it must exercise every optional field
+    // class of the skills layer, or the byte-identity above proves less
+    // than it claims.
+    let kb = persist::load(&fixture("kb_v1_skills.golden.json")).unwrap();
+    assert_eq!(skills::count(&kb), 2);
+    let sks = &kb.states[0].skills;
+    // A provenance-marked mined skill with native draw evidence…
+    assert!(sks.iter().any(|k| {
+        k.origin.as_deref() == Some(MINED_ORIGIN) && k.attempts > 0 && k.techniques.len() == 2
+    }));
+    // …a provenance-less, never-drawn one with a longer chain…
+    assert!(sks
+        .iter()
+        .any(|k| k.origin.is_none() && k.attempts == 0 && k.techniques.len() == 3));
+    // …and a state with no skills at all (the optional field absent).
+    assert!(kb.states[1].skills.is_empty());
+    let text = std::fs::read_to_string(fixture("kb_v1_skills.golden.json")).unwrap();
+    assert!(Json::parse(&text).is_ok(), "fixture is not valid JSON");
+    assert_eq!(text.matches("\"skills\":").count(), 1);
+}
+
+// ----------------------------------------------------------------- mining
+
+#[test]
+fn mining_is_deterministic_order_invariant_and_idempotent() {
+    let (runs, _) = grow(3);
+    let cfg = lax_mining();
+    let mined = skills::mine_runs(&runs, &cfg);
+    assert!(
+        !mined.is_empty(),
+        "driver traces over 3 tasks x 3 trajectories must surface a recurring chain"
+    );
+    // Deterministic: same traces, same output.
+    assert_eq!(mined, skills::mine_runs(&runs, &cfg));
+    // Trace-order invariant: reversed runs, same output.
+    let reversed: Vec<TaskRun> = runs.iter().rev().cloned().collect();
+    assert_eq!(mined, skills::mine_runs(&reversed, &cfg));
+    // Well-formed output: chains within the gates, keyed states, ranked
+    // within each state.
+    for m in &mined {
+        assert!(m.techniques.len() >= 2 && m.techniques.len() <= cfg.max_len);
+        assert!(m.support >= cfg.min_support);
+        assert!(m.gain.is_finite() && m.gain >= cfg.min_gain);
+    }
+    for w in mined.windows(2) {
+        if w[0].state.id() == w[1].state.id() {
+            assert!(w[0].gain >= w[1].gain, "per-state ranking broken");
+        }
+    }
+    // Idempotent through install: the second pass adds nothing and
+    // leaves the KB byte-identical.
+    let mut kb = KnowledgeBase::empty();
+    let added = skills::install(&mut kb, &mined);
+    assert_eq!(added, mined.len());
+    assert_eq!(skills::count(&kb), added);
+    let first = kb_bytes(&kb);
+    assert_eq!(skills::install(&mut kb, &mined), 0);
+    assert_eq!(kb_bytes(&kb), first, "re-install must be a byte-level no-op");
+    assert!(kb
+        .states
+        .iter()
+        .flat_map(|s| &s.skills)
+        .all(|k| k.origin.as_deref() == Some(MINED_ORIGIN)));
+}
+
+// ----------------------------------------------------------- off == legacy
+
+#[test]
+fn skills_off_is_bit_identical_to_pre_skills_driver() {
+    // Leg 1: non-default knobs with `enabled: false` change nothing —
+    // the knobs are inert while drawing is off. The default-config run
+    // IS the pre-skills driver (tests/policy.rs pins that transitively
+    // against the pre-refactor transcription).
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let task = suite.by_id("L2/01_gemm_bias_relu").unwrap();
+    let default_cfg = quick_cfg(11);
+    assert!(!default_cfg.skills.enabled, "skills default changed to on");
+    let knobs_cfg = IcrlConfig {
+        skills: SkillsConfig {
+            enabled: false,
+            max_len: 5,
+            min_support: 1,
+            min_gain: 1.5,
+            max_per_state: 9,
+        },
+        ..quick_cfg(11)
+    };
+    let mut kb_a = KnowledgeBase::empty();
+    let r_a = icrl::optimize_task(task, &arch, &mut kb_a, &default_cfg, 0);
+    let mut kb_b = KnowledgeBase::empty();
+    let r_b = icrl::optimize_task(task, &arch, &mut kb_b, &knobs_cfg, 0);
+    assert_eq!(r_a, r_b, "inert skills knobs perturbed the TaskRun");
+    assert_eq!(kb_bytes(&kb_a), kb_bytes(&kb_b), "saved KB bytes diverged");
+    assert!(r_a.steps.iter().all(|s| s.skill.is_none()));
+
+    // Leg 2: mined skills sitting in the KB are invisible while drawing
+    // is off — the run over the skill-carrying KB equals the run over a
+    // skill-stripped clone, and the skill entries come out untouched.
+    let (runs, mut warm) = grow(5);
+    let installed = skills::install(&mut warm, &skills::mine_runs(&runs, &lax_mining()));
+    assert!(installed > 0, "need installed skills for this leg to bite");
+    let mut stripped = warm.clone();
+    for s in &mut stripped.states {
+        s.skills.clear();
+    }
+    let eval = suite.by_id("L1/01_matmul_square").unwrap();
+    let mut kb_skills = warm.clone();
+    let r_skills = icrl::optimize_task(eval, &arch, &mut kb_skills, &default_cfg, 1);
+    let mut kb_plain = stripped.clone();
+    let r_plain = icrl::optimize_task(eval, &arch, &mut kb_plain, &default_cfg, 1);
+    assert_eq!(
+        r_skills, r_plain,
+        "installed-but-disabled skills changed driver behavior"
+    );
+    assert!(r_skills.steps.iter().all(|s| s.skill.is_none()));
+    // The skill entries never accumulated draw evidence during the run.
+    for (ws, gs) in warm.states.iter().zip(&kb_skills.states) {
+        assert_eq!(ws.skills, gs.skills, "disabled run mutated skill entries");
+    }
+}
+
+#[test]
+fn skills_on_draws_chains_on_warm_kbs_and_stays_wellformed() {
+    // The drawing path itself: on a mined warm KB with `enabled: true`
+    // the driver may take composite steps; every such step is a chosen,
+    // valid, multi-technique chain, and the grown KB stays byte-stable.
+    let (runs, mut warm) = grow(7);
+    assert!(skills::install(&mut warm, &skills::mine_runs(&runs, &lax_mining())) > 0);
+    let suite = Suite::full();
+    let arch = GpuArch::h100();
+    let cfg = IcrlConfig {
+        skills: SkillsConfig {
+            enabled: true,
+            ..lax_mining()
+        },
+        ..quick_cfg(7)
+    };
+    let mut kb = warm.clone();
+    let run = icrl::optimize_task(suite.by_id("L1/12_softmax").unwrap(), &arch, &mut kb, &cfg, 9);
+    assert!(run.valid);
+    assert!(run.best_time_s <= run.naive_time_s * 1.0001);
+    for s in &run.steps {
+        if let Some(chain) = &s.skill {
+            assert!(chain.len() >= 2, "degenerate one-link skill draw");
+            assert_eq!(s.technique, chain[0], "lead technique must open the chain");
+        }
+        assert!(s.gain.is_finite());
+    }
+    let bytes = kb_bytes(&kb);
+    let reloaded = persist::from_json(&Json::parse(&bytes).unwrap()).unwrap();
+    assert_eq!(bytes, kb_bytes(&reloaded), "skill-grown KB not byte-stable");
+}
+
+// --------------------------------------------------------------- lifecycle
+
+#[test]
+fn mined_skills_survive_merge_compact_transfer_with_provenance() {
+    // End-to-end on driver-mined (not synthetic) skills: install into a
+    // grown KB, run the full lifecycle pipeline, and the mined chains
+    // come out the other side still marked `"mined"` and byte-stable.
+    let (runs, mut kb) = grow(13);
+    let mined = skills::mine_runs(&runs, &lax_mining());
+    assert!(skills::install(&mut kb, &mined) > 0);
+    kb.arch = Some("A6000".into());
+
+    let merged = lifecycle::merge(&[kb.clone(), kb.clone()]);
+    assert_eq!(
+        skills::count(&merged),
+        skills::count(&kb),
+        "merge must fold identical chains, not duplicate them"
+    );
+    let compacted = lifecycle::compact(&merged, &CompactPolicy::default());
+    let transferred = lifecycle::transfer(
+        &compacted,
+        &GpuArch::a6000(),
+        &GpuArch::h100(),
+        &TransferPolicy::default(),
+    );
+    assert!(skills::count(&transferred) > 0, "lifecycle dropped every skill");
+    for k in transferred.states.iter().flat_map(|s| &s.skills) {
+        assert_eq!(
+            k.origin.as_deref(),
+            Some(MINED_ORIGIN),
+            "provenance lost across the lifecycle"
+        );
+        // Transfer demotes to priors: native evidence reset, support kept.
+        assert_eq!(k.attempts, 0);
+        assert!(k.support > 0);
+        assert!(k.expected_gain.is_finite() && k.expected_gain > 0.0);
+    }
+    let bytes = kb_bytes(&transferred);
+    let reloaded = persist::from_json(&Json::parse(&bytes).unwrap()).unwrap();
+    assert_eq!(bytes, kb_bytes(&reloaded), "lifecycle output not byte-stable");
+}
