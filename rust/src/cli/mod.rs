@@ -12,6 +12,11 @@
 //!         [--save-kb PATH] [--config run.json] …` — fleet batch serving:
 //!   streams per-task results as JSON-lines, checkpoints the shared KB
 //!   crash-safely (see [`crate::icrl::fleet`])
+//! - `serve [--addr HOST:PORT] [--store DIR] [--gpu NAME] [--workers N]
+//!         [--throughput] [--snapshot-every N] …` — long-lived daemon:
+//!   a TCP line protocol serves optimize/batch requests against the
+//!   live KB, persisting every commit through the log-structured store
+//!   ([`crate::serve`], [`crate::kb::store`])
 //! - `suite --level <L1|L2|L3> [--gpu NAME] [--quick] [--seed N]`
 //! - `calibrate [--iters N]` — PJRT anchor measurement
 //! - `kb <init|inspect|stats> --path PATH` — single-KB inspection
@@ -25,7 +30,14 @@
 //!   ([`crate::kb::skills`]) and install them as composite skill entries;
 //!   `--skills` on `optimize`/`batch` lets policies draw them
 //! - `memo compact --path IN [--out PATH] --max-entries N` — bound a
-//!   persistent verification memo (failures evicted first, then LRU)
+//!   persistent verification memo (failures evicted first, then LRU);
+//!   without `--max-entries`, a `--config` file's
+//!   `verify.memo_max_entries` supplies the bound
+//!
+//! `--policy auto` (on `optimize`/`batch`/`serve`) resolves the search
+//! policy from a sweep artifact (`BENCH_sweep.json` or `--sweep FILE`):
+//! the arm with the best paired-vs-greedy score wins; a missing or
+//! unusable artifact falls back to `greedy_topk` with a stderr notice.
 //! - `list` — tasks, experiments, GPUs
 //! - `version`
 //!
@@ -128,7 +140,8 @@ USAGE:
   kernelblaster optimize --task <id> [--gpu H100] [--trajectories N] [--steps N]
                          [--vendor] [--kb PATH] [--warm-start P1,P2,...]
                          [--save-kb PATH] [--seed N]
-                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search|portfolio|thompson]
+                         [--policy greedy_topk|epsilon_greedy|ucb_bandit|beam_search|portfolio|thompson|auto]
+                         [--sweep BENCH_sweep.json]
                          [--epsilon X] [--ucb-c X] [--beam-width N]
                          [--schedule constant|harmonic|exponential] [--schedule-rate X]
                          [--dedup-distance X]
@@ -139,13 +152,20 @@ USAGE:
   kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
                       [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
                       [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
-                      [--vendor] [--policy NAME] [--epsilon X] [--ucb-c X]
+                      [--vendor] [--policy NAME|auto] [--sweep FILE]
+                      [--epsilon X] [--ucb-c X]
                       [--beam-width N] [--schedule NAME] [--schedule-rate X]
                       [--dedup-distance X] [--epoch-policies NAME,NAME,...|auto]
                       [--staged] [--no-screen] [--no-probe] [--screen-margin X]
                       [--probe-seeds N] [--memo PATH] [--config run.json]
                       [--skills] [--skill-max-len N] [--skill-min-support N]
                       [--skill-min-gain X] [--skill-max-per-state N]
+  kernelblaster serve [--addr 127.0.0.1:7070] [--gpu H100] [--store DIR]
+                      [--kb PATH] [--save-kb PATH] [--workers 4] [--epoch-size 8]
+                      [--throughput] [--snapshot-every 64] [--trajectories N]
+                      [--steps N] [--seed N] [--vendor] [--policy NAME|auto]
+                      [--staged] [--memo PATH] [--memo-max-entries N]
+                      [--config run.json]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
   kernelblaster kb <init|inspect|stats> --path PATH
@@ -159,14 +179,15 @@ USAGE:
                         [--steps N] [--seed N] [--skill-max-len 3]
                         [--skill-min-support 2] [--skill-min-gain 1.05]
                         [--skill-max-per-state 4]
-  kernelblaster memo compact --path IN [--out PATH] --max-entries N
+  kernelblaster memo compact --path IN [--out PATH] [--max-entries N]
+                             [--config run.json]
   kernelblaster list
   kernelblaster version
 
 Experiments (paper artifact regenerators — see DESIGN.md §6):
   table3 fig7 fig8 fig9 fig10 fig11 fig12 fig13_14 fig15_16 fig17 fig18
   fig19 ablation_mem minimal_agent continual fleet policy sweep verify
-  skills
+  skills serve
 ";
 
 /// Run the CLI; returns the process exit code.
@@ -176,6 +197,7 @@ pub fn run(argv: &[String]) -> i32 {
         Some("experiment") => cmd_experiment(&args),
         Some("run") => cmd_run(&args),
         Some("batch") => cmd_batch(&args),
+        Some("serve") => cmd_serve(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("suite") => cmd_suite(&args),
         Some("calibrate") => cmd_calibrate(&args),
@@ -496,38 +518,27 @@ fn cmd_batch(args: &Args) -> i32 {
         );
     }
 
-    /// Streams JSON-lines and checkpoints the shared KB on cadence.
-    struct BatchObserver {
-        ckpt_path: Option<PathBuf>,
-        every: usize,
-        last_ckpt: usize,
-        checkpoints: usize,
-    }
+    /// Streams JSON-lines as tasks finish; checkpointing now lives in
+    /// the committer's [`fleet::Store`] backend.
+    struct BatchObserver;
     impl FleetObserver for BatchObserver {
         fn task_done(&mut self, index: usize, run: &icrl::TaskRun) {
             println!("{}", task_jsonl(index, run));
         }
-        fn epoch_committed(&mut self, _epoch: usize, commits: usize, kb: &KnowledgeBase) {
-            let Some(path) = &self.ckpt_path else { return };
-            if self.every == 0 || commits - self.last_ckpt < self.every {
-                return;
-            }
-            match fleet::checkpoint_atomic(kb, path) {
-                Ok(()) => {
-                    self.last_ckpt = commits;
-                    self.checkpoints += 1;
-                    eprintln!("checkpointed KB at {} ({commits} commits)", path.display());
-                }
-                Err(e) => eprintln!("warning: checkpoint failed: {e}"),
-            }
-        }
     }
-    let mut obs = BatchObserver {
-        ckpt_path,
-        every: cfg.fleet.checkpoint_every,
-        last_ckpt: 0,
-        checkpoints: 0,
-    };
+    let mut obs = BatchObserver;
+    // Checkpoint through the whole-file store backend: same atomic
+    // writes and the same fail-soft resilience as the old observer
+    // (a failed checkpoint warns, it never kills the batch), but the
+    // cadence is now counted per commit by the committer itself.
+    let use_ckpt = ckpt_path.is_some() && cfg.fleet.checkpoint_every > 0;
+    let mut whole_file = fleet::WholeFileStore::new(
+        ckpt_path.clone().unwrap_or_default(),
+        cfg.fleet.checkpoint_every,
+    );
+    whole_file.fail_soft = true;
+    whole_file.verbose = true;
+    let mut null_store = fleet::NullStore;
 
     eprintln!(
         "batch: {} tasks on {} | {} workers, epochs of {}{}",
@@ -552,18 +563,26 @@ fn cmd_batch(args: &Args) -> i32 {
         .map(memo::load_or_cold)
         .unwrap_or_default();
     let start = std::time::Instant::now();
-    let outcome = if staged {
-        fleet::run_fleet_memo(
-            &tasks,
-            &arch,
-            &mut kb,
-            &cfg.icrl,
-            &cfg.fleet,
-            &mut verify_memo,
-            &mut obs,
-        )
+    let store: &mut dyn fleet::Store = if use_ckpt {
+        &mut whole_file
     } else {
-        fleet::run_fleet_observed(&tasks, &arch, &mut kb, &cfg.icrl, &cfg.fleet, &mut obs)
+        &mut null_store
+    };
+    let outcome = match fleet::run_fleet_store(
+        &tasks,
+        &arch,
+        &mut kb,
+        &cfg.icrl,
+        &cfg.fleet,
+        staged.then_some(&mut verify_memo),
+        store,
+        &mut obs,
+    ) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("batch: persistence failed: {e}");
+            return 1;
+        }
     };
     let elapsed = start.elapsed().as_secs_f64();
 
@@ -583,7 +602,7 @@ fn cmd_batch(args: &Args) -> i32 {
     );
     s.set("epochs", outcome.epochs);
     s.set("commits", outcome.commits);
-    s.set("checkpoints", obs.checkpoints);
+    s.set("checkpoints", whole_file.checkpoints());
     s.set("elapsed_s", elapsed);
     s.set(
         "tasks_per_min",
@@ -625,6 +644,188 @@ fn cmd_batch(args: &Args) -> i32 {
         );
     }
     0
+}
+
+/// `kernelblaster serve` — bind the TCP daemon on `--addr` and serve
+/// optimize/batch requests against the live KB until a shutdown request
+/// (see [`crate::serve`] for the wire protocol). With `--store DIR` the
+/// KB persists through the log-structured store: every commit is a
+/// journal append, `--snapshot-every` bounds the replay tail, and an
+/// existing store directory is *recovered* (snapshot + journal replay)
+/// rather than reloaded from `--kb`.
+fn cmd_serve(args: &Args) -> i32 {
+    use crate::kb::store::LogStore;
+    use crate::serve::{serve_listener, ServeCore};
+
+    let mut cfg = match args.flag("config") {
+        Some(p) => match crate::config::RunConfig::load(Path::new(p)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 1;
+            }
+        },
+        None => crate::config::RunConfig::default(),
+    };
+    if let Some(g) = args.flag("gpu") {
+        cfg.gpu = g.to_string();
+    }
+    cfg.icrl.trajectories = args.usize_flag("trajectories", cfg.icrl.trajectories);
+    cfg.icrl.rollout_steps = args.usize_flag("steps", cfg.icrl.rollout_steps);
+    cfg.icrl.seed = args.u64_flag("seed", cfg.icrl.seed);
+    if args.has("vendor") {
+        cfg.icrl.harness.allow_vendor = true;
+    }
+    cfg.icrl.policy = match policy_from_flags(args, cfg.icrl.policy) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
+    cfg.icrl.verify = match verify_from_flags(args, cfg.icrl.verify.clone()) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    cfg.icrl.skills = match skills_from_flags(args, cfg.icrl.skills.clone()) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
+    cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
+    if cfg.fleet.workers == 0 || cfg.fleet.epoch_size == 0 {
+        eprintln!("serve: --workers and --epoch-size must be positive");
+        return 2;
+    }
+    let Some(arch) = GpuArch::by_name(&cfg.gpu) else {
+        eprintln!("unknown GPU '{}' (known: A6000 A100 H100 L40S)", cfg.gpu);
+        return 2;
+    };
+
+    // KB source. An existing store directory wins outright — recovery
+    // (newest snapshot + journal replay) IS the load path, and folding
+    // a --kb file or warm-start priors over a recovered KB would leave
+    // the journal blind to that mutation.
+    let store_dir = args.flag("store").map(PathBuf::from);
+    let mut store: Option<LogStore> = None;
+    let mut kb = KnowledgeBase::empty();
+    if let Some(dir) = &store_dir {
+        if LogStore::exists(dir) {
+            match LogStore::recover(dir) {
+                Ok((recovered, s)) => {
+                    if args.has("kb") || !cfg.warm_start.is_empty() {
+                        eprintln!(
+                            "serve: store {} already exists; ignoring --kb/warm-start",
+                            dir.display()
+                        );
+                    }
+                    eprintln!(
+                        "serve: recovered KB ({} states, seq {}) from {}",
+                        recovered.states.len(),
+                        s.stats().last_seq,
+                        dir.display()
+                    );
+                    kb = recovered;
+                    store = Some(s);
+                }
+                Err(e) => {
+                    eprintln!("serve: store recovery failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    if store.is_none() {
+        kb = match args.flag("kb").map(String::from).or(cfg.kb_load.clone()) {
+            Some(p) => match load_kb(&p) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            },
+            None => KnowledgeBase::empty(),
+        };
+        if !cfg.warm_start.is_empty() {
+            kb = match assemble_warm_start(
+                std::mem::take(&mut kb),
+                &cfg.warm_start,
+                &arch,
+                &cfg.transfer,
+            ) {
+                Ok(kb) => kb,
+                Err(code) => return code,
+            };
+        }
+        if let Some(dir) = &store_dir {
+            match LogStore::create(dir, &kb) {
+                Ok(s) => {
+                    eprintln!("serve: created store at {}", dir.display());
+                    store = Some(s);
+                }
+                Err(e) => {
+                    eprintln!("serve: store creation failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    if let Some(s) = store.as_mut() {
+        s.snapshot_every = args.u64_flag("snapshot-every", 64);
+    }
+
+    let staged = cfg.icrl.verify.staged;
+    let memo_path: Option<PathBuf> = if staged {
+        cfg.icrl.verify.memo_path.clone().map(PathBuf::from)
+    } else {
+        None
+    };
+    let verify_memo = memo_path
+        .as_deref()
+        .map(memo::load_or_cold)
+        .unwrap_or_default();
+
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7070").to_string();
+    let listener = match std::net::TcpListener::bind(&addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve: bind {addr}: {e}");
+            return 1;
+        }
+    };
+
+    let mut core = ServeCore::new(arch.clone(), cfg.icrl.clone(), cfg.fleet.clone(), kb);
+    core.store = store;
+    core.save_path = args
+        .flag("save-kb")
+        .map(PathBuf::from)
+        .or(cfg.kb_save.clone().map(PathBuf::from));
+    core.memo = verify_memo;
+    core.memo_path = memo_path;
+    core.deterministic = !args.has("throughput");
+    eprintln!(
+        "serve: listening on {addr} | {} | {} workers | {} commits{}",
+        arch.name,
+        cfg.fleet.workers,
+        if core.deterministic {
+            "deterministic"
+        } else {
+            "completion-order"
+        },
+        if core.store.is_some() {
+            format!(" | store: {}", store_dir.as_ref().unwrap().display())
+        } else {
+            String::new()
+        }
+    );
+    match serve_listener(&mut core, listener) {
+        Ok(()) => {
+            eprintln!(
+                "serve: shut down after {} tasks, {} commits",
+                core.served(),
+                core.commits()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_optimize(args: &Args) -> i32 {
@@ -858,6 +1059,14 @@ fn save_kb(kb: &KnowledgeBase, path: &str) -> Result<(), i32> {
 /// policy, enforcing the same hyperparameter contract the config-file
 /// path validates.
 fn policy_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyConfig, i32> {
+    // `--policy auto` resolves the kind *and* hyperparameters from a
+    // sweep artifact; explicit hyperparameter flags still overlay the
+    // chosen arm, so `--policy auto --epsilon 0.3` means what it says.
+    if args.flag("policy") == Some("auto") {
+        let path = PathBuf::from(args.flag("sweep").unwrap_or("BENCH_sweep.json"));
+        let picked = policy_from_sweep(&path, &base);
+        return policy_hypers_from_flags(args, picked);
+    }
     let kind = match args.flag("policy") {
         None => base.kind,
         Some(name) => match PolicyKind::from_name(name) {
@@ -886,6 +1095,113 @@ fn policy_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyConfig, i3
         return Err(2);
     }
     policy_hypers_from_flags(args, PolicyConfig { kind, ..base })
+}
+
+/// Resolve `--policy auto`: pick the best-measured arm from a
+/// `kernelblaster-bench-sweep-v1` artifact (`experiment sweep`'s
+/// BENCH_sweep.json). The winner is the arm with the highest finite
+/// paired-vs-greedy score over at least one paired cell; the base
+/// config's `dedup_distance` is kept (the sweep does not grid it). Any
+/// failure — missing file, wrong format, no eligible arm — falls back
+/// to `greedy_topk` with a stderr notice rather than refusing to run:
+/// auto is an optimization hint, not a correctness input.
+fn policy_from_sweep(path: &Path, base: &PolicyConfig) -> PolicyConfig {
+    match read_sweep_best(path) {
+        Ok((label, score, policy)) => {
+            eprintln!(
+                "policy auto: picked '{label}' ({:.3}x vs greedy paired) from {}",
+                score,
+                path.display()
+            );
+            PolicyConfig {
+                dedup_distance: base.dedup_distance,
+                ..policy
+            }
+        }
+        Err(why) => {
+            eprintln!("policy auto: {why}; falling back to greedy_topk");
+            PolicyConfig {
+                kind: PolicyKind::GreedyTopK,
+                ..base.clone()
+            }
+        }
+    }
+}
+
+/// Parse a sweep artifact and return the best arm's (label, paired
+/// score, policy). Arms without paired evidence (`paired_cells` = 0 or
+/// a non-finite `vs_greedy_paired`) and arms naming unknown policies or
+/// schedules are skipped, not errors — an artifact from a newer build
+/// may carry arms this binary cannot run.
+fn read_sweep_best(path: &Path) -> Result<(String, f64, PolicyConfig), String> {
+    use crate::util::json::Json;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    if j.get("format").and_then(Json::as_str) != Some("kernelblaster-bench-sweep-v1") {
+        return Err(format!(
+            "{}: not a kernelblaster-bench-sweep-v1 artifact",
+            path.display()
+        ));
+    }
+    let arms = j
+        .get("arms")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{}: no arms array", path.display()))?;
+    let dflt = PolicyConfig::default();
+    let mut best: Option<(f64, String, PolicyConfig)> = None;
+    for arm in arms {
+        let pairs = arm.get("paired_cells").and_then(Json::as_usize).unwrap_or(0);
+        let score = arm
+            .get("vs_greedy_paired")
+            .and_then(Json::as_f64)
+            .unwrap_or(f64::NAN);
+        if pairs == 0 || !score.is_finite() {
+            continue;
+        }
+        let Some(kind) = arm
+            .get("policy")
+            .and_then(Json::as_str)
+            .and_then(PolicyKind::from_name)
+        else {
+            continue;
+        };
+        let Some(schedule) = Schedule::from_parts(
+            arm.get("schedule").and_then(Json::as_str).unwrap_or("constant"),
+            arm.get("schedule_rate")
+                .and_then(Json::as_f64)
+                .unwrap_or(Schedule::DEFAULT_RATE),
+        ) else {
+            continue;
+        };
+        let label = arm
+            .get("label")
+            .and_then(Json::as_str)
+            .unwrap_or("(unlabeled)")
+            .to_string();
+        let policy = PolicyConfig {
+            kind,
+            epsilon: arm.get("epsilon").and_then(Json::as_f64).unwrap_or(dflt.epsilon),
+            ucb_c: arm.get("ucb_c").and_then(Json::as_f64).unwrap_or(dflt.ucb_c),
+            beam_width: arm
+                .get("beam_width")
+                .and_then(Json::as_usize)
+                .unwrap_or(dflt.beam_width),
+            schedule,
+            dedup_distance: dflt.dedup_distance,
+        };
+        if policy.validate().is_err() {
+            continue;
+        }
+        if best.as_ref().map(|(s, _, _)| score > *s).unwrap_or(true) {
+            best = Some((score, label, policy));
+        }
+    }
+    best.map(|(s, l, p)| (l, s, p)).ok_or_else(|| {
+        format!(
+            "{}: no eligible arm (need paired_cells > 0 and a finite vs_greedy_paired)",
+            path.display()
+        )
+    })
 }
 
 /// Overlay only the hyperparameter flags (`--epsilon` / `--ucb-c` /
@@ -952,6 +1268,7 @@ fn verify_from_flags(args: &Args, base: VerifyConfig) -> Result<VerifyConfig, i3
         screen_margin: args.f64_flag("screen-margin", base.screen_margin),
         probe_seeds: args.usize_flag("probe-seeds", base.probe_seeds),
         memo_path: args.flag("memo").map(String::from).or(base.memo_path),
+        memo_max_entries: args.usize_flag("memo-max-entries", base.memo_max_entries),
     };
     if let Err(e) = verify.validate() {
         eprintln!("{e}");
@@ -1360,10 +1677,26 @@ fn cmd_memo(args: &Args) -> i32 {
                 eprintln!("memo compact: need --path FILE");
                 return 2;
             };
-            let Some(max) = args.flag("max-entries").and_then(|v| v.parse::<usize>().ok())
-            else {
-                eprintln!("memo compact: need --max-entries N");
-                return 2;
+            // The bound: an explicit --max-entries, else a config
+            // file's verify.memo_max_entries (the same knob the serve
+            // daemon enforces online), else an error.
+            let max = match args.flag("max-entries").and_then(|v| v.parse::<usize>().ok()) {
+                Some(m) => m,
+                None => {
+                    let from_cfg = args
+                        .flag("config")
+                        .and_then(|p| crate::config::RunConfig::load(Path::new(p)).ok())
+                        .map(|c| c.icrl.verify.memo_max_entries)
+                        .unwrap_or(0);
+                    if from_cfg == 0 {
+                        eprintln!(
+                            "memo compact: need --max-entries N (or --config with a \
+                             nonzero verify.memo_max_entries)"
+                        );
+                        return 2;
+                    }
+                    from_cfg
+                }
             };
             let mut m = match memo::load(Path::new(path)) {
                 Ok(m) => m,
@@ -1907,6 +2240,116 @@ mod tests {
             1
         );
         assert_eq!(run(&argv("memo frobnicate")), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn memo_compact_takes_bound_from_config_file() {
+        let dir = std::env::temp_dir().join("kb_cli_memo_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let memo_path = dir.join("memo.json");
+        let memo_s = memo_path.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/12_softmax --gpu A100 --trajectories 1 --steps 2 \
+                 --staged --memo {memo_s}"
+            ))),
+            0
+        );
+        let cfg = dir.join("run.json");
+        std::fs::write(
+            &cfg,
+            r#"{"verify":{"staged":true,"memo_max_entries":1}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            run(&argv(&format!(
+                "memo compact --path {memo_s} --config {}",
+                cfg.display()
+            ))),
+            0
+        );
+        assert!(memo::load(&memo_path).unwrap().len() <= 1);
+        // A config without the knob is not a bound.
+        let empty_cfg = dir.join("empty.json");
+        std::fs::write(&empty_cfg, "{}").unwrap();
+        assert_eq!(
+            run(&argv(&format!(
+                "memo compact --path {memo_s} --config {}",
+                empty_cfg.display()
+            ))),
+            2
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_rejects_bad_inputs() {
+        // All of these fail validation before any socket is bound.
+        assert_eq!(run(&argv("serve --gpu V100")), 2);
+        assert_eq!(run(&argv("serve --workers 0")), 2);
+        assert_eq!(run(&argv("serve --epoch-size 0")), 2);
+        assert_eq!(run(&argv("serve --policy annealing")), 2);
+        assert_eq!(run(&argv("serve --kb /nonexistent/kb.json")), 1);
+    }
+
+    #[test]
+    fn policy_auto_picks_best_paired_arm() {
+        let dir = std::env::temp_dir().join("kb_cli_policy_auto_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let sweep = dir.join("BENCH_sweep.json");
+        // The unpaired arm scores highest but is ineligible; the unknown
+        // policy must be skipped, not an error; ucb@1.2 beats greedy.
+        std::fs::write(
+            &sweep,
+            r#"{"format":"kernelblaster-bench-sweep-v1","gpu":"A100","arms":[
+                {"label":"greedy","policy":"greedy_topk","epsilon":0.15,"ucb_c":0.5,
+                 "beam_width":3,"schedule":"constant","schedule_rate":0.0,
+                 "vs_greedy_paired":1.0,"paired_cells":4},
+                {"label":"ucb@1.2","policy":"ucb_bandit","epsilon":0.15,"ucb_c":1.2,
+                 "beam_width":3,"schedule":"harmonic","schedule_rate":0.5,
+                 "vs_greedy_paired":1.08,"paired_cells":4},
+                {"label":"unpaired","policy":"beam_search","epsilon":0.15,"ucb_c":0.5,
+                 "beam_width":2,"schedule":"constant","schedule_rate":0.0,
+                 "vs_greedy_paired":9.99,"paired_cells":0},
+                {"label":"future","policy":"quantum_anneal","epsilon":0.15,"ucb_c":0.5,
+                 "beam_width":3,"schedule":"constant","schedule_rate":0.0,
+                 "vs_greedy_paired":2.0,"paired_cells":4}
+            ]}"#,
+        )
+        .unwrap();
+        let (label, score, policy) = read_sweep_best(&sweep).unwrap();
+        assert_eq!(label, "ucb@1.2");
+        assert!((score - 1.08).abs() < 1e-12);
+        assert_eq!(policy.kind, PolicyKind::UcbBandit);
+        assert!((policy.ucb_c - 1.2).abs() < 1e-12);
+        assert_eq!(policy.schedule, Schedule::Harmonic { rate: 0.5 });
+
+        // Fallback paths: missing file and artifact with no eligible arm.
+        let base = PolicyConfig::of_kind(PolicyKind::Thompson);
+        let fb = policy_from_sweep(Path::new("/nonexistent/sweep.json"), &base);
+        assert_eq!(fb.kind, PolicyKind::GreedyTopK, "fallback is greedy");
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, r#"{"format":"something-else","arms":[]}"#).unwrap();
+        assert!(read_sweep_best(&bad).is_err());
+
+        // End-to-end: auto resolves from the artifact; a missing
+        // artifact is a notice + greedy, never a refusal to run.
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                 --policy auto --sweep {}",
+                sweep.display()
+            ))),
+            0
+        );
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                 --policy auto --sweep /nonexistent/sweep.json"
+            )),
+            0
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -208,6 +208,9 @@ impl RunConfig {
             verify.set("probe", v.probe);
             verify.set("screen_margin", v.screen_margin);
             verify.set("probe_seeds", v.probe_seeds);
+            if v.memo_max_entries != 0 {
+                verify.set("memo_max_entries", v.memo_max_entries);
+            }
             if let Some(p) = &v.memo_path {
                 verify.set("memo", p.as_str());
             }
@@ -385,6 +388,10 @@ impl RunConfig {
                     .and_then(Json::as_usize)
                     .unwrap_or(d.probe_seeds),
                 memo_path: v.get("memo").and_then(Json::as_str).map(String::from),
+                memo_max_entries: v
+                    .get("memo_max_entries")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.memo_max_entries),
             };
         }
         if let Some(s) = j.get("skills") {
@@ -711,6 +718,7 @@ mod tests {
                     screen_margin: 2.0,
                     probe_seeds: 2,
                     memo_path: Some("/tmp/memo.json".into()),
+                    memo_max_entries: 64,
                 },
                 ..Default::default()
             },

@@ -21,6 +21,7 @@ pub mod fleet;
 pub mod hyperparams;
 pub mod learning;
 pub mod policy;
+pub mod serve;
 pub mod skills;
 pub mod sweep;
 pub mod table3;
@@ -263,6 +264,7 @@ pub fn registry() -> Vec<(&'static str, fn(&Ctx) -> Report)> {
         ("sweep", sweep::run),
         ("verify", verify::run),
         ("skills", skills::run),
+        ("serve", serve::run),
     ]
 }
 

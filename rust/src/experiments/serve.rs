@@ -1,0 +1,356 @@
+//! Serve scenario: replay synthetic arrival traces against the daemon's
+//! request handler ([`crate::serve::ServeCore`], driven directly — no
+//! TCP) and measure serving behavior under three arrival shapes:
+//!
+//! 1. **uniform** — steady inter-arrival gaps (the provisioning
+//!    baseline);
+//! 2. **bursty** — tight request bursts separated by idle gaps (CI
+//!    fan-out traffic);
+//! 3. **heavy_tailed** — Pareto inter-arrivals (multi-tenant traffic
+//!    where a few tenants dominate).
+//!
+//! Each trace gets a fresh core, an empty KB, and its own
+//! [`LogStore`] directory, so commit/compaction counters are
+//! per-trace. Every request is an `optimize` line through
+//! `handle_line` — exactly the serving path, store journaling
+//! included. Queue dynamics are *simulated deterministically*: the
+//! reply's `steps` count is the request's service time in ticks, and a
+//! FIFO earliest-available-worker queue over the arrival ticks yields
+//! wait/sojourn percentiles that are a pure function of the seed.
+//! Wall-clock enters only as tasks/min (host-dependent; the tick
+//! metrics are not).
+//!
+//! Reported as a [`Report`] plus machine-readable `BENCH_serve.json`
+//! (format `kernelblaster-bench-serve-v1`) — CI runs it at `--quick`
+//! scale and uploads the JSON as an artifact.
+
+use super::{Ctx, Report, Section};
+use crate::gpu::GpuArch;
+use crate::icrl::{FleetConfig, IcrlConfig};
+use crate::kb::store::LogStore;
+use crate::kb::KnowledgeBase;
+use crate::serve::ServeCore;
+use crate::tasks::{Level, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+use std::path::Path;
+use std::time::Instant;
+
+/// The three arrival shapes, in report order.
+const TRACES: &[&str] = &["uniform", "bursty", "heavy_tailed"];
+
+/// Snapshot cadence for the per-trace store — low enough that even the
+/// quick trace exercises at least one journal compaction.
+const SNAPSHOT_EVERY: u64 = 4;
+
+/// Arrival ticks for `n` requests of a trace shape, seeded per shape
+/// (monotone non-decreasing; bursty shapes repeat ticks within a burst).
+fn trace_arrivals(shape: &str, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed).derive(shape);
+    let mut ticks = Vec::with_capacity(n);
+    let mut t = 0u64;
+    match shape {
+        "uniform" => {
+            for _ in 0..n {
+                t += 3 + rng.below(4); // gaps 3..=6, mean ~4.5
+                ticks.push(t);
+            }
+        }
+        "bursty" => {
+            while ticks.len() < n {
+                t += 12 + rng.below(9); // idle gap 12..=20
+                let burst = 2 + rng.index(3); // 2..=4 requests at once
+                for _ in 0..burst.min(n - ticks.len()) {
+                    ticks.push(t);
+                }
+            }
+        }
+        "heavy_tailed" => {
+            for _ in 0..n {
+                // Pareto(alpha=1.2) inter-arrival: mostly ~1-tick gaps,
+                // occasional large ones (capped so the span stays finite).
+                let u = rng.f64().min(1.0 - 1e-12);
+                let gap = (1.0 - u).powf(-1.0 / 1.2).min(60.0) as u64;
+                t += gap.max(1);
+                ticks.push(t);
+            }
+        }
+        other => panic!("unknown trace shape '{other}'"),
+    }
+    ticks
+}
+
+/// Deterministic FIFO queue simulation: each request goes to the
+/// earliest-available of `workers` servers, never before its arrival
+/// tick. Returns per-request (wait, sojourn) in ticks plus the busy
+/// span (last completion tick).
+fn simulate_queue(arrivals: &[u64], service: &[u64], workers: usize) -> (Vec<u64>, Vec<u64>, u64) {
+    let mut avail = vec![0u64; workers.max(1)];
+    let mut waits = Vec::with_capacity(arrivals.len());
+    let mut sojourns = Vec::with_capacity(arrivals.len());
+    let mut span = 0u64;
+    for (a, s) in arrivals.iter().zip(service) {
+        let wi = (0..avail.len()).min_by_key(|i| avail[*i]).unwrap();
+        let start = (*a).max(avail[wi]);
+        let finish = start + (*s).max(1);
+        avail[wi] = finish;
+        waits.push(start - a);
+        sojourns.push(finish - a);
+        span = span.max(finish);
+    }
+    (waits, sojourns, span)
+}
+
+/// Nearest-rank percentile over tick samples (NaN when empty).
+fn percentile(xs: &[u64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v[((v.len() - 1) as f64 * p).round() as usize] as f64
+}
+
+/// One trace's measurement.
+struct TraceRun {
+    name: &'static str,
+    arrivals: usize,
+    wall_s: f64,
+    valid: usize,
+    geomean: f64,
+    commits: u64,
+    compactions: u64,
+    journal_records: u64,
+    span_ticks: u64,
+    wait_p50: f64,
+    wait_p95: f64,
+    sojourn_p50: f64,
+    sojourn_p95: f64,
+}
+
+impl TraceRun {
+    fn tasks_per_min(&self) -> f64 {
+        self.arrivals as f64 / (self.wall_s / 60.0).max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("name", self.name);
+        o.set("arrivals", self.arrivals);
+        o.set("wall_s", self.wall_s);
+        o.set("tasks_per_min", self.tasks_per_min());
+        o.set("valid", self.valid);
+        o.set("geomean_vs_naive", self.geomean);
+        o.set("commits", self.commits);
+        o.set("compactions", self.compactions);
+        o.set("journal_records", self.journal_records);
+        o.set("span_ticks", self.span_ticks);
+        o.set("queue_wait_p50_ticks", self.wait_p50);
+        o.set("queue_wait_p95_ticks", self.wait_p95);
+        o.set("sojourn_p50_ticks", self.sojourn_p50);
+        o.set("sojourn_p95_ticks", self.sojourn_p95);
+        Json::Obj(o)
+    }
+}
+
+/// Replay one trace against a fresh store-backed core.
+fn run_trace(
+    shape: &'static str,
+    tasks: &[&Task],
+    arch: &GpuArch,
+    cfg: &IcrlConfig,
+    fleet_cfg: &FleetConfig,
+    n: usize,
+    seed: u64,
+) -> TraceRun {
+    let dir = std::env::temp_dir().join(format!("kb_serve_exp_{shape}_{seed}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let kb = KnowledgeBase::empty();
+    let mut store = LogStore::create(&dir, &kb).expect("create trace store");
+    store.snapshot_every = SNAPSHOT_EVERY;
+    let mut core = ServeCore::new(arch.clone(), cfg.clone(), fleet_cfg.clone(), kb);
+    core.store = Some(store);
+
+    let arrivals = trace_arrivals(shape, n, seed);
+    let mut service = Vec::with_capacity(n);
+    let mut speedups = Vec::new();
+    let t = Instant::now();
+    for i in 0..n {
+        let mut req = JsonObj::new();
+        req.set("op", "optimize");
+        req.set("task", tasks[i % tasks.len()].id.as_str());
+        let reply = core.handle_line(&Json::Obj(req).to_string_compact());
+        let j = Json::parse(&reply.lines[0]).expect("reply is JSON");
+        let ok = j.get("ok").and_then(Json::as_bool).unwrap_or(false);
+        service.push(j.get("steps").and_then(Json::as_usize).unwrap_or(1).max(1) as u64);
+        if ok && j.get("valid").and_then(Json::as_bool) == Some(true) {
+            if let Some(s) = j.get("speedup_vs_naive").and_then(Json::as_f64) {
+                speedups.push(s);
+            }
+        }
+    }
+    let wall_s = t.elapsed().as_secs_f64();
+    let st = core.store.as_ref().expect("store still attached").stats();
+    let (waits, sojourns, span) = simulate_queue(&arrivals, &service, fleet_cfg.workers);
+    std::fs::remove_dir_all(&dir).ok();
+    TraceRun {
+        name: shape,
+        arrivals: n,
+        wall_s,
+        valid: speedups.len(),
+        geomean: stats::geomean(&speedups),
+        commits: core.commits(),
+        compactions: st.compactions,
+        journal_records: st.journal_records,
+        span_ticks: span,
+        wait_p50: percentile(&waits, 0.50),
+        wait_p95: percentile(&waits, 0.95),
+        sojourn_p50: percentile(&sojourns, 0.50),
+        sojourn_p95: percentile(&sojourns, 0.95),
+    }
+}
+
+/// Serialize the measurement into `kernelblaster-bench-serve-v1`.
+fn write_bench_json(arch: &GpuArch, n_tasks: usize, workers: usize, traces: &[TraceRun], path: &Path) {
+    let mut root = JsonObj::new();
+    root.set("format", "kernelblaster-bench-serve-v1");
+    root.set("gpu", arch.name);
+    root.set("tasks", n_tasks);
+    root.set("workers", workers);
+    root.set(
+        "traces",
+        Json::Arr(traces.iter().map(TraceRun::to_json).collect()),
+    );
+    match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: failed to write {}: {e}", path.display()),
+    }
+}
+
+/// The `serve` experiment with an explicit JSON output path.
+pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
+    let arch = GpuArch::h100();
+    let cfg = ctx.icrl_cfg(false);
+    let fleet_cfg = FleetConfig {
+        workers: 4,
+        epoch_size: 4,
+        checkpoint_every: 0,
+        ..Default::default()
+    };
+    let tasks = ctx.tasks(Level::L1);
+    // One round of the task list per trace in quick mode, three in full,
+    // so the queue actually builds depth behind the bursts.
+    let n = tasks.len() * if ctx.quick { 1 } else { 3 };
+    let traces: Vec<TraceRun> = TRACES
+        .iter()
+        .map(|shape| run_trace(shape, &tasks, &arch, &cfg, &fleet_cfg, n, ctx.seed))
+        .collect();
+
+    let mut t = Table::new(&[
+        "trace",
+        "arrivals",
+        "tasks/min",
+        "geomean vs naive",
+        "commits",
+        "compactions",
+        "wait p50",
+        "wait p95",
+        "sojourn p95",
+    ]);
+    for tr in &traces {
+        t.add_row(vec![
+            tr.name.to_string(),
+            tr.arrivals.to_string(),
+            fnum(tr.tasks_per_min(), 1),
+            fnum(tr.geomean, 3),
+            tr.commits.to_string(),
+            tr.compactions.to_string(),
+            fnum(tr.wait_p50, 0),
+            fnum(tr.wait_p95, 0),
+            fnum(tr.sojourn_p95, 0),
+        ]);
+    }
+    write_bench_json(&arch, tasks.len(), fleet_cfg.workers, &traces, out);
+    Report {
+        name: "serve".into(),
+        sections: vec![Section {
+            title: format!(
+                "Serving daemon under synthetic arrival traces ({} L1 tasks, {n} requests \
+                 per trace, {}, {} simulated workers)",
+                tasks.len(),
+                arch.name,
+                fleet_cfg.workers
+            ),
+            table: t,
+            plot: None,
+            notes: vec![
+                "queue wait/sojourn are deterministic simulated ticks (service time = the \
+                 reply's step count); tasks/min is host wall-clock"
+                    .into(),
+                format!(
+                    "each trace runs store-backed with a snapshot every {SNAPSHOT_EVERY} \
+                     commits — compaction counts come from the live LogStore"
+                ),
+                format!("machine-readable: {}", out.display()),
+            ],
+        }],
+    }
+}
+
+/// The `serve` experiment registry entry — writes `BENCH_serve.json`
+/// beside the working directory like the fleet scenario does.
+pub fn run(ctx: &Ctx) -> Report {
+    run_with_output(ctx, Path::new("BENCH_serve.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_monotone_and_shaped() {
+        for shape in TRACES {
+            let a = trace_arrivals(shape, 40, 7);
+            let b = trace_arrivals(shape, 40, 7);
+            assert_eq!(a, b, "{shape}: trace not a pure function of the seed");
+            assert_eq!(a.len(), 40);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{shape}: ticks regressed");
+        }
+        // Bursty traces repeat ticks inside a burst; uniform never does.
+        let bursty = trace_arrivals("bursty", 40, 7);
+        assert!(bursty.windows(2).any(|w| w[0] == w[1]));
+        let uniform = trace_arrivals("uniform", 40, 7);
+        assert!(uniform.windows(2).all(|w| w[0] < w[1]));
+        // Heavy-tailed produces at least one gap no uniform trace can.
+        let heavy = trace_arrivals("heavy_tailed", 400, 7);
+        let max_gap = heavy.windows(2).map(|w| w[1] - w[0]).max().unwrap();
+        assert!(max_gap > 6, "heavy tail missing: max gap {max_gap}");
+    }
+
+    #[test]
+    fn queue_simulation_respects_arrivals_and_capacity() {
+        // Two workers, four simultaneous unit jobs: two start at once,
+        // two wait one tick.
+        let (waits, sojourns, span) = simulate_queue(&[5, 5, 5, 5], &[1, 1, 1, 1], 2);
+        assert_eq!(waits, vec![0, 0, 1, 1]);
+        assert_eq!(sojourns, vec![1, 1, 2, 2]);
+        assert_eq!(span, 7);
+        // A single worker serializes everything.
+        let (waits, _, span) = simulate_queue(&[0, 0, 0], &[2, 2, 2], 1);
+        assert_eq!(waits, vec![0, 2, 4]);
+        assert_eq!(span, 6);
+        // Idle gaps reset the queue: no waiting when arrivals are sparse.
+        let (waits, _, _) = simulate_queue(&[0, 100], &[5, 5], 1);
+        assert_eq!(waits, vec![0, 0]);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[1, 2, 3, 4, 5], 0.50), 3.0);
+        assert_eq!(percentile(&[1, 2, 3, 4, 5], 0.95), 5.0);
+        assert_eq!(percentile(&[7], 0.95), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

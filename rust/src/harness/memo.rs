@@ -52,6 +52,12 @@
 //! **strictly optional** fields, emitted only when non-zero: every
 //! pre-compaction document, and every memo that never advances its
 //! epoch, stays byte-identical on the wire.
+//!
+//! Long-lived serving wires the same pass in continuously:
+//! [`VerifyMemo::enforce_cap`] (driven by `verify.memo_max_entries`, 0 =
+//! unbounded) applies the compaction policy after each serve-loop memo
+//! commit, so a daemon's memo stays size-bounded without changing any
+//! batch-path byte contract.
 
 use super::{HarnessConfig, Outcome};
 use crate::kir::schedule::{MemLayout, Schedule, Tiling};
@@ -62,15 +68,12 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
 
-/// FNV-1a 64-bit hash of a string — the memo's content-hash primitive
-/// (same constants as [`crate::util::rng::Rng::derive`]'s label hash).
+/// FNV-1a 64-bit hash of a string — the memo's content-hash primitive.
+/// Delegates to the shared [`crate::util::hash`] module (the same
+/// function checksums the log-structured KB store's journal records and
+/// seeds [`crate::util::rng::Rng::derive`]'s label hash).
 pub fn fnv1a64(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::util::hash::fnv1a64(s)
 }
 
 /// A memoized verification verdict — the deterministic part of an
@@ -261,6 +264,20 @@ impl VerifyMemo {
             self.entries.remove(&key);
         }
         excess
+    }
+
+    /// Enforce an optional size cap: a no-op when `max_entries` is 0
+    /// (unbounded — the default, preserving every legacy byte contract)
+    /// or when the memo already fits; otherwise a [`Self::compact`] down
+    /// to `max_entries`. This is the long-lived-serving guard: the serve
+    /// commit loop calls it after each memo-delta fold so a daemon that
+    /// runs for days cannot grow its memo without bound. Returns the
+    /// number of evicted entries.
+    pub fn enforce_cap(&mut self, max_entries: usize) -> usize {
+        if max_entries == 0 || self.entries.len() <= max_entries {
+            return 0;
+        }
+        self.compact(max_entries)
     }
 }
 
@@ -856,6 +873,24 @@ mod tests {
         // All-equal recency: lexicographically smallest keys evict first.
         assert!(m1.get("aa").is_none() && m1.get("bb").is_none());
         assert!(m1.get("cc").is_some() && m1.get("dd").is_some());
+    }
+
+    #[test]
+    fn enforce_cap_zero_is_unbounded() {
+        let mut m = VerifyMemo::new();
+        for k in ["aa", "bb", "cc"] {
+            m.insert(k.into(), MemoVerdict::Pass);
+        }
+        // 0 = unbounded: nothing evicts no matter the size.
+        assert_eq!(m.enforce_cap(0), 0);
+        assert_eq!(m.len(), 3);
+        // Cap not exceeded → still a no-op.
+        assert_eq!(m.enforce_cap(3), 0);
+        assert_eq!(m.len(), 3);
+        // Over the cap → compacts down with the same eviction policy.
+        assert_eq!(m.enforce_cap(1), 2);
+        assert_eq!(m.len(), 1);
+        assert!(m.get("cc").is_some());
     }
 
     #[test]

@@ -68,6 +68,12 @@ pub struct VerifyConfig {
     /// Path of the persistent cross-run memo; `None` keeps the memo
     /// in-memory for the run (fleet batches still share it across tasks).
     pub memo_path: Option<String>,
+    /// Size cap the serving path enforces on the memo
+    /// ([`VerifyMemo::enforce_cap`] after each serve-loop memo commit,
+    /// and the `memo compact` default). 0 (the default) = unbounded —
+    /// batch and optimize never evict implicitly, preserving every
+    /// legacy byte contract.
+    pub memo_max_entries: usize,
 }
 
 impl Default for VerifyConfig {
@@ -79,6 +85,7 @@ impl Default for VerifyConfig {
             screen_margin: 1.5,
             probe_seeds: 1,
             memo_path: None,
+            memo_max_entries: 0,
         }
     }
 }

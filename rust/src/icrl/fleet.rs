@@ -74,15 +74,29 @@
 //! bit-for-bit, and `tests/fleet.rs` pins the epoch mix's worker-count
 //! invariance.
 //!
-//! # Checkpointing
+//! # Durability (the [`Store`] trait)
 //!
-//! Long batches checkpoint the shared KB every
-//! [`FleetConfig::checkpoint_every`] commits (a commit = one task's
-//! delta folded in). [`checkpoint_atomic`] writes the full
-//! `kernelblaster-kb-v1` document to `<file>.tmp` in the target
-//! directory and atomically renames it over the destination, so a crash
-//! mid-write can never leave a torn KB — readers observe either the
-//! previous checkpoint or the new one, nothing in between.
+//! The committer persists through a [`Store`]: after each delta is
+//! folded into the shared KB, `store.commit(&delta, kb)` runs — still
+//! in task order, so durability inherits the determinism contract.
+//! Three backends:
+//!
+//! - [`NullStore`] — no persistence (the default for `run_fleet` /
+//!   `run_fleet_observed` / `run_fleet_memo`, preserving their exact
+//!   pre-trait behavior);
+//! - [`WholeFileStore`] — the classic batch discipline: rewrite the
+//!   full `kernelblaster-kb-v1` document via [`checkpoint_atomic`]
+//!   every `every` commits (`kernelblaster batch --checkpoint-every`);
+//! - [`crate::kb::store::LogStore`] — the log-structured serving
+//!   engine: O(delta) journal appends plus periodic compacted
+//!   snapshots (`kernelblaster serve`).
+//!
+//! [`checkpoint_atomic`] writes the full document to `<file>.tmp` in
+//! the target directory and atomically renames it over the
+//! destination, so a crash mid-write can never leave a torn KB —
+//! readers observe either the previous checkpoint or the new one,
+//! nothing in between. All persistence failures surface as one type,
+//! [`PersistError`].
 
 use super::driver::{
     optimize_task_delta_verified, optimize_task_verified, IcrlConfig, KbMode, TaskRun,
@@ -93,9 +107,11 @@ use crate::harness::memo::{MemoDelta, VerifyMemo};
 use crate::harness::staged::TierStats;
 use crate::harness::VerifyCache;
 use crate::kb::lifecycle::{self, KbDelta};
+use crate::kb::persist::PersistError;
+use crate::kb::store::LogStore;
 use crate::kb::{persist, KnowledgeBase};
 use crate::tasks::Task;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -221,6 +237,129 @@ pub struct NullObserver;
 
 impl FleetObserver for NullObserver {}
 
+/// Durability backend for the committer (see the module docs
+/// §Durability). `commit` runs after every task delta is folded into
+/// the shared KB — in task order, so whatever a backend persists is
+/// worker-count invariant; `flush` is the end-of-run / shutdown hook.
+pub trait Store {
+    /// Persist one committed delta. `kb_after` is the shared KB with
+    /// the delta already folded in (what a snapshotting backend saves).
+    fn commit(&mut self, delta: &KbDelta, kb_after: &KnowledgeBase) -> Result<(), PersistError>;
+
+    /// Persist the full KB unconditionally (end of run, shutdown).
+    fn flush(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError>;
+}
+
+/// The no-persistence backend: callers that save the KB themselves
+/// afterwards (or not at all). Never fails.
+pub struct NullStore;
+
+impl Store for NullStore {
+    fn commit(&mut self, _delta: &KbDelta, _kb: &KnowledgeBase) -> Result<(), PersistError> {
+        Ok(())
+    }
+
+    fn flush(&mut self, _kb: &KnowledgeBase) -> Result<(), PersistError> {
+        Ok(())
+    }
+}
+
+/// The whole-file backend: rewrite the full `kernelblaster-kb-v1`
+/// document ([`checkpoint_atomic`]) every `every` commits — the batch
+/// CLI's historical checkpoint discipline, now expressed as a
+/// [`Store`]. O(KB) per checkpoint, which is exactly why the serving
+/// path uses [`LogStore`] instead.
+pub struct WholeFileStore {
+    /// Checkpoint destination.
+    pub path: PathBuf,
+    /// Checkpoint cadence in commits (0 = only on [`Store::flush`]).
+    pub every: usize,
+    /// Degrade checkpoint failures to a stderr warning instead of
+    /// aborting the batch (the CLI's resilience contract: a full disk
+    /// mid-batch loses a checkpoint, not the run). `flush` still
+    /// fails hard.
+    pub fail_soft: bool,
+    /// Announce successful checkpoints on stderr (the CLI's
+    /// `checkpointed KB at …` progress lines).
+    pub verbose: bool,
+    commits: usize,
+    last_ckpt: usize,
+    checkpoints: usize,
+}
+
+impl WholeFileStore {
+    /// Backend writing to `path` every `every` commits, quiet and
+    /// fail-hard.
+    pub fn new(path: impl Into<PathBuf>, every: usize) -> Self {
+        WholeFileStore {
+            path: path.into(),
+            every,
+            fail_soft: false,
+            verbose: false,
+            commits: 0,
+            last_ckpt: 0,
+            checkpoints: 0,
+        }
+    }
+
+    /// Checkpoints written so far (cadence + flushes).
+    pub fn checkpoints(&self) -> usize {
+        self.checkpoints
+    }
+}
+
+impl Store for WholeFileStore {
+    fn commit(&mut self, _delta: &KbDelta, kb_after: &KnowledgeBase) -> Result<(), PersistError> {
+        self.commits += 1;
+        if self.every == 0 || self.commits - self.last_ckpt < self.every {
+            return Ok(());
+        }
+        match checkpoint_atomic(kb_after, &self.path) {
+            Ok(()) => {
+                self.last_ckpt = self.commits;
+                self.checkpoints += 1;
+                if self.verbose {
+                    eprintln!(
+                        "checkpointed KB at {} ({} commits)",
+                        self.path.display(),
+                        self.commits
+                    );
+                }
+                Ok(())
+            }
+            Err(e) if self.fail_soft => {
+                eprintln!("warning: checkpoint failed: {e}");
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn flush(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError> {
+        checkpoint_atomic(kb, &self.path)?;
+        self.last_ckpt = self.commits;
+        self.checkpoints += 1;
+        Ok(())
+    }
+}
+
+impl Store for LogStore {
+    /// Journal the delta (skipping empty ones — nothing to replay) and
+    /// compact on the store's snapshot cadence.
+    fn commit(&mut self, delta: &KbDelta, kb_after: &KnowledgeBase) -> Result<(), PersistError> {
+        if delta.is_empty() {
+            return Ok(());
+        }
+        self.append(delta)?;
+        self.maybe_snapshot(kb_after)?;
+        Ok(())
+    }
+
+    fn flush(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError> {
+        self.snapshot(kb)
+    }
+}
+
 /// Run a batch through the fleet pipeline. See the module docs for the
 /// dataflow and the determinism contract; per-task `run_seed`s are the
 /// global task indices, matching [`crate::icrl::run_suite`].
@@ -243,7 +382,8 @@ pub fn run_fleet_observed(
     fleet: &FleetConfig,
     obs: &mut dyn FleetObserver,
 ) -> FleetOutcome {
-    run_fleet_core(tasks, arch, kb, cfg, fleet, None, obs)
+    run_fleet_core(tasks, arch, kb, cfg, fleet, None, &mut NullStore, obs)
+        .expect("null store never fails")
 }
 
 /// [`run_fleet_observed`] plus the persistent verify memo
@@ -261,9 +401,32 @@ pub fn run_fleet_memo(
     memo: &mut VerifyMemo,
     obs: &mut dyn FleetObserver,
 ) -> FleetOutcome {
-    run_fleet_core(tasks, arch, kb, cfg, fleet, Some(memo), obs)
+    run_fleet_core(tasks, arch, kb, cfg, fleet, Some(memo), &mut NullStore, obs)
+        .expect("null store never fails")
 }
 
+/// The full committer: [`run_fleet_memo`]'s pipeline persisting through
+/// an arbitrary [`Store`] backend. `store.commit` runs after each delta
+/// is folded in (task order — durability inherits the determinism
+/// contract); a store failure aborts the batch with the error, leaving
+/// the in-memory KB at the last committed task. The store is *not*
+/// flushed — callers own the end-of-run flush (the batch CLI's final
+/// save, the serve daemon's shutdown snapshot).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_store(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    kb: &mut KnowledgeBase,
+    cfg: &IcrlConfig,
+    fleet: &FleetConfig,
+    memo: Option<&mut VerifyMemo>,
+    store: &mut dyn Store,
+    obs: &mut dyn FleetObserver,
+) -> Result<FleetOutcome, PersistError> {
+    run_fleet_core(tasks, arch, kb, cfg, fleet, memo, store, obs)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_fleet_core(
     tasks: &[&Task],
     arch: &GpuArch,
@@ -271,8 +434,9 @@ fn run_fleet_core(
     cfg: &IcrlConfig,
     fleet: &FleetConfig,
     mut memo: Option<&mut VerifyMemo>,
+    store: &mut dyn Store,
     obs: &mut dyn FleetObserver,
-) -> FleetOutcome {
+) -> Result<FleetOutcome, PersistError> {
     let epoch_size = fleet.epoch_size.max(1);
     let workers = fleet.workers.max(1);
     let ephemeral = cfg.kb_mode == KbMode::EphemeralPerTask;
@@ -325,6 +489,10 @@ fn run_fleet_core(
                 epoch_lines.extend(delta.lineage_added.iter().cloned());
                 lifecycle::apply_delta(kb, &delta);
                 commits += 1;
+                // Persist the exact delta that was folded in (after the
+                // lineage strip), so a journaling backend's replay
+                // repeats this commit verbatim.
+                store.commit(&delta, kb)?;
             }
             // Memo verdicts commit in task order regardless of KB mode —
             // verification truths are mode-independent. Insert-or-ignore
@@ -341,12 +509,12 @@ fn run_fleet_core(
         obs.epoch_committed(epochs, commits, kb);
         offset += chunk.len();
     }
-    FleetOutcome {
+    Ok(FleetOutcome {
         runs,
         epochs,
         commits,
         tiers,
-    }
+    })
 }
 
 /// One epoch's inputs, bundled: the task chunk, its global offset, the
@@ -460,22 +628,26 @@ fn epoch_results(job: &EpochJob<'_>) -> Vec<TaskResult> {
 
 /// Crash-safe KB checkpoint: write the serialized document to a `.tmp`
 /// sibling, then atomically rename it over `path`. On any error the
-/// previous checkpoint (if one exists) is left untouched.
-pub fn checkpoint_atomic(kb: &KnowledgeBase, path: &Path) -> Result<(), String> {
+/// previous checkpoint (if one exists) is left untouched. Errors carry
+/// their step context as [`PersistError::Store`] — the unified
+/// persistence error surface (see [`crate::kb::persist`]).
+pub fn checkpoint_atomic(kb: &KnowledgeBase, path: &Path) -> Result<(), PersistError> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).map_err(|e| format!("mkdir: {e}"))?;
+            std::fs::create_dir_all(parent)
+                .map_err(|e| PersistError::Store(format!("mkdir: {e}")))?;
         }
     }
     let mut tmp_name = path.file_name().map(|f| f.to_os_string()).ok_or_else(|| {
-        format!("checkpoint path has no file name: {}", path.display())
+        PersistError::Store(format!("checkpoint path has no file name: {}", path.display()))
     })?;
     tmp_name.push(".tmp");
     let tmp = path.with_file_name(tmp_name);
     std::fs::write(&tmp, persist::to_json(kb).to_string_pretty())
-        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+        .map_err(|e| PersistError::Store(format!("write {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        PersistError::Store(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    })
 }
 
 #[cfg(test)]
@@ -762,6 +934,66 @@ mod tests {
             &mut NullObserver,
         );
         assert!(memo3.is_empty());
+    }
+
+    #[test]
+    fn store_backends_do_not_perturb_results_and_checkpoint_on_cadence() {
+        let suite = Suite::full();
+        let tasks: Vec<&Task> = vec![
+            suite.by_id("L1/01_matmul_square").unwrap(),
+            suite.by_id("L1/12_softmax").unwrap(),
+            suite.by_id("L1/15_relu").unwrap(),
+        ];
+        let arch = GpuArch::h100();
+        let fleet = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            ..Default::default()
+        };
+        let mut kb_null = KnowledgeBase::empty();
+        let out_null = run_fleet(&tasks, &arch, &mut kb_null, &quick_cfg(), &fleet);
+        let dir = std::env::temp_dir().join("kb_fleet_store_backend_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("kb.json");
+        let mut wf = WholeFileStore::new(&ckpt, 2);
+        let mut kb_wf = KnowledgeBase::empty();
+        let out_wf = run_fleet_store(
+            &tasks,
+            &arch,
+            &mut kb_wf,
+            &quick_cfg(),
+            &fleet,
+            None,
+            &mut wf,
+            &mut NullObserver,
+        )
+        .unwrap();
+        assert_eq!(out_null.runs, out_wf.runs, "store must not perturb results");
+        assert_eq!(kb_null, kb_wf);
+        assert_eq!(wf.checkpoints(), 1, "cadence of 2 over 3 commits");
+        assert!(persist::load(&ckpt).is_ok());
+        // A LogStore backend journals every commit and recovers the
+        // exact shared KB.
+        let sdir = dir.join("store");
+        let mut ls = LogStore::create(&sdir, &KnowledgeBase::empty()).unwrap();
+        let mut kb_ls = KnowledgeBase::empty();
+        let out_ls = run_fleet_store(
+            &tasks,
+            &arch,
+            &mut kb_ls,
+            &quick_cfg(),
+            &fleet,
+            None,
+            &mut ls,
+            &mut NullObserver,
+        )
+        .unwrap();
+        assert_eq!(out_null.runs, out_ls.runs);
+        assert_eq!(kb_null, kb_ls);
+        let (recovered, _) = LogStore::recover(&sdir).unwrap();
+        assert_eq!(recovered, kb_ls, "journal replay must be bit-exact");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

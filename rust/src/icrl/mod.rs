@@ -65,7 +65,8 @@ pub use driver::{
     optimize_task_verified, run_suite, warm_start_kb, IcrlConfig, KbMode, StepLog, TaskRun,
 };
 pub use fleet::{
-    auto_epoch_policy, run_fleet, run_fleet_memo, run_fleet_observed, FleetConfig, FleetOutcome,
+    auto_epoch_policy, run_fleet, run_fleet_memo, run_fleet_observed, run_fleet_store,
+    FleetConfig, FleetOutcome, NullStore, Store, WholeFileStore,
 };
 pub use policy::{
     BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, Portfolio, Schedule,

@@ -38,6 +38,14 @@
 //! fields, so pre-lifecycle `kernelblaster-kb-v1` documents still parse
 //! and re-serialize byte-identically.
 //!
+//! # Serving durability
+//!
+//! [`persist`] remains the whole-file artifact format; [`store`] adds a
+//! log-structured engine (append-only delta journal + compacted
+//! snapshots) for the long-lived serving path, where rewriting the whole
+//! document per commit is too slow and too fragile. Recovery replays the
+//! journal through [`lifecycle::apply_delta`] and is bit-exact.
+//!
 //! Position in the MAIC-RL loop (profile → state-extract → **KB match** →
 //! lower → verify): [`crate::icrl`] matches the extracted
 //! [`StateSig`] here, [`crate::agents::textgrad`] writes measured rewards
@@ -49,6 +57,7 @@
 pub mod lifecycle;
 pub mod persist;
 pub mod skills;
+pub mod store;
 
 use crate::gpu::Bottleneck;
 use crate::kir::KernelGraph;

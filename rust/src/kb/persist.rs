@@ -97,7 +97,10 @@ fn round3(x: f64) -> f64 {
     (x * 1000.0).round() / 1000.0
 }
 
-/// Everything that can go wrong loading/saving a KB document.
+/// Everything that can go wrong persisting a KB — whole-file documents,
+/// atomic checkpoints ([`crate::icrl::fleet::checkpoint_atomic`]), and
+/// the log-structured store ([`super::store`]) all route through this
+/// one type, so every persistence caller handles one error surface.
 #[derive(Debug, thiserror::Error)]
 pub enum PersistError {
     /// Filesystem failure reading or writing the document.
@@ -109,6 +112,11 @@ pub enum PersistError {
     /// Valid JSON, but not a well-formed `kernelblaster-kb-v1` document.
     #[error("schema: {0}")]
     Schema(String),
+    /// Log-structured store failure with its context: a corrupt journal
+    /// record or snapshot, a checkpoint step that failed mid-rename, or
+    /// any other store-path error that carries its own message.
+    #[error("store: {0}")]
+    Store(String),
 }
 
 /// Parse a v1 document back into a [`KnowledgeBase`] (rebuilding the

@@ -1,0 +1,872 @@
+//! Log-structured KB storage — the `kernelblaster-log-v1` journal and
+//! its compacted snapshots.
+//!
+//! Whole-file saves ([`super::persist`]) are the right artifact format —
+//! human-diffable, releasable — but the wrong *serving* format: a daemon
+//! committing a delta every few seconds cannot rewrite a growing
+//! document on every commit, and a crash mid-rewrite costs everything
+//! since the last save. [`LogStore`] replaces the serving path with the
+//! classic log-structured pair:
+//!
+//! - an **append-only delta journal** (`journal.log`) — one
+//!   length-prefixed, checksummed record per committed
+//!   [`lifecycle::KbDelta`], so a commit costs O(touched entries), not
+//!   O(KB);
+//! - a **compacted snapshot** (`snapshot.json`) — the full KB plus the
+//!   last journal sequence number folded into it, rewritten every
+//!   [`LogStore::snapshot_every`] commits (and on graceful shutdown),
+//!   which resets the journal.
+//!
+//! Recovery ([`LogStore::recover`]) loads the snapshot, then replays
+//! every journal record with `seq > last_seq` through
+//! [`lifecycle::apply_delta`] — the exact function the live committer
+//! used — so the reconstructed KB is **bit-identical** to the KB at the
+//! last durable commit. A torn final record (crash mid-append) is
+//! tolerated silently; anything else malformed is an error, because
+//! valid data after a damaged record means corruption, not a crash.
+//!
+//! # Wire format
+//!
+//! `journal.log` line 1 is the magic string `kernelblaster-log-v1`.
+//! Every subsequent line is one record:
+//!
+//! ```text
+//! LEN HEX16 JSON\n
+//! ```
+//!
+//! where `LEN` is the byte length of `JSON`, `HEX16` is the FNV-1a 64
+//! checksum of the `JSON` bytes ([`crate::util::hash::fnv1a64_bytes`],
+//! rendered `{:016x}`), and `JSON` is the compact record document:
+//! `seq` (strictly monotone, 1-based), then the delta — optional
+//! `arch`, optional `lineage_added`, `updates_added`, and `states`
+//! (each with `sig`, `visits_added`, optional `base` entry, `grown`
+//! entry). `snapshot.json` is a `kernelblaster-log-snapshot-v1`
+//! document: `last_seq` plus the full state table, written with the
+//! atomic tmp+rename discipline.
+//!
+//! # Full precision, deliberately
+//!
+//! Unlike the kb-v1 artifact (which rounds gains to 3 decimals for
+//! diffability), journal and snapshot documents serialize every gain at
+//! **full f64 precision** (the shortest-roundtrip rendering of
+//! [`crate::util::json`]). This is load-bearing: [`apply_delta`]'s
+//! replay-or-fold decision compares entries for *exact* equality with
+//! the delta's recorded base, so recovery must reconstruct bit-exact
+//! floats or replay would silently fold where the live commit replayed.
+//! Non-finite gains are not representable (they serialize as `null`);
+//! the driver never produces them.
+//!
+//! # Dirty-entry tracking
+//!
+//! The store tracks which [`StateSig`]s the journal tail has touched
+//! since the last snapshot. Commits serialize only the touched entries
+//! (the delta's own states); the dirty set additionally lets
+//! [`LogStore::maybe_snapshot`] skip compaction work when nothing
+//! changed and gives `serve stats` its dirty-entry counter.
+//!
+//! # Crash windows
+//!
+//! - **mid-append** — the torn final record fails its length/checksum
+//!   check and is dropped; the KB recovers to the previous commit.
+//! - **mid-snapshot** — the half-written `snapshot.json.tmp` is ignored
+//!   (never renamed into place); recovery uses the old snapshot and the
+//!   full journal.
+//! - **after snapshot rename, before journal reset** — the journal
+//!   still holds records the snapshot already folded in; replay skips
+//!   every `seq <= last_seq`, so nothing double-applies.
+//!
+//! [`lifecycle::KbDelta`]: super::lifecycle::KbDelta
+//! [`apply_delta`]: super::lifecycle::apply_delta
+
+use super::lifecycle::{self, KbDelta, StateDelta};
+use super::persist::PersistError;
+use super::{KnowledgeBase, OptEntry, SkillEntry, StateEntry, StateSig};
+use crate::opts::Technique;
+use crate::util::hash::fnv1a64_bytes;
+use crate::util::json::{Json, JsonObj};
+use std::collections::BTreeSet;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Magic first line of a journal file.
+pub const JOURNAL_MAGIC: &str = "kernelblaster-log-v1";
+/// Format string of a snapshot document.
+pub const SNAPSHOT_FORMAT: &str = "kernelblaster-log-snapshot-v1";
+/// Journal file name inside a store directory.
+pub const JOURNAL_FILE: &str = "journal.log";
+/// Snapshot file name inside a store directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// Counters a long-lived server reports (`serve stats`, BENCH_serve).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreStats {
+    /// Journal records appended through this handle.
+    pub commits: u64,
+    /// Snapshots written through this handle (compactions).
+    pub compactions: u64,
+    /// Highest journal sequence number assigned so far.
+    pub last_seq: u64,
+    /// Sequence number folded into the newest snapshot.
+    pub snapshot_seq: u64,
+    /// Records currently in the journal tail (since the last snapshot).
+    pub journal_records: u64,
+    /// Distinct state signatures the journal tail has touched.
+    pub dirty_entries: usize,
+}
+
+/// The log-structured storage engine. Owns no KB — it is a pure
+/// durability layer: callers keep the live [`KnowledgeBase`] and hand
+/// the store each committed delta ([`Self::append`]) and, on cadence or
+/// shutdown, the full KB to compact ([`Self::snapshot`]). See the
+/// module docs for the wire format and the recovery contract.
+#[derive(Debug)]
+pub struct LogStore {
+    dir: PathBuf,
+    /// Sequence number the next appended record receives.
+    next_seq: u64,
+    snapshot_seq: u64,
+    records_since_snapshot: u64,
+    /// Auto-compaction cadence for [`Self::maybe_snapshot`]: write a
+    /// snapshot once the journal tail holds this many records
+    /// (0 = never compact automatically).
+    pub snapshot_every: u64,
+    dirty: BTreeSet<String>,
+    commits: u64,
+    compactions: u64,
+}
+
+impl LogStore {
+    /// Initialize a fresh store at `dir` from `kb`: writes an initial
+    /// snapshot (so recovery is always well-defined) and an empty
+    /// journal, replacing any store already there.
+    pub fn create(dir: &Path, kb: &KnowledgeBase) -> Result<LogStore, PersistError> {
+        std::fs::create_dir_all(dir)?;
+        let mut store = LogStore {
+            dir: dir.to_path_buf(),
+            next_seq: 1,
+            snapshot_seq: 0,
+            records_since_snapshot: 0,
+            snapshot_every: 0,
+            dirty: BTreeSet::new(),
+            commits: 0,
+            compactions: 0,
+        };
+        store.write_snapshot(kb)?;
+        store.reset_journal()?;
+        // `create` establishes the baseline; it is not a compaction.
+        store.compactions = 0;
+        Ok(store)
+    }
+
+    /// True when `dir` holds a recoverable store (a snapshot exists).
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(SNAPSHOT_FILE).is_file()
+    }
+
+    /// Recover the KB from the store at `dir`: load the snapshot, then
+    /// replay the journal tail (`seq > last_seq`) through
+    /// [`lifecycle::apply_delta`]. A torn final record is tolerated; a
+    /// damaged record with valid records after it is an error.
+    pub fn recover(dir: &Path) -> Result<(KnowledgeBase, LogStore), PersistError> {
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        let text = std::fs::read_to_string(&snap_path).map_err(|e| {
+            PersistError::Store(format!("read snapshot {}: {e}", snap_path.display()))
+        })?;
+        let (mut kb, snapshot_seq) = snapshot_from_json(&Json::parse(&text)?)?;
+        let journal_path = dir.join(JOURNAL_FILE);
+        let mut last_seq = snapshot_seq;
+        let mut records = 0u64;
+        let mut dirty = BTreeSet::new();
+        if journal_path.is_file() {
+            let bytes = std::fs::read(&journal_path)?;
+            for (seq, delta) in replay_journal(&bytes, snapshot_seq)? {
+                lifecycle::apply_delta(&mut kb, &delta);
+                for sd in &delta.states {
+                    dirty.insert(sd.sig.id());
+                }
+                last_seq = seq;
+                records += 1;
+            }
+        } else {
+            // A store created before its first journal write (or whose
+            // journal reset crashed after the snapshot rename): fine,
+            // the snapshot alone is the state. Re-create the journal so
+            // appends have somewhere to land.
+        }
+        let mut store = LogStore {
+            dir: dir.to_path_buf(),
+            next_seq: last_seq + 1,
+            snapshot_seq,
+            records_since_snapshot: records,
+            snapshot_every: 0,
+            dirty,
+            commits: 0,
+            compactions: 0,
+        };
+        if !journal_path.is_file() {
+            store.reset_journal()?;
+        }
+        Ok((kb, store))
+    }
+
+    /// Append one committed delta to the journal, returning its
+    /// sequence number. Call *after* [`lifecycle::apply_delta`] folded
+    /// the same delta into the live KB — replaying the journal must
+    /// repeat exactly what the live committer did.
+    pub fn append(&mut self, delta: &KbDelta) -> Result<u64, PersistError> {
+        let seq = self.next_seq;
+        let json = record_to_json(seq, delta).to_string_compact();
+        let line = format!(
+            "{} {:016x} {}\n",
+            json.len(),
+            fnv1a64_bytes(json.as_bytes()),
+            json
+        );
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(self.journal_path())
+            .map_err(|e| {
+                PersistError::Store(format!("open journal {}: {e}", self.journal_path().display()))
+            })?;
+        f.write_all(line.as_bytes())?;
+        self.next_seq += 1;
+        self.records_since_snapshot += 1;
+        self.commits += 1;
+        for sd in &delta.states {
+            self.dirty.insert(sd.sig.id());
+        }
+        Ok(seq)
+    }
+
+    /// Compact: write a full snapshot of `kb` (which must be the live
+    /// KB with every appended delta folded in) and reset the journal.
+    pub fn snapshot(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError> {
+        self.write_snapshot(kb)?;
+        self.reset_journal()?;
+        Ok(())
+    }
+
+    /// [`Self::snapshot`] on cadence: compacts once the journal tail
+    /// reaches [`Self::snapshot_every`] records. Returns whether a
+    /// snapshot was written.
+    pub fn maybe_snapshot(&mut self, kb: &KnowledgeBase) -> Result<bool, PersistError> {
+        if self.snapshot_every == 0 || self.records_since_snapshot < self.snapshot_every {
+            return Ok(false);
+        }
+        self.snapshot(kb)?;
+        Ok(true)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            commits: self.commits,
+            compactions: self.compactions,
+            last_seq: self.next_seq - 1,
+            snapshot_seq: self.snapshot_seq,
+            journal_records: self.records_since_snapshot,
+            dirty_entries: self.dirty.len(),
+        }
+    }
+
+    /// The store's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the journal file.
+    pub fn journal_path(&self) -> PathBuf {
+        self.dir.join(JOURNAL_FILE)
+    }
+
+    /// Path of the snapshot file.
+    pub fn snapshot_path(&self) -> PathBuf {
+        self.dir.join(SNAPSHOT_FILE)
+    }
+
+    /// Atomic snapshot write: tmp + rename, like every checkpoint in
+    /// this crate.
+    fn write_snapshot(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError> {
+        let last_seq = self.next_seq - 1;
+        let path = self.snapshot_path();
+        let tmp = self.dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+        std::fs::write(&tmp, snapshot_to_json(kb, last_seq).to_string_pretty())
+            .map_err(|e| PersistError::Store(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            PersistError::Store(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+        })?;
+        self.snapshot_seq = last_seq;
+        self.compactions += 1;
+        Ok(())
+    }
+
+    /// Reset the journal to magic-only, atomically (tmp + rename), so a
+    /// crash between the snapshot rename and this reset leaves only
+    /// already-folded records behind (skipped on replay by seq).
+    fn reset_journal(&mut self) -> Result<(), PersistError> {
+        let path = self.journal_path();
+        let tmp = self.dir.join(format!("{JOURNAL_FILE}.tmp"));
+        std::fs::write(&tmp, format!("{JOURNAL_MAGIC}\n"))
+            .map_err(|e| PersistError::Store(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &path).map_err(|e| {
+            PersistError::Store(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+        })?;
+        self.records_since_snapshot = 0;
+        self.dirty.clear();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full-precision JSON spellings (see module docs §Full precision).
+
+fn opt_to_json(o: &OptEntry) -> Json {
+    let mut j = JsonObj::new();
+    j.set("technique", o.technique.name());
+    j.set("expected_gain", o.expected_gain);
+    j.set("attempts", o.attempts);
+    j.set("successes", o.successes);
+    j.set("last_gain", o.last_gain);
+    if let Some(origin) = &o.origin {
+        j.set("origin", origin.as_str());
+    }
+    if !o.notes.is_empty() {
+        j.set(
+            "notes",
+            Json::Arr(o.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+    }
+    Json::Obj(j)
+}
+
+fn opt_from_json(j: &Json, ctx: &str) -> Result<OptEntry, PersistError> {
+    let bad = |m: String| PersistError::Store(m);
+    let tname = j
+        .get("technique")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad(format!("{ctx}: opt missing technique")))?;
+    let technique = Technique::from_name(tname)
+        .ok_or_else(|| bad(format!("{ctx}: unknown technique '{tname}'")))?;
+    Ok(OptEntry {
+        technique,
+        expected_gain: j
+            .get("expected_gain")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad(format!("{ctx}: opt missing expected_gain")))?,
+        attempts: j.get("attempts").and_then(Json::as_usize).unwrap_or(0),
+        successes: j.get("successes").and_then(Json::as_usize).unwrap_or(0),
+        last_gain: j
+            .get("last_gain")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad(format!("{ctx}: opt missing last_gain")))?,
+        origin: j.get("origin").and_then(Json::as_str).map(String::from),
+        notes: j
+            .get("notes")
+            .and_then(Json::as_arr)
+            .map(|ns| ns.iter().filter_map(|n| n.as_str().map(String::from)).collect())
+            .unwrap_or_default(),
+    })
+}
+
+fn skill_to_json(k: &SkillEntry) -> Json {
+    let mut j = JsonObj::new();
+    j.set(
+        "techniques",
+        Json::Arr(
+            k.techniques
+                .iter()
+                .map(|t| Json::Str(t.name().to_string()))
+                .collect(),
+        ),
+    );
+    j.set("expected_gain", k.expected_gain);
+    j.set("support", k.support);
+    j.set("attempts", k.attempts);
+    j.set("successes", k.successes);
+    j.set("last_gain", k.last_gain);
+    if let Some(origin) = &k.origin {
+        j.set("origin", origin.as_str());
+    }
+    Json::Obj(j)
+}
+
+fn skill_from_json(j: &Json, ctx: &str) -> Result<SkillEntry, PersistError> {
+    let bad = |m: String| PersistError::Store(m);
+    let chain = j
+        .get("techniques")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad(format!("{ctx}: skill missing techniques")))?;
+    let mut techniques = Vec::with_capacity(chain.len());
+    for tj in chain {
+        let tname = tj
+            .as_str()
+            .ok_or_else(|| bad(format!("{ctx}: skill technique not a string")))?;
+        techniques.push(
+            Technique::from_name(tname)
+                .ok_or_else(|| bad(format!("{ctx}: unknown technique '{tname}'")))?,
+        );
+    }
+    if techniques.is_empty() {
+        return Err(bad(format!("{ctx}: skill with empty technique chain")));
+    }
+    Ok(SkillEntry {
+        techniques,
+        expected_gain: j
+            .get("expected_gain")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad(format!("{ctx}: skill missing expected_gain")))?,
+        support: j.get("support").and_then(Json::as_usize).unwrap_or(0),
+        attempts: j.get("attempts").and_then(Json::as_usize).unwrap_or(0),
+        successes: j.get("successes").and_then(Json::as_usize).unwrap_or(0),
+        last_gain: j
+            .get("last_gain")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad(format!("{ctx}: skill missing last_gain")))?,
+        origin: j.get("origin").and_then(Json::as_str).map(String::from),
+    })
+}
+
+fn entry_to_json(e: &StateEntry) -> Json {
+    let mut j = JsonObj::new();
+    j.set("state", e.sig.id());
+    j.set("visits", e.visits);
+    j.set("optimizations", Json::Arr(e.opts.iter().map(opt_to_json).collect()));
+    if !e.skills.is_empty() {
+        j.set("skills", Json::Arr(e.skills.iter().map(skill_to_json).collect()));
+    }
+    Json::Obj(j)
+}
+
+fn entry_from_json(j: &Json, ctx: &str) -> Result<StateEntry, PersistError> {
+    let bad = |m: String| PersistError::Store(m);
+    let sig_str = j
+        .get("state")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad(format!("{ctx}: entry missing state sig")))?;
+    let sig = StateSig::parse(sig_str)
+        .ok_or_else(|| bad(format!("{ctx}: unparseable state sig '{sig_str}'")))?;
+    let mut entry = StateEntry::new(sig);
+    entry.visits = j.get("visits").and_then(Json::as_usize).unwrap_or(0);
+    if let Some(opts) = j.get("optimizations").and_then(Json::as_arr) {
+        for oj in opts {
+            entry.push_opt(opt_from_json(oj, ctx)?);
+        }
+    }
+    if let Some(skills) = j.get("skills").and_then(Json::as_arr) {
+        for kj in skills {
+            entry.skills.push(skill_from_json(kj, ctx)?);
+        }
+    }
+    Ok(entry)
+}
+
+fn record_to_json(seq: u64, delta: &KbDelta) -> Json {
+    let mut j = JsonObj::new();
+    j.set("seq", seq);
+    if let Some(arch) = &delta.arch {
+        j.set("arch", arch.as_str());
+    }
+    if !delta.lineage_added.is_empty() {
+        j.set(
+            "lineage_added",
+            Json::Arr(delta.lineage_added.iter().map(|l| Json::Str(l.clone())).collect()),
+        );
+    }
+    j.set("updates_added", delta.updates_added);
+    let states: Vec<Json> = delta
+        .states
+        .iter()
+        .map(|sd| {
+            let mut s = JsonObj::new();
+            s.set("sig", sd.sig.id());
+            s.set("visits_added", sd.visits_added);
+            if let Some(base) = &sd.base {
+                s.set("base", entry_to_json(base));
+            }
+            s.set("grown", entry_to_json(&sd.grown));
+            Json::Obj(s)
+        })
+        .collect();
+    j.set("states", Json::Arr(states));
+    Json::Obj(j)
+}
+
+fn record_from_json(j: &Json) -> Result<(u64, KbDelta), PersistError> {
+    let bad = |m: &str| PersistError::Store(format!("journal record: {m}"));
+    let seq = j
+        .get("seq")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| bad("missing seq"))? as u64;
+    let mut states = Vec::new();
+    for (i, sj) in j
+        .get("states")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing states"))?
+        .iter()
+        .enumerate()
+    {
+        let ctx = format!("journal record seq {seq}, state {i}");
+        let sig_str = sj
+            .get("sig")
+            .and_then(Json::as_str)
+            .ok_or_else(|| PersistError::Store(format!("{ctx}: missing sig")))?;
+        let sig = StateSig::parse(sig_str)
+            .ok_or_else(|| PersistError::Store(format!("{ctx}: unparseable sig '{sig_str}'")))?;
+        let base = match sj.get("base") {
+            Some(b) => Some(entry_from_json(b, &ctx)?),
+            None => None,
+        };
+        let grown = entry_from_json(
+            sj.get("grown")
+                .ok_or_else(|| PersistError::Store(format!("{ctx}: missing grown")))?,
+            &ctx,
+        )?;
+        states.push(StateDelta {
+            sig,
+            visits_added: sj.get("visits_added").and_then(Json::as_usize).unwrap_or(0),
+            base,
+            grown,
+        });
+    }
+    Ok((
+        seq,
+        KbDelta {
+            arch: j.get("arch").and_then(Json::as_str).map(String::from),
+            lineage_added: j
+                .get("lineage_added")
+                .and_then(Json::as_arr)
+                .map(|ls| ls.iter().filter_map(|l| l.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+            updates_added: j.get("updates_added").and_then(Json::as_usize).unwrap_or(0),
+            states,
+        },
+    ))
+}
+
+fn snapshot_to_json(kb: &KnowledgeBase, last_seq: u64) -> Json {
+    let mut j = JsonObj::new();
+    j.set("format", SNAPSHOT_FORMAT);
+    j.set("last_seq", last_seq);
+    if let Some(arch) = &kb.arch {
+        j.set("arch", arch.as_str());
+    }
+    if !kb.lineage.is_empty() {
+        j.set(
+            "lineage",
+            Json::Arr(kb.lineage.iter().map(|l| Json::Str(l.clone())).collect()),
+        );
+    }
+    j.set("updates", kb.updates);
+    j.set("states", Json::Arr(kb.states.iter().map(entry_to_json).collect()));
+    Json::Obj(j)
+}
+
+fn snapshot_from_json(j: &Json) -> Result<(KnowledgeBase, u64), PersistError> {
+    let bad = |m: &str| PersistError::Store(format!("snapshot: {m}"));
+    let fmt = j
+        .get("format")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("missing format"))?;
+    if fmt != SNAPSHOT_FORMAT {
+        return Err(bad(&format!("unknown format '{fmt}'")));
+    }
+    let last_seq = j
+        .get("last_seq")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| bad("missing last_seq"))? as u64;
+    let mut kb = KnowledgeBase::empty();
+    kb.arch = j.get("arch").and_then(Json::as_str).map(String::from);
+    if let Some(lineage) = j.get("lineage").and_then(Json::as_arr) {
+        kb.lineage = lineage
+            .iter()
+            .filter_map(|l| l.as_str().map(String::from))
+            .collect();
+    }
+    kb.updates = j.get("updates").and_then(Json::as_usize).unwrap_or(0);
+    for (i, sj) in j
+        .get("states")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing states"))?
+        .iter()
+        .enumerate()
+    {
+        let entry = entry_from_json(sj, &format!("snapshot state {i}"))?;
+        kb.insert_state(entry);
+    }
+    Ok((kb, last_seq))
+}
+
+/// Parse one journal line into its record JSON, validating the length
+/// prefix and the checksum. `None` = malformed (torn or damaged).
+fn parse_record_line(line: &str) -> Option<Json> {
+    let (len_str, rest) = line.split_once(' ')?;
+    let (hex, json) = rest.split_once(' ')?;
+    let len: usize = len_str.parse().ok()?;
+    if hex.len() != 16 || json.len() != len {
+        return None;
+    }
+    let sum = u64::from_str_radix(hex, 16).ok()?;
+    if fnv1a64_bytes(json.as_bytes()) != sum {
+        return None;
+    }
+    Json::parse(json).ok()
+}
+
+/// Replay a journal's bytes: validate the magic, parse records, skip
+/// those already folded into the snapshot (`seq <= snapshot_seq`),
+/// enforce monotone sequence numbers, and apply the torn-tail contract
+/// (first malformed line ends the journal IF nothing valid follows).
+fn replay_journal(bytes: &[u8], snapshot_seq: u64) -> Result<Vec<(u64, KbDelta)>, PersistError> {
+    // A torn multi-byte write can leave invalid UTF-8 in the final
+    // record; lossy decoding keeps earlier (ASCII-framed) records
+    // intact and makes the torn one fail its checksum, as it should.
+    let text = String::from_utf8_lossy(bytes);
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(JOURNAL_MAGIC) => {}
+        Some(other) => {
+            return Err(PersistError::Store(format!(
+                "journal magic mismatch: expected '{JOURNAL_MAGIC}', found '{other}'"
+            )))
+        }
+        None => return Ok(Vec::new()),
+    }
+    let rest: Vec<&str> = lines.collect();
+    let mut out = Vec::new();
+    let mut prev_seq = 0u64;
+    for (i, line) in rest.iter().enumerate() {
+        let parsed = if line.is_empty() { None } else { parse_record_line(line) };
+        let Some(json) = parsed else {
+            // Torn tail or corruption: tolerated only if no valid
+            // record follows the damage.
+            let valid_after = rest[i + 1..]
+                .iter()
+                .any(|l| !l.is_empty() && parse_record_line(l).is_some());
+            if valid_after {
+                return Err(PersistError::Store(format!(
+                    "corrupt journal: record {} is damaged but valid records follow it",
+                    i + 1
+                )));
+            }
+            break;
+        };
+        let (seq, delta) = record_from_json(&json)?;
+        if seq <= prev_seq {
+            return Err(PersistError::Store(format!(
+                "corrupt journal: non-monotone seq {seq} after {prev_seq}"
+            )));
+        }
+        prev_seq = seq;
+        if seq <= snapshot_seq {
+            continue; // already folded into the snapshot
+        }
+        out.push((seq, delta));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Bottleneck;
+    use crate::kb::WorkloadClass;
+
+    fn sig(p: Bottleneck, s: Bottleneck) -> StateSig {
+        StateSig {
+            primary: p,
+            secondary: s,
+            workload: WorkloadClass::ContractionHeavy,
+        }
+    }
+
+    /// A commit sequence with full-precision (non-round3-able) gains.
+    fn grow(kb: &KnowledgeBase, gain: f64, note: &str) -> KbDelta {
+        let mut g = kb.clone();
+        let s = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let m = g.match_state(s);
+        g.update_score(m.index(), Technique::SharedMemoryTiling, gain, Some(note.into()));
+        lifecycle::extract_delta(kb, &g)
+    }
+
+    fn temp_store_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("kb_store_unit_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn append_replay_reconstructs_exact_kb() {
+        let dir = temp_store_dir("roundtrip");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        // Gains with no finite decimal expansion: round3 would destroy
+        // them — the store must not.
+        for (i, gain) in [1.0 + 1.0 / 3.0, 2.0 / 7.0 + 1.0, 1.2345678901234567].iter().enumerate() {
+            let delta = grow(&kb, *gain, &format!("note {i}"));
+            lifecycle::apply_delta(&mut kb, &delta);
+            store.append(&delta).unwrap();
+        }
+        let (recovered, rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb, "replay must be bit-identical");
+        assert_eq!(rstore.stats().journal_records, 3);
+        assert_eq!(rstore.stats().last_seq, 3);
+        assert_eq!(rstore.stats().dirty_entries, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_resets_journal_and_recovery_still_exact() {
+        let dir = temp_store_dir("snapshot");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        store.snapshot_every = 2;
+        for i in 0..5 {
+            let delta = grow(&kb, 1.0 + (i as f64) / 3.0, "n");
+            lifecycle::apply_delta(&mut kb, &delta);
+            store.append(&delta).unwrap();
+            store.maybe_snapshot(&kb).unwrap();
+        }
+        let st = store.stats();
+        assert_eq!(st.commits, 5);
+        assert_eq!(st.compactions, 2, "cadence of 2 over 5 commits");
+        assert_eq!(st.journal_records, 1, "journal reset after snapshots");
+        let (recovered, _) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_final_record_is_tolerated() {
+        let dir = temp_store_dir("torn");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        let d1 = grow(&kb, 1.5, "kept");
+        lifecycle::apply_delta(&mut kb, &d1);
+        store.append(&d1).unwrap();
+        let after_first = kb.clone();
+        let d2 = grow(&kb, 2.5, "torn");
+        lifecycle::apply_delta(&mut kb, &d2);
+        store.append(&d2).unwrap();
+        // Simulate a crash mid-append: chop bytes off the last record.
+        let path = store.journal_path();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 17);
+        std::fs::write(&path, &bytes).unwrap();
+        let (recovered, mut rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, after_first, "recover to the last durable commit");
+        assert_eq!(rstore.stats().last_seq, 1);
+        // The next append continues the sequence past the torn record.
+        let d3 = grow(&recovered, 3.5, "after");
+        assert_eq!(rstore.append(&d3).unwrap(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn damage_before_valid_records_is_an_error() {
+        let dir = temp_store_dir("damage");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        for gain in [1.5, 2.5] {
+            let d = grow(&kb, gain, "x");
+            lifecycle::apply_delta(&mut kb, &d);
+            store.append(&d).unwrap();
+        }
+        // Flip a byte inside the FIRST record's JSON: its checksum
+        // fails while a valid record still follows — corruption, not a
+        // torn tail.
+        let path = store.journal_path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(String::from).collect();
+        lines[1] = lines[1].replace("updates_added", "upDates_added");
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let err = LogStore::recover(&dir).unwrap_err();
+        assert!(matches!(err, PersistError::Store(_)), "got {err:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_between_snapshot_and_journal_reset_skips_folded_records() {
+        let dir = temp_store_dir("postsnap");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        let d1 = grow(&kb, 1.5, "a");
+        lifecycle::apply_delta(&mut kb, &d1);
+        store.append(&d1).unwrap();
+        let journal_with_d1 = std::fs::read(store.journal_path()).unwrap();
+        store.snapshot(&kb).unwrap();
+        // Simulate the crash window: snapshot renamed, journal reset
+        // lost — put the pre-reset journal back.
+        std::fs::write(store.journal_path(), &journal_with_d1).unwrap();
+        let (recovered, rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb, "seq <= last_seq must not double-apply");
+        assert_eq!(rstore.stats().journal_records, 0);
+        assert_eq!(rstore.stats().last_seq, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_snapshot_tmp_is_ignored() {
+        let dir = temp_store_dir("tornsnap");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        let d = grow(&kb, 1.5, "a");
+        lifecycle::apply_delta(&mut kb, &d);
+        store.append(&d).unwrap();
+        // Simulate a crash mid-snapshot-write: a half-written tmp file
+        // beside an intact old snapshot + journal.
+        std::fs::write(dir.join(format!("{SNAPSHOT_FILE}.tmp")), "{\"format\":\"kernelbl").unwrap();
+        let (recovered, _) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_replaces_existing_store() {
+        let dir = temp_store_dir("replace");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create(&dir, &kb).unwrap();
+        let d = grow(&kb, 1.5, "old");
+        lifecycle::apply_delta(&mut kb, &d);
+        store.append(&d).unwrap();
+        // Re-create from a different KB: the old journal must not leak
+        // into the new store's recovery.
+        let fresh = KnowledgeBase::seed_priors();
+        let _ = LogStore::create(&dir, &fresh).unwrap();
+        let (recovered, rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, fresh);
+        assert_eq!(rstore.stats().journal_records, 0);
+        assert!(LogStore::exists(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recover_missing_store_errors() {
+        let dir = temp_store_dir("missing");
+        assert!(!LogStore::exists(&dir));
+        assert!(matches!(
+            LogStore::recover(&dir),
+            Err(PersistError::Store(_))
+        ));
+    }
+
+    #[test]
+    fn snapshot_preserves_arch_lineage_and_skills() {
+        let dir = temp_store_dir("meta");
+        let mut kb = KnowledgeBase::seed_priors();
+        kb.arch = Some("H100".into());
+        kb.lineage.push("merge(2 inputs, 3 states)".into());
+        kb.states[0].skills.push(SkillEntry {
+            techniques: vec![Technique::MixedPrecision, Technique::TensorCoreUtilization],
+            expected_gain: 2.0 / 3.0 + 1.0,
+            support: 3,
+            attempts: 1,
+            successes: 1,
+            last_gain: 2.25,
+            origin: Some(crate::kb::MINED_ORIGIN.to_string()),
+        });
+        let _ = LogStore::create(&dir, &kb).unwrap();
+        let (recovered, _) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

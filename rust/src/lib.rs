@@ -39,6 +39,7 @@ pub mod kb;
 pub mod kir;
 pub mod opts;
 pub mod runtime;
+pub mod serve;
 pub mod tasks;
 
 pub fn version() -> &'static str {

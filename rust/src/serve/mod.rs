@@ -1,0 +1,694 @@
+//! `kernelblaster serve` — the long-lived optimization daemon.
+//!
+//! The batch tool answers one job file and exits; this module keeps the
+//! process alive and the KB *hot*: a TCP line protocol accepts
+//! optimization requests, each request runs against the live shared KB
+//! (snapshot-in / delta-out, the same contract as the fleet's workers),
+//! and every committed delta is persisted continuously through the
+//! log-structured store ([`crate::kb::store::LogStore`]) — O(delta)
+//! journal appends instead of whole-file rewrites, with periodic
+//! compacted snapshots. Kill the daemon at any point and
+//! `LogStore::recover` reconstructs the exact KB at the last commit.
+//!
+//! # Wire protocol (`kernelblaster-serve-v1`)
+//!
+//! Newline-delimited JSON over TCP (std::net only — no framework).
+//! One request per line; each request produces one or more reply
+//! lines, every reply tagged `"ok": true|false`:
+//!
+//! ```text
+//! {"op":"optimize","task":"L1/15_relu","seed":7}
+//!   → {"ok":true,"op":"optimize","task":"L1/15_relu","seed":7,
+//!      "valid":true,"speedup_vs_naive":1.234,"steps":6,"commits":3}
+//! {"op":"batch","tasks":["L1/12_softmax","L1/15_relu"]}
+//!   → one {"ok":true,"op":"task",...} line per task, then
+//!     {"ok":true,"op":"batch","tasks":2,"valid":2,
+//!      "geomean_vs_naive":1.18,"commits":5}
+//! {"op":"stats"}
+//!   → {"ok":true,"op":"stats","kb_states":…,"served":…,
+//!      "store_commits":…,"store_compactions":…,"memo_entries":…}
+//! {"op":"shutdown"}
+//!   → {"ok":true,"op":"shutdown"}   (then: flush + exit)
+//! ```
+//!
+//! Malformed requests answer `{"ok":false,"error":"…"}` and the daemon
+//! keeps serving. Replies deliberately carry **no wall-clock fields** —
+//! every value is a deterministic function of the request sequence, so
+//! whole transcripts can be pinned as goldens (`tests/serve.rs`).
+//!
+//! # Commit modes
+//!
+//! - **deterministic** (default): batch requests run through the fleet
+//!   pipeline ([`fleet::run_fleet_store`]) — deltas commit in task
+//!   order, so the stored KB bytes are worker-count invariant and equal
+//!   to the whole-file backend's for the same request sequence (the
+//!   serving acceptance criterion, pinned by `tests/serve.rs`).
+//! - **throughput**: batch tasks run on scoped worker threads against
+//!   one request-start snapshot and commit in *completion* order
+//!   (arrival at an mpsc channel). Result lines stream in completion
+//!   order too. Faster first-result latency; the commit order (and
+//!   hence the exact KB evidence folding) depends on scheduling.
+//!
+//! Either way each request's evidence is committed before the reply
+//! lines for it are written — a client that sees an `"ok":true` reply
+//! knows the journal holds the commit.
+//!
+//! # Memo discipline
+//!
+//! Verification verdicts fold into the live [`VerifyMemo`] after each
+//! commit, and `verify.memo_max_entries` (0 = unbounded) applies
+//! [`VerifyMemo::enforce_cap`] after every request — a daemon serving
+//! for days cannot grow its memo without bound. Evictions are counted
+//! and reported by `stats`.
+//!
+//! The experiment harness replays synthetic arrival traces against
+//! [`ServeCore`] directly (no TCP) — see [`crate::experiments::serve`].
+
+#![deny(missing_docs)]
+
+use crate::gpu::GpuArch;
+use crate::harness::memo::{MemoDelta, VerifyMemo};
+use crate::harness::VerifyCache;
+use crate::icrl::fleet::{self, FleetConfig, Store};
+use crate::icrl::{optimize_task_delta_verified, IcrlConfig, TaskRun};
+use crate::kb::lifecycle::{self, KbDelta};
+use crate::kb::persist::PersistError;
+use crate::kb::store::LogStore;
+use crate::kb::KnowledgeBase;
+use crate::tasks::{Suite, Task};
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats::geomean;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Protocol version tag (reported by `stats`).
+pub const PROTOCOL: &str = "kernelblaster-serve-v1";
+
+/// The daemon's state and request handler, decoupled from TCP so golden
+/// tests and the serve experiment can drive it line-by-line in process.
+pub struct ServeCore {
+    suite: Suite,
+    arch: GpuArch,
+    cfg: IcrlConfig,
+    /// Worker-pool shape for batch requests (workers, epoch size, and —
+    /// in deterministic mode — the per-epoch policy machinery).
+    pub fleet: FleetConfig,
+    /// The live shared KB.
+    pub kb: KnowledgeBase,
+    /// Log-structured durability engine; `None` serves purely in
+    /// memory (flush still honors `save_path`).
+    pub store: Option<LogStore>,
+    /// Whole-file KB destination written on [`Self::flush`] (shutdown).
+    pub save_path: Option<PathBuf>,
+    /// The live verification memo (grown only when `verify.staged`).
+    pub memo: VerifyMemo,
+    /// Memo destination written on [`Self::flush`].
+    pub memo_path: Option<PathBuf>,
+    /// Commit mode: task-order fleet pipeline (true, the default) vs
+    /// completion-order streaming (false). See module docs.
+    pub deterministic: bool,
+    served: u64,
+    commits: u64,
+    memo_evictions: u64,
+}
+
+/// What one request line produced: reply lines (one JSON document per
+/// line, in the order they should reach the client) and whether the
+/// daemon should shut down after writing them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReply {
+    /// Reply lines, already serialized.
+    pub lines: Vec<String>,
+    /// True after a `shutdown` request was acknowledged.
+    pub shutdown: bool,
+}
+
+fn err_line(msg: &str) -> String {
+    let mut o = JsonObj::new();
+    o.set("ok", false);
+    o.set("error", msg);
+    Json::Obj(o).to_string_compact()
+}
+
+/// Round to 3 decimals — the reply spelling of speedups, matching the
+/// kb-v1 document's gain rounding so transcripts diff cleanly.
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Fold one task's delta + memo delta into the live state: strip
+/// lineage lines this request already committed (the fleet's
+/// once-per-epoch lineage discipline, applied per request), apply to
+/// the KB, journal through the store, fold the memo delta. Free
+/// function over disjoint `ServeCore` fields so batch runners can hold
+/// task borrows from the suite at the same time.
+fn commit_delta(
+    kb: &mut KnowledgeBase,
+    store: &mut Option<LogStore>,
+    memo: &mut VerifyMemo,
+    commits: &mut u64,
+    mut delta: KbDelta,
+    mdelta: &MemoDelta,
+    seen_lines: &mut Vec<String>,
+) -> Result<(), PersistError> {
+    delta.lineage_added.retain(|l| !seen_lines.contains(l));
+    seen_lines.extend(delta.lineage_added.iter().cloned());
+    lifecycle::apply_delta(kb, &delta);
+    *commits += 1;
+    if let Some(ls) = store.as_mut() {
+        ls.commit(&delta, kb)?;
+    }
+    memo.apply_delta(mdelta);
+    Ok(())
+}
+
+/// The per-task reply line (shared by both batch modes and `optimize`).
+fn task_line(run: &TaskRun, seed: u64) -> String {
+    let mut o = JsonObj::new();
+    o.set("ok", true);
+    o.set("op", "task");
+    o.set("task", run.task_id.as_str());
+    o.set("seed", seed);
+    o.set("valid", run.valid);
+    o.set("speedup_vs_naive", round3(run.speedup_vs_naive()));
+    o.set("steps", run.steps.len());
+    Json::Obj(o).to_string_compact()
+}
+
+/// Deterministic mode: the fleet pipeline commits in task order
+/// through the store; result lines come back in task order. The stored
+/// KB bytes are worker-count invariant (the fleet's contract).
+#[allow(clippy::too_many_arguments)]
+fn batch_deterministic(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    req_cfg: &IcrlConfig,
+    fleet_cfg: &FleetConfig,
+    kb: &mut KnowledgeBase,
+    store: &mut Option<LogStore>,
+    memo: &mut VerifyMemo,
+    commits: &mut u64,
+) -> Result<(Vec<String>, Vec<TaskRun>), PersistError> {
+    let mut null_store = fleet::NullStore;
+    let backend: &mut dyn Store = match store.as_mut() {
+        Some(ls) => ls,
+        None => &mut null_store,
+    };
+    let outcome = fleet::run_fleet_store(
+        tasks,
+        arch,
+        kb,
+        req_cfg,
+        fleet_cfg,
+        Some(memo),
+        backend,
+        &mut fleet::NullObserver,
+    )?;
+    *commits += outcome.commits as u64;
+    let lines = outcome
+        .runs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| task_line(r, i as u64))
+        .collect();
+    Ok((lines, outcome.runs))
+}
+
+/// Throughput mode: every task runs against the request-start snapshot
+/// on a worker pool; deltas commit (and result lines stream) in
+/// completion order. Per-task `run_seed`s are the request-local task
+/// indices, same as the fleet's global-index rule for a fresh batch.
+#[allow(clippy::too_many_arguments)]
+fn batch_throughput(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    req_cfg: &IcrlConfig,
+    workers: usize,
+    kb: &mut KnowledgeBase,
+    store: &mut Option<LogStore>,
+    memo: &mut VerifyMemo,
+    commits: &mut u64,
+) -> Result<(Vec<String>, Vec<TaskRun>), PersistError> {
+    let n = tasks.len();
+    let workers = workers.max(1).min(n);
+    let snapshot = kb.clone();
+    let memo_snap = req_cfg.verify.staged.then(|| memo.clone());
+    let (tx, rx) = mpsc::channel();
+    let next = AtomicUsize::new(0);
+    let mut arrivals: Vec<(usize, TaskRun, KbDelta, MemoDelta)> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let snapshot = &snapshot;
+            let memo_snap = memo_snap.as_ref();
+            scope.spawn(move || {
+                let mut cache = VerifyCache::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let (run, delta, mdelta, _tiers) = optimize_task_delta_verified(
+                        tasks[i],
+                        arch,
+                        snapshot,
+                        req_cfg,
+                        i as u64,
+                        &mut cache,
+                        memo_snap,
+                    );
+                    // A closed receiver just means the main thread
+                    // bailed; the worker drains its queue and exits.
+                    let _ = tx.send((i, run, delta, mdelta));
+                }
+            });
+        }
+        drop(tx);
+        for msg in rx {
+            arrivals.push(msg);
+        }
+    });
+    let mut lines = Vec::with_capacity(n);
+    let mut runs_by_index: Vec<Option<TaskRun>> = (0..n).map(|_| None).collect();
+    let mut seen_lines = Vec::new();
+    for (i, run, delta, mdelta) in arrivals {
+        commit_delta(kb, store, memo, commits, delta, &mdelta, &mut seen_lines)?;
+        lines.push(task_line(&run, i as u64));
+        runs_by_index[i] = Some(run);
+    }
+    let runs = runs_by_index
+        .into_iter()
+        .map(|r| r.expect("every task sends exactly one result"))
+        .collect();
+    Ok((lines, runs))
+}
+
+impl ServeCore {
+    /// A fresh core serving `kb` on `arch`: no store, no save paths, a
+    /// cold memo, deterministic commits. Callers wire the public fields
+    /// afterwards (the CLI sets store/save/memo from its flags).
+    pub fn new(arch: GpuArch, cfg: IcrlConfig, fleet: FleetConfig, kb: KnowledgeBase) -> Self {
+        ServeCore {
+            suite: Suite::full(),
+            arch,
+            cfg,
+            fleet,
+            kb,
+            store: None,
+            save_path: None,
+            memo: VerifyMemo::new(),
+            memo_path: None,
+            deterministic: true,
+            served: 0,
+            commits: 0,
+            memo_evictions: 0,
+        }
+    }
+
+    /// Tasks served so far (monotone; also the default-seed counter).
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Deltas committed into the live KB so far.
+    pub fn commits(&self) -> u64 {
+        self.commits
+    }
+
+    /// Handle one request line, mutating the live state. Never panics
+    /// on client input — malformed requests produce an error line.
+    pub fn handle_line(&mut self, line: &str) -> ServeReply {
+        let reply_err = |msg: &str| ServeReply {
+            lines: vec![err_line(msg)],
+            shutdown: false,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            return reply_err("empty request");
+        }
+        let req = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => return reply_err(&format!("bad json: {e}")),
+        };
+        match req.get("op").and_then(Json::as_str) {
+            Some("optimize") => self.op_optimize(&req),
+            Some("batch") => self.op_batch(&req),
+            Some("stats") => ServeReply {
+                lines: vec![self.stats_line()],
+                shutdown: false,
+            },
+            Some("shutdown") => {
+                let mut o = JsonObj::new();
+                o.set("ok", true);
+                o.set("op", "shutdown");
+                ServeReply {
+                    lines: vec![Json::Obj(o).to_string_compact()],
+                    shutdown: true,
+                }
+            }
+            Some(other) => reply_err(&format!(
+                "unknown op '{other}' (known: optimize batch stats shutdown)"
+            )),
+            None => reply_err("missing op"),
+        }
+    }
+
+    /// Apply the post-request memo cap (no-op when unbounded).
+    fn cap_memo(&mut self) {
+        let max = self.cfg.verify.memo_max_entries;
+        self.memo_evictions += self.memo.enforce_cap(max) as u64;
+    }
+
+    fn op_optimize(&mut self, req: &Json) -> ServeReply {
+        let reply_err = |msg: &str| ServeReply {
+            lines: vec![err_line(msg)],
+            shutdown: false,
+        };
+        let Some(id) = req.get("task").and_then(Json::as_str) else {
+            return reply_err("optimize: missing task");
+        };
+        let Some(task) = self.suite.by_id(id) else {
+            return reply_err(&format!("optimize: unknown task '{id}'"));
+        };
+        let seed = req
+            .get("seed")
+            .and_then(Json::as_f64)
+            .map(|s| s as u64)
+            .unwrap_or(self.served);
+        let memo_in = self.cfg.verify.staged.then_some(&self.memo);
+        let mut cache = VerifyCache::new();
+        let (run, delta, mdelta, _tiers) = optimize_task_delta_verified(
+            task,
+            &self.arch,
+            &self.kb,
+            &self.cfg,
+            seed,
+            &mut cache,
+            memo_in,
+        );
+        let mut seen_lines = Vec::new();
+        if let Err(e) = commit_delta(
+            &mut self.kb,
+            &mut self.store,
+            &mut self.memo,
+            &mut self.commits,
+            delta,
+            &mdelta,
+            &mut seen_lines,
+        ) {
+            return reply_err(&format!("store commit failed: {e}"));
+        }
+        self.served += 1;
+        self.cap_memo();
+        let mut o = JsonObj::new();
+        o.set("ok", true);
+        o.set("op", "optimize");
+        o.set("task", run.task_id.as_str());
+        o.set("seed", seed);
+        o.set("valid", run.valid);
+        o.set("speedup_vs_naive", round3(run.speedup_vs_naive()));
+        o.set("steps", run.steps.len());
+        o.set("commits", self.commits);
+        ServeReply {
+            lines: vec![Json::Obj(o).to_string_compact()],
+            shutdown: false,
+        }
+    }
+
+    fn op_batch(&mut self, req: &Json) -> ServeReply {
+        let reply_err = |msg: &str| ServeReply {
+            lines: vec![err_line(msg)],
+            shutdown: false,
+        };
+        let Some(ids) = req.get("tasks").and_then(Json::as_arr) else {
+            return reply_err("batch: missing tasks array");
+        };
+        if ids.is_empty() {
+            return reply_err("batch: tasks array is empty");
+        }
+        // Field-level split borrow: the task list borrows `suite` while
+        // the batch runners mutate `kb`/`store`/`memo`/`commits` — all
+        // disjoint fields of the core.
+        let ServeCore {
+            suite,
+            arch,
+            cfg,
+            fleet,
+            kb,
+            store,
+            memo,
+            deterministic,
+            served,
+            commits,
+            ..
+        } = self;
+        let mut tasks: Vec<&Task> = Vec::with_capacity(ids.len());
+        for idj in ids {
+            let Some(id) = idj.as_str() else {
+                return reply_err("batch: task ids must be strings");
+            };
+            match suite.by_id(id) {
+                Some(t) => tasks.push(t),
+                None => return reply_err(&format!("batch: unknown task '{id}'")),
+            }
+        }
+        // Seeds derive from the monotone served counter, so a repeated
+        // request explores fresh trajectories while the whole transcript
+        // stays a pure function of the request sequence.
+        let req_cfg = IcrlConfig {
+            seed: cfg.seed.wrapping_add(*served),
+            ..cfg.clone()
+        };
+        let n = tasks.len();
+        let result = if *deterministic {
+            batch_deterministic(&tasks, arch, &req_cfg, fleet, kb, store, memo, commits)
+        } else {
+            batch_throughput(
+                &tasks,
+                arch,
+                &req_cfg,
+                fleet.workers,
+                kb,
+                store,
+                memo,
+                commits,
+            )
+        };
+        let (mut lines, runs) = match result {
+            Ok(v) => v,
+            Err(e) => return reply_err(&format!("store commit failed: {e}")),
+        };
+        self.served += n as u64;
+        self.cap_memo();
+        let valid: Vec<f64> = runs
+            .iter()
+            .filter(|r| r.valid)
+            .map(|r| r.speedup_vs_naive())
+            .collect();
+        let mut s = JsonObj::new();
+        s.set("ok", true);
+        s.set("op", "batch");
+        s.set("tasks", n);
+        s.set("valid", valid.len());
+        s.set("geomean_vs_naive", round3(geomean(&valid)));
+        s.set("commits", self.commits);
+        lines.push(Json::Obj(s).to_string_compact());
+        ServeReply {
+            lines,
+            shutdown: false,
+        }
+    }
+
+    fn stats_line(&self) -> String {
+        let mut o = JsonObj::new();
+        o.set("ok", true);
+        o.set("op", "stats");
+        o.set("protocol", PROTOCOL);
+        o.set("deterministic", self.deterministic);
+        o.set("served", self.served);
+        o.set("commits", self.commits);
+        o.set("kb_states", self.kb.states.len());
+        o.set("kb_updates", self.kb.updates);
+        o.set("memo_entries", self.memo.len());
+        o.set("memo_evictions", self.memo_evictions);
+        if let Some(store) = &self.store {
+            let st = store.stats();
+            o.set("store_commits", st.commits);
+            o.set("store_compactions", st.compactions);
+            o.set("store_last_seq", st.last_seq);
+            o.set("store_journal_records", st.journal_records);
+            o.set("store_dirty_entries", st.dirty_entries);
+        }
+        Json::Obj(o).to_string_compact()
+    }
+
+    /// Shutdown persistence: snapshot the store (compacting the
+    /// journal), write the whole-file KB if a save path is set, and
+    /// save the memo if a memo path is set.
+    pub fn flush(&mut self) -> Result<(), String> {
+        if let Some(store) = self.store.as_mut() {
+            store
+                .snapshot(&self.kb)
+                .map_err(|e| format!("store snapshot: {e}"))?;
+        }
+        if let Some(p) = &self.save_path {
+            fleet::checkpoint_atomic(&self.kb, p).map_err(|e| format!("save KB: {e}"))?;
+        }
+        if let Some(p) = &self.memo_path {
+            crate::harness::memo::save(&self.memo, p).map_err(|e| format!("save memo: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Serve connections from an already-bound listener until a `shutdown`
+/// request arrives, then [`ServeCore::flush`]. Connections are handled
+/// one at a time (concurrency lives *inside* batch requests — the KB
+/// commit loop is single-threaded by design, exactly like the fleet's
+/// committer); each connection may send any number of request lines.
+pub fn serve_listener(core: &mut ServeCore, listener: TcpListener) -> Result<(), String> {
+    let mut shutdown = false;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                continue;
+            }
+        };
+        match serve_connection(core, stream) {
+            Ok(done) => shutdown = done,
+            Err(e) => eprintln!("serve: connection error: {e}"),
+        }
+        if shutdown {
+            break;
+        }
+    }
+    core.flush()
+}
+
+/// Drive one connection's request lines; true = shutdown requested.
+fn serve_connection(core: &mut ServeCore, stream: TcpStream) -> Result<bool, String> {
+    let reader = BufReader::new(stream.try_clone().map_err(|e| format!("clone stream: {e}"))?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line.map_err(|e| format!("read: {e}"))?;
+        let reply = core.handle_line(&line);
+        for l in &reply.lines {
+            writeln!(writer, "{l}").map_err(|e| format!("write: {e}"))?;
+        }
+        writer.flush().map_err(|e| format!("flush: {e}"))?;
+        if reply.shutdown {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::HarnessConfig;
+
+    fn quick_core(deterministic: bool) -> ServeCore {
+        let cfg = IcrlConfig {
+            trajectories: 1,
+            rollout_steps: 2,
+            top_k: 2,
+            harness: HarnessConfig {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let fleet = FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            ..Default::default()
+        };
+        let mut core = ServeCore::new(GpuArch::h100(), cfg, fleet, KnowledgeBase::empty());
+        core.deterministic = deterministic;
+        core
+    }
+
+    #[test]
+    fn optimize_and_stats_roundtrip() {
+        let mut core = quick_core(true);
+        let r = core.handle_line(r#"{"op":"optimize","task":"L1/15_relu"}"#);
+        assert_eq!(r.lines.len(), 1);
+        assert!(!r.shutdown);
+        let j = Json::parse(&r.lines[0]).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("optimize"));
+        assert_eq!(j.get("seed").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(core.served(), 1);
+        assert_eq!(core.commits(), 1);
+        let s = core.handle_line(r#"{"op":"stats"}"#);
+        let j = Json::parse(&s.lines[0]).unwrap();
+        assert_eq!(j.get("served").and_then(Json::as_usize), Some(1));
+        assert!(j.get("kb_states").and_then(Json::as_usize).unwrap() > 0);
+        assert!(j.get("store_commits").is_none(), "no store configured");
+    }
+
+    #[test]
+    fn batch_replies_per_task_then_summary() {
+        let mut core = quick_core(true);
+        let r = core.handle_line(r#"{"op":"batch","tasks":["L1/12_softmax","L1/15_relu"]}"#);
+        assert_eq!(r.lines.len(), 3, "2 task lines + summary");
+        let summary = Json::parse(r.lines.last().unwrap()).unwrap();
+        assert_eq!(summary.get("op").and_then(Json::as_str), Some("batch"));
+        assert_eq!(summary.get("tasks").and_then(Json::as_usize), Some(2));
+        assert_eq!(core.served(), 2);
+    }
+
+    #[test]
+    fn malformed_requests_answer_errors_and_daemon_survives() {
+        let mut core = quick_core(true);
+        for bad in [
+            "",
+            "not json",
+            r#"{"no_op":1}"#,
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"optimize"}"#,
+            r#"{"op":"optimize","task":"L9/does_not_exist"}"#,
+            r#"{"op":"batch"}"#,
+            r#"{"op":"batch","tasks":[]}"#,
+            r#"{"op":"batch","tasks":[42]}"#,
+        ] {
+            let r = core.handle_line(bad);
+            assert!(!r.shutdown);
+            let j = Json::parse(&r.lines[0]).unwrap();
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+        }
+        // Still serves fine afterwards.
+        let r = core.handle_line(r#"{"op":"optimize","task":"L1/15_relu"}"#);
+        assert_eq!(
+            Json::parse(&r.lines[0]).unwrap().get("ok").and_then(Json::as_bool),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn throughput_mode_runs_same_tasks_with_completion_order_commits() {
+        let mut core = quick_core(false);
+        let r = core.handle_line(r#"{"op":"batch","tasks":["L1/12_softmax","L1/15_relu"]}"#);
+        assert_eq!(r.lines.len(), 3);
+        assert_eq!(core.commits(), 2);
+        assert!(core.kb.total_attempts() > 0);
+    }
+
+    #[test]
+    fn shutdown_is_acknowledged() {
+        let mut core = quick_core(true);
+        let r = core.handle_line(r#"{"op":"shutdown"}"#);
+        assert!(r.shutdown);
+        assert_eq!(
+            Json::parse(&r.lines[0]).unwrap().get("op").and_then(Json::as_str),
+            Some("shutdown")
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Shared content-hash primitive: FNV-1a 64.
+//!
+//! One hash, three consumers — [`crate::util::rng::Rng::derive`]'s label
+//! hash, the verify-memo's candidate keys
+//! ([`crate::harness::memo::candidate_key`]), and the log-structured KB
+//! store's journal-record checksums ([`crate::kb::store`]). Keeping the
+//! constants in one place pins all three to the same function, so the
+//! memo's key format and the journal's checksum format can never drift
+//! apart silently.
+
+/// FNV-1a 64-bit hash of a byte string.
+pub fn fnv1a64_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash of a string (the UTF-8 bytes).
+pub fn fnv1a64(s: &str) -> u64 {
+    fnv1a64_bytes(s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Public FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64_bytes(b"a"), fnv1a64("a"));
+    }
+}

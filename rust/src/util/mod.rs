@@ -2,6 +2,7 @@
 //! rand/serde_json/proptest): deterministic RNG, JSON, statistics, table
 //! rendering, and a mini property-test harness.
 
+pub mod hash;
 pub mod json;
 pub mod proptest;
 pub mod rng;

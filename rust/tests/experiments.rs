@@ -39,6 +39,7 @@ const BENCH_EXPERIMENTS: &[(&str, &str, &[&str])] = &[
         "kernelblaster-bench-skills-v1",
         &["gpu", "tasks", "seeds", "skills_installed", "arms"],
     ),
+    ("serve", "kernelblaster-bench-serve-v1", &["gpu", "tasks", "workers", "traces"]),
 ];
 
 /// Registry entries that only produce a [`Report`] (no artifact).
@@ -70,6 +71,7 @@ fn assert_bench_schema(name: &str, format: &str, keys: &[&str]) {
         "sweep" => experiments::sweep::run_with_output(&ctx, &out),
         "verify" => experiments::verify::run_with_output(&ctx, &out),
         "skills" => experiments::skills::run_with_output(&ctx, &out),
+        "serve" => experiments::serve::run_with_output(&ctx, &out),
         other => panic!("unmapped BENCH experiment '{other}'"),
     };
     assert_renderable(name, &report);
@@ -121,9 +123,47 @@ fn policy_and_sweep_artifacts_keep_their_schema() {
 
 #[test]
 fn verify_and_skills_artifacts_keep_their_schema() {
-    for (name, format, keys) in &BENCH_EXPERIMENTS[4..] {
+    for (name, format, keys) in &BENCH_EXPERIMENTS[4..6] {
         assert_bench_schema(name, format, keys);
     }
+}
+
+#[test]
+fn serve_artifact_keeps_its_schema_and_covers_three_traces() {
+    for (name, format, keys) in &BENCH_EXPERIMENTS[6..] {
+        assert_bench_schema(name, format, keys);
+    }
+    // The §Serve acceptance surface: three trace shapes, each carrying
+    // the deterministic queue-latency percentiles and store counters.
+    let ctx = Ctx::new(true, 2);
+    let dir = std::env::temp_dir().join("kb_exp_smoke_serve_traces");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("BENCH_serve.json");
+    let _ = experiments::serve::run_with_output(&ctx, &out);
+    let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let traces = j.get("traces").and_then(Json::as_arr).unwrap();
+    let names: Vec<_> = traces
+        .iter()
+        .map(|t| t.get("name").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(names, vec!["uniform", "bursty", "heavy_tailed"]);
+    for t in traces {
+        assert!(t.get("arrivals").and_then(Json::as_usize).unwrap() > 0);
+        assert!(t.get("commits").and_then(Json::as_usize).unwrap() > 0);
+        for key in [
+            "tasks_per_min",
+            "compactions",
+            "journal_records",
+            "span_ticks",
+            "queue_wait_p50_ticks",
+            "queue_wait_p95_ticks",
+            "sojourn_p50_ticks",
+            "sojourn_p95_ticks",
+        ] {
+            assert!(t.get(key).is_some(), "trace lost key '{key}'");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -1,0 +1,239 @@
+//! Serving daemon acceptance suite:
+//!
+//! 1. golden transcripts — replies carry no wall-clock fields, so a
+//!    whole transcript is a pure function of the request sequence
+//!    (replayed fresh cores produce byte-identical transcripts), and
+//!    the static lines (shutdown ack, error replies) are pinned
+//!    literally;
+//! 2. deterministic-mode worker-count invariance — the same request
+//!    sequence with fleet workers ∈ {1, 2, 8} yields byte-identical
+//!    transcripts AND byte-identical store-recovered KBs (the serving
+//!    acceptance criterion);
+//! 3. TCP round-trip — a real client over loopback drives optimize /
+//!    batch / stats / shutdown across two connections, and shutdown
+//!    flushes: the store recovers to the live KB and the whole-file
+//!    save matches it.
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::HarnessConfig;
+use kernelblaster::icrl::{FleetConfig, IcrlConfig};
+use kernelblaster::kb::store::LogStore;
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::serve::{serve_listener, ServeCore};
+use kernelblaster::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn quick_core(seed: u64, workers: usize) -> ServeCore {
+    let cfg = IcrlConfig {
+        trajectories: 1,
+        rollout_steps: 2,
+        top_k: 2,
+        harness: HarnessConfig {
+            noise_sigma: 0.0,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    };
+    let fleet = FleetConfig {
+        workers,
+        epoch_size: 2,
+        ..Default::default()
+    };
+    ServeCore::new(GpuArch::h100(), cfg, fleet, KnowledgeBase::empty())
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("kb_serve_itest_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A mixed request sequence covering every op plus malformed input.
+const REQUESTS: &[&str] = &[
+    r#"{"op":"optimize","task":"L1/12_softmax"}"#,
+    r#"{"op":"optimize","task":"L1/15_relu","seed":99}"#,
+    r#"{"op":"batch","tasks":["L1/01_matmul_square","L1/12_softmax"]}"#,
+    "definitely not json",
+    r#"{"op":"stats"}"#,
+    r#"{"op":"optimize","task":"L1/15_relu"}"#,
+    r#"{"op":"stats"}"#,
+];
+
+fn transcript(core: &mut ServeCore) -> Vec<String> {
+    REQUESTS
+        .iter()
+        .flat_map(|req| core.handle_line(req).lines)
+        .collect()
+}
+
+#[test]
+fn transcripts_are_a_pure_function_of_the_request_sequence() {
+    let a = transcript(&mut quick_core(5, 2));
+    let b = transcript(&mut quick_core(5, 2));
+    assert_eq!(a, b, "same requests, same replies — byte for byte");
+    // 1 + 1 + (2 tasks + summary) + 1 error + 1 + 1 + 1 reply lines.
+    assert_eq!(a.len(), 9);
+    // Every line is parseable JSON with an ok flag, and only the
+    // malformed request answers ok:false.
+    for (i, line) in a.iter().enumerate() {
+        let ok = Json::parse(line).unwrap().get("ok").and_then(Json::as_bool);
+        assert_eq!(ok, Some(i != 5), "line {i}: {line}");
+    }
+    // Seeds: the second optimize pins 99; the last optimize (reply
+    // line 7) defaults to served-so-far (2 optimize + 2 batch = 4).
+    let pinned = Json::parse(&a[1]).unwrap();
+    assert_eq!(pinned.get("seed").and_then(Json::as_f64), Some(99.0));
+    let defaulted = Json::parse(&a[7]).unwrap();
+    assert_eq!(defaulted.get("seed").and_then(Json::as_f64), Some(4.0));
+    // The final stats line counts everything served and committed.
+    let stats = Json::parse(a.last().unwrap()).unwrap();
+    assert_eq!(stats.get("served").and_then(Json::as_usize), Some(5));
+    assert!(stats.get("commits").and_then(Json::as_usize).unwrap() >= 5);
+    // A different seed produces a different transcript (the requests
+    // really exercise the optimizer, not canned replies).
+    let c = transcript(&mut quick_core(6, 2));
+    assert_ne!(a, c);
+}
+
+#[test]
+fn static_reply_lines_are_pinned_goldens() {
+    let mut core = quick_core(0, 1);
+    assert_eq!(
+        core.handle_line(r#"{"op":"shutdown"}"#).lines,
+        vec![r#"{"ok":true,"op":"shutdown"}"#.to_string()]
+    );
+    assert_eq!(
+        core.handle_line(r#"{"op":"frobnicate"}"#).lines,
+        vec![
+            r#"{"ok":false,"error":"unknown op 'frobnicate' (known: optimize batch stats shutdown)"}"#
+                .to_string()
+        ]
+    );
+    assert_eq!(
+        core.handle_line("{}").lines,
+        vec![r#"{"ok":false,"error":"missing op"}"#.to_string()]
+    );
+    assert_eq!(
+        core.handle_line(r#"{"op":"batch","tasks":[]}"#).lines,
+        vec![r#"{"ok":false,"error":"batch: tasks array is empty"}"#.to_string()]
+    );
+}
+
+#[test]
+fn deterministic_mode_is_worker_count_invariant_through_the_store() {
+    let dir = temp_dir("workers");
+    let mut baseline: Option<(Vec<String>, String)> = None;
+    for workers in [1usize, 2, 8] {
+        let store_dir = dir.join(format!("w{workers}"));
+        let mut core = quick_core(11, workers);
+        let mut store = LogStore::create(&store_dir, &core.kb).unwrap();
+        store.snapshot_every = 2;
+        core.store = Some(store);
+        let lines: Vec<String> = [
+            r#"{"op":"batch","tasks":["L1/01_matmul_square","L1/12_softmax","L1/15_relu"]}"#,
+            r#"{"op":"batch","tasks":["L2/01_gemm_bias_relu","L1/12_softmax"]}"#,
+            r#"{"op":"stats"}"#,
+        ]
+        .iter()
+        .flat_map(|req| core.handle_line(req).lines)
+        .collect();
+        let (recovered, _) = LogStore::recover(&store_dir).unwrap();
+        assert_eq!(recovered, core.kb, "{workers} workers: recovery diverged");
+        let bytes = persist::to_json(&recovered).to_string_pretty();
+        match &baseline {
+            None => baseline = Some((lines, bytes)),
+            Some((lines0, bytes0)) => {
+                assert_eq!(&lines, lines0, "{workers} workers: transcript diverged");
+                assert_eq!(&bytes, bytes0, "{workers} workers: stored KB diverged");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Send one request line, read `expect` reply lines.
+fn roundtrip(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    req: &str,
+    expect: usize,
+) -> Vec<String> {
+    writeln!(writer, "{req}").unwrap();
+    writer.flush().unwrap();
+    let mut lines = Vec::with_capacity(expect);
+    for _ in 0..expect {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "connection closed early");
+        lines.push(line.trim_end().to_string());
+    }
+    lines
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+#[test]
+fn tcp_round_trip_serves_two_connections_and_flushes_on_shutdown() {
+    let dir = temp_dir("tcp");
+    let store_dir = dir.join("store");
+    let save_path = dir.join("kb.json");
+    let mut core = quick_core(3, 2);
+    core.store = Some(LogStore::create(&store_dir, &core.kb).unwrap());
+    core.save_path = Some(save_path.clone());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            // Connection 1: optimize + batch, then hang up.
+            let (mut w, mut r) = connect(addr);
+            let opt = roundtrip(&mut w, &mut r, r#"{"op":"optimize","task":"L1/15_relu"}"#, 1);
+            let j = Json::parse(&opt[0]).unwrap();
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+            assert_eq!(j.get("task").and_then(Json::as_str), Some("L1/15_relu"));
+            let batch = roundtrip(
+                &mut w,
+                &mut r,
+                r#"{"op":"batch","tasks":["L1/12_softmax","L1/01_matmul_square"]}"#,
+                3,
+            );
+            let summary = Json::parse(&batch[2]).unwrap();
+            assert_eq!(summary.get("op").and_then(Json::as_str), Some("batch"));
+            assert_eq!(summary.get("tasks").and_then(Json::as_usize), Some(2));
+            drop(w);
+            drop(r);
+            // Connection 2: stats across connections sees the same core,
+            // then shutdown.
+            let (mut w, mut r) = connect(addr);
+            let stats = roundtrip(&mut w, &mut r, r#"{"op":"stats"}"#, 1);
+            let j = Json::parse(&stats[0]).unwrap();
+            assert_eq!(j.get("served").and_then(Json::as_usize), Some(3));
+            assert!(j.get("store_commits").and_then(Json::as_usize).unwrap() >= 3);
+            let bye = roundtrip(&mut w, &mut r, r#"{"op":"shutdown"}"#, 1);
+            assert_eq!(bye[0], r#"{"ok":true,"op":"shutdown"}"#);
+        });
+        serve_listener(&mut core, listener).unwrap();
+    });
+
+    // Shutdown flushed: the store holds the live KB (compacted), and
+    // the whole-file save carries the same kb-v1 bytes.
+    let (recovered, rstore) = LogStore::recover(&store_dir).unwrap();
+    assert_eq!(recovered, core.kb);
+    assert_eq!(rstore.stats().journal_records, 0, "flush compacts the journal");
+    assert_eq!(
+        std::fs::read_to_string(&save_path).unwrap(),
+        persist::to_json(&core.kb).to_string_pretty()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

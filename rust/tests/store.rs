@@ -1,0 +1,216 @@
+//! Log-structured store acceptance suite (the serving-durability layer
+//! at the fleet boundary):
+//!
+//! 1. backend equivalence — the same batch through a [`LogStore`] and
+//!    through the whole-file backend leaves byte-identical in-memory
+//!    KBs, and the store recovers to exactly those bytes;
+//! 2. worker-count invariance survives the store — workers ∈ {1, 2, 8}
+//!    through a compacting `LogStore` recover to byte-identical KBs;
+//! 3. serving crash recovery — a torn journal append under the daemon's
+//!    request loop recovers the KB at the last durable commit.
+
+use kernelblaster::gpu::GpuArch;
+use kernelblaster::harness::HarnessConfig;
+use kernelblaster::icrl::fleet::NullObserver;
+use kernelblaster::icrl::{run_fleet_store, FleetConfig, IcrlConfig, TaskRun, WholeFileStore};
+use kernelblaster::kb::store::LogStore;
+use kernelblaster::kb::{persist, KnowledgeBase};
+use kernelblaster::serve::ServeCore;
+use kernelblaster::tasks::{Suite, Task};
+use std::path::PathBuf;
+
+fn quick_cfg(seed: u64) -> IcrlConfig {
+    IcrlConfig {
+        trajectories: 2,
+        rollout_steps: 3,
+        top_k: 2,
+        harness: HarnessConfig {
+            noise_sigma: 0.0,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    }
+}
+
+fn batch(suite: &Suite) -> Vec<&Task> {
+    ["L1/01_matmul_square", "L1/12_softmax", "L2/01_gemm_bias_relu", "L1/15_relu"]
+        .iter()
+        .map(|id| suite.by_id(id).unwrap())
+        .collect()
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("kb_store_itest_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn log_store_fleet_equals_whole_file_backend_byte_for_byte() {
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg(51);
+    let fleet_cfg = FleetConfig {
+        workers: 2,
+        epoch_size: 2,
+        checkpoint_every: 0,
+        ..Default::default()
+    };
+    let dir = temp_dir("equiv");
+
+    // Arm A: the historical whole-file backend, checkpointing each commit.
+    let ckpt = dir.join("ckpt.json");
+    let mut whole = WholeFileStore::new(&ckpt, 1);
+    let mut kb_whole = KnowledgeBase::empty();
+    let out_whole = run_fleet_store(
+        &tasks,
+        &arch,
+        &mut kb_whole,
+        &cfg,
+        &fleet_cfg,
+        None,
+        &mut whole,
+        &mut NullObserver,
+    )
+    .unwrap();
+
+    // Arm B: the log-structured backend with mid-run compaction.
+    let store_dir = dir.join("store");
+    let mut log = LogStore::create(&store_dir, &KnowledgeBase::empty()).unwrap();
+    log.snapshot_every = 2;
+    let mut kb_log = KnowledgeBase::empty();
+    let out_log = run_fleet_store(
+        &tasks,
+        &arch,
+        &mut kb_log,
+        &cfg,
+        &fleet_cfg,
+        None,
+        &mut log,
+        &mut NullObserver,
+    )
+    .unwrap();
+
+    // The backend must be invisible to the computation...
+    assert_eq!(out_log.runs, out_whole.runs, "backend changed TaskRuns");
+    assert_eq!(kb_bytes(&kb_log), kb_bytes(&kb_whole), "backend changed KB bytes");
+    // ...and the store must recover exactly the live KB: same in-memory
+    // value (full precision) and same kb-v1 bytes as the whole-file
+    // backend's final checkpoint.
+    let (recovered, _) = LogStore::recover(&store_dir).unwrap();
+    assert_eq!(recovered, kb_log, "recovery is not bit-identical");
+    assert_eq!(
+        kb_bytes(&recovered),
+        std::fs::read_to_string(&ckpt).unwrap(),
+        "recovered KB diverged from the whole-file checkpoint"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn log_store_fleet_is_worker_count_invariant_after_recovery() {
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::a100();
+    let cfg = quick_cfg(57);
+    let dir = temp_dir("workers");
+    let mut baseline: Option<(Vec<TaskRun>, String)> = None;
+    for workers in [1usize, 2, 8] {
+        let store_dir = dir.join(format!("w{workers}"));
+        let mut log = LogStore::create(&store_dir, &KnowledgeBase::empty()).unwrap();
+        // Odd cadence vs the 4-task batch, so recovery crosses a
+        // snapshot boundary mid-journal.
+        log.snapshot_every = 3;
+        let mut kb = KnowledgeBase::empty();
+        let out = run_fleet_store(
+            &tasks,
+            &arch,
+            &mut kb,
+            &cfg,
+            &FleetConfig {
+                workers,
+                epoch_size: 2,
+                checkpoint_every: 0,
+                ..Default::default()
+            },
+            None,
+            &mut log,
+            &mut NullObserver,
+        )
+        .unwrap();
+        let (recovered, _) = LogStore::recover(&store_dir).unwrap();
+        assert_eq!(recovered, kb, "{workers} workers: recovery diverged from live KB");
+        let bytes = kb_bytes(&recovered);
+        match &baseline {
+            None => baseline = Some((out.runs, bytes)),
+            Some((runs0, bytes0)) => {
+                assert_eq!(&out.runs, runs0, "{workers} workers: TaskRuns diverged");
+                assert_eq!(&bytes, bytes0, "{workers} workers: recovered KB diverged");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_loop_recovers_to_last_durable_commit_after_torn_append() {
+    // The daemon's crash story end to end: optimize requests journal
+    // through the store; a crash mid-append (torn final record) loses
+    // exactly the in-flight commit, nothing else.
+    let dir = temp_dir("torn_serve");
+    let store_dir = dir.join("store");
+    let store = LogStore::create(&store_dir, &KnowledgeBase::empty()).unwrap();
+    let fleet_cfg = FleetConfig {
+        workers: 2,
+        epoch_size: 2,
+        ..Default::default()
+    };
+    let mut core = ServeCore::new(
+        GpuArch::h100(),
+        quick_cfg(61),
+        fleet_cfg,
+        KnowledgeBase::empty(),
+    );
+    core.store = Some(store);
+    let r = core.handle_line(r#"{"op":"optimize","task":"L1/12_softmax"}"#);
+    assert!(r.lines[0].contains("\"ok\":true"), "{}", r.lines[0]);
+    let after_first = core.kb.clone();
+    let _ = core.handle_line(r#"{"op":"optimize","task":"L1/15_relu"}"#);
+    assert_eq!(core.commits(), 2);
+    assert_ne!(core.kb, after_first, "second request must have grown the KB");
+
+    // Crash mid-append of the second record: chop its tail off.
+    let journal = store_dir.join("journal.log");
+    let mut bytes = std::fs::read(&journal).unwrap();
+    bytes.truncate(bytes.len() - 40);
+    std::fs::write(&journal, &bytes).unwrap();
+
+    let (recovered, rstore) = LogStore::recover(&store_dir).unwrap();
+    assert_eq!(recovered, after_first, "must recover the first commit exactly");
+    assert_eq!(rstore.stats().last_seq, 1);
+
+    // A recovered daemon keeps serving and journaling from there.
+    let mut resumed = ServeCore::new(
+        GpuArch::h100(),
+        quick_cfg(61),
+        FleetConfig {
+            workers: 2,
+            epoch_size: 2,
+            ..Default::default()
+        },
+        recovered,
+    );
+    resumed.store = Some(rstore);
+    let r = resumed.handle_line(r#"{"op":"optimize","task":"L1/15_relu"}"#);
+    assert!(r.lines[0].contains("\"op\":\"optimize\""));
+    let (re_recovered, _) = LogStore::recover(&store_dir).unwrap();
+    assert_eq!(re_recovered, resumed.kb, "post-recovery commits must be durable");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,86 @@
+#!/usr/bin/env bash
+# Serve-daemon smoke (CI): boot `kernelblaster serve` on loopback with a
+# log-structured store, drive optimize / batch / stats / shutdown over
+# the TCP line protocol, then restart on the same store directory and
+# confirm recovery serves the journaled KB. Talks raw bash /dev/tcp so
+# the runner needs no netcat. Run from rust/ (or set KB_BIN).
+set -euo pipefail
+
+BIN=${KB_BIN:-target/release/kernelblaster}
+HOST=127.0.0.1
+PORT=${KB_SERVE_PORT:-7391}
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+STORE="$WORK/store"
+SAVE="$WORK/kb.json"
+
+wait_ready() {
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/$HOST/$PORT") 2>/dev/null; then
+      return 0
+    fi
+    sleep 0.1
+  done
+  echo "serve_smoke: daemon never bound $HOST:$PORT" >&2
+  return 1
+}
+
+# Send request lines down one connection and echo every reply line. The
+# last request is always shutdown, which closes the listener and with
+# it this connection, so the read side terminates on EOF.
+drive() {
+  exec 3<>"/dev/tcp/$HOST/$PORT"
+  printf '%s\n' "$@" >&3
+  cat <&3
+  exec 3>&-
+}
+
+echo "== phase 1: fresh store, full op surface =="
+"$BIN" serve --addr "$HOST:$PORT" --gpu H100 --store "$STORE" \
+  --workers 2 --epoch-size 2 --trajectories 2 --steps 3 \
+  --snapshot-every 2 --save-kb "$SAVE" &
+PID=$!
+wait_ready
+OUT1=$(drive \
+  '{"op":"optimize","task":"L1/12_softmax"}' \
+  '{"op":"batch","tasks":["L1/01_matmul_square","L1/15_relu"]}' \
+  '{"op":"stats"}' \
+  '{"op":"shutdown"}')
+wait "$PID"
+echo "$OUT1"
+grep -q '"op":"optimize"' <<<"$OUT1"
+grep -q '"op":"batch"' <<<"$OUT1"
+grep -q '"store_commits"' <<<"$OUT1"
+if grep -q '"ok":false' <<<"$OUT1"; then
+  echo "serve_smoke: unexpected error reply in phase 1" >&2
+  exit 1
+fi
+test -f "$STORE/journal.log"
+test -f "$STORE/snapshot.json"
+# The graceful-shutdown whole-file save must be a loadable kb-v1 doc.
+"$BIN" kb stats --path "$SAVE"
+
+echo "== phase 2: restart recovers the store =="
+"$BIN" serve --addr "$HOST:$PORT" --gpu H100 --store "$STORE" \
+  --workers 2 --epoch-size 2 --trajectories 2 --steps 3 \
+  2> "$WORK/stderr2.log" &
+PID=$!
+wait_ready
+OUT2=$(drive \
+  '{"op":"stats"}' \
+  '{"op":"optimize","task":"L1/15_relu"}' \
+  '{"op":"shutdown"}')
+wait "$PID"
+cat "$WORK/stderr2.log"
+echo "$OUT2"
+grep -q 'recovered KB' "$WORK/stderr2.log"
+grep -q '"kb_states":' <<<"$OUT2"
+if grep -q '"kb_states":0[,}]' <<<"$OUT2"; then
+  echo "serve_smoke: recovery lost the phase-1 KB" >&2
+  exit 1
+fi
+if grep -q '"ok":false' <<<"$OUT2"; then
+  echo "serve_smoke: unexpected error reply in phase 2" >&2
+  exit 1
+fi
+echo "serve_smoke: OK"
