@@ -145,23 +145,27 @@ USAGE:
                          [--epsilon X] [--ucb-c X] [--beam-width N]
                          [--schedule constant|harmonic|exponential] [--schedule-rate X]
                          [--dedup-distance X]
-                         [--staged] [--no-screen] [--no-probe] [--screen-margin X]
+                         [--staged] [--no-screen] [--no-probe]
+                         [--screen-margin X|auto] [--verify-bench FILE]
                          [--probe-seeds N] [--memo PATH]
                          [--skills] [--skill-max-len N] [--skill-min-support N]
                          [--skill-min-gain X] [--skill-max-per-state N]
   kernelblaster batch --jobs FILE [--gpu H100] [--workers 4] [--epoch-size 8]
+                      [--shards 1] [--commit-queue 8]
                       [--checkpoint-every N] [--checkpoint PATH] [--kb PATH]
                       [--save-kb PATH] [--trajectories N] [--steps N] [--seed N]
                       [--vendor] [--policy NAME|auto] [--sweep FILE]
                       [--epsilon X] [--ucb-c X]
                       [--beam-width N] [--schedule NAME] [--schedule-rate X]
                       [--dedup-distance X] [--epoch-policies NAME,NAME,...|auto]
-                      [--staged] [--no-screen] [--no-probe] [--screen-margin X]
+                      [--staged] [--no-screen] [--no-probe]
+                      [--screen-margin X|auto] [--verify-bench FILE]
                       [--probe-seeds N] [--memo PATH] [--config run.json]
                       [--skills] [--skill-max-len N] [--skill-min-support N]
                       [--skill-min-gain X] [--skill-max-per-state N]
   kernelblaster serve [--addr 127.0.0.1:7070] [--gpu H100] [--store DIR]
                       [--kb PATH] [--save-kb PATH] [--workers 4] [--epoch-size 8]
+                      [--shards 1] [--commit-queue 8]
                       [--throughput] [--snapshot-every 64] [--trajectories N]
                       [--steps N] [--seed N] [--vendor] [--policy NAME|auto]
                       [--staged] [--memo PATH] [--memo-max-entries N]
@@ -436,8 +440,14 @@ fn cmd_batch(args: &Args) -> i32 {
     cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
     cfg.fleet.checkpoint_every =
         args.usize_flag("checkpoint-every", cfg.fleet.checkpoint_every);
+    cfg.fleet.shards = args.usize_flag("shards", cfg.fleet.shards);
+    cfg.fleet.commit_queue = args.usize_flag("commit-queue", cfg.fleet.commit_queue);
     if cfg.fleet.workers == 0 || cfg.fleet.epoch_size == 0 {
         eprintln!("batch: --workers and --epoch-size must be positive");
+        return 2;
+    }
+    if cfg.fleet.shards == 0 || cfg.fleet.commit_queue == 0 {
+        eprintln!("batch: --shards and --commit-queue must be positive");
         return 2;
     }
     let Some(arch) = GpuArch::by_name(&cfg.gpu) else {
@@ -541,11 +551,16 @@ fn cmd_batch(args: &Args) -> i32 {
     let mut null_store = fleet::NullStore;
 
     eprintln!(
-        "batch: {} tasks on {} | {} workers, epochs of {}{}",
+        "batch: {} tasks on {} | {} workers, epochs of {}{}{}",
         tasks.len(),
         arch.name,
         cfg.fleet.workers,
         cfg.fleet.epoch_size,
+        if cfg.fleet.shards > 1 {
+            format!(", {} commit shards", cfg.fleet.shards)
+        } else {
+            String::new()
+        },
         if cfg.fleet.checkpoint_every > 0 {
             format!(", checkpoint every {} commits", cfg.fleet.checkpoint_every)
         } else {
@@ -617,6 +632,14 @@ fn cmd_batch(args: &Args) -> i32 {
         s.set("memo_hits", outcome.tiers.memo_hits);
         s.set("full_verifications", outcome.tiers.full_verifications);
         s.set("seeds_executed", outcome.tiers.seeds_executed);
+    }
+    // Shard-pipeline counters only appear when sharding ran — same
+    // byte-compatibility rule as the tier counters above.
+    if cfg.fleet.shards > 1 {
+        s.set("shards", outcome.shard.shards);
+        s.set("sub_commits", outcome.shard.sub_commits);
+        s.set("commit_waits", outcome.shard.commit_waits);
+        s.set("queue_peak", outcome.shard.queue_peak);
     }
     println!("{}", crate::util::json::Json::Obj(s).to_string_compact());
 
@@ -690,8 +713,14 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     cfg.fleet.workers = args.usize_flag("workers", cfg.fleet.workers);
     cfg.fleet.epoch_size = args.usize_flag("epoch-size", cfg.fleet.epoch_size);
+    cfg.fleet.shards = args.usize_flag("shards", cfg.fleet.shards);
+    cfg.fleet.commit_queue = args.usize_flag("commit-queue", cfg.fleet.commit_queue);
     if cfg.fleet.workers == 0 || cfg.fleet.epoch_size == 0 {
         eprintln!("serve: --workers and --epoch-size must be positive");
+        return 2;
+    }
+    if cfg.fleet.shards == 0 || cfg.fleet.commit_queue == 0 {
+        eprintln!("serve: --shards and --commit-queue must be positive");
         return 2;
     }
     let Some(arch) = GpuArch::by_name(&cfg.gpu) else {
@@ -722,6 +751,18 @@ fn cmd_serve(args: &Args) -> i32 {
                         s.stats().last_seq,
                         dir.display()
                     );
+                    // A recovered layout is authoritative: batches fall
+                    // back to single-segment journaling when the shard
+                    // counts disagree (epoch_segments returns None), so
+                    // a mismatch is a notice, never an error.
+                    if cfg.fleet.shards > 1 && s.stats().shards != cfg.fleet.shards {
+                        eprintln!(
+                            "serve: store has {} journal segment(s) but --shards {}; \
+                             sharded commits disabled for this store",
+                            s.stats().shards,
+                            cfg.fleet.shards
+                        );
+                    }
                     kb = recovered;
                     store = Some(s);
                 }
@@ -752,9 +793,17 @@ fn cmd_serve(args: &Args) -> i32 {
             };
         }
         if let Some(dir) = &store_dir {
-            match LogStore::create(dir, &kb) {
+            match LogStore::create_sharded(dir, &kb, cfg.fleet.shards) {
                 Ok(s) => {
-                    eprintln!("serve: created store at {}", dir.display());
+                    eprintln!(
+                        "serve: created store at {}{}",
+                        dir.display(),
+                        if s.shards() > 1 {
+                            format!(" ({} journal segments)", s.shards())
+                        } else {
+                            String::new()
+                        }
+                    );
                     store = Some(s);
                 }
                 Err(e) => {
@@ -798,9 +847,14 @@ fn cmd_serve(args: &Args) -> i32 {
     core.memo_path = memo_path;
     core.deterministic = !args.has("throughput");
     eprintln!(
-        "serve: listening on {addr} | {} | {} workers | {} commits{}",
+        "serve: listening on {addr} | {} | {} workers{} | {} commits{}",
         arch.name,
         cfg.fleet.workers,
+        if cfg.fleet.shards > 1 {
+            format!(" x {} commit shards", cfg.fleet.shards)
+        } else {
+            String::new()
+        },
         if core.deterministic {
             "deterministic"
         } else {
@@ -1261,11 +1315,37 @@ fn policy_hypers_from_flags(args: &Args, base: PolicyConfig) -> Result<PolicyCon
 /// staging on or tune it — absent flags keep the base, so a config
 /// file's `verify` section survives untouched.
 fn verify_from_flags(args: &Args, base: VerifyConfig) -> Result<VerifyConfig, i32> {
+    // `--screen-margin auto` resolves the margin from `experiment
+    // verify`'s measured estimate-vs-profile error distribution
+    // (`screen_error.suggested_margin` in BENCH_verify.json; point
+    // `--verify-bench` at a different artifact). Any failure — missing
+    // file, wrong format, pre-screen_error artifact — falls back to the
+    // 1.5x default with a stderr notice rather than refusing to run:
+    // auto is an optimization hint, not a correctness input.
+    let screen_margin = match args.flag("screen-margin") {
+        Some("auto") => {
+            let path = Path::new(args.flag("verify-bench").unwrap_or("BENCH_verify.json"));
+            match read_suggested_margin(path) {
+                Ok(m) => {
+                    eprintln!(
+                        "screen-margin auto: {m:.3}x (measured screen error) from {}",
+                        path.display()
+                    );
+                    m
+                }
+                Err(why) => {
+                    eprintln!("screen-margin auto: {why}; falling back to 1.5x");
+                    1.5
+                }
+            }
+        }
+        _ => args.f64_flag("screen-margin", base.screen_margin),
+    };
     let verify = VerifyConfig {
         staged: base.staged || args.has("staged"),
         screen: base.screen && !args.has("no-screen"),
         probe: base.probe && !args.has("no-probe"),
-        screen_margin: args.f64_flag("screen-margin", base.screen_margin),
+        screen_margin,
         probe_seeds: args.usize_flag("probe-seeds", base.probe_seeds),
         memo_path: args.flag("memo").map(String::from).or(base.memo_path),
         memo_max_entries: args.usize_flag("memo-max-entries", base.memo_max_entries),
@@ -1275,6 +1355,39 @@ fn verify_from_flags(args: &Args, base: VerifyConfig) -> Result<VerifyConfig, i3
         return Err(2);
     }
     Ok(verify)
+}
+
+/// Read `screen_error.suggested_margin` from a
+/// `kernelblaster-bench-verify-v1` artifact (`experiment verify`'s
+/// BENCH_verify.json) — the p95 of the cost model's
+/// estimate-vs-profile error, clamped to at least 1.0. Artifacts from
+/// before the screen-error section report a descriptive error so the
+/// caller can fall back.
+fn read_suggested_margin(path: &Path) -> Result<f64, String> {
+    use crate::util::json::Json;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    if j.get("format").and_then(Json::as_str) != Some("kernelblaster-bench-verify-v1") {
+        return Err(format!(
+            "{}: not a kernelblaster-bench-verify-v1 artifact",
+            path.display()
+        ));
+    }
+    let m = j
+        .get("screen_error")
+        .and_then(|e| e.get("suggested_margin"))
+        .and_then(Json::as_f64)
+        .ok_or_else(|| {
+            format!(
+                "{}: no screen_error.suggested_margin (regenerate with \
+                 `kernelblaster experiment verify`)",
+                path.display()
+            )
+        })?;
+    if !m.is_finite() || m < 1.0 {
+        return Err(format!("{}: suggested_margin {m} out of range", path.display()));
+    }
+    Ok(m)
 }
 
 /// Skill-drawing config from `--skills` / `--skill-max-len` /
@@ -2138,7 +2251,84 @@ mod tests {
         std::fs::write(&good, "L1/15_relu\n").unwrap();
         let good_s = good.to_str().unwrap();
         assert_eq!(run(&argv(&format!("batch --jobs {good_s} --workers 0"))), 2);
+        assert_eq!(run(&argv(&format!("batch --jobs {good_s} --shards 0"))), 2);
+        assert_eq!(
+            run(&argv(&format!("batch --jobs {good_s} --commit-queue 0"))),
+            2
+        );
         assert_eq!(run(&argv(&format!("batch --jobs {good_s} --gpu V100"))), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_sharded_commits_match_the_single_committer() {
+        let dir = std::env::temp_dir().join("kb_cli_batch_shards_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.txt");
+        std::fs::write(&jobs, "L1/12_softmax\nL1/15_relu\nL1/01_matmul_square\n").unwrap();
+        let jobs_s = jobs.to_str().unwrap();
+        let saved = |shards: usize| {
+            let out = dir.join(format!("kb_s{shards}.json"));
+            assert_eq!(
+                run(&argv(&format!(
+                    "batch --jobs {jobs_s} --gpu A100 --workers 2 --epoch-size 2 \
+                     --trajectories 1 --steps 2 --shards {shards} --save-kb {}",
+                    out.to_str().unwrap()
+                ))),
+                0,
+                "--shards {shards} batch failed"
+            );
+            std::fs::read_to_string(&out).unwrap()
+        };
+        let single = saved(1);
+        assert_eq!(saved(2), single, "sharded KB bytes must match shards=1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn screen_margin_auto_falls_back_and_reads_artifacts() {
+        // No artifact on disk: auto must fall back to 1.5x and still run.
+        assert_eq!(
+            run(&argv(
+                "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                 --staged --screen-margin auto --verify-bench /nonexistent/BENCH_verify.json"
+            )),
+            0
+        );
+        // A measured artifact resolves to its suggested margin.
+        let dir = std::env::temp_dir().join("cli_screen_margin_auto_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bench = dir.join("BENCH_verify.json");
+        std::fs::write(
+            &bench,
+            r#"{"format":"kernelblaster-bench-verify-v1",
+                "screen_error":{"samples":12,"p95_ratio":1.62,"suggested_margin":1.62}}"#,
+        )
+        .unwrap();
+        assert_eq!(read_suggested_margin(&bench), Ok(1.62));
+        assert_eq!(
+            run(&argv(&format!(
+                "optimize --task L1/15_relu --gpu A100 --trajectories 1 --steps 2 \
+                 --staged --screen-margin auto --verify-bench {}",
+                bench.to_str().unwrap()
+            ))),
+            0
+        );
+        // Wrong format and missing section are fall-back errors, not panics.
+        let wrong = dir.join("wrong.json");
+        std::fs::write(&wrong, r#"{"format":"something-else"}"#).unwrap();
+        assert!(read_suggested_margin(&wrong).is_err());
+        let old = dir.join("old.json");
+        std::fs::write(&old, r#"{"format":"kernelblaster-bench-verify-v1"}"#).unwrap();
+        assert!(read_suggested_margin(&old).is_err());
+        // Out-of-range margins (screen must never tighten below 1.0x).
+        let low = dir.join("low.json");
+        std::fs::write(
+            &low,
+            r#"{"format":"kernelblaster-bench-verify-v1","screen_error":{"suggested_margin":0.8}}"#,
+        )
+        .unwrap();
+        assert!(read_suggested_margin(&low).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

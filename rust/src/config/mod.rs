@@ -170,6 +170,8 @@ impl RunConfig {
         fleet.set("workers", self.fleet.workers);
         fleet.set("epoch_size", self.fleet.epoch_size);
         fleet.set("checkpoint_every", self.fleet.checkpoint_every);
+        fleet.set("shards", self.fleet.shards);
+        fleet.set("commit_queue", self.fleet.commit_queue);
         if self.fleet.auto_epoch_policies {
             // "auto" (KB-maturity tuning) supersedes any hand-written mix.
             fleet.set("epoch_policies", "auto");
@@ -337,6 +339,14 @@ impl RunConfig {
                     .get("checkpoint_every")
                     .and_then(Json::as_usize)
                     .unwrap_or(d.checkpoint_every),
+                shards: fleet
+                    .get("shards")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.shards),
+                commit_queue: fleet
+                    .get("commit_queue")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.commit_queue),
                 epoch_policies,
                 auto_epoch_policies,
             };
@@ -449,6 +459,11 @@ impl RunConfig {
         if cfg.fleet.workers == 0 || cfg.fleet.epoch_size == 0 {
             return Err(ConfigError::Invalid(
                 "fleet.workers/epoch_size must be positive".into(),
+            ));
+        }
+        if cfg.fleet.shards == 0 || cfg.fleet.commit_queue == 0 {
+            return Err(ConfigError::Invalid(
+                "fleet.shards/commit_queue must be positive".into(),
             ));
         }
         if !(0.0..=1.0).contains(&cfg.transfer.decay) {
@@ -681,6 +696,8 @@ mod tests {
                 workers: 8,
                 epoch_size: 16,
                 checkpoint_every: 5,
+                shards: 4,
+                commit_queue: 32,
                 ..Default::default()
             },
             ..Default::default()
@@ -690,10 +707,19 @@ mod tests {
         // Absent section = defaults.
         let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
         assert_eq!(plain.fleet, FleetConfig::default());
-        // Zero workers/epoch rejected.
+        // Absent sharding keys = defaults (pre-shard config files).
+        let j = Json::parse(r#"{"fleet":{"workers":3}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.fleet.shards, FleetConfig::default().shards);
+        assert_eq!(c.fleet.commit_queue, FleetConfig::default().commit_queue);
+        // Zero workers/epoch/shards/queue rejected.
         let j = Json::parse(r#"{"fleet":{"workers":0}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"fleet":{"epoch_size":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"fleet":{"shards":0}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"fleet":{"commit_queue":0}}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
     }
 

@@ -1,26 +1,38 @@
-//! Fleet batch-serving scenario: throughput and KB-quality parity of the
-//! [`crate::icrl::fleet`] scheduler vs the sequential driver.
+//! Fleet batch-serving scenario: the workers × shards scaling grid of
+//! the [`crate::icrl::fleet`] scheduler plus its determinism anchors.
 //!
-//! Three arms over the same task list and seed:
+//! Arms over the same task list and seed:
 //!
 //! 1. **sequential** — [`crate::icrl::run_suite`], one task at a time,
 //!    in-place KB mutation (the pre-fleet serving mode);
-//! 2. **fleet** — `run_fleet` with a worker pool and multi-task epochs
-//!    (the batch-serving mode; the throughput arm);
-//! 3. **fleet/epoch=1** — the degenerate fleet pipeline that must equal
+//! 2. **fleet/epoch=1** — the degenerate fleet pipeline that must equal
 //!    the sequential driver **bit-identically** (serialized-KB bytes and
 //!    per-task results compared), the determinism anchor of the fleet's
-//!    commit protocol.
+//!    commit protocol;
+//! 3. **the grid** — `run_fleet` at every `workers × shards` cell.
+//!    The `(1, 1)` cell is the single-committer reference; every other
+//!    cell's saved-KB bytes must match it (the sharded pipeline's
+//!    byte-identity contract), and each cell reports wall-clock
+//!    tasks/min plus the [`crate::icrl::ShardMetrics`] counters
+//!    (`sub_commits`, `commit_waits`, `queue_peak`) that attribute where
+//!    commit-side time went.
+//!
+//! Wall-clock numbers are host-dependent, so the scaling curve also gets
+//! a deterministic analog: the shared `experiments::simqueue` FIFO
+//! simulation replays the reference runs' step counts as service times
+//! over each worker count — span ticks and wait percentiles are a pure
+//! function of the seed.
 //!
 //! Reported as a [`Report`] plus machine-readable `BENCH_fleet.json`
-//! (format `kernelblaster-bench-fleet-v1`) with tasks/min for both
-//! serving modes and the parity verdicts — CI runs it at `--quick` scale
-//! and uploads the JSON as an artifact. Wall-clock numbers are
-//! host-dependent; the parity booleans are not.
+//! (format `kernelblaster-bench-fleet-v2`) — CI runs it at `--quick`
+//! scale, uploads the JSON as an artifact, and
+//! `scripts/fleet_trend.py` gates regressions in the top grid cell's
+//! tasks/min. The parity booleans are host-independent.
 
+use super::simqueue::{percentile, simulate_queue, trace_arrivals};
 use super::{Ctx, Report, Section};
 use crate::gpu::GpuArch;
-use crate::icrl::{self, FleetConfig, IcrlConfig, TaskRun};
+use crate::icrl::{self, FleetConfig, IcrlConfig, ShardMetrics, TaskRun};
 use crate::kb::lifecycle;
 use crate::kb::{persist, KnowledgeBase};
 use crate::tasks::{Level, Task};
@@ -30,12 +42,20 @@ use crate::util::table::{fnum, Table};
 use std::path::Path;
 use std::time::Instant;
 
-/// One serving mode's measurement.
+/// One serving mode's measurement (sequential and epoch=1 arms).
 struct Arm {
-    name: &'static str,
     seconds: f64,
     runs: Vec<TaskRun>,
     kb: KnowledgeBase,
+}
+
+fn geomean_valid(runs: &[TaskRun]) -> f64 {
+    let v: Vec<f64> = runs
+        .iter()
+        .filter(|r| r.valid)
+        .map(|r| r.speedup_vs_naive())
+        .collect();
+    stats::geomean(&v)
 }
 
 impl Arm {
@@ -43,22 +63,12 @@ impl Arm {
         self.runs.len() as f64 / (self.seconds / 60.0).max(1e-9)
     }
 
-    fn geomean_valid(&self) -> f64 {
-        let v: Vec<f64> = self
-            .runs
-            .iter()
-            .filter(|r| r.valid)
-            .map(|r| r.speedup_vs_naive())
-            .collect();
-        stats::geomean(&v)
-    }
-
     fn to_json(&self) -> Json {
         let st = lifecycle::stats(&self.kb);
         let mut o = JsonObj::new();
         o.set("seconds", self.seconds);
         o.set("tasks_per_min", self.tasks_per_min());
-        o.set("geomean_vs_naive", self.geomean_valid());
+        o.set("geomean_vs_naive", geomean_valid(&self.runs));
         o.set("valid", self.runs.iter().filter(|r| r.valid).count());
         let mut kb = JsonObj::new();
         kb.set("states", st.states);
@@ -69,31 +79,81 @@ impl Arm {
     }
 }
 
-/// Run all three arms over an explicit task list (tests shrink it).
-fn arms(
+/// One `workers × shards` grid cell's measurement.
+struct GridCell {
+    workers: usize,
+    shards: usize,
+    seconds: f64,
+    runs: usize,
+    valid: usize,
+    geomean: f64,
+    shard: ShardMetrics,
+    /// Saved-KB bytes equal the `(1, 1)` single-committer reference.
+    kb_bytes_identical: bool,
+}
+
+impl GridCell {
+    fn tasks_per_min(&self) -> f64 {
+        self.runs as f64 / (self.seconds / 60.0).max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("workers", self.workers);
+        o.set("shards", self.shards);
+        o.set("seconds", self.seconds);
+        o.set("tasks_per_min", self.tasks_per_min());
+        o.set("geomean_vs_naive", self.geomean);
+        o.set("valid", self.valid);
+        o.set("sub_commits", self.shard.sub_commits);
+        o.set("commit_waits", self.shard.commit_waits);
+        o.set("queue_peak", self.shard.queue_peak);
+        o.set("kb_bytes_identical", self.kb_bytes_identical);
+        Json::Obj(o)
+    }
+}
+
+/// One worker count's deterministic queue-sim point: the reference
+/// runs' step counts replayed as service ticks through
+/// [`super::simqueue`].
+struct SimPoint {
+    workers: usize,
+    span_ticks: u64,
+    wait_p95: f64,
+    /// span(workers=first grid entry) / span(workers) — the
+    /// host-independent scaling curve.
+    speedup_vs_base: f64,
+}
+
+impl SimPoint {
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("workers", self.workers);
+        o.set("span_ticks", self.span_ticks);
+        o.set("queue_wait_p95_ticks", self.wait_p95);
+        o.set("speedup_vs_base", self.speedup_vs_base);
+        Json::Obj(o)
+    }
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    persist::to_json(kb).to_string_pretty()
+}
+
+/// Run the sequential and epoch=1 arms (the determinism anchor pair).
+fn anchor_arms(
     tasks: &[&Task],
     arch: &GpuArch,
     cfg: &IcrlConfig,
     fleet_cfg: &FleetConfig,
-) -> (Arm, Arm, Arm) {
+) -> (Arm, Arm) {
     let mut kb_seq = KnowledgeBase::empty();
     let t = Instant::now();
     let seq_runs = icrl::run_suite(tasks, arch, &mut kb_seq, cfg);
     let seq = Arm {
-        name: "sequential",
         seconds: t.elapsed().as_secs_f64(),
         runs: seq_runs,
         kb: kb_seq,
-    };
-
-    let mut kb_fleet = KnowledgeBase::empty();
-    let t = Instant::now();
-    let out = icrl::run_fleet(tasks, arch, &mut kb_fleet, cfg, fleet_cfg);
-    let fleet = Arm {
-        name: "fleet",
-        seconds: t.elapsed().as_secs_f64(),
-        runs: out.runs,
-        kb: kb_fleet,
     };
 
     let e1_cfg = FleetConfig {
@@ -104,60 +164,161 @@ fn arms(
     let t = Instant::now();
     let out = icrl::run_fleet(tasks, arch, &mut kb_e1, cfg, &e1_cfg);
     let e1 = Arm {
-        name: "fleet/epoch=1",
         seconds: t.elapsed().as_secs_f64(),
         runs: out.runs,
         kb: kb_e1,
     };
-    (seq, fleet, e1)
+    (seq, e1)
 }
 
-/// The epoch=1 determinism verdicts, computed once and shared by the
-/// rendered report and the JSON artifact (they must never disagree).
+/// Run every `workers × shards` cell and compare each cell's saved-KB
+/// bytes to the `(1, 1)` single-committer reference. The reference cell
+/// leads the grid whatever the axes say, so the invariance verdicts
+/// always have their anchor.
+fn run_grid(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    cfg: &IcrlConfig,
+    base: &FleetConfig,
+    workers_grid: &[usize],
+    shards_grid: &[usize],
+) -> Vec<GridCell> {
+    let mut cells = Vec::new();
+    let mut reference: Option<String> = None;
+    let mut points: Vec<(usize, usize)> = vec![(1, 1)];
+    for &w in workers_grid {
+        for &s in shards_grid {
+            if !points.contains(&(w, s)) {
+                points.push((w, s));
+            }
+        }
+    }
+    for (w, s) in points {
+        let fc = FleetConfig {
+            workers: w,
+            shards: s,
+            ..base.clone()
+        };
+        let mut kb = KnowledgeBase::empty();
+        let t = Instant::now();
+        let out = icrl::run_fleet(tasks, arch, &mut kb, cfg, &fc);
+        let seconds = t.elapsed().as_secs_f64();
+        let bytes = kb_bytes(&kb);
+        let identical = match &reference {
+            None => {
+                reference = Some(bytes);
+                true
+            }
+            Some(r) => *r == bytes,
+        };
+        cells.push(GridCell {
+            workers: w,
+            shards: s,
+            seconds,
+            runs: out.runs.len(),
+            valid: out.runs.iter().filter(|r| r.valid).count(),
+            geomean: geomean_valid(&out.runs),
+            shard: out.shard,
+            kb_bytes_identical: identical,
+        });
+    }
+    cells
+}
+
+/// The deterministic scaling curve: uniform arrivals, service ticks =
+/// the reference runs' step counts, one point per worker count.
+fn sim_points(reference: &[TaskRun], workers_grid: &[usize], seed: u64) -> Vec<SimPoint> {
+    let service: Vec<u64> = reference
+        .iter()
+        .map(|r| r.steps.len().max(1) as u64)
+        .collect();
+    let arrivals = trace_arrivals("uniform", service.len(), seed);
+    let mut points = Vec::new();
+    let mut base_span = 0u64;
+    for &w in workers_grid {
+        let (waits, _, span) = simulate_queue(&arrivals, &service, w);
+        if points.is_empty() {
+            base_span = span;
+        }
+        points.push(SimPoint {
+            workers: w,
+            span_ticks: span,
+            wait_p95: percentile(&waits, 0.95),
+            speedup_vs_base: base_span as f64 / span.max(1) as f64,
+        });
+    }
+    points
+}
+
+/// The determinism verdicts, computed once and shared by the rendered
+/// report and the JSON artifact (they must never disagree).
 struct Parity {
-    kb_bytes_identical: bool,
-    runs_identical: bool,
+    epoch1_kb_bytes_identical: bool,
+    epoch1_runs_identical: bool,
+    /// Every grid cell's saved-KB bytes equal the `(1, 1)` reference.
+    grid_kb_invariant: bool,
 }
 
 impl Parity {
-    fn of(seq: &Arm, e1: &Arm) -> Self {
-        let bytes = |kb: &KnowledgeBase| persist::to_json(kb).to_string_pretty();
+    fn of(seq: &Arm, e1: &Arm, grid: &[GridCell]) -> Self {
         Self {
-            kb_bytes_identical: bytes(&e1.kb) == bytes(&seq.kb),
-            runs_identical: e1.runs == seq.runs,
+            epoch1_kb_bytes_identical: kb_bytes(&e1.kb) == kb_bytes(&seq.kb),
+            epoch1_runs_identical: e1.runs == seq.runs,
+            grid_kb_invariant: grid.iter().all(|c| c.kb_bytes_identical),
         }
     }
 }
 
-/// Serialize the measurement into `kernelblaster-bench-fleet-v1`.
+/// The top grid cell (max workers × max shards) — the scaling claim's
+/// headline number and the trend gate's input.
+fn top_cell(grid: &[GridCell]) -> &GridCell {
+    grid.iter()
+        .max_by_key(|c| (c.workers, c.shards))
+        .expect("grid is never empty")
+}
+
+/// Serialize the measurement into `kernelblaster-bench-fleet-v2`.
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     arch: &GpuArch,
     fleet_cfg: &FleetConfig,
     n_tasks: usize,
+    workers_grid: &[usize],
+    shards_grid: &[usize],
     seq: &Arm,
-    fleet: &Arm,
+    grid: &[GridCell],
+    sim: &[SimPoint],
     parity: &Parity,
     path: &Path,
 ) {
+    let top = top_cell(grid);
     let mut root = JsonObj::new();
-    root.set("format", "kernelblaster-bench-fleet-v1");
+    root.set("format", "kernelblaster-bench-fleet-v2");
     root.set("gpu", arch.name);
     root.set("tasks", n_tasks);
-    root.set("workers", fleet_cfg.workers);
     root.set("epoch_size", fleet_cfg.epoch_size);
+    root.set("commit_queue", fleet_cfg.commit_queue);
+    root.set(
+        "workers_grid",
+        Json::Arr(workers_grid.iter().map(|&w| Json::from(w)).collect()),
+    );
+    root.set(
+        "shards_grid",
+        Json::Arr(shards_grid.iter().map(|&s| Json::from(s)).collect()),
+    );
     root.set("sequential", seq.to_json());
-    root.set("fleet", fleet.to_json());
+    root.set("grid", Json::Arr(grid.iter().map(GridCell::to_json).collect()));
+    root.set("sim", Json::Arr(sim.iter().map(SimPoint::to_json).collect()));
+    let mut t = JsonObj::new();
+    t.set("workers", top.workers);
+    t.set("shards", top.shards);
+    t.set("tasks_per_min", top.tasks_per_min());
+    root.set("top_cell", Json::Obj(t));
     let mut p = JsonObj::new();
-    p.set("epoch1_kb_bytes_identical", parity.kb_bytes_identical);
-    p.set("epoch1_runs_identical", parity.runs_identical);
-    p.set(
-        "fleet_over_seq_geomean",
-        fleet.geomean_valid() / seq.geomean_valid(),
-    );
-    p.set(
-        "speedup_wallclock",
-        seq.seconds / fleet.seconds.max(1e-9),
-    );
+    p.set("epoch1_kb_bytes_identical", parity.epoch1_kb_bytes_identical);
+    p.set("epoch1_runs_identical", parity.epoch1_runs_identical);
+    p.set("grid_kb_invariant", parity.grid_kb_invariant);
+    p.set("top_over_seq_wallclock", seq.seconds / top.seconds.max(1e-9));
     root.set("parity", p);
     match std::fs::write(path, Json::Obj(root).to_string_pretty()) {
         Ok(()) => eprintln!("wrote {}", path.display()),
@@ -175,60 +336,109 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
         checkpoint_every: 0,
         ..Default::default()
     };
+    let workers_grid: Vec<usize> = if ctx.quick {
+        vec![1, 2, 4]
+    } else {
+        vec![1, 2, 4, 8]
+    };
+    let shards_grid: Vec<usize> = vec![1, 2, 4];
     let tasks = ctx.tasks(Level::L1);
-    let (seq, fleet, e1) = arms(&tasks, &arch, &cfg, &fleet_cfg);
+    let (seq, e1) = anchor_arms(&tasks, &arch, &cfg, &fleet_cfg);
+    let grid = run_grid(&tasks, &arch, &cfg, &fleet_cfg, &workers_grid, &shards_grid);
+    let sim = sim_points(&seq.runs, &workers_grid, ctx.seed);
+    let parity = Parity::of(&seq, &e1, &grid);
 
     let mut t = Table::new(&[
-        "mode",
+        "workers",
+        "shards",
         "tasks/min",
         "wall s",
         "geomean vs naive",
-        "KB states",
-        "KB attempts",
+        "sub-commits",
+        "commit waits",
+        "queue peak",
+        "KB bytes = (1,1)",
     ]);
-    for arm in [&seq, &fleet, &e1] {
-        let st = lifecycle::stats(&arm.kb);
+    for c in &grid {
         t.add_row(vec![
-            arm.name.to_string(),
-            fnum(arm.tasks_per_min(), 1),
-            fnum(arm.seconds, 2),
-            fnum(arm.geomean_valid(), 3),
-            st.states.to_string(),
-            st.attempts.to_string(),
+            c.workers.to_string(),
+            c.shards.to_string(),
+            fnum(c.tasks_per_min(), 1),
+            fnum(c.seconds, 2),
+            fnum(c.geomean, 3),
+            c.shard.sub_commits.to_string(),
+            c.shard.commit_waits.to_string(),
+            c.shard.queue_peak.to_string(),
+            c.kb_bytes_identical.to_string(),
         ]);
     }
-    let parity = Parity::of(&seq, &e1);
-    let (bytes_ok, runs_ok) = (parity.kb_bytes_identical, parity.runs_identical);
-    write_bench_json(&arch, &fleet_cfg, tasks.len(), &seq, &fleet, &parity, out);
+    let mut sim_table = Table::new(&["workers", "sim span ticks", "wait p95", "speedup vs base"]);
+    for p in &sim {
+        sim_table.add_row(vec![
+            p.workers.to_string(),
+            p.span_ticks.to_string(),
+            fnum(p.wait_p95, 0),
+            fnum(p.speedup_vs_base, 2),
+        ]);
+    }
+    let top = top_cell(&grid);
+    write_bench_json(
+        &arch,
+        &fleet_cfg,
+        tasks.len(),
+        &workers_grid,
+        &shards_grid,
+        &seq,
+        &grid,
+        &sim,
+        &parity,
+        out,
+    );
     Report {
         name: "fleet".into(),
-        sections: vec![Section {
-            title: format!(
-                "Fleet batch serving vs sequential driver ({} L1 tasks, {}, {} workers, \
-                 epochs of {})",
-                tasks.len(),
-                arch.name,
-                fleet_cfg.workers,
-                fleet_cfg.epoch_size
-            ),
-            table: t,
-            plot: None,
-            notes: vec![
-                format!(
-                    "epoch=1 parity vs sequential: KB bytes identical = {bytes_ok}, \
-                     per-task runs identical = {runs_ok} (both must be true)"
+        sections: vec![
+            Section {
+                title: format!(
+                    "Fleet workers x shards scaling grid ({} L1 tasks, {}, epochs of {})",
+                    tasks.len(),
+                    arch.name,
+                    fleet_cfg.epoch_size
                 ),
-                format!(
-                    "throughput: {:.1} -> {:.1} tasks/min ({:.2}x wall-clock); \
-                     KB quality parity fleet/seq geomean = {:.3}",
-                    seq.tasks_per_min(),
-                    fleet.tasks_per_min(),
-                    seq.seconds / fleet.seconds.max(1e-9),
-                    fleet.geomean_valid() / seq.geomean_valid()
-                ),
-                format!("machine-readable: {}", out.display()),
-            ],
-        }],
+                table: t,
+                plot: None,
+                notes: vec![
+                    format!(
+                        "epoch=1 parity vs sequential: KB bytes identical = {}, per-task \
+                         runs identical = {}; grid KB invariance vs the (1,1) \
+                         single-committer reference = {} (all must be true)",
+                        parity.epoch1_kb_bytes_identical,
+                        parity.epoch1_runs_identical,
+                        parity.grid_kb_invariant
+                    ),
+                    format!(
+                        "top cell ({} workers x {} shards): {:.1} tasks/min vs sequential \
+                         {:.1} — wall-clock is host-dependent, the sim table below is not",
+                        top.workers,
+                        top.shards,
+                        top.tasks_per_min(),
+                        seq.tasks_per_min()
+                    ),
+                    format!("machine-readable: {}", out.display()),
+                ],
+            },
+            Section {
+                title: "Deterministic queue-sim scaling curve (uniform arrivals, \
+                        service = reference step counts)"
+                    .into(),
+                table: sim_table,
+                plot: None,
+                notes: vec![
+                    "ticks are a pure function of the seed; speedup vs base is the \
+                     host-independent scaling-efficiency analog"
+                        .into(),
+                ],
+            },
+        ],
     }
 }
 
@@ -245,7 +455,7 @@ mod tests {
     use crate::tasks::Suite;
 
     #[test]
-    fn fleet_experiment_measures_parity_and_throughput() {
+    fn fleet_experiment_measures_grid_parity_and_scaling() {
         let suite = Suite::full();
         let tasks: Vec<&Task> = vec![
             suite.by_id("L1/01_matmul_square").unwrap(),
@@ -270,42 +480,88 @@ mod tests {
             ..Default::default()
         };
         let arch = GpuArch::a100();
-        let (seq, fleet, e1) = arms(&tasks, &arch, &cfg, &fleet_cfg);
+        let (seq, e1) = anchor_arms(&tasks, &arch, &cfg, &fleet_cfg);
         assert_eq!(seq.runs.len(), 3);
-        assert_eq!(fleet.runs.len(), 3);
         // The determinism anchor: epoch=1 equals the sequential driver.
         assert_eq!(e1.runs, seq.runs, "epoch=1 TaskRuns diverged");
         assert_eq!(
-            persist::to_json(&e1.kb).to_string_pretty(),
-            persist::to_json(&seq.kb).to_string_pretty(),
+            kb_bytes(&e1.kb),
+            kb_bytes(&seq.kb),
             "epoch=1 KB bytes diverged"
         );
-        // The JSON artifact parses and carries the parity verdicts.
+
+        // A small grid: every cell byte-identical to the (1,1) reference.
+        let grid = run_grid(&tasks, &arch, &cfg, &fleet_cfg, &[1, 2], &[1, 2]);
+        assert_eq!(grid.len(), 4, "(1,1) leads, then the remaining cells");
+        assert_eq!((grid[0].workers, grid[0].shards), (1, 1));
+        for c in &grid {
+            assert!(
+                c.kb_bytes_identical,
+                "({}, {}): KB bytes diverged from the single committer",
+                c.workers, c.shards
+            );
+            assert_eq!(c.runs, 3);
+        }
+        // Sharded cells attribute their commits to the shard pipeline.
+        let sharded = grid.iter().find(|c| c.shards == 2).unwrap();
+        assert_eq!(sharded.shard.shards, 2);
+        assert!(sharded.shard.sub_commits > 0);
+
+        // The deterministic sim curve: monotone span, pure function of
+        // the seed.
+        let sim_a = sim_points(&seq.runs, &[1, 2, 4], 9);
+        let sim_b = sim_points(&seq.runs, &[1, 2, 4], 9);
+        assert_eq!(sim_a.len(), 3);
+        for (a, b) in sim_a.iter().zip(&sim_b) {
+            assert_eq!(a.span_ticks, b.span_ticks, "sim not deterministic");
+        }
+        assert!(
+            sim_a.windows(2).all(|w| w[0].span_ticks >= w[1].span_ticks),
+            "more workers must never lengthen the sim span"
+        );
+        assert_eq!(sim_a[0].speedup_vs_base, 1.0);
+
+        // The JSON artifact parses and carries the v2 schema.
         let dir = std::env::temp_dir().join("kb_fleet_exp_test");
         std::fs::create_dir_all(&dir).unwrap();
         let out = dir.join("BENCH_fleet.json");
-        let parity = Parity::of(&seq, &e1);
-        write_bench_json(&arch, &fleet_cfg, tasks.len(), &seq, &fleet, &parity, &out);
+        let parity = Parity::of(&seq, &e1, &grid);
+        write_bench_json(
+            &arch, &fleet_cfg, tasks.len(), &[1, 2], &[1, 2], &seq, &grid, &sim_a, &parity,
+            &out,
+        );
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(
             j.get("format").and_then(Json::as_str),
-            Some("kernelblaster-bench-fleet-v1")
+            Some("kernelblaster-bench-fleet-v2")
         );
-        let parity = j.get("parity").unwrap();
+        let p = j.get("parity").unwrap();
         assert_eq!(
-            parity.get("epoch1_kb_bytes_identical").and_then(Json::as_bool),
+            p.get("epoch1_kb_bytes_identical").and_then(Json::as_bool),
             Some(true)
         );
-        assert_eq!(
-            parity.get("epoch1_runs_identical").and_then(Json::as_bool),
-            Some(true)
-        );
-        assert!(j
-            .get("fleet")
-            .and_then(|f| f.get("tasks_per_min"))
-            .and_then(Json::as_f64)
-            .unwrap()
-            > 0.0);
+        assert_eq!(p.get("epoch1_runs_identical").and_then(Json::as_bool), Some(true));
+        assert_eq!(p.get("grid_kb_invariant").and_then(Json::as_bool), Some(true));
+        let cells = j.get("grid").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 4);
+        for c in cells {
+            for key in [
+                "workers",
+                "shards",
+                "tasks_per_min",
+                "sub_commits",
+                "commit_waits",
+                "queue_peak",
+                "kb_bytes_identical",
+            ] {
+                assert!(c.get(key).is_some(), "grid cell lost key '{key}'");
+            }
+        }
+        let top = j.get("top_cell").unwrap();
+        assert_eq!(top.get("workers").and_then(Json::as_usize), Some(2));
+        assert_eq!(top.get("shards").and_then(Json::as_usize), Some(2));
+        assert!(top.get("tasks_per_min").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(j.get("sim").and_then(Json::as_arr).unwrap().len() == 3);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

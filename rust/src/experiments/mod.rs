@@ -82,6 +82,88 @@ pub(crate) mod pairing {
     }
 }
 
+/// Deterministic arrival/queue plumbing shared by the [`serve`] and
+/// [`fleet`] scenarios: synthetic arrival traces, a FIFO
+/// earliest-available-worker queue, and nearest-rank percentiles over
+/// tick samples. Tick metrics are a pure function of the seed —
+/// wall-clock never enters, so CI can compare them across hosts.
+pub(crate) mod simqueue {
+    use crate::util::rng::Rng;
+
+    /// Arrival ticks for `n` requests of a trace shape, seeded per shape
+    /// (monotone non-decreasing; bursty shapes repeat ticks within a
+    /// burst).
+    pub(crate) fn trace_arrivals(shape: &str, n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed).derive(shape);
+        let mut ticks = Vec::with_capacity(n);
+        let mut t = 0u64;
+        match shape {
+            "uniform" => {
+                for _ in 0..n {
+                    t += 3 + rng.below(4); // gaps 3..=6, mean ~4.5
+                    ticks.push(t);
+                }
+            }
+            "bursty" => {
+                while ticks.len() < n {
+                    t += 12 + rng.below(9); // idle gap 12..=20
+                    let burst = 2 + rng.index(3); // 2..=4 requests at once
+                    for _ in 0..burst.min(n - ticks.len()) {
+                        ticks.push(t);
+                    }
+                }
+            }
+            "heavy_tailed" => {
+                for _ in 0..n {
+                    // Pareto(alpha=1.2) inter-arrival: mostly ~1-tick gaps,
+                    // occasional large ones (capped so the span stays finite).
+                    let u = rng.f64().min(1.0 - 1e-12);
+                    let gap = (1.0 - u).powf(-1.0 / 1.2).min(60.0) as u64;
+                    t += gap.max(1);
+                    ticks.push(t);
+                }
+            }
+            other => panic!("unknown trace shape '{other}'"),
+        }
+        ticks
+    }
+
+    /// Deterministic FIFO queue simulation: each request goes to the
+    /// earliest-available of `workers` servers, never before its arrival
+    /// tick. Returns per-request (wait, sojourn) in ticks plus the busy
+    /// span (last completion tick).
+    pub(crate) fn simulate_queue(
+        arrivals: &[u64],
+        service: &[u64],
+        workers: usize,
+    ) -> (Vec<u64>, Vec<u64>, u64) {
+        let mut avail = vec![0u64; workers.max(1)];
+        let mut waits = Vec::with_capacity(arrivals.len());
+        let mut sojourns = Vec::with_capacity(arrivals.len());
+        let mut span = 0u64;
+        for (a, s) in arrivals.iter().zip(service) {
+            let wi = (0..avail.len()).min_by_key(|i| avail[*i]).unwrap();
+            let start = (*a).max(avail[wi]);
+            let finish = start + (*s).max(1);
+            avail[wi] = finish;
+            waits.push(start - a);
+            sojourns.push(finish - a);
+            span = span.max(finish);
+        }
+        (waits, sojourns, span)
+    }
+
+    /// Nearest-rank percentile over tick samples (NaN when empty).
+    pub(crate) fn percentile(xs: &[u64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = xs.to_vec();
+        v.sort_unstable();
+        v[((v.len() - 1) as f64 * p).round() as usize] as f64
+    }
+}
+
 use crate::baselines;
 use crate::gpu::GpuArch;
 use crate::harness::HarnessConfig;

@@ -26,11 +26,17 @@
 //! screened candidates are ≥ margin× slower than the incumbent under
 //! the very cost model the profiler samples from, so staging should not
 //! move the geomean. Reported as a [`Report`] plus machine-readable
-//! `BENCH_verify.json` (format `kernelblaster-bench-verify-v1`).
+//! `BENCH_verify.json` (format `kernelblaster-bench-verify-v1`), which
+//! also carries a `screen_error` section — the measured
+//! profile-vs-estimate error distribution whose p95 the CLI's
+//! `--screen-margin auto` adopts as its margin (see `ScreenError`
+//! below).
 
 use super::pairing::{self, Cell};
 use super::{Ctx, Report, Section};
-use crate::gpu::GpuArch;
+use crate::gpu::{self, GpuArch};
+use crate::opts::Candidate;
+use crate::util::rng::Rng;
 use crate::harness::memo::VerifyMemo;
 use crate::harness::staged::{TierStats, VerifyConfig};
 use crate::harness::VerifyCache;
@@ -157,6 +163,90 @@ fn arms(tasks: &[&Task], arch: &GpuArch, base: &IcrlConfig, seeds: &[u64]) -> Ve
         .collect()
 }
 
+/// The screen's measured estimate-vs-profile error distribution.
+///
+/// The tier-0 screen compares a noiseless cost-model **estimate** of the
+/// candidate against the **profiled** incumbent, so its safe margin is
+/// bounded by how far a profile can drift from the estimate under the
+/// harness's measurement noise. This samples exactly that drift:
+/// profile each task's naive candidate repeatedly at the configured
+/// `noise_sigma` and record the profile/estimate total-time ratio. The
+/// p95 ratio (clamped to ≥ 1.0 — a margin below 1 would screen honest
+/// candidates) is published as `suggested_margin`, which
+/// `--screen-margin auto` reads from the artifact. With `noise_sigma =
+/// 0` the profiler is the cost model and every ratio is exactly 1.0.
+struct ScreenError {
+    samples: usize,
+    noise_sigma: f64,
+    p50_ratio: f64,
+    p95_ratio: f64,
+    max_ratio: f64,
+    suggested_margin: f64,
+}
+
+/// Nearest-rank percentile over f64 samples (NaN on empty).
+fn percentile_f64(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("ratios are finite"));
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Repetitions per `(task, seed)` cell — enough samples for a stable
+/// p95 even on the quick grid without profiling cost mattering.
+const SCREEN_ERROR_REPS: usize = 4;
+
+/// Sample the screen-error distribution over the experiment's grid.
+fn measure_screen_error(
+    tasks: &[&Task],
+    arch: &GpuArch,
+    base: &IcrlConfig,
+    seeds: &[u64],
+) -> ScreenError {
+    let sigma = base.harness.noise_sigma;
+    let mut ratios = Vec::with_capacity(tasks.len() * seeds.len() * SCREEN_ERROR_REPS);
+    for &seed in seeds {
+        // Decorrelated from the driver's rollout streams: this is a
+        // measurement of the profiler, not part of any run.
+        let mut rng = Rng::new(seed ^ 0x5c12ee);
+        for task in tasks {
+            let cand = Candidate::naive(task);
+            let est = gpu::estimate_schedule(arch, &cand.full, &cand.schedule).total_time_s;
+            for _ in 0..SCREEN_ERROR_REPS {
+                let prof =
+                    crate::gpu::profiler::profile(arch, &cand.full, &cand.schedule, sigma, &mut rng)
+                        .total_time_s;
+                ratios.push(prof / est);
+            }
+        }
+    }
+    let p95 = percentile_f64(&ratios, 0.95);
+    ScreenError {
+        samples: ratios.len(),
+        noise_sigma: sigma,
+        p50_ratio: percentile_f64(&ratios, 0.50),
+        p95_ratio: p95,
+        max_ratio: ratios.iter().cloned().fold(f64::NAN, f64::max),
+        suggested_margin: p95.max(1.0),
+    }
+}
+
+impl ScreenError {
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("samples", self.samples);
+        o.set("noise_sigma", self.noise_sigma);
+        o.set("p50_ratio", self.p50_ratio);
+        o.set("p95_ratio", self.p95_ratio);
+        o.set("max_ratio", self.max_ratio);
+        o.set("suggested_margin", self.suggested_margin);
+        Json::Obj(o)
+    }
+}
+
 /// Serialize the measurement into `kernelblaster-bench-verify-v1`.
 fn write_bench_json(
     arch: &GpuArch,
@@ -164,6 +254,7 @@ fn write_bench_json(
     n_tasks: usize,
     seeds: &[u64],
     all: &[Arm],
+    screen_error: &ScreenError,
     path: &Path,
 ) {
     let baseline = &all[0]; // arm_specs() leads with "unstaged"
@@ -181,6 +272,7 @@ fn write_bench_json(
     root.set("verify_seeds", base.harness.verify_seeds);
     root.set("screen_margin", dflt.screen_margin);
     root.set("probe_seeds", dflt.probe_seeds);
+    root.set("screen_error", screen_error.to_json());
     let arms_json: Vec<Json> = all
         .iter()
         .map(|arm| {
@@ -247,7 +339,8 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
             arm.tiers.memo_hits.to_string(),
         ]);
     }
-    write_bench_json(&arch, &base, tasks.len(), &seeds, &all, out);
+    let screen_error = measure_screen_error(&tasks, &arch, &base, &seeds);
+    write_bench_json(&arch, &base, tasks.len(), &seeds, &all, &screen_error, out);
     Report {
         name: "verify".into(),
         sections: vec![Section {
@@ -274,6 +367,16 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
                  tier-2 oracle — tiers only triage rejections, they never \
                  promote"
                     .to_string(),
+                format!(
+                    "measured screen error at noise_sigma {}: profile/estimate \
+                     p95 ratio {} over {} samples -> suggested screen margin \
+                     {:.3}x (what `--screen-margin auto` reads from this \
+                     artifact)",
+                    screen_error.noise_sigma,
+                    fnum(screen_error.p95_ratio, 3),
+                    screen_error.samples,
+                    screen_error.suggested_margin
+                ),
                 format!("machine-readable: {}", out.display()),
             ],
         }],
@@ -356,10 +459,33 @@ mod tests {
 
         // The JSON artifact parses and carries every arm with its
         // counters.
+        // Screen error: at noise 0 the profiler IS the cost model, so
+        // every ratio is 1 (up to sec->µs->sec rounding) and the
+        // suggested margin clamps to exactly 1.0.
+        let se = measure_screen_error(&tasks, &arch, &base, &seeds);
+        assert_eq!(se.samples, 2 * 2 * SCREEN_ERROR_REPS);
+        assert!((se.p95_ratio - 1.0).abs() < 1e-9, "noiseless p95 {}", se.p95_ratio);
+        assert_eq!(se.suggested_margin, 1.0);
+        // Under noise the distribution widens but stays ordered, the
+        // margin never drops below 1, and resampling is deterministic.
+        let noisy_base = IcrlConfig {
+            harness: HarnessConfig {
+                noise_sigma: 0.1,
+                ..Default::default()
+            },
+            ..base.clone()
+        };
+        let a = measure_screen_error(&tasks, &arch, &noisy_base, &seeds);
+        let b = measure_screen_error(&tasks, &arch, &noisy_base, &seeds);
+        assert_eq!(a.p95_ratio, b.p95_ratio, "screen error not deterministic");
+        assert!(a.p50_ratio <= a.p95_ratio && a.p95_ratio <= a.max_ratio);
+        assert!(a.max_ratio > 1.0, "lognormal noise never exceeded the estimate");
+        assert!(a.suggested_margin >= 1.0);
+
         let dir = std::env::temp_dir().join("kb_verify_exp_test");
         std::fs::create_dir_all(&dir).unwrap();
         let out = dir.join("BENCH_verify.json");
-        write_bench_json(&arch, &base, tasks.len(), &seeds, &all, &out);
+        write_bench_json(&arch, &base, tasks.len(), &seeds, &all, &se, &out);
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(
             j.get("format").and_then(Json::as_str),
@@ -379,6 +505,18 @@ mod tests {
             .get("memo_hits")
             .and_then(Json::as_usize)
             .is_some());
+        // The screen_error section carries what `--screen-margin auto`
+        // reads (cli::read_suggested_margin depends on these key names).
+        let err = j.get("screen_error").expect("screen_error section");
+        assert_eq!(
+            err.get("suggested_margin").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            err.get("samples").and_then(Json::as_usize),
+            Some(se.samples)
+        );
+        assert!(err.get("p95_ratio").and_then(Json::as_f64).is_some());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

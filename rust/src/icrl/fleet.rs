@@ -74,12 +74,32 @@
 //! bit-for-bit, and `tests/fleet.rs` pins the epoch mix's worker-count
 //! invariance.
 //!
+//! # Sharded pipelined committer ([`FleetConfig::shards`] > 1)
+//!
+//! The single committer above serializes every KB commit. With
+//! `shards > 1` the commit side runs as a pipeline instead
+//! ([`crate::icrl::shard`]): workers stream finished tasks to a
+//! sequencer over a bounded channel, the sequencer splits each delta by
+//! a deterministic [`crate::kb::StateSig`] hash and routes the parts to
+//! per-shard committer threads, and each committer folds its shard's
+//! parts (and journals them to its own [`ShardSegment`]) in task order.
+//! Because [`lifecycle::apply_delta`] treats states independently, the
+//! per-shard folds compose back into the single-committer KB
+//! byte-for-byte — `shards = 1` runs this module's classic path
+//! unchanged, and `tests/fleet.rs` pins saved-KB-bytes invariance
+//! across workers × shards. Counters land in [`FleetOutcome::shard`].
+//!
 //! # Durability (the [`Store`] trait)
 //!
 //! The committer persists through a [`Store`]: after each delta is
 //! folded into the shared KB, `store.commit(&delta, kb)` runs — still
 //! in task order, so durability inherits the determinism contract.
-//! Three backends:
+//! (On the sharded path the same backends persist through the trait's
+//! epoch hooks — [`Store::begin_epoch`] / [`Store::commit_unsegmented`]
+//! / [`Store::end_epoch`] — with cadence work landing on epoch
+//! boundaries; a store failure there surfaces after the epoch, leaving
+//! the in-memory KB at the last epoch boundary rather than the last
+//! committed task.) Three backends:
 //!
 //! - [`NullStore`] — no persistence (the default for `run_fleet` /
 //!   `run_fleet_observed` / `run_fleet_memo`, preserving their exact
@@ -102,13 +122,14 @@ use super::driver::{
     optimize_task_delta_verified, optimize_task_verified, IcrlConfig, KbMode, TaskRun,
 };
 use super::policy::{PolicyConfig, PolicyKind};
+use super::shard::{self, ShardMetrics};
 use crate::gpu::GpuArch;
 use crate::harness::memo::{MemoDelta, VerifyMemo};
 use crate::harness::staged::TierStats;
 use crate::harness::VerifyCache;
 use crate::kb::lifecycle::{self, KbDelta};
 use crate::kb::persist::PersistError;
-use crate::kb::store::LogStore;
+use crate::kb::store::{LogStore, ShardSegment};
 use crate::kb::{persist, KnowledgeBase};
 use crate::tasks::Task;
 use std::path::{Path, PathBuf};
@@ -152,6 +173,20 @@ pub struct FleetConfig {
     /// `epoch_policies` when both are set. The choice is a pure function
     /// of the epoch-start KB, so worker-count invariance is untouched.
     pub auto_epoch_policies: bool,
+    /// KB shards (≥ 1): partition the shared KB by a deterministic hash
+    /// of [`crate::kb::StateSig`] into this many shards, each with its
+    /// own committer thread, so commits to different shards proceed in
+    /// parallel (see [`crate::icrl::shard`]). `1` (the default) runs the
+    /// classic single-committer pipeline; any value is bit-identical in
+    /// results and saved-KB bytes — like `workers`, the knob only moves
+    /// wall clock.
+    pub shards: usize,
+    /// Bound of each pipeline queue in the sharded path (≥ 1): the
+    /// worker → sequencer results channel and every sequencer →
+    /// committer channel hold at most this many in-flight messages; a
+    /// full queue blocks the sender (backpressure, counted in
+    /// [`ShardMetrics::commit_waits`]). Ignored when `shards == 1`.
+    pub commit_queue: usize,
 }
 
 impl Default for FleetConfig {
@@ -162,6 +197,8 @@ impl Default for FleetConfig {
             checkpoint_every: 0,
             epoch_policies: Vec::new(),
             auto_epoch_policies: false,
+            shards: 1,
+            commit_queue: 8,
         }
     }
 }
@@ -217,6 +254,11 @@ pub struct FleetOutcome {
     /// Aggregated staged-verification activity across every task of the
     /// batch (all-zero when `verify.staged` is off).
     pub tiers: TierStats,
+    /// Sharded-pipeline counters ([`crate::icrl::shard`]): sub-commits
+    /// routed, backpressure waits, and queue high-water. On the classic
+    /// single-committer path (`FleetConfig::shards == 1`) this is
+    /// `ShardMetrics { shards: 1, .. }` with zero counters.
+    pub shard: ShardMetrics,
 }
 
 /// Progress hooks for streaming consumers (the `batch` CLI command
@@ -248,6 +290,48 @@ pub trait Store {
 
     /// Persist the full KB unconditionally (end of run, shutdown).
     fn flush(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError>;
+
+    /// Sharded-committer hook ([`crate::icrl::shard`]): hand out one
+    /// journal segment per shard for the epoch about to run, plus the
+    /// first sequence number the epoch's journaled commits will use.
+    /// Committer threads append delta *parts* to their segment
+    /// concurrently; the fleet calls [`Store::end_epoch`] once the
+    /// epoch's borrow ends. The default (`None`, every backend without
+    /// per-shard segments — and a [`LogStore`] whose on-disk layout
+    /// doesn't match `shards`) makes the sharded fleet journal nothing
+    /// during the epoch and replay each committed delta through
+    /// [`Store::commit_unsegmented`] at the epoch boundary instead.
+    fn begin_epoch(&mut self, _shards: usize) -> Option<(&mut [ShardSegment], u64)> {
+        None
+    }
+
+    /// Epoch-boundary fallback commit for backends that returned `None`
+    /// from [`Store::begin_epoch`]: called once per non-empty committed
+    /// delta, in task order, after the epoch's KB is assembled. The
+    /// default does nothing ([`NullStore`]); [`LogStore`] appends a
+    /// classic whole-delta journal record; [`WholeFileStore`] counts the
+    /// commit toward its checkpoint cadence.
+    fn commit_unsegmented(&mut self, _delta: &KbDelta) -> Result<(), PersistError> {
+        Ok(())
+    }
+
+    /// Sharded-committer hook: the epoch is fully committed and `kb` is
+    /// the assembled shared KB. `commits` is this epoch's committed-delta
+    /// count; `journaled` is how many of them consumed a journal
+    /// sequence number through segments (0 on the
+    /// [`Store::commit_unsegmented`] path, where appends count
+    /// themselves). Backends fold segment counters and run their
+    /// cadence work (checkpoint / snapshot) here — which is why, on the
+    /// sharded path, durability cadences land on epoch boundaries
+    /// rather than mid-epoch.
+    fn end_epoch(
+        &mut self,
+        _kb: &KnowledgeBase,
+        _commits: usize,
+        _journaled: u64,
+    ) -> Result<(), PersistError> {
+        Ok(())
+    }
 }
 
 /// The no-persistence backend: callers that save the KB themselves
@@ -341,6 +425,42 @@ impl Store for WholeFileStore {
         self.checkpoints += 1;
         Ok(())
     }
+
+    /// Sharded path: fold the epoch's full commit count (the classic
+    /// `commit` counts every commit, empty deltas included, so cadence
+    /// parity needs the epoch total — [`Store::commit_unsegmented`]
+    /// only sees non-empty deltas) and run the cadence checkpoint
+    /// against the assembled KB.
+    fn end_epoch(
+        &mut self,
+        kb: &KnowledgeBase,
+        commits: usize,
+        _journaled: u64,
+    ) -> Result<(), PersistError> {
+        self.commits += commits;
+        if self.every == 0 || self.commits - self.last_ckpt < self.every {
+            return Ok(());
+        }
+        match checkpoint_atomic(kb, &self.path) {
+            Ok(()) => {
+                self.last_ckpt = self.commits;
+                self.checkpoints += 1;
+                if self.verbose {
+                    eprintln!(
+                        "checkpointed KB at {} ({} commits)",
+                        self.path.display(),
+                        self.commits
+                    );
+                }
+                Ok(())
+            }
+            Err(e) if self.fail_soft => {
+                eprintln!("warning: checkpoint failed: {e}");
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
+    }
 }
 
 impl Store for LogStore {
@@ -357,6 +477,33 @@ impl Store for LogStore {
 
     fn flush(&mut self, kb: &KnowledgeBase) -> Result<(), PersistError> {
         self.snapshot(kb)
+    }
+
+    /// Hand out the per-shard journal segments when the on-disk layout
+    /// matches the fleet's shard count (see
+    /// [`LogStore::epoch_segments`]); otherwise fall back to
+    /// epoch-boundary whole-delta appends.
+    fn begin_epoch(&mut self, shards: usize) -> Option<(&mut [ShardSegment], u64)> {
+        self.epoch_segments(shards)
+    }
+
+    fn commit_unsegmented(&mut self, delta: &KbDelta) -> Result<(), PersistError> {
+        if delta.is_empty() {
+            return Ok(());
+        }
+        self.append(delta)?;
+        Ok(())
+    }
+
+    fn end_epoch(
+        &mut self,
+        kb: &KnowledgeBase,
+        _commits: usize,
+        journaled: u64,
+    ) -> Result<(), PersistError> {
+        self.fold_epoch(journaled);
+        self.maybe_snapshot(kb)?;
+        Ok(())
     }
 }
 
@@ -437,6 +584,14 @@ fn run_fleet_core(
     store: &mut dyn Store,
     obs: &mut dyn FleetObserver,
 ) -> Result<FleetOutcome, PersistError> {
+    if fleet.shards > 1 {
+        // The sharded pipelined committer: same epoch/snapshot/commit
+        // protocol, with deltas split by StateSig hash across per-shard
+        // committer threads. Bit-identical by the associativity argument
+        // in its module docs; `shards <= 1` stays on this path so the
+        // classic fleet is untouched code, not just untouched behavior.
+        return shard::run_fleet_sharded(tasks, arch, kb, cfg, fleet, memo, store, obs);
+    }
     let epoch_size = fleet.epoch_size.max(1);
     let workers = fleet.workers.max(1);
     let ephemeral = cfg.kb_mode == KbMode::EphemeralPerTask;
@@ -514,31 +669,84 @@ fn run_fleet_core(
         epochs,
         commits,
         tiers,
+        shard: ShardMetrics {
+            shards: 1,
+            ..Default::default()
+        },
     })
 }
 
 /// One epoch's inputs, bundled: the task chunk, its global offset, the
 /// epoch-shared snapshots (KB and verify memo), and the serving knobs.
-struct EpochJob<'a> {
-    chunk: &'a [&'a Task],
-    offset: usize,
-    arch: &'a GpuArch,
-    snapshot: &'a KnowledgeBase,
-    cfg: &'a IcrlConfig,
-    workers: usize,
-    ephemeral: bool,
+pub(crate) struct EpochJob<'a> {
+    pub(crate) chunk: &'a [&'a Task],
+    pub(crate) offset: usize,
+    pub(crate) arch: &'a GpuArch,
+    pub(crate) snapshot: &'a KnowledgeBase,
+    pub(crate) cfg: &'a IcrlConfig,
+    pub(crate) workers: usize,
+    pub(crate) ephemeral: bool,
     /// Verify-memo snapshot shared by every task of the epoch (same
     /// staleness contract as the KB snapshot).
-    memo: Option<&'a VerifyMemo>,
+    pub(crate) memo: Option<&'a VerifyMemo>,
 }
 
 /// What one task's serving produced: the run, the KB evidence delta, the
 /// verify-memo delta, and the tier counters.
-struct TaskResult {
-    run: TaskRun,
-    delta: KbDelta,
-    memo: MemoDelta,
-    tiers: TierStats,
+pub(crate) struct TaskResult {
+    pub(crate) run: TaskRun,
+    pub(crate) delta: KbDelta,
+    pub(crate) memo: MemoDelta,
+    pub(crate) tiers: TierStats,
+}
+
+/// Serve task `i` of an epoch — the one per-task function both fleet
+/// paths run (the classic pool here, the sharded pipeline in
+/// [`crate::icrl::shard`]), so their results are identical by
+/// construction. Pure in everything but `cache` (a per-worker memo).
+pub(crate) fn serve_epoch_task(
+    job: &EpochJob<'_>,
+    i: usize,
+    cache: &mut VerifyCache,
+) -> TaskResult {
+    let run_seed = (job.offset + i) as u64;
+    if job.ephemeral {
+        // The ablation arm starts every task cold and discards the
+        // KB, exactly as run_suite's EphemeralPerTask does — no
+        // delta to extract, nothing to commit.
+        let mut scratch = KnowledgeBase::empty();
+        let (run, mdelta, tiers) = optimize_task_verified(
+            job.chunk[i],
+            job.arch,
+            &mut scratch,
+            job.cfg,
+            run_seed,
+            cache,
+            job.memo,
+        );
+        TaskResult {
+            run,
+            delta: KbDelta::empty(),
+            memo: mdelta,
+            tiers,
+        }
+    } else {
+        let (run, delta, mdelta, tiers) = optimize_task_delta_verified(
+            job.chunk[i],
+            job.arch,
+            job.snapshot,
+            job.cfg,
+            run_seed,
+            cache,
+            job.memo,
+        );
+        TaskResult {
+            run,
+            delta,
+            memo: mdelta,
+            tiers,
+        }
+    }
 }
 
 /// Serve one epoch: the chunk's tasks against a single snapshot, over a
@@ -546,46 +754,7 @@ struct TaskResult {
 /// back in task order regardless of completion order.
 fn epoch_results(job: &EpochJob<'_>) -> Vec<TaskResult> {
     let n = job.chunk.len();
-    let serve_one = |i: usize, cache: &mut VerifyCache| {
-        let run_seed = (job.offset + i) as u64;
-        if job.ephemeral {
-            // The ablation arm starts every task cold and discards the
-            // KB, exactly as run_suite's EphemeralPerTask does — no
-            // delta to extract, nothing to commit.
-            let mut scratch = KnowledgeBase::empty();
-            let (run, mdelta, tiers) = optimize_task_verified(
-                job.chunk[i],
-                job.arch,
-                &mut scratch,
-                job.cfg,
-                run_seed,
-                cache,
-                job.memo,
-            );
-            TaskResult {
-                run,
-                delta: KbDelta::empty(),
-                memo: mdelta,
-                tiers,
-            }
-        } else {
-            let (run, delta, mdelta, tiers) = optimize_task_delta_verified(
-                job.chunk[i],
-                job.arch,
-                job.snapshot,
-                job.cfg,
-                run_seed,
-                cache,
-                job.memo,
-            );
-            TaskResult {
-                run,
-                delta,
-                memo: mdelta,
-                tiers,
-            }
-        }
-    };
+    let serve_one = |i: usize, cache: &mut VerifyCache| serve_epoch_task(job, i, cache);
     if job.workers <= 1 || n <= 1 {
         // Thread-free serial path (also the profiling-friendly mode).
         let mut cache = VerifyCache::new();

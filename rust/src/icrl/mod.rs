@@ -27,7 +27,10 @@
 //! [`fleet`] scheduler serves many optimization requests concurrently
 //! over a bounded worker pool (snapshot → worker → delta →
 //! epoch-ordered commit), bit-identical to the sequential driver — see
-//! its module docs for the determinism contract.
+//! its module docs for the determinism contract. With
+//! [`FleetConfig::shards`] > 1 the commit side itself parallelizes: the
+//! [`shard`] pipeline partitions the KB by `StateSig` hash across
+//! per-shard committer threads without changing a byte of output.
 //!
 //! Step 4's selection rule is no longer hard-wired: the driver is
 //! parameterized over a [`policy::SearchPolicy`]
@@ -59,6 +62,7 @@
 pub mod driver;
 pub mod fleet;
 pub mod policy;
+pub mod shard;
 
 pub use driver::{
     optimize_task, optimize_task_delta, optimize_task_delta_verified, optimize_task_in,
@@ -68,6 +72,7 @@ pub use fleet::{
     auto_epoch_policy, run_fleet, run_fleet_memo, run_fleet_observed, run_fleet_store,
     FleetConfig, FleetOutcome, NullStore, Store, WholeFileStore,
 };
+pub use shard::{shard_of, ShardMetrics};
 pub use policy::{
     BeamSearch, EpsilonGreedy, GreedyTopK, PolicyConfig, PolicyKind, Portfolio, Schedule,
     SearchPolicy, Thompson, UcbBandit,

@@ -83,10 +83,12 @@ use crate::opts::Technique;
 use crate::util::rng::Rng;
 
 /// Annealing schedule for an exploration hyperparameter (ε or UCB-c):
-/// how the configured base value decays as a *state's* evidence
-/// accumulates. `n` is the candidate pool's total recorded attempts
-/// ([`ScoredCandidate::attempts`] summed over the enumeration), so fresh
-/// states explore at full strength while well-evidenced states exploit.
+/// how the configured base value decays as evidence accumulates. `n` is
+/// the *(state, technique)* attempt count ([`ScoredCandidate::attempts`]
+/// of the entry the decision concerns), not the state's pooled total:
+/// each technique's exploration decays with its **own** evidence, so one
+/// saturated technique cannot freeze its untried siblings' exploration.
+/// Fresh entries explore at full strength; well-evidenced ones exploit.
 ///
 /// [`Schedule::Constant`] returns the base value verbatim (no arithmetic
 /// touches it), which makes the default configuration bit-identical to
@@ -251,9 +253,15 @@ impl SearchPolicy for GreedyTopK {
 /// evidence), tails falls back to the weighted draw. With no untried
 /// candidates left the slot is always a weighted draw.
 ///
-/// The effective ε is annealed per state by `schedule` over the pool's
-/// total recorded attempts, so a fresh state gets the full floor and an
-/// evidence-heavy state converges to the pure weighted draw.
+/// The effective ε is annealed by `schedule` over the least-evidenced
+/// remaining candidate's own (state, technique) attempt count — while
+/// any candidate is still untried that count is zero, so the floor
+/// holds at full strength no matter how saturated its siblings are
+/// (pooled-attempt keying used to let one hot technique anneal the
+/// whole state's floor away and starve the rest). Once every technique
+/// carries evidence the uniform branch is unreachable and the schedule
+/// is moot — exploration decays structurally, by the untried set
+/// emptying, rather than by ε shrinking.
 /// [`Schedule::Constant`] keeps ε fixed — bit-identical to the
 /// pre-schedule policy (the coin consumes the same stream draw with the
 /// same probability).
@@ -262,7 +270,8 @@ pub struct EpsilonGreedy {
     /// Base probability of the uniform-over-untried draw per slot, in
     /// [0, 1].
     pub epsilon: f64,
-    /// Per-state annealing of ε over the pool's recorded attempts.
+    /// Annealing of ε over the least-evidenced remaining candidate's
+    /// own attempts (per-technique keying).
     pub schedule: Schedule,
 }
 
@@ -277,8 +286,6 @@ impl SearchPolicy for EpsilonGreedy {
         k: usize,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        let evidence: usize = candidates.iter().map(|c| c.attempts).sum();
-        let epsilon = self.schedule.apply(self.epsilon, evidence);
         let mut remaining: Vec<usize> = (0..candidates.len()).collect();
         let mut picked = Vec::new();
         while picked.len() < k && !remaining.is_empty() {
@@ -289,6 +296,15 @@ impl SearchPolicy for EpsilonGreedy {
                 .filter(|(_, &ci)| candidates[ci].attempts == 0)
                 .map(|(pos, _)| pos)
                 .collect();
+            // Per-technique keying: the floor decays with the evidence
+            // of the most-starved remaining candidate (zero while any
+            // untried entry exists), never with siblings' saturation.
+            let floor_evidence = remaining
+                .iter()
+                .map(|&ci| candidates[ci].attempts)
+                .min()
+                .unwrap_or(0);
+            let epsilon = self.schedule.apply(self.epsilon, floor_evidence);
             let pos = if !untried.is_empty() && rng.chance(epsilon) {
                 untried[rng.index(untried.len())]
             } else {
@@ -310,29 +326,33 @@ impl SearchPolicy for EpsilonGreedy {
 /// attempt counts into a principled exploration bonus — an entry's
 /// uncertainty, not just its mean, earns it picks. Consumes no RNG.
 ///
-/// The effective c is annealed per state by `schedule` over the pool's
-/// total attempts (on top of UCB's own `1/√attempts` per-entry decay —
-/// the schedule shrinks the *whole state's* bonus as its evidence
-/// matures). [`Schedule::Constant`] keeps c fixed — bit-identical to
-/// the pre-schedule policy.
+/// The effective c is annealed per candidate by `schedule` over that
+/// candidate's own (state, technique) attempts (on top of UCB's own
+/// `1/√attempts` per-entry decay — the schedule shrinks each *entry's*
+/// bonus as its own evidence matures, so a saturated technique's bonus
+/// collapses while an untried sibling keeps the full-strength c it was
+/// configured with). [`Schedule::Constant`] keeps c fixed —
+/// bit-identical to the pre-schedule policy.
 #[derive(Debug, Clone, Copy)]
 pub struct UcbBandit {
     /// Base exploration coefficient (≥ 0; 0 degenerates to deterministic
     /// exploit-by-expected-gain).
     pub c: f64,
-    /// Per-state annealing of c over the pool's recorded attempts.
+    /// Per-candidate annealing of c over each entry's own attempts.
     pub schedule: Schedule,
 }
 
 impl UcbBandit {
-    /// The UCB score of one candidate given the (possibly annealed)
-    /// coefficient and the pool's total attempts.
-    fn score(cand: &ScoredCandidate, c: f64, total_attempts: usize) -> f64 {
+    /// The UCB score of one candidate: the exploration coefficient is
+    /// annealed over the candidate's **own** attempts, the `ln` term
+    /// keeps the pool's total (classic UCB1 shape).
+    fn score(&self, cand: &ScoredCandidate, total_attempts: usize) -> f64 {
         let base = if cand.expected_gain.is_finite() {
             cand.expected_gain
         } else {
             0.0
         };
+        let c = self.schedule.apply(self.c, cand.attempts);
         let ln_t = ((total_attempts + 1) as f64).ln();
         base + c * (ln_t / (cand.attempts as f64 + 1.0)).sqrt()
     }
@@ -350,11 +370,10 @@ impl SearchPolicy for UcbBandit {
         _rng: &mut Rng,
     ) -> Vec<usize> {
         let total: usize = candidates.iter().map(|c| c.attempts).sum();
-        let c_eff = self.schedule.apply(self.c, total);
         let mut idx: Vec<usize> = (0..candidates.len()).collect();
         idx.sort_by(|&a, &b| {
-            Self::score(&candidates[b], c_eff, total)
-                .total_cmp(&Self::score(&candidates[a], c_eff, total))
+            self.score(&candidates[b], total)
+                .total_cmp(&self.score(&candidates[a], total))
                 .then(a.cmp(&b))
         });
         idx.truncate(k);
@@ -1026,26 +1045,89 @@ mod tests {
     }
 
     #[test]
-    fn annealed_epsilon_converges_to_the_weighted_draw() {
-        // On an evidence-heavy pool an aggressively annealed ε=1 policy
-        // must consume the same stream as the pure weighted draw (the
-        // coin still flips, but the untried branch is never taken once
-        // the effective ε underflows the coin's [0,1) draw)… statistical
-        // claim avoided: assert the effective-ε math instead, plus
-        // determinism of the full selection.
+    fn annealed_epsilon_keys_on_the_starved_technique_not_the_pool() {
+        // Per-technique keying: the fixture pool carries one saturated
+        // technique (4 attempts) amid untried siblings. Under pooled
+        // keying an aggressive schedule would have collapsed ε and
+        // starved the untried entries; under per-technique keying the
+        // floor anneals over the most-starved candidate's own evidence
+        // (zero), so with ε = 1 every slot with an untried candidate
+        // left MUST pick an untried one.
         let (kbase, state) = pool();
         let scored = kbase.scored_candidates(state, |_| true);
         let evidence: usize = scored.iter().map(|c| c.attempts).sum();
-        assert!(evidence >= 5, "fixture must carry evidence");
-        let annealed = Schedule::Exponential { rate: 2.0 }.apply(1.0, evidence);
-        assert!(annealed < 1e-4, "ε must collapse on evidence: {annealed}");
+        assert!(evidence >= 5, "fixture must carry pooled evidence");
+        assert!(
+            scored.iter().any(|c| c.attempts == 0),
+            "fixture must carry untried siblings"
+        );
+        // The saturated sibling's pooled evidence no longer reaches the
+        // floor: the effective ε at the untried entries' own count (0)
+        // is the full base value under every schedule.
+        let sched = Schedule::Exponential { rate: 2.0 };
+        assert_eq!(sched.apply(1.0, 0).to_bits(), 1.0f64.to_bits());
+        assert!(sched.apply(1.0, evidence) < 1e-4, "pooled keying would collapse");
         let policy = EpsilonGreedy {
             epsilon: 1.0,
-            schedule: Schedule::Exponential { rate: 2.0 },
+            schedule: sched,
         };
+        let picks = policy.select_indices(&scored, 3, &mut Rng::new(5));
+        for &i in &picks {
+            assert_eq!(
+                scored[i].attempts, 0,
+                "ε = 1 with untried candidates left must pick untried ones"
+            );
+        }
         let a = policy.select(&scored, 3, &mut Rng::new(5));
         let b = policy.select(&scored, 3, &mut Rng::new(5));
         assert_eq!(a, b, "annealed selection must stay deterministic");
+    }
+
+    #[test]
+    fn annealed_ucb_decays_each_entry_by_its_own_evidence() {
+        // The saturated entry's bonus must collapse under an aggressive
+        // schedule while an untried sibling keeps the full-strength c:
+        // the untried entry outranks the evidence-heavy winner once the
+        // winner's own attempts anneal its bonus away — exactly the
+        // sibling-starvation fix. (Pooled keying shrank both bonuses
+        // together, so relative order never changed with the schedule.)
+        let (kbase, state) = pool();
+        let scored = kbase.scored_candidates(state, |_| true);
+        let winner = scored
+            .iter()
+            .position(|c| c.attempts > 0)
+            .expect("fixture carries an evidenced entry");
+        let flat = UcbBandit {
+            c: 50.0,
+            schedule: Schedule::Constant,
+        };
+        let sharp = UcbBandit {
+            c: 50.0,
+            schedule: Schedule::Exponential { rate: 4.0 },
+        };
+        let mut rng = Rng::new(7);
+        // A huge constant c makes the (attempts+1)⁻¹ᐟ² spread dominate:
+        // every policy puts untried entries first either way; the
+        // per-candidate anneal must preserve that and additionally push
+        // the evidenced entry's rank DOWN, never up.
+        let rank = |p: &UcbBandit, r: &mut Rng| {
+            p.select_indices(&scored, scored.len(), r)
+                .iter()
+                .position(|&i| i == winner)
+                .unwrap()
+        };
+        let flat_rank = rank(&flat, &mut rng);
+        let sharp_rank = rank(&sharp, &mut rng);
+        assert!(
+            sharp_rank >= flat_rank,
+            "annealing an entry's own bonus must not improve its rank \
+             (flat {flat_rank}, annealed {sharp_rank})"
+        );
+        // Determinism: zero RNG consumed either way.
+        let mut r1 = Rng::new(9);
+        let before = r1.clone();
+        let _ = sharp.select_indices(&scored, 3, &mut r1);
+        assert_eq!(r1, before, "UCB must consume no stream draws");
     }
 
     #[test]

@@ -515,6 +515,15 @@ fn new_notes(base: &[String], grown: &[String]) -> Vec<String> {
 /// same-snapshot deltas is responsible for dropping the duplicates its
 /// concurrency manufactured ([`crate::icrl::fleet`] dedups within an
 /// epoch). The arch stamp is adopted from the delta.
+///
+/// Per-state folds touch only their own [`StateDelta::sig`] entry and
+/// never read another state, so applying a delta's states in any
+/// partition — e.g. split across [`crate::icrl::shard`]'s per-shard
+/// committers — produces the same per-state bytes as applying the whole
+/// delta here. Only the tail below (global `updates`/`arch`/`lineage`)
+/// and the *order* newly discovered states are appended in are
+/// order-sensitive; the shard pipeline routes the globals to shard 0 and
+/// reassembles state order from recorded positions.
 pub fn apply_delta(shared: &mut KnowledgeBase, delta: &KbDelta) {
     for sd in &delta.states {
         let si = match shared.find_state(sd.sig) {

@@ -75,6 +75,32 @@
 //!   still holds records the snapshot already folded in; replay skips
 //!   every `seq <= last_seq`, so nothing double-applies.
 //!
+//! # Sharded journals ([`LogStore::create_sharded`])
+//!
+//! The sharded fleet committer ([`crate::icrl::shard`]) folds one
+//! logical commit as up to S per-shard *parts* on S committer threads.
+//! A store created with a matching shard count gives each committer its
+//! own segment file (`journal-0.log` … `journal-{S-1}.log`, replacing
+//! `journal.log`), so journal appends parallelize with the folds. Part
+//! records use the same `LEN HEX16 JSON` framing with three extra
+//! fields: `shard` (which segment), `parts` (how many parts the logical
+//! commit split into — recovery's completeness count), and a per-state
+//! `pos` (the state's index in the full delta, so reassembly reproduces
+//! the exact single-journal state order). A record without `shard` is a
+//! classic whole-delta record — [`LogStore::append`] still writes those
+//! (into segment 0) when a caller commits outside an epoch, and the two
+//! kinds mix freely in one segment.
+//!
+//! Sharded recovery parses every segment under the per-segment
+//! torn-tail/monotone rules, groups parts by `seq`, and replays the
+//! **longest contiguous prefix of complete commits** past the snapshot:
+//! a commit whose parts did not all reach disk (a crash mid-epoch can
+//! tear any subset of segment tails) ends replay, and any orphaned
+//! later parts are truncated away so the next append continues the
+//! sequence cleanly. Within the surviving prefix, recovery is bit-exact
+//! — the same [`apply_delta`] replay contract as the classic layout,
+//! pinned end-to-end in `tests/fleet.rs`.
+//!
 //! [`lifecycle::KbDelta`]: super::lifecycle::KbDelta
 //! [`apply_delta`]: super::lifecycle::apply_delta
 
@@ -97,6 +123,11 @@ pub const JOURNAL_FILE: &str = "journal.log";
 /// Snapshot file name inside a store directory.
 pub const SNAPSHOT_FILE: &str = "snapshot.json";
 
+/// Journal segment file name for shard `i` in the sharded layout.
+fn segment_file(i: usize) -> String {
+    format!("journal-{i}.log")
+}
+
 /// Counters a long-lived server reports (`serve stats`, BENCH_serve).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StoreStats {
@@ -112,6 +143,9 @@ pub struct StoreStats {
     pub journal_records: u64,
     /// Distinct state signatures the journal tail has touched.
     pub dirty_entries: usize,
+    /// Journal shards in the on-disk layout (1 = the classic
+    /// single-journal layout).
+    pub shards: usize,
 }
 
 /// The log-structured storage engine. Owns no KB — it is a pure
@@ -133,6 +167,81 @@ pub struct LogStore {
     dirty: BTreeSet<String>,
     commits: u64,
     compactions: u64,
+    /// On-disk journal layout: 1 = classic `journal.log`, N > 1 = one
+    /// `journal-{i}.log` segment per shard.
+    shards: usize,
+    /// Per-shard segment handles (empty in the classic layout). Handed
+    /// out to committer threads by [`Self::epoch_segments`].
+    segments: Vec<ShardSegment>,
+}
+
+/// One shard's journal segment in a sharded [`LogStore`] (see the module
+/// docs §Sharded journals). The sharded fleet hands each committer
+/// thread `&mut ShardSegment`, so appends to different shards
+/// parallelize; the segment buffers its bookkeeping (record count, dirty
+/// sigs) until [`LogStore::fold_epoch`] folds it back into the store at
+/// the epoch boundary.
+#[derive(Debug)]
+pub struct ShardSegment {
+    path: PathBuf,
+    shard: usize,
+    pending_records: u64,
+    pending_dirty: BTreeSet<String>,
+}
+
+impl ShardSegment {
+    fn new(path: PathBuf, shard: usize) -> Self {
+        ShardSegment {
+            path,
+            shard,
+            pending_records: 0,
+            pending_dirty: BTreeSet::new(),
+        }
+    }
+
+    /// The shard index this segment journals.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Records appended since the last epoch fold.
+    pub fn pending_records(&self) -> u64 {
+        self.pending_records
+    }
+
+    /// Append one delta part for logical commit `seq`, which split into
+    /// `parts` parts overall; `pos[k]` is the index `sub.states[k]` held
+    /// in the full delta (what recovery uses to rebuild the exact state
+    /// order). Call *after* the part was folded into the shard's KB
+    /// fragment — replay must repeat exactly what the committer did.
+    pub fn append_part(
+        &mut self,
+        seq: u64,
+        parts: usize,
+        sub: &KbDelta,
+        pos: &[usize],
+    ) -> Result<(), PersistError> {
+        debug_assert_eq!(sub.states.len(), pos.len());
+        let json = part_to_json(seq, self.shard, parts, sub, pos).to_string_compact();
+        let line = format!(
+            "{} {:016x} {}\n",
+            json.len(),
+            fnv1a64_bytes(json.as_bytes()),
+            json
+        );
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| {
+                PersistError::Store(format!("open journal segment {}: {e}", self.path.display()))
+            })?;
+        f.write_all(line.as_bytes())?;
+        self.pending_records += 1;
+        for sd in &sub.states {
+            self.pending_dirty.insert(sd.sig.id());
+        }
+        Ok(())
+    }
 }
 
 impl LogStore {
@@ -140,6 +249,21 @@ impl LogStore {
     /// snapshot (so recovery is always well-defined) and an empty
     /// journal, replacing any store already there.
     pub fn create(dir: &Path, kb: &KnowledgeBase) -> Result<LogStore, PersistError> {
+        Self::create_sharded(dir, kb, 1)
+    }
+
+    /// [`Self::create`] with a sharded journal layout: `shards > 1`
+    /// lays out one `journal-{i}.log` segment per shard so the sharded
+    /// fleet's committers journal in parallel (module docs §Sharded
+    /// journals); `shards <= 1` is exactly [`Self::create`]. Files of
+    /// the other layout left by a previous store are removed — recovery
+    /// auto-detects the layout from what is on disk.
+    pub fn create_sharded(
+        dir: &Path,
+        kb: &KnowledgeBase,
+        shards: usize,
+    ) -> Result<LogStore, PersistError> {
+        let shards = shards.max(1);
         std::fs::create_dir_all(dir)?;
         let mut store = LogStore {
             dir: dir.to_path_buf(),
@@ -150,7 +274,30 @@ impl LogStore {
             dirty: BTreeSet::new(),
             commits: 0,
             compactions: 0,
+            shards,
+            segments: if shards > 1 {
+                (0..shards)
+                    .map(|s| ShardSegment::new(dir.join(segment_file(s)), s))
+                    .collect()
+            } else {
+                Vec::new()
+            },
         };
+        if shards > 1 {
+            let _ = std::fs::remove_file(dir.join(JOURNAL_FILE));
+        }
+        // Stale segments beyond the new layout (all of them when
+        // re-creating as classic) must not survive into recovery's
+        // consecutive-segment scan.
+        let mut s = if shards > 1 { shards } else { 0 };
+        loop {
+            let p = dir.join(segment_file(s));
+            if !p.is_file() {
+                break;
+            }
+            let _ = std::fs::remove_file(&p);
+            s += 1;
+        }
         store.write_snapshot(kb)?;
         store.reset_journal()?;
         // `create` establishes the baseline; it is not a compaction.
@@ -166,7 +313,11 @@ impl LogStore {
     /// Recover the KB from the store at `dir`: load the snapshot, then
     /// replay the journal tail (`seq > last_seq`) through
     /// [`lifecycle::apply_delta`]. A torn final record is tolerated; a
-    /// damaged record with valid records after it is an error.
+    /// damaged record with valid records after it is an error. The
+    /// journal layout (classic `journal.log` vs sharded
+    /// `journal-{i}.log` segments) is auto-detected from what is on
+    /// disk; sharded recovery replays the longest contiguous prefix of
+    /// complete commits (module docs §Sharded journals).
     pub fn recover(dir: &Path) -> Result<(KnowledgeBase, LogStore), PersistError> {
         let snap_path = dir.join(SNAPSHOT_FILE);
         let text = std::fs::read_to_string(&snap_path).map_err(|e| {
@@ -174,6 +325,9 @@ impl LogStore {
         })?;
         let (mut kb, snapshot_seq) = snapshot_from_json(&Json::parse(&text)?)?;
         let journal_path = dir.join(JOURNAL_FILE);
+        if !journal_path.is_file() && dir.join(segment_file(0)).is_file() {
+            return Self::recover_sharded(dir, kb, snapshot_seq);
+        }
         let mut last_seq = snapshot_seq;
         let mut records = 0u64;
         let mut dirty = BTreeSet::new();
@@ -202,6 +356,8 @@ impl LogStore {
             dirty,
             commits: 0,
             compactions: 0,
+            shards: 1,
+            segments: Vec::new(),
         };
         if !journal_path.is_file() {
             store.reset_journal()?;
@@ -209,10 +365,110 @@ impl LogStore {
         Ok((kb, store))
     }
 
+    /// The sharded-layout half of [`Self::recover`]: parse every
+    /// segment, group part records by `seq`, replay the longest
+    /// contiguous prefix of complete commits past the snapshot, and
+    /// truncate any orphaned later parts (a crash mid-epoch tears
+    /// segment tails independently) so the next append continues the
+    /// sequence cleanly.
+    fn recover_sharded(
+        dir: &Path,
+        mut kb: KnowledgeBase,
+        snapshot_seq: u64,
+    ) -> Result<(KnowledgeBase, LogStore), PersistError> {
+        let mut shards = 0usize;
+        while dir.join(segment_file(shards)).is_file() {
+            shards += 1;
+        }
+        // Per-segment validated lines, kept raw for the prefix rewrite.
+        let mut kept_lines: Vec<Vec<(u64, String)>> = Vec::with_capacity(shards);
+        let mut by_seq: std::collections::BTreeMap<u64, Vec<PartRecord>> =
+            std::collections::BTreeMap::new();
+        for s in 0..shards {
+            let bytes = std::fs::read(dir.join(segment_file(s)))?;
+            let mut lines_s = Vec::new();
+            for (line, rec) in parse_segment(&bytes, s)? {
+                lines_s.push((rec.seq, line));
+                by_seq.entry(rec.seq).or_default().push(rec);
+            }
+            kept_lines.push(lines_s);
+        }
+        let mut last_applied = snapshot_seq;
+        let mut records = 0u64;
+        let mut dirty = BTreeSet::new();
+        for (&seq, parts) in &by_seq {
+            if seq <= snapshot_seq {
+                continue; // already folded into the snapshot
+            }
+            // Journaled seqs are contiguous past the snapshot; a gap
+            // means the missing commit's parts were all lost in a crash
+            // — replay stops there (everything after is the crash's
+            // orphan tail).
+            if seq != last_applied + 1 {
+                break;
+            }
+            let declared = parts[0].parts;
+            if parts.len() < declared || parts.iter().all(|p| p.shard != 0) {
+                break; // incomplete commit: the crash window, not corruption
+            }
+            let delta = assemble_commit(seq, parts)?;
+            lifecycle::apply_delta(&mut kb, &delta);
+            for sd in &delta.states {
+                dirty.insert(sd.sig.id());
+            }
+            last_applied = seq;
+            records += 1;
+        }
+        // Truncate orphaned parts past the applied prefix, atomically
+        // per segment, so future appends can reuse those seqs without
+        // tripping the per-segment monotone check.
+        if kept_lines.iter().flatten().any(|(seq, _)| *seq > last_applied) {
+            for (s, lines_s) in kept_lines.iter().enumerate() {
+                let path = dir.join(segment_file(s));
+                let mut text = format!("{JOURNAL_MAGIC}\n");
+                for (seq, line) in lines_s {
+                    if *seq <= last_applied {
+                        text.push_str(line);
+                        text.push('\n');
+                    }
+                }
+                let tmp = dir.join(format!("{}.tmp", segment_file(s)));
+                std::fs::write(&tmp, text)
+                    .map_err(|e| PersistError::Store(format!("write {}: {e}", tmp.display())))?;
+                std::fs::rename(&tmp, &path).map_err(|e| {
+                    PersistError::Store(format!(
+                        "rename {} -> {}: {e}",
+                        tmp.display(),
+                        path.display()
+                    ))
+                })?;
+            }
+        }
+        let store = LogStore {
+            dir: dir.to_path_buf(),
+            next_seq: last_applied + 1,
+            snapshot_seq,
+            records_since_snapshot: records,
+            snapshot_every: 0,
+            dirty,
+            commits: 0,
+            compactions: 0,
+            shards,
+            segments: (0..shards)
+                .map(|s| ShardSegment::new(dir.join(segment_file(s)), s))
+                .collect(),
+        };
+        Ok((kb, store))
+    }
+
     /// Append one committed delta to the journal, returning its
     /// sequence number. Call *after* [`lifecycle::apply_delta`] folded
     /// the same delta into the live KB — replaying the journal must
-    /// repeat exactly what the live committer did.
+    /// repeat exactly what the live committer did. In the sharded
+    /// layout the whole-delta record lands in segment 0 (recovery
+    /// treats it as a complete single-part commit), so out-of-epoch
+    /// commits — the serve daemon's, the sharded fleet's unsegmented
+    /// fallback — need no special casing.
     pub fn append(&mut self, delta: &KbDelta) -> Result<u64, PersistError> {
         let seq = self.next_seq;
         let json = record_to_json(seq, delta).to_string_compact();
@@ -222,11 +478,16 @@ impl LogStore {
             fnv1a64_bytes(json.as_bytes()),
             json
         );
+        let path = if self.shards > 1 {
+            self.dir.join(segment_file(0))
+        } else {
+            self.journal_path()
+        };
         let mut f = std::fs::OpenOptions::new()
             .append(true)
-            .open(self.journal_path())
+            .open(&path)
             .map_err(|e| {
-                PersistError::Store(format!("open journal {}: {e}", self.journal_path().display()))
+                PersistError::Store(format!("open journal {}: {e}", path.display()))
             })?;
         f.write_all(line.as_bytes())?;
         self.next_seq += 1;
@@ -266,7 +527,49 @@ impl LogStore {
             snapshot_seq: self.snapshot_seq,
             journal_records: self.records_since_snapshot,
             dirty_entries: self.dirty.len(),
+            shards: self.shards,
         }
+    }
+
+    /// Journal shards in this store's on-disk layout (1 = the classic
+    /// single-journal layout).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Hand out the per-shard journal segments for an epoch of the
+    /// sharded fleet, plus the sequence number its first journaled
+    /// commit will use. `Some` only when the store's on-disk layout
+    /// matches the fleet's shard count (`shards > 1`); a mismatch —
+    /// e.g. a classic-layout store driven with `--shards 4` — returns
+    /// `None`, and the fleet falls back to epoch-boundary whole-delta
+    /// appends through [`Self::append`] (correct, just unparallelized).
+    /// The fleet must call [`Self::fold_epoch`] once the epoch's
+    /// appends are done.
+    pub fn epoch_segments(&mut self, shards: usize) -> Option<(&mut [ShardSegment], u64)> {
+        if shards > 1 && self.shards == shards && !self.segments.is_empty() {
+            Some((&mut self.segments[..], self.next_seq))
+        } else {
+            None
+        }
+    }
+
+    /// Fold one epoch's segmented appends back into the store's
+    /// counters: `journaled` commits consumed sequence numbers through
+    /// [`ShardSegment::append_part`] (the segments' pending dirty sigs
+    /// drain into the store's dirty set). The counterpart of
+    /// [`Self::epoch_segments`]; [`Self::append`] self-counts and needs
+    /// no fold.
+    pub fn fold_epoch(&mut self, journaled: u64) {
+        self.next_seq += journaled;
+        self.records_since_snapshot += journaled;
+        self.commits += journaled;
+        let mut drained = BTreeSet::new();
+        for seg in &mut self.segments {
+            seg.pending_records = 0;
+            drained.append(&mut seg.pending_dirty);
+        }
+        self.dirty.append(&mut drained);
     }
 
     /// The store's directory.
@@ -274,9 +577,14 @@ impl LogStore {
         &self.dir
     }
 
-    /// Path of the journal file.
+    /// Path of the journal file (classic layout).
     pub fn journal_path(&self) -> PathBuf {
         self.dir.join(JOURNAL_FILE)
+    }
+
+    /// Path of shard `i`'s journal segment (sharded layout).
+    pub fn segment_path(&self, i: usize) -> PathBuf {
+        self.dir.join(segment_file(i))
     }
 
     /// Path of the snapshot file.
@@ -302,8 +610,30 @@ impl LogStore {
 
     /// Reset the journal to magic-only, atomically (tmp + rename), so a
     /// crash between the snapshot rename and this reset leaves only
-    /// already-folded records behind (skipped on replay by seq).
+    /// already-folded records behind (skipped on replay by seq). In the
+    /// sharded layout every segment resets the same way.
     fn reset_journal(&mut self) -> Result<(), PersistError> {
+        if self.shards > 1 {
+            for seg in &mut self.segments {
+                let tmp = self
+                    .dir
+                    .join(format!("{}.tmp", segment_file(seg.shard)));
+                std::fs::write(&tmp, format!("{JOURNAL_MAGIC}\n"))
+                    .map_err(|e| PersistError::Store(format!("write {}: {e}", tmp.display())))?;
+                std::fs::rename(&tmp, &seg.path).map_err(|e| {
+                    PersistError::Store(format!(
+                        "rename {} -> {}: {e}",
+                        tmp.display(),
+                        seg.path.display()
+                    ))
+                })?;
+                seg.pending_records = 0;
+                seg.pending_dirty.clear();
+            }
+            self.records_since_snapshot = 0;
+            self.dirty.clear();
+            return Ok(());
+        }
         let path = self.journal_path();
         let tmp = self.dir.join(format!("{JOURNAL_FILE}.tmp"));
         std::fs::write(&tmp, format!("{JOURNAL_MAGIC}\n"))
@@ -460,9 +790,11 @@ fn entry_from_json(j: &Json, ctx: &str) -> Result<StateEntry, PersistError> {
     Ok(entry)
 }
 
-fn record_to_json(seq: u64, delta: &KbDelta) -> Json {
-    let mut j = JsonObj::new();
-    j.set("seq", seq);
+/// The delta fields shared by whole-delta records and part records:
+/// optional arch/lineage, the updates counter, and the state list.
+/// `pos` (part records only) writes each state's index in the full
+/// delta; `None` keeps the classic record spelling byte-identical.
+fn delta_fields_to_json(j: &mut JsonObj, delta: &KbDelta, pos: Option<&[usize]>) {
     if let Some(arch) = &delta.arch {
         j.set("arch", arch.as_str());
     }
@@ -476,9 +808,13 @@ fn record_to_json(seq: u64, delta: &KbDelta) -> Json {
     let states: Vec<Json> = delta
         .states
         .iter()
-        .map(|sd| {
+        .enumerate()
+        .map(|(i, sd)| {
             let mut s = JsonObj::new();
             s.set("sig", sd.sig.id());
+            if let Some(pos) = pos {
+                s.set("pos", pos[i]);
+            }
             s.set("visits_added", sd.visits_added);
             if let Some(base) = &sd.base {
                 s.set("base", entry_to_json(base));
@@ -488,6 +824,24 @@ fn record_to_json(seq: u64, delta: &KbDelta) -> Json {
         })
         .collect();
     j.set("states", Json::Arr(states));
+}
+
+fn record_to_json(seq: u64, delta: &KbDelta) -> Json {
+    let mut j = JsonObj::new();
+    j.set("seq", seq);
+    delta_fields_to_json(&mut j, delta, None);
+    Json::Obj(j)
+}
+
+/// One shard's part of a sharded logical commit (module docs §Sharded
+/// journals): the whole-delta record spelling plus `shard`, `parts`,
+/// and per-state `pos`.
+fn part_to_json(seq: u64, shard: usize, parts: usize, sub: &KbDelta, pos: &[usize]) -> Json {
+    let mut j = JsonObj::new();
+    j.set("seq", seq);
+    j.set("shard", shard);
+    j.set("parts", parts);
+    delta_fields_to_json(&mut j, sub, Some(pos));
     Json::Obj(j)
 }
 
@@ -541,6 +895,147 @@ fn record_from_json(j: &Json) -> Result<(u64, KbDelta), PersistError> {
             states,
         },
     ))
+}
+
+/// A parsed journal record in the sharded layout: either one shard's
+/// part of a split commit, or a classic whole-delta record (parsed as a
+/// complete single-part commit: `shard = 0`, `parts = 1`, identity
+/// positions).
+struct PartRecord {
+    seq: u64,
+    shard: usize,
+    parts: usize,
+    sub: KbDelta,
+    pos: Vec<usize>,
+}
+
+fn part_from_json(j: &Json) -> Result<PartRecord, PersistError> {
+    let (seq, sub) = record_from_json(j)?;
+    let shard = j.get("shard").and_then(Json::as_usize).unwrap_or(0);
+    let parts = j.get("parts").and_then(Json::as_usize).unwrap_or(1);
+    if parts == 0 {
+        return Err(PersistError::Store(format!(
+            "journal record seq {seq}: zero parts count"
+        )));
+    }
+    let mut pos = Vec::with_capacity(sub.states.len());
+    if let Some(states) = j.get("states").and_then(Json::as_arr) {
+        for (i, sj) in states.iter().enumerate() {
+            pos.push(sj.get("pos").and_then(Json::as_usize).unwrap_or(i));
+        }
+    }
+    Ok(PartRecord {
+        seq,
+        shard,
+        parts,
+        sub,
+        pos,
+    })
+}
+
+/// Parse one journal segment's bytes under the same magic/torn-tail/
+/// monotone discipline as [`replay_journal`], returning each valid
+/// record's raw line (for the prefix rewrite after a partial-commit
+/// crash) alongside its parsed [`PartRecord`].
+fn parse_segment(bytes: &[u8], shard: usize) -> Result<Vec<(String, PartRecord)>, PersistError> {
+    let text = String::from_utf8_lossy(bytes);
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(JOURNAL_MAGIC) => {}
+        Some(other) => {
+            return Err(PersistError::Store(format!(
+                "journal segment {shard} magic mismatch: expected '{JOURNAL_MAGIC}', found '{other}'"
+            )))
+        }
+        None => return Ok(Vec::new()),
+    }
+    let rest: Vec<&str> = lines.collect();
+    let mut out: Vec<(String, PartRecord)> = Vec::new();
+    let mut prev_seq = 0u64;
+    for (i, line) in rest.iter().enumerate() {
+        let parsed = if line.is_empty() { None } else { parse_record_line(line) };
+        let Some(json) = parsed else {
+            let valid_after = rest[i + 1..]
+                .iter()
+                .any(|l| !l.is_empty() && parse_record_line(l).is_some());
+            if valid_after {
+                return Err(PersistError::Store(format!(
+                    "corrupt journal segment {shard}: record {} is damaged but valid records follow it",
+                    i + 1
+                )));
+            }
+            break;
+        };
+        let rec = part_from_json(&json)?;
+        if rec.seq <= prev_seq {
+            return Err(PersistError::Store(format!(
+                "corrupt journal segment {shard}: non-monotone seq {} after {prev_seq}",
+                rec.seq
+            )));
+        }
+        prev_seq = rec.seq;
+        out.push((line.to_string(), rec));
+    }
+    Ok(out)
+}
+
+/// Reassemble one logical commit from its collected parts (the caller
+/// has already checked completeness): globals from the shard-0 part,
+/// states placed at their recorded `pos` — reproducing the exact order
+/// a single-journal record would have held.
+fn assemble_commit(seq: u64, parts: &[PartRecord]) -> Result<KbDelta, PersistError> {
+    let bad = |m: String| PersistError::Store(m);
+    let declared = parts[0].parts;
+    let mut shards_seen = BTreeSet::new();
+    let mut total = 0usize;
+    for p in parts {
+        if p.parts != declared {
+            return Err(bad(format!(
+                "corrupt journal: seq {seq} parts counts disagree ({} vs {declared})",
+                p.parts
+            )));
+        }
+        if !shards_seen.insert(p.shard) {
+            return Err(bad(format!(
+                "corrupt journal: seq {seq} has two parts for shard {}",
+                p.shard
+            )));
+        }
+        if p.pos.len() != p.sub.states.len() {
+            return Err(bad(format!(
+                "corrupt journal: seq {seq} shard {} position/state count mismatch",
+                p.shard
+            )));
+        }
+        total += p.sub.states.len();
+    }
+    let zero = parts
+        .iter()
+        .find(|p| p.shard == 0)
+        .ok_or_else(|| bad(format!("corrupt journal: seq {seq} missing its shard-0 part")))?;
+    let mut slots: Vec<Option<StateDelta>> = (0..total).map(|_| None).collect();
+    for p in parts {
+        for (sd, &q) in p.sub.states.iter().zip(&p.pos) {
+            if q >= total || slots[q].is_some() {
+                return Err(bad(format!(
+                    "corrupt journal: seq {seq} state position {q} out of range or duplicated"
+                )));
+            }
+            slots[q] = Some(sd.clone());
+        }
+    }
+    let mut states = Vec::with_capacity(total);
+    for s in slots {
+        states.push(s.ok_or_else(|| {
+            bad(format!("corrupt journal: seq {seq} state positions not contiguous"))
+        })?);
+    }
+    Ok(KbDelta {
+        arch: zero.sub.arch.clone(),
+        lineage_added: zero.sub.lineage_added.clone(),
+        updates_added: zero.sub.updates_added,
+        states,
+    })
 }
 
 fn snapshot_to_json(kb: &KnowledgeBase, last_seq: u64) -> Json {
@@ -847,6 +1342,148 @@ mod tests {
             LogStore::recover(&dir),
             Err(PersistError::Store(_))
         ));
+    }
+
+    /// A second sig guaranteed to journal through the other shard of a
+    /// two-shard store than [`sig`]'s default, so the sharded tests
+    /// exercise genuine cross-segment reassembly.
+    fn other_shard_sig(a: StateSig, shards: usize) -> StateSig {
+        use crate::icrl::shard::shard_of;
+        [
+            sig(Bottleneck::ComputeThroughput, Bottleneck::Occupancy),
+            sig(Bottleneck::Occupancy, Bottleneck::Parallelism),
+            sig(Bottleneck::Transcendental, Bottleneck::MemoryBandwidth),
+            sig(Bottleneck::Parallelism, Bottleneck::ComputeThroughput),
+        ]
+        .into_iter()
+        .find(|s| shard_of(*s, shards) != shard_of(a, shards))
+        .expect("one of the candidate sigs must hash to the other shard")
+    }
+
+    /// Grow both sigs by one update each and journal the delta through
+    /// the store's segments, exactly as the sharded fleet's sequencer
+    /// would. `drop_shard0` simulates a crash that tore segment 0's
+    /// tail before the part reached disk.
+    fn commit_split(
+        kb: &mut KnowledgeBase,
+        store: &mut LogStore,
+        sigs: [StateSig; 2],
+        gain: f64,
+        drop_shard0: bool,
+    ) {
+        use crate::icrl::shard::split_delta;
+        let shards = store.shards();
+        let mut g = kb.clone();
+        for s in sigs {
+            let m = g.match_state(s);
+            g.update_score(m.index(), Technique::SharedMemoryTiling, gain, None);
+        }
+        let delta = lifecycle::extract_delta(kb, &g);
+        lifecycle::apply_delta(kb, &delta);
+        let parts = split_delta(&delta, shards);
+        let emitted = parts.iter().filter(|p| p.is_some()).count();
+        assert_eq!(emitted, 2, "the two sigs must split across both shards");
+        let (segs, base) = store.epoch_segments(shards).expect("layout matches");
+        for part in parts.into_iter().flatten() {
+            if drop_shard0 && part.shard == 0 {
+                continue;
+            }
+            segs[part.shard]
+                .append_part(base, emitted, &part.sub, &part.pos)
+                .unwrap();
+        }
+        store.fold_epoch(1);
+    }
+
+    #[test]
+    fn sharded_segments_roundtrip_and_recover_exact() {
+        let dir = temp_store_dir("sharded_roundtrip");
+        let shards = 2usize;
+        let a = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let b = other_shard_sig(a, shards);
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create_sharded(&dir, &kb, shards).unwrap();
+        for i in 0..3 {
+            // Full-precision gains, as in the classic roundtrip test.
+            commit_split(&mut kb, &mut store, [a, b], 1.0 + (i as f64) / 3.0, false);
+        }
+        let st = store.stats();
+        assert_eq!(st.commits, 3);
+        assert_eq!(st.last_seq, 3);
+        assert_eq!(st.shards, 2);
+        let (recovered, rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb, "sharded replay must be bit-identical");
+        assert_eq!(rstore.stats().journal_records, 3);
+        assert_eq!(rstore.stats().last_seq, 3);
+        assert_eq!(rstore.stats().shards, 2);
+        assert_eq!(rstore.stats().dirty_entries, 2);
+        // Compaction resets every segment; recovery then needs only the
+        // snapshot.
+        let mut store2 = rstore;
+        store2.snapshot(&kb).unwrap();
+        let (again, s2) = LogStore::recover(&dir).unwrap();
+        assert_eq!(again, kb);
+        assert_eq!(s2.stats().journal_records, 0);
+        assert_eq!(s2.stats().shards, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_recovery_stops_at_incomplete_commit_and_truncates_orphans() {
+        let dir = temp_store_dir("sharded_incomplete");
+        let shards = 2usize;
+        let a = sig(Bottleneck::MemoryBandwidth, Bottleneck::LaunchOverhead);
+        let b = other_shard_sig(a, shards);
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create_sharded(&dir, &kb, shards).unwrap();
+        commit_split(&mut kb, &mut store, [a, b], 1.5, false);
+        let durable = kb.clone();
+        // Seq 2 loses its shard-0 part in the crash: incomplete on disk.
+        commit_split(&mut kb, &mut store, [a, b], 2.5, true);
+        let (recovered, mut rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, durable, "recover to the last complete commit");
+        assert_eq!(rstore.stats().last_seq, 1);
+        // The orphaned shard-1 part was truncated, so the reused seq
+        // must not trip the monotone check on the next recovery.
+        let mut g = recovered.clone();
+        let m = g.match_state(a);
+        g.update_score(m.index(), Technique::SharedMemoryTiling, 3.5, None);
+        let d3 = lifecycle::extract_delta(&recovered, &g);
+        assert_eq!(rstore.append(&d3).unwrap(), 2);
+        let mut after = recovered.clone();
+        lifecycle::apply_delta(&mut after, &d3);
+        let (re2, _) = LogStore::recover(&dir).unwrap();
+        assert_eq!(re2, after);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_layout_mismatch_falls_back_and_legacy_appends_mix_in() {
+        let dir = temp_store_dir("sharded_mismatch");
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create_sharded(&dir, &kb, 2).unwrap();
+        assert!(store.epoch_segments(3).is_none(), "shard-count mismatch");
+        assert!(store.epoch_segments(1).is_none(), "unsharded fleet");
+        assert!(store.epoch_segments(2).is_some());
+        // Out-of-epoch whole-delta appends land in segment 0 and replay
+        // as complete single-part commits.
+        for (i, gain) in [1.0 + 1.0 / 3.0, 2.0 / 7.0 + 1.0].iter().enumerate() {
+            let delta = grow(&kb, *gain, &format!("legacy {i}"));
+            lifecycle::apply_delta(&mut kb, &delta);
+            store.append(&delta).unwrap();
+        }
+        let (recovered, rstore) = LogStore::recover(&dir).unwrap();
+        assert_eq!(recovered, kb);
+        assert_eq!(rstore.stats().last_seq, 2);
+        assert_eq!(rstore.stats().shards, 2);
+        // A classic store never hands out segments, whatever the fleet
+        // asks for.
+        let cdir = temp_store_dir("sharded_mismatch_classic");
+        let mut classic = LogStore::create(&cdir, &kb).unwrap();
+        assert!(classic.epoch_segments(2).is_none());
+        assert_eq!(classic.stats().shards, 1);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&cdir).ok();
     }
 
     #[test]

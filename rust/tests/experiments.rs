@@ -28,12 +28,28 @@ const BENCH_EXPERIMENTS: &[(&str, &str, &[&str])] = &[
     ),
     (
         "fleet",
-        "kernelblaster-bench-fleet-v1",
-        &["gpu", "tasks", "workers", "epoch_size", "sequential", "fleet", "parity"],
+        "kernelblaster-bench-fleet-v2",
+        &[
+            "gpu",
+            "tasks",
+            "epoch_size",
+            "commit_queue",
+            "workers_grid",
+            "shards_grid",
+            "sequential",
+            "grid",
+            "sim",
+            "top_cell",
+            "parity",
+        ],
     ),
     ("policy", "kernelblaster-bench-policy-v1", &["gpu", "tasks", "seeds", "arms"]),
     ("sweep", "kernelblaster-bench-sweep-v1", &["gpu", "tasks", "seeds", "arms"]),
-    ("verify", "kernelblaster-bench-verify-v1", &["gpu", "tasks", "seeds", "arms"]),
+    (
+        "verify",
+        "kernelblaster-bench-verify-v1",
+        &["gpu", "tasks", "seeds", "arms", "screen_error"],
+    ),
     (
         "skills",
         "kernelblaster-bench-skills-v1",

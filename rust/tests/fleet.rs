@@ -7,12 +7,16 @@
 //! 2. sequential equivalence — the epoch=1 fleet pipeline equals
 //!    `icrl::run_suite` bit for bit (KB bytes and runs);
 //! 3. the delta commit protocol round-trips driver-grown KBs exactly;
-//! 4. mid-batch checkpoints are loadable, byte-stable v1 documents.
+//! 4. mid-batch checkpoints are loadable, byte-stable v1 documents;
+//! 5. shard invariance — the workers × shards grid produces the
+//!    single-committer KB byte for byte, in memory and through a
+//!    sharded [`LogStore`] (including crash recovery).
 
 use kernelblaster::gpu::GpuArch;
 use kernelblaster::harness::{HarnessConfig, VerifyCache};
-use kernelblaster::icrl::fleet::{self, FleetConfig, FleetObserver};
+use kernelblaster::icrl::fleet::{self, FleetConfig, FleetObserver, NullObserver};
 use kernelblaster::icrl::{self, IcrlConfig, KbMode, PolicyConfig, PolicyKind};
+use kernelblaster::kb::store::LogStore;
 use kernelblaster::kb::{lifecycle, persist, KnowledgeBase};
 use kernelblaster::tasks::{Suite, Task};
 
@@ -76,6 +80,117 @@ fn fleet_is_worker_count_invariant() {
             }
         }
     }
+}
+
+#[test]
+fn fleet_is_worker_and_shard_count_invariant() {
+    // The §Sharding acceptance matrix: every workers × shards cell must
+    // reproduce the workers=1/shards=1 single-committer KB byte for
+    // byte, and the per-task results must be identical. shards=1 cells
+    // run the classic (pre-sharding) committer path, so their agreement
+    // with the sharded cells is exactly the "shards=1 bit-identical to
+    // the old fleet" contract.
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::h100();
+    let cfg = quick_cfg(47);
+    let mut baseline: Option<(Vec<icrl::TaskRun>, String)> = None;
+    for workers in [1usize, 2, 8] {
+        for shards in [1usize, 2, 4] {
+            let fleet_cfg = FleetConfig {
+                workers,
+                shards,
+                epoch_size: 3,
+                checkpoint_every: 0,
+                ..Default::default()
+            };
+            let mut kb = KnowledgeBase::empty();
+            let out = icrl::run_fleet(&tasks, &arch, &mut kb, &cfg, &fleet_cfg);
+            assert_eq!(out.shard.shards, shards.max(1));
+            if shards > 1 {
+                assert!(
+                    out.shard.sub_commits > 0,
+                    "{workers}x{shards}: sharded run routed no delta parts"
+                );
+            }
+            let bytes = kb_bytes(&kb);
+            match &baseline {
+                None => baseline = Some((out.runs, bytes)),
+                Some((runs0, bytes0)) => {
+                    assert_eq!(
+                        &out.runs, runs0,
+                        "{workers} workers x {shards} shards: TaskRuns diverged"
+                    );
+                    assert_eq!(
+                        &bytes, bytes0,
+                        "{workers} workers x {shards} shards: KB bytes diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_store_backed_fleet_recovers_bit_for_bit() {
+    // Crash-recovery parity through the full fleet path: a batch run
+    // over a sharded LogStore must leave per-shard journal segments
+    // that recover to exactly the in-memory KB, and that KB must equal
+    // the unsharded store-backed run's byte for byte.
+    let suite = Suite::full();
+    let tasks = batch(&suite);
+    let arch = GpuArch::a100();
+    let cfg = quick_cfg(53);
+    let fleet_of = |shards: usize| FleetConfig {
+        workers: 2,
+        shards,
+        epoch_size: 2,
+        checkpoint_every: 0,
+        ..Default::default()
+    };
+    let run_store = |dir: &std::path::Path, shards: usize| {
+        std::fs::remove_dir_all(dir).ok();
+        let mut kb = KnowledgeBase::empty();
+        let mut store = LogStore::create_sharded(dir, &kb, shards).unwrap();
+        // Never snapshot mid-run: recovery must replay the journal
+        // segments themselves, not a checkpoint.
+        store.snapshot_every = u64::MAX;
+        let out = icrl::run_fleet_store(
+            &tasks,
+            &arch,
+            &mut kb,
+            &cfg,
+            &fleet_of(shards),
+            None,
+            &mut store,
+            &mut NullObserver,
+        )
+        .unwrap();
+        (kb, store.stats(), out)
+    };
+    let base = std::env::temp_dir().join("kb_fleet_shard_store_test");
+    let dir1 = base.join("s1");
+    let dir2 = base.join("s2");
+    let (kb1, _, _) = run_store(&dir1, 1);
+    let (kb2, stats2, out2) = run_store(&dir2, 2);
+    assert_eq!(
+        kb_bytes(&kb2),
+        kb_bytes(&kb1),
+        "sharded store-backed KB diverged from the single committer"
+    );
+    assert_eq!(stats2.shards, 2, "store did not run in the sharded layout");
+    assert!(stats2.commits > 0);
+    assert!(out2.shard.sub_commits > 0);
+    // Recovery replays the per-shard segments back to the exact KB.
+    let (recovered, rstore) = LogStore::recover(&dir2).unwrap();
+    assert_eq!(
+        kb_bytes(&recovered),
+        kb_bytes(&kb2),
+        "recovered KB diverged from the served KB"
+    );
+    assert_eq!(rstore.stats().last_seq, stats2.last_seq);
+    assert_eq!(rstore.stats().shards, 2);
+    std::fs::remove_dir_all(&base).ok();
 }
 
 #[test]

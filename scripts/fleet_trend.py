@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Fleet throughput trend gate: fail CI when the scaling grid regresses.
+
+Compares a current ``BENCH_fleet.json`` (format
+``kernelblaster-bench-fleet-v2``) against the one uploaded by a previous
+CI run and exits non-zero when the **top grid cell**'s ``tasks_per_min``
+(max workers x max shards — the headline of the scaling claim) dropped
+by more than the threshold (default 10%; wall-clock on shared runners is
+noisier than the paired-geomean ratios policy_trend.py gates at 5%).
+
+The gate also enforces the current artifact's determinism verdicts
+regardless of any baseline: ``parity.grid_kb_invariant``,
+``parity.epoch1_kb_bytes_identical`` and ``parity.epoch1_runs_identical``
+must all be true — a fleet run that stopped reproducing the
+single-committer KB byte-for-byte is a correctness bug, not a trend.
+
+Contract details live in EXPERIMENTS.md §Fleet ("Trend tracking").
+
+Rules:
+- a missing/unreadable previous artifact passes with a notice: the first
+  run on a branch has no baseline, and a gate that fails on missing
+  history would block unrelated changes;
+- a previous artifact in a different format (e.g. the retired
+  ``kernelblaster-bench-fleet-v1``) passes the same way — the two are
+  not comparable;
+- a malformed *current* artifact is exit 2 (the build must have produced
+  a valid one).
+
+Usage: fleet_trend.py CURRENT_JSON PREVIOUS_JSON [--threshold 0.10]
+Exit codes: 0 ok / no baseline; 1 regression or parity failure; 2 bad
+invocation or a malformed current artifact.
+"""
+
+import argparse
+import json
+import sys
+
+FORMAT = "kernelblaster-bench-fleet-v2"
+PARITY_KEYS = (
+    "grid_kb_invariant",
+    "epoch1_kb_bytes_identical",
+    "epoch1_runs_identical",
+)
+
+
+def load(path, required):
+    """Return the parsed artifact or None if missing/not comparable."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        if required:
+            print(f"fleet-trend: cannot read current artifact {path}: {e}")
+            sys.exit(2)
+        print(f"fleet-trend: no previous artifact at {path} ({e}); passing")
+        return None
+    fmt = doc.get("format")
+    if fmt != FORMAT:
+        if required:
+            print(f"fleet-trend: {path} has format {fmt!r}, want {FORMAT!r}")
+            sys.exit(2)
+        print(
+            f"fleet-trend: previous artifact has format {fmt!r}, "
+            f"not comparable to {FORMAT!r}; passing"
+        )
+        return None
+    return doc
+
+
+def top_throughput(doc, path):
+    top = doc.get("top_cell")
+    tpm = top.get("tasks_per_min") if isinstance(top, dict) else None
+    if not isinstance(tpm, (int, float)):
+        print(f"fleet-trend: {path} has no numeric top_cell.tasks_per_min")
+        sys.exit(2)
+    return top, tpm
+
+
+def main(argv):
+    parser = argparse.ArgumentParser(
+        prog="fleet_trend.py",
+        description="Fail when the fleet grid's top-cell tasks/min regresses "
+        "past the threshold vs a previous BENCH_fleet.json, or when the "
+        "current run's KB byte-parity verdicts are false.",
+    )
+    parser.add_argument("current", help="bench JSON of this run")
+    parser.add_argument("previous", help="baseline artifact (may be absent)")
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="allowed fractional drop before failing (default 0.10 = 10%%)",
+    )
+    try:
+        args = parser.parse_args(argv)
+    except SystemExit:
+        return 2
+
+    doc = load(args.current, required=True)
+
+    # Determinism verdicts gate unconditionally — no baseline needed.
+    parity = doc.get("parity")
+    if not isinstance(parity, dict):
+        print(f"fleet-trend: {args.current} has no parity section")
+        return 2
+    broken = [k for k in PARITY_KEYS if parity.get(k) is not True]
+    if broken:
+        print(f"fleet-trend: FAIL — parity verdict(s) false: {', '.join(broken)}")
+        return 1
+    print(f"fleet-trend: parity verdicts all true ({', '.join(PARITY_KEYS)})")
+
+    top, cur_tpm = top_throughput(doc, args.current)
+    prev_doc = load(args.previous, required=False)
+    if prev_doc is None:
+        return 0
+    _, prev_tpm = top_throughput(prev_doc, args.previous)
+
+    floor = prev_tpm * (1.0 - args.threshold)
+    verdict = "REGRESSED" if cur_tpm < floor else "ok"
+    print(
+        f"fleet-trend: top cell ({top.get('workers')}w x {top.get('shards')}s): "
+        f"tasks/min {prev_tpm:.2f} -> {cur_tpm:.2f} (floor {floor:.2f}) {verdict}"
+    )
+    if cur_tpm < floor:
+        print(
+            f"fleet-trend: FAIL — top-cell throughput dropped more than "
+            f"{args.threshold:.0%}"
+        )
+        return 1
+    print("fleet-trend: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -83,4 +83,41 @@ if grep -q '"ok":false' <<<"$OUT2"; then
   echo "serve_smoke: unexpected error reply in phase 2" >&2
   exit 1
 fi
+
+echo "== phase 3: sharded store layout, commit and recover =="
+SHSTORE="$WORK/store_sharded"
+"$BIN" serve --addr "$HOST:$PORT" --gpu H100 --store "$SHSTORE" \
+  --workers 2 --shards 2 --epoch-size 2 --trajectories 2 --steps 3 \
+  --snapshot-every 100 2> "$WORK/stderr3.log" &
+PID=$!
+wait_ready
+OUT3=$(drive \
+  '{"op":"batch","tasks":["L1/01_matmul_square","L1/12_softmax","L1/15_relu"]}' \
+  '{"op":"stats"}' \
+  '{"op":"shutdown"}')
+wait "$PID"
+cat "$WORK/stderr3.log"
+echo "$OUT3"
+# One journal segment per shard on disk, commits flowing through them.
+test -f "$SHSTORE/journal-0.log"
+test -f "$SHSTORE/journal-1.log"
+grep -q '"store_commits"' <<<"$OUT3"
+if grep -q '"ok":false' <<<"$OUT3"; then
+  echo "serve_smoke: unexpected error reply in phase 3" >&2
+  exit 1
+fi
+"$BIN" serve --addr "$HOST:$PORT" --gpu H100 --store "$SHSTORE" \
+  --workers 2 --shards 2 --epoch-size 2 --trajectories 2 --steps 3 \
+  2> "$WORK/stderr4.log" &
+PID=$!
+wait_ready
+OUT4=$(drive '{"op":"stats"}' '{"op":"shutdown"}')
+wait "$PID"
+cat "$WORK/stderr4.log"
+echo "$OUT4"
+grep -q 'recovered KB' "$WORK/stderr4.log"
+if grep -q '"kb_states":0[,}]' <<<"$OUT4"; then
+  echo "serve_smoke: sharded recovery lost the phase-3 KB" >&2
+  exit 1
+fi
 echo "serve_smoke: OK"
