@@ -169,6 +169,7 @@ USAGE:
                       [--throughput] [--snapshot-every 64] [--trajectories N]
                       [--steps N] [--seed N] [--vendor] [--policy NAME|auto]
                       [--staged] [--memo PATH] [--memo-max-entries N]
+                      [--tenant-quota name=W,name=W] [--base-kb PATH]
                       [--config run.json]
   kernelblaster suite --level <L1|L2|L3> [--gpu H100] [--quick] [--seed N]
   kernelblaster calibrate [--iters N]
@@ -669,6 +670,29 @@ fn cmd_batch(args: &Args) -> i32 {
     0
 }
 
+/// Parse a `--tenant-quota name=W,name=W` spec into admission weights.
+/// Errors are returned as messages so `cmd_serve` can print them and
+/// exit 2 (a usage error, like every other malformed flag).
+fn parse_tenant_quotas(spec: &str) -> Result<Vec<(String, u64)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let Some((name, weight)) = part.split_once('=') else {
+            return Err(format!("--tenant-quota entry '{part}' is not name=weight"));
+        };
+        if !crate::kb::store::valid_tenant_name(name) {
+            return Err(format!("--tenant-quota: invalid tenant name '{name}'"));
+        }
+        let w: u64 = weight
+            .parse()
+            .map_err(|_| format!("--tenant-quota {name}: weight '{weight}' is not an integer"))?;
+        if w == 0 {
+            return Err(format!("--tenant-quota {name}: weight must be positive"));
+        }
+        out.push((name.to_string(), w));
+    }
+    Ok(out)
+}
+
 /// `kernelblaster serve` — bind the TCP daemon on `--addr` and serve
 /// optimize/batch requests against the live KB until a shutdown request
 /// (see [`crate::serve`] for the wire protocol). With `--store DIR` the
@@ -676,6 +700,12 @@ fn cmd_batch(args: &Args) -> i32 {
 /// journal append, `--snapshot-every` bounds the replay tail, and an
 /// existing store directory is *recovered* (snapshot + journal replay)
 /// rather than reloaded from `--kb`.
+///
+/// Tenant-tagged requests get private lanes: each named tenant's KB
+/// lives in its own `<store>/<tenant>/` subdirectory (recovered on
+/// boot), `--tenant-quota` sets weighted-fair admission shares, and
+/// `--base-kb` warm-starts every new tenant from a shared read-only
+/// prior. Untagged requests ride the default lane exactly as before.
 fn cmd_serve(args: &Args) -> i32 {
     use crate::kb::store::LogStore;
     use crate::serve::{serve_listener, ServeCore};
@@ -726,6 +756,32 @@ fn cmd_serve(args: &Args) -> i32 {
     let Some(arch) = GpuArch::by_name(&cfg.gpu) else {
         eprintln!("unknown GPU '{}' (known: A6000 A100 H100 L40S)", cfg.gpu);
         return 2;
+    };
+    // Tenant quotas: the flag's entries override the config section's
+    // key by key (the usual flags-over-config precedence).
+    if let Some(spec) = args.flag("tenant-quota") {
+        match parse_tenant_quotas(spec) {
+            Ok(entries) => {
+                for (name, w) in entries {
+                    cfg.tenant_quotas.insert(name, w);
+                }
+            }
+            Err(e) => {
+                eprintln!("serve: {e}");
+                return 2;
+            }
+        }
+    }
+    let base_kb = match args
+        .flag("base-kb")
+        .map(String::from)
+        .or(cfg.serve_base_kb.clone())
+    {
+        Some(p) => match load_kb(&p) {
+            Ok(kb) => Some(kb),
+            Err(code) => return code,
+        },
+        None => None,
     };
 
     // KB source. An existing store directory wins outright — recovery
@@ -846,6 +902,19 @@ fn cmd_serve(args: &Args) -> i32 {
     core.memo = verify_memo;
     core.memo_path = memo_path;
     core.deterministic = !args.has("throughput");
+    core.store_dir = store_dir.clone();
+    core.base_kb = base_kb;
+    core.transfer = cfg.transfer.clone();
+    core.quotas = cfg.tenant_quotas.clone();
+    core.tenant_snapshot_every = args.u64_flag("snapshot-every", 64);
+    match core.recover_tenants() {
+        Ok(0) => {}
+        Ok(n) => eprintln!("serve: recovered {n} tenant store(s)"),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    }
     eprintln!(
         "serve: listening on {addr} | {} | {} workers{} | {} commits{}",
         arch.name,
@@ -870,8 +939,8 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(()) => {
             eprintln!(
                 "serve: shut down after {} tasks, {} commits",
-                core.served(),
-                core.commits()
+                core.total_served(),
+                core.total_commits()
             );
             0
         }
@@ -2481,6 +2550,27 @@ mod tests {
         assert_eq!(run(&argv("serve --epoch-size 0")), 2);
         assert_eq!(run(&argv("serve --policy annealing")), 2);
         assert_eq!(run(&argv("serve --kb /nonexistent/kb.json")), 1);
+        // Tenancy flags: malformed specs are usage errors, a missing
+        // base KB file is a load failure.
+        assert_eq!(run(&argv("serve --tenant-quota bad")), 2);
+        assert_eq!(run(&argv("serve --tenant-quota acme=0")), 2);
+        assert_eq!(run(&argv("serve --tenant-quota a/b=2")), 2);
+        assert_eq!(run(&argv("serve --tenant-quota acme=three")), 2);
+        assert_eq!(run(&argv("serve --base-kb /nonexistent/base.json")), 1);
+    }
+
+    #[test]
+    fn tenant_quota_specs_parse_and_reject() {
+        assert_eq!(
+            parse_tenant_quotas("acme=3,zeta=1").unwrap(),
+            vec![("acme".to_string(), 3), ("zeta".to_string(), 1)]
+        );
+        // A trailing comma is tolerated; empty spec parses to nothing.
+        assert_eq!(parse_tenant_quotas("acme=2,").unwrap().len(), 1);
+        assert!(parse_tenant_quotas("").unwrap().is_empty());
+        for bad in ["acme", "acme=", "acme=0", "acme=-1", "a/b=2", "=3"] {
+            assert!(parse_tenant_quotas(bad).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::harness::HarnessConfig;
 use crate::icrl::{FleetConfig, IcrlConfig, KbMode, PolicyConfig, PolicyKind, Schedule, SkillsConfig};
 use crate::kb::lifecycle::TransferPolicy;
 use crate::util::json::{Json, JsonObj};
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Complete run configuration.
@@ -39,6 +40,13 @@ pub struct RunConfig {
     pub transfer: TransferPolicy,
     /// Task id filter (empty = whole suite).
     pub tasks: Vec<String>,
+    /// Per-tenant admission weights for `kernelblaster serve` (see
+    /// `serve`'s weighted-fair scheduler). Tenants not named here get
+    /// weight 1; empty = every tenant equal.
+    pub tenant_quotas: BTreeMap<String, u64>,
+    /// Optional shared read-only base KB that warm-starts every new
+    /// serve tenant (one-way: tenants never write back to it).
+    pub serve_base_kb: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -52,6 +60,8 @@ impl Default for RunConfig {
             warm_start: Vec::new(),
             transfer: TransferPolicy::default(),
             tasks: Vec::new(),
+            tenant_quotas: BTreeMap::new(),
+            serve_base_kb: None,
         }
     }
 }
@@ -257,6 +267,22 @@ impl RunConfig {
                 Json::Arr(self.tasks.iter().map(|t| Json::Str(t.clone())).collect()),
             );
         }
+        // Multi-tenant serving: emitted only when something differs from
+        // the defaults, keeping pre-tenancy config files byte-stable.
+        if !self.tenant_quotas.is_empty() || self.serve_base_kb.is_some() {
+            let mut serve = JsonObj::new();
+            if !self.tenant_quotas.is_empty() {
+                let mut quotas = JsonObj::new();
+                for (name, w) in &self.tenant_quotas {
+                    quotas.set(name.as_str(), *w);
+                }
+                serve.set("tenant_quotas", quotas);
+            }
+            if let Some(p) = &self.serve_base_kb {
+                serve.set("base_kb", p.as_str());
+            }
+            root.set("serve", serve);
+        }
         Json::Obj(root)
     }
 
@@ -450,6 +476,19 @@ impl RunConfig {
                 .filter_map(|t| t.as_str().map(String::from))
                 .collect();
         }
+        if let Some(serve) = j.get("serve") {
+            if let Some(quotas) = serve.get("tenant_quotas").and_then(Json::as_obj) {
+                for (name, w) in quotas.iter() {
+                    let w = w.as_usize().ok_or_else(|| {
+                        ConfigError::Invalid(format!(
+                            "serve.tenant_quotas.{name} must be a positive integer"
+                        ))
+                    })? as u64;
+                    cfg.tenant_quotas.insert(name.to_string(), w);
+                }
+            }
+            cfg.serve_base_kb = serve.get("base_kb").and_then(Json::as_str).map(String::from);
+        }
         // Validation.
         if cfg.icrl.trajectories == 0 || cfg.icrl.rollout_steps == 0 || cfg.icrl.top_k == 0 {
             return Err(ConfigError::Invalid(
@@ -471,6 +510,18 @@ impl RunConfig {
                 "transfer.decay must be in [0, 1], got {}",
                 cfg.transfer.decay
             )));
+        }
+        for (name, w) in &cfg.tenant_quotas {
+            if !crate::kb::store::valid_tenant_name(name) {
+                return Err(ConfigError::Invalid(format!(
+                    "serve.tenant_quotas: invalid tenant name '{name}'"
+                )));
+            }
+            if *w == 0 {
+                return Err(ConfigError::Invalid(format!(
+                    "serve.tenant_quotas.{name} must be a positive integer"
+                )));
+            }
         }
         cfg.icrl.policy.validate().map_err(ConfigError::Invalid)?;
         for (i, p) in cfg.fleet.epoch_policies.iter().enumerate() {
@@ -828,6 +879,51 @@ mod tests {
             err.contains("must be \"auto\" or a policy list"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn serve_section_roundtrips_and_validates() {
+        // Absent section = defaults, and the default config emits no
+        // "serve" key at all — pre-tenancy config files stay byte-stable.
+        let plain = RunConfig::from_json(&Json::parse(r#"{"gpu":"H100"}"#).unwrap()).unwrap();
+        assert!(plain.tenant_quotas.is_empty());
+        assert_eq!(plain.serve_base_kb, None);
+        let default_text = RunConfig::default().to_json().to_string_pretty();
+        assert!(
+            !default_text.contains("\"serve\""),
+            "default config must not emit a serve section:\n{default_text}"
+        );
+        // Non-default section roundtrips quotas and base KB.
+        let cfg = RunConfig {
+            tenant_quotas: [("acme".to_string(), 3), ("zeta".to_string(), 1)]
+                .into_iter()
+                .collect(),
+            serve_base_kb: Some("/tmp/base_kb.json".into()),
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.tenant_quotas, cfg.tenant_quotas);
+        assert_eq!(back.serve_base_kb, cfg.serve_base_kb);
+        // Partial section: quotas without a base KB, base KB without quotas.
+        let j = Json::parse(r#"{"serve":{"tenant_quotas":{"acme":2}}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.tenant_quotas.get("acme"), Some(&2));
+        assert_eq!(c.serve_base_kb, None);
+        let j = Json::parse(r#"{"serve":{"base_kb":"kb.json"}}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.tenant_quotas.is_empty());
+        assert_eq!(c.serve_base_kb.as_deref(), Some("kb.json"));
+        // Invalid tenant names and non-positive weights are rejected
+        // with the offending key in the message.
+        let j = Json::parse(r#"{"serve":{"tenant_quotas":{"a/b":1}}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("invalid tenant name 'a/b'"), "{err}");
+        let j = Json::parse(r#"{"serve":{"tenant_quotas":{"acme":0}}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("tenant_quotas.acme"), "{err}");
+        let j = Json::parse(r#"{"serve":{"tenant_quotas":{"acme":"three"}}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("positive integer"), "{err}");
     }
 
     #[test]

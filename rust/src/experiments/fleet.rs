@@ -29,7 +29,7 @@
 //! `scripts/fleet_trend.py` gates regressions in the top grid cell's
 //! tasks/min. The parity booleans are host-independent.
 
-use super::simqueue::{percentile, simulate_queue, trace_arrivals};
+use super::simqueue::{simulate_queue, trace_arrivals};
 use super::{Ctx, Report, Section};
 use crate::gpu::GpuArch;
 use crate::icrl::{self, FleetConfig, IcrlConfig, ShardMetrics, TaskRun};
@@ -243,7 +243,7 @@ fn sim_points(reference: &[TaskRun], workers_grid: &[usize], seed: u64) -> Vec<S
         points.push(SimPoint {
             workers: w,
             span_ticks: span,
-            wait_p95: percentile(&waits, 0.95),
+            wait_p95: stats::percentile_nearest_rank(&waits, 0.95),
             speedup_vs_base: base_span as f64 / span.max(1) as f64,
         });
     }

@@ -83,10 +83,11 @@ pub(crate) mod pairing {
 }
 
 /// Deterministic arrival/queue plumbing shared by the [`serve`] and
-/// [`fleet`] scenarios: synthetic arrival traces, a FIFO
-/// earliest-available-worker queue, and nearest-rank percentiles over
-/// tick samples. Tick metrics are a pure function of the seed —
-/// wall-clock never enters, so CI can compare them across hosts.
+/// [`fleet`] scenarios: synthetic arrival traces and a FIFO
+/// earliest-available-worker queue. Tick metrics are a pure function of
+/// the seed — wall-clock never enters, so CI can compare them across
+/// hosts. Percentiles over tick samples live with the other summary
+/// statistics ([`crate::util::stats::percentile_nearest_rank`]).
 pub(crate) mod simqueue {
     use crate::util::rng::Rng;
 
@@ -151,16 +152,6 @@ pub(crate) mod simqueue {
             span = span.max(finish);
         }
         (waits, sojourns, span)
-    }
-
-    /// Nearest-rank percentile over tick samples (NaN when empty).
-    pub(crate) fn percentile(xs: &[u64], p: f64) -> f64 {
-        if xs.is_empty() {
-            return f64::NAN;
-        }
-        let mut v = xs.to_vec();
-        v.sort_unstable();
-        v[((v.len() - 1) as f64 * p).round() as usize] as f64
     }
 }
 

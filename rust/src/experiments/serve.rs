@@ -1,39 +1,63 @@
-//! Serve scenario: replay synthetic arrival traces against the daemon's
-//! request handler ([`crate::serve::ServeCore`], driven directly — no
-//! TCP) and measure serving behavior under three arrival shapes:
+//! Serve scenario: replay synthetic **multi-tenant** arrival traces
+//! against the daemon's request handler ([`crate::serve::ServeCore`],
+//! driven directly — no TCP) and measure serving behavior under three
+//! arrival shapes:
 //!
 //! 1. **uniform** — steady inter-arrival gaps (the provisioning
 //!    baseline);
 //! 2. **bursty** — tight request bursts separated by idle gaps (CI
 //!    fan-out traffic);
-//! 3. **heavy_tailed** — Pareto inter-arrivals (multi-tenant traffic
-//!    where a few tenants dominate).
+//! 3. **heavy_tailed** — Pareto inter-arrivals (traffic where a few
+//!    clients dominate).
 //!
-//! Each trace gets a fresh core, an empty KB, and its own
-//! [`LogStore`] directory, so commit/compaction counters are
-//! per-trace. Every request is an `optimize` line through
-//! `handle_line` — exactly the serving path, store journaling
-//! included. Queue dynamics are *simulated deterministically*: the
-//! reply's `steps` count is the request's service time in ticks, and a
-//! FIFO earliest-available-worker queue over the arrival ticks yields
-//! wait/sojourn percentiles that are a pure function of the seed.
-//! Wall-clock enters only as tasks/min (host-dependent; the tick
-//! metrics are not).
+//! Two tenants share each daemon: `alpha` (weight 3, Level-1 tasks) and
+//! `beta` (weight 1, Level-2 tasks) — mixed task levels through one
+//! core, each tenant on its own namespaced `LogStore` under one store
+//! root. Each trace enqueues both tenants' whole backlogs in merged
+//! arrival order and then drains through the core's weighted-fair
+//! scheduler ([`ServeCore::admit_next`]), so the admission order
+//! genuinely exercises cross-tenant contention — not the queue-of-one
+//! FIFO the TCP path sees.
+//!
+//! Queue dynamics are *simulated deterministically*: the reply's
+//! `steps` count is the request's service time in ticks, and the shared
+//! FIFO earliest-available-worker queue ([`super::simqueue`]) over the
+//! admission-ordered arrival ticks yields per-tenant wait/sojourn
+//! percentiles that are a pure function of the seed. Wall-clock enters
+//! only as tasks/min (host-dependent; the tick metrics are not).
+//!
+//! Two cross-tenant verdicts ride along per trace:
+//!
+//! - **fairness ratio** — each tenant's `admitted / weight` share over
+//!   the *contended* admissions (both tenants backlogged), min over
+//!   max; 1.0 = perfectly weighted-fair. Computed over **admitted**
+//!   counts, never arrivals — arrivals are the workload, admission is
+//!   the scheduler's doing.
+//! - **isolation verdict** — tenant alpha's requests replayed through a
+//!   solo daemon must produce a KB byte-identical to alpha's KB from
+//!   the mixed run (`isolation_ok`). The deep bit-level version (store
+//!   bytes, worker/shard grid) is pinned in `tests/serve.rs`; the
+//!   benchmark re-asserts it on every artifact so a regression shows up
+//!   in CI even without the test suite.
 //!
 //! Reported as a [`Report`] plus machine-readable `BENCH_serve.json`
-//! (format `kernelblaster-bench-serve-v1`) — CI runs it at `--quick`
-//! scale and uploads the JSON as an artifact.
+//! (format `kernelblaster-bench-serve-v2`, per-tenant rows under each
+//! trace) — CI runs it at `--quick` scale, uploads the JSON as an
+//! artifact, and `scripts/serve_trend.py` gates per-tenant tasks/min
+//! against the previous artifact.
+//!
+//! [`ServeCore::admit_next`]: crate::serve::ServeCore::admit_next
 
-use super::simqueue::{percentile, simulate_queue, trace_arrivals};
+use super::simqueue::{simulate_queue, trace_arrivals};
 use super::{Ctx, Report, Section};
 use crate::gpu::GpuArch;
 use crate::icrl::{FleetConfig, IcrlConfig};
-use crate::kb::store::LogStore;
+use crate::kb::persist;
 use crate::kb::KnowledgeBase;
 use crate::serve::ServeCore;
 use crate::tasks::{Level, Task};
 use crate::util::json::{Json, JsonObj};
-use crate::util::stats;
+use crate::util::stats::{self, percentile_nearest_rank};
 use crate::util::table::{fnum, Table};
 use std::path::Path;
 use std::time::Instant;
@@ -41,13 +65,60 @@ use std::time::Instant;
 /// The three arrival shapes, in report order.
 const TRACES: &[&str] = &["uniform", "bursty", "heavy_tailed"];
 
-/// Snapshot cadence for the per-trace store — low enough that even the
-/// quick trace exercises at least one journal compaction.
+/// The tenant mix every trace serves: (name, quota weight, task level).
+const TENANTS: &[(&str, u64, Level)] = &[("alpha", 3, Level::L1), ("beta", 1, Level::L2)];
+
+/// Snapshot cadence for the per-tenant stores — low enough that even
+/// the quick trace exercises at least one journal compaction.
 const SNAPSHOT_EVERY: u64 = 4;
 
-/// One trace's measurement. The arrival traces and the FIFO queue
-/// simulation live in [`super::simqueue`], shared with the fleet
-/// scaling-grid scenario.
+/// One tenant's workload in a trace.
+struct TenantSpec<'a> {
+    name: &'static str,
+    weight: u64,
+    level: Level,
+    tasks: Vec<&'a Task>,
+    /// Requests this tenant sends over the trace.
+    n: usize,
+}
+
+/// One tenant's measured slice of a trace.
+struct TenantRun {
+    name: &'static str,
+    weight: u64,
+    arrivals: usize,
+    admitted: u64,
+    valid: usize,
+    geomean: f64,
+    commits: u64,
+    kb_states: usize,
+    wait_p50: f64,
+    wait_p95: f64,
+    sojourn_p50: f64,
+    sojourn_p95: f64,
+}
+
+impl TenantRun {
+    fn to_json(&self, wall_s: f64) -> Json {
+        let mut o = JsonObj::new();
+        o.set("tenant", self.name);
+        o.set("weight", self.weight);
+        o.set("arrivals", self.arrivals);
+        o.set("admitted", self.admitted);
+        o.set("tasks_per_min", self.arrivals as f64 / (wall_s / 60.0).max(1e-9));
+        o.set("valid", self.valid);
+        o.set("geomean_vs_naive", self.geomean);
+        o.set("commits", self.commits);
+        o.set("kb_states", self.kb_states);
+        o.set("queue_wait_p50_ticks", self.wait_p50);
+        o.set("queue_wait_p95_ticks", self.wait_p95);
+        o.set("sojourn_p50_ticks", self.sojourn_p50);
+        o.set("sojourn_p95_ticks", self.sojourn_p95);
+        Json::Obj(o)
+    }
+}
+
+/// One trace's measurement across both tenants.
 struct TraceRun {
     name: &'static str,
     arrivals: usize,
@@ -62,6 +133,9 @@ struct TraceRun {
     wait_p95: f64,
     sojourn_p50: f64,
     sojourn_p95: f64,
+    fairness_ratio: f64,
+    isolation_ok: bool,
+    tenants: Vec<TenantRun>,
 }
 
 impl TraceRun {
@@ -85,74 +159,254 @@ impl TraceRun {
         o.set("queue_wait_p95_ticks", self.wait_p95);
         o.set("sojourn_p50_ticks", self.sojourn_p50);
         o.set("sojourn_p95_ticks", self.sojourn_p95);
+        o.set("fairness_ratio", self.fairness_ratio);
+        o.set("isolation_ok", self.isolation_ok);
+        o.set(
+            "per_tenant",
+            Json::Arr(self.tenants.iter().map(|t| t.to_json(self.wall_s)).collect()),
+        );
         Json::Obj(o)
     }
 }
 
-/// Replay one trace against a fresh store-backed core.
+/// Weighted fairness over admitted counts: each tenant's
+/// `admitted / weight` share, min over max. 1.0 = perfectly
+/// weighted-fair; NaN when nothing was admitted (no contention to
+/// judge). Input pairs are (admitted, weight) — the caller feeds
+/// *admitted* counts from the contended window, never arrival counts.
+fn fairness_ratio(admitted_weighted: &[(u64, u64)]) -> f64 {
+    let shares: Vec<f64> = admitted_weighted
+        .iter()
+        .map(|(a, w)| *a as f64 / (*w).max(1) as f64)
+        .collect();
+    if shares.is_empty() {
+        return f64::NAN;
+    }
+    let hi = shares.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let lo = shares.iter().copied().fold(f64::INFINITY, f64::min);
+    if hi <= 0.0 {
+        return f64::NAN;
+    }
+    lo / hi
+}
+
+/// The optimize request line for one tenant's `k`-th request.
+fn request_line(t: &TenantSpec<'_>, k: usize) -> String {
+    let mut req = JsonObj::new();
+    req.set("op", "optimize");
+    req.set("tenant", t.name);
+    req.set("task", t.tasks[k % t.tasks.len()].id.as_str());
+    Json::Obj(req).to_string_compact()
+}
+
+/// Replay one trace against a fresh store-root-backed multi-tenant
+/// core, then replay tenant 0's requests solo for the isolation
+/// verdict.
 fn run_trace(
     shape: &'static str,
-    tasks: &[&Task],
+    tenants: &[TenantSpec<'_>],
     arch: &GpuArch,
     cfg: &IcrlConfig,
     fleet_cfg: &FleetConfig,
-    n: usize,
     seed: u64,
 ) -> TraceRun {
-    let dir = std::env::temp_dir().join(format!("kb_serve_exp_{shape}_{seed}"));
-    std::fs::remove_dir_all(&dir).ok();
-    let kb = KnowledgeBase::empty();
-    let mut store = LogStore::create(&dir, &kb).expect("create trace store");
-    store.snapshot_every = SNAPSHOT_EVERY;
-    let mut core = ServeCore::new(arch.clone(), cfg.clone(), fleet_cfg.clone(), kb);
-    core.store = Some(store);
+    let root = std::env::temp_dir().join(format!("kb_serve_exp_{shape}_{seed}"));
+    std::fs::remove_dir_all(&root).ok();
+    let mut core = ServeCore::new(arch.clone(), cfg.clone(), fleet_cfg.clone(), KnowledgeBase::empty());
+    core.store_dir = Some(root.clone());
+    core.tenant_snapshot_every = SNAPSHOT_EVERY;
+    for t in tenants {
+        core.quotas.insert(t.name.to_string(), t.weight);
+    }
 
-    let arrivals = trace_arrivals(shape, n, seed);
-    let mut service = Vec::with_capacity(n);
-    let mut speedups = Vec::new();
-    let t = Instant::now();
-    for i in 0..n {
-        let mut req = JsonObj::new();
-        req.set("op", "optimize");
-        req.set("task", tasks[i % tasks.len()].id.as_str());
-        let reply = core.handle_line(&Json::Obj(req).to_string_compact());
+    // Per-tenant arrival traces, merged into one global arrival order
+    // (tick, tenant, per-tenant index — a total order, so the enqueue
+    // sequence is a pure function of the seed).
+    let arr_by: Vec<Vec<u64>> = tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| trace_arrivals(shape, t.n, seed.wrapping_add(ti as u64)))
+        .collect();
+    let mut events: Vec<(u64, usize, usize)> = Vec::new();
+    for (ti, arr) in arr_by.iter().enumerate() {
+        for (k, tick) in arr.iter().enumerate() {
+            events.push((*tick, ti, k));
+        }
+    }
+    events.sort_unstable();
+    for &(_tick, ti, k) in &events {
+        core.enqueue(&request_line(&tenants[ti], k));
+    }
+
+    // Drain the backlog through the weighted-fair scheduler, recording
+    // the admission order, each admitted request's arrival tick and
+    // service time (the reply's step count), and which admissions were
+    // contended (both tenants still backlogged when picked).
+    let wall = Instant::now();
+    let mut admitted_seq: Vec<usize> = Vec::new();
+    let mut arrivals_admitted: Vec<u64> = Vec::new();
+    let mut service: Vec<u64> = Vec::new();
+    let mut cursor = vec![0usize; tenants.len()];
+    let mut admitted = vec![0u64; tenants.len()];
+    let mut contended_admitted = vec![0u64; tenants.len()];
+    let mut speedups_by: Vec<Vec<f64>> = tenants.iter().map(|_| Vec::new()).collect();
+    while let Some((tenant, reply)) = core.admit_next() {
+        let ti = tenants
+            .iter()
+            .position(|t| t.name == tenant)
+            .expect("admitted tenant is in the spec");
+        let contended = tenants
+            .iter()
+            .zip(&admitted)
+            .filter(|(t, a)| **a < t.n as u64)
+            .count()
+            >= 2;
         let j = Json::parse(&reply.lines[0]).expect("reply is JSON");
         let ok = j.get("ok").and_then(Json::as_bool).unwrap_or(false);
         service.push(j.get("steps").and_then(Json::as_usize).unwrap_or(1).max(1) as u64);
+        arrivals_admitted.push(arr_by[ti][cursor[ti]]);
+        cursor[ti] += 1;
         if ok && j.get("valid").and_then(Json::as_bool) == Some(true) {
             if let Some(s) = j.get("speedup_vs_naive").and_then(Json::as_f64) {
-                speedups.push(s);
+                speedups_by[ti].push(s);
             }
         }
+        if contended {
+            contended_admitted[ti] += 1;
+        }
+        admitted[ti] += 1;
+        admitted_seq.push(ti);
     }
-    let wall_s = t.elapsed().as_secs_f64();
-    let st = core.store.as_ref().expect("store still attached").stats();
-    let (waits, sojourns, span) = simulate_queue(&arrivals, &service, fleet_cfg.workers);
-    std::fs::remove_dir_all(&dir).ok();
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    let fairness = fairness_ratio(
+        &contended_admitted
+            .iter()
+            .zip(tenants)
+            .map(|(a, t)| (*a, t.weight))
+            .collect::<Vec<_>>(),
+    );
+
+    // Deterministic queue simulation over the admission order.
+    let (waits, sojourns, span) = simulate_queue(&arrivals_admitted, &service, fleet_cfg.workers);
+    let split = |xs: &[u64], ti: usize| -> Vec<u64> {
+        xs.iter()
+            .zip(&admitted_seq)
+            .filter(|(_, t)| **t == ti)
+            .map(|(x, _)| *x)
+            .collect()
+    };
+
+    // Per-tenant lane counters from the daemon's own stats op.
+    let mut commits_by = vec![0u64; tenants.len()];
+    let mut kb_states_by = vec![0usize; tenants.len()];
+    let mut store_commits = 0u64;
+    let mut compactions = 0u64;
+    let mut journal_records = 0u64;
+    for (ti, t) in tenants.iter().enumerate() {
+        let r = core.handle_line(&format!(r#"{{"op":"stats","tenant":"{}"}}"#, t.name));
+        let j = Json::parse(&r.lines[0]).expect("stats reply is JSON");
+        commits_by[ti] = j.get("commits").and_then(Json::as_usize).unwrap_or(0) as u64;
+        kb_states_by[ti] = j.get("kb_states").and_then(Json::as_usize).unwrap_or(0);
+        store_commits += j.get("store_commits").and_then(Json::as_usize).unwrap_or(0) as u64;
+        compactions += j.get("store_compactions").and_then(Json::as_usize).unwrap_or(0) as u64;
+        journal_records +=
+            j.get("store_journal_records").and_then(Json::as_usize).unwrap_or(0) as u64;
+    }
+    debug_assert_eq!(store_commits, commits_by.iter().sum::<u64>());
+
+    // Isolation verdict: tenant 0's requests through a solo daemon must
+    // grow a byte-identical KB (same seeds — per-tenant served counters
+    // — same FIFO order within the tenant).
+    let solo_root = std::env::temp_dir().join(format!("kb_serve_exp_{shape}_{seed}_solo"));
+    std::fs::remove_dir_all(&solo_root).ok();
+    let mut solo = ServeCore::new(arch.clone(), cfg.clone(), fleet_cfg.clone(), KnowledgeBase::empty());
+    solo.store_dir = Some(solo_root.clone());
+    solo.tenant_snapshot_every = SNAPSHOT_EVERY;
+    let t0 = &tenants[0];
+    for k in 0..t0.n {
+        let _ = solo.handle_line(&request_line(t0, k));
+    }
+    let mixed_bytes = persist::to_json(core.tenant_kb(t0.name).expect("tenant 0 served"))
+        .to_string_pretty();
+    let solo_bytes = persist::to_json(solo.tenant_kb(t0.name).expect("solo tenant 0 served"))
+        .to_string_pretty();
+    let isolation_ok = mixed_bytes == solo_bytes;
+    std::fs::remove_dir_all(&solo_root).ok();
+    std::fs::remove_dir_all(&root).ok();
+
+    let all_speedups: Vec<f64> = speedups_by.iter().flatten().copied().collect();
+    let tenant_runs: Vec<TenantRun> = tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| {
+            let w = split(&waits, ti);
+            let s = split(&sojourns, ti);
+            TenantRun {
+                name: t.name,
+                weight: t.weight,
+                arrivals: t.n,
+                admitted: admitted[ti],
+                valid: speedups_by[ti].len(),
+                geomean: stats::geomean(&speedups_by[ti]),
+                commits: commits_by[ti],
+                kb_states: kb_states_by[ti],
+                wait_p50: percentile_nearest_rank(&w, 0.50),
+                wait_p95: percentile_nearest_rank(&w, 0.95),
+                sojourn_p50: percentile_nearest_rank(&s, 0.50),
+                sojourn_p95: percentile_nearest_rank(&s, 0.95),
+            }
+        })
+        .collect();
     TraceRun {
         name: shape,
-        arrivals: n,
+        arrivals: events.len(),
         wall_s,
-        valid: speedups.len(),
-        geomean: stats::geomean(&speedups),
-        commits: core.commits(),
-        compactions: st.compactions,
-        journal_records: st.journal_records,
+        valid: all_speedups.len(),
+        geomean: stats::geomean(&all_speedups),
+        commits: commits_by.iter().sum(),
+        compactions,
+        journal_records,
         span_ticks: span,
-        wait_p50: percentile(&waits, 0.50),
-        wait_p95: percentile(&waits, 0.95),
-        sojourn_p50: percentile(&sojourns, 0.50),
-        sojourn_p95: percentile(&sojourns, 0.95),
+        wait_p50: percentile_nearest_rank(&waits, 0.50),
+        wait_p95: percentile_nearest_rank(&waits, 0.95),
+        sojourn_p50: percentile_nearest_rank(&sojourns, 0.50),
+        sojourn_p95: percentile_nearest_rank(&sojourns, 0.95),
+        fairness_ratio: fairness,
+        isolation_ok,
+        tenants: tenant_runs,
     }
 }
 
-/// Serialize the measurement into `kernelblaster-bench-serve-v1`.
-fn write_bench_json(arch: &GpuArch, n_tasks: usize, workers: usize, traces: &[TraceRun], path: &Path) {
+/// Serialize the measurement into `kernelblaster-bench-serve-v2`.
+fn write_bench_json(
+    arch: &GpuArch,
+    n_tasks: usize,
+    workers: usize,
+    tenants: &[TenantSpec<'_>],
+    traces: &[TraceRun],
+    path: &Path,
+) {
     let mut root = JsonObj::new();
-    root.set("format", "kernelblaster-bench-serve-v1");
+    root.set("format", "kernelblaster-bench-serve-v2");
     root.set("gpu", arch.name);
     root.set("tasks", n_tasks);
     root.set("workers", workers);
+    root.set(
+        "tenants",
+        Json::Arr(
+            tenants
+                .iter()
+                .map(|t| {
+                    let mut o = JsonObj::new();
+                    o.set("tenant", t.name);
+                    o.set("weight", t.weight);
+                    o.set("level", t.level.tag());
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
     root.set(
         "traces",
         Json::Arr(traces.iter().map(TraceRun::to_json).collect()),
@@ -173,59 +427,85 @@ pub fn run_with_output(ctx: &Ctx, out: &Path) -> Report {
         checkpoint_every: 0,
         ..Default::default()
     };
-    let tasks = ctx.tasks(Level::L1);
-    // One round of the task list per trace in quick mode, three in full,
-    // so the queue actually builds depth behind the bursts.
-    let n = tasks.len() * if ctx.quick { 1 } else { 3 };
+    // One round of each tenant's task list per trace in quick mode,
+    // three in full, so the queue actually builds depth behind the
+    // bursts and the quotas see sustained contention.
+    let rounds = if ctx.quick { 1 } else { 3 };
+    let tenants: Vec<TenantSpec<'_>> = TENANTS
+        .iter()
+        .map(|(name, weight, level)| {
+            let tasks = ctx.tasks(*level);
+            let n = tasks.len() * rounds;
+            TenantSpec {
+                name,
+                weight: *weight,
+                level: *level,
+                tasks,
+                n,
+            }
+        })
+        .collect();
+    let n_tasks: usize = tenants.iter().map(|t| t.tasks.len()).sum();
     let traces: Vec<TraceRun> = TRACES
         .iter()
-        .map(|shape| run_trace(shape, &tasks, &arch, &cfg, &fleet_cfg, n, ctx.seed))
+        .map(|shape| run_trace(shape, &tenants, &arch, &cfg, &fleet_cfg, ctx.seed))
         .collect();
 
     let mut t = Table::new(&[
         "trace",
+        "tenant",
+        "weight",
         "arrivals",
-        "tasks/min",
+        "admitted",
         "geomean vs naive",
-        "commits",
-        "compactions",
         "wait p50",
         "wait p95",
         "sojourn p95",
+        "fairness",
+        "isolated",
     ]);
     for tr in &traces {
-        t.add_row(vec![
-            tr.name.to_string(),
-            tr.arrivals.to_string(),
-            fnum(tr.tasks_per_min(), 1),
-            fnum(tr.geomean, 3),
-            tr.commits.to_string(),
-            tr.compactions.to_string(),
-            fnum(tr.wait_p50, 0),
-            fnum(tr.wait_p95, 0),
-            fnum(tr.sojourn_p95, 0),
-        ]);
+        for ten in &tr.tenants {
+            t.add_row(vec![
+                tr.name.to_string(),
+                ten.name.to_string(),
+                ten.weight.to_string(),
+                ten.arrivals.to_string(),
+                ten.admitted.to_string(),
+                fnum(ten.geomean, 3),
+                fnum(ten.wait_p50, 0),
+                fnum(ten.wait_p95, 0),
+                fnum(ten.sojourn_p95, 0),
+                fnum(tr.fairness_ratio, 2),
+                if tr.isolation_ok { "yes" } else { "NO" }.to_string(),
+            ]);
+        }
     }
-    write_bench_json(&arch, tasks.len(), fleet_cfg.workers, &traces, out);
+    write_bench_json(&arch, n_tasks, fleet_cfg.workers, &tenants, &traces, out);
     Report {
         name: "serve".into(),
         sections: vec![Section {
             title: format!(
-                "Serving daemon under synthetic arrival traces ({} L1 tasks, {n} requests \
-                 per trace, {}, {} simulated workers)",
-                tasks.len(),
+                "Multi-tenant serving under synthetic arrival traces ({} tenants, {} tasks, \
+                 {}, {} simulated workers)",
+                tenants.len(),
+                n_tasks,
                 arch.name,
                 fleet_cfg.workers
             ),
             table: t,
             plot: None,
             notes: vec![
-                "queue wait/sojourn are deterministic simulated ticks (service time = the \
-                 reply's step count); tasks/min is host wall-clock"
+                "each trace enqueues both tenants' backlogs and drains through the \
+                 weighted-fair scheduler; queue wait/sojourn are deterministic simulated \
+                 ticks (service time = the reply's step count)"
+                    .into(),
+                "fairness = min/max of per-tenant admitted/weight over contended \
+                 admissions; isolated = tenant alpha's KB bytes equal a solo replay's"
                     .into(),
                 format!(
-                    "each trace runs store-backed with a snapshot every {SNAPSHOT_EVERY} \
-                     commits — compaction counts come from the live LogStore"
+                    "per-tenant stores are namespaced under one root with a snapshot \
+                     every {SNAPSHOT_EVERY} commits"
                 ),
                 format!("machine-readable: {}", out.display()),
             ],
@@ -281,10 +561,19 @@ mod tests {
     }
 
     #[test]
-    fn percentile_is_nearest_rank() {
-        assert_eq!(percentile(&[1, 2, 3, 4, 5], 0.50), 3.0);
-        assert_eq!(percentile(&[1, 2, 3, 4, 5], 0.95), 5.0);
-        assert_eq!(percentile(&[7], 0.95), 7.0);
-        assert!(percentile(&[], 0.5).is_nan());
+    fn fairness_ratio_is_weighted_and_over_admitted_counts() {
+        // A perfect 3:1 admitted split at weights 3:1 scores 1.0 —
+        // whatever the arrival counts were (the function never sees
+        // arrivals, by construction).
+        assert_eq!(fairness_ratio(&[(9, 3), (3, 1)]), 1.0);
+        // Equal weights, a 2:1 admitted skew: 0.5.
+        assert_eq!(fairness_ratio(&[(6, 1), (3, 1)]), 0.5);
+        // One tenant fully starved: 0.0.
+        assert_eq!(fairness_ratio(&[(4, 1), (0, 1)]), 0.0);
+        // Nothing admitted (or no tenants): NaN, not a fake 1.0.
+        assert!(fairness_ratio(&[]).is_nan());
+        assert!(fairness_ratio(&[(0, 1), (0, 3)]).is_nan());
+        // A zero weight is clamped to 1, not a division by zero.
+        assert_eq!(fairness_ratio(&[(2, 0), (2, 1)]), 1.0);
     }
 }

@@ -117,6 +117,17 @@
 //! readers observe either the previous checkpoint or the new one,
 //! nothing in between. All persistence failures surface as one type,
 //! [`PersistError`].
+//!
+//! # Tenancy (who calls this, with what)
+//!
+//! The fleet is **tenant-blind**: one call = one KB = one store. The
+//! serving daemon's multi-tenant layer ([`crate::serve`] §Tenancy)
+//! routes each admitted request to a per-tenant KB and per-tenant
+//! [`Store`] *before* invoking the fleet, so everything above — the
+//! determinism contract, commit order, store cadence — holds per
+//! tenant independently. Nothing here ever sees two tenants' evidence
+//! in one batch, which is precisely what makes a tenant's KB bytes
+//! identical to a solo run's (`tests/serve.rs` pins this).
 
 use super::driver::{
     optimize_task_delta_verified, optimize_task_verified, IcrlConfig, KbMode, TaskRun,

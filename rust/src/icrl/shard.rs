@@ -76,6 +76,14 @@
 //! left at the last epoch boundary (the classic path leaves it at the
 //! last committed task — the one contract difference, documented on
 //! [`Store::end_epoch`]).
+//!
+//! Tenancy sits strictly **above** this module: the serving daemon
+//! ([`crate::serve`] §Tenancy) picks the tenant's KB and store before
+//! any sharded batch starts, so [`shard_of`] only ever partitions one
+//! tenant's states and each tenant's journal segments carry their own
+//! independent `seq` space. Two tenants' stores never share a file,
+//! which keeps the workers × shards byte-equality matrix a per-tenant
+//! property.
 
 use super::driver::{IcrlConfig, KbMode, TaskRun};
 use super::fleet::{

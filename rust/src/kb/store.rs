@@ -101,6 +101,19 @@
 //! — the same [`apply_delta`] replay contract as the classic layout,
 //! pinned end-to-end in `tests/fleet.rs`.
 //!
+//! # Tenant namespacing
+//!
+//! Multi-tenant serving ([`crate::serve`]) keeps one store *root*: the
+//! default tenant's store lives at the root itself (the pre-tenancy
+//! layout, unchanged), and each named tenant gets a complete independent
+//! store in its own subdirectory ([`tenant_dir`]:
+//! `store/<tenant>/journal-*.log` + `snapshot.json`). Nothing is shared
+//! between tenant stores — sequence numbers, journals, snapshots, and
+//! crash windows are all per-directory — so one tenant's torn journal
+//! tail cannot touch another tenant's recovery, and a missing
+//! subdirectory is a cold start for that tenant only ([`list_tenants`]
+//! simply won't name it).
+//!
 //! [`lifecycle::KbDelta`]: super::lifecycle::KbDelta
 //! [`apply_delta`]: super::lifecycle::apply_delta
 
@@ -126,6 +139,65 @@ pub const SNAPSHOT_FILE: &str = "snapshot.json";
 /// Journal segment file name for shard `i` in the sharded layout.
 fn segment_file(i: usize) -> String {
     format!("journal-{i}.log")
+}
+
+/// Name of the implicit tenant untagged serve requests route to. The
+/// default tenant's store lives at the store **root** (`<dir>/journal*.log`
+/// + `snapshot.json`), never in a subdirectory — so a pre-tenancy store
+/// is, byte-for-byte, the default tenant's store and recovers unchanged.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// The namespaced store directory for `tenant` under store root `root`:
+/// `<root>/<tenant>/` for a named tenant, the root itself for
+/// [`DEFAULT_TENANT`]. Each tenant directory is a complete, independent
+/// [`LogStore`] (own snapshot, own journal segments, own sequence
+/// numbers) — per-tenant recovery composes because nothing is shared.
+pub fn tenant_dir(root: &Path, tenant: &str) -> PathBuf {
+    if tenant == DEFAULT_TENANT {
+        root.to_path_buf()
+    } else {
+        root.join(tenant)
+    }
+}
+
+/// Tenant subdirectories under `root` that hold a recoverable store
+/// ([`LogStore::exists`]), sorted — recovery iterates deterministically.
+/// The root's own store (the default tenant) is not listed; directories
+/// that are not valid tenant names (or hold no snapshot) are skipped
+/// rather than erroring, so stray files next to a store are harmless.
+pub fn list_tenants(root: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(root) else {
+        return out;
+    };
+    for e in entries.flatten() {
+        let p = e.path();
+        if !p.is_dir() {
+            continue;
+        }
+        let Some(name) = p.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if name != DEFAULT_TENANT && valid_tenant_name(name) && LogStore::exists(&p) {
+            out.push(name.to_string());
+        }
+    }
+    out.sort();
+    out
+}
+
+/// True when `name` is usable as a tenant id: 1–64 ASCII characters from
+/// `[A-Za-z0-9_-]`, starting alphanumeric. A tenant name doubles as its
+/// on-disk subdirectory ([`tenant_dir`]), so path separators, `..`, and
+/// empty names must be unrepresentable here, not merely rejected
+/// somewhere downstream.
+pub fn valid_tenant_name(name: &str) -> bool {
+    let n = name.as_bytes();
+    !n.is_empty()
+        && n.len() <= 64
+        && n[0].is_ascii_alphanumeric()
+        && n.iter()
+            .all(|c| c.is_ascii_alphanumeric() || *c == b'-' || *c == b'_')
 }
 
 /// Counters a long-lived server reports (`serve stats`, BENCH_serve).
@@ -1505,5 +1577,51 @@ mod tests {
         let (recovered, _) = LogStore::recover(&dir).unwrap();
         assert_eq!(recovered, kb);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tenant_names_are_path_safe_only() {
+        for ok in ["acme", "a", "t-1", "team_b", "X9", &"a".repeat(64)] {
+            assert!(valid_tenant_name(ok), "{ok:?} should be valid");
+        }
+        for bad in [
+            "",
+            "..",
+            "a/b",
+            "a\\b",
+            ".hidden",
+            "-lead",
+            "_lead",
+            "has space",
+            "é",
+            &"a".repeat(65),
+        ] {
+            assert!(!valid_tenant_name(bad), "{bad:?} should be invalid");
+        }
+    }
+
+    #[test]
+    fn tenant_dirs_namespace_and_default_is_the_root() {
+        let root = Path::new("/tmp/kb_root");
+        assert_eq!(tenant_dir(root, "acme"), root.join("acme"));
+        assert_eq!(tenant_dir(root, DEFAULT_TENANT), root);
+    }
+
+    #[test]
+    fn list_tenants_names_recoverable_subdirs_only() {
+        let root = temp_store_dir("tenants_list");
+        let kb = KnowledgeBase::empty();
+        // Two real tenant stores, out of sorted order.
+        let _ = LogStore::create(&tenant_dir(&root, "zeta"), &kb).unwrap();
+        let _ = LogStore::create(&tenant_dir(&root, "acme"), &kb).unwrap();
+        // The root's own (default-tenant) store must not be listed.
+        let _ = LogStore::create(&root, &kb).unwrap();
+        // A directory without a snapshot is not a recoverable store.
+        std::fs::create_dir_all(root.join("empty")).unwrap();
+        // A subdir named "default" is never a tenant namespace.
+        let _ = LogStore::create(&root.join(DEFAULT_TENANT), &kb).unwrap();
+        assert_eq!(list_tenants(&root), vec!["acme".to_string(), "zeta".to_string()]);
+        assert_eq!(list_tenants(Path::new("/nonexistent/kb_root")), Vec::<String>::new());
+        std::fs::remove_dir_all(&root).ok();
     }
 }

@@ -29,6 +29,9 @@
 //!      "store_commits":…,"store_compactions":…,"memo_entries":…}
 //! {"op":"shutdown"}
 //!   → {"ok":true,"op":"shutdown"}   (then: flush + exit)
+//! {"op":"optimize","tenant":"acme","task":"L1/15_relu"}
+//!   → the optimize reply with "tenant":"acme" echoed after "op",
+//!     served from tenant acme's private KB/store/memo (see §Tenancy)
 //! ```
 //!
 //! Malformed requests answer `{"ok":false,"error":"…"}` and the daemon
@@ -61,6 +64,47 @@
 //! for days cannot grow its memo without bound. Evictions are counted
 //! and reported by `stats`.
 //!
+//! # Tenancy
+//!
+//! Requests may carry an optional `"tenant":"<name>"` field. Absent, the
+//! request routes to the implicit **default tenant** — the core's own
+//! `kb`/`store`/`memo` fields, exactly the pre-tenancy daemon, so
+//! untagged traffic is byte-identical to `kernelblaster-serve-v1` as
+//! shipped (pinned by `tests/serve.rs` goldens). A named tenant gets a
+//! fully private lane: its own [`KnowledgeBase`], its own namespaced
+//! [`LogStore`] under `store/<tenant>/` ([`kbstore::tenant_dir`]), its
+//! own [`VerifyMemo`] (persisted as `store/<tenant>/memo.json`), and its
+//! own served/commit counters — so a tenant's transcript and stored
+//! bytes are those of a solo daemon run of its requests (the isolation
+//! property, pinned bit-level in `tests/serve.rs`). Replies to tagged
+//! requests echo `"tenant"` right after `"op"`; untagged replies are
+//! unchanged. `shutdown` is global and ignores the field's routing (it
+//! still answers the untagged golden ack).
+//!
+//! A first request from an unknown tenant cold-starts it: recovery from
+//! its store subdirectory if one exists, else a fresh KB — warm-started
+//! from the shared read-only [`ServeCore::base_kb`] via
+//! [`lifecycle::warm_start`] when one is configured. The base KB is
+//! one-way by construction: tenants clone from it, nothing ever writes
+//! back, so no tenant's evidence can leak to another through the prior.
+//!
+//! # Weighted-fair admission
+//!
+//! [`ServeCore::enqueue`] parses only the routing tenant and queues the
+//! raw line per tenant (FIFO within a tenant);
+//! [`ServeCore::admit_next`] admits the backlogged tenant with the
+//! smallest `(admitted + 1) / weight` — stride scheduling with
+//! [`ServeCore::quotas`] weights (absent tenants weigh 1), ties broken
+//! by tenant name. Admission order is therefore a **pure function of
+//! the enqueue sequence and the per-tenant admitted counts**: no clocks,
+//! no thread scheduling — so transcripts and per-tenant KB bytes stay
+//! worker-count and shard-count invariant, and a 3:1 quota admits 3:1
+//! within ±1 at every contended prefix. [`ServeCore::handle_line`] is
+//! `enqueue` + `admit_next` on a queue of one, which preserves the
+//! pre-tenancy request-reply behavior exactly; batch drivers (the serve
+//! experiment's trace replay) enqueue a whole backlog first and then
+//! drain, exercising real cross-tenant contention.
+//!
 //! The experiment harness replays synthetic arrival traces against
 //! [`ServeCore`] directly (no TCP) — see [`crate::experiments::serve`].
 
@@ -71,13 +115,14 @@ use crate::harness::memo::{MemoDelta, VerifyMemo};
 use crate::harness::VerifyCache;
 use crate::icrl::fleet::{self, FleetConfig, Store};
 use crate::icrl::{optimize_task_delta_verified, IcrlConfig, TaskRun};
-use crate::kb::lifecycle::{self, KbDelta};
+use crate::kb::lifecycle::{self, KbDelta, TransferPolicy};
 use crate::kb::persist::PersistError;
-use crate::kb::store::LogStore;
+use crate::kb::store::{self as kbstore, LogStore};
 use crate::kb::KnowledgeBase;
 use crate::tasks::{Suite, Task};
 use crate::util::json::{Json, JsonObj};
 use crate::util::stats::geomean;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -86,6 +131,10 @@ use std::sync::mpsc;
 
 /// Protocol version tag (reported by `stats`).
 pub const PROTOCOL: &str = "kernelblaster-serve-v1";
+
+/// Per-tenant memo file name inside a tenant's store directory
+/// (`store/<tenant>/memo.json`, loaded/saved only when `verify.staged`).
+const TENANT_MEMO_FILE: &str = "memo.json";
 
 /// The daemon's state and request handler, decoupled from TCP so golden
 /// tests and the serve experiment can drive it line-by-line in process.
@@ -110,9 +159,99 @@ pub struct ServeCore {
     /// Commit mode: task-order fleet pipeline (true, the default) vs
     /// completion-order streaming (false). See module docs.
     pub deterministic: bool,
+    /// Store root for tenant namespaces: named tenants persist under
+    /// `<store_dir>/<tenant>/` (module docs §Tenancy). `None` serves
+    /// named tenants purely in memory. Independent of [`Self::store`] —
+    /// the default tenant's store handle — because the default tenant's
+    /// files live at this root itself.
+    pub store_dir: Option<PathBuf>,
+    /// Shared read-only prior: new tenants warm-start from a clone of
+    /// this KB via [`lifecycle::warm_start`]; nothing ever writes back.
+    pub base_kb: Option<KnowledgeBase>,
+    /// Transfer policy applied when warm-starting tenants from
+    /// [`Self::base_kb`] (cross-arch decay/re-keying).
+    pub transfer: TransferPolicy,
+    /// Auto-compaction cadence for tenant stores (the tenant analog of
+    /// `LogStore::snapshot_every` on [`Self::store`]).
+    pub tenant_snapshot_every: u64,
+    /// Weighted-fair admission weights by tenant name; tenants not
+    /// listed (including `"default"`) weigh 1. See module docs
+    /// §Weighted-fair admission.
+    pub quotas: BTreeMap<String, u64>,
     served: u64,
     commits: u64,
     memo_evictions: u64,
+    /// Named-tenant lanes, keyed by tenant name ("default" never
+    /// appears — the default tenant lives in the fields above).
+    tenants: BTreeMap<String, TenantState>,
+    /// Requests admitted so far, by routing tenant (the scheduler's
+    /// only state besides the queues).
+    admitted: BTreeMap<String, u64>,
+    /// Per-tenant FIFO backlogs of raw request lines.
+    pending: BTreeMap<String, VecDeque<String>>,
+}
+
+/// One named tenant's private serving lane (module docs §Tenancy): the
+/// same state the pre-tenancy core kept globally, so a tenant's
+/// transcript is a solo daemon run of its requests.
+struct TenantState {
+    kb: KnowledgeBase,
+    store: Option<LogStore>,
+    memo: VerifyMemo,
+    served: u64,
+    commits: u64,
+    memo_evictions: u64,
+}
+
+/// Mutable borrows of one tenant's lane — either the core's own default
+/// fields or a [`TenantState`]'s — so every op handler has exactly one
+/// code path whatever the routing said.
+struct TenantView<'a> {
+    kb: &'a mut KnowledgeBase,
+    store: &'a mut Option<LogStore>,
+    memo: &'a mut VerifyMemo,
+    served: &'a mut u64,
+    commits: &'a mut u64,
+    memo_evictions: &'a mut u64,
+}
+
+/// Build the [`TenantView`] for `tenant` out of disjoint `ServeCore`
+/// field borrows (the default lane's fields and the `tenants` map are
+/// different fields, so the borrow checker sees no overlap). `None` and
+/// `Some("default")` are the default lane; any other name must already
+/// have a [`TenantState`] (callers run `ensure_tenant` first).
+#[allow(clippy::too_many_arguments)]
+fn view_of<'a>(
+    tenant: Option<&str>,
+    kb: &'a mut KnowledgeBase,
+    store: &'a mut Option<LogStore>,
+    memo: &'a mut VerifyMemo,
+    served: &'a mut u64,
+    commits: &'a mut u64,
+    memo_evictions: &'a mut u64,
+    tenants: &'a mut BTreeMap<String, TenantState>,
+) -> TenantView<'a> {
+    match tenant {
+        Some(name) if name != kbstore::DEFAULT_TENANT => {
+            let t = tenants.get_mut(name).expect("ensure_tenant ran before view_of");
+            TenantView {
+                kb: &mut t.kb,
+                store: &mut t.store,
+                memo: &mut t.memo,
+                served: &mut t.served,
+                commits: &mut t.commits,
+                memo_evictions: &mut t.memo_evictions,
+            }
+        }
+        _ => TenantView {
+            kb,
+            store,
+            memo,
+            served,
+            commits,
+            memo_evictions,
+        },
+    }
 }
 
 /// What one request line produced: reply lines (one JSON document per
@@ -303,25 +442,136 @@ impl ServeCore {
             memo: VerifyMemo::new(),
             memo_path: None,
             deterministic: true,
+            store_dir: None,
+            base_kb: None,
+            transfer: TransferPolicy::default(),
+            tenant_snapshot_every: 64,
+            quotas: BTreeMap::new(),
             served: 0,
             commits: 0,
             memo_evictions: 0,
+            tenants: BTreeMap::new(),
+            admitted: BTreeMap::new(),
+            pending: BTreeMap::new(),
         }
     }
 
-    /// Tasks served so far (monotone; also the default-seed counter).
+    /// Default-tenant tasks served so far (monotone; also the default
+    /// tenant's default-seed counter). Named tenants count separately —
+    /// see [`Self::total_served`].
     pub fn served(&self) -> u64 {
         self.served
     }
 
-    /// Deltas committed into the live KB so far.
+    /// Deltas committed into the default tenant's live KB so far.
     pub fn commits(&self) -> u64 {
         self.commits
     }
 
+    /// Tasks served across the default tenant and every named tenant.
+    pub fn total_served(&self) -> u64 {
+        self.served + self.tenants.values().map(|t| t.served).sum::<u64>()
+    }
+
+    /// Deltas committed across the default tenant and every named
+    /// tenant.
+    pub fn total_commits(&self) -> u64 {
+        self.commits + self.tenants.values().map(|t| t.commits).sum::<u64>()
+    }
+
+    /// Names of the named tenants materialized so far, sorted.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// A tenant's live KB (`"default"` = the core's own), if it exists.
+    pub fn tenant_kb(&self, name: &str) -> Option<&KnowledgeBase> {
+        if name == kbstore::DEFAULT_TENANT {
+            Some(&self.kb)
+        } else {
+            self.tenants.get(name).map(|t| &t.kb)
+        }
+    }
+
+    /// Requests admitted so far for `tenant` (the scheduler's counter —
+    /// every request line counts, including error replies).
+    pub fn admitted_count(&self, tenant: &str) -> u64 {
+        self.admitted.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Request lines enqueued and not yet admitted, across all tenants.
+    pub fn pending_requests(&self) -> usize {
+        self.pending.values().map(|q| q.len()).sum()
+    }
+
     /// Handle one request line, mutating the live state. Never panics
     /// on client input — malformed requests produce an error line.
+    ///
+    /// Equivalent to [`Self::enqueue`] + [`Self::admit_next`] on a
+    /// queue of one (which it is, literally): the TCP loop answers each
+    /// line before reading the next, so single-connection traffic is
+    /// FIFO exactly as before tenancy.
     pub fn handle_line(&mut self, line: &str) -> ServeReply {
+        self.enqueue(line);
+        self.admit_next()
+            .map(|(_, reply)| reply)
+            .expect("enqueue always leaves one admissible request")
+    }
+
+    /// Queue one raw request line on its routing tenant's FIFO backlog
+    /// without processing it. The routing key is the request's `tenant`
+    /// field when it is a valid tenant name; everything else (absent
+    /// field, invalid name, malformed JSON) routes through the default
+    /// tenant's queue so its reply — error lines included — still comes
+    /// out of [`Self::admit_next`] in a deterministic position.
+    pub fn enqueue(&mut self, line: &str) {
+        let tenant = Json::parse(line.trim())
+            .ok()
+            .and_then(|j| j.get("tenant").and_then(Json::as_str).map(String::from))
+            .filter(|t| kbstore::valid_tenant_name(t))
+            .unwrap_or_else(|| kbstore::DEFAULT_TENANT.to_string());
+        self.pending.entry(tenant).or_default().push_back(line.to_string());
+    }
+
+    /// Admit and process the next request under weighted-fair stride
+    /// scheduling (module docs §Weighted-fair admission): among tenants
+    /// with a backlog, pick the one minimizing `(admitted + 1) / weight`
+    /// (compared exactly by cross-multiplication — no floats), breaking
+    /// ties by tenant name; pop its oldest line, bump its admitted
+    /// count, dispatch. Returns the routing tenant and the reply, or
+    /// `None` when every queue is empty. A pure function of the enqueue
+    /// sequence and the admitted counts — no clocks, no randomness.
+    pub fn admit_next(&mut self) -> Option<(String, ServeReply)> {
+        let mut chosen: Option<(String, u128, u128)> = None;
+        for (name, q) in &self.pending {
+            if q.is_empty() {
+                continue;
+            }
+            let w = self.quotas.get(name).copied().unwrap_or(1).max(1) as u128;
+            let a1 = (self.admitted.get(name).copied().unwrap_or(0) + 1) as u128;
+            let better = match &chosen {
+                None => true,
+                // (a1/w) < (ca1/cw) ⟺ a1·cw < ca1·w; on a tie the
+                // earlier (lexicographically smaller) tenant stands.
+                Some((_, ca1, cw)) => a1 * cw < ca1 * w,
+            };
+            if better {
+                chosen = Some((name.clone(), a1, w));
+            }
+        }
+        let (tenant, _, _) = chosen?;
+        let line = self
+            .pending
+            .get_mut(&tenant)
+            .and_then(VecDeque::pop_front)
+            .expect("chosen tenant has a backlog");
+        *self.admitted.entry(tenant.clone()).or_insert(0) += 1;
+        let reply = self.dispatch(&line);
+        Some((tenant, reply))
+    }
+
+    /// Parse and execute one admitted request line.
+    fn dispatch(&mut self, line: &str) -> ServeReply {
         let reply_err = |msg: &str| ServeReply {
             lines: vec![err_line(msg)],
             shutdown: false,
@@ -334,11 +584,32 @@ impl ServeCore {
             Ok(j) => j,
             Err(e) => return reply_err(&format!("bad json: {e}")),
         };
-        match req.get("op").and_then(Json::as_str) {
-            Some("optimize") => self.op_optimize(&req),
-            Some("batch") => self.op_batch(&req),
+        // The execution tenant: absent = default (untagged replies,
+        // byte-identical to pre-tenancy); a bad name is an error even
+        // though `enqueue` routed the line through the default queue.
+        let tenant: Option<String> = match req.get("tenant") {
+            None => None,
+            Some(Json::Str(t)) if kbstore::valid_tenant_name(t) => Some(t.clone()),
+            Some(Json::Str(t)) => return reply_err(&format!("invalid tenant name '{t}'")),
+            Some(_) => return reply_err("tenant must be a string"),
+        };
+        let op = req.get("op").and_then(Json::as_str);
+        // Materialize the tenant's lane only for ops that use it —
+        // `shutdown` is global and must not cold-start a store.
+        if matches!(op, Some("optimize" | "batch" | "stats")) {
+            if let Some(name) = tenant.as_deref() {
+                if name != kbstore::DEFAULT_TENANT {
+                    if let Err(e) = self.ensure_tenant(name) {
+                        return reply_err(&e);
+                    }
+                }
+            }
+        }
+        match op {
+            Some("optimize") => self.op_optimize(&req, tenant.as_deref()),
+            Some("batch") => self.op_batch(&req, tenant.as_deref()),
             Some("stats") => ServeReply {
-                lines: vec![self.stats_line()],
+                lines: vec![self.stats_line(tenant.as_deref())],
                 shutdown: false,
             },
             Some("shutdown") => {
@@ -357,13 +628,78 @@ impl ServeCore {
         }
     }
 
-    /// Apply the post-request memo cap (no-op when unbounded).
-    fn cap_memo(&mut self) {
-        let max = self.cfg.verify.memo_max_entries;
-        self.memo_evictions += self.memo.enforce_cap(max) as u64;
+    /// Materialize a named tenant's lane if it does not exist yet:
+    /// recover its namespaced store when one is on disk (recovery wins
+    /// over warm-start, same rule as the CLI's root store), else a
+    /// fresh store seeded from the base-KB warm-start (or an empty KB
+    /// when no base is configured).
+    fn ensure_tenant(&mut self, name: &str) -> Result<(), String> {
+        if self.tenants.contains_key(name) {
+            return Ok(());
+        }
+        let mut kb = match &self.base_kb {
+            Some(base) => {
+                lifecycle::warm_start(std::slice::from_ref(base), &self.arch, &self.transfer)
+            }
+            None => KnowledgeBase::empty(),
+        };
+        let mut store = None;
+        let mut memo = VerifyMemo::new();
+        if let Some(root) = &self.store_dir {
+            let dir = kbstore::tenant_dir(root, name);
+            let mut s = if LogStore::exists(&dir) {
+                let (recovered, s) = LogStore::recover(&dir)
+                    .map_err(|e| format!("tenant '{name}' store recovery failed: {e}"))?;
+                kb = recovered;
+                s
+            } else {
+                LogStore::create_sharded(&dir, &kb, self.fleet.shards.max(1))
+                    .map_err(|e| format!("tenant '{name}' store creation failed: {e}"))?
+            };
+            s.snapshot_every = self.tenant_snapshot_every;
+            store = Some(s);
+            if self.cfg.verify.staged {
+                let mp = dir.join(TENANT_MEMO_FILE);
+                if mp.is_file() {
+                    memo = crate::harness::memo::load_or_cold(&mp);
+                }
+            }
+        }
+        self.tenants.insert(
+            name.to_string(),
+            TenantState {
+                kb,
+                store,
+                memo,
+                served: 0,
+                commits: 0,
+                memo_evictions: 0,
+            },
+        );
+        Ok(())
     }
 
-    fn op_optimize(&mut self, req: &Json) -> ServeReply {
+    /// Recover every tenant with a store subdirectory under
+    /// [`Self::store_dir`] (sorted, so recovery order is deterministic).
+    /// Returns how many tenants were materialized. The CLI calls this at
+    /// boot so a restarted daemon reports every tenant in `stats`
+    /// immediately; lazy [`Self::ensure_tenant`] recovery on first
+    /// request would be equivalent for correctness.
+    pub fn recover_tenants(&mut self) -> Result<usize, String> {
+        let Some(root) = self.store_dir.clone() else {
+            return Ok(0);
+        };
+        let mut n = 0;
+        for name in kbstore::list_tenants(&root) {
+            if !self.tenants.contains_key(&name) {
+                self.ensure_tenant(&name)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    fn op_optimize(&mut self, req: &Json, tenant: Option<&str>) -> ServeReply {
         let reply_err = |msg: &str| ServeReply {
             lines: vec![err_line(msg)],
             shutdown: false,
@@ -371,55 +707,60 @@ impl ServeCore {
         let Some(id) = req.get("task").and_then(Json::as_str) else {
             return reply_err("optimize: missing task");
         };
-        let Some(task) = self.suite.by_id(id) else {
+        let ServeCore {
+            suite,
+            arch,
+            cfg,
+            kb,
+            store,
+            memo,
+            served,
+            commits,
+            memo_evictions,
+            tenants,
+            ..
+        } = self;
+        let Some(task) = suite.by_id(id) else {
             return reply_err(&format!("optimize: unknown task '{id}'"));
         };
+        let v = view_of(tenant, kb, store, memo, served, commits, memo_evictions, tenants);
+        // The default seed is the *tenant's* served counter, so each
+        // tenant's transcript is a solo run of its request sequence.
         let seed = req
             .get("seed")
             .and_then(Json::as_f64)
             .map(|s| s as u64)
-            .unwrap_or(self.served);
-        let memo_in = self.cfg.verify.staged.then_some(&self.memo);
+            .unwrap_or(*v.served);
+        let memo_in = cfg.verify.staged.then_some(&*v.memo);
         let mut cache = VerifyCache::new();
-        let (run, delta, mdelta, _tiers) = optimize_task_delta_verified(
-            task,
-            &self.arch,
-            &self.kb,
-            &self.cfg,
-            seed,
-            &mut cache,
-            memo_in,
-        );
+        let (run, delta, mdelta, _tiers) =
+            optimize_task_delta_verified(task, arch, v.kb, cfg, seed, &mut cache, memo_in);
         let mut seen_lines = Vec::new();
-        if let Err(e) = commit_delta(
-            &mut self.kb,
-            &mut self.store,
-            &mut self.memo,
-            &mut self.commits,
-            delta,
-            &mdelta,
-            &mut seen_lines,
-        ) {
+        if let Err(e) = commit_delta(v.kb, v.store, v.memo, v.commits, delta, &mdelta, &mut seen_lines)
+        {
             return reply_err(&format!("store commit failed: {e}"));
         }
-        self.served += 1;
-        self.cap_memo();
+        *v.served += 1;
+        *v.memo_evictions += v.memo.enforce_cap(cfg.verify.memo_max_entries) as u64;
         let mut o = JsonObj::new();
         o.set("ok", true);
         o.set("op", "optimize");
+        if let Some(t) = tenant {
+            o.set("tenant", t);
+        }
         o.set("task", run.task_id.as_str());
         o.set("seed", seed);
         o.set("valid", run.valid);
         o.set("speedup_vs_naive", round3(run.speedup_vs_naive()));
         o.set("steps", run.steps.len());
-        o.set("commits", self.commits);
+        o.set("commits", *v.commits);
         ServeReply {
             lines: vec![Json::Obj(o).to_string_compact()],
             shutdown: false,
         }
     }
 
-    fn op_batch(&mut self, req: &Json) -> ServeReply {
+    fn op_batch(&mut self, req: &Json, tenant: Option<&str>) -> ServeReply {
         let reply_err = |msg: &str| ServeReply {
             lines: vec![err_line(msg)],
             shutdown: false,
@@ -431,8 +772,9 @@ impl ServeCore {
             return reply_err("batch: tasks array is empty");
         }
         // Field-level split borrow: the task list borrows `suite` while
-        // the batch runners mutate `kb`/`store`/`memo`/`commits` — all
-        // disjoint fields of the core.
+        // the batch runners mutate the tenant view's
+        // `kb`/`store`/`memo`/`commits` — all disjoint fields of the
+        // core (a named tenant's live in the `tenants` map).
         let ServeCore {
             suite,
             arch,
@@ -444,8 +786,11 @@ impl ServeCore {
             deterministic,
             served,
             commits,
+            memo_evictions,
+            tenants,
             ..
         } = self;
+        let v = view_of(tenant, kb, store, memo, served, commits, memo_evictions, tenants);
         let mut tasks: Vec<&Task> = Vec::with_capacity(ids.len());
         for idj in ids {
             let Some(id) = idj.as_str() else {
@@ -456,34 +801,35 @@ impl ServeCore {
                 None => return reply_err(&format!("batch: unknown task '{id}'")),
             }
         }
-        // Seeds derive from the monotone served counter, so a repeated
-        // request explores fresh trajectories while the whole transcript
-        // stays a pure function of the request sequence.
+        // Seeds derive from the tenant's monotone served counter, so a
+        // repeated request explores fresh trajectories while each
+        // tenant's transcript stays a pure function of its own request
+        // sequence (solo-run equivalence).
         let req_cfg = IcrlConfig {
-            seed: cfg.seed.wrapping_add(*served),
+            seed: cfg.seed.wrapping_add(*v.served),
             ..cfg.clone()
         };
         let n = tasks.len();
         let result = if *deterministic {
-            batch_deterministic(&tasks, arch, &req_cfg, fleet, kb, store, memo, commits)
+            batch_deterministic(&tasks, arch, &req_cfg, fleet, v.kb, v.store, v.memo, v.commits)
         } else {
             batch_throughput(
                 &tasks,
                 arch,
                 &req_cfg,
                 fleet.workers,
-                kb,
-                store,
-                memo,
-                commits,
+                v.kb,
+                v.store,
+                v.memo,
+                v.commits,
             )
         };
         let (mut lines, runs) = match result {
-            Ok(v) => v,
+            Ok(r) => r,
             Err(e) => return reply_err(&format!("store commit failed: {e}")),
         };
-        self.served += n as u64;
-        self.cap_memo();
+        *v.served += n as u64;
+        *v.memo_evictions += v.memo.enforce_cap(cfg.verify.memo_max_entries) as u64;
         let valid: Vec<f64> = runs
             .iter()
             .filter(|r| r.valid)
@@ -492,10 +838,13 @@ impl ServeCore {
         let mut s = JsonObj::new();
         s.set("ok", true);
         s.set("op", "batch");
+        if let Some(t) = tenant {
+            s.set("tenant", t);
+        }
         s.set("tasks", n);
         s.set("valid", valid.len());
         s.set("geomean_vs_naive", round3(geomean(&valid)));
-        s.set("commits", self.commits);
+        s.set("commits", *v.commits);
         lines.push(Json::Obj(s).to_string_compact());
         ServeReply {
             lines,
@@ -503,19 +852,41 @@ impl ServeCore {
         }
     }
 
-    fn stats_line(&self) -> String {
+    fn stats_line(&self, tenant: Option<&str>) -> String {
+        // The default lane's counters, or a named tenant's. `stats`
+        // for a tenant that has never served reports its cold lane
+        // (dispatch materialized it before calling here).
+        let (kb, memo, served, commits, memo_evictions, store) = match tenant {
+            Some(name) if name != kbstore::DEFAULT_TENANT => {
+                let t = &self.tenants[name];
+                (&t.kb, &t.memo, t.served, t.commits, t.memo_evictions, t.store.as_ref())
+            }
+            _ => (
+                &self.kb,
+                &self.memo,
+                self.served,
+                self.commits,
+                self.memo_evictions,
+                self.store.as_ref(),
+            ),
+        };
         let mut o = JsonObj::new();
         o.set("ok", true);
         o.set("op", "stats");
+        if let Some(t) = tenant {
+            o.set("tenant", t);
+            o.set("admitted", self.admitted_count(t));
+            o.set("tenants", self.tenants.len());
+        }
         o.set("protocol", PROTOCOL);
         o.set("deterministic", self.deterministic);
-        o.set("served", self.served);
-        o.set("commits", self.commits);
-        o.set("kb_states", self.kb.states.len());
-        o.set("kb_updates", self.kb.updates);
-        o.set("memo_entries", self.memo.len());
-        o.set("memo_evictions", self.memo_evictions);
-        if let Some(store) = &self.store {
+        o.set("served", served);
+        o.set("commits", commits);
+        o.set("kb_states", kb.states.len());
+        o.set("kb_updates", kb.updates);
+        o.set("memo_entries", memo.len());
+        o.set("memo_evictions", memo_evictions);
+        if let Some(store) = store {
             let st = store.stats();
             o.set("store_commits", st.commits);
             o.set("store_compactions", st.compactions);
@@ -526,9 +897,12 @@ impl ServeCore {
         Json::Obj(o).to_string_compact()
     }
 
-    /// Shutdown persistence: snapshot the store (compacting the
-    /// journal), write the whole-file KB if a save path is set, and
-    /// save the memo if a memo path is set.
+    /// Shutdown persistence: snapshot the default store (compacting the
+    /// journal), write the whole-file KB if a save path is set, save
+    /// the memo if a memo path is set — then snapshot every named
+    /// tenant's store and persist its memo beside it. `save_path` and
+    /// `memo_path` are default-tenant artifacts only; named tenants'
+    /// durable state is their namespaced store directory.
     pub fn flush(&mut self) -> Result<(), String> {
         if let Some(store) = self.store.as_mut() {
             store
@@ -540,6 +914,20 @@ impl ServeCore {
         }
         if let Some(p) = &self.memo_path {
             crate::harness::memo::save(&self.memo, p).map_err(|e| format!("save memo: {e}"))?;
+        }
+        for (name, t) in &mut self.tenants {
+            if let Some(store) = t.store.as_mut() {
+                store
+                    .snapshot(&t.kb)
+                    .map_err(|e| format!("tenant '{name}' store snapshot: {e}"))?;
+            }
+            if self.cfg.verify.staged {
+                if let Some(root) = &self.store_dir {
+                    let mp = kbstore::tenant_dir(root, name).join(TENANT_MEMO_FILE);
+                    crate::harness::memo::save(&t.memo, &mp)
+                        .map_err(|e| format!("tenant '{name}' memo: {e}"))?;
+                }
+            }
         }
         Ok(())
     }
@@ -690,5 +1078,123 @@ mod tests {
             Json::parse(&r.lines[0]).unwrap().get("op").and_then(Json::as_str),
             Some("shutdown")
         );
+    }
+
+    #[test]
+    fn tenant_lanes_are_private_and_replies_are_tagged() {
+        let mut core = quick_core(true);
+        // Tenant and default lanes both start their seed counters at 0.
+        let rt = core.handle_line(r#"{"op":"optimize","tenant":"acme","task":"L1/15_relu"}"#);
+        let rd = core.handle_line(r#"{"op":"optimize","task":"L1/15_relu"}"#);
+        let jt = Json::parse(&rt.lines[0]).unwrap();
+        let jd = Json::parse(&rd.lines[0]).unwrap();
+        assert_eq!(jt.get("tenant").and_then(Json::as_str), Some("acme"));
+        assert!(jd.get("tenant").is_none(), "untagged replies stay untagged");
+        assert_eq!(jt.get("seed").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(jd.get("seed").and_then(Json::as_f64), Some(0.0));
+        // Identical request, identical lane state → identical result
+        // fields (the in-memory isolation property).
+        for key in ["valid", "speedup_vs_naive", "steps", "commits"] {
+            assert_eq!(jt.get(key), jd.get(key), "{key}");
+        }
+        assert_eq!(core.served(), 1, "default lane counts only untagged");
+        assert_eq!(core.total_served(), 2);
+        assert_eq!(core.tenant_names(), vec!["acme".to_string()]);
+        assert!(!core.tenant_kb("acme").unwrap().states.is_empty());
+        // Tagged stats report the tenant's own counters.
+        let s = core.handle_line(r#"{"op":"stats","tenant":"acme"}"#);
+        let js = Json::parse(&s.lines[0]).unwrap();
+        assert_eq!(js.get("tenant").and_then(Json::as_str), Some("acme"));
+        assert_eq!(js.get("served").and_then(Json::as_usize), Some(1));
+        // "default" is an explicit spelling of the default lane: same
+        // counters, tagged reply, no new tenant lane.
+        let s = core.handle_line(r#"{"op":"stats","tenant":"default"}"#);
+        let js = Json::parse(&s.lines[0]).unwrap();
+        assert_eq!(js.get("tenant").and_then(Json::as_str), Some("default"));
+        assert_eq!(js.get("served").and_then(Json::as_usize), Some(1));
+        assert_eq!(core.tenant_names(), vec!["acme".to_string()]);
+    }
+
+    #[test]
+    fn bad_tenant_fields_error_and_shutdown_ignores_tenant() {
+        let mut core = quick_core(true);
+        let r = core.handle_line(r#"{"op":"optimize","tenant":"a/b","task":"L1/15_relu"}"#);
+        assert_eq!(r.lines[0], r#"{"ok":false,"error":"invalid tenant name 'a/b'"}"#);
+        let r = core.handle_line(r#"{"op":"optimize","tenant":7,"task":"L1/15_relu"}"#);
+        assert_eq!(r.lines[0], r#"{"ok":false,"error":"tenant must be a string"}"#);
+        assert_eq!(core.total_served(), 0);
+        // shutdown is global: tagged or not, the ack is the untagged
+        // golden and no tenant lane is materialized.
+        let r = core.handle_line(r#"{"op":"shutdown","tenant":"acme"}"#);
+        assert!(r.shutdown);
+        assert_eq!(r.lines[0], r#"{"ok":true,"op":"shutdown"}"#);
+        assert!(core.tenant_names().is_empty());
+    }
+
+    #[test]
+    fn base_kb_warm_starts_tenants_one_way() {
+        let mut core = quick_core(true);
+        let base = KnowledgeBase::seed_priors();
+        let base_states = base.states.len();
+        core.base_kb = Some(base);
+        let _ = core.handle_line(r#"{"op":"stats","tenant":"acme"}"#);
+        let warm = core.tenant_kb("acme").unwrap();
+        assert!(warm.states.len() >= base_states, "warm-start carries the priors");
+        assert!(
+            warm.lineage.iter().any(|l| l.starts_with("warm_start(")),
+            "lineage records the warm start"
+        );
+        // One-way: serving the tenant never mutates the shared base.
+        let _ = core.handle_line(r#"{"op":"optimize","tenant":"acme","task":"L1/15_relu"}"#);
+        assert_eq!(core.base_kb.as_ref().unwrap().total_attempts(), 0);
+        // The default lane is never warm-started retroactively.
+        assert_eq!(core.kb.states.len(), 0);
+    }
+
+    #[test]
+    fn admission_is_weighted_fair_stride_scheduling() {
+        let mut core = quick_core(true);
+        core.quotas.insert("a".into(), 3);
+        core.quotas.insert("b".into(), 1);
+        // Enqueue b's backlog first: admission order must come from the
+        // quota arithmetic, not arrival order.
+        for _ in 0..3 {
+            core.enqueue(r#"{"op":"stats","tenant":"b"}"#);
+        }
+        for _ in 0..9 {
+            core.enqueue(r#"{"op":"stats","tenant":"a"}"#);
+        }
+        assert_eq!(core.pending_requests(), 12);
+        let mut order = String::new();
+        while let Some((tenant, reply)) = core.admit_next() {
+            assert!(!reply.shutdown);
+            order.push_str(&tenant);
+        }
+        assert_eq!(order, "aaabaaabaaab", "stride schedule at 3:1");
+        assert_eq!(core.pending_requests(), 0);
+        assert_eq!(core.admitted_count("a"), 9);
+        assert_eq!(core.admitted_count("b"), 3);
+        // Prefix fairness: at every contended prefix the admitted split
+        // tracks 3:1 within ±1.
+        let mut a = 0f64;
+        for (k, c) in order.chars().enumerate() {
+            if c == 'a' {
+                a += 1.0;
+            }
+            let expect = (k + 1) as f64 * 0.75;
+            assert!((a - expect).abs() <= 1.0, "prefix {}: {a} vs {expect}", k + 1);
+        }
+        // Unlisted tenants weigh 1: equal weights alternate, tie to the
+        // lexicographically smaller name.
+        let mut core = quick_core(true);
+        core.enqueue(r#"{"op":"stats","tenant":"zeta"}"#);
+        core.enqueue(r#"{"op":"stats","tenant":"acme"}"#);
+        core.enqueue(r#"{"op":"stats","tenant":"zeta"}"#);
+        core.enqueue(r#"{"op":"stats","tenant":"acme"}"#);
+        let mut order = Vec::new();
+        while let Some((tenant, _)) = core.admit_next() {
+            order.push(tenant);
+        }
+        assert_eq!(order, ["acme", "zeta", "acme", "zeta"]);
     }
 }

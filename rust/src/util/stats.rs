@@ -66,6 +66,25 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
+/// Nearest-rank percentile over integer samples (queue-sim tick counts).
+/// `p` in [0, 1]. Returns NaN for empty input per the module convention —
+/// an empty latency series must surface as NaN, not a fabricated 0.
+///
+/// This is the shared home of the helper the queue simulator
+/// (`experiments::simqueue`) and the serve/fleet benchmark reports use;
+/// it intentionally differs from [`percentile`] (type-7 linear
+/// interpolation, `p` in [0, 100]) — tick latencies are discrete, so the
+/// reported percentile is always an observed sample.
+pub fn percentile_nearest_rank(xs: &[u64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    v[idx] as f64
+}
+
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -241,6 +260,23 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
         assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_is_an_observed_sample() {
+        let xs = [5u64, 1, 9, 3];
+        assert_eq!(percentile_nearest_rank(&xs, 0.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 1.0), 9.0);
+        // rank = (4-1) * 0.5 = 1.5 → rounds to index 2 of [1,3,5,9] = 5.
+        assert_eq!(percentile_nearest_rank(&xs, 0.5), 5.0);
+        // p95 of a small sample is the max (rank 2.85 → index 3).
+        assert_eq!(percentile_nearest_rank(&xs, 0.95), 9.0);
+        assert_eq!(percentile_nearest_rank(&[7], 0.5), 7.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_empty_is_nan() {
+        assert!(percentile_nearest_rank(&[], 0.5).is_nan());
     }
 
     #[test]

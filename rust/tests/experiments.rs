@@ -55,7 +55,11 @@ const BENCH_EXPERIMENTS: &[(&str, &str, &[&str])] = &[
         "kernelblaster-bench-skills-v1",
         &["gpu", "tasks", "seeds", "skills_installed", "arms"],
     ),
-    ("serve", "kernelblaster-bench-serve-v1", &["gpu", "tasks", "workers", "traces"]),
+    (
+        "serve",
+        "kernelblaster-bench-serve-v2",
+        &["gpu", "tasks", "workers", "tenants", "traces"],
+    ),
 ];
 
 /// Registry entries that only produce a [`Report`] (no artifact).
@@ -150,13 +154,22 @@ fn serve_artifact_keeps_its_schema_and_covers_three_traces() {
         assert_bench_schema(name, format, keys);
     }
     // The §Serve acceptance surface: three trace shapes, each carrying
-    // the deterministic queue-latency percentiles and store counters.
+    // the deterministic queue-latency percentiles, store counters, the
+    // per-tenant rows, and the two cross-tenant verdicts.
     let ctx = Ctx::new(true, 2);
     let dir = std::env::temp_dir().join("kb_exp_smoke_serve_traces");
     std::fs::create_dir_all(&dir).unwrap();
     let out = dir.join("BENCH_serve.json");
     let _ = experiments::serve::run_with_output(&ctx, &out);
     let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    // Root tenant declarations: name + weight + task level per tenant.
+    let tenants = j.get("tenants").and_then(Json::as_arr).unwrap();
+    assert_eq!(tenants.len(), 2);
+    for t in tenants {
+        assert!(t.get("tenant").and_then(Json::as_str).is_some());
+        assert!(t.get("weight").and_then(Json::as_usize).unwrap() > 0);
+        assert!(t.get("level").and_then(Json::as_str).is_some());
+    }
     let traces = j.get("traces").and_then(Json::as_arr).unwrap();
     let names: Vec<_> = traces
         .iter()
@@ -175,9 +188,56 @@ fn serve_artifact_keeps_its_schema_and_covers_three_traces() {
             "queue_wait_p95_ticks",
             "sojourn_p50_ticks",
             "sojourn_p95_ticks",
+            "fairness_ratio",
+            "isolation_ok",
         ] {
             assert!(t.get(key).is_some(), "trace lost key '{key}'");
         }
+        // The isolation verdict must actually PASS on every trace —
+        // a tenant's KB bytes equal a solo replay's.
+        assert_eq!(
+            t.get("isolation_ok").and_then(Json::as_bool),
+            Some(true),
+            "trace '{}' failed tenant isolation",
+            t.get("name").and_then(Json::as_str).unwrap()
+        );
+        // Fairness is min/max over admitted shares: in (0, 1] whenever
+        // the trace had contention, never above 1.
+        let fairness = t.get("fairness_ratio").and_then(Json::as_f64).unwrap();
+        assert!(
+            fairness.is_nan() || (0.0..=1.0).contains(&fairness),
+            "fairness ratio {fairness} out of range"
+        );
+        // Per-tenant rows: one per declared tenant, each with its own
+        // admitted count (the fairness input — admitted, not arrived)
+        // and queue percentiles.
+        let per_tenant = t.get("per_tenant").and_then(Json::as_arr).unwrap();
+        assert_eq!(per_tenant.len(), 2);
+        let mut total_admitted = 0usize;
+        for row in per_tenant {
+            total_admitted += row.get("admitted").and_then(Json::as_usize).unwrap();
+            for key in [
+                "tenant",
+                "weight",
+                "arrivals",
+                "valid",
+                "geomean_vs_naive",
+                "commits",
+                "kb_states",
+                "tasks_per_min",
+                "queue_wait_p50_ticks",
+                "queue_wait_p95_ticks",
+                "sojourn_p50_ticks",
+                "sojourn_p95_ticks",
+            ] {
+                assert!(row.get(key).is_some(), "per-tenant row lost key '{key}'");
+            }
+        }
+        // Every arrival was admitted by the drain.
+        assert_eq!(
+            total_admitted,
+            t.get("arrivals").and_then(Json::as_usize).unwrap()
+        );
     }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -7,7 +7,11 @@
 //! 2. worker-count invariance survives the store — workers ∈ {1, 2, 8}
 //!    through a compacting `LogStore` recover to byte-identical KBs;
 //! 3. serving crash recovery — a torn journal append under the daemon's
-//!    request loop recovers the KB at the last durable commit.
+//!    request loop recovers the KB at the last durable commit;
+//! 4. tenant-namespaced crash recovery — a torn record in one tenant's
+//!    journal loses exactly that tenant's in-flight commit (the other
+//!    tenant recovers in full), and a deleted tenant subdirectory
+//!    cold-starts only that tenant on the next boot.
 
 use kernelblaster::gpu::GpuArch;
 use kernelblaster::harness::HarnessConfig;
@@ -212,5 +216,85 @@ fn serve_loop_recovers_to_last_durable_commit_after_torn_append() {
     assert!(r.lines[0].contains("\"op\":\"optimize\""));
     let (re_recovered, _) = LogStore::recover(&store_dir).unwrap();
     assert_eq!(re_recovered, resumed.kb, "post-recovery commits must be durable");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tenant_journals_tear_and_cold_start_independently() {
+    let dir = temp_dir("tenants");
+    let root = dir.join("store");
+    let fleet_cfg = FleetConfig {
+        workers: 2,
+        epoch_size: 2,
+        ..Default::default()
+    };
+    let mut core = ServeCore::new(
+        GpuArch::h100(),
+        quick_cfg(63),
+        fleet_cfg.clone(),
+        KnowledgeBase::empty(),
+    );
+    core.store_dir = Some(root.clone());
+    let r = core.handle_line(r#"{"op":"optimize","tenant":"acme","task":"L1/12_softmax"}"#);
+    assert!(r.lines[0].contains("\"ok\":true"), "{}", r.lines[0]);
+    let acme_after_first = core.tenant_kb("acme").unwrap().clone();
+    let _ = core.handle_line(r#"{"op":"optimize","tenant":"acme","task":"L1/15_relu"}"#);
+    let _ = core.handle_line(r#"{"op":"optimize","tenant":"zeta","task":"L1/01_matmul_square"}"#);
+    let zeta_live = core.tenant_kb("zeta").unwrap().clone();
+    assert_ne!(
+        core.tenant_kb("acme").unwrap(),
+        &acme_after_first,
+        "second request must have grown acme's KB"
+    );
+
+    // Crash mid-append of acme's second record: chop its journal tail.
+    // Zeta's journal lives in its own subdirectory and is not touched.
+    let journal = root.join("acme").join("journal.log");
+    let mut bytes = std::fs::read(&journal).unwrap();
+    bytes.truncate(bytes.len() - 40);
+    std::fs::write(&journal, &bytes).unwrap();
+
+    // The torn tail costs acme exactly its in-flight commit; zeta
+    // recovers in full.
+    let (acme_rec, astore) = LogStore::recover(&root.join("acme")).unwrap();
+    assert_eq!(acme_rec, acme_after_first, "acme must recover its first commit exactly");
+    assert_eq!(astore.stats().last_seq, 1);
+    let (zeta_rec, _) = LogStore::recover(&root.join("zeta")).unwrap();
+    assert_eq!(zeta_rec, zeta_live, "zeta's namespace must be unaffected");
+
+    // Reboot: recover_tenants finds both lanes; acme resumes from its
+    // last durable commit, zeta from its full state.
+    let mut rebooted = ServeCore::new(
+        GpuArch::h100(),
+        quick_cfg(63),
+        fleet_cfg.clone(),
+        KnowledgeBase::empty(),
+    );
+    rebooted.store_dir = Some(root.clone());
+    assert_eq!(rebooted.recover_tenants().unwrap(), 2);
+    assert_eq!(rebooted.tenant_kb("acme").unwrap(), &acme_after_first);
+    assert_eq!(rebooted.tenant_kb("zeta").unwrap(), &zeta_live);
+
+    // Deleting one tenant's subdirectory cold-starts ONLY that tenant:
+    // the next boot recovers acme alone, and fresh zeta traffic starts
+    // from an empty KB without disturbing acme's recovered lane.
+    std::fs::remove_dir_all(root.join("zeta")).unwrap();
+    let mut cold = ServeCore::new(
+        GpuArch::h100(),
+        quick_cfg(63),
+        fleet_cfg,
+        KnowledgeBase::empty(),
+    );
+    cold.store_dir = Some(root.clone());
+    assert_eq!(cold.recover_tenants().unwrap(), 1);
+    assert_eq!(cold.tenant_kb("acme").unwrap(), &acme_after_first);
+    assert!(cold.tenant_kb("zeta").is_none(), "deleted tenant must not resurrect");
+    let r = cold.handle_line(r#"{"op":"optimize","tenant":"zeta","task":"L1/01_matmul_square"}"#);
+    assert!(r.lines[0].contains("\"ok\":true"), "{}", r.lines[0]);
+    // The cold lane replays the original first request bit-for-bit
+    // (per-tenant served counters seed from zero again)...
+    assert_eq!(cold.tenant_kb("zeta").unwrap(), &zeta_live);
+    // ...and cold-starting zeta never touches acme.
+    assert_eq!(cold.tenant_kb("acme").unwrap(), &acme_after_first);
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -2,8 +2,10 @@
 # Serve-daemon smoke (CI): boot `kernelblaster serve` on loopback with a
 # log-structured store, drive optimize / batch / stats / shutdown over
 # the TCP line protocol, then restart on the same store directory and
-# confirm recovery serves the journaled KB. Talks raw bash /dev/tcp so
-# the runner needs no netcat. Run from rust/ (or set KB_BIN).
+# confirm recovery serves the journaled KB. Phase 4 boots a two-tenant
+# daemon under --tenant-quota, drives tagged traffic, and asserts each
+# tenant recovers from its own store namespace. Talks raw bash /dev/tcp
+# so the runner needs no netcat. Run from rust/ (or set KB_BIN).
 set -euo pipefail
 
 BIN=${KB_BIN:-target/release/kernelblaster}
@@ -118,6 +120,50 @@ echo "$OUT4"
 grep -q 'recovered KB' "$WORK/stderr4.log"
 if grep -q '"kb_states":0[,}]' <<<"$OUT4"; then
   echo "serve_smoke: sharded recovery lost the phase-3 KB" >&2
+  exit 1
+fi
+
+echo "== phase 4: two tenants, quotas, per-tenant recovery =="
+TSTORE="$WORK/store_tenants"
+"$BIN" serve --addr "$HOST:$PORT" --gpu H100 --store "$TSTORE" \
+  --workers 2 --epoch-size 2 --trajectories 2 --steps 3 \
+  --snapshot-every 2 --tenant-quota acme=3,zeta=1 2> "$WORK/stderr5.log" &
+PID=$!
+wait_ready
+OUT5=$(drive \
+  '{"op":"optimize","tenant":"acme","task":"L1/12_softmax"}' \
+  '{"op":"optimize","tenant":"zeta","task":"L1/15_relu"}' \
+  '{"op":"stats","tenant":"acme"}' \
+  '{"op":"stats","tenant":"zeta"}' \
+  '{"op":"shutdown"}')
+wait "$PID"
+cat "$WORK/stderr5.log"
+echo "$OUT5"
+# Tagged replies echo the routing tenant; each tenant persists under its
+# own namespace directory of the shared store root.
+grep -q '"tenant":"acme"' <<<"$OUT5"
+grep -q '"tenant":"zeta"' <<<"$OUT5"
+if grep -q '"ok":false' <<<"$OUT5"; then
+  echo "serve_smoke: unexpected error reply in phase 4" >&2
+  exit 1
+fi
+test -f "$TSTORE/acme/journal.log"
+test -f "$TSTORE/zeta/journal.log"
+"$BIN" serve --addr "$HOST:$PORT" --gpu H100 --store "$TSTORE" \
+  --workers 2 --epoch-size 2 --trajectories 2 --steps 3 \
+  2> "$WORK/stderr6.log" &
+PID=$!
+wait_ready
+OUT6=$(drive \
+  '{"op":"stats","tenant":"acme"}' \
+  '{"op":"stats","tenant":"zeta"}' \
+  '{"op":"shutdown"}')
+wait "$PID"
+cat "$WORK/stderr6.log"
+echo "$OUT6"
+grep -q 'recovered 2 tenant store(s)' "$WORK/stderr6.log"
+if grep -q '"kb_states":0[,}]' <<<"$OUT6"; then
+  echo "serve_smoke: tenant recovery lost a phase-4 KB" >&2
   exit 1
 fi
 echo "serve_smoke: OK"

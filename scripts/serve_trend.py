@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Serve trend gate: fail CI when per-tenant serving throughput regresses.
+
+Compares a current ``BENCH_serve.json`` (format
+``kernelblaster-bench-serve-v2``) against the one uploaded by a previous
+CI run and exits non-zero when any (trace, tenant) cell's
+``tasks_per_min`` dropped by more than the threshold (default 10%;
+wall-clock on shared runners is noisier than the paired-geomean ratios
+policy_trend.py gates at 5%).
+
+The gate also enforces the current artifact's tenant-isolation verdicts
+regardless of any baseline: every trace's ``isolation_ok`` must be true
+— a run where a tenant's KB stopped matching its solo replay
+byte-for-byte is a correctness bug, not a trend.
+
+Contract details live in EXPERIMENTS.md §Serve ("Trend tracking").
+
+Rules:
+- a missing/unreadable previous artifact passes with a notice: the first
+  run on a branch has no baseline, and a gate that fails on missing
+  history would block unrelated changes;
+- a previous artifact in a different format (e.g. the retired
+  ``kernelblaster-bench-serve-v1``, which had no per-tenant rows) passes
+  the same way — the two are not comparable;
+- (trace, tenant) cells present on only one side are skipped with a
+  notice — the trace/tenant roster can drift between revisions;
+- a malformed *current* artifact is exit 2 (the build must have produced
+  a valid one).
+
+Usage: serve_trend.py CURRENT_JSON PREVIOUS_JSON [--threshold 0.10]
+Exit codes: 0 ok / no baseline; 1 regression or isolation failure; 2 bad
+invocation or a malformed current artifact.
+"""
+
+import argparse
+import json
+import sys
+
+FORMAT = "kernelblaster-bench-serve-v2"
+
+
+def load(path, required):
+    """Return the parsed artifact or None if missing/not comparable."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        if required:
+            print(f"serve-trend: cannot read current artifact {path}: {e}")
+            sys.exit(2)
+        print(f"serve-trend: no previous artifact at {path} ({e}); passing")
+        return None
+    fmt = doc.get("format")
+    if fmt != FORMAT:
+        if required:
+            print(f"serve-trend: {path} has format {fmt!r}, want {FORMAT!r}")
+            sys.exit(2)
+        print(
+            f"serve-trend: previous artifact has format {fmt!r}, "
+            f"not comparable to {FORMAT!r}; passing"
+        )
+        return None
+    return doc
+
+
+def tenant_cells(doc, path, required):
+    """Map (trace, tenant) -> tasks_per_min, or None for a bad baseline."""
+    traces = doc.get("traces")
+    if not isinstance(traces, list) or not traces:
+        if required:
+            print(f"serve-trend: {path} has no traces array")
+            sys.exit(2)
+        print("serve-trend: previous artifact has no traces array; passing")
+        return None
+    cells = {}
+    for trace in traces:
+        name = trace.get("name") if isinstance(trace, dict) else None
+        rows = trace.get("per_tenant") if isinstance(trace, dict) else None
+        if not isinstance(name, str) or not isinstance(rows, list):
+            if required:
+                print(f"serve-trend: {path} has a trace without name/per_tenant")
+                sys.exit(2)
+            print("serve-trend: previous artifact has a malformed trace; passing")
+            return None
+        for row in rows:
+            tenant = row.get("tenant") if isinstance(row, dict) else None
+            tpm = row.get("tasks_per_min") if isinstance(row, dict) else None
+            if not isinstance(tenant, str) or not isinstance(tpm, (int, float)):
+                if required:
+                    print(
+                        f"serve-trend: {path} trace {name!r} has a per_tenant "
+                        "row without tenant/tasks_per_min"
+                    )
+                    sys.exit(2)
+                print("serve-trend: previous artifact has a malformed row; passing")
+                return None
+            cells[(name, tenant)] = float(tpm)
+    return cells
+
+
+def main(argv):
+    parser = argparse.ArgumentParser(
+        prog="serve_trend.py",
+        description="Fail when any (trace, tenant) tasks/min regresses past "
+        "the threshold vs a previous BENCH_serve.json, or when the current "
+        "run's tenant-isolation verdicts are false.",
+    )
+    parser.add_argument("current", help="bench JSON of this run")
+    parser.add_argument("previous", help="baseline artifact (may be absent)")
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="allowed fractional drop before failing (default 0.10 = 10%%)",
+    )
+    try:
+        args = parser.parse_args(argv)
+    except SystemExit:
+        return 2
+
+    doc = load(args.current, required=True)
+
+    # Isolation verdicts gate unconditionally — no baseline needed.
+    traces = doc.get("traces")
+    if not isinstance(traces, list) or not traces:
+        print(f"serve-trend: {args.current} has no traces array")
+        return 2
+    broken = [
+        trace.get("name") if isinstance(trace, dict) else None
+        for trace in traces
+        if not isinstance(trace, dict) or trace.get("isolation_ok") is not True
+    ]
+    if broken:
+        names = ", ".join(str(n) for n in broken)
+        print(f"serve-trend: FAIL — isolation_ok false/missing for: {names}")
+        return 1
+    print(f"serve-trend: isolation_ok true for all {len(traces)} trace(s)")
+
+    cur = tenant_cells(doc, args.current, required=True)
+    prev_doc = load(args.previous, required=False)
+    if prev_doc is None:
+        return 0
+    prev = tenant_cells(prev_doc, args.previous, required=False)
+    if prev is None:
+        return 0
+
+    regressed = []
+    for key in sorted(cur):
+        if key not in prev:
+            print(f"serve-trend: no baseline cell for {key[0]}/{key[1]}; skipping")
+            continue
+        cur_tpm, prev_tpm = cur[key], prev[key]
+        floor = prev_tpm * (1.0 - args.threshold)
+        verdict = "REGRESSED" if cur_tpm < floor else "ok"
+        print(
+            f"serve-trend: {key[0]}/{key[1]}: tasks/min {prev_tpm:.2f} -> "
+            f"{cur_tpm:.2f} (floor {floor:.2f}) {verdict}"
+        )
+        if cur_tpm < floor:
+            regressed.append(f"{key[0]}/{key[1]}")
+    for key in sorted(prev):
+        if key not in cur:
+            print(f"serve-trend: baseline cell {key[0]}/{key[1]} gone; skipping")
+
+    if regressed:
+        print(
+            f"serve-trend: FAIL — {len(regressed)} cell(s) dropped more than "
+            f"{args.threshold:.0%}: {', '.join(regressed)}"
+        )
+        return 1
+    print("serve-trend: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
